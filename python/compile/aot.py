@@ -1,0 +1,113 @@
+"""AOT export: lower the L2 model (with the L1 Pallas kernel inlined) to
+HLO **text** artifacts that the Rust runtime loads via the ``xla`` crate.
+
+HLO text — NOT ``lowered.compile()`` or serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+Run from the ``python/`` directory::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``.hlo.txt`` per artifact plus a ``manifest.txt`` describing the
+argument shapes, so the Rust side can sanity-check at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.pim_vmm import MACRO_COLS, MACRO_ROWS
+
+F32 = jnp.float32
+
+# Artifact registry: name -> (python callable, example-arg shapes).
+# Shapes are chosen to match the workloads the Rust coordinator schedules
+# (see rust/src/gemm/workload.rs and DESIGN.md experiment index).
+ARTIFACTS = {
+    # one macro, a batch of 8 input vectors — the paper's n_in=8 sweet spot
+    "macro_vmm_8": (model.macro_vmm_entry, [(8, MACRO_ROWS), (MACRO_ROWS, MACRO_COLS)]),
+    # one macro, n_in=4 — the Fig.7/Table II design-point batch
+    "macro_vmm_4": (model.macro_vmm_entry, [(4, MACRO_ROWS), (MACRO_ROWS, MACRO_COLS)]),
+    # fused requant VMM (the VPU epilogue folded into the L1 kernel)
+    "macro_vmm_requant_8": (
+        model.macro_vmm_requant_entry,
+        [(8, MACRO_ROWS), (MACRO_ROWS, MACRO_COLS)],
+    ),
+    # macro-tiled GeMM: 16 x 128 @ 128 x 128 = 4x4 macro tiles
+    "gemm_16x128x128": (model.gemm_entry, [(16, 128), (128, 128)]),
+    # FFN chain for the end-to-end example: 16 tokens, d=64, hidden=128
+    "ffn_16x64x128": (
+        model.ffn_entry,
+        [(16, 64), (64, 128), (128, 64)],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for the loader)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str) -> str:
+    fn, shapes = ARTIFACTS[name]
+    specs = [jax.ShapeDtypeStruct(s, F32) for s in shapes]
+    return to_hlo_text(fn.lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="build a single artifact by name")
+    ap.add_argument(
+        "--out", default=None,
+        help="legacy single-file mode: write the default model HLO here",
+    )
+    args = ap.parse_args()
+
+    if args.out is not None:
+        # Makefile stamp target: the default artifact plus the full set
+        # into the stamp file's directory.
+        out_dir = os.path.dirname(args.out) or "."
+    else:
+        out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = [args.only] if args.only else list(ARTIFACTS)
+    manifest_lines = []
+    for name in names:
+        text = lower_artifact(name)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, shapes = ARTIFACTS[name]
+        shape_str = ";".join("x".join(map(str, s)) for s in shapes)
+        manifest_lines.append(f"{name} f32 {shape_str}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.only:
+        with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+    if args.out is not None:
+        # The stamp file itself: the headline GeMM artifact.
+        with open(args.out, "w") as f:
+            f.write(lower_artifact("gemm_16x128x128"))
+        print(f"wrote {args.out} (stamp)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""L1 — Pallas kernel for the PIM macro vector-matrix multiply (VMM).
+
+The paper's SRAM PIM macro stores a ``32 x 32``-byte int8 weight tile and
+sweeps a ``4 x 8``-byte *operation unit* (OU) across it, processing one OU
+per clock in compute mode (sec. II-A, Fig. 2).  This kernel reproduces that
+dataflow exactly: the Pallas grid enumerates OU positions
+``(size_macro_rows/ou_rows) x (size_macro_cols/ou_cols)`` and each grid step
+multiplies one ``(n_in, ou_rows)`` input slab against one
+``(ou_rows, ou_cols)`` OU block of the weight tile, accumulating into the
+``(n_in, ou_cols)`` output block — the same partial-sum chain the macro's
+bit-serial adder tree performs.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a real TPU the OU
+sweep would map onto the MXU systolic array with the weight tile resident in
+VMEM; here BlockSpec expresses the same HBM->VMEM schedule.  The kernel is
+lowered with ``interpret=True`` because the CPU PJRT plugin cannot execute
+Mosaic custom-calls.
+
+Values ride in f32 at the PJRT boundary but are kept on the int8 grid
+(integers in [-128, 127]); every product/sum is exactly representable in
+f32 (max |acc| = 32*128*128 = 524288 << 2**24), so results are bit-exact
+against the oracle and against the Rust reference model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Geometry of the paper's exemplary macro (sec. V-A).
+MACRO_ROWS = 32  # weight rows  (input-vector length), bytes
+MACRO_COLS = 32  # weight cols  (output length), bytes
+OU_ROWS = 4      # operation-unit rows swept per cycle
+OU_COLS = 8      # operation-unit cols swept per cycle
+
+
+def _vmm_kernel(x_ref, w_ref, o_ref):
+    """One OU step: partial product of an input slab with one OU block.
+
+    Grid = (row-OUs, col-OUs); row axis (program_id 0) is the reduction,
+    so the output block is zero-initialised on the first row step and
+    accumulated afterwards — mirroring the macro's partial-sum register.
+    """
+    row_step = pl.program_id(0)
+
+    @pl.when(row_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (n_in, OU_ROWS) @ (OU_ROWS, OU_COLS) -> (n_in, OU_COLS)
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def macro_vmm(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """PIM macro VMM: ``(n_in, 32) @ (32, 32) -> (n_in, 32)``.
+
+    ``x``  — input activations, int8-grid values carried as f32.
+    ``w``  — the macro's weight tile, int8-grid values carried as f32.
+    Returns the int32-grid accumulator carried as f32 (exact).
+    """
+    n_in, k = x.shape
+    k2, n = w.shape
+    if k != MACRO_ROWS or k2 != MACRO_ROWS or n != MACRO_COLS:
+        raise ValueError(
+            f"macro_vmm expects ({MACRO_ROWS},{MACRO_COLS}) weight tile, "
+            f"got x{x.shape} w{w.shape}"
+        )
+    grid = (MACRO_ROWS // OU_ROWS, MACRO_COLS // OU_COLS)
+    return pl.pallas_call(
+        _vmm_kernel,
+        grid=grid,
+        in_specs=[
+            # input slab: all n_in vectors, the OU's 4 rows
+            pl.BlockSpec((n_in, OU_ROWS), lambda i, j: (0, i)),
+            # weight OU block: 4 x 8 window of the tile
+            pl.BlockSpec((OU_ROWS, OU_COLS), lambda i, j: (i, j)),
+        ],
+        # output block depends only on the column OU; rows accumulate
+        out_specs=pl.BlockSpec((n_in, OU_COLS), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_in, MACRO_COLS), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def macro_vmm_reference_dataflow(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Pure-jnp replica of the kernel's OU-sweep order (not the oracle).
+
+    Used by tests to prove the Pallas grid accumulation is equivalent to an
+    explicit python loop over OU positions in the same order the hardware
+    sweeps them.  The oracle proper lives in ``ref.py``.
+    """
+    n_in = x.shape[0]
+    out = jnp.zeros((n_in, MACRO_COLS), dtype=x.dtype)
+    for j in range(MACRO_COLS // OU_COLS):
+        acc = jnp.zeros((n_in, OU_COLS), dtype=x.dtype)
+        for i in range(MACRO_ROWS // OU_ROWS):
+            xs = x[:, i * OU_ROWS : (i + 1) * OU_ROWS]
+            ws = w[i * OU_ROWS : (i + 1) * OU_ROWS, j * OU_COLS : (j + 1) * OU_COLS]
+            acc = acc + xs @ ws
+        out = out.at[:, j * OU_COLS : (j + 1) * OU_COLS].set(acc)
+    return out

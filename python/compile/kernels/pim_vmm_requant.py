@@ -1,0 +1,69 @@
+"""L1 — Pallas kernel: macro VMM with the VPU requantization fused.
+
+On the real chip the VPU re-quantizes int32 accumulators back to the int8
+grid before results re-enter the next layer's input buffer.  Fusing that
+step into the kernel saves a full pass over the accumulator in VMEM —
+the same fusion a production TPU kernel would do (keep the epilogue in
+registers/VMEM instead of a second HBM round-trip).
+
+Dataflow is identical to ``pim_vmm.macro_vmm`` (grid over OU positions,
+row axis reduces); only the final row step applies
+``clip(floor(acc / 2**shift + 0.5), -128, 127)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pim_vmm import MACRO_COLS, MACRO_ROWS, OU_COLS, OU_ROWS
+
+
+def _vmm_requant_kernel(x_ref, w_ref, o_ref, *, shift: int, n_row_steps: int):
+    row_step = pl.program_id(0)
+
+    @pl.when(row_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+
+    # Epilogue on the last reduction step: requantize in place.
+    @pl.when(row_step == n_row_steps - 1)
+    def _requant():
+        acc = o_ref[...]
+        q = jnp.floor(acc / (2.0**shift) + 0.5)
+        o_ref[...] = jnp.clip(q, -128.0, 127.0)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "interpret"))
+def macro_vmm_requant(
+    x: jax.Array, w: jax.Array, *, shift: int = 7, interpret: bool = True
+) -> jax.Array:
+    """Fused ``requant(x @ w)`` on one macro tile.
+
+    ``x (n_in, 32)`` @ ``w (32, 32)`` -> int8-grid ``(n_in, 32)``.
+    """
+    n_in, k = x.shape
+    k2, n = w.shape
+    if k != MACRO_ROWS or k2 != MACRO_ROWS or n != MACRO_COLS:
+        raise ValueError(f"expected ({MACRO_ROWS},{MACRO_COLS}) tile, got x{x.shape} w{w.shape}")
+    n_row_steps = MACRO_ROWS // OU_ROWS
+    grid = (n_row_steps, MACRO_COLS // OU_COLS)
+    kernel = functools.partial(
+        _vmm_requant_kernel, shift=shift, n_row_steps=n_row_steps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_in, OU_ROWS), lambda i, j: (0, i)),
+            pl.BlockSpec((OU_ROWS, OU_COLS), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((n_in, OU_COLS), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n_in, MACRO_COLS), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,40 @@
+"""Pure-jnp correctness oracles for the L1 kernels and the L2 model.
+
+Everything here is the *mathematical* definition (plain matmuls), with none
+of the OU-sweep / macro-tiling structure — the whole point is that the
+structured kernels must agree with these to the last bit (all values live on
+the int8 grid, exactly representable in f32).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vmm_ref(x, w):
+    """Oracle for the macro VMM: a plain matmul."""
+    return x @ w
+
+
+def gemm_ref(x, w):
+    """Oracle for the macro-tiled GeMM: a plain matmul."""
+    return x @ w
+
+
+def requant_ref(acc, shift: int = 7):
+    """Oracle for the PIM requantization step.
+
+    The paper's macro produces int accumulators that the VPU re-quantizes
+    back to int8 before the next layer.  We model it as a round-half-up
+    arithmetic shift followed by clipping to the int8 grid — exactly what
+    the Rust reference implements.
+    """
+    scaled = jnp.floor(acc / (2.0**shift) + 0.5)
+    return jnp.clip(scaled, -128.0, 127.0)
+
+
+def ffn_ref(x, w1, w2, shift: int = 7):
+    """Oracle for the 2-layer FFN chain: gemm -> requant -> relu -> gemm."""
+    h = requant_ref(x @ w1, shift)
+    h = jnp.maximum(h, 0.0)
+    return h @ w2

@@ -1,0 +1,117 @@
+"""L2 — JAX model of the PIM accelerator's functional semantics.
+
+The Rust coordinator (L3) decides *when* every macro writes and computes;
+this module defines *what* the chip computes: GeMMs tiled into
+``32 x 32``-byte macro weight tiles, each tile evaluated by the L1 Pallas
+macro-VMM kernel, partial products accumulated by the VPU model, and an
+optional requantization back to the int8 grid between layers.
+
+Everything here is build-time Python.  ``aot.py`` lowers these functions
+once to HLO text; the Rust runtime loads and executes the artifacts on the
+PJRT CPU client — Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.pim_vmm import MACRO_COLS, MACRO_ROWS, macro_vmm
+
+
+def pad_to_macro_grid(x: jax.Array, w: jax.Array):
+    """Zero-pad ``x (m, k)`` and ``w (k, n)`` to multiples of the macro tile.
+
+    The paper slices DNN weights into whole macro tiles (Fig. 1); dimensions
+    that do not divide evenly occupy a partially-filled macro, which behaves
+    exactly like zero-padding (unused bitcells hold zero).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    kp = -(-k // MACRO_ROWS) * MACRO_ROWS
+    np_ = -(-n // MACRO_COLS) * MACRO_COLS
+    x = jnp.pad(x, ((0, 0), (0, kp - k)))
+    w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    return x, w
+
+
+def pim_gemm(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """GeMM ``(m, k) @ (k, n)`` computed the way the PIM chip computes it.
+
+    The weight matrix is split into a ``(k/32) x (n/32)`` grid of macro
+    tiles.  Each tile performs a macro VMM (L1 kernel) on the matching input
+    column slab; the VPU accumulates the k-direction partial sums.  This is
+    the weight-stationary dataflow the scheduling strategies of the paper
+    pipeline against off-chip weight rewrites.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    x, w = pad_to_macro_grid(x, w)
+    kp, np_ = w.shape
+    kt, nt = kp // MACRO_ROWS, np_ // MACRO_COLS
+
+    # (kt, m, 32) input slabs and (kt, nt, 32, 32) weight tiles
+    xs = x.reshape(m, kt, MACRO_ROWS).transpose(1, 0, 2)
+    ws = w.reshape(kt, MACRO_ROWS, nt, MACRO_COLS).transpose(0, 2, 1, 3)
+
+    out = jnp.zeros((m, np_), dtype=x.dtype)
+    for j in range(nt):
+        # VPU accumulation over the reduction tiles of output column-block j
+        acc = jnp.zeros((m, MACRO_COLS), dtype=x.dtype)
+        for i in range(kt):
+            acc = acc + macro_vmm(xs[i], ws[i, j], interpret=interpret)
+        out = out.at[:, j * MACRO_COLS : (j + 1) * MACRO_COLS].set(acc)
+    return out[:, :n]
+
+
+def requant(acc: jax.Array, shift: int = 7) -> jax.Array:
+    """VPU requantization: round-half-up arithmetic shift + int8 clip."""
+    scaled = jnp.floor(acc / (2.0**shift) + 0.5)
+    return jnp.clip(scaled, -128.0, 127.0)
+
+
+def ffn_forward(
+    x: jax.Array, w1: jax.Array, w2: jax.Array, *, shift: int = 7, interpret: bool = True
+) -> jax.Array:
+    """Transformer-FFN block on the PIM chip: gemm -> requant -> relu -> gemm.
+
+    This is the GeMM chain the end-to-end example schedules: consecutive
+    large GeMMs whose weights must stream from off-chip memory, the exact
+    workload class the paper's evaluation uses (BLAS-level, sec. V-A).
+    """
+    h = requant(pim_gemm(x, w1, interpret=interpret), shift)
+    h = jnp.maximum(h, 0.0)
+    return pim_gemm(h, w2, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points with the artifact shapes (see aot.py / DESIGN.md).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def macro_vmm_entry(x, w):
+    """Single-macro VMM artifact body (tuple-returning for the loader)."""
+    return (macro_vmm(x, w),)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def macro_vmm_requant_entry(x, w):
+    """Fused requant-VMM artifact body (shift = 7)."""
+    from .kernels.pim_vmm_requant import macro_vmm_requant
+
+    return (macro_vmm_requant(x, w, shift=7),)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gemm_entry(x, w):
+    """Macro-tiled GeMM artifact body."""
+    return (pim_gemm(x, w),)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ffn_entry(x, w1, w2):
+    """FFN-chain artifact body."""
+    return (ffn_forward(x, w1, w2),)

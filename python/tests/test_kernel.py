@@ -1,0 +1,127 @@
+"""L1 correctness: the Pallas macro-VMM kernel vs the pure-jnp oracle.
+
+All values live on the int8 grid carried in f32, so comparisons are exact
+(assert_array_equal, not allclose) — any deviation is a real dataflow bug,
+not float noise.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pim_vmm import (
+    MACRO_COLS,
+    MACRO_ROWS,
+    OU_COLS,
+    OU_ROWS,
+    macro_vmm,
+    macro_vmm_reference_dataflow,
+)
+from compile.kernels.ref import vmm_ref
+
+RNG = np.random.default_rng(0xC1A0)
+
+
+def int8_grid(shape, rng=RNG):
+    """Random int8-valued f32 array."""
+    return rng.integers(-128, 128, size=shape).astype(np.float32)
+
+
+class TestMacroVmmBasics:
+    def test_identity_weight(self):
+        x = int8_grid((8, MACRO_ROWS))
+        w = np.eye(MACRO_ROWS, MACRO_COLS, dtype=np.float32)
+        np.testing.assert_array_equal(np.asarray(macro_vmm(x, w)), x)
+
+    def test_zero_weight(self):
+        x = int8_grid((8, MACRO_ROWS))
+        w = np.zeros((MACRO_ROWS, MACRO_COLS), dtype=np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(macro_vmm(x, w)), np.zeros((8, MACRO_COLS), np.float32)
+        )
+
+    def test_zero_input(self):
+        x = np.zeros((4, MACRO_ROWS), dtype=np.float32)
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        np.testing.assert_array_equal(
+            np.asarray(macro_vmm(x, w)), np.zeros((4, MACRO_COLS), np.float32)
+        )
+
+    def test_single_vector(self):
+        x = int8_grid((1, MACRO_ROWS))
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        np.testing.assert_array_equal(np.asarray(macro_vmm(x, w)), vmm_ref(x, w))
+
+    def test_matches_oracle_random(self):
+        x = int8_grid((8, MACRO_ROWS))
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        np.testing.assert_array_equal(np.asarray(macro_vmm(x, w)), vmm_ref(x, w))
+
+    def test_matches_explicit_ou_sweep(self):
+        """The grid accumulation equals an explicit OU-ordered loop."""
+        x = int8_grid((8, MACRO_ROWS))
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        np.testing.assert_array_equal(
+            np.asarray(macro_vmm(x, w)),
+            np.asarray(macro_vmm_reference_dataflow(x, w)),
+        )
+
+    def test_extreme_values_exact(self):
+        """max-magnitude accumulation (32 * 128 * 128) stays exact in f32."""
+        x = np.full((2, MACRO_ROWS), -128.0, dtype=np.float32)
+        w = np.full((MACRO_ROWS, MACRO_COLS), -128.0, dtype=np.float32)
+        out = np.asarray(macro_vmm(x, w))
+        np.testing.assert_array_equal(out, np.full((2, MACRO_COLS), 32 * 128 * 128, np.float32))
+
+    def test_rejects_bad_shapes(self):
+        x = int8_grid((8, MACRO_ROWS + 1))
+        w = int8_grid((MACRO_ROWS + 1, MACRO_COLS))
+        with pytest.raises(ValueError):
+            macro_vmm(x, w)
+
+    def test_geometry_constants(self):
+        """Paper sec. V-A geometry: 32x32-byte macro, 4x8-byte OU."""
+        assert MACRO_ROWS * MACRO_COLS == 1024
+        assert OU_ROWS * OU_COLS == 32
+        assert MACRO_ROWS % OU_ROWS == 0 and MACRO_COLS % OU_COLS == 0
+
+
+class TestMacroVmmProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(n_in=st.integers(min_value=1, max_value=32), seed=st.integers(0, 2**31 - 1))
+    def test_matches_oracle_any_batch(self, n_in, seed):
+        """Kernel == oracle for every batch size the scheduler may issue."""
+        rng = np.random.default_rng(seed)
+        x = int8_grid((n_in, MACRO_ROWS), rng)
+        w = int8_grid((MACRO_ROWS, MACRO_COLS), rng)
+        np.testing.assert_array_equal(np.asarray(macro_vmm(x, w)), vmm_ref(x, w))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_linearity(self, seed):
+        """VMM is linear in the input: f(a+b) = f(a) + f(b)."""
+        rng = np.random.default_rng(seed)
+        a = rng.integers(-64, 64, size=(4, MACRO_ROWS)).astype(np.float32)
+        b = rng.integers(-64, 64, size=(4, MACRO_ROWS)).astype(np.float32)
+        w = int8_grid((MACRO_ROWS, MACRO_COLS), rng)
+        np.testing.assert_array_equal(
+            np.asarray(macro_vmm(a + b, w)),
+            np.asarray(macro_vmm(a, w)) + np.asarray(macro_vmm(b, w)),
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_column_locality(self, seed):
+        """Zeroing weight columns zeroes exactly those output columns —
+        the OU sweep must not leak partial sums across column blocks."""
+        rng = np.random.default_rng(seed)
+        x = int8_grid((4, MACRO_ROWS), rng)
+        w = int8_grid((MACRO_ROWS, MACRO_COLS), rng)
+        kill = rng.integers(0, MACRO_COLS // OU_COLS)
+        w[:, kill * OU_COLS : (kill + 1) * OU_COLS] = 0.0
+        out = np.asarray(macro_vmm(x, w))
+        np.testing.assert_array_equal(
+            out[:, kill * OU_COLS : (kill + 1) * OU_COLS],
+            np.zeros((4, OU_COLS), np.float32),
+        )
+        np.testing.assert_array_equal(out, vmm_ref(x, w))

@@ -1,0 +1,58 @@
+"""Fused requant-VMM kernel vs the unfused oracle composition."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pim_vmm import MACRO_COLS, MACRO_ROWS
+from compile.kernels.pim_vmm_requant import macro_vmm_requant
+from compile.kernels.ref import requant_ref, vmm_ref
+
+RNG = np.random.default_rng(0x5EAF)
+
+
+def int8_grid(shape, rng=RNG):
+    return rng.integers(-128, 128, size=shape).astype(np.float32)
+
+
+class TestFusedRequant:
+    def test_matches_unfused_composition(self):
+        x = int8_grid((8, MACRO_ROWS))
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        fused = np.asarray(macro_vmm_requant(x, w, shift=7))
+        unfused = np.asarray(requant_ref(vmm_ref(x, w), shift=7))
+        np.testing.assert_array_equal(fused, unfused)
+
+    def test_output_on_int8_grid(self):
+        x = int8_grid((4, MACRO_ROWS))
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        out = np.asarray(macro_vmm_requant(x, w))
+        assert out.min() >= -128.0 and out.max() <= 127.0
+        assert np.all(out == np.round(out))
+
+    def test_zero_shift(self):
+        # shift=0: pure clip of the raw accumulator.
+        x = int8_grid((2, MACRO_ROWS))
+        w = int8_grid((MACRO_ROWS, MACRO_COLS))
+        fused = np.asarray(macro_vmm_requant(x, w, shift=0))
+        unfused = np.asarray(requant_ref(vmm_ref(x, w), shift=0))
+        np.testing.assert_array_equal(fused, unfused)
+
+    def test_saturation(self):
+        x = np.full((2, MACRO_ROWS), 127.0, dtype=np.float32)
+        w = np.full((MACRO_ROWS, MACRO_COLS), 127.0, dtype=np.float32)
+        out = np.asarray(macro_vmm_requant(x, w, shift=7))
+        np.testing.assert_array_equal(out, np.full((2, MACRO_COLS), 127.0, np.float32))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_in=st.integers(1, 16),
+        shift=st.integers(0, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_oracle(self, n_in, shift, seed):
+        rng = np.random.default_rng(seed)
+        x = int8_grid((n_in, MACRO_ROWS), rng)
+        w = int8_grid((MACRO_ROWS, MACRO_COLS), rng)
+        fused = np.asarray(macro_vmm_requant(x, w, shift=shift))
+        unfused = np.asarray(requant_ref(vmm_ref(x, w), shift=shift))
+        np.testing.assert_array_equal(fused, unfused)

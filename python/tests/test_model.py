@@ -1,0 +1,120 @@
+"""L2 correctness: the macro-tiled GeMM / FFN chain vs plain-matmul oracles.
+
+Also pins the padding behaviour for non-multiple-of-32 shapes (partially
+filled macros == zero padding) and the requantization semantics that the
+Rust reference model mirrors.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ffn_ref, gemm_ref, requant_ref
+
+RNG = np.random.default_rng(0x90F0)
+
+
+def int8_grid(shape, rng=RNG, lo=-128, hi=128):
+    return rng.integers(lo, hi, size=shape).astype(np.float32)
+
+
+class TestPimGemm:
+    def test_exact_tile_multiple(self):
+        x = int8_grid((16, 128))
+        w = int8_grid((128, 128))
+        np.testing.assert_array_equal(np.asarray(model.pim_gemm(x, w)), gemm_ref(x, w))
+
+    def test_single_tile(self):
+        x = int8_grid((4, 32))
+        w = int8_grid((32, 32))
+        np.testing.assert_array_equal(np.asarray(model.pim_gemm(x, w)), gemm_ref(x, w))
+
+    def test_ragged_k(self):
+        x = int8_grid((4, 50))
+        w = int8_grid((50, 64))
+        np.testing.assert_array_equal(np.asarray(model.pim_gemm(x, w)), gemm_ref(x, w))
+
+    def test_ragged_n(self):
+        x = int8_grid((4, 64))
+        w = int8_grid((64, 33))
+        np.testing.assert_array_equal(np.asarray(model.pim_gemm(x, w)), gemm_ref(x, w))
+
+    def test_ragged_both(self):
+        x = int8_grid((3, 45))
+        w = int8_grid((45, 70))
+        np.testing.assert_array_equal(np.asarray(model.pim_gemm(x, w)), gemm_ref(x, w))
+
+    def test_pad_to_macro_grid_shapes(self):
+        x = np.zeros((5, 45), np.float32)
+        w = np.zeros((45, 70), np.float32)
+        xp, wp = model.pad_to_macro_grid(x, w)
+        assert xp.shape == (5, 64)
+        assert wp.shape == (64, 96)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.integers(1, 8),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle_any_shape(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = int8_grid((m, k), rng)
+        w = int8_grid((k, n), rng)
+        np.testing.assert_array_equal(np.asarray(model.pim_gemm(x, w)), gemm_ref(x, w))
+
+
+class TestRequant:
+    def test_matches_ref(self):
+        acc = np.arange(-(2**15), 2**15, 97, dtype=np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(model.requant(acc)), np.asarray(requant_ref(acc))
+        )
+
+    def test_clips_to_int8(self):
+        acc = np.array([1e6, -1e6], np.float32)
+        out = np.asarray(model.requant(acc))
+        np.testing.assert_array_equal(out, np.array([127.0, -128.0], np.float32))
+
+    def test_rounds_half_up(self):
+        # 64 / 128 = 0.5 -> rounds to 1; -64/128 = -0.5 -> rounds to 0
+        acc = np.array([64.0, -64.0], np.float32)
+        out = np.asarray(model.requant(acc))
+        np.testing.assert_array_equal(out, np.array([1.0, 0.0], np.float32))
+
+    def test_zero_shift_identity_region(self):
+        acc = np.arange(-128, 128, dtype=np.float32)
+        np.testing.assert_array_equal(np.asarray(model.requant(acc, shift=0)), acc)
+
+
+class TestFfnChain:
+    def test_matches_oracle(self):
+        x = int8_grid((16, 64))
+        w1 = int8_grid((64, 128))
+        w2 = int8_grid((128, 64))
+        np.testing.assert_array_equal(
+            np.asarray(model.ffn_forward(x, w1, w2)), np.asarray(ffn_ref(x, w1, w2))
+        )
+
+    def test_relu_kills_negatives(self):
+        x = int8_grid((4, 32))
+        w1 = -np.eye(32, 32, dtype=np.float32) * 127
+        w2 = np.eye(32, 32, dtype=np.float32)
+        # all-positive input -> first layer all negative -> relu -> zeros
+        xp = np.abs(x) + 1.0
+        np.testing.assert_array_equal(
+            np.asarray(model.ffn_forward(np.clip(xp, 1, 127), w1, w2)),
+            np.zeros((4, 32), np.float32),
+        )
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_oracle_random(self, seed):
+        rng = np.random.default_rng(seed)
+        x = int8_grid((8, 48), rng)
+        w1 = int8_grid((48, 96), rng)
+        w2 = int8_grid((96, 48), rng)
+        np.testing.assert_array_equal(
+            np.asarray(model.ffn_forward(x, w1, w2)), np.asarray(ffn_ref(x, w1, w2))
+        )

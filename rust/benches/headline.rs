@@ -1,0 +1,31 @@
+//! Bench/repro: the paper's abstract/§I headline claims — generalized
+//! ping-pong vs naive ping-pong over off-chip bandwidth 8 … 256 B/cycle
+//! ("1.22~7.71x") and the full-bandwidth acceleration (">1.67x").
+//! `cargo bench --bench headline`
+
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::report::figures;
+
+fn main() -> anyhow::Result<()> {
+    const VECTORS: u32 = 32768;
+    section("Headline — bandwidth sweep 8..256 B/cyc (tp = 4 tr working point)");
+    let rows = figures::headline(VECTORS)?;
+    println!("{}", figures::headline_table(&rows).to_ascii());
+
+    let factors: Vec<f64> = rows.iter().map(|r| r.gpp_vs_naive()).collect();
+    let min = factors.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = factors.iter().cloned().fold(0.0, f64::max);
+    println!("gpp vs naive ping-pong across the sweep: {min:.2}x .. {max:.2}x   [paper: 1.22x .. 7.71x]");
+    let full = rows.last().unwrap();
+    println!(
+        "at the widest bandwidth (256 B/cyc): {:.2}x vs naive, {:.2}x vs in-situ   [paper: >1.67x]",
+        full.gpp_vs_naive(),
+        full.gpp_vs_insitu()
+    );
+
+    let m = Bench::new(0, 3).run("headline/regenerate", || {
+        figures::headline(VECTORS).unwrap()
+    });
+    println!("\n{}", m.line());
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Perf bench: the PJRT request path — artifact compile time (one-off)
+//! and steady-state execute latency/throughput for the macro-VMM and
+//! GeMM artifacts.  Skips gracefully when artifacts are missing.
+//! `cargo bench --bench runtime_perf`
+
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::runtime::Runtime;
+use gpp_pim::util::rng::XorShift64;
+use std::time::Instant;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn main() -> anyhow::Result<()> {
+    if !Runtime::available(ARTIFACTS) {
+        eprintln!("[skip] artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    section("PJRT runtime — compile (one-off) + execute (request path)");
+    let mut rt = Runtime::new(ARTIFACTS)?;
+    let mut rng = XorShift64::new(0xBE7C);
+
+    // One-off compile cost (cache miss), per artifact.
+    for name in ["macro_vmm_8", "macro_vmm_4", "gemm_16x128x128", "ffn_16x64x128"] {
+        let t0 = Instant::now();
+        match name {
+            "macro_vmm_8" => {
+                let x = rng.int8_vec(8 * 32);
+                let w = rng.int8_vec(1024);
+                rt.execute(name, &[(&x, &[8, 32]), (&w, &[32, 32])])?;
+            }
+            "macro_vmm_4" => {
+                let x = rng.int8_vec(4 * 32);
+                let w = rng.int8_vec(1024);
+                rt.execute(name, &[(&x, &[4, 32]), (&w, &[32, 32])])?;
+            }
+            "gemm_16x128x128" => {
+                let x = rng.int8_vec(16 * 128);
+                let w = rng.int8_vec(128 * 128);
+                rt.execute(name, &[(&x, &[16, 128]), (&w, &[128, 128])])?;
+            }
+            _ => {
+                let x = rng.int8_vec(16 * 64);
+                let w1 = rng.int8_vec(64 * 128);
+                let w2 = rng.int8_vec(128 * 64);
+                rt.execute(name, &[(&x, &[16, 64]), (&w1, &[64, 128]), (&w2, &[128, 64])])?;
+            }
+        }
+        println!("compile+first-exec {name:<18} {:>10.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // Steady-state execute latency (cache hits only).
+    let bench = Bench::new(3, 30);
+    let x8 = rng.int8_vec(8 * 32);
+    let w = rng.int8_vec(1024);
+    let m = bench.run("execute/macro_vmm_8", || {
+        rt.execute("macro_vmm_8", &[(&x8, &[8, 32]), (&w, &[32, 32])])
+            .unwrap()
+    });
+    println!("{}", m.line());
+    println!(
+        "  -> {:.0} VMM-batches/s ({:.2} Mvector-MACs/s)",
+        1.0 / m.median_secs(),
+        8.0 * 1024.0 / m.median_secs() / 1e6
+    );
+
+    let xg = rng.int8_vec(16 * 128);
+    let wg = rng.int8_vec(128 * 128);
+    let m = bench.run("execute/gemm_16x128x128", || {
+        rt.execute("gemm_16x128x128", &[(&xg, &[16, 128]), (&wg, &[128, 128])])
+            .unwrap()
+    });
+    println!("{}", m.line());
+    println!(
+        "  -> {:.2} MMACs/s",
+        16.0 * 128.0 * 128.0 / m.median_secs() / 1e6
+    );
+
+    // Tile-streamed GeMM through macro_vmm (the coordinator's path).
+    let m = bench.run("execute/macro_vmm-tiled-16x128x128", || {
+        let mut acc = 0.0f32;
+        for _ in 0..16 {
+            // 4 k-tiles x 4 n-tiles, batch 8+8
+            let out = rt.macro_vmm(&x8, &w, 8).unwrap();
+            acc += out[0];
+        }
+        acc
+    });
+    println!("{}", m.line());
+    Ok(())
+}

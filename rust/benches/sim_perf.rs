@@ -1,0 +1,47 @@
+//! Perf bench: the cycle-accurate simulator itself (the L3 hot path).
+//! Reports simulated macro-cycles per wall-second — the §Perf target in
+//! EXPERIMENTS.md is >= 50M macro-cycles/s on the full-chip workload.
+//! `cargo bench --bench sim_perf`
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sim::{simulate, SimOptions};
+
+fn main() {
+    section("simulator throughput (event-accelerated engine)");
+    let bench = Bench::new(1, 7);
+
+    for (name, tasks, active, n_in, band) in [
+        ("full-chip/256-macros/8k-tasks", 8192u32, 256u32, 4u32, 512u64),
+        ("full-chip/256-macros/32k-tasks", 32768, 256, 4, 512),
+        ("contended-bus/64-macros", 8192, 64, 4, 32),
+        ("compute-heavy/128-macros", 8192, 128, 16, 128),
+    ] {
+        let mut arch = ArchConfig::paper_default();
+        arch.bandwidth = band;
+        arch.core_buffer_bytes = 1 << 22;
+        let plan = SchedulePlan {
+            tasks,
+            active_macros: active,
+            n_in,
+            write_speed: 8,
+        };
+        for strategy in Strategy::ALL {
+            let program = strategy.codegen(&arch, &plan).unwrap();
+            let mut sim_cycles = 0u64;
+            let m = bench.run(&format!("{name}/{}", strategy.name()), || {
+                let r = simulate(&arch, &program, SimOptions::default()).unwrap();
+                sim_cycles = r.stats.cycles;
+                r.stats.cycles
+            });
+            let macro_cycles = sim_cycles as f64 * active as f64;
+            println!(
+                "{}   -> {:.1}M macro-cycles/s ({} sim cycles)",
+                m.line(),
+                macro_cycles / m.median_secs() / 1e6,
+                sim_cycles
+            );
+        }
+    }
+}

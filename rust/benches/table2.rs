@@ -1,0 +1,52 @@
+//! Bench/repro: paper Table II — "the discrepancy between theory and
+//! practice": fractional-macro model vs integer-macro simulation for
+//! generalized ping-pong at band ∈ {256, 128, 64, 32, 16, 8} B/cycle.
+//! `cargo bench --bench table2`
+
+use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::report::figures;
+
+/// The paper's Table II, verbatim, for side-by-side comparison.
+const PAPER: [(u64, f64, u32, &str, &str, f64, f64); 6] = [
+    (256, 82.05, 80, "1.56:1", "1.5:1", 78.08, 75.00),
+    (128, 54.01, 49, "2.37:1", "2.5:1", 59.31, 54.69),
+    (64, 36.26, 36, "3.53:1", "3.5:1", 44.14, 43.75),
+    (32, 24.71, 24, "5.18:1", "5:1", 32.37, 31.25),
+    (16, 17.02, 16, "7.52:1", "7:1", 23.49, 21.88),
+    (8, 11.83, 11, "10.82:1", "10:1", 16.91, 15.63),
+];
+
+fn main() -> anyhow::Result<()> {
+    const VECTORS: u32 = 16384;
+    section("Table II — theory vs practice (this reproduction)");
+    let rows = figures::table2(VECTORS)?;
+    println!("{}", figures::table2_table(&rows).to_ascii());
+
+    section("Table II — paper values for comparison");
+    println!(
+        "{:>6} {:>14} {:>16} {:>12} {:>14} {:>12} {:>14}",
+        "band", "macros_theory", "macros_practice", "ratio_thry", "ratio_prac", "perf_thry", "perf_prac"
+    );
+    for (band, mt, mp, rt, rp, pt, pp) in PAPER {
+        println!(
+            "{band:>6} {mt:>14.2} {mp:>16} {rt:>12} {rp:>14} {pt:>11.2}% {pp:>13.2}%"
+        );
+    }
+
+    println!("\nchecks (theory column is closed-form, must match paper < 0.2 macro):");
+    for (row, paper) in rows.iter().zip(PAPER) {
+        let d_macros = (row.theory_macros - paper.1).abs();
+        let d_perf = (100.0 * row.theory_perf - paper.5).abs();
+        println!(
+            "  band {:>3}: |Δmacros| = {:.3}, |Δperf| = {:.3} pp {}",
+            row.bandwidth,
+            d_macros,
+            d_perf,
+            if d_macros < 0.2 && d_perf < 0.5 { "✓" } else { "✗" }
+        );
+    }
+
+    let m = Bench::new(0, 3).run("table2/regenerate", || figures::table2(VECTORS).unwrap());
+    println!("\n{}", m.line());
+    Ok(())
+}

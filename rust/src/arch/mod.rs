@@ -1,0 +1,302 @@
+//! Accelerator architecture: geometry + timing parameters (paper Table I).
+//!
+//! The exemplary design in the paper (§V-A): 16 cores × 16 macros,
+//! `size_macro = 32×32` bytes, `size_OU = 4×8` bytes, write speed
+//! `s ∈ [1, 8]` bytes/cycle, off-chip bandwidth `band.` bytes/cycle.
+
+use thiserror::Error;
+
+/// Geometry of one PIM macro (the SRAM subarray that stores one weight
+/// tile and sweeps an operation unit across it in compute mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacroGeometry {
+    /// Weight rows per macro (bytes along the input dimension).
+    pub rows: u32,
+    /// Weight columns per macro (bytes along the output dimension).
+    pub cols: u32,
+    /// Operation-unit rows processed per cycle.
+    pub ou_rows: u32,
+    /// Operation-unit columns processed per cycle.
+    pub ou_cols: u32,
+}
+
+impl MacroGeometry {
+    /// The paper's exemplary 32×32-byte macro with a 4×8-byte OU.
+    pub const PAPER: Self = Self {
+        rows: 32,
+        cols: 32,
+        ou_rows: 4,
+        ou_cols: 8,
+    };
+
+    /// `size_macro` in bytes.
+    pub fn size_macro(&self) -> u64 {
+        self.rows as u64 * self.cols as u64
+    }
+
+    /// `size_OU` in bytes.
+    pub fn size_ou(&self) -> u64 {
+        self.ou_rows as u64 * self.ou_cols as u64
+    }
+
+    /// Cycles for one input vector's VMM: OU positions swept per vector.
+    pub fn cycles_per_vector(&self) -> u64 {
+        self.size_macro() / self.size_ou()
+    }
+}
+
+/// Full accelerator configuration.
+///
+/// Field names track the paper's Table I symbols where one exists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Number of PIM cores on the chip.
+    pub n_cores: u32,
+    /// Macros per core.
+    pub macros_per_core: u32,
+    /// Macro/OU geometry.
+    pub geom: MacroGeometry,
+    /// Weight rewrite speed `s`, bytes/cycle per macro write port.
+    pub write_speed: u32,
+    /// Minimum write speed the write port supports (paper §V-A: 1 B/cyc).
+    pub min_write_speed: u32,
+    /// Maximum write speed the write port supports (paper §V-A: 8 B/cyc).
+    pub max_write_speed: u32,
+    /// Off-chip memory bandwidth `band.`, bytes/cycle, shared by all writes.
+    pub bandwidth: u64,
+    /// Number of input vectors per compute batch, `n_in` (paper Table I:
+    /// "number of activations for VMM calculation").
+    pub n_in: u32,
+    /// Per-core on-chip buffer capacity in bytes (inputs + results).  Caps
+    /// `n_in` during runtime adaptation (paper §IV-C: the buffer each macro
+    /// can access bounds the batch it can compute between rewrites).
+    pub core_buffer_bytes: u64,
+}
+
+/// Validation failures for [`ArchConfig`].
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ArchError {
+    #[error("{0} must be non-zero")]
+    Zero(&'static str),
+    #[error("OU geometry {ou_rows}x{ou_cols} must tile the macro {rows}x{cols}")]
+    OuMismatch {
+        rows: u32,
+        cols: u32,
+        ou_rows: u32,
+        ou_cols: u32,
+    },
+    #[error("write_speed {speed} outside supported range [{min}, {max}]")]
+    WriteSpeedRange { speed: u32, min: u32, max: u32 },
+    #[error("core buffer ({have} B) too small for one batch ({need} B)")]
+    BufferTooSmall { have: u64, need: u64 },
+}
+
+impl ArchConfig {
+    /// The paper's exemplary configuration (§V-A): 16 cores × 16 macros,
+    /// 32×32-B macros, 4×8-B OU, s=8 B/cyc, band.=512 B/cyc, n_in=4 —
+    /// the Fig. 7 / Table II design point where `t_PIM = t_rewrite`.
+    pub fn paper_default() -> Self {
+        Self {
+            n_cores: 16,
+            macros_per_core: 16,
+            geom: MacroGeometry::PAPER,
+            write_speed: 8,
+            min_write_speed: 1,
+            max_write_speed: 8,
+            bandwidth: 512,
+            n_in: 4,
+            core_buffer_bytes: 64 * 1024,
+        }
+    }
+
+    /// The Fig. 4 configuration: s = 4 B/cyc (so `t_rewrite = 256`).
+    pub fn fig4_default() -> Self {
+        Self {
+            write_speed: 4,
+            n_in: 8,
+            ..Self::paper_default()
+        }
+    }
+
+    /// Validate the configuration; returns the first violated constraint.
+    pub fn validate(&self) -> Result<(), ArchError> {
+        for (v, name) in [
+            (self.n_cores as u64, "n_cores"),
+            (self.macros_per_core as u64, "macros_per_core"),
+            (self.geom.rows as u64, "geom.rows"),
+            (self.geom.cols as u64, "geom.cols"),
+            (self.geom.ou_rows as u64, "geom.ou_rows"),
+            (self.geom.ou_cols as u64, "geom.ou_cols"),
+            (self.write_speed as u64, "write_speed"),
+            (self.bandwidth, "bandwidth"),
+            (self.n_in as u64, "n_in"),
+            (self.core_buffer_bytes, "core_buffer_bytes"),
+        ] {
+            if v == 0 {
+                return Err(ArchError::Zero(name));
+            }
+        }
+        let g = &self.geom;
+        if g.rows % g.ou_rows != 0 || g.cols % g.ou_cols != 0 {
+            return Err(ArchError::OuMismatch {
+                rows: g.rows,
+                cols: g.cols,
+                ou_rows: g.ou_rows,
+                ou_cols: g.ou_cols,
+            });
+        }
+        if self.write_speed < self.min_write_speed || self.write_speed > self.max_write_speed {
+            return Err(ArchError::WriteSpeedRange {
+                speed: self.write_speed,
+                min: self.min_write_speed,
+                max: self.max_write_speed,
+            });
+        }
+        let need = self.batch_buffer_bytes();
+        if self.core_buffer_bytes < need {
+            return Err(ArchError::BufferTooSmall {
+                have: self.core_buffer_bytes,
+                need,
+            });
+        }
+        Ok(())
+    }
+
+    /// Total macros on the chip.
+    pub fn total_macros(&self) -> u32 {
+        self.n_cores * self.macros_per_core
+    }
+
+    /// `time_rewrite = size_macro / s` (paper §III), cycles, at speed `s`.
+    pub fn time_rewrite_at(&self, speed: u32) -> u64 {
+        crate::util::div_ceil(self.geom.size_macro(), speed.max(1) as u64)
+    }
+
+    /// `time_rewrite` at the configured write speed.
+    pub fn time_rewrite(&self) -> u64 {
+        self.time_rewrite_at(self.write_speed)
+    }
+
+    /// `time_PIM = size_macro * n_in / size_OU` (paper §III), cycles.
+    pub fn time_pim_at(&self, n_in: u32) -> u64 {
+        self.geom.cycles_per_vector() * n_in as u64
+    }
+
+    /// `time_PIM` at the configured batch size.
+    pub fn time_pim(&self) -> u64 {
+        self.time_pim_at(self.n_in)
+    }
+
+    /// Bytes of on-chip buffer one batch occupies: `n_in` input vectors
+    /// (`rows` bytes each) plus `n_in` result vectors (`cols` ints, 4 B
+    /// each, the VPU accumulator width).
+    pub fn batch_buffer_bytes(&self) -> u64 {
+        self.n_in as u64 * (self.geom.rows as u64 + 4 * self.geom.cols as u64)
+    }
+
+    /// Largest `n_in` that fits the per-macro share of the core buffer when
+    /// `active` of the core's macros are in use (runtime adaptation: fewer
+    /// active macros → more buffer each → larger batches, paper §IV-C).
+    pub fn max_n_in_for_buffer(&self, active_per_core: u32) -> u32 {
+        let per_macro = self.core_buffer_bytes / active_per_core.max(1) as u64;
+        let per_vector = self.geom.rows as u64 + 4 * self.geom.cols as u64;
+        (per_macro / per_vector) as u32
+    }
+
+    /// The ratio `time_PIM / time_rewrite` as a float.
+    pub fn ratio_pim_over_rewrite(&self) -> f64 {
+        self.time_pim() as f64 / self.time_rewrite() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let g = MacroGeometry::PAPER;
+        assert_eq!(g.size_macro(), 1024);
+        assert_eq!(g.size_ou(), 32);
+        assert_eq!(g.cycles_per_vector(), 32);
+    }
+
+    #[test]
+    fn paper_default_is_design_point() {
+        // Fig.7 / Table II design point: t_PIM == t_rewrite == 128 cycles.
+        let c = ArchConfig::paper_default();
+        c.validate().unwrap();
+        assert_eq!(c.time_rewrite(), 128);
+        assert_eq!(c.time_pim(), 128);
+        assert_eq!(c.total_macros(), 256);
+    }
+
+    #[test]
+    fn fig4_config_times() {
+        // Fig. 4: s=4 => t_rewrite=256; n_in=8 => t_PIM=256 (the sweet spot).
+        let c = ArchConfig::fig4_default();
+        c.validate().unwrap();
+        assert_eq!(c.time_rewrite(), 256);
+        assert_eq!(c.time_pim(), 256);
+    }
+
+    #[test]
+    fn time_pim_scales_with_n_in() {
+        let c = ArchConfig::paper_default();
+        assert_eq!(c.time_pim_at(1), 32);
+        assert_eq!(c.time_pim_at(32), 1024);
+    }
+
+    #[test]
+    fn time_rewrite_rounds_up() {
+        let c = ArchConfig::paper_default();
+        assert_eq!(c.time_rewrite_at(3), 342); // ceil(1024/3)
+    }
+
+    #[test]
+    fn validate_rejects_zero() {
+        let mut c = ArchConfig::paper_default();
+        c.n_in = 0;
+        assert_eq!(c.validate(), Err(ArchError::Zero("n_in")));
+    }
+
+    #[test]
+    fn validate_rejects_bad_ou() {
+        let mut c = ArchConfig::paper_default();
+        c.geom.ou_rows = 5;
+        assert!(matches!(c.validate(), Err(ArchError::OuMismatch { .. })));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_speed() {
+        let mut c = ArchConfig::paper_default();
+        c.write_speed = 16;
+        assert!(matches!(
+            c.validate(),
+            Err(ArchError::WriteSpeedRange { .. })
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_tiny_buffer() {
+        let mut c = ArchConfig::paper_default();
+        c.core_buffer_bytes = 16;
+        assert!(matches!(c.validate(), Err(ArchError::BufferTooSmall { .. })));
+    }
+
+    #[test]
+    fn buffer_scaling_grows_n_in() {
+        // Halving active macros should at least double the feasible n_in.
+        let c = ArchConfig::paper_default();
+        let full = c.max_n_in_for_buffer(c.macros_per_core);
+        let half = c.max_n_in_for_buffer(c.macros_per_core / 2);
+        assert!(half >= 2 * full);
+        assert!(full >= c.n_in, "design n_in must fit the buffer");
+    }
+
+    #[test]
+    fn ratio_matches_formula() {
+        let c = ArchConfig::paper_default();
+        assert!((c.ratio_pim_over_rewrite() - 1.0).abs() < 1e-12);
+    }
+}

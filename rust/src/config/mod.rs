@@ -1,0 +1,280 @@
+//! TOML-subset configuration parser (no `serde` available offline).
+//!
+//! Supports the subset the tool needs: `[section]` headers, `key = value`
+//! pairs with integer / float / string / bool values, `#` comments.
+//! Example accepted by [`parse_arch_config`]:
+//!
+//! ```toml
+//! [chip]
+//! n_cores = 16
+//! macros_per_core = 16
+//!
+//! [macro]
+//! rows = 32
+//! cols = 32
+//! ou_rows = 4
+//! ou_cols = 8
+//!
+//! [memory]
+//! bandwidth = 512
+//! write_speed = 8
+//! min_write_speed = 1
+//! max_write_speed = 8
+//! core_buffer_bytes = 65536
+//!
+//! [workload]
+//! n_in = 4
+//! ```
+
+use crate::arch::{ArchConfig, MacroGeometry};
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    /// Integer view (floats with zero fraction coerce).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// Float view (ints coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value` (top-level keys use `""`
+/// section).
+pub type Document = BTreeMap<String, Value>;
+
+/// Parse failures with line numbers.
+#[derive(Debug, Error, PartialEq)]
+pub enum ConfigError {
+    #[error("line {line}: malformed section header")]
+    BadSection { line: usize },
+    #[error("line {line}: expected 'key = value'")]
+    BadPair { line: usize },
+    #[error("line {line}: cannot parse value '{value}'")]
+    BadValue { line: usize, value: String },
+    #[error("missing required key '{0}'")]
+    Missing(String),
+    #[error("key '{key}' has wrong type (expected {expected})")]
+    WrongType { key: String, expected: &'static str },
+    #[error("arch validation: {0}")]
+    Arch(String),
+}
+
+/// Parse TOML-subset text into a flat `section.key -> value` map.
+pub fn parse(text: &str) -> Result<Document, ConfigError> {
+    let mut doc = Document::new();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or(ConfigError::BadSection { line: line_no })?
+                .trim();
+            if name.is_empty() || name.contains(['[', ']']) {
+                return Err(ConfigError::BadSection { line: line_no });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or(ConfigError::BadPair { line: line_no })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(ConfigError::BadPair { line: line_no });
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.insert(full_key, parse_value(value.trim(), line_no)?);
+    }
+    Ok(doc)
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ConfigError> {
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = text.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    let cleaned = text.replace('_', "");
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(ConfigError::BadValue {
+        line,
+        value: text.to_string(),
+    })
+}
+
+fn get_u32(doc: &Document, key: &str, default: Option<u32>) -> Result<u32, ConfigError> {
+    match doc.get(key) {
+        Some(v) => v
+            .as_int()
+            .filter(|v| *v >= 0 && *v <= u32::MAX as i64)
+            .map(|v| v as u32)
+            .ok_or(ConfigError::WrongType {
+                key: key.to_string(),
+                expected: "u32",
+            }),
+        None => default.ok_or_else(|| ConfigError::Missing(key.to_string())),
+    }
+}
+
+fn get_u64(doc: &Document, key: &str, default: Option<u64>) -> Result<u64, ConfigError> {
+    match doc.get(key) {
+        Some(v) => v
+            .as_int()
+            .filter(|v| *v >= 0)
+            .map(|v| v as u64)
+            .ok_or(ConfigError::WrongType {
+                key: key.to_string(),
+                expected: "u64",
+            }),
+        None => default.ok_or_else(|| ConfigError::Missing(key.to_string())),
+    }
+}
+
+/// Build a validated [`ArchConfig`] from parsed config text.  Every key is
+/// optional; omitted keys take the paper-default value.
+pub fn parse_arch_config(text: &str) -> Result<ArchConfig, ConfigError> {
+    let doc = parse(text)?;
+    let d = ArchConfig::paper_default();
+    let cfg = ArchConfig {
+        n_cores: get_u32(&doc, "chip.n_cores", Some(d.n_cores))?,
+        macros_per_core: get_u32(&doc, "chip.macros_per_core", Some(d.macros_per_core))?,
+        geom: MacroGeometry {
+            rows: get_u32(&doc, "macro.rows", Some(d.geom.rows))?,
+            cols: get_u32(&doc, "macro.cols", Some(d.geom.cols))?,
+            ou_rows: get_u32(&doc, "macro.ou_rows", Some(d.geom.ou_rows))?,
+            ou_cols: get_u32(&doc, "macro.ou_cols", Some(d.geom.ou_cols))?,
+        },
+        write_speed: get_u32(&doc, "memory.write_speed", Some(d.write_speed))?,
+        min_write_speed: get_u32(&doc, "memory.min_write_speed", Some(d.min_write_speed))?,
+        max_write_speed: get_u32(&doc, "memory.max_write_speed", Some(d.max_write_speed))?,
+        bandwidth: get_u64(&doc, "memory.bandwidth", Some(d.bandwidth))?,
+        core_buffer_bytes: get_u64(&doc, "memory.core_buffer_bytes", Some(d.core_buffer_bytes))?,
+        n_in: get_u32(&doc, "workload.n_in", Some(d.n_in))?,
+    };
+    cfg.validate().map_err(|e| ConfigError::Arch(e.to_string()))?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = parse("top = 1\n[a]\nx = 2\ny = 3.5\nz = \"hi\"\nw = true\n").unwrap();
+        assert_eq!(doc["top"], Value::Int(1));
+        assert_eq!(doc["a.x"], Value::Int(2));
+        assert_eq!(doc["a.y"], Value::Float(3.5));
+        assert_eq!(doc["a.z"], Value::Str("hi".into()));
+        assert_eq!(doc["a.w"], Value::Bool(true));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc = parse("# header\nx = 65_536 # tail\n").unwrap();
+        assert_eq!(doc["x"], Value::Int(65536));
+    }
+
+    #[test]
+    fn rejects_bad_section() {
+        assert!(matches!(
+            parse("[oops\n"),
+            Err(ConfigError::BadSection { line: 1 })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_pair() {
+        assert!(matches!(parse("just words\n"), Err(ConfigError::BadPair { line: 1 })));
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        assert!(matches!(
+            parse("x = @nope\n"),
+            Err(ConfigError::BadValue { line: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn arch_defaults_when_empty() {
+        let cfg = parse_arch_config("").unwrap();
+        assert_eq!(cfg, ArchConfig::paper_default());
+    }
+
+    #[test]
+    fn arch_overrides() {
+        let cfg = parse_arch_config("[memory]\nbandwidth = 128\nwrite_speed = 4\n[workload]\nn_in = 8\n")
+            .unwrap();
+        assert_eq!(cfg.bandwidth, 128);
+        assert_eq!(cfg.write_speed, 4);
+        assert_eq!(cfg.n_in, 8);
+    }
+
+    #[test]
+    fn arch_validation_propagates() {
+        let e = parse_arch_config("[workload]\nn_in = 0\n").unwrap_err();
+        assert!(matches!(e, ConfigError::Arch(_)));
+    }
+
+    #[test]
+    fn wrong_type_detected() {
+        let e = parse_arch_config("[memory]\nbandwidth = \"lots\"\n").unwrap_err();
+        assert!(matches!(e, ConfigError::WrongType { .. }));
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Float(2.0).as_int(), Some(2));
+        assert_eq!(Value::Float(2.5).as_int(), None);
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Str("s".into()).as_int(), None);
+    }
+}

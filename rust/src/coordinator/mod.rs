@@ -1,0 +1,326 @@
+//! The coordinator: the top of Layer 3.
+//!
+//! Takes a GeMM [`Workload`], a [`Strategy`] and resource knobs; builds
+//! the tile map, generates the strategy's program, runs the cycle-accurate
+//! simulation, and (optionally) executes the *functional* numerics of
+//! every scheduled VMM through the PJRT runtime (AOT JAX/Pallas artifacts)
+//! — checking the final GeMM outputs against the pure-Rust reference.
+//! One call yields both of the paper's currencies: cycles and correctness.
+
+use crate::arch::ArchConfig;
+use crate::gemm::reference;
+use crate::gemm::{TileMap, Workload};
+use crate::runtime::Runtime;
+use crate::sched::{SchedulePlan, Strategy};
+use crate::sim::{simulate, SimOptions, SimStats};
+use anyhow::{bail, Context, Result};
+
+/// Per-run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RunConfig {
+    pub strategy: Strategy,
+    /// Macros to use across the chip (clamped to the task count).
+    pub active_macros: u32,
+    /// Batch size per tile-task.
+    pub n_in: u32,
+    /// Write-port speed each macro programs.
+    pub write_speed: u32,
+    /// Execute and check functional numerics.
+    pub check_numerics: bool,
+    /// Seed for the synthetic int8 data.
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// Defaults from the architecture, full chip, numerics off.
+    pub fn from_arch(arch: &ArchConfig, strategy: Strategy) -> Self {
+        Self {
+            strategy,
+            active_macros: arch.total_macros(),
+            n_in: arch.n_in,
+            write_speed: arch.write_speed,
+            check_numerics: false,
+            seed: 0x9D1B,
+        }
+    }
+}
+
+/// Numerics outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct NumericsReport {
+    /// GeMM ops validated.
+    pub ops_checked: usize,
+    /// Max |PIM result − reference| over every output element (must be
+    /// exactly 0.0 on the int8 grid).
+    pub max_abs_err: f32,
+    /// True when the PJRT artifacts did the math; false for the built-in
+    /// Rust OU-sweep model (artifacts not built).
+    pub via_pjrt: bool,
+}
+
+/// One simulated (and optionally validated) run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workload: String,
+    pub strategy: Strategy,
+    /// Total execution cycles.
+    pub cycles: u64,
+    /// Scheduler tasks executed.
+    pub tasks: u32,
+    /// Full simulator statistics.
+    pub stats: SimStats,
+    /// Numerics check, when requested.
+    pub numerics: Option<NumericsReport>,
+}
+
+impl RunReport {
+    /// Throughput in MACs per cycle for the workload.
+    pub fn macs_per_cycle(&self, workload: &Workload) -> f64 {
+        workload.total_macs() as f64 / self.cycles.max(1) as f64
+    }
+}
+
+/// The coordinator. Owns the (optional) PJRT runtime and the simulator
+/// options; cheap to reuse across runs — executables stay cached.
+pub struct Coordinator {
+    pub arch: ArchConfig,
+    pub sim_opts: SimOptions,
+    runtime: Option<Runtime>,
+}
+
+impl Coordinator {
+    /// Coordinator without PJRT (numerics fall back to the Rust OU model).
+    pub fn new(arch: ArchConfig) -> Self {
+        Self {
+            arch,
+            sim_opts: SimOptions::default(),
+            runtime: None,
+        }
+    }
+
+    /// Coordinator with the PJRT runtime loaded from `artifact_dir`.
+    pub fn with_runtime(arch: ArchConfig, artifact_dir: &str) -> Result<Self> {
+        let runtime = Runtime::new(artifact_dir).context("loading PJRT runtime")?;
+        Ok(Self {
+            arch,
+            sim_opts: SimOptions::default(),
+            runtime: Some(runtime),
+        })
+    }
+
+    /// Whether numerics will go through PJRT.
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Simulate (and optionally validate) one workload under one strategy.
+    pub fn run(&mut self, workload: &Workload, cfg: &RunConfig) -> Result<RunReport> {
+        let map = TileMap::build(&self.arch, workload, cfg.n_in);
+        if map.is_empty() {
+            bail!("workload '{}' has no tasks", workload.name);
+        }
+        let plan = SchedulePlan {
+            tasks: map.len() as u32,
+            active_macros: cfg.active_macros.min(map.len() as u32),
+            n_in: cfg.n_in,
+            write_speed: cfg.write_speed,
+        };
+        let program = cfg
+            .strategy
+            .codegen(&self.arch, &plan)
+            .context("strategy codegen")?;
+        let mut opts = self.sim_opts.clone();
+        opts.allow_intra_overlap |= cfg.strategy.requires_intra_overlap();
+        let result = simulate(&self.arch, &program, opts)
+            .map_err(|e| anyhow::anyhow!("simulation: {e}"))?;
+        if result.stats.vmms_completed != plan.tasks as u64 {
+            bail!(
+                "scheduler bug: {} of {} tasks computed",
+                result.stats.vmms_completed,
+                plan.tasks
+            );
+        }
+        let numerics = if cfg.check_numerics {
+            Some(self.check_numerics(workload, &map, cfg.seed)?)
+        } else {
+            None
+        };
+        Ok(RunReport {
+            workload: workload.name.clone(),
+            strategy: cfg.strategy,
+            cycles: result.stats.cycles,
+            tasks: plan.tasks,
+            stats: result.stats,
+            numerics,
+        })
+    }
+
+    /// Run all three strategies on the same workload/resources.
+    pub fn compare(&mut self, workload: &Workload, base: &RunConfig) -> Result<Vec<RunReport>> {
+        Strategy::ALL
+            .iter()
+            .map(|&s| {
+                let cfg = RunConfig {
+                    strategy: s,
+                    ..*base
+                };
+                self.run(workload, &cfg)
+            })
+            .collect()
+    }
+
+    /// Execute every op's tiled numerics (via PJRT when available, else
+    /// the built-in OU-sweep model) and compare against the reference.
+    fn check_numerics(
+        &mut self,
+        workload: &Workload,
+        map: &TileMap,
+        seed: u64,
+    ) -> Result<NumericsReport> {
+        let mut max_err = 0.0f32;
+        let via_pjrt = self.runtime.is_some();
+        for (oi, op) in workload.ops.iter().enumerate() {
+            let (x, w) = workload.materialize(oi, seed);
+            let (m, k, n) = (op.m as usize, op.k as usize, op.n as usize);
+            let cols = self.arch.geom.cols as usize;
+            let n_padded = op.n.div_ceil(self.arch.geom.cols) as usize * cols;
+            let mut out = vec![0.0f32; m * n_padded];
+            for task in map.tasks.iter().filter(|t| t.op == oi as u32) {
+                let slab = map.input_slab(&self.arch, workload, task, &x);
+                let tile = map.weight_tile(&self.arch, workload, task, &w);
+                let n_vec = task.n_vec() as usize;
+                let partial = match &mut self.runtime {
+                    Some(rt) => rt
+                        .macro_vmm(&slab, &tile, n_vec)
+                        .context("PJRT macro_vmm")?,
+                    None => ou_sweep_vmm(&self.arch, &slab, &tile, n_vec),
+                };
+                // VPU accumulation into the output column block.
+                let c0 = task.nt as usize * cols;
+                for v in 0..n_vec {
+                    let row = task.v0 as usize + v;
+                    for c in 0..cols {
+                        out[row * n_padded + c0 + c] += partial[v * cols + c];
+                    }
+                }
+            }
+            // Crop padding and compare to the reference GeMM.
+            let reference = reference::gemm(&x, &w, m, k, n);
+            for row in 0..m {
+                for c in 0..n {
+                    let d = (out[row * n_padded + c] - reference[row * n + c]).abs();
+                    max_err = max_err.max(d);
+                }
+            }
+        }
+        Ok(NumericsReport {
+            ops_checked: workload.ops.len(),
+            max_abs_err: max_err,
+            via_pjrt,
+        })
+    }
+}
+
+/// The built-in Rust model of the macro's OU sweep — the same dataflow as
+/// the L1 Pallas kernel (4×8 operation unit stepped across the 32×32
+/// tile), used when artifacts are absent and cross-checked against both
+/// the reference and the PJRT path in tests.
+pub fn ou_sweep_vmm(arch: &ArchConfig, x: &[f32], w: &[f32], n_vec: usize) -> Vec<f32> {
+    let rows = arch.geom.rows as usize;
+    let cols = arch.geom.cols as usize;
+    let (our, ouc) = (arch.geom.ou_rows as usize, arch.geom.ou_cols as usize);
+    let mut out = vec![0.0f32; n_vec * cols];
+    // Column-block outer loop, row-block inner: the hardware sweep order.
+    for jb in 0..cols / ouc {
+        for ib in 0..rows / our {
+            for v in 0..n_vec {
+                for dj in 0..ouc {
+                    let j = jb * ouc + dj;
+                    let mut acc = 0.0f32;
+                    for di in 0..our {
+                        let i = ib * our + di;
+                        acc += x[v * rows + i] * w[i * cols + j];
+                    }
+                    out[v * cols + j] += acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::blas;
+    use crate::util::rng::XorShift64;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default()
+    }
+
+    #[test]
+    fn ou_sweep_matches_reference() {
+        let a = arch();
+        let mut rng = XorShift64::new(7);
+        for n_vec in [1usize, 3, 4, 8] {
+            let x = rng.int8_vec(n_vec * 32);
+            let w = rng.int8_vec(1024);
+            let got = ou_sweep_vmm(&a, &x, &w, n_vec);
+            let want = reference::gemm(&x, &w, n_vec, 32, 32);
+            assert_eq!(got, want, "n_vec={n_vec}");
+        }
+    }
+
+    #[test]
+    fn run_completes_and_checks_numerics_locally() {
+        let mut c = Coordinator::new(arch());
+        let wl = blas::square_chain(64, 2, 8);
+        let cfg = RunConfig {
+            check_numerics: true,
+            ..RunConfig::from_arch(&c.arch, Strategy::GeneralizedPingPong)
+        };
+        let r = c.run(&wl, &cfg).unwrap();
+        assert!(r.cycles > 0);
+        let num = r.numerics.unwrap();
+        assert_eq!(num.ops_checked, 2);
+        assert_eq!(num.max_abs_err, 0.0);
+        assert!(!num.via_pjrt);
+    }
+
+    #[test]
+    fn compare_runs_all_strategies() {
+        let mut c = Coordinator::new(arch());
+        let wl = blas::square_chain(64, 4, 4);
+        let base = RunConfig::from_arch(&c.arch, Strategy::InSitu);
+        let reports = c.compare(&wl, &base).unwrap();
+        assert_eq!(reports.len(), 3);
+        // Same tasks everywhere.
+        assert!(reports.windows(2).all(|p| p[0].tasks == p[1].tasks));
+    }
+
+    #[test]
+    fn ragged_workload_numerics_exact() {
+        let mut c = Coordinator::new(arch());
+        let wl = Workload::new(
+            "ragged",
+            vec![crate::gemm::GemmOp { m: 5, k: 45, n: 70 }],
+        );
+        let cfg = RunConfig {
+            check_numerics: true,
+            n_in: 4,
+            ..RunConfig::from_arch(&c.arch, Strategy::NaivePingPong)
+        };
+        let r = c.run(&wl, &cfg).unwrap();
+        assert_eq!(r.numerics.unwrap().max_abs_err, 0.0);
+    }
+
+    #[test]
+    fn macs_per_cycle_positive() {
+        let mut c = Coordinator::new(arch());
+        let wl = blas::square_chain(32, 1, 4);
+        let cfg = RunConfig::from_arch(&c.arch, Strategy::GeneralizedPingPong);
+        let r = c.run(&wl, &cfg).unwrap();
+        assert!(r.macs_per_cycle(&wl) > 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! BLAS-level benchmark workloads (paper §V-A: "large-scale consecutive
+//! GeMM operations with BLAS level benchmarks") plus the DNN-shaped
+//! streams the introduction motivates (transformer FFN / MLP chains).
+
+use super::workload::{GemmOp, Workload};
+
+/// Square GeMM chain: `count` back-to-back `size × size × size` ops —
+/// the plain BLAS-3 stress case.
+pub fn square_chain(size: u32, count: u32, m: u32) -> Workload {
+    Workload::new(
+        format!("blas3-square-{size}x{count}"),
+        (0..count)
+            .map(|_| GemmOp {
+                m,
+                k: size,
+                n: size,
+            })
+            .collect(),
+    )
+}
+
+/// Transformer FFN stream: per layer `d_model→d_ff` then `d_ff→d_model`
+/// with `tokens` activation rows — the LLM-style workload the paper's
+/// introduction motivates (weights far exceed on-chip capacity).
+pub fn transformer_ffn(tokens: u32, d_model: u32, d_ff: u32, layers: u32) -> Workload {
+    let mut ops = Vec::new();
+    for _ in 0..layers {
+        ops.push(GemmOp {
+            m: tokens,
+            k: d_model,
+            n: d_ff,
+        });
+        ops.push(GemmOp {
+            m: tokens,
+            k: d_ff,
+            n: d_model,
+        });
+    }
+    Workload::new(
+        format!("transformer-ffn-t{tokens}-d{d_model}-f{d_ff}-L{layers}"),
+        ops,
+    )
+}
+
+/// MLP tower: progressively narrowing dense layers.
+pub fn mlp_tower(batch: u32, dims: &[u32]) -> Workload {
+    let ops = dims
+        .windows(2)
+        .map(|w| GemmOp {
+            m: batch,
+            k: w[0],
+            n: w[1],
+        })
+        .collect();
+    Workload::new(format!("mlp-{}", dims.len() - 1), ops)
+}
+
+/// The tiny end-to-end validation workload used by
+/// `examples/dnn_inference.rs`: a 2-layer FFN on 16 tokens matching the
+/// `ffn_16x64x128` AOT artifact shapes.
+pub fn e2e_ffn() -> Workload {
+    Workload::new(
+        "e2e-ffn-16x64x128",
+        vec![
+            GemmOp { m: 16, k: 64, n: 128 },
+            GemmOp { m: 16, k: 128, n: 64 },
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_chain_shape() {
+        let w = square_chain(128, 4, 16);
+        assert_eq!(w.ops.len(), 4);
+        assert!(w.ops.iter().all(|o| o.k == 128 && o.n == 128 && o.m == 16));
+        assert_eq!(w.total_tiles(32, 32), 4 * 16);
+    }
+
+    #[test]
+    fn transformer_ffn_alternates() {
+        let w = transformer_ffn(16, 64, 256, 2);
+        assert_eq!(w.ops.len(), 4);
+        assert_eq!(w.ops[0].n, 256);
+        assert_eq!(w.ops[1].k, 256);
+        assert_eq!(w.ops[1].n, 64);
+    }
+
+    #[test]
+    fn mlp_tower_windows() {
+        let w = mlp_tower(8, &[128, 64, 32]);
+        assert_eq!(w.ops.len(), 2);
+        assert_eq!(w.ops[0], GemmOp { m: 8, k: 128, n: 64 });
+        assert_eq!(w.ops[1], GemmOp { m: 8, k: 64, n: 32 });
+    }
+
+    #[test]
+    fn e2e_matches_artifact_shapes() {
+        let w = e2e_ffn();
+        assert_eq!(w.ops[0], GemmOp { m: 16, k: 64, n: 128 });
+        assert_eq!(w.ops[1], GemmOp { m: 16, k: 128, n: 64 });
+    }
+}

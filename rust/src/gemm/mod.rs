@@ -1,0 +1,14 @@
+//! GeMM workloads: the large consecutive general matrix multiplications
+//! the paper evaluates (BLAS-level benchmarks, §V-A), their tiling onto
+//! 32×32-byte PIM macro weight tiles, and a pure-Rust reference
+//! implementation for end-to-end numerics checking.
+
+pub mod blas;
+pub mod reference;
+pub mod tiling;
+pub mod trace;
+pub mod workload;
+
+pub use tiling::{TileMap, TileTask};
+pub use trace::{parse_trace, to_trace};
+pub use workload::{GemmOp, Workload};

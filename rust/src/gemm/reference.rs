@@ -1,0 +1,149 @@
+//! Pure-Rust reference numerics: the golden model the PJRT path (and
+//! therefore the whole L1/L2 stack) is checked against end-to-end.
+//!
+//! All data is on the int8 grid carried in f32 (exact up to |acc| < 2^24),
+//! mirroring `python/compile/kernels/ref.py` bit-for-bit.
+
+/// Plain row-major GeMM: `x (m×k) @ w (k×n) -> (m×n)`.
+pub fn gemm(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "x shape mismatch");
+    assert_eq!(w.len(), k * n, "w shape mismatch");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[kk * n..kk * n + n];
+            let orow = &mut out[i * n..i * n + n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// VPU requantization: round-half-up arithmetic shift + int8 clip
+/// (mirrors `requant_ref` in the Python oracle).
+pub fn requant(acc: &[f32], shift: u32) -> Vec<f32> {
+    let div = (1u64 << shift) as f32;
+    acc.iter()
+        .map(|&v| ((v / div + 0.5).floor()).clamp(-128.0, 127.0))
+        .collect()
+}
+
+/// ReLU.
+pub fn relu(v: &[f32]) -> Vec<f32> {
+    v.iter().map(|&x| x.max(0.0)).collect()
+}
+
+/// The FFN chain of the end-to-end example:
+/// `gemm -> requant(shift) -> relu -> gemm` (mirrors `ffn_ref`).
+pub fn ffn(
+    x: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    m: usize,
+    k: usize,
+    h: usize,
+    n: usize,
+    shift: u32,
+) -> Vec<f32> {
+    let a = gemm(x, w1, m, k, h);
+    let a = relu(&requant(&a, shift));
+    gemm(&a, w2, m, h, n)
+}
+
+/// Max absolute elementwise difference (numerics check metric).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn gemm_identity() {
+        // x @ I = x
+        let m = 3;
+        let k = 4;
+        let mut rng = XorShift64::new(1);
+        let x = rng.int8_vec(m * k);
+        let mut eye = vec![0.0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        assert_eq!(gemm(&x, &eye, m, k, k), x);
+    }
+
+    #[test]
+    fn gemm_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0, 1.0, 1.0, 1.0];
+        assert_eq!(gemm(&x, &w, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gemm_zero_skip_consistent() {
+        // The zero-skip fast path must not change results.
+        let mut rng = XorShift64::new(2);
+        let (m, k, n) = (4, 8, 8);
+        let mut x = rng.int8_vec(m * k);
+        for i in (0..x.len()).step_by(3) {
+            x[i] = 0.0;
+        }
+        let w = rng.int8_vec(k * n);
+        let fast = gemm(&x, &w, m, k, n);
+        // naive triple loop
+        let mut slow = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    slow[i * n + j] += x[i * k + kk] * w[kk * n + j];
+                }
+            }
+        }
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn requant_matches_python_semantics() {
+        // floor(v/128 + 0.5) with clip: 64 -> 1, -64 -> 0 (round half up).
+        assert_eq!(requant(&[64.0, -64.0], 7), vec![1.0, 0.0]);
+        assert_eq!(requant(&[1e6, -1e6], 7), vec![127.0, -128.0]);
+        assert_eq!(requant(&[0.0], 7), vec![0.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        assert_eq!(relu(&[-1.0, 0.0, 2.0]), vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn ffn_composes() {
+        let (m, k, h, n) = (2, 3, 4, 2);
+        let mut rng = XorShift64::new(3);
+        let x = rng.int8_vec(m * k);
+        let w1 = rng.int8_vec(k * h);
+        let w2 = rng.int8_vec(h * n);
+        let out = ffn(&x, &w1, &w2, m, k, h, n, 7);
+        // manual compose
+        let manual = gemm(&relu(&requant(&gemm(&x, &w1, m, k, h), 7)), &w2, m, h, n);
+        assert_eq!(out, manual);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Mapping from scheduler *tile-tasks* to GeMM weight tiles.
+//!
+//! The scheduler ([`crate::sched`]) works on an abstract task list; this
+//! module gives every task a concrete meaning: "write the weight tile at
+//! (op, k-tile, n-tile) and compute the op's activation rows `v0..v1`
+//! against it".  The coordinator uses the map to run real numerics for
+//! each simulated VMM and to assemble the final GeMM outputs.
+
+use super::workload::Workload;
+use crate::arch::ArchConfig;
+
+/// One concrete tile-task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileTask {
+    /// Which GeMM op in the workload.
+    pub op: u32,
+    /// k-tile index (weight rows `kt*32 .. kt*32+32`).
+    pub kt: u32,
+    /// n-tile index (weight cols `nt*32 .. nt*32+32`).
+    pub nt: u32,
+    /// First activation row of this batch.
+    pub v0: u32,
+    /// One past the last activation row.
+    pub v1: u32,
+}
+
+impl TileTask {
+    /// Vectors in this batch.
+    pub fn n_vec(&self) -> u32 {
+        self.v1 - self.v0
+    }
+}
+
+/// The full task map for a workload on a given architecture.
+#[derive(Debug, Clone)]
+pub struct TileMap {
+    /// Task index → concrete tile-task.
+    pub tasks: Vec<TileTask>,
+    /// The batch cap used (tasks carry at most this many vectors).
+    pub n_in: u32,
+}
+
+impl TileMap {
+    /// Enumerate tasks: for every op, every (kt, nt) weight tile, every
+    /// `n_in`-sized slice of the op's `m` activation rows.  A tile touched
+    /// by `b` batches appears as `b` tasks (the weight must stay loaded;
+    /// the scheduler assigns them to the same macro slot round-robin only
+    /// by coincidence — so each task carries its own write, matching the
+    /// paper's conservative "every batch rewrites" accounting for
+    /// consecutive GeMM streams).
+    pub fn build(arch: &ArchConfig, workload: &Workload, n_in: u32) -> Self {
+        let (tr, tc) = (arch.geom.rows, arch.geom.cols);
+        let mut tasks = Vec::new();
+        for (oi, op) in workload.ops.iter().enumerate() {
+            let kt_count = op.k.div_ceil(tr);
+            let nt_count = op.n.div_ceil(tc);
+            for kt in 0..kt_count {
+                for nt in 0..nt_count {
+                    let mut v0 = 0;
+                    while v0 < op.m {
+                        let v1 = (v0 + n_in).min(op.m);
+                        tasks.push(TileTask {
+                            op: oi as u32,
+                            kt,
+                            nt,
+                            v0,
+                            v1,
+                        });
+                        v0 = v1;
+                    }
+                }
+            }
+        }
+        Self { tasks, n_in }
+    }
+
+    /// Number of scheduler tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// True when the workload produced no tasks.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Look up the task for a simulator tile id (tile ids are 1-based).
+    pub fn task_for_tile(&self, tile: u32) -> Option<&TileTask> {
+        self.tasks.get(tile.checked_sub(1)? as usize)
+    }
+
+    /// Extract the weight tile (`rows × cols`, zero-padded) for a task
+    /// from the op's row-major weight matrix.
+    pub fn weight_tile(
+        &self,
+        arch: &ArchConfig,
+        workload: &Workload,
+        task: &TileTask,
+        w: &[f32],
+    ) -> Vec<f32> {
+        let op = &workload.ops[task.op as usize];
+        let (tr, tc) = (arch.geom.rows as usize, arch.geom.cols as usize);
+        let mut tile = vec![0.0f32; tr * tc];
+        let k0 = task.kt as usize * tr;
+        let n0 = task.nt as usize * tc;
+        for r in 0..tr.min(op.k as usize - k0.min(op.k as usize)) {
+            for c in 0..tc.min(op.n as usize - n0.min(op.n as usize)) {
+                tile[r * tc + c] = w[(k0 + r) * op.n as usize + (n0 + c)];
+            }
+        }
+        tile
+    }
+
+    /// Extract the activation slab (`n_vec × rows`, zero-padded along k)
+    /// for a task from the op's row-major activation matrix.
+    pub fn input_slab(
+        &self,
+        arch: &ArchConfig,
+        workload: &Workload,
+        task: &TileTask,
+        x: &[f32],
+    ) -> Vec<f32> {
+        let op = &workload.ops[task.op as usize];
+        let tr = arch.geom.rows as usize;
+        let n_vec = task.n_vec() as usize;
+        let k0 = task.kt as usize * tr;
+        let mut slab = vec![0.0f32; n_vec * tr];
+        for v in 0..n_vec {
+            let row = task.v0 as usize + v;
+            for r in 0..tr.min(op.k as usize - k0.min(op.k as usize)) {
+                slab[v * tr + r] = x[row * op.k as usize + k0 + r];
+            }
+        }
+        slab
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::workload::GemmOp;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default()
+    }
+
+    #[test]
+    fn builds_expected_task_count() {
+        // 16x128 @ 128x128: 4 k-tiles x 4 n-tiles x ceil(16/4)=4 batches.
+        let w = Workload::new("t", vec![GemmOp { m: 16, k: 128, n: 128 }]);
+        let map = TileMap::build(&arch(), &w, 4);
+        assert_eq!(map.len(), 4 * 4 * 4);
+    }
+
+    #[test]
+    fn ragged_shapes_round_up() {
+        let w = Workload::new("t", vec![GemmOp { m: 3, k: 40, n: 33 }]);
+        let map = TileMap::build(&arch(), &w, 4);
+        // 2 k-tiles, 2 n-tiles, 1 batch (3 < 4)
+        assert_eq!(map.len(), 4);
+        assert_eq!(map.tasks[0].n_vec(), 3);
+    }
+
+    #[test]
+    fn tile_ids_are_one_based() {
+        let w = Workload::new("t", vec![GemmOp { m: 4, k: 32, n: 32 }]);
+        let map = TileMap::build(&arch(), &w, 4);
+        assert!(map.task_for_tile(0).is_none());
+        assert!(map.task_for_tile(1).is_some());
+        assert!(map.task_for_tile(map.len() as u32 + 1).is_none());
+    }
+
+    #[test]
+    fn weight_tile_extraction_with_padding() {
+        let a = arch();
+        let op = GemmOp { m: 1, k: 33, n: 33 };
+        let w = Workload::new("t", vec![op]);
+        let map = TileMap::build(&a, &w, 4);
+        // Dense w: w[r][c] = r*100 + c (kept small enough for f32 grid).
+        let wm: Vec<f32> = (0..op.k * op.n).map(|i| (i % 89) as f32).collect();
+        // k-tile 1, n-tile 1 contains only w[32][32] at tile[0][0].
+        let t = map
+            .tasks
+            .iter()
+            .find(|t| t.kt == 1 && t.nt == 1)
+            .copied()
+            .unwrap();
+        let tile = map.weight_tile(&a, &w, &t, &wm);
+        assert_eq!(tile[0], wm[(32 * 33 + 32) as usize]);
+        assert!(tile[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn input_slab_extraction() {
+        let a = arch();
+        let op = GemmOp { m: 2, k: 64, n: 32 };
+        let w = Workload::new("t", vec![op]);
+        let map = TileMap::build(&a, &w, 4);
+        let x: Vec<f32> = (0..op.m * op.k).map(|i| (i % 97) as f32).collect();
+        // k-tile 1: rows 32..64 of each activation vector.
+        let t = map.tasks.iter().find(|t| t.kt == 1).copied().unwrap();
+        let slab = map.input_slab(&a, &w, &t, &x);
+        assert_eq!(slab.len(), 2 * 32);
+        assert_eq!(slab[0], x[32]);
+        assert_eq!(slab[32], x[64 + 32]);
+    }
+
+    #[test]
+    fn batches_split_rows() {
+        let w = Workload::new("t", vec![GemmOp { m: 10, k: 32, n: 32 }]);
+        let map = TileMap::build(&arch(), &w, 4);
+        // batches: 4 + 4 + 2
+        assert_eq!(map.len(), 3);
+        assert_eq!(map.tasks[2].v0, 8);
+        assert_eq!(map.tasks[2].v1, 10);
+    }
+}

@@ -1,0 +1,142 @@
+//! Workload trace format: GeMM streams as text files.
+//!
+//! One op per line: `m k n [repeat]`, `#` comments.  Lets users replay
+//! DNN layer traces (e.g. dumped from a framework's profiler) through the
+//! coordinator — the "real workload trace" path of the end-to-end story:
+//!
+//! ```text
+//! # bert-tiny FFN stream, batch 16
+//! 16 128 512
+//! 16 512 128  x2
+//! ```
+//!
+//! `xN` (or a bare integer) in the fourth column repeats the op N times.
+
+use super::workload::{GemmOp, Workload};
+use thiserror::Error;
+
+/// Trace parse errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum TraceError {
+    #[error("line {line}: expected 'm k n [xREPEAT]'")]
+    Malformed { line: usize },
+    #[error("line {line}: bad number '{tok}'")]
+    BadNumber { line: usize, tok: String },
+    #[error("line {line}: zero dimension")]
+    ZeroDim { line: usize },
+    #[error("trace is empty")]
+    Empty,
+}
+
+fn parse_num(tok: &str, line: usize) -> Result<u32, TraceError> {
+    tok.parse().map_err(|_| TraceError::BadNumber {
+        line,
+        tok: tok.to_string(),
+    })
+}
+
+/// Parse a trace into a [`Workload`].
+pub fn parse_trace(name: &str, text: &str) -> Result<Workload, TraceError> {
+    let mut ops = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 3 || toks.len() > 4 {
+            return Err(TraceError::Malformed { line: line_no });
+        }
+        let m = parse_num(toks[0], line_no)?;
+        let k = parse_num(toks[1], line_no)?;
+        let n = parse_num(toks[2], line_no)?;
+        if m == 0 || k == 0 || n == 0 {
+            return Err(TraceError::ZeroDim { line: line_no });
+        }
+        let repeat = match toks.get(3) {
+            None => 1,
+            Some(t) => parse_num(t.trim_start_matches(['x', 'X']), line_no)?,
+        };
+        for _ in 0..repeat.max(1) {
+            ops.push(GemmOp { m, k, n });
+        }
+    }
+    if ops.is_empty() {
+        return Err(TraceError::Empty);
+    }
+    Ok(Workload::new(name, ops))
+}
+
+/// Serialize a workload back to trace text (round-trips [`parse_trace`],
+/// modulo repeat-folding).
+pub fn to_trace(workload: &Workload) -> String {
+    let mut out = format!("# {}\n", workload.name);
+    let mut i = 0;
+    while i < workload.ops.len() {
+        let op = workload.ops[i];
+        let mut repeat = 1;
+        while i + repeat < workload.ops.len() && workload.ops[i + repeat] == op {
+            repeat += 1;
+        }
+        if repeat > 1 {
+            out.push_str(&format!("{} {} {} x{}\n", op.m, op.k, op.n, repeat));
+        } else {
+            out.push_str(&format!("{} {} {}\n", op.m, op.k, op.n));
+        }
+        i += repeat;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_trace() {
+        let w = parse_trace("t", "16 128 512\n16 512 128\n").unwrap();
+        assert_eq!(w.ops.len(), 2);
+        assert_eq!(w.ops[0], GemmOp { m: 16, k: 128, n: 512 });
+    }
+
+    #[test]
+    fn repeat_column() {
+        let w = parse_trace("t", "8 64 64 x3\n").unwrap();
+        assert_eq!(w.ops.len(), 3);
+        let w2 = parse_trace("t", "8 64 64 3\n").unwrap();
+        assert_eq!(w2.ops.len(), 3);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let w = parse_trace("t", "# header\n\n4 32 32 # tail\n").unwrap();
+        assert_eq!(w.ops.len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert_eq!(
+            parse_trace("t", "1 2\n").unwrap_err(),
+            TraceError::Malformed { line: 1 }
+        );
+        assert_eq!(
+            parse_trace("t", "a b c\n").unwrap_err(),
+            TraceError::BadNumber { line: 1, tok: "a".into() }
+        );
+        assert_eq!(
+            parse_trace("t", "0 2 3\n").unwrap_err(),
+            TraceError::ZeroDim { line: 1 }
+        );
+        assert_eq!(parse_trace("t", "# nothing\n").unwrap_err(), TraceError::Empty);
+    }
+
+    #[test]
+    fn roundtrip_with_folding() {
+        let w = parse_trace("rt", "4 32 32 x4\n8 64 32\n").unwrap();
+        let text = to_trace(&w);
+        assert!(text.contains("4 32 32 x4"));
+        let w2 = parse_trace("rt", &text).unwrap();
+        assert_eq!(w.ops, w2.ops);
+    }
+}

@@ -1,0 +1,119 @@
+//! Workload description: sequences of GeMM operations with int8-grid data.
+
+use crate::util::rng::XorShift64;
+
+/// One GeMM: `x (m × k) @ w (k × n)`, int8-grid values carried as f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmOp {
+    /// Rows of the activation matrix (number of input vectors).
+    pub m: u32,
+    /// Inner dimension (weight rows).
+    pub k: u32,
+    /// Output dimension (weight cols).
+    pub n: u32,
+}
+
+impl GemmOp {
+    /// Macro weight tiles this GeMM occupies on `tile × tile`-byte macros.
+    pub fn tiles(&self, tile_rows: u32, tile_cols: u32) -> u32 {
+        self.k.div_ceil(tile_rows) * self.n.div_ceil(tile_cols)
+    }
+
+    /// Multiply-accumulate count (for throughput reporting).
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+}
+
+/// A named sequence of GeMMs executed back-to-back — weights for every
+/// op must stream in from off-chip memory (the concurrent write/compute
+/// regime of Fig. 1).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub ops: Vec<GemmOp>,
+}
+
+impl Workload {
+    /// Build a named workload.
+    pub fn new(name: impl Into<String>, ops: Vec<GemmOp>) -> Self {
+        Self {
+            name: name.into(),
+            ops,
+        }
+    }
+
+    /// Total macro tiles across all ops.
+    pub fn total_tiles(&self, tile_rows: u32, tile_cols: u32) -> u32 {
+        self.ops.iter().map(|o| o.tiles(tile_rows, tile_cols)).sum()
+    }
+
+    /// Total MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs()).sum()
+    }
+
+    /// Deterministic int8-grid data for op `i`: `(x, w)` row-major.
+    pub fn materialize(&self, i: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let op = &self.ops[i];
+        let mut rng = XorShift64::new(seed ^ (0xA5A5_0000 + i as u64));
+        let x = rng.int8_vec((op.m * op.k) as usize);
+        let w = rng.int8_vec((op.k * op.n) as usize);
+        (x, w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_round_up() {
+        let op = GemmOp { m: 4, k: 50, n: 70 };
+        // ceil(50/32)=2, ceil(70/32)=3
+        assert_eq!(op.tiles(32, 32), 6);
+    }
+
+    #[test]
+    fn tiles_exact() {
+        let op = GemmOp { m: 16, k: 128, n: 128 };
+        assert_eq!(op.tiles(32, 32), 16);
+    }
+
+    #[test]
+    fn macs() {
+        let op = GemmOp { m: 2, k: 3, n: 4 };
+        assert_eq!(op.macs(), 24);
+    }
+
+    #[test]
+    fn workload_totals() {
+        let w = Workload::new(
+            "t",
+            vec![GemmOp { m: 4, k: 32, n: 32 }, GemmOp { m: 4, k: 64, n: 32 }],
+        );
+        assert_eq!(w.total_tiles(32, 32), 3);
+        assert_eq!(w.total_macs(), 4 * 32 * 32 + 4 * 64 * 32);
+    }
+
+    #[test]
+    fn materialize_deterministic_and_int8() {
+        let w = Workload::new("t", vec![GemmOp { m: 2, k: 32, n: 32 }]);
+        let (x1, w1) = w.materialize(0, 42);
+        let (x2, w2) = w.materialize(0, 42);
+        assert_eq!(x1, x2);
+        assert_eq!(w1, w2);
+        assert_eq!(x1.len(), 64);
+        assert_eq!(w1.len(), 1024);
+        assert!(x1.iter().all(|v| v.fract() == 0.0 && (-128.0..=127.0).contains(v)));
+    }
+
+    #[test]
+    fn materialize_differs_across_ops() {
+        let w = Workload::new(
+            "t",
+            vec![GemmOp { m: 2, k: 32, n: 32 }, GemmOp { m: 2, k: 32, n: 32 }],
+        );
+        assert_ne!(w.materialize(0, 42).0, w.materialize(1, 42).0);
+    }
+}

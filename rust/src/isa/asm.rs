@@ -1,0 +1,381 @@
+//! Text assembler / disassembler for the PIM ISA.
+//!
+//! Syntax (one instruction per line, `;` comments, case-insensitive):
+//!
+//! ```text
+//! ; generalized ping-pong, core 0
+//! .core 0
+//!     setspd 8
+//!     delay 128
+//!     loop 16
+//!         wrw   m3, tile=5
+//!         waitw m3
+//!         ldin  4
+//!         vmm   m3, nvec=4, tile=5
+//!         waitc m3
+//!         stout 4
+//!     endloop
+//!     bar
+//!     halt
+//! ```
+//!
+//! Directives:
+//!
+//! - `.cores N` — declare the number of cores (defaults to 1 + max used).
+//! - `.stream core=K` (or legacy `.core K`) — begin a new instruction
+//!   stream bound to core `K`.  Repeating the directive with the same core
+//!   starts *another* stream on that core (the generalized-ping-pong
+//!   per-macro sequencers).
+//!
+//! `disassemble` renders a [`Program`] back to this syntax, and
+//! `assemble(disassemble(p)) == p` (round-trip tested).
+
+use super::inst::Inst;
+use super::program::Program;
+use std::fmt::Write as _;
+use thiserror::Error;
+
+/// Assembly syntax errors with line information.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum AsmError {
+    #[error("line {line}: unknown mnemonic '{mnemonic}'")]
+    UnknownMnemonic { line: usize, mnemonic: String },
+    #[error("line {line}: bad operand '{operand}': {reason}")]
+    BadOperand {
+        line: usize,
+        operand: String,
+        reason: String,
+    },
+    #[error("line {line}: expected {expected} operand(s), got {got}")]
+    OperandCount {
+        line: usize,
+        expected: usize,
+        got: usize,
+    },
+    #[error("line {line}: instruction before any .stream/.core directive")]
+    NoCoreSection { line: usize },
+    #[error("line {line}: bad .stream/.core/.cores index")]
+    BadCoreIndex { line: usize },
+}
+
+fn parse_u32(tok: &str, line: usize) -> Result<u32, AsmError> {
+    let cleaned = tok.trim();
+    let digits = cleaned
+        .split('=')
+        .next_back()
+        .unwrap_or(cleaned)
+        .trim();
+    digits.parse::<u32>().map_err(|e| AsmError::BadOperand {
+        line,
+        operand: tok.to_string(),
+        reason: e.to_string(),
+    })
+}
+
+/// Parse a macro operand of the form `m<k>` or plain `<k>`.
+fn parse_macro(tok: &str, line: usize) -> Result<u8, AsmError> {
+    let t = tok.trim();
+    let digits = t.strip_prefix('m').or_else(|| t.strip_prefix('M')).unwrap_or(t);
+    digits.parse::<u8>().map_err(|e| AsmError::BadOperand {
+        line,
+        operand: tok.to_string(),
+        reason: e.to_string(),
+    })
+}
+
+/// Assemble text into a [`Program`].
+pub fn assemble(text: &str) -> Result<Program, AsmError> {
+    let mut program = Program::default();
+    let mut explicit_cores: Option<u32> = None;
+    let mut current: Option<usize> = None;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split(';').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+
+        if let Some(rest) = line.strip_prefix(".cores") {
+            let n: u32 = rest
+                .trim()
+                .parse()
+                .map_err(|_| AsmError::BadCoreIndex { line: line_no })?;
+            explicit_cores = Some(n);
+            continue;
+        }
+        if let Some(rest) = line
+            .strip_prefix(".stream")
+            .or_else(|| line.strip_prefix(".core"))
+        {
+            let spec = rest.trim();
+            let digits = spec.strip_prefix("core=").unwrap_or(spec).trim();
+            let k: u32 = digits
+                .parse()
+                .map_err(|_| AsmError::BadCoreIndex { line: line_no })?;
+            current = Some(program.add_stream(k, Vec::new()));
+            continue;
+        }
+
+        let stream = current.ok_or(AsmError::NoCoreSection { line: line_no })?;
+
+        let mut parts = line.splitn(2, char::is_whitespace);
+        let mnemonic = parts.next().unwrap().to_ascii_lowercase();
+        let operands: Vec<&str> = parts
+            .next()
+            .map(|s| s.split(',').map(str::trim).filter(|s| !s.is_empty()).collect())
+            .unwrap_or_default();
+
+        let need = |n: usize| -> Result<(), AsmError> {
+            if operands.len() != n {
+                Err(AsmError::OperandCount {
+                    line: line_no,
+                    expected: n,
+                    got: operands.len(),
+                })
+            } else {
+                Ok(())
+            }
+        };
+
+        let inst = match mnemonic.as_str() {
+            "setspd" => {
+                need(1)?;
+                Inst::SetSpd {
+                    speed: parse_u32(operands[0], line_no)? as u16,
+                }
+            }
+            "delay" => {
+                need(1)?;
+                Inst::Delay {
+                    cycles: parse_u32(operands[0], line_no)?,
+                }
+            }
+            "wrw" => {
+                need(2)?;
+                Inst::Wrw {
+                    m: parse_macro(operands[0], line_no)?,
+                    tile: parse_u32(operands[1], line_no)?,
+                }
+            }
+            "vmm" => {
+                need(3)?;
+                Inst::Vmm {
+                    m: parse_macro(operands[0], line_no)?,
+                    n_vec: parse_u32(operands[1], line_no)? as u16,
+                    tile: parse_u32(operands[2], line_no)?,
+                }
+            }
+            "waitw" => {
+                need(1)?;
+                Inst::WaitW {
+                    m: parse_macro(operands[0], line_no)?,
+                }
+            }
+            "waitc" => {
+                need(1)?;
+                Inst::WaitC {
+                    m: parse_macro(operands[0], line_no)?,
+                }
+            }
+            "ldin" => {
+                need(1)?;
+                Inst::LdIn {
+                    n_vec: parse_u32(operands[0], line_no)? as u16,
+                }
+            }
+            "stout" => {
+                need(1)?;
+                Inst::StOut {
+                    n_vec: parse_u32(operands[0], line_no)? as u16,
+                }
+            }
+            "bar" | "barrier" => {
+                need(0)?;
+                Inst::Barrier
+            }
+            "loop" => {
+                need(1)?;
+                Inst::Loop {
+                    count: parse_u32(operands[0], line_no)?,
+                }
+            }
+            "endloop" => {
+                need(0)?;
+                Inst::EndLoop
+            }
+            "halt" => {
+                need(0)?;
+                Inst::Halt
+            }
+            other => {
+                return Err(AsmError::UnknownMnemonic {
+                    line: line_no,
+                    mnemonic: other.to_string(),
+                })
+            }
+        };
+        program.streams[stream].insts.push(inst);
+    }
+    program.n_cores = explicit_cores.unwrap_or_else(|| {
+        program
+            .streams
+            .iter()
+            .map(|s| s.core + 1)
+            .max()
+            .unwrap_or(0)
+    });
+    Ok(program)
+}
+
+/// Render a [`Program`] back to assembly text (round-trips through
+/// [`assemble`]).
+pub fn disassemble(program: &Program) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, ".cores {}", program.n_cores);
+    for stream in &program.streams {
+        let _ = writeln!(out, ".stream core={}", stream.core);
+        let mut depth = 0usize;
+        for inst in &stream.insts {
+            if matches!(inst, Inst::EndLoop) {
+                depth = depth.saturating_sub(1);
+            }
+            let pad = "    ".repeat(depth + 1);
+            let line = match inst {
+                Inst::SetSpd { speed } => format!("setspd {speed}"),
+                Inst::Delay { cycles } => format!("delay {cycles}"),
+                Inst::Wrw { m, tile } => format!("wrw m{m}, tile={tile}"),
+                Inst::Vmm { m, n_vec, tile } => format!("vmm m{m}, nvec={n_vec}, tile={tile}"),
+                Inst::WaitW { m } => format!("waitw m{m}"),
+                Inst::WaitC { m } => format!("waitc m{m}"),
+                Inst::LdIn { n_vec } => format!("ldin {n_vec}"),
+                Inst::StOut { n_vec } => format!("stout {n_vec}"),
+                Inst::Barrier => "bar".to_string(),
+                Inst::Loop { count } => format!("loop {count}"),
+                Inst::EndLoop => "endloop".to_string(),
+                Inst::Halt => "halt".to_string(),
+            };
+            let _ = writeln!(out, "{pad}{line}");
+            if matches!(inst, Inst::Loop { .. }) {
+                depth += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+; sample program
+.core 0
+    setspd 8
+    loop 2
+        wrw m1, tile=7
+        waitw m1
+        ldin 4
+        vmm m1, nvec=4, tile=7
+        waitc m1
+        stout 4
+    endloop
+    bar
+    halt
+.core 1
+    delay 128
+    bar
+    halt
+"#;
+
+    #[test]
+    fn assembles_sample() {
+        let p = assemble(SAMPLE).unwrap();
+        assert_eq!(p.streams.len(), 2);
+        assert_eq!(p.n_cores, 2);
+        assert_eq!(p.streams[0].insts.len(), 11);
+        assert_eq!(p.streams[0].insts[0], Inst::SetSpd { speed: 8 });
+        assert_eq!(p.streams[0].insts[2], Inst::Wrw { m: 1, tile: 7 });
+        assert_eq!(p.streams[1].insts[0], Inst::Delay { cycles: 128 });
+    }
+
+    #[test]
+    fn stream_directive_and_multiple_streams_per_core() {
+        let text = ".cores 1\n.stream core=0\nhalt\n.stream core=0\nhalt\n";
+        let p = assemble(text).unwrap();
+        assert_eq!(p.n_cores, 1);
+        assert_eq!(p.streams.len(), 2);
+        assert_eq!(p.streams[1].core, 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = assemble(SAMPLE).unwrap();
+        let text = disassemble(&p);
+        let p2 = assemble(&text).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let p = assemble(".core 0\n; nothing\n\n   halt ; trailing\n").unwrap();
+        assert_eq!(p.streams[0].insts, vec![Inst::Halt]);
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        let e = assemble(".core 0\nfrobnicate 1\n").unwrap_err();
+        assert!(matches!(e, AsmError::UnknownMnemonic { line: 2, .. }));
+    }
+
+    #[test]
+    fn rejects_instruction_outside_core() {
+        let e = assemble("halt\n").unwrap_err();
+        assert!(matches!(e, AsmError::NoCoreSection { line: 1 }));
+    }
+
+    #[test]
+    fn rejects_wrong_operand_count() {
+        let e = assemble(".core 0\nwrw m1\n").unwrap_err();
+        assert!(matches!(
+            e,
+            AsmError::OperandCount {
+                expected: 2,
+                got: 1,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_operand() {
+        let e = assemble(".core 0\ndelay many\n").unwrap_err();
+        assert!(matches!(e, AsmError::BadOperand { .. }));
+    }
+
+    #[test]
+    fn case_insensitive_mnemonics() {
+        let p = assemble(".core 0\nHALT\n").unwrap();
+        assert_eq!(p.streams[0].insts, vec![Inst::Halt]);
+    }
+
+    #[test]
+    fn keyword_operands_optional() {
+        // `tile=` / `nvec=` prefixes are sugar; bare numbers also accepted.
+        let p = assemble(".core 0\nvmm m0, 4, 9\nhalt\n").unwrap();
+        assert_eq!(
+            p.streams[0].insts[0],
+            Inst::Vmm {
+                m: 0,
+                n_vec: 4,
+                tile: 9
+            }
+        );
+    }
+
+    #[test]
+    fn explicit_cores_directive_wins() {
+        let p = assemble(".cores 16\n.core 0\nhalt\n").unwrap();
+        assert_eq!(p.n_cores, 16);
+    }
+}

@@ -1,0 +1,221 @@
+//! Binary encoding of the ISA: one 64-bit machine word per instruction.
+//!
+//! Word layout (little-endian fields):
+//!
+//! ```text
+//!   bits 63..56  opcode   (u8)
+//!   bits 55..48  macro id (u8)    — 0 when unused
+//!   bits 47..32  imm16    (u16)   — speed / n_vec, 0 when unused
+//!   bits 31..0   imm32    (u32)   — tile / cycles / loop count
+//! ```
+//!
+//! This is the "binary machine code" the paper's assembler produces; the
+//! simulator executes the decoded [`Inst`] stream, and round-trip equality
+//! (`decode(encode(p)) == p`) is a tested invariant.
+
+use super::inst::Inst;
+use super::program::Program;
+use thiserror::Error;
+
+const OP_SETSPD: u8 = 0x01;
+const OP_DELAY: u8 = 0x02;
+const OP_WRW: u8 = 0x03;
+const OP_VMM: u8 = 0x04;
+const OP_WAITW: u8 = 0x05;
+const OP_WAITC: u8 = 0x06;
+const OP_LDIN: u8 = 0x07;
+const OP_STOUT: u8 = 0x08;
+const OP_BAR: u8 = 0x09;
+const OP_LOOP: u8 = 0x0A;
+const OP_ENDLOOP: u8 = 0x0B;
+const OP_HALT: u8 = 0x0C;
+
+/// Magic word heading an encoded program image: "GPPIM\0" + version 1.
+const MAGIC: u64 = 0x4750_5049_4D00_0001;
+
+/// Decoding failures.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("bad magic word {0:#018x}")]
+    BadMagic(u64),
+    #[error("truncated image at word {0}")]
+    Truncated(usize),
+    #[error("unknown opcode {opcode:#04x} at word {at}")]
+    UnknownOpcode { opcode: u8, at: usize },
+}
+
+#[inline]
+fn pack(op: u8, m: u8, imm16: u16, imm32: u32) -> u64 {
+    ((op as u64) << 56) | ((m as u64) << 48) | ((imm16 as u64) << 32) | imm32 as u64
+}
+
+/// Encode one instruction to its machine word.
+pub fn encode_inst(inst: &Inst) -> u64 {
+    match *inst {
+        Inst::SetSpd { speed } => pack(OP_SETSPD, 0, speed, 0),
+        Inst::Delay { cycles } => pack(OP_DELAY, 0, 0, cycles),
+        Inst::Wrw { m, tile } => pack(OP_WRW, m, 0, tile),
+        Inst::Vmm { m, n_vec, tile } => pack(OP_VMM, m, n_vec, tile),
+        Inst::WaitW { m } => pack(OP_WAITW, m, 0, 0),
+        Inst::WaitC { m } => pack(OP_WAITC, m, 0, 0),
+        Inst::LdIn { n_vec } => pack(OP_LDIN, 0, n_vec, 0),
+        Inst::StOut { n_vec } => pack(OP_STOUT, 0, n_vec, 0),
+        Inst::Barrier => pack(OP_BAR, 0, 0, 0),
+        Inst::Loop { count } => pack(OP_LOOP, 0, 0, count),
+        Inst::EndLoop => pack(OP_ENDLOOP, 0, 0, 0),
+        Inst::Halt => pack(OP_HALT, 0, 0, 0),
+    }
+}
+
+/// Decode one machine word.
+pub fn decode_inst(word: u64, at: usize) -> Result<Inst, DecodeError> {
+    let op = (word >> 56) as u8;
+    let m = (word >> 48) as u8;
+    let imm16 = (word >> 32) as u16;
+    let imm32 = word as u32;
+    Ok(match op {
+        OP_SETSPD => Inst::SetSpd { speed: imm16 },
+        OP_DELAY => Inst::Delay { cycles: imm32 },
+        OP_WRW => Inst::Wrw { m, tile: imm32 },
+        OP_VMM => Inst::Vmm {
+            m,
+            n_vec: imm16,
+            tile: imm32,
+        },
+        OP_WAITW => Inst::WaitW { m },
+        OP_WAITC => Inst::WaitC { m },
+        OP_LDIN => Inst::LdIn { n_vec: imm16 },
+        OP_STOUT => Inst::StOut { n_vec: imm16 },
+        OP_BAR => Inst::Barrier,
+        OP_LOOP => Inst::Loop { count: imm32 },
+        OP_ENDLOOP => Inst::EndLoop,
+        OP_HALT => Inst::Halt,
+        opcode => return Err(DecodeError::UnknownOpcode { opcode, at }),
+    })
+}
+
+/// Encode a whole program image:
+/// `[MAGIC, n_cores, n_streams, (core_k, len_k, words...)*]`.
+pub fn encode_program(program: &Program) -> Vec<u64> {
+    let mut out = vec![MAGIC, program.n_cores as u64, program.streams.len() as u64];
+    for stream in &program.streams {
+        out.push(stream.core as u64);
+        out.push(stream.insts.len() as u64);
+        out.extend(stream.insts.iter().map(encode_inst));
+    }
+    out
+}
+
+/// Decode a program image produced by [`encode_program`].
+pub fn decode_program(words: &[u64]) -> Result<Program, DecodeError> {
+    let mut it = words.iter().copied().enumerate();
+    let (_, magic) = it.next().ok_or(DecodeError::Truncated(0))?;
+    if magic != MAGIC {
+        return Err(DecodeError::BadMagic(magic));
+    }
+    let (_, n_cores) = it.next().ok_or(DecodeError::Truncated(1))?;
+    let (_, n_streams) = it.next().ok_or(DecodeError::Truncated(2))?;
+    let mut program = Program::new(n_cores as u32);
+    for _ in 0..n_streams {
+        let (_, core) = it.next().ok_or(DecodeError::Truncated(usize::MAX))?;
+        let (_, len) = it.next().ok_or(DecodeError::Truncated(usize::MAX))?;
+        let mut insts = Vec::with_capacity(len as usize);
+        for _ in 0..len {
+            let (at, word) = it.next().ok_or(DecodeError::Truncated(usize::MAX))?;
+            insts.push(decode_inst(word, at)?);
+        }
+        program.add_stream(core as u32, insts);
+    }
+    Ok(program)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Program {
+        let mut p = Program::new(2);
+        p.add_stream(
+            0,
+            vec![
+                Inst::SetSpd { speed: 8 },
+                Inst::Loop { count: 3 },
+                Inst::Wrw { m: 5, tile: 1234 },
+                Inst::WaitW { m: 5 },
+                Inst::LdIn { n_vec: 4 },
+                Inst::Vmm {
+                    m: 5,
+                    n_vec: 4,
+                    tile: 1234,
+                },
+                Inst::WaitC { m: 5 },
+                Inst::StOut { n_vec: 4 },
+                Inst::EndLoop,
+                Inst::Barrier,
+                Inst::Halt,
+            ],
+        );
+        p.add_stream(1, vec![Inst::Delay { cycles: 99 }, Inst::Barrier, Inst::Halt]);
+        p
+    }
+
+    #[test]
+    fn roundtrip_program() {
+        let p = sample();
+        let words = encode_program(&p);
+        let p2 = decode_program(&words).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn every_inst_roundtrips() {
+        let all = [
+            Inst::SetSpd { speed: u16::MAX },
+            Inst::Delay { cycles: u32::MAX },
+            Inst::Wrw { m: 255, tile: u32::MAX },
+            Inst::Vmm {
+                m: 255,
+                n_vec: u16::MAX,
+                tile: u32::MAX,
+            },
+            Inst::WaitW { m: 7 },
+            Inst::WaitC { m: 7 },
+            Inst::LdIn { n_vec: 1 },
+            Inst::StOut { n_vec: 1 },
+            Inst::Barrier,
+            Inst::Loop { count: 1 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ];
+        for (i, inst) in all.iter().enumerate() {
+            assert_eq!(decode_inst(encode_inst(inst), i).unwrap(), *inst);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert_eq!(
+            decode_program(&[0xDEAD, 0]),
+            Err(DecodeError::BadMagic(0xDEAD))
+        );
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut words = encode_program(&sample());
+        words.truncate(4);
+        assert!(matches!(
+            decode_program(&words),
+            Err(DecodeError::Truncated(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_opcode() {
+        let words = vec![MAGIC, 1, 1, 0, 1, pack(0xFF, 0, 0, 0)];
+        assert!(matches!(
+            decode_program(&words),
+            Err(DecodeError::UnknownOpcode { opcode: 0xFF, .. })
+        ));
+    }
+}

@@ -1,0 +1,108 @@
+//! The instruction set executed by each PIM core's control unit.
+//!
+//! Weight writes and VMM computations are *asynchronous*: `Wrw`/`Vmm`
+//! issue the operation to a macro and the control unit continues; `WaitW`/
+//! `WaitC` block until the macro finishes.  This split is what lets a
+//! single ISA express all three scheduling strategies — barriers and waits
+//! are explicit instructions, so the generalized ping-pong program simply
+//! *omits* the synchronization the other strategies insert.
+
+/// One instruction.  `m` fields address a macro within the issuing core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Inst {
+    /// Set the write-port speed (bytes/cycle) used by subsequent `Wrw`.
+    SetSpd { speed: u16 },
+    /// Stall the core's control unit for `cycles` cycles (used by the
+    /// generalized ping-pong prologue to stagger macro start times).
+    Delay { cycles: u32 },
+    /// Begin an asynchronous full-macro weight rewrite of `tile` into
+    /// macro `m`.  Occupies the off-chip bus for `size_macro` bytes at up
+    /// to the configured write speed, subject to bus arbitration.
+    Wrw { m: u8, tile: u32 },
+    /// Begin an asynchronous VMM compute batch on macro `m`: `n_vec`
+    /// input vectors against the currently-loaded tile (`tile` is carried
+    /// for checking/numerics; the macro must hold exactly this tile).
+    Vmm { m: u8, n_vec: u16, tile: u32 },
+    /// Block until macro `m`'s in-flight weight write completes.
+    WaitW { m: u8 },
+    /// Block until macro `m`'s in-flight compute completes.
+    WaitC { m: u8 },
+    /// Load `n_vec` input vectors from global input memory into the core
+    /// buffer (on-chip; occupies buffer space, not off-chip bandwidth).
+    LdIn { n_vec: u16 },
+    /// Store `n_vec` result vectors from the core buffer to the global
+    /// intermediate-result memory, freeing their buffer space.
+    StOut { n_vec: u16 },
+    /// Global barrier: every core must reach its `Barrier` before any
+    /// proceeds (the in-situ strategy's phase synchronization).
+    Barrier,
+    /// Begin a loop body executed `count` times.  Loops may nest.
+    Loop { count: u32 },
+    /// End of the innermost loop body.
+    EndLoop,
+    /// Stop this core's program.
+    Halt,
+}
+
+impl Inst {
+    /// Mnemonic for the assembler/disassembler.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Inst::SetSpd { .. } => "setspd",
+            Inst::Delay { .. } => "delay",
+            Inst::Wrw { .. } => "wrw",
+            Inst::Vmm { .. } => "vmm",
+            Inst::WaitW { .. } => "waitw",
+            Inst::WaitC { .. } => "waitc",
+            Inst::LdIn { .. } => "ldin",
+            Inst::StOut { .. } => "stout",
+            Inst::Barrier => "bar",
+            Inst::Loop { .. } => "loop",
+            Inst::EndLoop => "endloop",
+            Inst::Halt => "halt",
+        }
+    }
+
+    /// True if the instruction can block the control unit.
+    pub fn is_blocking(&self) -> bool {
+        matches!(
+            self,
+            Inst::WaitW { .. } | Inst::WaitC { .. } | Inst::Barrier | Inst::Delay { .. }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnemonics_are_unique() {
+        let all = [
+            Inst::SetSpd { speed: 1 },
+            Inst::Delay { cycles: 1 },
+            Inst::Wrw { m: 0, tile: 0 },
+            Inst::Vmm { m: 0, n_vec: 1, tile: 0 },
+            Inst::WaitW { m: 0 },
+            Inst::WaitC { m: 0 },
+            Inst::LdIn { n_vec: 1 },
+            Inst::StOut { n_vec: 1 },
+            Inst::Barrier,
+            Inst::Loop { count: 1 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ];
+        let mut names: Vec<_> = all.iter().map(|i| i.mnemonic()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+    }
+
+    #[test]
+    fn blocking_classification() {
+        assert!(Inst::WaitW { m: 0 }.is_blocking());
+        assert!(Inst::Barrier.is_blocking());
+        assert!(!Inst::Wrw { m: 0, tile: 0 }.is_blocking());
+        assert!(!Inst::Vmm { m: 0, n_vec: 1, tile: 0 }.is_blocking());
+    }
+}

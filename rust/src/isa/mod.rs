@@ -1,0 +1,20 @@
+//! PIM-oriented instruction set architecture (paper §IV-A).
+//!
+//! The paper revises PUMA's ISA so that *scheduling strategies are
+//! programs*: the in-situ, naive ping-pong and generalized ping-pong
+//! pipelines differ only in the assembly the strategy code generator emits.
+//! This module provides the instruction set ([`inst::Inst`]), the program
+//! container ([`program::Program`]), a text assembler/disassembler
+//! ([`asm`]) and a binary encoder ([`encode`]) — the same toolchain the
+//! paper ships with its accelerator ("The ISA comes with an assembler to
+//! convert assembly code into binary machine code").
+
+pub mod asm;
+pub mod encode;
+pub mod inst;
+pub mod program;
+
+pub use asm::{assemble, disassemble, AsmError};
+pub use encode::{decode_program, encode_program, DecodeError};
+pub use inst::Inst;
+pub use program::Program;

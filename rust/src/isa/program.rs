@@ -1,0 +1,290 @@
+//! Program container: instruction *streams* bound to PIM cores.
+//!
+//! The paper's revised architecture has a "generalized execution unit"
+//! that lets the core control unit drive specific macros independently
+//! (§IV-A).  We model that as multiple instruction streams per core: the
+//! in-situ and naive ping-pong strategies emit one stream per core (their
+//! macros move in lock-step), while generalized ping-pong emits one stream
+//! per macro so every macro can transition write→compute the instant it
+//! finishes, with no shared control-flow stalls.
+
+use super::inst::Inst;
+use thiserror::Error;
+
+/// One instruction stream, executed by a sequencer on core `core`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stream {
+    /// The core whose macros/buffer this stream addresses.
+    pub core: u32,
+    /// The instruction sequence.
+    pub insts: Vec<Inst>,
+}
+
+/// A complete accelerator program.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Program {
+    /// Number of cores the program targets (streams may not exceed it).
+    pub n_cores: u32,
+    /// All instruction streams.
+    pub streams: Vec<Stream>,
+}
+
+/// Structural validation failures for a [`Program`].
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ProgramError {
+    #[error("stream {stream}: unbalanced loop nesting at instruction {at}")]
+    UnbalancedLoop { stream: usize, at: usize },
+    #[error("stream {stream}: missing halt at end of stream")]
+    MissingHalt { stream: usize },
+    #[error("stream {stream}: instruction {at} addresses macro {m} but cores have {max} macros")]
+    MacroOutOfRange {
+        stream: usize,
+        at: usize,
+        m: u8,
+        max: u32,
+    },
+    #[error("stream {stream}: loop at {at} has zero iteration count")]
+    ZeroLoop { stream: usize, at: usize },
+    #[error("stream {stream} targets core {core} but program declares {n_cores} cores")]
+    CoreOutOfRange {
+        stream: usize,
+        core: u32,
+        n_cores: u32,
+    },
+    #[error("stream {stream} has {got} barriers, expected {expected} (deadlock)")]
+    BarrierAsymmetry {
+        stream: usize,
+        got: usize,
+        expected: usize,
+    },
+}
+
+impl Program {
+    /// Create an empty program targeting `n_cores` cores.
+    pub fn new(n_cores: u32) -> Self {
+        Self {
+            n_cores,
+            streams: Vec::new(),
+        }
+    }
+
+    /// Add a stream on `core`; returns its index.
+    pub fn add_stream(&mut self, core: u32, insts: Vec<Inst>) -> usize {
+        self.streams.push(Stream { core, insts });
+        self.streams.len() - 1
+    }
+
+    /// Total instruction count across streams.
+    pub fn len(&self) -> usize {
+        self.streams.iter().map(|s| s.insts.len()).sum()
+    }
+
+    /// True if there are no instructions at all.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Barrier count of stream 0 (the reference for symmetry checks).
+    pub fn barrier_count(&self) -> usize {
+        self.streams
+            .first()
+            .map(|s| s.insts.iter().filter(|i| matches!(i, Inst::Barrier)).count())
+            .unwrap_or(0)
+    }
+
+    /// Validate structure: streams target existing cores, loops balance
+    /// and are non-zero, every stream ends in `Halt`, macro ids are within
+    /// `macros_per_core`, and barrier counts agree across streams.
+    pub fn validate(&self, macros_per_core: u32) -> Result<(), ProgramError> {
+        let expected_barriers = self.barrier_count();
+        for (si, stream) in self.streams.iter().enumerate() {
+            if stream.core >= self.n_cores {
+                return Err(ProgramError::CoreOutOfRange {
+                    stream: si,
+                    core: stream.core,
+                    n_cores: self.n_cores,
+                });
+            }
+            let mut depth: i64 = 0;
+            let mut barriers = 0usize;
+            for (at, inst) in stream.insts.iter().enumerate() {
+                match inst {
+                    Inst::Loop { count } => {
+                        if *count == 0 {
+                            return Err(ProgramError::ZeroLoop { stream: si, at });
+                        }
+                        depth += 1;
+                    }
+                    Inst::EndLoop => {
+                        depth -= 1;
+                        if depth < 0 {
+                            return Err(ProgramError::UnbalancedLoop { stream: si, at });
+                        }
+                    }
+                    Inst::Barrier => barriers += 1,
+                    Inst::Wrw { m, .. }
+                    | Inst::Vmm { m, .. }
+                    | Inst::WaitW { m }
+                    | Inst::WaitC { m } => {
+                        if *m as u32 >= macros_per_core {
+                            return Err(ProgramError::MacroOutOfRange {
+                                stream: si,
+                                at,
+                                m: *m,
+                                max: macros_per_core,
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if depth != 0 {
+                return Err(ProgramError::UnbalancedLoop {
+                    stream: si,
+                    at: stream.insts.len(),
+                });
+            }
+            if !matches!(stream.insts.last(), Some(Inst::Halt)) {
+                return Err(ProgramError::MissingHalt { stream: si });
+            }
+            if barriers != expected_barriers {
+                return Err(ProgramError::BarrierAsymmetry {
+                    stream: si,
+                    got: barriers,
+                    expected: expected_barriers,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn halted(insts: Vec<Inst>) -> Vec<Inst> {
+        let mut v = insts;
+        v.push(Inst::Halt);
+        v
+    }
+
+    #[test]
+    fn empty_program_is_empty() {
+        let p = Program::new(4);
+        assert!(p.is_empty());
+        assert_eq!(p.n_cores, 4);
+    }
+
+    #[test]
+    fn validates_good_program() {
+        let mut p = Program::new(1);
+        p.add_stream(
+            0,
+            halted(vec![
+                Inst::Loop { count: 2 },
+                Inst::Wrw { m: 0, tile: 0 },
+                Inst::WaitW { m: 0 },
+                Inst::Vmm {
+                    m: 0,
+                    n_vec: 4,
+                    tile: 0,
+                },
+                Inst::WaitC { m: 0 },
+                Inst::EndLoop,
+            ]),
+        );
+        p.validate(16).unwrap();
+    }
+
+    #[test]
+    fn rejects_unbalanced_loop() {
+        let mut p = Program::new(1);
+        p.add_stream(0, halted(vec![Inst::Loop { count: 2 }]));
+        assert!(matches!(
+            p.validate(16),
+            Err(ProgramError::UnbalancedLoop { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_stray_endloop() {
+        let mut p = Program::new(1);
+        p.add_stream(0, halted(vec![Inst::EndLoop]));
+        assert!(matches!(
+            p.validate(16),
+            Err(ProgramError::UnbalancedLoop { stream: 0, at: 0 })
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_halt() {
+        let mut p = Program::new(1);
+        p.add_stream(0, vec![Inst::Barrier]);
+        assert!(matches!(
+            p.validate(16),
+            Err(ProgramError::MissingHalt { stream: 0 })
+        ));
+    }
+
+    #[test]
+    fn rejects_macro_out_of_range() {
+        let mut p = Program::new(1);
+        p.add_stream(0, halted(vec![Inst::Wrw { m: 16, tile: 0 }]));
+        assert!(matches!(
+            p.validate(16),
+            Err(ProgramError::MacroOutOfRange { m: 16, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_zero_loop() {
+        let mut p = Program::new(1);
+        p.add_stream(0, halted(vec![Inst::Loop { count: 0 }, Inst::EndLoop]));
+        assert!(matches!(p.validate(16), Err(ProgramError::ZeroLoop { .. })));
+    }
+
+    #[test]
+    fn rejects_core_out_of_range() {
+        let mut p = Program::new(2);
+        p.add_stream(5, halted(vec![]));
+        assert!(matches!(
+            p.validate(16),
+            Err(ProgramError::CoreOutOfRange { core: 5, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_barrier_asymmetry() {
+        let mut p = Program::new(2);
+        p.add_stream(0, halted(vec![Inst::Barrier]));
+        p.add_stream(1, halted(vec![]));
+        assert!(matches!(
+            p.validate(16),
+            Err(ProgramError::BarrierAsymmetry { stream: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn multiple_streams_per_core_allowed() {
+        // generalized ping-pong: one stream per macro on the same core
+        let mut p = Program::new(1);
+        for m in 0..4u8 {
+            p.add_stream(
+                0,
+                halted(vec![
+                    Inst::Wrw { m, tile: m as u32 },
+                    Inst::WaitW { m },
+                    Inst::Vmm {
+                        m,
+                        n_vec: 4,
+                        tile: m as u32,
+                    },
+                    Inst::WaitC { m },
+                ]),
+            );
+        }
+        p.validate(16).unwrap();
+        assert_eq!(p.streams.len(), 4);
+    }
+}

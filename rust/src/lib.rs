@@ -1,0 +1,43 @@
+//! # gpp-pim — Generalized Ping-Pong PIM accelerator framework
+//!
+//! Reproduction of *"Generalized Ping-Pong: Off-Chip Memory Bandwidth
+//! Centric Pipelining Strategy for Processing-In-Memory Accelerators"*
+//! (Wang & Yan, 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the cycle-accurate PIM accelerator simulator,
+//! the custom ISA + assembler, the three concurrent write/compute scheduling
+//! strategies (in-situ, naive ping-pong, generalized ping-pong), the
+//! analytical model behind the paper's Eqs. 1–9, the design-space
+//! exploration and runtime bandwidth-adaptation engines, and the PJRT
+//! runtime that executes the AOT-lowered JAX/Pallas numerics
+//! (`artifacts/*.hlo.txt`) on the request path — Python never runs here.
+//!
+//! ## Layout
+//!
+//! - [`arch`] — accelerator geometry and timing parameters.
+//! - [`config`] — TOML-subset config parser (no external deps).
+//! - [`isa`] — instruction set, assembler, encoder, disassembler.
+//! - [`sim`] — instruction-driven cycle-accurate simulator.
+//! - [`sched`] — the three strategies as ISA code generators.
+//! - [`model`] — closed-form analytical model (paper Eqs. 1–9), DSE,
+//!   runtime adaptation.
+//! - [`gemm`] — GeMM workloads, macro tiling, BLAS-level benchmark suites.
+//! - [`runtime`] — PJRT executable loading/execution via the `xla` crate.
+//! - [`coordinator`] — ties workload + strategy + simulator + numerics.
+//! - [`report`] — figure/table renderers and the bench harness kit.
+//! - [`util`] — deterministic RNG, CSV, misc helpers.
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod gemm;
+pub mod isa;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+
+pub use arch::ArchConfig;
+

@@ -1,0 +1,446 @@
+//! `gpp-pim` — CLI for the Generalized Ping-Pong PIM accelerator framework.
+//!
+//! Subcommands (argument parsing is hand-rolled; `clap` is unavailable in
+//! this offline environment):
+//!
+//! ```text
+//! gpp-pim info  [--config FILE]
+//! gpp-pim repro --exp fig4|fig6|fig7|table2|headline|all [--csv-dir DIR] [--vectors N]
+//! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
+//!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
+//! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
+//! gpp-pim dse  [--band B]
+//! gpp-pim adapt [--max-n N]
+//! gpp-pim assemble FILE.asm [-o FILE.bin]
+//! gpp-pim disasm FILE.bin
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::coordinator::{Coordinator, RunConfig};
+use gpp_pim::gemm::blas;
+use gpp_pim::isa;
+use gpp_pim::model::adapt::RuntimeAdaptation;
+use gpp_pim::model::dse::DesignSpace;
+use gpp_pim::report::figures as figs;
+use gpp_pim::runtime::Runtime;
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sim::{simulate, trace, SimOptions};
+use gpp_pim::util::csv::CsvTable;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Tiny flag parser: `--key value` pairs plus positionals.
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), value);
+            } else if let Some(key) = a.strip_prefix('-') {
+                let value = it.next().cloned().unwrap_or_else(|| "true".into());
+                flags.insert(key.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Self { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_arch(args: &Args) -> Result<ArchConfig> {
+    match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            gpp_pim::config::parse_arch_config(&text).map_err(|e| anyhow!("{e}"))
+        }
+        None => Ok(ArchConfig::paper_default()),
+    }
+}
+
+fn emit(table: &CsvTable, name: &str, csv_dir: Option<&str>) -> Result<()> {
+    println!("{}", table.to_ascii());
+    if let Some(dir) = csv_dir {
+        let path = Path::new(dir).join(format!("{name}.csv"));
+        table.write_to(&path)?;
+        println!("[wrote {}]", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    arch.validate().map_err(|e| anyhow!("{e}"))?;
+    println!("Generalized Ping-Pong PIM accelerator — architecture");
+    println!(
+        "  cores x macros : {} x {} = {}",
+        arch.n_cores,
+        arch.macros_per_core,
+        arch.total_macros()
+    );
+    println!(
+        "  macro          : {}x{} B (OU {}x{} B)",
+        arch.geom.rows, arch.geom.cols, arch.geom.ou_rows, arch.geom.ou_cols
+    );
+    println!(
+        "  write speed s  : {} B/cycle  (hw range [{}, {}])",
+        arch.write_speed, arch.min_write_speed, arch.max_write_speed
+    );
+    println!("  off-chip band  : {} B/cycle", arch.bandwidth);
+    println!("  n_in           : {}", arch.n_in);
+    println!("  core buffer    : {} B", arch.core_buffer_bytes);
+    println!("  time_rewrite   : {} cycles", arch.time_rewrite());
+    println!("  time_PIM       : {} cycles", arch.time_pim());
+    println!("  tP/tR          : {:.3}", arch.ratio_pim_over_rewrite());
+    if Runtime::available("artifacts") {
+        println!("  artifacts      : present (PJRT numerics available)");
+    } else {
+        println!("  artifacts      : missing — run `make artifacts`");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = args.get("exp").unwrap_or("all");
+    let csv_dir = args.get("csv-dir");
+    let vectors = args.get_u32("vectors", 32768)?;
+    let run_fig4 = matches!(exp, "fig4" | "all");
+    let run_fig6 = matches!(exp, "fig6" | "fig6a" | "fig6b" | "all");
+    let run_fig7 = matches!(exp, "fig7" | "fig7a" | "fig7b" | "fig7c" | "fig7d" | "all");
+    let run_t2 = matches!(exp, "table2" | "all");
+    let run_head = matches!(exp, "headline" | "all");
+    if !(run_fig4 || run_fig6 || run_fig7 || run_t2 || run_head) {
+        bail!("unknown experiment '{exp}' (fig4|fig6|fig7|table2|headline|all)");
+    }
+    if run_fig4 {
+        println!("## Fig. 4 — naive ping-pong utilization vs n_in (s=4 B/cyc)");
+        emit(&figs::fig4_table(&figs::fig4()?), "fig4", csv_dir)?;
+    }
+    if run_fig6 {
+        println!("## Fig. 6 — design-phase comparison at band=128 B/cyc");
+        emit(&figs::fig6_table(&figs::fig6(vectors)?), "fig6", csv_dir)?;
+    }
+    if run_fig7 {
+        println!("## Fig. 7 — runtime adaptation from the tp==tr design point");
+        let rows = figs::fig7(&[1, 2, 4, 8, 16, 32, 64], vectors)?;
+        emit(&figs::fig7a_table(&rows), "fig7a", csv_dir)?;
+        emit(&figs::fig7bcd_table(&rows), "fig7bcd", csv_dir)?;
+    }
+    if run_t2 {
+        println!("## Table II — theory vs practice");
+        emit(&figs::table2_table(&figs::table2(vectors)?), "table2", csv_dir)?;
+    }
+    if run_head {
+        println!("## Headline — bandwidth sweep 8..256 B/cyc (tp = 4 tr)");
+        emit(&figs::headline_table(&figs::headline(vectors)?), "headline", csv_dir)?;
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut arch = load_arch(args)?;
+    arch.bandwidth = args.get_u64("band", arch.bandwidth)?;
+    let strategy = Strategy::from_name(args.get("strategy").unwrap_or("gpp"))
+        .ok_or_else(|| anyhow!("bad --strategy (insitu|naive|gpp)"))?;
+    let plan = SchedulePlan {
+        tasks: args.get_u32("tasks", 256)?,
+        active_macros: args.get_u32("macros", arch.total_macros())?,
+        n_in: args.get_u32("n-in", arch.n_in)?,
+        write_speed: args.get_u32("write-speed", arch.write_speed)?,
+    };
+    let program = strategy.codegen(&arch, &plan).map_err(|e| anyhow!("{e}"))?;
+    let opts = SimOptions {
+        record_op_log: args.has("timeline") || args.has("vcd"),
+        allow_intra_overlap: strategy.requires_intra_overlap(),
+        ..SimOptions::default()
+    };
+    let r = simulate(&arch, &program, opts).map_err(|e| anyhow!("{e}"))?;
+    if let Some(path) = args.get("vcd") {
+        let n = (plan.active_macros as usize).min(arch.total_macros() as usize);
+        std::fs::write(path, gpp_pim::sim::vcd::to_vcd(&r.op_log, arch.macros_per_core, n, 0))?;
+        println!("[wrote VCD waveform to {path}]");
+    }
+    println!("strategy        : {}", strategy.name());
+    println!(
+        "tasks           : {} ({} vectors)",
+        plan.tasks, r.stats.vectors_computed
+    );
+    println!("active macros   : {}", r.stats.active_macros());
+    println!("cycles          : {}", r.stats.cycles);
+    println!(
+        "bus bytes       : {} (util {:.1}%)",
+        r.stats.bus_bytes,
+        100.0 * r.stats.bandwidth_utilization(arch.bandwidth)
+    );
+    println!("peak bus rate   : {} B/cycle", r.stats.peak_bus_rate);
+    println!(
+        "macro util      : {:.1}% (compute-only {:.1}%)",
+        100.0 * r.stats.macro_utilization_active(),
+        100.0 * r.stats.compute_utilization_active()
+    );
+    println!(
+        "throughput      : {:.2} vectors/kcycle",
+        r.stats.vectors_per_kcycle()
+    );
+    if args.has("timeline") {
+        let horizon = r.stats.cycles.min(4096);
+        let scale = (horizon / 96).max(1);
+        println!("\ntimeline (first {horizon} cycles, {scale} cyc/char, W=write C=compute):");
+        print!(
+            "{}",
+            trace::to_timeline_ascii(&r.op_log, arch.macros_per_core, 32, horizon, scale)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    let strategy = Strategy::from_name(args.get("strategy").unwrap_or("gpp"))
+        .ok_or_else(|| anyhow!("bad --strategy"))?;
+    let workload = if let Some(path) = args.get("trace") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path}"))?;
+        gpp_pim::gemm::parse_trace(path, &text).map_err(|e| anyhow!("{e}"))?
+    } else {
+        match args.get("workload").unwrap_or("ffn") {
+            "ffn" => blas::transformer_ffn(16, 64, 128, 2),
+            "e2e" => blas::e2e_ffn(),
+            "square" => blas::square_chain(128, 8, 16),
+            "mlp" => blas::mlp_tower(16, &[256, 128, 64, 32]),
+            other => bail!("unknown --workload '{other}' (ffn|e2e|square|mlp) — or use --trace FILE"),
+        }
+    };
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let mut coord = if args.has("numerics") && Runtime::available(artifacts) {
+        Coordinator::with_runtime(arch, artifacts)?
+    } else {
+        Coordinator::new(arch)
+    };
+    let cfg = RunConfig {
+        check_numerics: args.has("numerics"),
+        ..RunConfig::from_arch(&coord.arch, strategy)
+    };
+    let reports = coord.compare(&workload, &cfg)?;
+    println!("workload: {} ({} MACs)", workload.name, workload.total_macs());
+    println!(
+        "numerics: {}",
+        if cfg.check_numerics {
+            if coord.has_runtime() {
+                "PJRT (AOT JAX/Pallas artifacts)"
+            } else {
+                "built-in OU model (artifacts missing)"
+            }
+        } else {
+            "off"
+        }
+    );
+    let base = reports
+        .iter()
+        .find(|r| r.strategy == Strategy::GeneralizedPingPong)
+        .unwrap()
+        .cycles;
+    for r in &reports {
+        let line = format!(
+            "  {:<8} {:>10} cycles  ({:.2}x vs gpp)  macs/cyc {:>8.1}",
+            r.strategy.name(),
+            r.cycles,
+            r.cycles as f64 / base as f64,
+            r.macs_per_cycle(&workload),
+        );
+        match &r.numerics {
+            Some(n) => println!("{line}  max|err| {}", n.max_abs_err),
+            None => println!("{line}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let mut arch = load_arch(args)?;
+    arch.bandwidth = args.get_u64("band", 128)?;
+    let mut space = DesignSpace::fig6(&arch);
+    space.bandwidth = arch.bandwidth as f64;
+    let mut t = CsvTable::new(vec![
+        "tr:tp",
+        "n_in",
+        "macros_insitu",
+        "macros_naive",
+        "macros_gpp",
+        "eff_insitu",
+        "eff_naive",
+        "eff_gpp",
+        "peak_bw_gpp",
+    ]);
+    for p in space.sweep_fig6() {
+        t.push_row(vec![
+            format!("{:.3}", p.ratio_tr_over_tp),
+            format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
+            format!("{:.1}", p.insitu.num_macros),
+            format!("{:.1}", p.naive.num_macros),
+            format!("{:.1}", p.gpp.num_macros),
+            format!("{:.1}", p.insitu.effective_macros),
+            format!("{:.1}", p.naive.effective_macros),
+            format!("{:.1}", p.gpp.effective_macros),
+            format!("{:.1}", p.gpp.peak_bandwidth),
+        ]);
+    }
+    emit(&t, "dse", args.get("csv-dir"))
+}
+
+fn cmd_adapt(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    let max_n = args.get_u32("max-n", 64)?;
+    let adapt = RuntimeAdaptation::from_arch(&arch, 128.0);
+    let mut t = CsvTable::new(vec![
+        "n",
+        "perf_insitu(Eq7)",
+        "perf_naive(Eq8)",
+        "perf_gpp(Eq9)",
+        "gpp_macros",
+        "gpp_tp:tr",
+    ]);
+    let mut n = 1u32;
+    while n <= max_n {
+        let p = adapt.point(n as f64);
+        t.push_row(vec![
+            n.to_string(),
+            format!("{:.4}", p.perf_insitu),
+            format!("{:.4}", p.perf_naive),
+            format!("{:.4}", p.perf_gpp),
+            format!("{:.2}", p.gpp_active_macros),
+            format!("{:.2}:1", p.gpp_ratio_tp_tr),
+        ]);
+        n *= 2;
+    }
+    emit(&t, "adapt", args.get("csv-dir"))
+}
+
+fn cmd_assemble(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: gpp-pim assemble FILE.asm [-o OUT.bin]"))?;
+    let text = std::fs::read_to_string(input)?;
+    let program = isa::assemble(&text).map_err(|e| anyhow!("{e}"))?;
+    let arch = load_arch(args)?;
+    program
+        .validate(arch.macros_per_core)
+        .map_err(|e| anyhow!("{e}"))?;
+    let words = isa::encode_program(&program);
+    let out = args
+        .get("o")
+        .map(String::from)
+        .unwrap_or_else(|| format!("{input}.bin"));
+    let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    std::fs::write(&out, bytes)?;
+    println!(
+        "assembled {} streams / {} instructions -> {out} ({} words)",
+        program.streams.len(),
+        program.len(),
+        words.len()
+    );
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: gpp-pim disasm FILE.bin"))?;
+    let bytes = std::fs::read(input)?;
+    if bytes.len() % 8 != 0 {
+        bail!("{input}: not a program image (size not a multiple of 8)");
+    }
+    let words: Vec<u64> = bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let program = isa::decode_program(&words).map_err(|e| anyhow!("{e}"))?;
+    print!("{}", isa::disassemble(&program));
+    Ok(())
+}
+
+const USAGE: &str = "\
+gpp-pim — Generalized Ping-Pong PIM accelerator (paper reproduction)
+
+USAGE: gpp-pim <COMMAND> [flags]
+
+COMMANDS:
+  info       show the architecture configuration
+  repro      regenerate paper figures/tables  (--exp fig4|fig6|fig7|table2|headline|all)
+  simulate   run one strategy on an abstract task plan
+             (--strategy insitu|naive|intra|gpp, --tasks, --macros, --n-in,
+              --band, --write-speed, --timeline, --vcd FILE)
+  run        simulate+validate a GeMM workload end-to-end
+             (--workload ffn|e2e|square|mlp or --trace FILE, --numerics)
+  dse        design-space exploration table (--band)
+  adapt      runtime bandwidth-adaptation model (--max-n)
+  assemble   assemble ISA text to binary machine code
+  disasm     disassemble binary machine code
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "repro" => cmd_repro(&args),
+        "simulate" => cmd_simulate(&args),
+        "run" => cmd_run(&args),
+        "dse" => cmd_dse(&args),
+        "adapt" => cmd_adapt(&args),
+        "assemble" => cmd_assemble(&args),
+        "disasm" => cmd_disasm(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

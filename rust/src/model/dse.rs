@@ -1,0 +1,250 @@
+//! Design-phase design-space exploration (paper §IV-B, Fig. 6).
+//!
+//! Given a fixed off-chip bandwidth, for every `time_rewrite : time_PIM`
+//! ratio compute — per strategy — the macro count that saturates the
+//! bandwidth (Eqs. 3–4), the aggregate throughput, and the execution time
+//! of a fixed workload.  This regenerates both panels of Fig. 6.
+
+use crate::arch::ArchConfig;
+use crate::model::eqs;
+
+/// One strategy's numbers at a design point.
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyDesign {
+    /// Macros instantiated (fractional — the model; the simulator rounds).
+    pub num_macros: f64,
+    /// Per-macro utilization (fraction of time busy).
+    pub macro_util: f64,
+    /// Per-macro *compute* utilization (useful work share).
+    pub compute_util: f64,
+    /// Aggregate compute throughput in macro-equivalents.
+    pub effective_macros: f64,
+    /// Execution cycles for the reference workload.
+    pub exec_cycles: f64,
+    /// Peak off-chip bandwidth demand, bytes/cycle.
+    pub peak_bandwidth: f64,
+}
+
+/// A full design point: the three strategies at one `tr:tp` ratio.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignPoint {
+    /// `time_rewrite / time_PIM`.
+    pub ratio_tr_over_tp: f64,
+    /// `time_PIM`, cycles.
+    pub tp: f64,
+    /// `time_rewrite`, cycles.
+    pub tr: f64,
+    pub insitu: StrategyDesign,
+    pub naive: StrategyDesign,
+    pub gpp: StrategyDesign,
+}
+
+/// The exploration driver.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    /// Off-chip bandwidth budget, bytes/cycle (Fig. 6 uses 128).
+    pub bandwidth: f64,
+    /// Per-macro write speed `s`, bytes/cycle.
+    pub write_speed: f64,
+    /// `size_macro`, bytes.
+    pub size_macro: f64,
+    /// `size_OU`, bytes.
+    pub size_ou: f64,
+    /// Reference workload: total tile-tasks (write + compute of one tile).
+    pub tasks: f64,
+}
+
+impl DesignSpace {
+    /// Fig. 6 setup on the paper's architecture: band = 128 B/cycle.
+    pub fn fig6(arch: &ArchConfig) -> Self {
+        Self {
+            bandwidth: 128.0,
+            write_speed: arch.write_speed as f64,
+            size_macro: arch.geom.size_macro() as f64,
+            size_ou: arch.geom.size_ou() as f64,
+            tasks: 4096.0,
+        }
+    }
+
+    /// Evaluate one design point at the given `tr:tp` ratio.  `tp` is
+    /// produced by choosing `n_in` (compute batch); `tr` is fixed by the
+    /// write port: `tr = size_macro / s`.
+    pub fn point(&self, ratio_tr_over_tp: f64) -> DesignPoint {
+        let tr = self.size_macro / self.write_speed;
+        let tp = tr / ratio_tr_over_tp;
+        let period = tp + tr;
+
+        // --- in-situ: all macros lock-step; every write uses the bus
+        // simultaneously, so macro count = band/s (Eq. 3).
+        let insitu_n = eqs::num_macros_insitu(self.bandwidth, self.write_speed);
+        let insitu_cu = eqs::insitu_util(tp, tr);
+        let insitu = StrategyDesign {
+            num_macros: insitu_n,
+            macro_util: 1.0, // writing counts as busy; never idle
+            compute_util: insitu_cu,
+            effective_macros: eqs::effective_macros(insitu_n, insitu_cu),
+            exec_cycles: self.tasks / insitu_n * period,
+            peak_bandwidth: eqs::peak_bandwidth(
+                eqs::writer_fraction::insitu(),
+                insitu_n,
+                self.write_speed,
+            ),
+        };
+
+        // --- naive ping-pong: two banks, count = 2 band/s (Eq. 3); a
+        // bank's cycle is 2·max(tp,tr), computing tp of it.
+        let naive_n = eqs::num_macros_naive(self.bandwidth, self.write_speed);
+        let naive_cu = tp / (2.0 * tp.max(tr));
+        let naive = StrategyDesign {
+            num_macros: naive_n,
+            macro_util: eqs::naive_pingpong_util(tp, tr),
+            compute_util: naive_cu,
+            effective_macros: eqs::effective_macros(naive_n, naive_cu),
+            exec_cycles: self.tasks / naive_n * 2.0 * tp.max(tr),
+            peak_bandwidth: eqs::peak_bandwidth(
+                eqs::writer_fraction::naive(),
+                naive_n,
+                self.write_speed,
+            ),
+        };
+
+        // --- generalized ping-pong: staggered, count from Eq. 4; every
+        // macro busy 100%, computing tp/(tp+tr) of the time.
+        let gpp_n = eqs::num_macros_gpp(tp, tr, self.bandwidth, self.write_speed);
+        let gpp_cu = tp / period;
+        let gpp = StrategyDesign {
+            num_macros: gpp_n,
+            macro_util: eqs::gpp_util(),
+            compute_util: gpp_cu,
+            effective_macros: eqs::effective_macros(gpp_n, gpp_cu),
+            exec_cycles: self.tasks / gpp_n * period,
+            peak_bandwidth: eqs::peak_bandwidth(
+                eqs::writer_fraction::gpp(tp, tr),
+                gpp_n,
+                self.write_speed,
+            ),
+        };
+
+        DesignPoint {
+            ratio_tr_over_tp,
+            tp,
+            tr,
+            insitu,
+            naive,
+            gpp,
+        }
+    }
+
+    /// Sweep Fig. 6's x-axis: `tr:tp` from 1:8 to 8:1.
+    pub fn sweep_fig6(&self) -> Vec<DesignPoint> {
+        let ratios = [
+            1.0 / 8.0,
+            1.0 / 7.0,
+            1.0 / 6.0,
+            1.0 / 5.0,
+            1.0 / 4.0,
+            1.0 / 3.0,
+            1.0 / 2.0,
+            1.0,
+            2.0,
+            3.0,
+            4.0,
+            5.0,
+            6.0,
+            7.0,
+            8.0,
+        ];
+        ratios.iter().map(|&r| self.point(r)).collect()
+    }
+
+    /// The `n_in` that realizes a `tr:tp` ratio on this geometry
+    /// (`tp = size_macro·n_in/size_OU`), fractional.
+    pub fn n_in_for_ratio(&self, ratio_tr_over_tp: f64) -> f64 {
+        let tr = self.size_macro / self.write_speed;
+        let tp = tr / ratio_tr_over_tp;
+        tp * self.size_ou / self.size_macro
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> DesignSpace {
+        DesignSpace::fig6(&ArchConfig::paper_default())
+    }
+
+    #[test]
+    fn fig6_1to7_point() {
+        // §V-B: tr:tp = 1:7 — GPP throughput 8x in-situ's per Eq. 6 and
+        // num_macros 8x (128 vs 16); naive has 32.
+        let p = space().point(1.0 / 7.0);
+        assert!((p.gpp.num_macros - 128.0).abs() < 1e-9);
+        assert!((p.insitu.num_macros - 16.0).abs() < 1e-9);
+        assert!((p.naive.num_macros - 32.0).abs() < 1e-9);
+        // Execution-time orderings: GPP fastest.
+        assert!(p.gpp.exec_cycles < p.naive.exec_cycles);
+        assert!(p.naive.exec_cycles < p.insitu.exec_cycles);
+    }
+
+    #[test]
+    fn fig6_balance_gpp_equals_naive() {
+        let p = space().point(1.0);
+        assert!((p.gpp.num_macros - p.naive.num_macros).abs() < 1e-9);
+        assert!((p.gpp.exec_cycles - p.naive.exec_cycles).abs() < 1e-9);
+        // and both 2x faster than in-situ
+        assert!((p.insitu.exec_cycles / p.gpp.exec_cycles - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig6_8to1_fewer_macros_same_speed() {
+        // §V-B: tr:tp = 8:1 — GPP matches naive's time with 43.75% fewer
+        // macros.
+        let p = space().point(8.0);
+        assert!((p.gpp.exec_cycles - p.naive.exec_cycles).abs() < 1e-9);
+        let savings = 1.0 - p.gpp.num_macros / p.naive.num_macros;
+        assert!((savings - 0.4375).abs() < 1e-9);
+        // and beats in-situ
+        assert!(p.gpp.exec_cycles < p.insitu.exec_cycles);
+    }
+
+    #[test]
+    fn exec_time_consistent_with_effective_macros() {
+        // exec_cycles ∝ tasks·tp / effective_macros for every strategy.
+        let p = space().point(0.25);
+        for sd in [p.insitu, p.naive, p.gpp] {
+            let via_eff = space().tasks * p.tp / sd.effective_macros;
+            assert!(
+                (sd.exec_cycles - via_eff).abs() / via_eff < 1e-9,
+                "{sd:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn peak_bandwidth_never_exceeds_budget_for_gpp() {
+        let s = space();
+        for p in s.sweep_fig6() {
+            assert!(p.gpp.peak_bandwidth <= s.bandwidth + 1e-9);
+            // in-situ's peak is the full all-macros burst = budget
+            assert!((p.insitu.peak_bandwidth - s.bandwidth).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sweep_covers_both_regimes() {
+        let pts = space().sweep_fig6();
+        assert_eq!(pts.len(), 15);
+        assert!(pts.first().unwrap().ratio_tr_over_tp < 1.0);
+        assert!(pts.last().unwrap().ratio_tr_over_tp > 1.0);
+    }
+
+    #[test]
+    fn n_in_for_ratio_roundtrip() {
+        let s = space();
+        // ratio 1:1 with s=8 on 1024B/32B geometry: tp=tr=128 => n_in=4.
+        assert!((s.n_in_for_ratio(1.0) - 4.0).abs() < 1e-12);
+        // ratio 1:8 (tp = 8 tr): n_in = 32.
+        assert!((s.n_in_for_ratio(0.125) - 32.0).abs() < 1e-12);
+    }
+}

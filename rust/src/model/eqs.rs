@@ -1,0 +1,209 @@
+//! The paper's equations 1–6: utilization and design-phase macro counts.
+//!
+//! Notation (paper Table I): `tp = time_PIM`, `tr = time_rewrite`,
+//! `band` = off-chip bandwidth (B/cycle), `s` = per-macro rewrite speed
+//! (B/cycle).  All functions are totals over one write+compute period.
+
+/// Macro utilization of the **naive ping-pong** strategy, Eqs. 1–2:
+/// `util = (tp + tr) / (2 * max(tp, tr))`.
+///
+/// Peaks at 1.0 exactly when `tp == tr` (Fig. 4's sweet spot); any
+/// imbalance leaves one bank idle for `|tp - tr|` per period.
+pub fn naive_pingpong_util(tp: f64, tr: f64) -> f64 {
+    (tp + tr) / (2.0 * tp.max(tr))
+}
+
+/// Macro utilization of the **in-situ** strategy: compute share of the
+/// synchronized write→compute period (all macros stall during writes).
+pub fn insitu_util(tp: f64, tr: f64) -> f64 {
+    tp / (tp + tr)
+}
+
+/// Macro utilization of **generalized ping-pong**: 1.0 by construction —
+/// every macro transitions write→compute→write with no idle gap (§III).
+pub fn gpp_util() -> f64 {
+    1.0
+}
+
+/// Per-macro *performance* retention of naive ping-pong relative to a
+/// never-idle macro (paper §IV-B):
+/// `(tp + tr) / (tp + tr + |tp - tr|)`.
+pub fn naive_pingpong_macro_perf(tp: f64, tr: f64) -> f64 {
+    (tp + tr) / (tp + tr + (tp - tr).abs())
+}
+
+/// Eq. 3 (in-situ branch): macros supported at full bandwidth usage —
+/// all macros write simultaneously at speed `s`.
+pub fn num_macros_insitu(band: f64, s: f64) -> f64 {
+    band / s
+}
+
+/// Eq. 3 (naive ping-pong branch): half the macros write at a time, so
+/// twice as many fit the same bandwidth.
+pub fn num_macros_naive(band: f64, s: f64) -> f64 {
+    2.0 * band / s
+}
+
+/// Eq. 4: generalized ping-pong macro count.  Each macro's *average*
+/// bandwidth demand is `tr * s / (tp + tr)`; staggering makes the average
+/// the peak, so `num = (tp + tr) * band / (tr * s)`.
+pub fn num_macros_gpp(tp: f64, tr: f64, band: f64, s: f64) -> f64 {
+    (tp + tr) * band / (tr * s)
+}
+
+/// Eq. 5: macro-count ratio GPP : in-situ : naive at equal bandwidth.
+pub fn macro_count_ratio(tp: f64, tr: f64) -> (f64, f64, f64) {
+    ((tp + tr) / tr, 1.0, 2.0)
+}
+
+/// Eq. 6: *throughput* ratio GPP : in-situ : naive at equal bandwidth
+/// (the paper labels it execution-time ratio; values are normalized so
+/// in-situ = 1 and larger = faster).
+///
+/// GPP: `(tp + tr)/tr` macros at 100% util vs in-situ's `1` macro-set at
+/// `tp/(tp+tr)` — normalizing per Eq. 6's closed form
+/// `(n_in*s + size_OU)/size_OU = (tp+tr)/tr`.  Naive: twice the macros,
+/// each at `naive_pingpong_macro_perf`.
+pub fn throughput_ratio(tp: f64, tr: f64) -> (f64, f64, f64) {
+    let gpp = (tp + tr) / tr;
+    let insitu = 1.0;
+    let naive = 2.0 * (tp + tr) / (tp + tr + (tp - tr).abs());
+    (gpp, insitu, naive)
+}
+
+/// Aggregate compute throughput (macro-equivalents fully computing) for a
+/// strategy given its macro count and utilizations — used to cross-check
+/// Eq. 6 against first principles and by the DSE tables.
+pub fn effective_macros(num_macros: f64, compute_util: f64) -> f64 {
+    num_macros * compute_util
+}
+
+/// Peak off-chip bandwidth demand per strategy (Fig. 3 discussion),
+/// bytes/cycle, for `num` active macros writing at speed `s`:
+/// in-situ — all write at once; naive — half; GPP — `tr/(tp+tr)` of them.
+pub fn peak_bandwidth(strategy_writers_fraction: f64, num: f64, s: f64) -> f64 {
+    strategy_writers_fraction * num * s
+}
+
+/// Writer fraction for each strategy (used with [`peak_bandwidth`]).
+pub mod writer_fraction {
+    /// In-situ: every macro writes simultaneously.
+    pub fn insitu() -> f64 {
+        1.0
+    }
+    /// Naive ping-pong: one bank of two.
+    pub fn naive() -> f64 {
+        0.5
+    }
+    /// Generalized ping-pong: the steady-state staggered share.
+    pub fn gpp(tp: f64, tr: f64) -> f64 {
+        tr / (tp + tr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_util_peaks_at_balance() {
+        assert_eq!(naive_pingpong_util(128.0, 128.0), 1.0);
+        assert!(naive_pingpong_util(896.0, 128.0) < 1.0);
+        // tp = 7 tr  =>  util = 8/14 = 4/7
+        assert!((naive_pingpong_util(7.0, 1.0) - 4.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn naive_util_symmetric() {
+        assert_eq!(naive_pingpong_util(3.0, 1.0), naive_pingpong_util(1.0, 3.0));
+    }
+
+    #[test]
+    fn fig4_sweet_spot() {
+        // Fig. 4 parameters: size_macro=1024 B, size_OU=32 B, s=4 B/cyc.
+        // tp = 32*n_in, tr = 256: util is 1.0 exactly at n_in = 8.
+        let tr = 256.0;
+        for n_in in 1..=32u32 {
+            let tp = 32.0 * n_in as f64;
+            let u = naive_pingpong_util(tp, tr);
+            if n_in == 8 {
+                assert_eq!(u, 1.0);
+            } else {
+                assert!(u < 1.0, "n_in={n_in} gave util={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn insitu_util_balanced() {
+        assert_eq!(insitu_util(128.0, 128.0), 0.5);
+    }
+
+    #[test]
+    fn eq3_eq4_macro_counts() {
+        // band=128, s=8: in-situ 16, naive 32; GPP at tp=7tr: 8x16=128.
+        assert_eq!(num_macros_insitu(128.0, 8.0), 16.0);
+        assert_eq!(num_macros_naive(128.0, 8.0), 32.0);
+        assert_eq!(num_macros_gpp(7.0, 1.0, 128.0, 8.0), 128.0);
+    }
+
+    #[test]
+    fn eq4_reduces_to_naive_at_balance() {
+        // tp == tr  =>  GPP count == naive count (the strategies align).
+        assert_eq!(
+            num_macros_gpp(1.0, 1.0, 128.0, 8.0),
+            num_macros_naive(128.0, 8.0)
+        );
+    }
+
+    #[test]
+    fn paper_8to1_macro_savings() {
+        // §V-B: at tr:tp = 8:1 GPP uses 43.75% fewer macros than naive.
+        let (gpp, _insitu, naive) = macro_count_ratio(1.0, 8.0);
+        let savings = 1.0 - gpp / naive;
+        assert!((savings - 0.4375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_balance_point() {
+        // tr == tp: GPP == naive == 2x in-situ (§V-B).
+        let (gpp, insitu, naive) = throughput_ratio(1.0, 1.0);
+        assert_eq!(gpp, 2.0);
+        assert_eq!(naive, 2.0);
+        assert_eq!(insitu, 1.0);
+    }
+
+    #[test]
+    fn eq6_rewrite_heavy_gpp_matches_naive() {
+        // tr > tp: GPP == naive throughput (but fewer macros, Eq. 5).
+        let (gpp, _, naive) = throughput_ratio(1.0, 8.0);
+        assert!((gpp - naive).abs() < 1e-12);
+        assert!((gpp - 9.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq6_compute_heavy_gpp_wins() {
+        // tp = 7 tr: GPP = 8x in-situ, naive = 2*8/14 = 8/7.
+        let (gpp, _, naive) = throughput_ratio(7.0, 1.0);
+        assert!((gpp - 8.0).abs() < 1e-12);
+        assert!((naive - 8.0 / 7.0).abs() < 1e-12);
+        assert!(gpp / naive > 1.0);
+    }
+
+    #[test]
+    fn peak_bandwidth_ordering() {
+        // Fig. 3: GPP's peak demand is tr/(tp+tr) of in-situ's.
+        let (tp, tr, s) = (3.0, 1.0, 8.0);
+        let num = 4.0;
+        let insitu = peak_bandwidth(writer_fraction::insitu(), num, s);
+        let naive = peak_bandwidth(writer_fraction::naive(), num, s);
+        let gpp = peak_bandwidth(writer_fraction::gpp(tp, tr), num, s);
+        assert!(gpp < naive && naive < insitu);
+        assert!((gpp / insitu - 0.25).abs() < 1e-12); // the paper's 25%
+    }
+
+    #[test]
+    fn effective_macros_linear() {
+        assert_eq!(effective_macros(16.0, 0.5), 8.0);
+    }
+}

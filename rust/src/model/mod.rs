@@ -1,0 +1,18 @@
+//! Closed-form analytical model of the three scheduling strategies —
+//! the quantitative core of the paper (§III, §IV, Eqs. 1–9).
+//!
+//! Everything here is pure arithmetic on the architecture parameters
+//! (`time_PIM`, `time_rewrite`, `band.`, `s`, `n_in`, …), no simulation.
+//! The cycle-accurate simulator ([`crate::sim`]) is the "practice" column
+//! of the paper's Table II; this module is the "theory" column, and the
+//! integration tests assert the two agree to the quantization the paper
+//! itself reports.
+
+pub mod adapt;
+pub mod dse;
+pub mod energy;
+pub mod eqs;
+
+pub use adapt::{AdaptPoint, RuntimeAdaptation};
+pub use dse::{DesignPoint, DesignSpace};
+pub use energy::{AreaModel, EnergyBreakdown, EnergyModel};

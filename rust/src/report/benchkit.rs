@@ -1,0 +1,139 @@
+//! Minimal benchmarking kit (`criterion` is unavailable offline): warmup,
+//! repeated timed runs, median/mean/min reporting, and a tiny harness
+//! runner used by the `[[bench]]` targets (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    /// Pretty one-liner, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} time: [{:>11} {:>11} {:>11}]  ({} iters)",
+            self.name,
+            fmt_dur(self.min),
+            fmt_dur(self.median),
+            fmt_dur(self.max),
+            self.iters
+        )
+    }
+
+    /// Median in seconds.
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Format a duration adaptively (ns/µs/ms/s).
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup; `f` is called once per iteration.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    /// Custom warmup/iteration counts.
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self {
+            warmup,
+            iters: iters.max(1),
+        }
+    }
+
+    /// Measure `f`, returning stats over the timed iterations.  The
+    /// closure's return value is consumed via `std::hint::black_box` so
+    /// the optimizer cannot elide the work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            median,
+            mean,
+            min: *times.first().unwrap(),
+            max: *times.last().unwrap(),
+        }
+    }
+}
+
+/// Print a bench section header (visual parity with criterion output).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(0, 3);
+        let m = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(m.iters, 3);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(10)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(10)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(10)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+
+    #[test]
+    fn line_contains_name() {
+        let b = Bench::new(0, 1);
+        let m = b.run("xyz", || 1);
+        assert!(m.line().contains("xyz"));
+    }
+}

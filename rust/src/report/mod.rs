@@ -1,0 +1,14 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (Fig. 4, Fig. 6a/6b, Fig. 7a–d, Table II, plus the headline
+//! speedup claims) as CSV + ASCII tables, combining the analytical model
+//! ("theory") with the cycle-accurate simulator ("practice") exactly the
+//! way the paper does.
+//!
+//! Consumed by the `[[bench]]` targets and by `gpp-pim repro --exp <id>`.
+
+pub mod benchkit;
+pub mod figures;
+
+pub use figures::{
+    fig4, fig6, fig7, headline, table2, Fig6Row, Fig7Row, HeadlineRow, Table2Row,
+};

@@ -1,0 +1,123 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust loader.  One line per artifact: `name dtype MxK;KxN;...`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+/// One artifact's argument signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub dtype: String,
+    /// Argument shapes, e.g. `[[8, 32], [32, 32]]`.
+    pub arg_shapes: Vec<Vec<i64>>,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (name, dtype, shapes) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(n), Some(d), Some(s)) => (n, d, s),
+                _ => bail!("manifest line {}: expected 'name dtype shapes'", i + 1),
+            };
+            let arg_shapes = shapes
+                .split(';')
+                .map(|spec| {
+                    spec.split('x')
+                        .map(|d| d.parse::<i64>().context("bad dim"))
+                        .collect::<Result<Vec<i64>>>()
+                })
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("manifest line {}: bad shapes '{shapes}'", i + 1))?;
+            entries.insert(
+                name.to_string(),
+                ManifestEntry {
+                    name: name.to_string(),
+                    dtype: dtype.to_string(),
+                    arg_shapes,
+                },
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Look up an artifact.
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    /// All artifact names.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no artifacts are listed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+macro_vmm_8 f32 8x32;32x32
+gemm_16x128x128 f32 16x128;128x128
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("macro_vmm_8").unwrap();
+        assert_eq!(e.dtype, "f32");
+        assert_eq!(e.arg_shapes, vec![vec![8, 32], vec![32, 32]]);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\nmacro_vmm_4 f32 4x32;32x32\n").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("only-name\n").is_err());
+        assert!(Manifest::parse("x f32 axb\n").is_err());
+    }
+
+    #[test]
+    fn names_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let names: Vec<&str> = m.names().collect();
+        assert_eq!(names, vec!["gemm_16x128x128", "macro_vmm_8"]);
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas layers) and executes them
+//! on the request path via the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py`): jax ≥ 0.5
+//! emits serialized protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! Executables are compiled once per artifact and cached; the hot path is
+//! literal marshalling + `execute` only.  Python is never invoked here.
+
+mod artifacts;
+
+pub use artifacts::{Manifest, ManifestEntry};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Names of the artifacts `python/compile/aot.py` emits (kept in sync via
+/// `manifest.txt` checks at load time).
+pub mod artifact_names {
+    /// Single-macro VMM, batch of 8 (the paper's Fig. 4 sweet spot).
+    pub const MACRO_VMM_8: &str = "macro_vmm_8";
+    /// Single-macro VMM, batch of 4 (the Fig. 7 / Table II design point).
+    pub const MACRO_VMM_4: &str = "macro_vmm_4";
+    /// Macro-tiled GeMM 16×128 @ 128×128.
+    pub const GEMM_16X128X128: &str = "gemm_16x128x128";
+    /// FFN chain 16×64 → 128 → 64.
+    pub const FFN_16X64X128: &str = "ffn_16x64x128";
+}
+
+/// A loaded PJRT runtime bound to an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// True if the artifact directory looks usable (manifest present).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.txt").is_file()
+    }
+
+    /// PJRT platform name (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The manifest the artifacts were built with.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of executables compiled so far (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute artifact `name` on f32 inputs with the given shapes; the
+    /// artifact returns a 1-tuple whose element is flattened to a Vec.
+    pub fn execute(&mut self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        // Validate against the manifest when it lists this artifact.
+        if let Some(entry) = self.manifest.get(name) {
+            if entry.arg_shapes.len() != inputs.len() {
+                bail!(
+                    "{name}: expected {} args per manifest, got {}",
+                    entry.arg_shapes.len(),
+                    inputs.len()
+                );
+            }
+            for (i, ((_, shape), expect)) in inputs.iter().zip(&entry.arg_shapes).enumerate() {
+                let got: Vec<i64> = shape.to_vec();
+                if &got != expect {
+                    bail!("{name}: arg {i} shape {got:?} != manifest {expect:?}");
+                }
+            }
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expect: usize = shape.iter().product::<i64>() as usize;
+            if data.len() != expect {
+                bail!("input length {} != shape {:?}", data.len(), shape);
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("reading result of {name}: {e:?}"))
+    }
+
+    /// Single-macro VMM through the L1 Pallas kernel artifact:
+    /// `x (n_vec × 32) @ w (32 × 32)`.  Batches smaller than the artifact
+    /// batch are zero-padded (a partially-filled input buffer on the real
+    /// chip); batches larger than 8 are chunked.
+    pub fn macro_vmm(&mut self, x: &[f32], w: &[f32], n_vec: usize) -> Result<Vec<f32>> {
+        const K: usize = 32;
+        const N: usize = 32;
+        if x.len() != n_vec * K {
+            bail!("x length {} != n_vec {n_vec} * 32", x.len());
+        }
+        if w.len() != K * N {
+            bail!("w length {} != 1024", w.len());
+        }
+        let mut out = Vec::with_capacity(n_vec * N);
+        let mut done = 0usize;
+        while done < n_vec {
+            // Prefer the artifact whose batch matches exactly; fall back
+            // to padding into the batch-8 kernel.
+            let take = (n_vec - done).min(8);
+            let (name, batch) = if take == 4 {
+                (artifact_names::MACRO_VMM_4, 4)
+            } else {
+                (artifact_names::MACRO_VMM_8, 8)
+            };
+            let mut xb = vec![0.0f32; batch * K];
+            xb[..take * K].copy_from_slice(&x[done * K..(done + take) * K]);
+            let res = self.execute(name, &[(&xb, &[batch as i64, K as i64]), (w, &[K as i64, N as i64])])?;
+            out.extend_from_slice(&res[..take * N]);
+            done += take;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_e2e.rs (they need
+    // built artifacts); here we only cover pure logic.
+
+    #[test]
+    fn available_checks_manifest() {
+        assert!(!Runtime::available("/nonexistent"));
+    }
+}

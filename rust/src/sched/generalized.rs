@@ -1,0 +1,223 @@
+//! Generalized ping-pong codegen — the paper's contribution (Fig. 3c, §III).
+//!
+//! One instruction stream **per active macro** (the revised architecture's
+//! "generalized execution unit"), no barriers anywhere.  Stream `i` delays
+//! its start by `i · (t_PIM + t_rewrite) / active` cycles, spreading
+//! rewrite start times uniformly over one write+compute period: the
+//! steady-state writer population is `active · t_rewrite / period`, so the
+//! off-chip bus sees a *constant* demand equal to the average instead of
+//! the all-at-once burst of in-situ or the half-chip burst of naive
+//! ping-pong.  Each macro transitions write→compute→write the moment it
+//! finishes — 100% macro utilization by construction.
+
+use super::plan::{tile_id, SchedulePlan};
+use crate::arch::ArchConfig;
+use crate::isa::{Inst, Program};
+
+/// The stagger offset of slot `i`: starts spread uniformly over one
+/// write+compute period.
+pub fn stagger_offset(arch: &ArchConfig, plan: &SchedulePlan, slot: u32) -> u64 {
+    let tr = arch.time_rewrite_at(plan.write_speed);
+    let tp = arch.time_pim_at(plan.n_in);
+    let period = tr + tp;
+    (slot as u64 * period) / plan.active_macros as u64
+}
+
+/// Generate the generalized ping-pong program: one barrier-free stream
+/// per active macro, staggered starts, tasks consumed round-robin.
+pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let mut program = Program::new(arch.n_cores);
+    let n_vec = plan.n_in as u16;
+
+    for core in 0..arch.n_cores {
+        for (pos, &m) in plan.macros_on_core(arch, core).iter().enumerate() {
+            let slot = plan.slot_of(arch, core, pos as u32);
+            let offset = stagger_offset(arch, plan, slot);
+            let mut insts = vec![Inst::SetSpd {
+                speed: plan.write_speed as u16,
+            }];
+            if offset > 0 {
+                insts.push(Inst::Delay {
+                    cycles: offset as u32,
+                });
+            }
+            for task in plan.tasks_of_slot(slot) {
+                let tile = tile_id(task);
+                insts.push(Inst::Wrw { m, tile });
+                insts.push(Inst::WaitW { m });
+                insts.push(Inst::LdIn { n_vec });
+                insts.push(Inst::Vmm { m, n_vec, tile });
+                insts.push(Inst::WaitC { m });
+                insts.push(Inst::StOut { n_vec });
+            }
+            insts.push(Inst::Halt);
+            program.add_stream(core, insts);
+        }
+    }
+    program
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, OpKind, SimOptions};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default() // tp = tr = 128 at s=8, n_in=4
+    }
+
+    fn logged() -> SimOptions {
+        SimOptions {
+            record_op_log: true,
+            ..SimOptions::default()
+        }
+    }
+
+    #[test]
+    fn validates() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 512);
+        codegen(&a, &plan).validate(a.macros_per_core).unwrap();
+    }
+
+    #[test]
+    fn one_stream_per_active_macro() {
+        let a = arch();
+        let plan = SchedulePlan {
+            tasks: 40,
+            active_macros: 20,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        assert_eq!(p.streams.len(), 20);
+        assert_eq!(p.barrier_count(), 0);
+    }
+
+    #[test]
+    fn stagger_spreads_over_period() {
+        // Paper Fig. 3c example: ratio tr:tp = 1:3, 4 macros => offsets
+        // are 0, tr, 2tr, 3tr.
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        let plan = SchedulePlan {
+            tasks: 8,
+            active_macros: 4,
+            n_in: 12, // tp = 384 = 3 * tr(128)
+            write_speed: 8,
+        };
+        for slot in 0..4 {
+            assert_eq!(stagger_offset(&a, &plan, slot), slot as u64 * 128);
+        }
+    }
+
+    #[test]
+    fn constant_bus_occupancy_in_steady_state() {
+        // 4 macros, tr:tp = 1:3 — exactly one macro writes at any time in
+        // steady state: bus busy the whole run (minus the final drain).
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        a.bandwidth = 8; // exactly one writer's worth
+        let plan = SchedulePlan {
+            tasks: 16,
+            active_macros: 4,
+            n_in: 12,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, logged()).unwrap();
+        // Peak never exceeds one writer at full speed.
+        assert_eq!(r.stats.peak_bus_rate, 8);
+        // Bandwidth utilization near 1 until the final compute drain
+        // (last period has no writes): busy >= 16 writes * 128 cycles.
+        assert_eq!(r.stats.bus_busy_cycles, 16 * 128);
+        // Total: offsets fill first period; thereafter each macro cycles
+        // 512 (=tr+tp) with no idle: last macro starts at 3*128, does 4
+        // tasks of 512 => 384 + 2048 = 2432.
+        assert_eq!(r.stats.cycles, 2432);
+    }
+
+    #[test]
+    fn macros_never_idle_between_tasks() {
+        // In GPP every macro's ops are back-to-back: write(k) ends where
+        // compute(k) starts, compute(k) ends where write(k+1) starts.
+        let mut a = arch();
+        a.bandwidth = 512;
+        let plan = SchedulePlan {
+            tasks: 12,
+            active_macros: 4,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, logged()).unwrap();
+        // Group ops per macro and check contiguity.
+        for g in 0..4u32 {
+            let mut ops: Vec<_> = r
+                .op_log
+                .iter()
+                .filter(|o| o.global_macro(a.macros_per_core) == g * a.macros_per_core / a.macros_per_core * 0 + o.global_macro(a.macros_per_core))
+                .collect();
+            // (filter is identity; keep all ops of macro g)
+            ops.retain(|o| o.global_macro(a.macros_per_core) == g);
+            ops.sort_by_key(|o| o.start);
+            for pair in ops.windows(2) {
+                assert_eq!(
+                    pair[0].end, pair[1].start,
+                    "gap on macro {g}: {:?} -> {:?}",
+                    pair[0], pair[1]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_tasks_complete_exactly_once() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 300);
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, logged()).unwrap();
+        assert_eq!(r.stats.vmms_completed, 300);
+        let mut tiles: Vec<u32> = r
+            .op_log
+            .iter()
+            .filter(|o| o.kind == OpKind::Compute)
+            .map(|o| o.tile)
+            .collect();
+        tiles.sort_unstable();
+        let expect: Vec<u32> = (1..=300).collect();
+        assert_eq!(tiles, expect);
+    }
+
+    #[test]
+    fn beats_naive_when_unbalanced() {
+        // tr:tp = 1:3, band sized for GPP's average demand: GPP should
+        // finish decisively faster than naive ping-pong on the same
+        // resources (the Fig. 6a story).
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        a.bandwidth = 16;
+        let plan = SchedulePlan {
+            tasks: 64,
+            active_macros: 8,
+            n_in: 12,
+            write_speed: 8,
+        };
+        let gpp = simulate(&a, &codegen(&a, &plan), SimOptions::default())
+            .unwrap()
+            .stats
+            .cycles;
+        let naive = simulate(
+            &a,
+            &crate::sched::naive::codegen(&a, &plan),
+            SimOptions::default(),
+        )
+        .unwrap()
+        .stats
+        .cycles;
+        assert!(
+            (gpp as f64) < 0.8 * naive as f64,
+            "gpp {gpp} vs naive {naive}"
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! In-situ write/compute codegen (Fig. 3a).
+//!
+//! All macros move in lock-step: a synchronized write phase (every active
+//! macro rewrites simultaneously, sharing the off-chip bus), a global
+//! barrier, a synchronized compute phase, another barrier.  The bus is
+//! bursty: fully loaded during write phases, silent during compute — the
+//! "intermittent characteristic" the paper criticizes.
+
+use super::plan::{tile_id, SchedulePlan};
+use crate::arch::ArchConfig;
+use crate::isa::{Inst, Program};
+
+/// Generate the in-situ program: one stream per core that has active
+/// macros; `plan.rounds()` synchronized write→compute rounds.
+pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let mut program = Program::new(arch.n_cores);
+    let rounds = plan.rounds();
+
+    for core in 0..arch.n_cores {
+        let macros = plan.macros_on_core(arch, core);
+        if macros.is_empty() {
+            continue;
+        }
+        let mut insts = vec![Inst::SetSpd {
+            speed: plan.write_speed as u16,
+        }];
+        for round in 0..rounds {
+            // --- write phase: issue all rewrites, then drain them.
+            let mut wrote = Vec::new();
+            for (pos, &m) in macros.iter().enumerate() {
+                let slot = plan.slot_of(arch, core, pos as u32);
+                let task = round * plan.active_macros + slot;
+                if task < plan.tasks {
+                    insts.push(Inst::Wrw {
+                        m,
+                        tile: tile_id(task),
+                    });
+                    wrote.push((m, task));
+                }
+            }
+            for &(m, _) in &wrote {
+                insts.push(Inst::WaitW { m });
+            }
+            insts.push(Inst::Barrier);
+            // --- compute phase.
+            for &(m, task) in &wrote {
+                insts.push(Inst::LdIn {
+                    n_vec: plan.n_in as u16,
+                });
+                insts.push(Inst::Vmm {
+                    m,
+                    n_vec: plan.n_in as u16,
+                    tile: tile_id(task),
+                });
+            }
+            for &(m, _) in &wrote {
+                insts.push(Inst::WaitC { m });
+                insts.push(Inst::StOut {
+                    n_vec: plan.n_in as u16,
+                });
+            }
+            insts.push(Inst::Barrier);
+        }
+        insts.push(Inst::Halt);
+        program.add_stream(core, insts);
+    }
+    program
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimOptions};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default() // tp = tr = 128 at s=8, n_in=4
+    }
+
+    #[test]
+    fn validates() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 512);
+        let p = codegen(&a, &plan);
+        p.validate(a.macros_per_core).unwrap();
+    }
+
+    #[test]
+    fn single_macro_single_task_timing() {
+        let a = arch();
+        let plan = SchedulePlan {
+            tasks: 1,
+            active_macros: 1,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, SimOptions::default()).unwrap();
+        assert_eq!(r.stats.cycles, 128 + 128); // one write + one compute
+    }
+
+    #[test]
+    fn phases_never_overlap_bus_and_compute() {
+        // With enough bandwidth, in-situ's period per round is exactly
+        // tr + tp; 4 rounds on 2 macros = 4*(128+128).
+        let mut a = arch();
+        a.bandwidth = 1024;
+        let plan = SchedulePlan {
+            tasks: 8,
+            active_macros: 2,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, SimOptions::default()).unwrap();
+        assert_eq!(r.stats.cycles, 4 * 256);
+        // Bus is busy exactly during write phases: util = tr/(tr+tp) = 1/2
+        // of the time, at 2 macros * 8 B/cyc.
+        assert_eq!(r.stats.peak_bus_rate, 16);
+        assert_eq!(r.stats.bus_busy_cycles, 4 * 128);
+    }
+
+    #[test]
+    fn bus_contention_stretches_write_phase() {
+        // band=8 forces the 2 macros' writes to serialize: write phase
+        // 256 cycles, compute 128 → 4 rounds of 384.
+        let mut a = arch();
+        a.bandwidth = 8;
+        let plan = SchedulePlan {
+            tasks: 8,
+            active_macros: 2,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, SimOptions::default()).unwrap();
+        assert_eq!(r.stats.cycles, 4 * (256 + 128));
+    }
+
+    #[test]
+    fn ragged_last_round() {
+        // 3 tasks on 2 macros: round 0 full, round 1 only macro 0.
+        let a = arch();
+        let plan = SchedulePlan {
+            tasks: 3,
+            active_macros: 2,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, SimOptions::default()).unwrap();
+        assert_eq!(r.stats.writes_completed, 3);
+        assert_eq!(r.stats.vmms_completed, 3);
+        assert_eq!(r.stats.cycles, 2 * 256);
+    }
+
+    #[test]
+    fn all_cores_used_with_full_chip_plan() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 256);
+        let p = codegen(&a, &plan);
+        assert_eq!(p.streams.len(), 16);
+        let r = simulate(&a, &p, SimOptions::default()).unwrap();
+        assert_eq!(r.stats.vmms_completed, 256);
+        assert_eq!(r.stats.active_macros(), 256);
+    }
+}

@@ -1,0 +1,159 @@
+//! Intra-macro ping-pong codegen (paper §II-B, refs [22]–[26]).
+//!
+//! The second hardware realization of ping-pong: instead of pairing two
+//! macros, each macro is internally double-buffered — one partition
+//! computes batch `k` while the write port fills the other partition with
+//! tile `k+1`.  Requires [`SimOptions::allow_intra_overlap`]; the
+//! coordinator and the figure harness set it automatically via
+//! [`Strategy::requires_intra_overlap`].
+//!
+//! Timing-wise each macro behaves like a private 2-deep pipeline: period
+//! `max(tp, tr)` per task after the first fill — the same bubble math as
+//! inter-macro naive ping-pong (Eq. 1/2) but with all macros computing in
+//! parallel and no bank barrier.  Peak bus demand equals all macros
+//! writing at once, which is why the paper still groups it under "naive".
+//!
+//! [`SimOptions::allow_intra_overlap`]: crate::sim::SimOptions
+//! [`Strategy::requires_intra_overlap`]: crate::sched::Strategy::requires_intra_overlap
+
+use super::plan::{tile_id, SchedulePlan};
+use crate::arch::ArchConfig;
+use crate::isa::{Inst, Program};
+
+/// Generate the intra-macro ping-pong program: one stream per macro,
+/// write of task `k+1` overlapped with compute of task `k`.
+pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let mut program = Program::new(arch.n_cores);
+    let n_vec = plan.n_in as u16;
+    for core in 0..arch.n_cores {
+        for (pos, &m) in plan.macros_on_core(arch, core).iter().enumerate() {
+            let slot = plan.slot_of(arch, core, pos as u32);
+            let tasks: Vec<u32> = plan.tasks_of_slot(slot).collect();
+            if tasks.is_empty() {
+                continue;
+            }
+            let mut insts = vec![Inst::SetSpd {
+                speed: plan.write_speed as u16,
+            }];
+            // Fill the first partition.
+            insts.push(Inst::Wrw {
+                m,
+                tile: tile_id(tasks[0]),
+            });
+            insts.push(Inst::WaitW { m });
+            for (i, &task) in tasks.iter().enumerate() {
+                let tile = tile_id(task);
+                insts.push(Inst::LdIn { n_vec });
+                insts.push(Inst::Vmm { m, n_vec, tile });
+                // Prefetch the next tile into the other partition while
+                // this one computes.
+                if let Some(&next) = tasks.get(i + 1) {
+                    insts.push(Inst::Wrw {
+                        m,
+                        tile: tile_id(next),
+                    });
+                }
+                insts.push(Inst::WaitC { m });
+                insts.push(Inst::StOut { n_vec });
+                if i + 1 < tasks.len() {
+                    insts.push(Inst::WaitW { m });
+                }
+            }
+            insts.push(Inst::Halt);
+            program.add_stream(core, insts);
+        }
+    }
+    program
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate, SimOptions};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default() // tp = tr = 128 @ s=8, n_in=4
+    }
+
+    fn opts() -> SimOptions {
+        SimOptions {
+            allow_intra_overlap: true,
+            ..SimOptions::default()
+        }
+    }
+
+    #[test]
+    fn validates() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 128);
+        codegen(&a, &plan).validate(a.macros_per_core).unwrap();
+    }
+
+    #[test]
+    fn balanced_case_period_is_max() {
+        // tp == tr: after the 128-cycle fill, each of the 8 tasks takes
+        // max(tp, tr) = 128 cycles on one macro.
+        let mut a = arch();
+        a.bandwidth = 1024;
+        let plan = SchedulePlan {
+            tasks: 8,
+            active_macros: 1,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, opts()).unwrap();
+        assert_eq!(r.stats.cycles, 128 + 8 * 128);
+        assert_eq!(r.stats.vmms_completed, 8);
+    }
+
+    #[test]
+    fn requires_overlap_option() {
+        let a = arch();
+        let plan = SchedulePlan {
+            tasks: 4,
+            active_macros: 1,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        // Without the hardware support it is an illegal program.
+        assert!(simulate(&a, &p, SimOptions::default()).is_err());
+    }
+
+    #[test]
+    fn write_heavy_bubble_matches_eq2() {
+        // s = 1 (tr = 1024) vs tp = 128: period = 1024; compute util
+        // tends to tp / max = 1/8.
+        let mut a = arch();
+        a.bandwidth = 1024;
+        let plan = SchedulePlan {
+            tasks: 16,
+            active_macros: 1,
+            n_in: 4,
+            write_speed: 1,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, opts()).unwrap();
+        // fill 1024 + 15 write-bound periods of 1024 + final compute 128
+        assert_eq!(r.stats.cycles, 1024 + 15 * 1024 + 128);
+        let cu = r.stats.compute_utilization_active();
+        assert!((cu - 0.125).abs() < 0.02, "compute util {cu}");
+    }
+
+    #[test]
+    fn all_tasks_complete() {
+        let mut a = arch();
+        a.bandwidth = 64;
+        let plan = SchedulePlan {
+            tasks: 100,
+            active_macros: 16,
+            n_in: 4,
+            write_speed: 8,
+        };
+        let p = codegen(&a, &plan);
+        let r = simulate(&a, &p, opts()).unwrap();
+        assert_eq!(r.stats.vmms_completed, 100);
+        assert_eq!(r.stats.writes_completed, 100);
+    }
+}

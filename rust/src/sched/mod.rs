@@ -1,0 +1,143 @@
+//! The three concurrent write/compute scheduling strategies as ISA code
+//! generators (paper §II-B, §III).
+//!
+//! A strategy turns a [`SchedulePlan`] — how many macros, how many
+//! tile-tasks, what batch size and write speed — into a [`Program`] for
+//! the simulator:
+//!
+//! - [`insitu`]: one stream per core, global barriers around the
+//!   synchronized write and compute phases (Fig. 3a).
+//! - [`naive`]: one stream per core, macros split in two banks that
+//!   alternate compute/write with a barrier at each swap (Fig. 3b).
+//! - [`generalized`]: **one stream per macro**, start times staggered so
+//!   the off-chip bus sees a constant writer population (Fig. 3c) — no
+//!   barriers at all.
+//!
+//! Tile-task `t` is globally identified, and every strategy computes the
+//! same task set, so simulated execution times are directly comparable.
+//!
+//! [`Program`]: crate::isa::Program
+
+pub mod generalized;
+pub mod insitu;
+pub mod intra;
+pub mod naive;
+mod plan;
+
+pub use plan::{tile_id, SchedulePlan, ScheduleError};
+
+use crate::arch::ArchConfig;
+use crate::isa::Program;
+
+/// Strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Synchronize all macros: write phase, then compute phase (Fig. 3a).
+    InSitu,
+    /// Two banks alternate computing and rewriting (Fig. 3b).
+    NaivePingPong,
+    /// Per-macro double buffering: write one partition while the other
+    /// computes (the intra-macro realization of ping-pong, §II-B).
+    IntraMacroPingPong,
+    /// Staggered per-macro pipelining — the paper's contribution (Fig. 3c).
+    GeneralizedPingPong,
+}
+
+impl Strategy {
+    /// The paper's three-way comparison set (Fig. 3 / Fig. 6 / Fig. 7).
+    pub const ALL: [Strategy; 3] = [
+        Strategy::InSitu,
+        Strategy::NaivePingPong,
+        Strategy::GeneralizedPingPong,
+    ];
+
+    /// Every implemented strategy, including the intra-macro variant.
+    pub const ALL_EXTENDED: [Strategy; 4] = [
+        Strategy::InSitu,
+        Strategy::NaivePingPong,
+        Strategy::IntraMacroPingPong,
+        Strategy::GeneralizedPingPong,
+    ];
+
+    /// Short name used in reports and CLI arguments.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::InSitu => "insitu",
+            Strategy::NaivePingPong => "naive",
+            Strategy::IntraMacroPingPong => "intra",
+            Strategy::GeneralizedPingPong => "gpp",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "insitu" | "in-situ" | "in_situ" => Some(Strategy::InSitu),
+            "naive" | "pingpong" | "ping-pong" | "naive-pingpong" => Some(Strategy::NaivePingPong),
+            "intra" | "intra-macro" | "intra-pingpong" => Some(Strategy::IntraMacroPingPong),
+            "gpp" | "generalized" | "generalized-pingpong" => Some(Strategy::GeneralizedPingPong),
+            _ => None,
+        }
+    }
+
+    /// True if the strategy needs macros that can write one partition
+    /// while computing on the other ([`crate::sim::SimOptions::allow_intra_overlap`]).
+    pub fn requires_intra_overlap(&self) -> bool {
+        matches!(self, Strategy::IntraMacroPingPong)
+    }
+
+    /// Simulator options appropriate for this strategy.
+    pub fn sim_options(&self) -> crate::sim::SimOptions {
+        crate::sim::SimOptions {
+            allow_intra_overlap: self.requires_intra_overlap(),
+            ..crate::sim::SimOptions::default()
+        }
+    }
+
+    /// Generate the program implementing this strategy for `plan`.
+    pub fn codegen(&self, arch: &ArchConfig, plan: &SchedulePlan) -> Result<Program, ScheduleError> {
+        plan.check(arch)?;
+        Ok(match self {
+            Strategy::InSitu => insitu::codegen(arch, plan),
+            Strategy::NaivePingPong => naive::codegen(arch, plan),
+            Strategy::IntraMacroPingPong => intra::codegen(arch, plan),
+            Strategy::GeneralizedPingPong => generalized::codegen(arch, plan),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for s in Strategy::ALL_EXTENDED {
+            assert_eq!(Strategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn only_intra_needs_overlap() {
+        for s in Strategy::ALL {
+            assert!(!s.requires_intra_overlap());
+            assert!(!s.sim_options().allow_intra_overlap);
+        }
+        assert!(Strategy::IntraMacroPingPong.requires_intra_overlap());
+        assert!(Strategy::IntraMacroPingPong.sim_options().allow_intra_overlap);
+    }
+
+    #[test]
+    fn aliases_accepted() {
+        assert_eq!(Strategy::from_name("in-situ"), Some(Strategy::InSitu));
+        assert_eq!(
+            Strategy::from_name("ping-pong"),
+            Some(Strategy::NaivePingPong)
+        );
+        assert_eq!(
+            Strategy::from_name("GENERALIZED"),
+            Some(Strategy::GeneralizedPingPong)
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! The schedule plan: what to run, independent of *how* a strategy
+//! pipelines it.
+
+use crate::arch::ArchConfig;
+use thiserror::Error;
+
+/// A workload-and-resources contract shared by all strategy generators.
+///
+/// The workload is `tasks` *tile-tasks*: task `t` writes weight tile `t`
+/// into some macro and then computes `n_in` input vectors against it.
+/// Tasks are distributed round-robin over the `active_macros` in use, so
+/// every strategy does identical work and execution times compare 1:1
+/// (Fig. 6a's y-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulePlan {
+    /// Total tile-tasks to execute.
+    pub tasks: u32,
+    /// Macros used across the whole chip (≤ arch.total_macros()).
+    pub active_macros: u32,
+    /// Input vectors per task (`n_in`).
+    pub n_in: u32,
+    /// Write speed each macro programs before its rewrites, B/cycle.
+    pub write_speed: u32,
+}
+
+/// Plan validation errors.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum ScheduleError {
+    #[error("plan uses {want} macros but the chip has {have}")]
+    TooManyMacros { want: u32, have: u32 },
+    #[error("plan has zero {0}")]
+    Zero(&'static str),
+    #[error("write speed {speed} outside hardware range [{min}, {max}]")]
+    BadSpeed { speed: u32, min: u32, max: u32 },
+    #[error("batch n_in={n_in} needs {need} B of core buffer per macro; only {have} B available")]
+    BatchTooLarge { n_in: u32, need: u64, have: u64 },
+}
+
+impl SchedulePlan {
+    /// A plan that uses every macro at the architecture defaults.
+    pub fn full_chip(arch: &ArchConfig, tasks: u32) -> Self {
+        Self {
+            tasks,
+            active_macros: arch.total_macros(),
+            n_in: arch.n_in,
+            write_speed: arch.write_speed,
+        }
+    }
+
+    /// Validate against the architecture.
+    pub fn check(&self, arch: &ArchConfig) -> Result<(), ScheduleError> {
+        if self.tasks == 0 {
+            return Err(ScheduleError::Zero("tasks"));
+        }
+        if self.active_macros == 0 {
+            return Err(ScheduleError::Zero("active_macros"));
+        }
+        if self.n_in == 0 {
+            return Err(ScheduleError::Zero("n_in"));
+        }
+        if self.active_macros > arch.total_macros() {
+            return Err(ScheduleError::TooManyMacros {
+                want: self.active_macros,
+                have: arch.total_macros(),
+            });
+        }
+        if self.write_speed < arch.min_write_speed || self.write_speed > arch.max_write_speed {
+            return Err(ScheduleError::BadSpeed {
+                speed: self.write_speed,
+                min: arch.min_write_speed,
+                max: arch.max_write_speed,
+            });
+        }
+        // Buffer feasibility: concurrent batches of all active macros on a
+        // core must fit its buffer.
+        let per_core = self.macros_on_core(arch, 0).len() as u64;
+        let per_vector = arch.geom.rows as u64 + 4 * arch.geom.cols as u64;
+        let need = per_core * self.n_in as u64 * per_vector;
+        if need > arch.core_buffer_bytes {
+            return Err(ScheduleError::BatchTooLarge {
+                n_in: self.n_in,
+                need,
+                have: arch.core_buffer_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// Active macros are spread evenly across cores; returns the *local*
+    /// macro indices active on `core`.
+    ///
+    /// Cores `0..r` get `q+1` macros and the rest get `q`, where
+    /// `q = active / n_cores`, `r = active % n_cores`.
+    pub fn macros_on_core(&self, arch: &ArchConfig, core: u32) -> Vec<u8> {
+        let q = self.active_macros / arch.n_cores;
+        let r = self.active_macros % arch.n_cores;
+        let count = q + u32::from(core < r);
+        (0..count.min(arch.macros_per_core) as u8).collect()
+    }
+
+    /// Global slot index of (core, local position) among active macros —
+    /// the round-robin owner of tasks `slot, slot + A, slot + 2A, …`.
+    pub fn slot_of(&self, arch: &ArchConfig, core: u32, position: u32) -> u32 {
+        let q = self.active_macros / arch.n_cores;
+        let r = self.active_macros % arch.n_cores;
+        // Slots are assigned core-major.
+        let before = core * q + core.min(r);
+        before + position
+    }
+
+    /// Tasks owned by a given slot (round-robin over active macros).
+    pub fn tasks_of_slot(&self, slot: u32) -> impl Iterator<Item = u32> + '_ {
+        (slot..self.tasks).step_by(self.active_macros as usize)
+    }
+
+    /// Rounds needed: ceil(tasks / active_macros).
+    pub fn rounds(&self) -> u32 {
+        self.tasks.div_ceil(self.active_macros)
+    }
+}
+
+/// Globally-unique tile id of task `t` (1-based to keep 0 as "empty").
+pub fn tile_id(task: u32) -> u32 {
+    task + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default()
+    }
+
+    #[test]
+    fn full_chip_plan_valid() {
+        let p = SchedulePlan::full_chip(&arch(), 1024);
+        p.check(&arch()).unwrap();
+        assert_eq!(p.active_macros, 256);
+        assert_eq!(p.rounds(), 4);
+    }
+
+    #[test]
+    fn rejects_zero_fields() {
+        let mut p = SchedulePlan::full_chip(&arch(), 16);
+        p.tasks = 0;
+        assert_eq!(p.check(&arch()), Err(ScheduleError::Zero("tasks")));
+    }
+
+    #[test]
+    fn rejects_too_many_macros() {
+        let mut p = SchedulePlan::full_chip(&arch(), 16);
+        p.active_macros = 1000;
+        assert!(matches!(
+            p.check(&arch()),
+            Err(ScheduleError::TooManyMacros { want: 1000, have: 256 })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_speed() {
+        let mut p = SchedulePlan::full_chip(&arch(), 16);
+        p.write_speed = 0;
+        assert!(matches!(p.check(&arch()), Err(ScheduleError::BadSpeed { .. })));
+    }
+
+    #[test]
+    fn rejects_oversized_batch() {
+        let mut p = SchedulePlan::full_chip(&arch(), 16);
+        p.n_in = 10_000;
+        assert!(matches!(
+            p.check(&arch()),
+            Err(ScheduleError::BatchTooLarge { .. })
+        ));
+    }
+
+    #[test]
+    fn even_distribution_across_cores() {
+        let mut p = SchedulePlan::full_chip(&arch(), 16);
+        p.active_macros = 36; // 16 cores: 4 cores get 3, 12 get 2
+        let counts: Vec<usize> = (0..16).map(|c| p.macros_on_core(&arch(), c).len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 36);
+        assert_eq!(counts[0], 3);
+        assert_eq!(counts[3], 3);
+        assert_eq!(counts[4], 2);
+        assert_eq!(counts[15], 2);
+    }
+
+    #[test]
+    fn slots_are_a_permutation() {
+        let mut p = SchedulePlan::full_chip(&arch(), 100);
+        p.active_macros = 36;
+        let a = arch();
+        let mut slots = Vec::new();
+        for core in 0..a.n_cores {
+            for (pos, _m) in p.macros_on_core(&a, core).iter().enumerate() {
+                slots.push(p.slot_of(&a, core, pos as u32));
+            }
+        }
+        slots.sort_unstable();
+        let expect: Vec<u32> = (0..36).collect();
+        assert_eq!(slots, expect);
+    }
+
+    #[test]
+    fn round_robin_task_ownership() {
+        let mut p = SchedulePlan::full_chip(&arch(), 10);
+        p.active_macros = 4;
+        let t0: Vec<u32> = p.tasks_of_slot(0).collect();
+        let t3: Vec<u32> = p.tasks_of_slot(3).collect();
+        assert_eq!(t0, vec![0, 4, 8]);
+        assert_eq!(t3, vec![3, 7]);
+    }
+
+    #[test]
+    fn tile_ids_unique_and_nonzero() {
+        assert_eq!(tile_id(0), 1);
+        assert_ne!(tile_id(5), tile_id(6));
+    }
+}

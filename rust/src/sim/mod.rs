@@ -1,0 +1,31 @@
+//! Cycle-accurate, instruction-driven simulator of the PIM accelerator.
+//!
+//! The paper's evaluation is a clock-cycle timing simulation of a
+//! synthesizable Verilog design (§V-A); this module is the Rust equivalent
+//! substrate (DESIGN.md substitution #1).  It executes [`Program`]s from
+//! [`crate::isa`] against an [`crate::arch::ArchConfig`]:
+//!
+//! - every macro is a write/compute state machine (a macro cannot write
+//!   and compute at once — it is the same SRAM array — unless intra-macro
+//!   ping-pong is enabled);
+//! - all weight writes share the off-chip bus, arbitrated FIFO per cycle
+//!   with a per-writer speed cap `s` and a global cap `band.`;
+//! - instruction streams issue asynchronous `wrw`/`vmm` operations and
+//!   block on `waitw`/`waitc`/`bar`/`delay`.
+//!
+//! The engine is *event-accelerated*: between state-change events every
+//! active operation progresses at a constant rate, so the simulator jumps
+//! directly to the next completion instead of stepping single cycles.  All
+//! reported quantities are exact cycle counts, identical to a naive
+//! per-cycle loop (tested against one in `tests/`).
+//!
+//! [`Program`]: crate::isa::Program
+
+mod engine;
+mod stats;
+pub mod trace;
+pub mod vcd;
+
+pub use engine::{simulate, Engine, SimError, SimOptions, SimResult};
+pub use stats::SimStats;
+pub use trace::{OpKind, OpRecord};

@@ -1,0 +1,196 @@
+//! Aggregated simulation statistics — the quantities the paper's figures
+//! plot: execution cycles, off-chip bandwidth utilization (Fig. 7c), macro
+//! utilization (Fig. 4, Fig. 7d), on-chip result-memory utilization
+//! (Fig. 7b) and peak bandwidth demand (Fig. 3 discussion).
+
+/// Exact counters accumulated by the engine.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Total execution time in cycles.
+    pub cycles: u64,
+    /// Cycles during which at least one byte crossed the off-chip bus.
+    pub bus_busy_cycles: u64,
+    /// Total bytes moved over the off-chip bus.
+    pub bus_bytes: u64,
+    /// Peak bus occupancy observed, bytes/cycle.
+    pub peak_bus_rate: u64,
+    /// Per-macro cycles spent actively writing (bus rate > 0).
+    pub macro_write_cycles: Vec<u64>,
+    /// Per-macro cycles spent computing.
+    pub macro_compute_cycles: Vec<u64>,
+    /// Completed weight writes.
+    pub writes_completed: u64,
+    /// Completed VMM batches.
+    pub vmms_completed: u64,
+    /// Total input vectors processed across all VMMs.
+    pub vectors_computed: u64,
+    /// Per-core ∫ buffer-occupancy dt (bytes·cycles).
+    pub buffer_integral: Vec<u128>,
+    /// Per-core peak buffer occupancy in bytes.
+    pub buffer_peak: Vec<u64>,
+}
+
+impl SimStats {
+    pub(crate) fn new(n_macros: usize, n_cores: usize) -> Self {
+        Self {
+            macro_write_cycles: vec![0; n_macros],
+            macro_compute_cycles: vec![0; n_macros],
+            buffer_integral: vec![0; n_cores],
+            buffer_peak: vec![0; n_cores],
+            ..Self::default()
+        }
+    }
+
+    /// Off-chip bandwidth utilization: bytes moved / (band × cycles).
+    pub fn bandwidth_utilization(&self, bandwidth: u64) -> f64 {
+        if self.cycles == 0 || bandwidth == 0 {
+            return 0.0;
+        }
+        self.bus_bytes as f64 / (bandwidth as f64 * self.cycles as f64)
+    }
+
+    /// Fraction of cycles the bus moved at least one byte.
+    pub fn bus_busy_fraction(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.bus_busy_cycles as f64 / self.cycles as f64
+    }
+
+    /// Macros that performed at least one cycle of work.
+    pub fn active_macros(&self) -> usize {
+        self.macro_write_cycles
+            .iter()
+            .zip(&self.macro_compute_cycles)
+            .filter(|(w, c)| **w + **c > 0)
+            .count()
+    }
+
+    /// Average utilization over *active* macros: (write+compute)/cycles
+    /// (the paper's Fig. 7d metric — macros the strategy turned off do not
+    /// dilute the average).
+    pub fn macro_utilization_active(&self) -> f64 {
+        let active = self.active_macros();
+        if active == 0 || self.cycles == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self
+            .macro_write_cycles
+            .iter()
+            .zip(&self.macro_compute_cycles)
+            .map(|(w, c)| w + c)
+            .sum();
+        busy as f64 / (active as f64 * self.cycles as f64)
+    }
+
+    /// Average utilization over all chip macros.
+    pub fn macro_utilization_total(&self) -> f64 {
+        let n = self.macro_write_cycles.len();
+        if n == 0 || self.cycles == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self
+            .macro_write_cycles
+            .iter()
+            .zip(&self.macro_compute_cycles)
+            .map(|(w, c)| w + c)
+            .sum();
+        busy as f64 / (n as f64 * self.cycles as f64)
+    }
+
+    /// Average *compute-only* utilization over active macros — the share
+    /// of time doing useful VMM work (distinguishes GPP's 100% activity
+    /// from activity that is mostly stalled rewrites).
+    pub fn compute_utilization_active(&self) -> f64 {
+        let active = self.active_macros();
+        if active == 0 || self.cycles == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.macro_compute_cycles.iter().sum();
+        busy as f64 / (active as f64 * self.cycles as f64)
+    }
+
+    /// Time-averaged on-chip buffer occupancy as a fraction of capacity,
+    /// averaged over cores that used their buffer at all (Fig. 7b).
+    pub fn buffer_utilization(&self, capacity_bytes: u64) -> f64 {
+        if self.cycles == 0 || capacity_bytes == 0 {
+            return 0.0;
+        }
+        let used: Vec<&u128> = self
+            .buffer_integral
+            .iter()
+            .filter(|v| **v > 0)
+            .collect();
+        if used.is_empty() {
+            return 0.0;
+        }
+        let denom = capacity_bytes as f64 * self.cycles as f64 * used.len() as f64;
+        used.into_iter().map(|v| *v as f64).sum::<f64>() / denom
+    }
+
+    /// Aggregate throughput in vectors per kilocycle (higher = faster for
+    /// a fixed workload; used for the normalized-performance figures).
+    pub fn vectors_per_kcycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.vectors_computed as f64 * 1000.0 / self.cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> SimStats {
+        let mut s = SimStats::new(4, 2);
+        s.cycles = 100;
+        s.bus_busy_cycles = 50;
+        s.bus_bytes = 400;
+        s.macro_write_cycles = vec![20, 20, 0, 0];
+        s.macro_compute_cycles = vec![60, 60, 0, 0];
+        s.buffer_integral = vec![50_000, 0];
+        s.buffer_peak = vec![1000, 0];
+        s.vectors_computed = 32;
+        s
+    }
+
+    #[test]
+    fn bandwidth_utilization() {
+        // 400 bytes / (8 B/cyc * 100 cyc) = 0.5
+        assert!((stats().bandwidth_utilization(8) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn macro_utilization_counts_only_active() {
+        let s = stats();
+        assert_eq!(s.active_macros(), 2);
+        assert!((s.macro_utilization_active() - 0.8).abs() < 1e-12);
+        assert!((s.macro_utilization_total() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_utilization() {
+        assert!((stats().compute_utilization_active() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buffer_utilization_ignores_unused_cores() {
+        // 50_000 / (1000 B * 100 cyc * 1 used core) = 0.5
+        assert!((stats().buffer_utilization(1000) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cycles_safe() {
+        let s = SimStats::new(1, 1);
+        assert_eq!(s.bandwidth_utilization(8), 0.0);
+        assert_eq!(s.macro_utilization_active(), 0.0);
+        assert_eq!(s.buffer_utilization(100), 0.0);
+        assert_eq!(s.vectors_per_kcycle(), 0.0);
+    }
+
+    #[test]
+    fn vectors_per_kcycle() {
+        assert!((stats().vectors_per_kcycle() - 320.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,141 @@
+//! Operation timeline records: the simulator's "waveform".
+//!
+//! When enabled ([`crate::sim::SimOptions::record_op_log`]) every completed
+//! weight write and VMM batch is logged with exact start/end cycles.  The
+//! coordinator consumes the VMM records to drive the functional numerics,
+//! tests use them to assert pipeline shapes (stagger offsets, bubble
+//! lengths), and `to_timeline_ascii` renders a human-readable Gantt chart
+//! like the paper's Fig. 3.
+
+/// Kind of a logged macro operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// Full-macro weight rewrite (occupied the off-chip bus).
+    Write,
+    /// VMM compute batch.
+    Compute,
+}
+
+/// One completed macro operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpRecord {
+    pub kind: OpKind,
+    /// Core index on the chip.
+    pub core: u32,
+    /// Macro index within the core.
+    pub macro_id: u32,
+    /// Weight tile involved.
+    pub tile: u32,
+    /// Vectors computed (0 for writes).
+    pub n_vec: u16,
+    /// First cycle of the operation.
+    pub start: u64,
+    /// One past the last cycle (end - start = duration).
+    pub end: u64,
+}
+
+impl OpRecord {
+    /// Operation duration in cycles.
+    pub fn duration(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// Global macro index given the per-core macro count.
+    pub fn global_macro(&self, macros_per_core: u32) -> u32 {
+        self.core * macros_per_core + self.macro_id
+    }
+}
+
+/// Render an ASCII Gantt chart of the first `max_macros` macros over the
+/// first `max_cycles` cycles, one row per macro: `W` writing, `C`
+/// computing, `.` idle.  `scale` cycles per character column.
+pub fn to_timeline_ascii(
+    records: &[OpRecord],
+    macros_per_core: u32,
+    max_macros: usize,
+    max_cycles: u64,
+    scale: u64,
+) -> String {
+    let scale = scale.max(1);
+    let cols = (max_cycles / scale) as usize + 1;
+    let n = records
+        .iter()
+        .map(|r| r.global_macro(macros_per_core) as usize + 1)
+        .max()
+        .unwrap_or(0)
+        .min(max_macros);
+    let mut rows = vec![vec![b'.'; cols]; n];
+    for r in records {
+        let g = r.global_macro(macros_per_core) as usize;
+        if g >= n || r.start >= max_cycles {
+            continue;
+        }
+        let ch = match r.kind {
+            OpKind::Write => b'W',
+            OpKind::Compute => b'C',
+        };
+        let c0 = (r.start / scale) as usize;
+        let c1 = ((r.end.min(max_cycles).saturating_sub(1)) / scale) as usize;
+        for c in c0..=c1.min(cols - 1) {
+            rows[g][c] = ch;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("m{i:03} |"));
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(kind: OpKind, macro_id: u32, start: u64, end: u64) -> OpRecord {
+        OpRecord {
+            kind,
+            core: 0,
+            macro_id,
+            tile: 0,
+            n_vec: 0,
+            start,
+            end,
+        }
+    }
+
+    #[test]
+    fn duration_and_global_index() {
+        let r = OpRecord {
+            kind: OpKind::Write,
+            core: 2,
+            macro_id: 3,
+            tile: 9,
+            n_vec: 0,
+            start: 10,
+            end: 138,
+        };
+        assert_eq!(r.duration(), 128);
+        assert_eq!(r.global_macro(16), 35);
+    }
+
+    #[test]
+    fn ascii_timeline_marks_phases() {
+        let recs = vec![
+            rec(OpKind::Write, 0, 0, 4),
+            rec(OpKind::Compute, 0, 4, 12),
+            rec(OpKind::Write, 1, 4, 8),
+        ];
+        let art = to_timeline_ascii(&recs, 16, 8, 12, 1);
+        let lines: Vec<&str> = art.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("WWWWCCCCCCCC"));
+        assert!(lines[1].contains("....WWWW"));
+    }
+
+    #[test]
+    fn ascii_timeline_empty() {
+        assert_eq!(to_timeline_ascii(&[], 16, 8, 100, 10), "");
+    }
+}

@@ -1,0 +1,158 @@
+//! Minimal CSV writer for figure/table data dumps (no `serde` offline).
+//!
+//! Every benchmark harness writes its series both as an ASCII table to
+//! stdout and as CSV next to the bench output so figures can be re-plotted.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    /// Start a table with the given column names.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows have been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Push one row; panics if the column count disagrees with the header
+    /// (a programming error in the harness, not a data error).
+    pub fn push_row<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "CSV row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Render to CSV text (RFC-4180-ish: quote fields containing , " \n).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let emit = |out: &mut String, fields: &[String]| {
+            let mut first = true;
+            for f in fields {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    let escaped = f.replace('"', "\"\"");
+                    let _ = write!(out, "\"{escaped}\"");
+                } else {
+                    out.push_str(f);
+                }
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.header);
+        for row in &self.rows {
+            emit(&mut out, row);
+        }
+        out
+    }
+
+    /// Write the CSV to a file, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Render as an aligned ASCII table for terminal output.
+    pub fn to_ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut out = String::new();
+        let emit = |out: &mut String, fields: &[String], widths: &[usize]| {
+            for (i, f) in fields.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", f, w = widths[i]);
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.header, &widths);
+        let total: usize = widths.iter().map(|w| w + 2).sum();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            emit(&mut out, row, &widths);
+        }
+        out
+    }
+}
+
+/// Format a float with a fixed number of decimals (helper for harnesses).
+pub fn fmt_f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push_row(vec!["1", "2"]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quotes_special_fields() {
+        let mut t = CsvTable::new(vec!["a"]);
+        t.push_row(vec!["x,y"]);
+        t.push_row(vec!["say \"hi\""]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "CSV row width")]
+    fn rejects_ragged_rows() {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push_row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn ascii_alignment() {
+        let mut t = CsvTable::new(vec!["name", "v"]);
+        t.push_row(vec!["x", "10"]);
+        t.push_row(vec!["longer", "7"]);
+        let a = t.to_ascii();
+        assert!(a.contains("name"));
+        assert!(a.lines().count() >= 4);
+    }
+
+    #[test]
+    fn fmt_f_decimals() {
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+    }
+}

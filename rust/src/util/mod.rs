@@ -1,0 +1,49 @@
+//! Small self-contained utilities: deterministic RNG (for property tests
+//! and workload generation), CSV emission, and float helpers.
+//!
+//! This environment has no network access, so `rand`, `proptest`,
+//! `criterion` and `serde` are unavailable — these modules provide the
+//! small slices of them the crate needs.
+
+pub mod csv;
+pub mod rng;
+
+/// Round-half-up division for integer cycle math: `ceil(a / b)`.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Relative difference `|a-b| / max(|a|,|b|,eps)` for model-vs-sim checks.
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_exact() {
+        assert_eq!(div_ceil(8, 4), 2);
+    }
+
+    #[test]
+    fn div_ceil_rounds_up() {
+        assert_eq!(div_ceil(9, 4), 3);
+        assert_eq!(div_ceil(1, 4), 1);
+    }
+
+    #[test]
+    fn div_ceil_zero_numerator() {
+        assert_eq!(div_ceil(0, 4), 0);
+    }
+
+    #[test]
+    fn rel_err_symmetric() {
+        assert!((rel_err(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(rel_err(3.0, 3.0), 0.0);
+    }
+}

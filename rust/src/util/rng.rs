@@ -1,0 +1,129 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! Drives the hand-rolled property tests (no `proptest` offline) and the
+//! synthetic int8 weight/activation generation for the numerics path.
+//! Deterministic seeding keeps every test and experiment reproducible.
+
+/// xorshift64* generator — tiny, fast, and good enough for test-case
+/// generation (not cryptographic).
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator from a non-zero seed (zero is mapped away).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be > 0.
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Modulo bias is irrelevant for test-case generation.
+        self.next_u64() % bound
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + self.next_below(span) as i64
+    }
+
+    /// A value on the int8 grid as f32, i.e. an integer in [-128, 127].
+    pub fn int8_f32(&mut self) -> f32 {
+        self.range_i64(-128, 127) as f32
+    }
+
+    /// Fill a vector with int8-grid f32 values.
+    pub fn int8_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.int8_f32()).collect()
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut a = XorShift64::new(0);
+        assert_ne!(a.next_u64(), 0);
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut r = XorShift64::new(7);
+        for _ in 0..1000 {
+            let v = r.range_i64(-5, 5);
+            assert!((-5..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn int8_grid_values() {
+        let mut r = XorShift64::new(9);
+        for v in r.int8_vec(1000) {
+            assert!((-128.0..=127.0).contains(&v));
+            assert_eq!(v.fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_hits_extremes() {
+        let mut r = XorShift64::new(11);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..10_000 {
+            match r.range_i64(0, 3) {
+                0 => saw_lo = true,
+                3 => saw_hi = true,
+                _ => {}
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration: the ISA toolchain round-trips — strategy codegen output
+//! survives disassemble→assemble and encode→decode unchanged, including
+//! randomized programs (hand-rolled property tests, deterministic seeds).
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::isa::{assemble, decode_program, disassemble, encode_program, Inst, Program};
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::util::rng::XorShift64;
+
+#[test]
+fn strategy_programs_roundtrip_text() {
+    let arch = ArchConfig::paper_default();
+    let plan = SchedulePlan {
+        tasks: 48,
+        active_macros: 24,
+        n_in: 4,
+        write_speed: 8,
+    };
+    for strategy in Strategy::ALL {
+        let program = strategy.codegen(&arch, &plan).unwrap();
+        let text = disassemble(&program);
+        let back = assemble(&text).unwrap();
+        assert_eq!(back, program, "{strategy:?} text roundtrip");
+    }
+}
+
+#[test]
+fn strategy_programs_roundtrip_binary() {
+    let arch = ArchConfig::paper_default();
+    let plan = SchedulePlan {
+        tasks: 31, // ragged on purpose
+        active_macros: 7,
+        n_in: 3,
+        write_speed: 5,
+    };
+    for strategy in Strategy::ALL {
+        let program = strategy.codegen(&arch, &plan).unwrap();
+        let words = encode_program(&program);
+        let back = decode_program(&words).unwrap();
+        assert_eq!(back, program, "{strategy:?} binary roundtrip");
+    }
+}
+
+fn random_inst(rng: &mut XorShift64) -> Inst {
+    match rng.next_below(10) {
+        0 => Inst::SetSpd {
+            speed: rng.range_i64(1, 8) as u16,
+        },
+        1 => Inst::Delay {
+            cycles: rng.range_i64(0, 10_000) as u32,
+        },
+        2 => Inst::Wrw {
+            m: rng.range_i64(0, 15) as u8,
+            tile: rng.range_i64(0, 1 << 20) as u32,
+        },
+        3 => Inst::Vmm {
+            m: rng.range_i64(0, 15) as u8,
+            n_vec: rng.range_i64(1, 64) as u16,
+            tile: rng.range_i64(0, 1 << 20) as u32,
+        },
+        4 => Inst::WaitW {
+            m: rng.range_i64(0, 15) as u8,
+        },
+        5 => Inst::WaitC {
+            m: rng.range_i64(0, 15) as u8,
+        },
+        6 => Inst::LdIn {
+            n_vec: rng.range_i64(1, 64) as u16,
+        },
+        7 => Inst::StOut {
+            n_vec: rng.range_i64(1, 64) as u16,
+        },
+        8 => Inst::Barrier,
+        _ => Inst::Halt,
+    }
+}
+
+/// Property: arbitrary (even invalid-to-execute) programs round-trip the
+/// encoders byte-exactly.
+#[test]
+fn random_programs_roundtrip_binary_and_text() {
+    let mut rng = XorShift64::new(0xA11CE);
+    for case in 0..50 {
+        let n_streams = rng.range_i64(1, 6) as usize;
+        let mut program = Program::new(16);
+        for _ in 0..n_streams {
+            let core = rng.range_i64(0, 15) as u32;
+            let len = rng.range_i64(1, 40) as usize;
+            let mut insts: Vec<Inst> = (0..len).map(|_| random_inst(&mut rng)).collect();
+            // Strip structure-breaking loop tokens, then close with halt:
+            // loops are exercised separately below.
+            insts.retain(|i| !matches!(i, Inst::Loop { .. } | Inst::EndLoop));
+            insts.push(Inst::Halt);
+            program.add_stream(core, insts);
+        }
+        let words = encode_program(&program);
+        assert_eq!(decode_program(&words).unwrap(), program, "case {case} binary");
+        let text = disassemble(&program);
+        assert_eq!(assemble(&text).unwrap(), program, "case {case} text");
+    }
+}
+
+/// Property: random *balanced* loop nests round-trip and validate.
+#[test]
+fn random_loop_nests_roundtrip() {
+    let mut rng = XorShift64::new(0xB0B);
+    for case in 0..30 {
+        let mut insts = Vec::new();
+        let depth_budget = rng.range_i64(1, 4);
+        fn emit(rng: &mut XorShift64, insts: &mut Vec<Inst>, depth: i64) {
+            let body = rng.range_i64(1, 4);
+            for _ in 0..body {
+                if depth > 0 && rng.next_below(2) == 0 {
+                    insts.push(Inst::Loop {
+                        count: rng.range_i64(1, 5) as u32,
+                    });
+                    emit(rng, insts, depth - 1);
+                    insts.push(Inst::EndLoop);
+                } else {
+                    insts.push(Inst::Delay {
+                        cycles: rng.range_i64(1, 10) as u32,
+                    });
+                }
+            }
+        }
+        emit(&mut rng, &mut insts, depth_budget);
+        insts.push(Inst::Halt);
+        let mut program = Program::new(1);
+        program.add_stream(0, insts);
+        program.validate(16).unwrap();
+        let text = disassemble(&program);
+        assert_eq!(assemble(&text).unwrap(), program, "case {case}");
+        let words = encode_program(&program);
+        assert_eq!(decode_program(&words).unwrap(), program, "case {case}");
+    }
+}
+
+/// The disassembly of strategy output is human-plausible: has directives,
+/// indentation, and one line per instruction.
+#[test]
+fn disassembly_is_structured() {
+    let arch = ArchConfig::paper_default();
+    let plan = SchedulePlan {
+        tasks: 8,
+        active_macros: 4,
+        n_in: 4,
+        write_speed: 8,
+    };
+    let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+    let text = disassemble(&program);
+    assert!(text.starts_with(".cores 16"));
+    assert_eq!(
+        text.matches(".stream").count(),
+        program.streams.len(),
+        "one directive per stream"
+    );
+    let inst_lines = text
+        .lines()
+        .filter(|l| !l.trim_start().starts_with('.') && !l.trim().is_empty())
+        .count();
+    assert_eq!(inst_lines, program.len());
+}

@@ -1,0 +1,221 @@
+//! Integration: the analytical model (paper Eqs. 1–9, "theory") against
+//! the cycle-accurate simulator ("practice") across randomized
+//! configurations — the same agreement the paper demonstrates in Table II,
+//! checked as properties with a deterministic RNG (no proptest offline).
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::model::eqs;
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sim::{simulate, SimOptions};
+use gpp_pim::util::rng::XorShift64;
+
+fn sim_cycles(arch: &ArchConfig, strategy: Strategy, plan: &SchedulePlan) -> u64 {
+    let program = strategy.codegen(arch, plan).expect("codegen");
+    simulate(arch, &program, SimOptions::default())
+        .expect("simulate")
+        .stats
+        .cycles
+}
+
+/// Random (s, n_in) working points with ample bandwidth.
+fn random_points(seed: u64, count: usize) -> Vec<(u32, u32)> {
+    let mut rng = XorShift64::new(seed);
+    (0..count)
+        .map(|_| {
+            let s = rng.range_i64(1, 8) as u32;
+            let n_in = rng.range_i64(1, 16) as u32;
+            (s, n_in)
+        })
+        .collect()
+}
+
+#[test]
+fn naive_utilization_matches_eq1_eq2() {
+    // Long steady-state naive ping-pong runs hit the Eq. 1/2 utilization
+    // within the startup/drain tail for every random working point.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 4096;
+    arch.core_buffer_bytes = 1 << 22;
+    for (s, n_in) in random_points(11, 12) {
+        let plan = SchedulePlan {
+            tasks: 128,
+            active_macros: 2,
+            n_in,
+            write_speed: s,
+        };
+        let program = Strategy::NaivePingPong.codegen(&arch, &plan).unwrap();
+        let stats = simulate(&arch, &program, SimOptions::default())
+            .unwrap()
+            .stats;
+        let tp = arch.time_pim_at(n_in) as f64;
+        let tr = arch.time_rewrite_at(s) as f64;
+        let model = eqs::naive_pingpong_util(tp, tr);
+        let sim = stats.macro_utilization_active();
+        assert!(
+            (model - sim).abs() < 0.06,
+            "s={s} n_in={n_in}: model {model:.3} vs sim {sim:.3}"
+        );
+    }
+}
+
+#[test]
+fn gpp_macro_utilization_is_full() {
+    // GPP never idles a macro (modulo startup stagger + final drain).
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 4096;
+    arch.core_buffer_bytes = 1 << 22;
+    for (s, n_in) in random_points(13, 10) {
+        let plan = SchedulePlan {
+            tasks: 256,
+            active_macros: 4,
+            n_in,
+            write_speed: s,
+        };
+        let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+        let stats = simulate(&arch, &program, SimOptions::default())
+            .unwrap()
+            .stats;
+        let util = stats.macro_utilization_active();
+        assert!(util > 0.93, "s={s} n_in={n_in}: util {util:.3}");
+    }
+}
+
+#[test]
+fn insitu_period_is_exactly_tr_plus_tp() {
+    // With bandwidth >= active*s the in-situ round takes tr + tp exactly.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 1 << 16;
+    arch.core_buffer_bytes = 1 << 22;
+    for (s, n_in) in random_points(17, 10) {
+        let plan = SchedulePlan {
+            tasks: 64,
+            active_macros: 16,
+            n_in,
+            write_speed: s,
+        };
+        let rounds = plan.tasks.div_ceil(plan.active_macros) as u64;
+        let expect = rounds * (arch.time_rewrite_at(s) + arch.time_pim_at(n_in));
+        let got = sim_cycles(&arch, Strategy::InSitu, &plan);
+        assert_eq!(got, expect, "s={s} n_in={n_in}");
+    }
+}
+
+#[test]
+fn strategy_ordering_compute_heavy() {
+    // tp > tr with bandwidth at the GPP average: gpp <= naive <= insitu
+    // (the Fig. 6 left half), across random compute-heavy points.
+    let mut rng = XorShift64::new(23);
+    for _ in 0..8 {
+        let n_in = rng.range_i64(8, 32) as u32; // tp = 32*n_in >= 256
+        let s = 8u32; // tr = 128
+        let mut arch = ArchConfig::paper_default();
+        arch.core_buffer_bytes = 1 << 22;
+        let active = 16u32;
+        let tp = arch.time_pim_at(n_in) as f64;
+        let tr = arch.time_rewrite_at(s) as f64;
+        // Bandwidth that exactly sustains GPP's staggered writes.
+        arch.bandwidth = ((active as f64) * tr / (tp + tr) * s as f64).ceil() as u64;
+        let plan = SchedulePlan {
+            tasks: 256,
+            active_macros: active,
+            n_in,
+            write_speed: s,
+        };
+        let gpp = sim_cycles(&arch, Strategy::GeneralizedPingPong, &plan);
+        let naive = sim_cycles(&arch, Strategy::NaivePingPong, &plan);
+        let insitu = sim_cycles(&arch, Strategy::InSitu, &plan);
+        assert!(gpp <= naive + naive / 20, "n_in={n_in}: gpp {gpp} naive {naive}");
+        assert!(naive <= insitu + insitu / 20, "n_in={n_in}: naive {naive} insitu {insitu}");
+    }
+}
+
+#[test]
+fn all_strategies_complete_all_work() {
+    // Conservation: every strategy computes exactly the planned vectors
+    // and writes exactly tasks * size_macro bytes.
+    let mut rng = XorShift64::new(31);
+    for _ in 0..10 {
+        let mut arch = ArchConfig::paper_default();
+        arch.core_buffer_bytes = 1 << 22;
+        arch.bandwidth = 1 << rng.range_i64(3, 10) as u64;
+        let plan = SchedulePlan {
+            tasks: rng.range_i64(1, 300) as u32,
+            active_macros: rng.range_i64(1, 64) as u32,
+            n_in: rng.range_i64(1, 12) as u32,
+            write_speed: rng.range_i64(1, 8) as u32,
+        };
+        for strategy in Strategy::ALL {
+            let program = strategy.codegen(&arch, &plan).unwrap();
+            let stats = simulate(&arch, &program, SimOptions::default())
+                .unwrap()
+                .stats;
+            assert_eq!(stats.vmms_completed, plan.tasks as u64, "{strategy:?} {plan:?}");
+            assert_eq!(
+                stats.vectors_computed,
+                plan.tasks as u64 * plan.n_in as u64,
+                "{strategy:?}"
+            );
+            assert_eq!(
+                stats.bus_bytes,
+                plan.tasks as u64 * arch.geom.size_macro(),
+                "{strategy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gpp_peak_bandwidth_below_insitu() {
+    // Fig. 3's point: GPP's peak bus demand is a fraction of in-situ's.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 4096; // ample so peaks are strategy-intrinsic
+    arch.core_buffer_bytes = 1 << 22;
+    let plan = SchedulePlan {
+        tasks: 128,
+        active_macros: 16,
+        n_in: 12, // tp = 3 tr
+        write_speed: 8,
+    };
+    let peak = |s: Strategy| {
+        let program = s.codegen(&arch, &plan).unwrap();
+        simulate(&arch, &program, SimOptions::default())
+            .unwrap()
+            .stats
+            .peak_bus_rate
+    };
+    let gpp = peak(Strategy::GeneralizedPingPong);
+    let naive = peak(Strategy::NaivePingPong);
+    let insitu = peak(Strategy::InSitu);
+    assert!(gpp < naive, "gpp {gpp} naive {naive}");
+    assert!(naive <= insitu, "naive {naive} insitu {insitu}");
+    // tr/(tp+tr) = 1/4 of the macros write at once: peak = 4 * 8 = 32,
+    // plus at most one extra writer during phase boundaries.
+    assert!(gpp <= 5 * 8, "gpp peak {gpp}");
+    assert_eq!(insitu, 16 * 8);
+}
+
+#[test]
+fn eq4_bandwidth_sizing_saturates_bus() {
+    // Size the macro count by Eq. 4, give exactly `band`: the simulated
+    // bus utilization should be ~100% during the steady state.
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 22;
+    arch.bandwidth = 32;
+    let (s, n_in) = (8u32, 12u32); // tr=128, tp=384
+    let tp = arch.time_pim_at(n_in) as f64;
+    let tr = arch.time_rewrite_at(s) as f64;
+    let active = eqs::num_macros_gpp(tp, tr, arch.bandwidth as f64, s as f64).round() as u32;
+    assert_eq!(active, 16);
+    let plan = SchedulePlan {
+        tasks: 512,
+        active_macros: active,
+        n_in,
+        write_speed: s,
+    };
+    let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+    let stats = simulate(&arch, &program, SimOptions::default())
+        .unwrap()
+        .stats;
+    let util = stats.bandwidth_utilization(arch.bandwidth);
+    assert!(util > 0.90, "bus util {util:.3}");
+}

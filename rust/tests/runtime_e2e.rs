@@ -1,0 +1,176 @@
+//! Integration: the PJRT runtime and the full three-layer numerics path.
+//!
+//! These tests need the AOT artifacts (`make artifacts`).  When the
+//! artifacts are missing they no-op with a loud eprintln rather than fail,
+//! so `cargo test` stays green on a fresh checkout; CI runs
+//! `make artifacts` first and gets the full coverage.
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::coordinator::{ou_sweep_vmm, Coordinator, RunConfig};
+use gpp_pim::gemm::{blas, reference, GemmOp, Workload};
+use gpp_pim::runtime::Runtime;
+use gpp_pim::sched::Strategy;
+use gpp_pim::util::rng::XorShift64;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn runtime() -> Option<Runtime> {
+    if !Runtime::available(ARTIFACTS) {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(ARTIFACTS).expect("runtime"))
+}
+
+#[test]
+fn macro_vmm_artifact_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = XorShift64::new(0xE2E);
+    for n_vec in [1usize, 4, 7, 8, 11, 16] {
+        let x = rng.int8_vec(n_vec * 32);
+        let w = rng.int8_vec(1024);
+        let got = rt.macro_vmm(&x, &w, n_vec).expect("macro_vmm");
+        let want = reference::gemm(&x, &w, n_vec, 32, 32);
+        assert_eq!(got, want, "n_vec={n_vec}: PJRT != reference");
+    }
+}
+
+#[test]
+fn macro_vmm_artifact_matches_ou_model() {
+    // L1 Pallas kernel (via HLO) == the Rust OU-sweep model: the same
+    // dataflow expressed twice must agree bit-for-bit.
+    let Some(mut rt) = runtime() else { return };
+    let arch = ArchConfig::paper_default();
+    let mut rng = XorShift64::new(0x0CEA);
+    for _ in 0..5 {
+        let x = rng.int8_vec(8 * 32);
+        let w = rng.int8_vec(1024);
+        let pjrt = rt.macro_vmm(&x, &w, 8).unwrap();
+        let local = ou_sweep_vmm(&arch, &x, &w, 8);
+        assert_eq!(pjrt, local);
+    }
+}
+
+#[test]
+fn gemm_artifact_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = XorShift64::new(0x6E33);
+    let x = rng.int8_vec(16 * 128);
+    let w = rng.int8_vec(128 * 128);
+    let got = rt
+        .execute("gemm_16x128x128", &[(&x, &[16, 128]), (&w, &[128, 128])])
+        .expect("gemm artifact");
+    let want = reference::gemm(&x, &w, 16, 128, 128);
+    assert_eq!(got, want, "L2 macro-tiled GeMM != reference");
+}
+
+#[test]
+fn ffn_artifact_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = XorShift64::new(0xFF9);
+    let x = rng.int8_vec(16 * 64);
+    let w1 = rng.int8_vec(64 * 128);
+    let w2 = rng.int8_vec(128 * 64);
+    let got = rt
+        .execute(
+            "ffn_16x64x128",
+            &[(&x, &[16, 64]), (&w1, &[64, 128]), (&w2, &[128, 64])],
+        )
+        .expect("ffn artifact");
+    let want = reference::ffn(&x, &w1, &w2, 16, 64, 128, 64, 7);
+    assert_eq!(got, want, "L2 FFN chain != reference");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(mut rt) = runtime() else { return };
+    let x = vec![0.0f32; 8 * 32];
+    let w = vec![0.0f32; 1024];
+    assert_eq!(rt.compiled_count(), 0);
+    rt.macro_vmm(&x, &w, 8).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.macro_vmm(&x, &w, 8).unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second call must hit the cache");
+}
+
+#[test]
+fn manifest_shape_mismatch_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let x = vec![0.0f32; 4 * 32];
+    let w = vec![0.0f32; 1024];
+    // macro_vmm_8 expects (8,32): feeding (4,32) must fail fast.
+    let err = rt
+        .execute("macro_vmm_8", &[(&x, &[4, 32]), (&w, &[32, 32])])
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn coordinator_numerics_via_pjrt_exact() {
+    if !Runtime::available(ARTIFACTS) {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        return;
+    }
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 20;
+    let mut coord = Coordinator::with_runtime(arch, ARTIFACTS).expect("coordinator");
+    let workload = blas::transformer_ffn(8, 64, 128, 1);
+    for strategy in Strategy::ALL {
+        let cfg = RunConfig {
+            check_numerics: true,
+            n_in: 8,
+            ..RunConfig::from_arch(&coord.arch, strategy)
+        };
+        let report = coord.run(&workload, &cfg).expect("run");
+        let numerics = report.numerics.expect("numerics requested");
+        assert!(numerics.via_pjrt, "must use the PJRT path");
+        assert_eq!(
+            numerics.max_abs_err, 0.0,
+            "{strategy:?}: int8-grid GeMM must be exact"
+        );
+    }
+}
+
+#[test]
+fn coordinator_numerics_ragged_shapes_via_pjrt() {
+    if !Runtime::available(ARTIFACTS) {
+        eprintln!("[skip] artifacts missing — run `make artifacts`");
+        return;
+    }
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 20;
+    let mut coord = Coordinator::with_runtime(arch, ARTIFACTS).expect("coordinator");
+    // Deliberately awkward shapes: padding paths on every axis.
+    let workload = Workload::new(
+        "ragged",
+        vec![
+            GemmOp { m: 5, k: 45, n: 70 },
+            GemmOp { m: 3, k: 100, n: 17 },
+        ],
+    );
+    let cfg = RunConfig {
+        check_numerics: true,
+        n_in: 4,
+        ..RunConfig::from_arch(&coord.arch, Strategy::GeneralizedPingPong)
+    };
+    let report = coord.run(&workload, &cfg).expect("run");
+    assert_eq!(report.numerics.unwrap().max_abs_err, 0.0);
+}
+
+#[test]
+fn fused_requant_artifact_matches_reference() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = XorShift64::new(0xF0F0);
+    let x = rng.int8_vec(8 * 32);
+    let w = rng.int8_vec(1024);
+    let got = rt
+        .execute(
+            "macro_vmm_requant_8",
+            &[(&x, &[8, 32]), (&w, &[32, 32])],
+        )
+        .expect("fused artifact");
+    // Unfused reference composition: requant(gemm(x, w), shift = 7).
+    let acc = reference::gemm(&x, &w, 8, 32, 32);
+    let want = reference::requant(&acc, 7);
+    assert_eq!(got, want, "fused requant-VMM != reference composition");
+}

@@ -1,0 +1,395 @@
+//! Integration: randomized invariant checks on the simulator itself —
+//! the event-accelerated engine must behave exactly like a cycle-stepped
+//! machine.  A tiny brute-force per-cycle reference simulator is built
+//! here and compared against the engine on small random programs.
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::isa::{Inst, Program};
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sim::{simulate, OpKind, SimOptions};
+use gpp_pim::util::rng::XorShift64;
+
+/// Brute-force reference: step one cycle at a time for a *single-stream*
+/// program with one macro — enough to pin the engine's write/compute/bus
+/// arithmetic bit-exactly.
+fn brute_force_single_macro(arch: &ArchConfig, insts: &[Inst]) -> u64 {
+    let mut now: u64 = 0;
+    let mut pc = 0usize;
+    let mut loop_stack: Vec<(usize, u32)> = Vec::new();
+    let mut write_left: u64 = 0;
+    let mut compute_left: u64 = 0;
+    let mut speed = arch.write_speed as u64;
+    let mut sleep_until: u64 = 0;
+    loop {
+        // Issue as much as possible at the current cycle.
+        loop {
+            if now < sleep_until {
+                break;
+            }
+            match insts.get(pc) {
+                None => return now,
+                Some(Inst::Halt) => {
+                    // Drain in-flight ops.
+                    while write_left > 0 || compute_left > 0 {
+                        now += 1;
+                        let rate = speed.min(arch.bandwidth);
+                        write_left = write_left.saturating_sub(rate);
+                        compute_left = compute_left.saturating_sub(1);
+                    }
+                    return now;
+                }
+                Some(Inst::SetSpd { speed: s }) => {
+                    speed = *s as u64;
+                    pc += 1;
+                }
+                Some(Inst::Delay { cycles }) => {
+                    sleep_until = now + *cycles as u64;
+                    pc += 1;
+                    break;
+                }
+                Some(Inst::Wrw { .. }) => {
+                    assert_eq!(write_left, 0);
+                    write_left = arch.geom.size_macro();
+                    pc += 1;
+                }
+                Some(Inst::Vmm { n_vec, .. }) => {
+                    assert_eq!(compute_left, 0);
+                    compute_left = arch.geom.cycles_per_vector() * *n_vec as u64;
+                    pc += 1;
+                }
+                Some(Inst::WaitW { .. }) => {
+                    if write_left == 0 {
+                        pc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                Some(Inst::WaitC { .. }) => {
+                    if compute_left == 0 {
+                        pc += 1;
+                    } else {
+                        break;
+                    }
+                }
+                Some(Inst::LdIn { .. }) | Some(Inst::StOut { .. }) => pc += 1,
+                Some(Inst::Barrier) => pc += 1, // single stream: no-op
+                Some(Inst::Loop { count }) => {
+                    loop_stack.push((pc, *count));
+                    pc += 1;
+                }
+                Some(Inst::EndLoop) => {
+                    let (start, rem) = loop_stack.pop().unwrap();
+                    if rem > 1 {
+                        loop_stack.push((start, rem - 1));
+                        pc = start + 1;
+                    } else {
+                        pc += 1;
+                    }
+                }
+            }
+        }
+        // One cycle of progress.
+        now += 1;
+        let rate = if write_left > 0 {
+            speed.min(arch.bandwidth)
+        } else {
+            0
+        };
+        write_left = write_left.saturating_sub(rate);
+        compute_left = compute_left.saturating_sub(1);
+    }
+}
+
+fn random_single_macro_program(rng: &mut XorShift64) -> Vec<Inst> {
+    let mut insts = vec![Inst::SetSpd {
+        speed: rng.range_i64(1, 8) as u16,
+    }];
+    let blocks = rng.range_i64(1, 6);
+    for b in 0..blocks {
+        if rng.next_below(3) == 0 {
+            insts.push(Inst::Delay {
+                cycles: rng.range_i64(0, 300) as u32,
+            });
+        }
+        insts.push(Inst::Wrw {
+            m: 0,
+            tile: b as u32 + 1,
+        });
+        insts.push(Inst::WaitW { m: 0 });
+        insts.push(Inst::Vmm {
+            m: 0,
+            n_vec: rng.range_i64(1, 12) as u16,
+            tile: b as u32 + 1,
+        });
+        insts.push(Inst::WaitC { m: 0 });
+    }
+    insts.push(Inst::Halt);
+    insts
+}
+
+#[test]
+fn engine_matches_brute_force_cycle_stepper() {
+    let mut rng = XorShift64::new(0x5EED);
+    for case in 0..60 {
+        let mut arch = ArchConfig::paper_default();
+        arch.bandwidth = 1 << rng.range_i64(0, 6); // 1..64 B/cyc
+        arch.core_buffer_bytes = 1 << 22;
+        let insts = random_single_macro_program(&mut rng);
+        let brute = brute_force_single_macro(&arch, &insts);
+        let mut program = Program::new(16);
+        program.add_stream(0, insts.clone());
+        let engine = simulate(&arch, &program, SimOptions::default())
+            .unwrap()
+            .stats
+            .cycles;
+        assert_eq!(engine, brute, "case {case}: {insts:?} band={}", arch.bandwidth);
+    }
+}
+
+#[test]
+fn op_log_is_consistent() {
+    // Every logged op has start < end; per-macro ops never overlap
+    // (without intra-macro mode); totals match the counters.
+    let mut rng = XorShift64::new(0xFACE);
+    for _ in 0..10 {
+        let mut arch = ArchConfig::paper_default();
+        arch.bandwidth = 1 << rng.range_i64(3, 9);
+        arch.core_buffer_bytes = 1 << 22;
+        let plan = SchedulePlan {
+            tasks: rng.range_i64(10, 120) as u32,
+            active_macros: rng.range_i64(2, 32) as u32,
+            n_in: rng.range_i64(1, 8) as u32,
+            write_speed: rng.range_i64(1, 8) as u32,
+        };
+        let strategy = match rng.next_below(3) {
+            0 => Strategy::InSitu,
+            1 => Strategy::NaivePingPong,
+            _ => Strategy::GeneralizedPingPong,
+        };
+        let program = strategy.codegen(&arch, &plan).unwrap();
+        let result = simulate(
+            &arch,
+            &program,
+            SimOptions {
+                record_op_log: true,
+                ..SimOptions::default()
+            },
+        )
+        .unwrap();
+        let writes = result
+            .op_log
+            .iter()
+            .filter(|o| o.kind == OpKind::Write)
+            .count() as u64;
+        let computes = result
+            .op_log
+            .iter()
+            .filter(|o| o.kind == OpKind::Compute)
+            .count() as u64;
+        assert_eq!(writes, result.stats.writes_completed);
+        assert_eq!(computes, result.stats.vmms_completed);
+        // Ops on the same macro must not overlap in time.
+        let mut by_macro: std::collections::HashMap<u32, Vec<(u64, u64)>> = Default::default();
+        for op in &result.op_log {
+            by_macro
+                .entry(op.global_macro(arch.macros_per_core))
+                .or_default()
+                .push((op.start, op.end));
+        }
+        for (g, mut spans) in by_macro {
+            spans.sort_unstable();
+            for w in spans.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "macro {g}: overlapping ops {:?} {:?} ({strategy:?})",
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+        // All ops end within the measured total.
+        assert!(result
+            .op_log
+            .iter()
+            .all(|o| o.start < o.end && o.end <= result.stats.cycles));
+    }
+}
+
+#[test]
+fn stats_integrals_bounded() {
+    // write+compute cycles per macro never exceed total cycles; bus busy
+    // <= cycles; peak rate <= band.
+    let mut rng = XorShift64::new(0xBEEF);
+    for _ in 0..12 {
+        let mut arch = ArchConfig::paper_default();
+        arch.bandwidth = 1 << rng.range_i64(2, 9);
+        arch.core_buffer_bytes = 1 << 22;
+        let plan = SchedulePlan {
+            tasks: rng.range_i64(5, 150) as u32,
+            active_macros: rng.range_i64(1, 48) as u32,
+            n_in: rng.range_i64(1, 10) as u32,
+            write_speed: rng.range_i64(1, 8) as u32,
+        };
+        for strategy in Strategy::ALL {
+            let program = strategy.codegen(&arch, &plan).unwrap();
+            let stats = simulate(&arch, &program, SimOptions::default())
+                .unwrap()
+                .stats;
+            assert!(stats.bus_busy_cycles <= stats.cycles);
+            assert!(stats.peak_bus_rate <= arch.bandwidth);
+            for g in 0..stats.macro_write_cycles.len() {
+                assert!(
+                    stats.macro_write_cycles[g] + stats.macro_compute_cycles[g] <= stats.cycles,
+                    "{strategy:?} macro {g}"
+                );
+            }
+            for core in 0..arch.n_cores as usize {
+                assert!(
+                    stats.buffer_integral[core]
+                        <= arch.core_buffer_bytes as u128 * stats.cycles as u128
+                );
+                assert!(stats.buffer_peak[core] <= arch.core_buffer_bytes);
+            }
+        }
+    }
+}
+
+#[test]
+fn issue_cost_monotone() {
+    // Adding per-instruction issue cost can only slow execution down.
+    let arch = ArchConfig::paper_default();
+    let plan = SchedulePlan {
+        tasks: 32,
+        active_macros: 8,
+        n_in: 4,
+        write_speed: 8,
+    };
+    for strategy in Strategy::ALL {
+        let program = strategy.codegen(&arch, &plan).unwrap();
+        let free = simulate(&arch, &program, SimOptions::default())
+            .unwrap()
+            .stats
+            .cycles;
+        let costed = simulate(
+            &arch,
+            &program,
+            SimOptions {
+                issue_cost: 2,
+                ..SimOptions::default()
+            },
+        )
+        .unwrap()
+        .stats
+        .cycles;
+        assert!(costed >= free, "{strategy:?}: {costed} < {free}");
+    }
+}
+
+#[test]
+fn intra_macro_overlap_strictly_faster() {
+    // With intra-macro ping-pong the same per-macro program overlaps
+    // write and compute: wall-clock must shrink for a write+compute loop.
+    let arch = ArchConfig::paper_default();
+    let mut program = Program::new(16);
+    // write(k+1) issued while compute(k) runs — legal only with overlap.
+    let mut insts = vec![
+        Inst::Wrw { m: 0, tile: 1 },
+        Inst::WaitW { m: 0 },
+    ];
+    for k in 1..6u32 {
+        insts.push(Inst::Vmm {
+            m: 0,
+            n_vec: 4,
+            tile: k,
+        });
+        insts.push(Inst::Wrw { m: 0, tile: k + 1 });
+        insts.push(Inst::WaitC { m: 0 });
+        insts.push(Inst::WaitW { m: 0 });
+    }
+    insts.push(Inst::Halt);
+    program.add_stream(0, insts);
+    let overlapped = simulate(
+        &arch,
+        &program,
+        SimOptions {
+            allow_intra_overlap: true,
+            ..SimOptions::default()
+        },
+    )
+    .unwrap()
+    .stats
+    .cycles;
+    // Serial equivalent: 128 + 5 * (128 + 128).
+    assert_eq!(overlapped, 128 + 5 * 128);
+}
+
+#[test]
+fn dynamic_bandwidth_schedule_applies() {
+    // A mid-run bandwidth cut must stretch writes after the step: one
+    // macro writing 4 tiles back-to-back at s=8, band drops 8 -> 2 at
+    // cycle 256 (after two writes' worth of bytes... writes interleave
+    // with computes, so the cut lands mid-stream).
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 8;
+    let mut program = Program::new(16);
+    let mut insts = Vec::new();
+    for k in 1..=4u32 {
+        insts.push(Inst::Wrw { m: 0, tile: k });
+        insts.push(Inst::WaitW { m: 0 });
+    }
+    insts.push(Inst::Halt);
+    program.add_stream(0, insts);
+
+    let steady = simulate(&arch, &program, SimOptions::default())
+        .unwrap()
+        .stats
+        .cycles;
+    assert_eq!(steady, 4 * 128);
+
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(256, 2)],
+        ..SimOptions::default()
+    };
+    let stepped = simulate(&arch, &program, opts).unwrap().stats.cycles;
+    // First two writes at 8 B/cyc (256 cycles), last two at 2 B/cyc
+    // (512 cycles each).
+    assert_eq!(stepped, 256 + 2 * 512);
+}
+
+#[test]
+fn dynamic_bandwidth_restores() {
+    // Drop and restore: 8 -> 1 during [128, 640) -> 8.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 8;
+    let mut program = Program::new(16);
+    program.add_stream(
+        0,
+        vec![
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::Wrw { m: 0, tile: 2 },
+            Inst::WaitW { m: 0 },
+            Inst::Halt,
+        ],
+    );
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(128, 1), (640, 8)],
+        ..SimOptions::default()
+    };
+    let cycles = simulate(&arch, &program, opts).unwrap().stats.cycles;
+    // Write 1: cycles 0..128 at 8 B/cyc. Write 2: 512 cycles at 1 B/cyc
+    // moves 512 B (cycles 128..640), remaining 512 B at 8 B/cyc = 64.
+    assert_eq!(cycles, 128 + 512 + 64);
+}
+
+#[test]
+fn unsorted_bandwidth_schedule_rejected() {
+    let arch = ArchConfig::paper_default();
+    let mut program = Program::new(16);
+    program.add_stream(0, vec![Inst::Halt]);
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(100, 4), (50, 8)],
+        ..SimOptions::default()
+    };
+    assert!(simulate(&arch, &program, opts).is_err());
+}
