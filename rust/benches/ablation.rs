@@ -9,13 +9,16 @@
 //!      paper's numbers to control-unit overhead the model ignores?
 //!  A4. Intra-macro vs inter-macro ping-pong at equal resources.
 //!
-//! `cargo bench --bench ablation`
+//! All standard-codegen points run as one batch on the parallel sweep
+//! runner; the hand-modified (unstaggered) program goes through
+//! `simulate_in` on a recycled workspace.  `cargo bench --bench ablation`
 
 use gpp_pim::arch::ArchConfig;
 use gpp_pim::isa::{Inst, Program};
 use gpp_pim::report::benchkit::section;
 use gpp_pim::sched::{SchedulePlan, Strategy};
-use gpp_pim::sim::{simulate, SimOptions};
+use gpp_pim::sim::{simulate_in, SimOptions, SimWorkspace};
+use gpp_pim::sweep::{SweepGrid, SweepPoint, SweepRunner};
 
 /// GPP codegen with the stagger delays stripped (ablation A1).
 fn gpp_without_stagger(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
@@ -33,10 +36,6 @@ fn gpp_without_stagger(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
     }
 }
 
-fn cycles(arch: &ArchConfig, program: &Program, opts: SimOptions) -> u64 {
-    simulate(arch, program, opts).unwrap().stats.cycles
-}
-
 fn main() {
     // Compute-heavy working point at exactly-Eq.4 bandwidth: the regime
     // where scheduling quality matters most.
@@ -49,24 +48,48 @@ fn main() {
         n_in: 12,
         write_speed: 8,
     };
-
-    section("A1 — stagger offsets vs FIFO self-organization");
-    let staggered = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
-    let unstaggered = gpp_without_stagger(&arch, &plan);
-    let c_st = cycles(&arch, &staggered, SimOptions::default());
-    let c_un = cycles(&arch, &unstaggered, SimOptions::default());
     // Peak-demand comparison needs an uncapped bus (the SoC sees the raw
     // burst; a capped bus hides it behind arbitration).
     let mut wide = arch.clone();
     wide.bandwidth = 4096;
-    let peak_st = simulate(&wide, &staggered, SimOptions::default())
+
+    // One batch: [gpp, naive, intra, gpp@wide, gpp@issue-cost 0/1/4].
+    let runner = SweepRunner::default();
+    let mut grid = SweepGrid::new();
+    grid.push(SweepPoint::new(arch.clone(), Strategy::GeneralizedPingPong, plan));
+    grid.push(SweepPoint::new(arch.clone(), Strategy::NaivePingPong, plan));
+    grid.push(SweepPoint::new(arch.clone(), Strategy::IntraMacroPingPong, plan));
+    grid.push(SweepPoint::new(wide.clone(), Strategy::GeneralizedPingPong, plan));
+    let costs = [0u32, 1, 4];
+    for cost in costs {
+        grid.push(SweepPoint::with_opts(
+            arch.clone(),
+            Strategy::GeneralizedPingPong,
+            plan,
+            SimOptions {
+                issue_cost: cost,
+                ..SimOptions::default()
+            },
+        ));
+    }
+    let stats = runner.run_all(&grid).expect("ablation grid");
+    let (c_st, c_naive, c_intra) = (stats[0].cycles, stats[1].cycles, stats[2].cycles);
+    let peak_st = stats[3].peak_bus_rate;
+
+    // The hand-stripped program is not a (strategy, plan) point — run it
+    // through the recycled-workspace engine path directly.
+    let unstaggered = gpp_without_stagger(&arch, &plan);
+    let mut ws = SimWorkspace::new();
+    let c_un = simulate_in(&arch, &unstaggered, SimOptions::default(), &mut ws)
+        .unwrap()
+        .stats
+        .cycles;
+    let peak_un = simulate_in(&wide, &unstaggered, SimOptions::default(), &mut ws)
         .unwrap()
         .stats
         .peak_bus_rate;
-    let peak_un = simulate(&wide, &unstaggered, SimOptions::default())
-        .unwrap()
-        .stats
-        .peak_bus_rate;
+
+    section("A1 — stagger offsets vs FIFO self-organization");
     println!("gpp with stagger    : {c_st} cycles, raw peak demand {peak_st} B/cyc");
     println!("gpp without stagger : {c_un} cycles, raw peak demand {peak_un} B/cyc");
     println!(
@@ -79,8 +102,6 @@ fn main() {
     );
 
     section("A2 — barrier-free per-macro streams vs banked barriers");
-    let naive = Strategy::NaivePingPong.codegen(&arch, &plan).unwrap();
-    let c_naive = cycles(&arch, &naive, SimOptions::default());
     println!("gpp (per-macro streams)      : {c_st} cycles");
     println!("naive (per-core, barriers)   : {c_naive} cycles");
     println!(
@@ -89,29 +110,16 @@ fn main() {
     );
 
     section("A3 — sensitivity to instruction issue cost");
-    for cost in [0u32, 1, 4] {
-        let opts = SimOptions {
-            issue_cost: cost,
-            ..SimOptions::default()
-        };
-        let c = cycles(&arch, &staggered, opts);
+    for (cost, st) in costs.iter().zip(&stats[4..7]) {
         println!(
-            "issue_cost = {cost}: {c} cycles ({:+.2}% vs ideal)",
-            100.0 * (c as f64 - c_st as f64) / c_st as f64
+            "issue_cost = {cost}: {} cycles ({:+.2}% vs ideal)",
+            st.cycles,
+            100.0 * (st.cycles as f64 - c_st as f64) / c_st as f64
         );
     }
     println!("-> the model's zero-control-overhead assumption is safe here\n");
 
     section("A4 — intra-macro vs inter-macro ping-pong (equal resources)");
-    let intra = Strategy::IntraMacroPingPong.codegen(&arch, &plan).unwrap();
-    let c_intra = cycles(
-        &arch,
-        &intra,
-        SimOptions {
-            allow_intra_overlap: true,
-            ..SimOptions::default()
-        },
-    );
     println!("inter-macro naive ping-pong : {c_naive} cycles");
     println!("intra-macro ping-pong       : {c_intra} cycles");
     println!("generalized ping-pong       : {c_st} cycles");
@@ -121,4 +129,5 @@ fn main() {
         c_naive as f64 / c_intra as f64,
         c_intra as f64 / c_st as f64
     );
+    println!("\n{}", runner.summary());
 }

@@ -5,10 +5,12 @@
 
 use gpp_pim::report::benchkit::{section, Bench};
 use gpp_pim::report::figures;
+use gpp_pim::sweep::SweepRunner;
 
 fn main() -> anyhow::Result<()> {
+    let runner = SweepRunner::default();
     section("Fig. 4 — naive ping-pong utilization vs n_in");
-    let rows = figures::fig4()?;
+    let rows = figures::fig4_with(&runner)?;
     println!("{}", figures::fig4_table(&rows).to_ascii());
 
     let at8 = rows.iter().find(|r| r.n_in == 8).unwrap();
@@ -18,7 +20,9 @@ fn main() -> anyhow::Result<()> {
     );
     println!("paper: utilization peaks at exactly n_in = 8 where tP == tR ✓");
 
-    let m = Bench::new(1, 5).run("fig4/regenerate", || figures::fig4().unwrap());
+    let m = Bench::new(1, 5).run("fig4/regenerate", || {
+        figures::fig4_with(&runner).unwrap()
+    });
     println!("\n{}", m.line());
     Ok(())
 }

@@ -1,15 +1,18 @@
 //! Bench/repro: paper Fig. 6 — design-phase comparison at band = 128
 //! B/cycle: (a) execution time and (b) macro count for the three
-//! strategies across `time_rewrite : time_PIM` of 8:1 … 1:8.
-//! `cargo bench --bench fig6`
+//! strategies across `time_rewrite : time_PIM` of 8:1 … 1:8.  Runs
+//! through the parallel sweep runner (default: one worker per hardware
+//! thread).  `cargo bench --bench fig6`
 
 use gpp_pim::report::benchkit::{section, Bench};
 use gpp_pim::report::figures;
+use gpp_pim::sweep::SweepRunner;
 
 fn main() -> anyhow::Result<()> {
     const VECTORS: u32 = 32768;
+    let runner = SweepRunner::default();
     section("Fig. 6 — design-phase strategy comparison (band = 128 B/cyc)");
-    let rows = figures::fig6(VECTORS)?;
+    let rows = figures::fig6_with(&runner, VECTORS)?;
     println!("{}", figures::fig6_table(&rows).to_ascii());
 
     let bal = rows
@@ -34,7 +37,10 @@ fn main() -> anyhow::Result<()> {
         100.0 * (1.0 - wh.macros_gpp as f64 / wh.macros_naive as f64)
     );
 
-    let m = Bench::new(0, 3).run("fig6/regenerate", || figures::fig6(VECTORS).unwrap());
+    let m = Bench::new(0, 3).run("fig6/regenerate", || {
+        figures::fig6_with(&runner, VECTORS).unwrap()
+    });
     println!("\n{}", m.line());
+    println!("{}", runner.summary());
     Ok(())
 }

@@ -2,18 +2,20 @@
 //! the `time_PIM == time_rewrite` design point (128 macros, s = 8,
 //! band = 512 B/cycle): normalized performance, result-memory /
 //! bandwidth / macro utilization for the three strategies as the SoC
-//! cuts the accelerator's bandwidth by n = 1 … 64.
-//! `cargo bench --bench fig7`
+//! cuts the accelerator's bandwidth by n = 1 … 64.  Runs through the
+//! parallel sweep runner.  `cargo bench --bench fig7`
 
 use gpp_pim::report::benchkit::{section, Bench};
 use gpp_pim::report::figures;
+use gpp_pim::sweep::SweepRunner;
 
 fn main() -> anyhow::Result<()> {
     const VECTORS: u32 = 16384;
     const DIVISORS: [u32; 7] = [1, 2, 4, 8, 16, 32, 64];
+    let runner = SweepRunner::default();
 
     section("Fig. 7(a) — normalized performance under bandwidth reduction");
-    let rows = figures::fig7(&DIVISORS, VECTORS)?;
+    let rows = figures::fig7_with(&runner, &DIVISORS, VECTORS)?;
     println!("{}", figures::fig7a_table(&rows).to_ascii());
 
     section("Fig. 7(b)-(d) — result-memory / bandwidth / macro utilization");
@@ -29,8 +31,9 @@ fn main() -> anyhow::Result<()> {
     println!("wastes the bus (c), naive wastes macros (d) — as in the paper.");
 
     let m = Bench::new(0, 3).run("fig7/regenerate", || {
-        figures::fig7(&DIVISORS, VECTORS).unwrap()
+        figures::fig7_with(&runner, &DIVISORS, VECTORS).unwrap()
     });
     println!("\n{}", m.line());
+    println!("{}", runner.summary());
     Ok(())
 }

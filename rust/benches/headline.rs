@@ -5,11 +5,13 @@
 
 use gpp_pim::report::benchkit::{section, Bench};
 use gpp_pim::report::figures;
+use gpp_pim::sweep::SweepRunner;
 
 fn main() -> anyhow::Result<()> {
     const VECTORS: u32 = 32768;
+    let runner = SweepRunner::default();
     section("Headline — bandwidth sweep 8..256 B/cyc (tp = 4 tr working point)");
-    let rows = figures::headline(VECTORS)?;
+    let rows = figures::headline_with(&runner, VECTORS)?;
     println!("{}", figures::headline_table(&rows).to_ascii());
 
     let factors: Vec<f64> = rows.iter().map(|r| r.gpp_vs_naive()).collect();
@@ -24,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let m = Bench::new(0, 3).run("headline/regenerate", || {
-        figures::headline(VECTORS).unwrap()
+        figures::headline_with(&runner, VECTORS).unwrap()
     });
     println!("\n{}", m.line());
     Ok(())

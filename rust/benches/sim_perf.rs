@@ -1,12 +1,14 @@
 //! Perf bench: the cycle-accurate simulator itself (the L3 hot path).
 //! Reports simulated macro-cycles per wall-second — the §Perf target in
-//! EXPERIMENTS.md is >= 50M macro-cycles/s on the full-chip workload.
+//! EXPERIMENTS.md is >= 50M macro-cycles/s on the full-chip workload —
+//! for both the fresh-allocation path (`simulate`) and the recycled
+//! workspace path (`simulate_in`), so the zero-realloc win is visible.
 //! `cargo bench --bench sim_perf`
 
 use gpp_pim::arch::ArchConfig;
 use gpp_pim::report::benchkit::{section, Bench};
 use gpp_pim::sched::{SchedulePlan, Strategy};
-use gpp_pim::sim::{simulate, SimOptions};
+use gpp_pim::sim::{simulate, simulate_in, SimOptions, SimWorkspace};
 
 fn main() {
     section("simulator throughput (event-accelerated engine)");
@@ -44,4 +46,34 @@ fn main() {
             );
         }
     }
+
+    section("engine reuse: fresh Engine::new vs recycled SimWorkspace");
+    // Short runs magnify per-run setup cost — the regime a sweep over
+    // many small design points lives in.
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 22;
+    let plan = SchedulePlan {
+        tasks: 256,
+        active_macros: 256,
+        n_in: 4,
+        write_speed: 8,
+    };
+    let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+    let bench = Bench::new(2, 15);
+    let fresh = bench.run("short-run/fresh-alloc", || {
+        simulate(&arch, &program, SimOptions::default()).unwrap().stats.cycles
+    });
+    println!("{}", fresh.line());
+    let mut ws = SimWorkspace::new();
+    let reused = bench.run("short-run/reused-workspace", || {
+        simulate_in(&arch, &program, SimOptions::default(), &mut ws)
+            .unwrap()
+            .stats
+            .cycles
+    });
+    println!("{}", reused.line());
+    println!(
+        "-> workspace reuse: {:.2}x on short runs",
+        fresh.median_secs() / reused.median_secs()
+    );
 }

@@ -1,0 +1,98 @@
+//! Perf bench: the parallel sweep runner on the full reproduction
+//! workload (`repro all`: Fig. 4 + Fig. 6 + Fig. 7 + Table II +
+//! headline).  Demonstrates the ISSUE-1 acceptance criteria:
+//!
+//! 1. parallel output is byte-identical to sequential output (the
+//!    concatenated CSV of every figure/table is compared), and
+//! 2. wall-clock speedup on a multi-core host (target >= 3x; the exact
+//!    figure depends on the core count of the machine running this).
+//!
+//! Also measures the raw runner on a uniform grid so a macro-cycles/s
+//! rate can be reported, and writes everything to `BENCH_sweep.json`
+//! (schema: EXPERIMENTS.md §Tracking).  `cargo bench --bench sweep_perf`
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::report::benchkit::{section, write_bench_json, Bench, BenchRecord};
+use gpp_pim::report::figures;
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sweep::{default_jobs, SweepGrid, SweepRunner};
+use std::path::Path;
+
+/// Work size for the repro sweep: large enough that per-point simulation
+/// dominates, small enough to iterate the bench a few times.
+const VECTORS: u32 = 8192;
+
+/// The full repro-all CSV through a fresh runner with `jobs` workers.
+/// (Fresh per call so the codegen cache warms inside the measured
+/// region, exactly as a CLI `repro all --jobs N` invocation would.)
+fn repro_all(jobs: usize) -> String {
+    let runner = SweepRunner::new(jobs);
+    figures::repro_all_csv(&runner, VECTORS).expect("repro all")
+}
+
+fn main() -> anyhow::Result<()> {
+    let jobs = default_jobs();
+    let mut records = Vec::new();
+
+    section("byte-identical output: sequential vs parallel repro all");
+    let seq_csv = repro_all(1);
+    let par_csv = repro_all(jobs);
+    assert_eq!(
+        seq_csv, par_csv,
+        "parallel repro output must be byte-identical to sequential"
+    );
+    println!(
+        "sequential and {jobs}-worker CSV outputs identical ({} bytes) ✓",
+        seq_csv.len()
+    );
+
+    section("wall-clock: repro all, sequential vs parallel");
+    let bench = Bench::new(1, 5);
+    let m_seq = bench.run("repro_all/sequential", || repro_all(1));
+    println!("{}", m_seq.line());
+    let m_par = bench.run(&format!("repro_all/parallel-{jobs}"), || repro_all(jobs));
+    println!("{}", m_par.line());
+    let speedup = m_seq.median_secs() / m_par.median_secs();
+    println!(
+        "-> {speedup:.2}x speedup with {jobs} workers (target >= 3x on a multi-core host)"
+    );
+    records.push(BenchRecord::new(&m_seq, None));
+    records.push(BenchRecord::new(&m_par, None));
+
+    section("raw runner rate on a uniform grid (macro-cycles/s)");
+    // A uniform grid lets us attribute simulated work exactly: each point
+    // contributes cycles x active macros.
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 22;
+    let plans: Vec<SchedulePlan> = (0..24)
+        .map(|i| SchedulePlan {
+            tasks: 1024 + 128 * i,
+            active_macros: 128,
+            n_in: 4,
+            write_speed: 8,
+        })
+        .collect();
+    let grid = SweepGrid::cartesian(&[arch], &plans, &Strategy::ALL);
+    // Simulated work is deterministic; take it from one evaluation.
+    let probe = SweepRunner::sequential().run_all(&grid)?;
+    let macro_cycles: f64 = probe
+        .iter()
+        .map(|s| s.cycles as f64 * s.active_macros() as f64)
+        .sum();
+    for (label, j) in [("grid/sequential", 1usize), ("grid/parallel", jobs)] {
+        let m = bench.run(label, || {
+            SweepRunner::new(j).run_all(&grid).unwrap().len()
+        });
+        println!(
+            "{}   -> {:.1}M macro-cycles/s",
+            m.line(),
+            macro_cycles / m.median_secs() / 1e6
+        );
+        records.push(BenchRecord::new(&m, Some(macro_cycles)));
+    }
+
+    let out = Path::new("BENCH_sweep.json");
+    write_bench_json(out, &records)?;
+    println!("\n[wrote {} ({} records)]", out.display(), records.len());
+    Ok(())
+}

@@ -1,10 +1,11 @@
 //! Bench/repro: paper Table II — "the discrepancy between theory and
 //! practice": fractional-macro model vs integer-macro simulation for
 //! generalized ping-pong at band ∈ {256, 128, 64, 32, 16, 8} B/cycle.
-//! `cargo bench --bench table2`
+//! Runs through the parallel sweep runner.  `cargo bench --bench table2`
 
 use gpp_pim::report::benchkit::{section, Bench};
 use gpp_pim::report::figures;
+use gpp_pim::sweep::SweepRunner;
 
 /// The paper's Table II, verbatim, for side-by-side comparison.
 const PAPER: [(u64, f64, u32, &str, &str, f64, f64); 6] = [
@@ -18,8 +19,9 @@ const PAPER: [(u64, f64, u32, &str, &str, f64, f64); 6] = [
 
 fn main() -> anyhow::Result<()> {
     const VECTORS: u32 = 16384;
+    let runner = SweepRunner::default();
     section("Table II — theory vs practice (this reproduction)");
-    let rows = figures::table2(VECTORS)?;
+    let rows = figures::table2_with(&runner, VECTORS)?;
     println!("{}", figures::table2_table(&rows).to_ascii());
 
     section("Table II — paper values for comparison");
@@ -46,7 +48,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let m = Bench::new(0, 3).run("table2/regenerate", || figures::table2(VECTORS).unwrap());
+    let m = Bench::new(0, 3).run("table2/regenerate", || {
+        figures::table2_with(&runner, VECTORS).unwrap()
+    });
     println!("\n{}", m.line());
+    println!("{}", runner.summary());
     Ok(())
 }

@@ -8,7 +8,7 @@ use thiserror::Error;
 
 /// Geometry of one PIM macro (the SRAM subarray that stores one weight
 /// tile and sweeps an operation unit across it in compute mode).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct MacroGeometry {
     /// Weight rows per macro (bytes along the input dimension).
     pub rows: u32,
@@ -48,7 +48,11 @@ impl MacroGeometry {
 /// Full accelerator configuration.
 ///
 /// Field names track the paper's Table I symbols where one exists.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// All fields are integers, so the config is `Eq + Hash` — the sweep
+/// codegen cache uses the full config as part of its key (no lossy
+/// fingerprinting, no collision risk).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ArchConfig {
     /// Number of PIM cores on the chip.
     pub n_cores: u32,

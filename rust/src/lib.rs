@@ -19,6 +19,8 @@
 //! - [`isa`] — instruction set, assembler, encoder, disassembler.
 //! - [`sim`] — instruction-driven cycle-accurate simulator.
 //! - [`sched`] — the three strategies as ISA code generators.
+//! - [`sweep`] — batched design-point evaluation: codegen cache,
+//!   zero-realloc engine reuse, work-stealing parallel runner.
 //! - [`model`] — closed-form analytical model (paper Eqs. 1–9), DSE,
 //!   runtime adaptation.
 //! - [`gemm`] — GeMM workloads, macro tiling, BLAS-level benchmark suites.
@@ -37,6 +39,7 @@ pub mod report;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 
 pub use arch::ArchConfig;

@@ -5,11 +5,11 @@
 //!
 //! ```text
 //! gpp-pim info  [--config FILE]
-//! gpp-pim repro --exp fig4|fig6|fig7|table2|headline|all [--csv-dir DIR] [--vectors N]
+//! gpp-pim repro --exp fig4|fig6|fig7|table2|headline|all [--csv-dir DIR] [--vectors N] [--jobs N]
 //! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
 //!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
-//! gpp-pim dse  [--band B]
+//! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
@@ -26,6 +26,7 @@ use gpp_pim::report::figures as figs;
 use gpp_pim::runtime::Runtime;
 use gpp_pim::sched::{SchedulePlan, Strategy};
 use gpp_pim::sim::{simulate, trace, SimOptions};
+use gpp_pim::sweep::SweepRunner;
 use gpp_pim::util::csv::CsvTable;
 use std::collections::HashMap;
 use std::path::Path;
@@ -79,6 +80,18 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+}
+
+/// Build the sweep runner from `--jobs N` (default: one worker per
+/// hardware thread; `--jobs 1` forces the sequential path).
+fn make_runner(args: &Args) -> Result<SweepRunner> {
+    Ok(match args.get("jobs") {
+        Some(v) => {
+            let jobs: usize = v.parse().with_context(|| format!("--jobs {v}"))?;
+            SweepRunner::new(jobs)
+        }
+        None => SweepRunner::default(),
+    })
 }
 
 fn load_arch(args: &Args) -> Result<ArchConfig> {
@@ -138,6 +151,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
     let exp = args.get("exp").unwrap_or("all");
     let csv_dir = args.get("csv-dir");
     let vectors = args.get_u32("vectors", 32768)?;
+    // One runner for the whole invocation: the codegen cache deduplicates
+    // programs shared between figures (e.g. fig7 and table2 overlap).
+    let runner = make_runner(args)?;
     let run_fig4 = matches!(exp, "fig4" | "all");
     let run_fig6 = matches!(exp, "fig6" | "fig6a" | "fig6b" | "all");
     let run_fig7 = matches!(exp, "fig7" | "fig7a" | "fig7b" | "fig7c" | "fig7d" | "all");
@@ -148,26 +164,39 @@ fn cmd_repro(args: &Args) -> Result<()> {
     }
     if run_fig4 {
         println!("## Fig. 4 — naive ping-pong utilization vs n_in (s=4 B/cyc)");
-        emit(&figs::fig4_table(&figs::fig4()?), "fig4", csv_dir)?;
+        emit(&figs::fig4_table(&figs::fig4_with(&runner)?), "fig4", csv_dir)?;
     }
     if run_fig6 {
         println!("## Fig. 6 — design-phase comparison at band=128 B/cyc");
-        emit(&figs::fig6_table(&figs::fig6(vectors)?), "fig6", csv_dir)?;
+        emit(&figs::fig6_table(&figs::fig6_with(&runner, vectors)?), "fig6", csv_dir)?;
     }
+    let mut fig7_rows = None;
     if run_fig7 {
         println!("## Fig. 7 — runtime adaptation from the tp==tr design point");
-        let rows = figs::fig7(&[1, 2, 4, 8, 16, 32, 64], vectors)?;
+        let rows = figs::fig7_with(&runner, &[1, 2, 4, 8, 16, 32, 64], vectors)?;
         emit(&figs::fig7a_table(&rows), "fig7a", csv_dir)?;
         emit(&figs::fig7bcd_table(&rows), "fig7bcd", csv_dir)?;
+        fig7_rows = Some(rows);
     }
     if run_t2 {
         println!("## Table II — theory vs practice");
-        emit(&figs::table2_table(&figs::table2(vectors)?), "table2", csv_dir)?;
+        // Table II is a projection of the Fig. 7 sweep: reuse the rows
+        // when they were just computed instead of re-simulating.
+        let rows = match &fig7_rows {
+            Some(rows) => figs::table2_from_fig7(rows),
+            None => figs::table2_with(&runner, vectors)?,
+        };
+        emit(&figs::table2_table(&rows), "table2", csv_dir)?;
     }
     if run_head {
         println!("## Headline — bandwidth sweep 8..256 B/cyc (tp = 4 tr)");
-        emit(&figs::headline_table(&figs::headline(vectors)?), "headline", csv_dir)?;
+        emit(
+            &figs::headline_table(&figs::headline_with(&runner, vectors)?),
+            "headline",
+            csv_dir,
+        )?;
     }
+    println!("{}", runner.summary());
     Ok(())
 }
 
@@ -295,6 +324,45 @@ fn cmd_dse(args: &Args) -> Result<()> {
     arch.bandwidth = args.get_u64("band", 128)?;
     let mut space = DesignSpace::fig6(&arch);
     space.bandwidth = arch.bandwidth as f64;
+    if args.has("sim") {
+        // Simulation arm: validate the model sweep cycle-accurately
+        // through the parallel runner (45 simulations in one batch).
+        let runner = make_runner(args)?;
+        let tasks = args.get_u32("tasks", 4096)?;
+        let pts = space
+            .sweep_fig6_sim(&arch, &runner, tasks)
+            .map_err(|e| anyhow!("{e}"))?;
+        let mut t = CsvTable::new(vec![
+            "tr:tp",
+            "s",
+            "n_in",
+            "macros_insitu",
+            "macros_naive",
+            "macros_gpp",
+            "cycles_insitu",
+            "cycles_naive",
+            "cycles_gpp",
+            "gpp/insitu_sim",
+            "model_exec_gpp",
+        ]);
+        for p in &pts {
+            t.push_row(vec![
+                format!("{:.3}", p.model.ratio_tr_over_tp),
+                p.write_speed.to_string(),
+                p.n_in.to_string(),
+                p.macros[0].to_string(),
+                p.macros[1].to_string(),
+                p.macros[2].to_string(),
+                p.cycles[0].to_string(),
+                p.cycles[1].to_string(),
+                p.cycles[2].to_string(),
+                format!("{:.2}", p.cycles[0] as f64 / p.cycles[2] as f64),
+                format!("{:.1}", p.model.gpp.exec_cycles),
+            ]);
+        }
+        println!("{}", runner.summary());
+        return emit(&t, "dse_sim", args.get("csv-dir"));
+    }
     let mut t = CsvTable::new(vec![
         "tr:tp",
         "n_in",
@@ -402,13 +470,16 @@ USAGE: gpp-pim <COMMAND> [flags]
 
 COMMANDS:
   info       show the architecture configuration
-  repro      regenerate paper figures/tables  (--exp fig4|fig6|fig7|table2|headline|all)
+  repro      regenerate paper figures/tables  (--exp fig4|fig6|fig7|table2|headline|all,
+              --jobs N parallel sweep workers, --vectors N, --csv-dir DIR)
   simulate   run one strategy on an abstract task plan
              (--strategy insitu|naive|intra|gpp, --tasks, --macros, --n-in,
               --band, --write-speed, --timeline, --vcd FILE)
   run        simulate+validate a GeMM workload end-to-end
              (--workload ffn|e2e|square|mlp or --trace FILE, --numerics)
-  dse        design-space exploration table (--band)
+  dse        design-space exploration table (--band; --sim validates the
+              model cycle-accurately through the parallel runner, --jobs N,
+              --tasks N)
   adapt      runtime bandwidth-adaptation model (--max-n)
   assemble   assemble ISA text to binary machine code
   disasm     disassemble binary machine code

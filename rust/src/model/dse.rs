@@ -7,6 +7,8 @@
 
 use crate::arch::ArchConfig;
 use crate::model::eqs;
+use crate::sched::{SchedulePlan, Strategy};
+use crate::sweep::{SweepError, SweepGrid, SweepPoint, SweepRunner};
 
 /// One strategy's numbers at a design point.
 #[derive(Debug, Clone, Copy)]
@@ -164,6 +166,91 @@ impl DesignSpace {
         let tp = tr / ratio_tr_over_tp;
         tp * self.size_ou / self.size_macro
     }
+
+    /// Integer hardware realization of a `tr:tp` ratio: compute-heavy
+    /// ratios (≤ 1) are realized by growing the batch at full write
+    /// speed; write-heavy ratios (> 1) by slowing the write port at the
+    /// design batch.  Returns `(write_speed, n_in)` — the same
+    /// theory-vs-practice rounding Table II studies.
+    pub fn realize_ratio(&self, ratio_tr_over_tp: f64) -> (u32, u32) {
+        if ratio_tr_over_tp <= 1.0 {
+            let n_in = self.n_in_for_ratio(ratio_tr_over_tp).round().max(1.0) as u32;
+            (self.write_speed.round() as u32, n_in)
+        } else {
+            let n_in = self.n_in_for_ratio(1.0).round().max(1.0) as u32;
+            let s = (self.write_speed / ratio_tr_over_tp).round().max(1.0) as u32;
+            (s, n_in)
+        }
+    }
+
+    /// Cycle-accurate validation of the Fig. 6 model sweep: every model
+    /// ratio is realized with integer `(s, n_in)`, each strategy gets its
+    /// Eqs. 3–4 macro count, and all `15 × 3` simulations run as one
+    /// batch on `runner`.  This is the simulation arm of the DSE — the
+    /// model ranks candidates, the sweep confirms the ranking.
+    pub fn sweep_fig6_sim(
+        &self,
+        arch: &ArchConfig,
+        runner: &SweepRunner,
+        tasks: u32,
+    ) -> Result<Vec<SimulatedDesignPoint>, SweepError> {
+        let mut a = arch.clone();
+        a.bandwidth = self.bandwidth as u64;
+        a.core_buffer_bytes = a.core_buffer_bytes.max(1 << 20);
+        let models = self.sweep_fig6();
+        let mut grid = SweepGrid::new();
+        let mut realized = Vec::with_capacity(models.len());
+        for p in &models {
+            let (s, n_in) = self.realize_ratio(p.ratio_tr_over_tp);
+            let tr = a.time_rewrite_at(s);
+            let tp = a.time_pim_at(n_in);
+            let (band, sf) = (self.bandwidth, s as f64);
+            let macros = [
+                eqs::num_macros_insitu(band, sf).round() as u32,
+                eqs::num_macros_naive(band, sf).round() as u32,
+                eqs::num_macros_gpp(tp as f64, tr as f64, band, sf).round() as u32,
+            ];
+            realized.push((s, n_in, macros));
+            for (strategy, m) in Strategy::ALL.iter().zip(macros) {
+                let plan = SchedulePlan {
+                    tasks,
+                    active_macros: m.clamp(1, a.total_macros()).min(tasks),
+                    n_in,
+                    write_speed: s,
+                };
+                grid.push(SweepPoint::new(a.clone(), *strategy, plan));
+            }
+        }
+        let stats = runner.run_all(&grid)?;
+        Ok(models
+            .into_iter()
+            .zip(realized)
+            .zip(stats.chunks_exact(3))
+            .map(|((model, (write_speed, n_in, macros)), st)| SimulatedDesignPoint {
+                model,
+                write_speed,
+                n_in,
+                macros,
+                cycles: [st[0].cycles, st[1].cycles, st[2].cycles],
+            })
+            .collect())
+    }
+}
+
+/// One Fig. 6 design point with its integer realization and simulated
+/// execution cycles per strategy (`[insitu, naive, gpp]`).
+#[derive(Debug, Clone, Copy)]
+pub struct SimulatedDesignPoint {
+    /// The closed-form model numbers at this ratio.
+    pub model: DesignPoint,
+    /// Realized write speed, B/cycle.
+    pub write_speed: u32,
+    /// Realized batch size.
+    pub n_in: u32,
+    /// Integer macro counts `[insitu, naive, gpp]`.
+    pub macros: [u32; 3],
+    /// Simulated execution cycles `[insitu, naive, gpp]`.
+    pub cycles: [u64; 3],
 }
 
 #[cfg(test)]
@@ -237,6 +324,46 @@ mod tests {
         assert_eq!(pts.len(), 15);
         assert!(pts.first().unwrap().ratio_tr_over_tp < 1.0);
         assert!(pts.last().unwrap().ratio_tr_over_tp > 1.0);
+    }
+
+    #[test]
+    fn realize_ratio_integerizes() {
+        let s = space();
+        // Balanced: the design point itself.
+        assert_eq!(s.realize_ratio(1.0), (8, 4));
+        // Compute-heavy 1:8 -> batch grows to 32 at full speed.
+        assert_eq!(s.realize_ratio(0.125), (8, 32));
+        // Write-heavy 8:1 -> write port slowed to 1 B/cyc at batch 4.
+        assert_eq!(s.realize_ratio(8.0), (1, 4));
+    }
+
+    #[test]
+    fn sim_sweep_confirms_model_ordering() {
+        let s = space();
+        let runner = SweepRunner::default();
+        let pts = s
+            .sweep_fig6_sim(&ArchConfig::paper_default(), &runner, 512)
+            .unwrap();
+        assert_eq!(pts.len(), 15);
+        for p in &pts {
+            // GPP never loses to in-situ (5% slack for integer rounding
+            // and startup transients at this short workload).
+            assert!(
+                p.cycles[2] as f64 <= p.cycles[0] as f64 * 1.05,
+                "ratio {}: gpp {} vs insitu {}",
+                p.model.ratio_tr_over_tp,
+                p.cycles[2],
+                p.cycles[0]
+            );
+        }
+        // Parallel and sequential runs of the same sweep agree exactly.
+        let seq = s
+            .sweep_fig6_sim(&ArchConfig::paper_default(), &SweepRunner::sequential(), 512)
+            .unwrap();
+        for (a, b) in pts.iter().zip(&seq) {
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.macros, b.macros);
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Minimal benchmarking kit (`criterion` is unavailable offline): warmup,
-//! repeated timed runs, median/mean/min reporting, and a tiny harness
-//! runner used by the `[[bench]]` targets (`harness = false`).
+//! repeated timed runs, median/mean/min reporting, machine-readable JSON
+//! emission for cross-PR perf tracking (`BENCH_*.json`), and a tiny
+//! harness runner used by the `[[bench]]` targets (`harness = false`).
 
 use std::time::{Duration, Instant};
 
@@ -104,6 +105,83 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One machine-readable benchmark record.  Serialized (hand-rolled, no
+/// `serde` offline) into the `BENCH_*.json` files that track the perf
+/// trajectory across PRs — see EXPERIMENTS.md §Tracking.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Stable benchmark name, e.g. `repro_all/parallel`.
+    pub name: String,
+    /// Median wall-clock seconds per iteration.
+    pub median_secs: f64,
+    /// Simulated macro-cycles per wall-second, when the benchmark has a
+    /// meaningful simulated-work denominator (`None` otherwise).
+    pub macro_cycles_per_s: Option<f64>,
+}
+
+impl BenchRecord {
+    /// Build a record from a measurement.
+    pub fn new(m: &Measurement, macro_cycles_per_iter: Option<f64>) -> Self {
+        Self {
+            name: m.name.clone(),
+            median_secs: m.median_secs(),
+            macro_cycles_per_s: macro_cycles_per_iter.map(|mc| mc / m.median_secs().max(1e-12)),
+        }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number rendering: finite floats as-is, non-finite as `null`.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render records as a JSON array (one object per record, stable field
+/// order: `name`, `median_secs`, `macro_cycles_per_s`).
+pub fn bench_records_to_json(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_secs\": {}, \"macro_cycles_per_s\": {}}}{}\n",
+            json_escape(&r.name),
+            json_num(r.median_secs),
+            r.macro_cycles_per_s.map_or("null".to_string(), json_num),
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write records to a `BENCH_*.json` file, creating parent directories.
+pub fn write_bench_json(path: &std::path::Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, bench_records_to_json(records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +213,45 @@ mod tests {
         let b = Bench::new(0, 1);
         let m = b.run("xyz", || 1);
         assert!(m.line().contains("xyz"));
+    }
+
+    #[test]
+    fn json_roundtrips_fields() {
+        let records = [
+            BenchRecord {
+                name: "repro_all/parallel".into(),
+                median_secs: 1.25,
+                macro_cycles_per_s: Some(5.0e7),
+            },
+            BenchRecord {
+                name: "weird \"name\"\\".into(),
+                median_secs: 0.5,
+                macro_cycles_per_s: None,
+            },
+        ];
+        let json = bench_records_to_json(&records);
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        assert!(json.contains("\"median_secs\": 1.25"));
+        assert!(json.contains("\"macro_cycles_per_s\": 50000000"));
+        assert!(json.contains("\"macro_cycles_per_s\": null"));
+        assert!(json.contains("weird \\\"name\\\"\\\\"));
+        // Exactly one comma separator between the two objects.
+        assert_eq!(json.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn record_computes_rate() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_secs(2),
+            mean: Duration::from_secs(2),
+            min: Duration::from_secs(2),
+            max: Duration::from_secs(2),
+        };
+        let r = BenchRecord::new(&m, Some(100.0));
+        assert!((r.macro_cycles_per_s.unwrap() - 50.0).abs() < 1e-12);
+        assert!(BenchRecord::new(&m, None).macro_cycles_per_s.is_none());
     }
 }

@@ -11,22 +11,24 @@ use crate::model::adapt::RuntimeAdaptation;
 use crate::model::dse::DesignSpace;
 use crate::model::eqs;
 use crate::sched::{SchedulePlan, Strategy};
-use crate::sim::{simulate, SimOptions, SimStats};
+use crate::sim::SimStats;
+use crate::sweep::{SweepGrid, SweepPoint, SweepRunner};
 use crate::util::csv::CsvTable;
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 // ---------------------------------------------------------------------------
 // Shared helpers
 // ---------------------------------------------------------------------------
+//
+// Every figure builds its full grid of design points up front and submits
+// it to a [`SweepRunner`] in one batch: codegen is deduplicated across
+// points (and across figures sharing one runner), each worker recycles
+// its engine workspace, and results come back in submission order — so
+// the rendered tables are byte-identical whatever the worker count.
 
-/// Simulate one plan/strategy and return stats.
-fn run_plan(arch: &ArchConfig, strategy: Strategy, plan: &SchedulePlan) -> Result<SimStats> {
-    let program = strategy
-        .codegen(arch, plan)
-        .with_context(|| format!("codegen {} {:?}", strategy.name(), plan))?;
-    let result = simulate(arch, &program, SimOptions::default())
-        .map_err(|e| anyhow::anyhow!("simulate {}: {e}", strategy.name()))?;
-    Ok(result.stats)
+/// Evaluate a whole grid, converting sweep errors to `anyhow`.
+fn run_grid(runner: &SweepRunner, grid: &SweepGrid) -> Result<Vec<SimStats>> {
+    runner.run_all(grid).map_err(|e| anyhow::anyhow!("{e}"))
 }
 
 fn f(v: f64, d: usize) -> String {
@@ -50,18 +52,22 @@ pub struct Fig4Row {
     pub util_sim: f64,
 }
 
+/// Regenerate Fig. 4 with a default (parallel) runner.
+pub fn fig4() -> Result<Vec<Fig4Row>> {
+    fig4_with(&SweepRunner::default())
+}
+
 /// Regenerate Fig. 4: `size_macro = 32×32 B`, `size_OU = 4×8 B`,
 /// `s = 4 B/cycle`, sweeping `n_in` (the paper plots 1..=16; we extend to
-/// 32 to show the symmetric fall-off).
-pub fn fig4() -> Result<Vec<Fig4Row>> {
+/// 32 to show the symmetric fall-off).  All 32 points run as one batch on
+/// `runner`.
+pub fn fig4_with(runner: &SweepRunner) -> Result<Vec<Fig4Row>> {
     let mut arch = ArchConfig::fig4_default();
     arch.bandwidth = 4096; // ample: utilization is the macro-side story
     arch.core_buffer_bytes = 1 << 20;
-    let mut rows = Vec::new();
-    for n_in in 1..=32u32 {
-        let tp = arch.time_pim_at(n_in);
-        let tr = arch.time_rewrite();
-        let util_model = eqs::naive_pingpong_util(tp as f64, tr as f64);
+    let n_ins: Vec<u32> = (1..=32).collect();
+    let mut grid = SweepGrid::new();
+    for &n_in in &n_ins {
         // Simulate a long-enough run for the steady state to dominate.
         let plan = SchedulePlan {
             tasks: 64,
@@ -69,17 +75,25 @@ pub fn fig4() -> Result<Vec<Fig4Row>> {
             n_in,
             write_speed: arch.write_speed,
         };
-        let stats = run_plan(&arch, Strategy::NaivePingPong, &plan)?;
-        rows.push(Fig4Row {
-            n_in,
-            time_pim: tp,
-            time_rewrite: tr,
-            ratio_tp_tr: tp as f64 / tr as f64,
-            util_model,
-            util_sim: stats.macro_utilization_active(),
-        });
+        grid.push(SweepPoint::new(arch.clone(), Strategy::NaivePingPong, plan));
     }
-    Ok(rows)
+    let stats = run_grid(runner, &grid)?;
+    Ok(n_ins
+        .iter()
+        .zip(&stats)
+        .map(|(&n_in, st)| {
+            let tp = arch.time_pim_at(n_in);
+            let tr = arch.time_rewrite();
+            Fig4Row {
+                n_in,
+                time_pim: tp,
+                time_rewrite: tr,
+                ratio_tp_tr: tp as f64 / tr as f64,
+                util_model: eqs::naive_pingpong_util(tp as f64, tr as f64),
+                util_sim: st.macro_utilization_active(),
+            }
+        })
+        .collect())
 }
 
 /// Render Fig. 4 rows.
@@ -139,11 +153,16 @@ impl Fig6Row {
     }
 }
 
+/// Regenerate Fig. 6 with a default (parallel) runner.
+pub fn fig6(total_vectors: u32) -> Result<Vec<Fig6Row>> {
+    fig6_with(&SweepRunner::default(), total_vectors)
+}
+
 /// Regenerate Fig. 6: band = 128 B/cycle, ratio swept 8:1 … 1:8 via the
 /// write speed (`tr` side) and the batch size (`tp` side).  Each strategy
 /// gets the macro count its design rule supports (Eqs. 3–4) and runs the
-/// same `total_vectors` of work.
-pub fn fig6(total_vectors: u32) -> Result<Vec<Fig6Row>> {
+/// same `total_vectors` of work — 21 simulations in one batch.
+pub fn fig6_with(runner: &SweepRunner, total_vectors: u32) -> Result<Vec<Fig6Row>> {
     let mut arch = ArchConfig::paper_default();
     arch.bandwidth = 128;
     arch.core_buffer_bytes = 1 << 20;
@@ -157,7 +176,10 @@ pub fn fig6(total_vectors: u32) -> Result<Vec<Fig6Row>> {
         (8, 16),
         (8, 32),
     ];
-    let mut rows = Vec::new();
+    // Per point: the three strategies' macro counts, then three sweep
+    // points (insitu, naive, gpp) pushed in that order.
+    let mut grid = SweepGrid::new();
+    let mut macro_counts = Vec::with_capacity(points.len());
     for (s, n_in) in points {
         let tr = arch.time_rewrite_at(s);
         let tp = arch.time_pim_at(n_in);
@@ -165,6 +187,7 @@ pub fn fig6(total_vectors: u32) -> Result<Vec<Fig6Row>> {
         let m_insitu = eqs::num_macros_insitu(band, sf).round() as u32;
         let m_naive = eqs::num_macros_naive(band, sf).round() as u32;
         let m_gpp = eqs::num_macros_gpp(tp as f64, tr as f64, band, sf).round() as u32;
+        macro_counts.push((m_insitu, m_naive, m_gpp));
         let tasks = total_vectors.div_ceil(n_in);
         let mk_plan = |active: u32| SchedulePlan {
             tasks,
@@ -172,25 +195,42 @@ pub fn fig6(total_vectors: u32) -> Result<Vec<Fig6Row>> {
             n_in,
             write_speed: s,
         };
-        let st_insitu = run_plan(&arch, Strategy::InSitu, &mk_plan(m_insitu))?;
-        let st_naive = run_plan(&arch, Strategy::NaivePingPong, &mk_plan(m_naive))?;
-        let st_gpp = run_plan(&arch, Strategy::GeneralizedPingPong, &mk_plan(m_gpp))?;
-        let (g, i, n) = eqs::throughput_ratio(tp as f64, tr as f64);
-        rows.push(Fig6Row {
-            ratio_tr_tp: tr as f64 / tp as f64,
-            write_speed: s,
-            n_in,
-            macros_insitu: m_insitu,
-            macros_naive: m_naive,
-            macros_gpp: m_gpp,
-            cycles_insitu: st_insitu.cycles,
-            cycles_naive: st_naive.cycles,
-            cycles_gpp: st_gpp.cycles,
-            model_gpp_over_insitu: g / i,
-            model_naive_over_insitu: n / i,
-        });
+        grid.push(SweepPoint::new(arch.clone(), Strategy::InSitu, mk_plan(m_insitu)));
+        grid.push(SweepPoint::new(
+            arch.clone(),
+            Strategy::NaivePingPong,
+            mk_plan(m_naive),
+        ));
+        grid.push(SweepPoint::new(
+            arch.clone(),
+            Strategy::GeneralizedPingPong,
+            mk_plan(m_gpp),
+        ));
     }
-    Ok(rows)
+    let stats = run_grid(runner, &grid)?;
+    Ok(points
+        .iter()
+        .zip(macro_counts)
+        .zip(stats.chunks_exact(3))
+        .map(|((&(s, n_in), (m_insitu, m_naive, m_gpp)), st)| {
+            let tr = arch.time_rewrite_at(s);
+            let tp = arch.time_pim_at(n_in);
+            let (g, i, n) = eqs::throughput_ratio(tp as f64, tr as f64);
+            Fig6Row {
+                ratio_tr_tp: tr as f64 / tp as f64,
+                write_speed: s,
+                n_in,
+                macros_insitu: m_insitu,
+                macros_naive: m_naive,
+                macros_gpp: m_gpp,
+                cycles_insitu: st[0].cycles,
+                cycles_naive: st[1].cycles,
+                cycles_gpp: st[2].cycles,
+                model_gpp_over_insitu: g / i,
+                model_naive_over_insitu: n / i,
+            }
+        })
+        .collect())
 }
 
 /// Render Fig. 6 rows (both panels in one table).
@@ -306,15 +346,26 @@ fn gpp_practice(adapt: &RuntimeAdaptation, n: u32) -> (u32, u32) {
     )
 }
 
-/// Regenerate Fig. 7(a)–(d) and the Table II data: sweep the bandwidth
-/// divisor over `divisors` with `total_vectors` of work per run.
+/// Regenerate Fig. 7 with a default (parallel) runner.
 pub fn fig7(divisors: &[u32], total_vectors: u32) -> Result<Vec<Fig7Row>> {
+    fig7_with(&SweepRunner::default(), divisors, total_vectors)
+}
+
+/// Regenerate Fig. 7(a)–(d) and the Table II data: sweep the bandwidth
+/// divisor over `divisors` with `total_vectors` of work per run.  The
+/// three normalization runs and the `3 × divisors` adaptation runs all go
+/// to `runner` as a single batch.
+pub fn fig7_with(
+    runner: &SweepRunner,
+    divisors: &[u32],
+    total_vectors: u32,
+) -> Result<Vec<Fig7Row>> {
     let mut arch = ArchConfig::paper_default();
     arch.bandwidth = design_point::BANDWIDTH;
     let adapt = RuntimeAdaptation::from_arch(&arch, design_point::ACTIVE_MACROS as f64);
 
-    // Simulate one strategy at one bandwidth; returns (vec/cycle, stats).
-    let run = |band: u64, strategy: Strategy, active: u32, n_in: u32, speed: u32| -> Result<(f64, SimStats)> {
+    // One strategy at one bandwidth as a sweep point.
+    let point = |band: u64, strategy: Strategy, active: u32, n_in: u32, speed: u32| {
         let mut a = arch.clone();
         a.bandwidth = band;
         a.n_in = n_in.max(1);
@@ -327,56 +378,67 @@ pub fn fig7(divisors: &[u32], total_vectors: u32) -> Result<Vec<Fig7Row>> {
             n_in,
             write_speed: speed,
         };
-        let stats = run_plan(&a, strategy, &plan)?;
-        Ok((stats.vectors_per_kcycle() / 1000.0, stats))
+        SweepPoint::new(a, strategy, plan)
     };
 
-    // Design-point throughput for normalization (per strategy).
-    let (i0, _) = run(
+    // Grid layout: [i0, n0, g0] normalization runs, then per divisor
+    // [insitu, naive, gpp] with its integer adaptation choices.
+    let mut grid = SweepGrid::new();
+    grid.push(point(
         design_point::BANDWIDTH,
         Strategy::InSitu,
         64,
         design_point::N_IN,
         design_point::WRITE_SPEED,
-    )?;
-    let (n0, _) = run(
+    ));
+    grid.push(point(
         design_point::BANDWIDTH,
         Strategy::NaivePingPong,
         design_point::ACTIVE_MACROS,
         design_point::N_IN,
         design_point::WRITE_SPEED,
-    )?;
-    let (g0, _) = run(
+    ));
+    grid.push(point(
         design_point::BANDWIDTH,
         Strategy::GeneralizedPingPong,
         design_point::ACTIVE_MACROS,
         design_point::N_IN,
         design_point::WRITE_SPEED,
-    )?;
-
-    let mut rows = Vec::new();
+    ));
+    let mut choices = Vec::with_capacity(divisors.len());
     for &n in divisors {
         let band_n = design_point::BANDWIDTH / n as u64;
-        let theory = adapt.point(n as f64);
-
         let (ia, is_) = insitu_practice(n);
-        let (iv, ist) = run(band_n, Strategy::InSitu, ia, design_point::N_IN, is_)?;
         let na = naive_practice(n);
-        let (nv, nst) = run(
+        let (ga, gn) = gpp_practice(&adapt, n);
+        choices.push((ga, gn));
+        grid.push(point(band_n, Strategy::InSitu, ia, design_point::N_IN, is_));
+        grid.push(point(
             band_n,
             Strategy::NaivePingPong,
             na,
             design_point::N_IN,
             design_point::WRITE_SPEED,
-        )?;
-        let (ga, gn) = gpp_practice(&adapt, n);
-        let (gv, gst) = run(
+        ));
+        grid.push(point(
             band_n,
             Strategy::GeneralizedPingPong,
             ga,
             gn,
             design_point::WRITE_SPEED,
-        )?;
+        ));
+    }
+    let stats = run_grid(runner, &grid)?;
+
+    let vpc = |st: &SimStats| st.vectors_per_kcycle() / 1000.0;
+    let (i0, n0, g0) = (vpc(&stats[0]), vpc(&stats[1]), vpc(&stats[2]));
+
+    let mut rows = Vec::new();
+    for ((&n, &(ga, gn)), st) in divisors.iter().zip(&choices).zip(stats[3..].chunks_exact(3)) {
+        let band_n = design_point::BANDWIDTH / n as u64;
+        let theory = adapt.point(n as f64);
+        let (ist, nst, gst) = (&st[0], &st[1], &st[2]);
+        let (iv, nv, gv) = (vpc(ist), vpc(nst), vpc(gst));
 
         rows.push(Fig7Row {
             n,
@@ -485,12 +547,25 @@ pub struct Table2Row {
     pub practice_perf: f64,
 }
 
+/// Regenerate Table II with a default (parallel) runner.
+pub fn table2(total_vectors: u32) -> Result<Vec<Table2Row>> {
+    table2_with(&SweepRunner::default(), total_vectors)
+}
+
 /// Regenerate Table II (the GPP columns of the adaptation sweep at
 /// band ∈ {256, 128, 64, 32, 16, 8}).
-pub fn table2(total_vectors: u32) -> Result<Vec<Table2Row>> {
-    let rows = fig7(&[2, 4, 8, 16, 32, 64], total_vectors)?;
-    Ok(rows
-        .iter()
+pub fn table2_with(runner: &SweepRunner, total_vectors: u32) -> Result<Vec<Table2Row>> {
+    let rows = fig7_with(runner, &[2, 4, 8, 16, 32, 64], total_vectors)?;
+    Ok(table2_from_fig7(&rows))
+}
+
+/// Project Table II out of already-computed Fig. 7 rows (each row is
+/// independent of the divisor set, so a `repro all` that just ran the
+/// full Fig. 7 sweep can derive Table II without re-simulating — the
+/// design-point divisor `n = 1` is simply skipped).
+pub fn table2_from_fig7(rows: &[Fig7Row]) -> Vec<Table2Row> {
+    rows.iter()
+        .filter(|r| r.n != 1)
         .map(|r| Table2Row {
             bandwidth: r.bandwidth,
             theory_macros: r.theory_gpp_macros,
@@ -500,7 +575,7 @@ pub fn table2(total_vectors: u32) -> Result<Vec<Table2Row>> {
             theory_perf: r.theory_gpp,
             practice_perf: r.sim_gpp,
         })
-        .collect())
+        .collect()
 }
 
 /// Render Table II.
@@ -550,10 +625,15 @@ impl HeadlineRow {
     }
 }
 
+/// Regenerate the headline sweep with a default (parallel) runner.
+pub fn headline(total_vectors: u32) -> Result<Vec<HeadlineRow>> {
+    headline_with(&SweepRunner::default(), total_vectors)
+}
+
 /// The abstract's sweep: bandwidth 8…256 B/cycle, each strategy adapting
 /// its macro count per its design rule, fixed total work at the tr:tp
 /// imbalance where concurrent write/compute matters (n_in = 16 ⇒ tp = 4 tr).
-pub fn headline(total_vectors: u32) -> Result<Vec<HeadlineRow>> {
+pub fn headline_with(runner: &SweepRunner, total_vectors: u32) -> Result<Vec<HeadlineRow>> {
     let mut arch = ArchConfig::paper_default();
     arch.core_buffer_bytes = 1 << 20;
     let n_in = 16u32;
@@ -561,8 +641,9 @@ pub fn headline(total_vectors: u32) -> Result<Vec<HeadlineRow>> {
     let tp = arch.time_pim_at(n_in) as f64;
     let tr = arch.time_rewrite_at(s) as f64;
     let tasks = total_vectors.div_ceil(n_in);
-    let mut rows = Vec::new();
-    for band in [8u64, 16, 32, 64, 128, 256] {
+    let bands = [8u64, 16, 32, 64, 128, 256];
+    let mut grid = SweepGrid::new();
+    for band in bands {
         let mut a = arch.clone();
         a.bandwidth = band;
         let mk = |active: f64| SchedulePlan {
@@ -571,29 +652,33 @@ pub fn headline(total_vectors: u32) -> Result<Vec<HeadlineRow>> {
             n_in,
             write_speed: s,
         };
-        let insitu = run_plan(
-            &a,
+        grid.push(SweepPoint::new(
+            a.clone(),
             Strategy::InSitu,
-            &mk(eqs::num_macros_insitu(band as f64, s as f64)),
-        )?;
-        let naive = run_plan(
-            &a,
+            mk(eqs::num_macros_insitu(band as f64, s as f64)),
+        ));
+        grid.push(SweepPoint::new(
+            a.clone(),
             Strategy::NaivePingPong,
-            &mk(eqs::num_macros_naive(band as f64, s as f64)),
-        )?;
-        let gpp = run_plan(
-            &a,
+            mk(eqs::num_macros_naive(band as f64, s as f64)),
+        ));
+        grid.push(SweepPoint::new(
+            a.clone(),
             Strategy::GeneralizedPingPong,
-            &mk(eqs::num_macros_gpp(tp, tr, band as f64, s as f64)),
-        )?;
-        rows.push(HeadlineRow {
-            bandwidth: band,
-            cycles_insitu: insitu.cycles,
-            cycles_naive: naive.cycles,
-            cycles_gpp: gpp.cycles,
-        });
+            mk(eqs::num_macros_gpp(tp, tr, band as f64, s as f64)),
+        ));
     }
-    Ok(rows)
+    let stats = run_grid(runner, &grid)?;
+    Ok(bands
+        .iter()
+        .zip(stats.chunks_exact(3))
+        .map(|(&band, st)| HeadlineRow {
+            bandwidth: band,
+            cycles_insitu: st[0].cycles,
+            cycles_naive: st[1].cycles,
+            cycles_gpp: st[2].cycles,
+        })
+        .collect())
 }
 
 /// Render the headline sweep.
@@ -617,6 +702,27 @@ pub fn headline_table(rows: &[HeadlineRow]) -> CsvTable {
         ]);
     }
     t
+}
+
+// ---------------------------------------------------------------------------
+// Whole-reproduction driver
+// ---------------------------------------------------------------------------
+
+/// Render every reproduction artifact (Fig. 4, Fig. 6, Fig. 7a/bcd,
+/// Table II, headline) through `runner` into one concatenated CSV
+/// document.  This is the byte-comparison surface used by
+/// `benches/sweep_perf.rs` to prove that a parallel `repro all` is
+/// identical to a sequential one, and by the speedup measurement.
+pub fn repro_all_csv(runner: &SweepRunner, vectors: u32) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(&fig4_table(&fig4_with(runner)?).to_csv());
+    out.push_str(&fig6_table(&fig6_with(runner, vectors)?).to_csv());
+    let rows = fig7_with(runner, &[1, 2, 4, 8, 16, 32, 64], vectors)?;
+    out.push_str(&fig7a_table(&rows).to_csv());
+    out.push_str(&fig7bcd_table(&rows).to_csv());
+    out.push_str(&table2_table(&table2_from_fig7(&rows)).to_csv());
+    out.push_str(&headline_table(&headline_with(runner, vectors)?).to_csv());
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -8,13 +8,22 @@
 //!
 //! Executables are compiled once per artifact and cached; the hot path is
 //! literal marshalling + `execute` only.  Python is never invoked here.
+//!
+//! The `xla` crate is not vendored in the offline build environment, so
+//! the PJRT-backed implementation is gated behind the `pjrt` cargo
+//! feature.  Without it, [`Runtime`] compiles as a stub whose
+//! [`Runtime::available`] is always `false`, and every caller falls back
+//! to the built-in OU numerics model.
 
 mod artifacts;
 
 pub use artifacts::{Manifest, ManifestEntry};
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// Names of the artifacts `python/compile/aot.py` emits (kept in sync via
@@ -31,6 +40,7 @@ pub mod artifact_names {
 }
 
 /// A loaded PJRT runtime bound to an artifact directory.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -38,6 +48,58 @@ pub struct Runtime {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+/// Stub runtime used when the crate is built without the `pjrt` feature:
+/// PJRT execution is never available and construction always fails with a
+/// descriptive error.  Keeps the public surface identical so callers need
+/// no cfg of their own.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: PJRT support was compiled out.
+    pub fn new(_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (requires the `xla` dependency)"
+        )
+    }
+
+    /// Always `false` without the `pjrt` feature — the executables could
+    /// never be compiled, regardless of whether artifacts are on disk.
+    pub fn available(_dir: impl AsRef<std::path::Path>) -> bool {
+        false
+    }
+
+    /// Platform name placeholder.
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// The manifest the artifacts were built with.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// No executables can ever be compiled by the stub.
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+
+    /// Always fails: PJRT support was compiled out.
+    pub fn execute(&mut self, name: &str, _inputs: &[(&[f32], &[i64])]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("cannot execute {name}: built without the `pjrt` feature")
+    }
+
+    /// Always fails: PJRT support was compiled out.
+    pub fn macro_vmm(&mut self, _x: &[f32], _w: &[f32], _n_vec: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("cannot run macro_vmm: built without the `pjrt` feature")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client and read the artifact manifest.
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {

@@ -11,7 +11,7 @@ use thiserror::Error;
 /// Tasks are distributed round-robin over the `active_macros` in use, so
 /// every strategy does identical work and execution times compare 1:1
 /// (Fig. 6a's y-axis).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SchedulePlan {
     /// Total tile-tasks to execute.
     pub tasks: u32,

@@ -137,13 +137,48 @@ enum Status {
     Halted,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone, Copy)]
 struct StreamState {
     core: u32,
     pc: usize,
-    loop_stack: Vec<(usize, u32)>, // (index of Loop inst, remaining iters)
     status: Status,
     speed: u32,
+}
+
+/// Recyclable per-run engine state: the scheduler/event containers
+/// (waiter lists, event heaps, loop stacks, FIFO, buffers, stream table)
+/// kept alive between runs so a sweep over thousands of design points
+/// pays those allocations once per worker instead of once per point (the
+/// tentpole perf path — see EXPERIMENTS.md §Sweep).  The per-run
+/// [`SimStats`] counters are *not* recycled — they leave with the result,
+/// so each run still allocates its four small stats vectors.
+///
+/// Use [`simulate_in`] to run with a workspace; [`simulate`] allocates a
+/// fresh one per call.  A workspace is plain state, not tied to any
+/// architecture or program: consecutive runs may use different macro
+/// counts, stream counts, and options — containers are resized in place.
+#[derive(Debug, Default)]
+pub struct SimWorkspace {
+    streams: Vec<StreamState>,
+    /// Per-stream loop stacks `(index of Loop inst, remaining iters)` —
+    /// kept outside [`StreamState`] so their capacity survives reuse.
+    loop_stacks: Vec<Vec<(usize, u32)>>,
+    macros: Vec<MacroState>,
+    bus_fifo: Vec<usize>,
+    computes: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+    sleepers: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+    waiters_w: Vec<Vec<usize>>,
+    waiters_c: Vec<Vec<usize>>,
+    ready: Vec<usize>,
+    buffers: Vec<u64>,
+    op_log: Vec<OpRecord>,
+}
+
+impl SimWorkspace {
+    /// An empty workspace (no allocations until the first run).
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// The simulation engine.  Use [`simulate`] unless you need stepping.
@@ -160,6 +195,8 @@ pub struct Engine<'a> {
     opts: SimOptions,
     now: u64,
     streams: Vec<StreamState>,
+    /// Per-stream loop stacks (parallel to `streams`).
+    loop_stacks: Vec<Vec<(usize, u32)>>,
     macros: Vec<MacroState>,
     /// FIFO admission order of global macro ids with an in-flight write.
     bus_fifo: Vec<usize>,
@@ -193,6 +230,20 @@ pub struct Engine<'a> {
 
 impl<'a> Engine<'a> {
     pub fn new(arch: &'a ArchConfig, program: &'a Program, opts: SimOptions) -> Result<Self, SimError> {
+        Self::new_in(arch, program, opts, SimWorkspace::new())
+    }
+
+    /// Build an engine that recycles the containers of `ws` instead of
+    /// allocating fresh ones.  Containers are cleared and resized in
+    /// place, so inner-vector capacities (waiter lists, loop stacks, the
+    /// event heaps) survive from run to run.  Retrieve the workspace back
+    /// with [`Engine::run_recycle`], or use [`simulate_in`].
+    pub fn new_in(
+        arch: &'a ArchConfig,
+        program: &'a Program,
+        opts: SimOptions,
+        mut ws: SimWorkspace,
+    ) -> Result<Self, SimError> {
         program
             .validate(arch.macros_per_core)
             .map_err(|e| SimError::InvalidProgram(e.to_string()))?;
@@ -202,43 +253,62 @@ impl<'a> Engine<'a> {
                 program.n_cores, arch.n_cores
             )));
         }
-        let n_macros = (arch.n_cores * arch.macros_per_core) as usize;
-        let streams = program
-            .streams
-            .iter()
-            .map(|s| StreamState {
-                core: s.core,
-                pc: 0,
-                loop_stack: Vec::new(),
-                status: Status::Ready,
-                speed: arch.write_speed,
-            })
-            .collect();
         if !opts.bandwidth_schedule.windows(2).all(|w| w[0].0 <= w[1].0) {
             return Err(SimError::InvalidProgram(
                 "bandwidth_schedule must be sorted by cycle".into(),
             ));
         }
-        let band_now = arch.bandwidth;
+        let n_macros = (arch.n_cores * arch.macros_per_core) as usize;
         let n_streams = program.streams.len();
+        ws.streams.clear();
+        ws.streams.extend(program.streams.iter().map(|s| StreamState {
+            core: s.core,
+            pc: 0,
+            status: Status::Ready,
+            speed: arch.write_speed,
+        }));
+        for v in &mut ws.loop_stacks {
+            v.clear();
+        }
+        ws.loop_stacks.resize_with(n_streams, Vec::new);
+        ws.macros.clear();
+        ws.macros.resize_with(n_macros, MacroState::default);
+        ws.bus_fifo.clear();
+        ws.computes.clear();
+        ws.sleepers.clear();
+        for v in &mut ws.waiters_w {
+            v.clear();
+        }
+        ws.waiters_w.resize_with(n_macros, Vec::new);
+        for v in &mut ws.waiters_c {
+            v.clear();
+        }
+        ws.waiters_c.resize_with(n_macros, Vec::new);
+        ws.ready.clear();
+        ws.ready.extend(0..n_streams);
+        ws.buffers.clear();
+        ws.buffers.resize(arch.n_cores as usize, 0);
+        ws.op_log.clear();
+        let band_now = arch.bandwidth;
         Ok(Self {
             arch,
             program,
             opts,
             now: 0,
-            streams,
-            macros: (0..n_macros).map(|_| MacroState::default()).collect(),
-            bus_fifo: Vec::new(),
-            computes: std::collections::BinaryHeap::new(),
-            sleepers: std::collections::BinaryHeap::new(),
-            waiters_w: vec![Vec::new(); n_macros],
-            waiters_c: vec![Vec::new(); n_macros],
-            ready: (0..n_streams).collect(),
+            streams: ws.streams,
+            loop_stacks: ws.loop_stacks,
+            macros: ws.macros,
+            bus_fifo: ws.bus_fifo,
+            computes: ws.computes,
+            sleepers: ws.sleepers,
+            waiters_w: ws.waiters_w,
+            waiters_c: ws.waiters_c,
+            ready: ws.ready,
             at_barrier: 0,
             halted: 0,
-            buffers: vec![0; arch.n_cores as usize],
+            buffers: ws.buffers,
             stats: SimStats::new(n_macros, arch.n_cores as usize),
-            op_log: Vec::new(),
+            op_log: ws.op_log,
             band_now,
             sched_idx: 0,
             bus_dirty: true,
@@ -252,7 +322,13 @@ impl<'a> Engine<'a> {
     }
 
     /// Run to completion.
-    pub fn run(mut self) -> Result<SimResult, SimError> {
+    pub fn run(self) -> Result<SimResult, SimError> {
+        self.run_recycle().map(|(result, _ws)| result)
+    }
+
+    /// Run to completion and hand the engine's containers back as a
+    /// [`SimWorkspace`] so the next run reuses their allocations.
+    pub fn run_recycle(mut self) -> Result<(SimResult, SimWorkspace), SimError> {
         loop {
             self.drain_ready()?;
             if self.halted == self.streams.len() {
@@ -266,10 +342,26 @@ impl<'a> Engine<'a> {
             }
         }
         self.stats.cycles = self.now;
-        Ok(SimResult {
+        let result = SimResult {
             stats: self.stats,
             op_log: self.op_log,
-        })
+        };
+        let ws = SimWorkspace {
+            streams: self.streams,
+            loop_stacks: self.loop_stacks,
+            macros: self.macros,
+            bus_fifo: self.bus_fifo,
+            computes: self.computes,
+            sleepers: self.sleepers,
+            waiters_w: self.waiters_w,
+            waiters_c: self.waiters_c,
+            ready: self.ready,
+            buffers: self.buffers,
+            // The op log is part of the result; the workspace starts the
+            // next run with an empty one (no allocation until recording).
+            op_log: Vec::new(),
+        };
+        Ok((result, ws))
     }
 
     /// Release the barrier if every live stream has arrived at it.
@@ -461,16 +553,15 @@ impl<'a> Engine<'a> {
             }
             Inst::Loop { count } => {
                 let pc = self.streams[si].pc;
-                self.streams[si].loop_stack.push((pc, count));
+                self.loop_stacks[si].push((pc, count));
                 self.streams[si].pc += 1;
             }
             Inst::EndLoop => {
-                let (start, remaining) = self.streams[si]
-                    .loop_stack
+                let (start, remaining) = self.loop_stacks[si]
                     .pop()
                     .expect("validated: balanced loops");
                 if remaining > 1 {
-                    self.streams[si].loop_stack.push((start, remaining - 1));
+                    self.loop_stacks[si].push((start, remaining - 1));
                     self.streams[si].pc = start + 1;
                 } else {
                     self.streams[si].pc += 1;
@@ -700,6 +791,24 @@ pub fn simulate(
     opts: SimOptions,
 ) -> Result<SimResult, SimError> {
     Engine::new(arch, program, opts)?.run()
+}
+
+/// Simulate reusing `ws`'s allocations; identical results to [`simulate`].
+///
+/// On success the (possibly grown) workspace is stored back into `ws` for
+/// the next call.  On error the workspace is reset to empty — error paths
+/// are not perf-critical and this keeps the engine free of partial-state
+/// bookkeeping.
+pub fn simulate_in(
+    arch: &ArchConfig,
+    program: &Program,
+    opts: SimOptions,
+    ws: &mut SimWorkspace,
+) -> Result<SimResult, SimError> {
+    let taken = std::mem::take(ws);
+    let (result, recycled) = Engine::new_in(arch, program, opts, taken)?.run_recycle()?;
+    *ws = recycled;
+    Ok(result)
 }
 
 #[cfg(test)]
@@ -1012,6 +1121,78 @@ mod tests {
         ]);
         let e = simulate(&arch(), &p, SimOptions::default()).unwrap_err();
         assert!(matches!(e, SimError::DoubleWrite { .. }));
+    }
+
+    #[test]
+    fn workspace_reuse_is_equivalent() {
+        // The same workspace driven through programs of different shapes
+        // (stream counts, loop depths, macro sets) must reproduce the
+        // fresh-allocation results exactly.
+        let a = arch();
+        let programs = [
+            one_stream(vec![
+                Inst::Loop { count: 3 },
+                Inst::Wrw { m: 0, tile: 9 },
+                Inst::WaitW { m: 0 },
+                Inst::Vmm { m: 0, n_vec: 4, tile: 9 },
+                Inst::WaitC { m: 0 },
+                Inst::EndLoop,
+                Inst::Halt,
+            ]),
+            {
+                let mut p = Program::new(16);
+                p.add_stream(
+                    0,
+                    vec![
+                        Inst::Wrw { m: 0, tile: 1 },
+                        Inst::WaitW { m: 0 },
+                        Inst::Barrier,
+                        Inst::Halt,
+                    ],
+                );
+                p.add_stream(1, vec![Inst::Barrier, Inst::Halt]);
+                p
+            },
+            one_stream(vec![
+                Inst::Delay { cycles: 100 },
+                Inst::Wrw { m: 1, tile: 2 },
+                Inst::WaitW { m: 1 },
+                Inst::Halt,
+            ]),
+        ];
+        let mut ws = SimWorkspace::new();
+        for p in &programs {
+            let fresh = simulate(&a, p, opts_logged()).unwrap();
+            let reused = simulate_in(&a, p, opts_logged(), &mut ws).unwrap();
+            assert_eq!(fresh.stats, reused.stats);
+            assert_eq!(fresh.op_log.len(), reused.op_log.len());
+        }
+        // And run the whole set again through the now-warm workspace.
+        for p in &programs {
+            let fresh = simulate(&a, p, SimOptions::default()).unwrap();
+            let reused = simulate_in(&a, p, SimOptions::default(), &mut ws).unwrap();
+            assert_eq!(fresh.stats, reused.stats);
+        }
+    }
+
+    #[test]
+    fn workspace_reset_after_error() {
+        // A failing run must leave the workspace usable (reset to empty).
+        let a = arch();
+        let bad = one_stream(vec![
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::Wrw { m: 0, tile: 2 },
+            Inst::Halt,
+        ]);
+        let good = one_stream(vec![
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::Halt,
+        ]);
+        let mut ws = SimWorkspace::new();
+        assert!(simulate_in(&a, &bad, SimOptions::default(), &mut ws).is_err());
+        let r = simulate_in(&a, &good, SimOptions::default(), &mut ws).unwrap();
+        assert_eq!(r.stats.cycles, 128);
     }
 
     #[test]

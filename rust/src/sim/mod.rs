@@ -26,6 +26,6 @@ mod stats;
 pub mod trace;
 pub mod vcd;
 
-pub use engine::{simulate, Engine, SimError, SimOptions, SimResult};
+pub use engine::{simulate, simulate_in, Engine, SimError, SimOptions, SimResult, SimWorkspace};
 pub use stats::SimStats;
 pub use trace::{OpKind, OpRecord};

@@ -4,7 +4,11 @@
 //! (Fig. 7b) and peak bandwidth demand (Fig. 3 discussion).
 
 /// Exact counters accumulated by the engine.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq`/`Eq` compare every counter exactly — the sweep determinism
+/// tests rely on this to assert that a parallel run is bit-identical to a
+/// sequential one.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Total execution time in cycles.
     pub cycles: u64,

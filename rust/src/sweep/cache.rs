@@ -1,0 +1,127 @@
+//! Codegen memoization for sweeps.
+//!
+//! Strategy codegen is deterministic in `(strategy, plan, arch)`, and real
+//! sweeps repeat points: Fig. 7's normalization runs reappear per divisor,
+//! Table II re-runs six of Fig. 7's columns, and `repro all` regenerates
+//! overlapping grids.  The cache hands out `Arc<Program>`s so worker
+//! threads share one generated program instead of regenerating (and
+//! re-allocating) it per point.
+
+use crate::arch::ArchConfig;
+use crate::isa::Program;
+use crate::sched::{ScheduleError, SchedulePlan, Strategy};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Full-fidelity cache key: the complete architecture is part of the key
+/// (all-integer, `Eq + Hash`), so there is no fingerprint collision risk.
+type Key = (Strategy, SchedulePlan, ArchConfig);
+
+/// Thread-safe program cache keyed by `(strategy, plan, arch)`.
+#[derive(Debug, Default)]
+pub struct CodegenCache {
+    map: Mutex<HashMap<Key, Arc<Program>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CodegenCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the program for a point, generating it on first use.
+    ///
+    /// Generation happens outside the lock so a slow codegen does not
+    /// serialize unrelated lookups; if two workers race on the same miss,
+    /// the first insert wins and the duplicate (identical, codegen is
+    /// deterministic) is dropped.
+    pub fn get_or_generate(
+        &self,
+        arch: &ArchConfig,
+        strategy: Strategy,
+        plan: &SchedulePlan,
+    ) -> Result<Arc<Program>, ScheduleError> {
+        let key = (strategy, *plan, arch.clone());
+        if let Some(hit) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(hit));
+        }
+        let generated = Arc::new(strategy.codegen(arch, plan)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        Ok(Arc::clone(map.entry(key).or_insert(generated)))
+    }
+
+    /// Lookups served from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Programs generated (cache misses) so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct programs currently cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// True when nothing has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = CodegenCache::new();
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 16);
+        let a = cache
+            .get_or_generate(&arch, Strategy::GeneralizedPingPong, &plan)
+            .unwrap();
+        let b = cache
+            .get_or_generate(&arch, Strategy::GeneralizedPingPong, &plan)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must share the program");
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_generate_distinct_programs() {
+        let cache = CodegenCache::new();
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 16);
+        cache.get_or_generate(&arch, Strategy::InSitu, &plan).unwrap();
+        cache
+            .get_or_generate(&arch, Strategy::NaivePingPong, &plan)
+            .unwrap();
+        let mut arch2 = arch.clone();
+        arch2.bandwidth = 64;
+        cache.get_or_generate(&arch2, Strategy::InSitu, &plan).unwrap();
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn codegen_errors_propagate_and_are_not_cached() {
+        let cache = CodegenCache::new();
+        let arch = ArchConfig::paper_default();
+        let mut plan = SchedulePlan::full_chip(&arch, 16);
+        plan.active_macros = arch.total_macros() + 1;
+        assert!(cache
+            .get_or_generate(&arch, Strategy::InSitu, &plan)
+            .is_err());
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! Batched design-point evaluation: the substrate every figure, table,
+//! DSE and ablation reproduction runs on.
+//!
+//! The paper's evaluation — and any PIM design-space exploration built on
+//! top of it — is thousands of independent cycle-accurate simulations over
+//! a grid of `(architecture, strategy, plan, options)` points.  Running
+//! them one [`crate::sim::simulate`] call at a time pays, per point:
+//!
+//! 1. a fresh codegen of the strategy program (identical programs are
+//!    regenerated dozens of times across figures — e.g. the Fig. 7
+//!    normalization points reappear in Table II), and
+//! 2. a fresh [`Engine`](crate::sim::Engine) allocation of waiter lists,
+//!    event heaps and buffers.
+//!
+//! This module removes both and adds parallelism:
+//!
+//! - [`SweepPoint`] / [`SweepGrid`] — a declarative batch of design
+//!   points, either listed explicitly or built as a cartesian product.
+//! - [`CodegenCache`] — programs memoized by `(strategy, plan, arch)`,
+//!   shared across worker threads (and across figures when one
+//!   [`SweepRunner`] is reused).
+//! - [`SweepRunner`] — a work-stealing parallel executor over OS threads
+//!   (`std::thread::scope`; no external deps).  Each worker owns one
+//!   recycled [`SimWorkspace`](crate::sim::SimWorkspace), so the engine's
+//!   per-run heap allocations are paid once per worker, not once per
+//!   point.
+//!
+//! **Determinism:** every point is simulated by a deterministic engine and
+//! results are written back by input index, so the output of a parallel
+//! run is byte-identical to a sequential run of the same grid — verified
+//! by `tests/sweep_determinism.rs`.
+
+mod cache;
+mod runner;
+
+pub use cache::CodegenCache;
+pub use runner::{default_jobs, SweepRunner};
+
+use crate::arch::ArchConfig;
+use crate::sched::{ScheduleError, SchedulePlan, Strategy};
+use crate::sim::{SimError, SimOptions};
+use thiserror::Error;
+
+/// One design point: everything needed to produce a [`SimStats`].
+///
+/// [`SimStats`]: crate::sim::SimStats
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub arch: ArchConfig,
+    pub strategy: Strategy,
+    pub plan: SchedulePlan,
+    pub opts: SimOptions,
+}
+
+impl SweepPoint {
+    /// A point with the strategy's default simulator options (the common
+    /// case; intra-macro ping-pong gets `allow_intra_overlap`).
+    pub fn new(arch: ArchConfig, strategy: Strategy, plan: SchedulePlan) -> Self {
+        Self {
+            opts: strategy.sim_options(),
+            arch,
+            strategy,
+            plan,
+        }
+    }
+
+    /// A point with explicit simulator options (issue-cost ablations,
+    /// bandwidth schedules, op-log recording, ...).
+    pub fn with_opts(
+        arch: ArchConfig,
+        strategy: Strategy,
+        plan: SchedulePlan,
+        opts: SimOptions,
+    ) -> Self {
+        Self {
+            arch,
+            strategy,
+            plan,
+            opts,
+        }
+    }
+}
+
+/// What went wrong evaluating one sweep point.
+#[derive(Debug, Error)]
+pub enum SweepError {
+    #[error("point {index} ({strategy}): codegen failed: {source}")]
+    Codegen {
+        index: usize,
+        strategy: &'static str,
+        source: ScheduleError,
+    },
+    #[error("point {index} ({strategy}): simulation failed: {source}")]
+    Sim {
+        index: usize,
+        strategy: &'static str,
+        source: SimError,
+    },
+}
+
+impl SweepError {
+    /// Index of the failing point in the submitted grid.
+    pub fn index(&self) -> usize {
+        match self {
+            SweepError::Codegen { index, .. } | SweepError::Sim { index, .. } => *index,
+        }
+    }
+}
+
+/// An ordered batch of design points.  Order is significant: results come
+/// back in exactly this order regardless of execution parallelism.
+#[derive(Debug, Clone, Default)]
+pub struct SweepGrid {
+    points: Vec<SweepPoint>,
+}
+
+impl SweepGrid {
+    /// An empty grid.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap an explicit point list (the figure reproductions build their
+    /// irregular grids this way).
+    pub fn from_points(points: Vec<SweepPoint>) -> Self {
+        Self { points }
+    }
+
+    /// Cartesian product `archs × plans × strategies`, row-major in that
+    /// order (strategy fastest), with per-strategy default options.
+    pub fn cartesian(
+        archs: &[ArchConfig],
+        plans: &[SchedulePlan],
+        strategies: &[Strategy],
+    ) -> Self {
+        let mut points = Vec::with_capacity(archs.len() * plans.len() * strategies.len());
+        for arch in archs {
+            for plan in plans {
+                for &strategy in strategies {
+                    points.push(SweepPoint::new(arch.clone(), strategy, *plan));
+                }
+            }
+        }
+        Self { points }
+    }
+
+    /// Append one point; returns its index (= result index).
+    pub fn push(&mut self, point: SweepPoint) -> usize {
+        self.points.push(point);
+        self.points.len() - 1
+    }
+
+    /// The points, in submission order.
+    pub fn points(&self) -> &[SweepPoint] {
+        &self.points
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no points have been added.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_is_row_major_strategy_fastest() {
+        let arch = ArchConfig::paper_default();
+        let plans = [
+            SchedulePlan::full_chip(&arch, 8),
+            SchedulePlan::full_chip(&arch, 16),
+        ];
+        let g = SweepGrid::cartesian(&[arch.clone()], &plans, &Strategy::ALL);
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.points()[0].strategy, Strategy::InSitu);
+        assert_eq!(g.points()[1].strategy, Strategy::NaivePingPong);
+        assert_eq!(g.points()[2].strategy, Strategy::GeneralizedPingPong);
+        assert_eq!(g.points()[0].plan.tasks, 8);
+        assert_eq!(g.points()[3].plan.tasks, 16);
+    }
+
+    #[test]
+    fn push_returns_result_index() {
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 4);
+        let mut g = SweepGrid::new();
+        assert!(g.is_empty());
+        assert_eq!(g.push(SweepPoint::new(arch.clone(), Strategy::InSitu, plan)), 0);
+        assert_eq!(
+            g.push(SweepPoint::new(arch, Strategy::GeneralizedPingPong, plan)),
+            1
+        );
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn default_opts_follow_strategy() {
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 4);
+        let p = SweepPoint::new(arch.clone(), Strategy::IntraMacroPingPong, plan);
+        assert!(p.opts.allow_intra_overlap);
+        let p = SweepPoint::new(arch, Strategy::GeneralizedPingPong, plan);
+        assert!(!p.opts.allow_intra_overlap);
+    }
+}

@@ -1,0 +1,239 @@
+//! The parallel sweep executor.
+//!
+//! Work-stealing over plain OS threads: workers claim point indices from a
+//! shared atomic counter, so a worker that draws short simulations simply
+//! claims more points (no static partitioning imbalance).  Results are
+//! keyed by input index, making output ordering — and therefore every CSV
+//! and table rendered from it — independent of thread scheduling.
+
+use super::{CodegenCache, SweepError, SweepGrid, SweepPoint};
+use crate::sim::{simulate_in, SimStats, SimWorkspace};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Default worker count: one per available hardware thread.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(std::num::NonZeroUsize::get)
+        .unwrap_or(1)
+}
+
+/// Parallel executor for [`SweepGrid`]s with a shared [`CodegenCache`].
+///
+/// Reuse one runner across related sweeps (e.g. all figures of one
+/// `repro all` invocation) so the cache deduplicates programs across them.
+#[derive(Debug)]
+pub struct SweepRunner {
+    jobs: usize,
+    cache: CodegenCache,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::new(default_jobs())
+    }
+}
+
+impl SweepRunner {
+    /// A runner with an explicit worker count (`0` is clamped to 1).
+    pub fn new(jobs: usize) -> Self {
+        Self {
+            jobs: jobs.max(1),
+            cache: CodegenCache::new(),
+        }
+    }
+
+    /// A single-threaded runner (the determinism-test baseline; still
+    /// benefits from the codegen cache and workspace reuse).
+    pub fn sequential() -> Self {
+        Self::new(1)
+    }
+
+    /// Configured worker count.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// The shared codegen cache (hit/miss introspection).
+    pub fn cache(&self) -> &CodegenCache {
+        &self.cache
+    }
+
+    /// One-line diagnostic for CLI/bench output: worker count and
+    /// codegen-cache counters.
+    pub fn summary(&self) -> String {
+        format!(
+            "[sweep: {} workers, {} programs generated, {} cache hits]",
+            self.jobs,
+            self.cache.misses(),
+            self.cache.hits()
+        )
+    }
+
+    /// Evaluate every point of `grid`; `result[i]` corresponds to
+    /// `grid.points()[i]` regardless of the worker count.
+    pub fn run(&self, grid: &SweepGrid) -> Vec<Result<SimStats, SweepError>> {
+        self.run_points(grid.points())
+    }
+
+    /// [`SweepRunner::run`] over a raw point slice.
+    pub fn run_points(&self, points: &[SweepPoint]) -> Vec<Result<SimStats, SweepError>> {
+        let n = points.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let jobs = self.jobs.min(n);
+        if jobs == 1 {
+            let mut ws = SimWorkspace::new();
+            return points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| self.eval(i, p, &mut ws))
+                .collect();
+        }
+
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, Result<SimStats, SweepError>)>();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                let next = &next;
+                scope.spawn(move || {
+                    // One recycled workspace per worker: the engine's heap
+                    // allocations amortize over every point this worker
+                    // claims.
+                    let mut ws = SimWorkspace::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        if tx.send((i, self.eval(i, &points[i], &mut ws))).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        drop(tx);
+
+        let mut out: Vec<Option<Result<SimStats, SweepError>>> =
+            (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|slot| slot.expect("every claimed index sends exactly one result"))
+            .collect()
+    }
+
+    /// Evaluate every point, failing fast on the first error (by input
+    /// order, deterministically — not by completion order).
+    pub fn run_all(&self, grid: &SweepGrid) -> Result<Vec<SimStats>, SweepError> {
+        let mut out = Vec::with_capacity(grid.len());
+        for r in self.run(grid) {
+            out.push(r?);
+        }
+        Ok(out)
+    }
+
+    fn eval(
+        &self,
+        index: usize,
+        point: &SweepPoint,
+        ws: &mut SimWorkspace,
+    ) -> Result<SimStats, SweepError> {
+        let program = self
+            .cache
+            .get_or_generate(&point.arch, point.strategy, &point.plan)
+            .map_err(|source| SweepError::Codegen {
+                index,
+                strategy: point.strategy.name(),
+                source,
+            })?;
+        let result = simulate_in(&point.arch, &program, point.opts.clone(), ws).map_err(
+            |source| SweepError::Sim {
+                index,
+                strategy: point.strategy.name(),
+                source,
+            },
+        )?;
+        Ok(result.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::sched::{SchedulePlan, Strategy};
+
+    fn small_grid() -> SweepGrid {
+        let mut arch = ArchConfig::paper_default();
+        arch.core_buffer_bytes = 1 << 20;
+        let plans: Vec<SchedulePlan> = [16u32, 32, 64]
+            .iter()
+            .map(|&tasks| SchedulePlan {
+                tasks,
+                active_macros: 8,
+                n_in: 4,
+                write_speed: 8,
+            })
+            .collect();
+        SweepGrid::cartesian(&[arch], &plans, &Strategy::ALL)
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let grid = small_grid();
+        let seq = SweepRunner::sequential().run_all(&grid).unwrap();
+        let par = SweepRunner::new(4).run_all(&grid).unwrap();
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn results_in_submission_order() {
+        let grid = small_grid();
+        let stats = SweepRunner::new(3).run_all(&grid).unwrap();
+        assert_eq!(stats.len(), grid.len());
+        // tasks grows 16 -> 32 -> 64 across plan rows; within a row all
+        // strategies run the same work, so vectors_computed identifies
+        // the row.
+        for (i, s) in stats.iter().enumerate() {
+            let tasks = [16u64, 32, 64][i / 3];
+            assert_eq!(s.vectors_computed, tasks * 4, "point {i}");
+        }
+    }
+
+    #[test]
+    fn cache_deduplicates_repeated_points() {
+        let grid = small_grid();
+        let runner = SweepRunner::new(2);
+        runner.run_all(&grid).unwrap();
+        assert_eq!(runner.cache().misses(), grid.len() as u64);
+        runner.run_all(&grid).unwrap();
+        assert_eq!(runner.cache().misses(), grid.len() as u64);
+        assert_eq!(runner.cache().hits(), grid.len() as u64);
+    }
+
+    #[test]
+    fn errors_carry_point_index() {
+        let arch = ArchConfig::paper_default();
+        let good = SchedulePlan::full_chip(&arch, 8);
+        let mut bad = good;
+        bad.active_macros = arch.total_macros() + 1;
+        let grid = SweepGrid::from_points(vec![
+            SweepPoint::new(arch.clone(), Strategy::InSitu, good),
+            SweepPoint::new(arch, Strategy::InSitu, bad),
+        ]);
+        let results = SweepRunner::new(2).run(&grid);
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().unwrap_err();
+        assert_eq!(err.index(), 1);
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        assert!(SweepRunner::default().run(&SweepGrid::new()).is_empty());
+    }
+}

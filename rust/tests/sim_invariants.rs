@@ -393,3 +393,82 @@ fn unsorted_bandwidth_schedule_rejected() {
     };
     assert!(simulate(&arch, &program, opts).is_err());
 }
+
+/// One macro writing `n` tiles back-to-back (the bandwidth-schedule
+/// edge-case workload).
+fn back_to_back_writes(n: u32) -> Program {
+    let mut program = Program::new(16);
+    let mut insts = Vec::new();
+    for k in 1..=n {
+        insts.push(Inst::Wrw { m: 0, tile: k });
+        insts.push(Inst::WaitW { m: 0 });
+    }
+    insts.push(Inst::Halt);
+    program.add_stream(0, insts);
+    program
+}
+
+#[test]
+fn bandwidth_step_at_cycle_zero_applies_from_start() {
+    // A (0, band) step must override the configured bandwidth before any
+    // byte moves: s=8 capped by band=2 from cycle 0 -> 512 cycles/tile.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 8;
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(0, 2)],
+        ..SimOptions::default()
+    };
+    let r = simulate(&arch, &back_to_back_writes(2), opts).unwrap();
+    assert_eq!(r.stats.cycles, 2 * 512);
+    assert_eq!(r.stats.peak_bus_rate, 2);
+}
+
+#[test]
+fn bandwidth_step_past_completion_is_ignored() {
+    // A step far beyond the program's end must neither stall the run nor
+    // change its timing.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 8;
+    let steady = simulate(&arch, &back_to_back_writes(4), SimOptions::default())
+        .unwrap()
+        .stats
+        .cycles;
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(1_000_000_000, 1)],
+        ..SimOptions::default()
+    };
+    let stepped = simulate(&arch, &back_to_back_writes(4), opts).unwrap();
+    assert_eq!(stepped.stats.cycles, steady);
+    assert_eq!(stepped.stats.peak_bus_rate, 8);
+}
+
+#[test]
+fn bandwidth_steps_at_equal_cycle_last_wins() {
+    // Equal-cycle entries are legal ("sorted" is non-strict); they apply
+    // in order, so the last one is in effect.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 8;
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(128, 1), (128, 4)],
+        ..SimOptions::default()
+    };
+    let r = simulate(&arch, &back_to_back_writes(2), opts).unwrap();
+    // Tile 1: 128 cycles at 8 B/cyc; tile 2: 1024 B at 4 B/cyc = 256.
+    assert_eq!(r.stats.cycles, 128 + 256);
+}
+
+#[test]
+fn bandwidth_step_to_zero_then_restore() {
+    // band -> 0 freezes the bus (no deadlock: the next schedule step is a
+    // pending event) until the restoring step arrives.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 8;
+    let opts = SimOptions {
+        bandwidth_schedule: vec![(64, 0), (1064, 8)],
+        ..SimOptions::default()
+    };
+    let r = simulate(&arch, &back_to_back_writes(1), opts).unwrap();
+    // 64 cycles at 8 B/cyc (512 B), 1000 frozen, rest at 8 B/cyc (64).
+    assert_eq!(r.stats.cycles, 64 + 1000 + 64);
+    assert_eq!(r.stats.bus_bytes, 1024);
+}

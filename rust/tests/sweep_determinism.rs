@@ -1,0 +1,152 @@
+//! Sweep determinism: a parallel run of any grid must be bit-identical
+//! to a sequential run — same `SimStats`, same rendered CSV — because
+//! every consumer (figure CSVs, Table II, DSE rankings) assumes results
+//! are a pure function of the grid, not of thread scheduling.
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::model::eqs;
+use gpp_pim::report::figures;
+use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sweep::{SweepGrid, SweepPoint, SweepRunner};
+
+/// Small enough to keep the test quick, large enough that every strategy
+/// reaches steady state on some points.
+const VECTORS: u32 = 2048;
+
+/// The Fig. 6 grid: 7 `(s, n_in)` ratio points x 3 strategies at
+/// band = 128, each strategy at its Eqs. 3-4 macro count.
+fn fig6_grid() -> SweepGrid {
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 128;
+    arch.core_buffer_bytes = 1 << 20;
+    let points: [(u32, u32); 7] = [(1, 4), (2, 4), (4, 4), (8, 4), (8, 8), (8, 16), (8, 32)];
+    let mut grid = SweepGrid::new();
+    for (s, n_in) in points {
+        let tr = arch.time_rewrite_at(s);
+        let tp = arch.time_pim_at(n_in);
+        let (band, sf) = (arch.bandwidth as f64, s as f64);
+        let tasks = VECTORS.div_ceil(n_in);
+        let mk = |active: f64| SchedulePlan {
+            tasks,
+            active_macros: (active.round() as u32)
+                .min(arch.total_macros())
+                .min(tasks)
+                .max(1),
+            n_in,
+            write_speed: s,
+        };
+        grid.push(SweepPoint::new(
+            arch.clone(),
+            Strategy::InSitu,
+            mk(eqs::num_macros_insitu(band, sf)),
+        ));
+        grid.push(SweepPoint::new(
+            arch.clone(),
+            Strategy::NaivePingPong,
+            mk(eqs::num_macros_naive(band, sf)),
+        ));
+        grid.push(SweepPoint::new(
+            arch.clone(),
+            Strategy::GeneralizedPingPong,
+            mk(eqs::num_macros_gpp(tp as f64, tr as f64, band, sf)),
+        ));
+    }
+    grid
+}
+
+/// The Fig. 7 adaptation grid: bandwidth divisors 1..64 x 3 strategies
+/// from the `tp == tr` design point (band 512, 128 macros, s = 8).
+fn fig7_grid() -> SweepGrid {
+    let arch = ArchConfig::paper_default();
+    let mut grid = SweepGrid::new();
+    for n in [1u64, 2, 4, 8, 16, 32, 64] {
+        let band = 512 / n;
+        for (strategy, active) in [
+            (Strategy::InSitu, 64u32),
+            (Strategy::NaivePingPong, 128),
+            (Strategy::GeneralizedPingPong, 128),
+        ] {
+            let mut a = arch.clone();
+            a.bandwidth = band;
+            let tasks = VECTORS / 4;
+            grid.push(SweepPoint::new(
+                a,
+                strategy,
+                SchedulePlan {
+                    tasks,
+                    active_macros: active.min(tasks).max(1),
+                    n_in: 4,
+                    write_speed: 8,
+                },
+            ));
+        }
+    }
+    grid
+}
+
+#[test]
+fn parallel_equals_sequential_on_fig6_and_fig7_grids() {
+    for grid in [fig6_grid(), fig7_grid()] {
+        let seq = SweepRunner::sequential().run_all(&grid).unwrap();
+        for jobs in [2usize, 4, 16] {
+            let par = SweepRunner::new(jobs).run_all(&grid).unwrap();
+            assert_eq!(seq, par, "jobs={jobs} diverged from sequential");
+        }
+    }
+}
+
+#[test]
+fn combined_grid_shares_cache_and_stays_deterministic() {
+    // One grid holding both figures' points (as `repro all` does) with
+    // duplicated entries: duplicates must hit the codegen cache and the
+    // output must stay position-exact.
+    let mut grid = fig6_grid();
+    let extra: Vec<_> = fig7_grid().points().to_vec();
+    for p in extra.clone() {
+        grid.push(p);
+    }
+    for p in extra {
+        grid.push(p); // duplicates
+    }
+    let runner = SweepRunner::new(8);
+    let all = runner.run_all(&grid).unwrap();
+    assert!(runner.cache().hits() >= 21, "duplicates must hit the cache");
+    let n = all.len();
+    let dup = fig7_grid().len();
+    assert_eq!(&all[n - dup..], &all[n - 2 * dup..n - dup]);
+    let seq = SweepRunner::sequential().run_all(&grid).unwrap();
+    assert_eq!(all, seq);
+}
+
+#[test]
+fn figure_rows_are_worker_count_invariant() {
+    // End-to-end through the actual figure builders: the rendered CSV
+    // text (the artifact users diff) must not depend on the runner.
+    let seq = figures::fig6_table(
+        &figures::fig6_with(&SweepRunner::sequential(), VECTORS).unwrap(),
+    )
+    .to_csv();
+    let par =
+        figures::fig6_table(&figures::fig6_with(&SweepRunner::new(8), VECTORS).unwrap()).to_csv();
+    assert_eq!(seq, par);
+
+    let divisors = [1u32, 2, 8, 64];
+    let seq = figures::fig7a_table(
+        &figures::fig7_with(&SweepRunner::sequential(), &divisors, VECTORS).unwrap(),
+    )
+    .to_csv();
+    let par = figures::fig7a_table(
+        &figures::fig7_with(&SweepRunner::new(8), &divisors, VECTORS).unwrap(),
+    )
+    .to_csv();
+    assert_eq!(seq, par);
+}
+
+#[test]
+fn oversubscribed_runner_is_fine() {
+    // More workers than points: the work-stealing loop must not deadlock
+    // or drop points.
+    let grid = fig7_grid();
+    let par = SweepRunner::new(64).run_all(&grid).unwrap();
+    assert_eq!(par.len(), grid.len());
+}
