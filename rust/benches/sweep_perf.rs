@@ -9,34 +9,40 @@
 //!
 //! Also measures the raw runner on a uniform grid so a macro-cycles/s
 //! rate can be reported, and writes everything to `BENCH_sweep.json`
-//! (schema: EXPERIMENTS.md §Tracking).  `cargo bench --bench sweep_perf`
+//! (schema: EXPERIMENTS.md §Tracking, self-validated before exit).
+//! Reduced-size runs: set `GPP_SWEEP_VECTORS` / `GPP_BENCH_ITERS` (CI
+//! bench-smoke).  `cargo bench --bench sweep_perf`
 
 use gpp_pim::arch::ArchConfig;
-use gpp_pim::report::benchkit::{section, write_bench_json, Bench, BenchRecord};
+use gpp_pim::report::benchkit::{
+    env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
+};
 use gpp_pim::report::figures;
 use gpp_pim::sched::{SchedulePlan, Strategy};
 use gpp_pim::sweep::{default_jobs, SweepGrid, SweepRunner};
 use std::path::Path;
 
-/// Work size for the repro sweep: large enough that per-point simulation
-/// dominates, small enough to iterate the bench a few times.
-const VECTORS: u32 = 8192;
+/// Default work size for the repro sweep: large enough that per-point
+/// simulation dominates, small enough to iterate the bench a few times.
+const DEFAULT_VECTORS: u64 = 8192;
 
 /// The full repro-all CSV through a fresh runner with `jobs` workers.
 /// (Fresh per call so the codegen cache warms inside the measured
 /// region, exactly as a CLI `repro all --jobs N` invocation would.)
-fn repro_all(jobs: usize) -> String {
+fn repro_all(jobs: usize, vectors: u32) -> String {
     let runner = SweepRunner::new(jobs);
-    figures::repro_all_csv(&runner, VECTORS).expect("repro all")
+    figures::repro_all_csv(&runner, vectors).expect("repro all")
 }
 
 fn main() -> anyhow::Result<()> {
     let jobs = default_jobs();
+    let vectors = env_u64("GPP_SWEEP_VECTORS", DEFAULT_VECTORS) as u32;
+    let iters = env_u64("GPP_BENCH_ITERS", 5) as usize;
     let mut records = Vec::new();
 
     section("byte-identical output: sequential vs parallel repro all");
-    let seq_csv = repro_all(1);
-    let par_csv = repro_all(jobs);
+    let seq_csv = repro_all(1, vectors);
+    let par_csv = repro_all(jobs, vectors);
     assert_eq!(
         seq_csv, par_csv,
         "parallel repro output must be byte-identical to sequential"
@@ -47,10 +53,12 @@ fn main() -> anyhow::Result<()> {
     );
 
     section("wall-clock: repro all, sequential vs parallel");
-    let bench = Bench::new(1, 5);
-    let m_seq = bench.run("repro_all/sequential", || repro_all(1));
+    let bench = Bench::new(1, iters);
+    let m_seq = bench.run("repro_all/sequential", || repro_all(1, vectors));
     println!("{}", m_seq.line());
-    let m_par = bench.run(&format!("repro_all/parallel-{jobs}"), || repro_all(jobs));
+    let m_par = bench.run(&format!("repro_all/parallel-{jobs}"), || {
+        repro_all(jobs, vectors)
+    });
     println!("{}", m_par.line());
     let speedup = m_seq.median_secs() / m_par.median_secs();
     println!(
@@ -93,6 +101,8 @@ fn main() -> anyhow::Result<()> {
 
     let out = Path::new("BENCH_sweep.json");
     write_bench_json(out, &records)?;
-    println!("\n[wrote {} ({} records)]", out.display(), records.len());
+    let text = std::fs::read_to_string(out)?;
+    let n = validate_bench_json(&text).map_err(|e| anyhow::anyhow!("schema: {e}"))?;
+    println!("\n[wrote {} ({n} records, schema OK)]", out.display());
     Ok(())
 }

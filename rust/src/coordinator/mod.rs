@@ -45,6 +45,46 @@ impl RunConfig {
     }
 }
 
+/// The schedule plan a tile map implies under `cfg`: one task per tile
+/// batch, macros clamped to the task count.
+pub fn plan_from_map(map: &TileMap, cfg: &RunConfig) -> SchedulePlan {
+    SchedulePlan {
+        tasks: map.len() as u32,
+        active_macros: cfg.active_macros.min(map.len() as u32),
+        n_in: cfg.n_in,
+        write_speed: cfg.write_speed,
+    }
+}
+
+/// Build the schedule plan a workload implies under `cfg` on `arch`,
+/// without materializing the tile map (closed-form task count — O(ops),
+/// which keeps planning cheap for long request streams).
+///
+/// Guaranteed to agree with [`plan_from_map`] over [`TileMap::build`]:
+/// the serving batcher ([`crate::serve`]) plans through this, so a
+/// request is planned exactly as a standalone coordinator run would
+/// plan it.
+pub fn plan_for(arch: &ArchConfig, workload: &Workload, cfg: &RunConfig) -> Result<SchedulePlan> {
+    // Reject n_in == 0 up front: `TileMap::build` cannot batch zero
+    // vectors (and `SchedulePlan::check` would reject the plan anyway),
+    // so the closed form must not paper over it.
+    if cfg.n_in == 0 {
+        bail!("workload '{}': n_in must be non-zero", workload.name);
+    }
+    let tasks = TileMap::task_count(arch, workload, cfg.n_in);
+    if tasks == 0 {
+        bail!("workload '{}' has no tasks", workload.name);
+    }
+    let tasks = u32::try_from(tasks)
+        .map_err(|_| anyhow::anyhow!("workload '{}': {tasks} tasks overflow u32", workload.name))?;
+    Ok(SchedulePlan {
+        tasks,
+        active_macros: cfg.active_macros.min(tasks),
+        n_in: cfg.n_in,
+        write_speed: cfg.write_speed,
+    })
+}
+
 /// Numerics outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct NumericsReport {
@@ -119,12 +159,7 @@ impl Coordinator {
         if map.is_empty() {
             bail!("workload '{}' has no tasks", workload.name);
         }
-        let plan = SchedulePlan {
-            tasks: map.len() as u32,
-            active_macros: cfg.active_macros.min(map.len() as u32),
-            n_in: cfg.n_in,
-            write_speed: cfg.write_speed,
-        };
+        let plan = plan_from_map(&map, cfg);
         let program = cfg
             .strategy
             .codegen(&self.arch, &plan)
@@ -313,6 +348,36 @@ mod tests {
         };
         let r = c.run(&wl, &cfg).unwrap();
         assert_eq!(r.numerics.unwrap().max_abs_err, 0.0);
+    }
+
+    #[test]
+    fn plan_for_rejects_zero_n_in() {
+        let a = arch();
+        let cfg = RunConfig {
+            n_in: 0,
+            ..RunConfig::from_arch(&a, Strategy::InSitu)
+        };
+        assert!(plan_for(&a, &blas::e2e_ffn(), &cfg).is_err());
+    }
+
+    #[test]
+    fn plan_for_agrees_with_materialized_map() {
+        let a = arch();
+        for wl in [
+            blas::e2e_ffn(),
+            blas::square_chain(64, 2, 8),
+            Workload::new("ragged", vec![crate::gemm::GemmOp { m: 5, k: 45, n: 70 }]),
+        ] {
+            for n_in in [2u32, 4, 8] {
+                let cfg = RunConfig {
+                    n_in,
+                    ..RunConfig::from_arch(&a, Strategy::GeneralizedPingPong)
+                };
+                let fast = plan_for(&a, &wl, &cfg).unwrap();
+                let map = TileMap::build(&a, &wl, cfg.n_in);
+                assert_eq!(fast, plan_from_map(&map, &cfg), "{} n_in={n_in}", wl.name);
+            }
+        }
     }
 
     #[test]

@@ -68,6 +68,22 @@ pub fn e2e_ffn() -> Workload {
     )
 }
 
+/// The mixed layer-shape catalog the serving traffic generator samples
+/// from ([`crate::serve::traffic`]): two "hot" production shapes first
+/// (indices 0–1, drawn by the bulk of synthetic traffic) followed by a
+/// diverse tail.  Order is part of the traffic generator's determinism
+/// contract — append, don't reorder.
+pub fn serving_catalog() -> Vec<Workload> {
+    vec![
+        e2e_ffn(),
+        transformer_ffn(16, 64, 128, 2),
+        transformer_ffn(8, 128, 256, 1),
+        square_chain(128, 2, 8),
+        square_chain(64, 4, 16),
+        mlp_tower(16, &[256, 128, 64, 32]),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +111,16 @@ mod tests {
         assert_eq!(w.ops.len(), 2);
         assert_eq!(w.ops[0], GemmOp { m: 8, k: 128, n: 64 });
         assert_eq!(w.ops[1], GemmOp { m: 8, k: 64, n: 32 });
+    }
+
+    #[test]
+    fn serving_catalog_is_nonempty_and_stable_up_front() {
+        let cat = serving_catalog();
+        assert!(cat.len() >= 4);
+        assert!(cat.iter().all(|w| !w.ops.is_empty()));
+        // The hot-path prefix the traffic generator depends on.
+        assert_eq!(cat[0].name, "e2e-ffn-16x64x128");
+        assert_eq!(cat[1].name, "transformer-ffn-t16-d64-f128-L2");
     }
 
     #[test]

@@ -74,6 +74,23 @@ impl TileMap {
         Self { tasks, n_in }
     }
 
+    /// Number of tasks [`TileMap::build`] would produce, in closed form
+    /// (O(ops), nothing materialized).  The serving batcher plans every
+    /// request through this, so planning stays cheap even when the
+    /// request stream is long and the workloads are large.
+    pub fn task_count(arch: &ArchConfig, workload: &Workload, n_in: u32) -> u64 {
+        let (tr, tc) = (arch.geom.rows, arch.geom.cols);
+        workload
+            .ops
+            .iter()
+            .map(|op| {
+                op.k.div_ceil(tr) as u64
+                    * op.n.div_ceil(tc) as u64
+                    * op.m.div_ceil(n_in.max(1)) as u64
+            })
+            .sum()
+    }
+
     /// Number of scheduler tasks.
     pub fn len(&self) -> usize {
         self.tasks.len()
@@ -150,6 +167,33 @@ mod tests {
         let w = Workload::new("t", vec![GemmOp { m: 16, k: 128, n: 128 }]);
         let map = TileMap::build(&arch(), &w, 4);
         assert_eq!(map.len(), 4 * 4 * 4);
+    }
+
+    #[test]
+    fn task_count_matches_build() {
+        let a = arch();
+        let workloads = [
+            Workload::new("sq", vec![GemmOp { m: 16, k: 128, n: 128 }]),
+            Workload::new("ragged", vec![GemmOp { m: 3, k: 40, n: 33 }]),
+            Workload::new(
+                "chain",
+                vec![
+                    GemmOp { m: 16, k: 64, n: 128 },
+                    GemmOp { m: 16, k: 128, n: 64 },
+                    GemmOp { m: 5, k: 45, n: 70 },
+                ],
+            ),
+        ];
+        for w in &workloads {
+            for n_in in [1u32, 2, 4, 7, 16] {
+                assert_eq!(
+                    TileMap::task_count(&a, w, n_in),
+                    TileMap::build(&a, w, n_in).len() as u64,
+                    "{} n_in={n_in}",
+                    w.name
+                );
+            }
+        }
     }
 
     #[test]

@@ -26,6 +26,8 @@
 //! - [`gemm`] — GeMM workloads, macro tiling, BLAS-level benchmark suites.
 //! - [`runtime`] — PJRT executable loading/execution via the `xla` crate.
 //! - [`coordinator`] — ties workload + strategy + simulator + numerics.
+//! - [`serve`] — batched request serving: synthetic traffic, workload-class
+//!   batching, multi-chip sharding, latency/throughput reports.
 //! - [`report`] — figure/table renderers and the bench harness kit.
 //! - [`util`] — deterministic RNG, CSV, misc helpers.
 
@@ -38,6 +40,7 @@ pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod util;

@@ -9,6 +9,7 @@
 //! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
 //!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
+//! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C] [--mean-gap G] [--csv-dir D]
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
@@ -25,6 +26,7 @@ use gpp_pim::model::dse::DesignSpace;
 use gpp_pim::report::figures as figs;
 use gpp_pim::runtime::Runtime;
 use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::serve::{synthetic_traffic, ServeEngine, TrafficConfig};
 use gpp_pim::sim::{simulate, trace, SimOptions};
 use gpp_pim::sweep::SweepRunner;
 use gpp_pim::util::csv::CsvTable;
@@ -82,16 +84,18 @@ impl Args {
     }
 }
 
-/// Build the sweep runner from `--jobs N` (default: one worker per
-/// hardware thread; `--jobs 1` forces the sequential path).
-fn make_runner(args: &Args) -> Result<SweepRunner> {
+/// Worker count from `--jobs N` (default: one worker per hardware
+/// thread; `--jobs 1` forces the sequential path).
+fn jobs_arg(args: &Args) -> Result<usize> {
     Ok(match args.get("jobs") {
-        Some(v) => {
-            let jobs: usize = v.parse().with_context(|| format!("--jobs {v}"))?;
-            SweepRunner::new(jobs)
-        }
-        None => SweepRunner::default(),
+        Some(v) => v.parse().with_context(|| format!("--jobs {v}"))?,
+        None => gpp_pim::sweep::default_jobs(),
     })
+}
+
+/// Build the sweep runner from `--jobs N`.
+fn make_runner(args: &Args) -> Result<SweepRunner> {
+    Ok(SweepRunner::new(jobs_arg(args)?))
 }
 
 fn load_arch(args: &Args) -> Result<ArchConfig> {
@@ -319,6 +323,49 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    arch.validate().map_err(|e| anyhow!("{e}"))?;
+    let traffic_cfg = TrafficConfig {
+        requests: args.get_u32("requests", 256)?,
+        seed: args.get_u64("seed", 7)?,
+        mean_gap_cycles: args.get_u64("mean-gap", 2048)?,
+    };
+    let jobs = jobs_arg(args)?;
+    let chips = args.get_u32("chips", 1)?.max(1) as usize;
+    let requests = synthetic_traffic(&arch, &traffic_cfg);
+    let engine = ServeEngine::new(arch, jobs, chips);
+    let report = engine.run(&requests).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "## Serve — {} requests (seed {}) on {} chip(s), {} worker(s)",
+        report.requests(),
+        traffic_cfg.seed,
+        engine.chips(),
+        engine.jobs()
+    );
+    emit(&report.summary_table(), "serve_summary", args.get("csv-dir"))?;
+    let pcts = report.latency_percentiles(&[50.0, 95.0, 99.0]);
+    println!(
+        "latency p50/p95/p99 : {} / {} / {} cycles",
+        pcts[0], pcts[1], pcts[2]
+    );
+    println!(
+        "serving throughput  : {:.4} requests/Mcycle ({} classes for {} requests, {:.1}% sim deduped)",
+        report.requests_per_mcycle(),
+        report.classes,
+        report.requests(),
+        100.0 * (1.0 - report.simulated_cycles() as f64 / report.served_cycles().max(1) as f64),
+    );
+    print!("{}", report.fleet_lines());
+    if let Some(dir) = args.get("csv-dir") {
+        let path = Path::new(dir).join("serve.csv");
+        report.to_table().write_to(&path)?;
+        println!("[wrote {}]", path.display());
+    }
+    println!("{}", engine.summary());
+    Ok(())
+}
+
 fn cmd_dse(args: &Args) -> Result<()> {
     let mut arch = load_arch(args)?;
     arch.bandwidth = args.get_u64("band", 128)?;
@@ -477,6 +524,10 @@ COMMANDS:
               --band, --write-speed, --timeline, --vcd FILE)
   run        simulate+validate a GeMM workload end-to-end
              (--workload ffn|e2e|square|mlp or --trace FILE, --numerics)
+  serve      batched request serving: multiplex a synthetic GeMM request
+             stream onto replicated chips (--requests N, --seed S,
+              --jobs J host workers, --chips C, --mean-gap CYCLES,
+              --csv-dir DIR writes serve.csv + serve_summary.csv)
   dse        design-space exploration table (--band; --sim validates the
               model cycle-accurately through the parallel runner, --jobs N,
               --tasks N)
@@ -497,6 +548,7 @@ fn main() {
         "repro" => cmd_repro(&args),
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "dse" => cmd_dse(&args),
         "adapt" => cmd_adapt(&args),
         "assemble" => cmd_assemble(&args),

@@ -105,6 +105,16 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Read a size knob from the environment (`GPP_*` variables), falling
+/// back to `default` when unset or unparsable.  CI's `bench-smoke` job
+/// uses these to run the benches at reduced size.
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// One machine-readable benchmark record.  Serialized (hand-rolled, no
 /// `serde` offline) into the `BENCH_*.json` files that track the perf
 /// trajectory across PRs — see EXPERIMENTS.md §Tracking.
@@ -182,6 +192,178 @@ pub fn write_bench_json(path: &std::path::Path, records: &[BenchRecord]) -> std:
     std::fs::write(path, bench_records_to_json(records))
 }
 
+/// Validate `text` against the EXPERIMENTS.md §Tracking schema: a JSON
+/// array of objects carrying exactly `name` (string), `median_secs`
+/// (finite number ≥ 0) and `macro_cycles_per_s` (number or `null`).
+/// Returns the record count.
+///
+/// This is the same check `scripts/check_bench_schema.sh` applies to
+/// committed `BENCH_*.json` files in CI; the benches run it on the files
+/// they just wrote so a schema regression fails before anything is
+/// uploaded.  The parser is layout-tolerant (any JSON whitespace), not
+/// tied to [`bench_records_to_json`]'s formatting.
+pub fn validate_bench_json(text: &str) -> Result<usize, String> {
+    let mut p = SchemaParser {
+        s: text.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    p.eat(b'[')?;
+    let mut count = 0usize;
+    p.ws();
+    if p.peek() != Some(b']') {
+        loop {
+            p.record()?;
+            count += 1;
+            p.ws();
+            match p.bump() {
+                Some(b',') => p.ws(),
+                Some(b']') => break,
+                other => return Err(p.expected("',' or ']' after record", other)),
+            }
+        }
+    } else {
+        p.bump();
+    }
+    p.ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(count)
+}
+
+/// Minimal parser for the narrow `BENCH_*.json` schema (no `serde`
+/// offline; full JSON generality is deliberately out of scope).
+struct SchemaParser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl SchemaParser<'_> {
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek();
+        if c.is_some() {
+            self.i += 1;
+        }
+        c
+    }
+
+    fn expected(&self, what: &str, got: Option<u8>) -> String {
+        match got {
+            Some(c) => format!("expected {what} at byte {}, got '{}'", self.i, c as char),
+            None => format!("expected {what}, got end of input"),
+        }
+    }
+
+    fn eat(&mut self, want: u8) -> Result<(), String> {
+        let got = self.bump();
+        if got == Some(want) {
+            Ok(())
+        } else {
+            Err(self.expected(&format!("'{}'", want as char), got))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => {
+                    // Good enough for schema checking: consume the escape
+                    // head (and \uXXXX digits) without decoding.
+                    let c = self.bump().ok_or("unterminated escape")?;
+                    if c == b'u' {
+                        for _ in 0..4 {
+                            self.bump().ok_or("unterminated \\u escape")?;
+                        }
+                    }
+                    out.push('?');
+                }
+                Some(c) => out.push(c as char),
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        let start = self.i;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    /// One `{name, median_secs, macro_cycles_per_s}` record.
+    fn record(&mut self) -> Result<(), String> {
+        self.eat(b'{')?;
+        let (mut has_name, mut has_median, mut has_rate) = (false, false, false);
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            match key.as_str() {
+                "name" => {
+                    let name = self.string()?;
+                    if name.is_empty() {
+                        return Err("empty record name".into());
+                    }
+                    has_name = true;
+                }
+                "median_secs" => {
+                    let v = self.number()?;
+                    if !v.is_finite() || v < 0.0 {
+                        return Err(format!("median_secs {v} not a finite non-negative number"));
+                    }
+                    has_median = true;
+                }
+                "macro_cycles_per_s" => {
+                    if self.peek() == Some(b'n') {
+                        for want in b"null" {
+                            self.eat(*want)?;
+                        }
+                    } else {
+                        self.number()?;
+                    }
+                    has_rate = true;
+                }
+                other => return Err(format!("unknown field '{other}'")),
+            }
+            self.ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => break,
+                other => return Err(self.expected("',' or '}' in record", other)),
+            }
+        }
+        if !(has_name && has_median && has_rate) {
+            return Err(format!(
+                "record missing fields (name: {has_name}, median_secs: {has_median}, macro_cycles_per_s: {has_rate})"
+            ));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +420,73 @@ mod tests {
         assert!(json.contains("weird \\\"name\\\"\\\\"));
         // Exactly one comma separator between the two objects.
         assert_eq!(json.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn validator_accepts_emitted_json() {
+        let records = [
+            BenchRecord {
+                name: "serve/parallel-8".into(),
+                median_secs: 0.25,
+                macro_cycles_per_s: Some(1.5e8),
+            },
+            BenchRecord {
+                name: "serve/sequential".into(),
+                median_secs: 1.0,
+                macro_cycles_per_s: None,
+            },
+        ];
+        let json = bench_records_to_json(&records);
+        assert_eq!(validate_bench_json(&json), Ok(2));
+        assert_eq!(validate_bench_json("[]"), Ok(0));
+        // Layout-tolerant: compact form validates too.
+        assert_eq!(
+            validate_bench_json(
+                r#"[{"name":"x","median_secs":1e-3,"macro_cycles_per_s":null}]"#
+            ),
+            Ok(1)
+        );
+    }
+
+    #[test]
+    fn validator_rejects_schema_violations() {
+        // Missing field.
+        assert!(validate_bench_json(r#"[{"name": "x", "median_secs": 1.0}]"#).is_err());
+        // Unknown field.
+        assert!(validate_bench_json(
+            r#"[{"name": "x", "median_secs": 1.0, "macro_cycles_per_s": null, "extra": 1}]"#
+        )
+        .is_err());
+        // Wrong type for median_secs.
+        assert!(validate_bench_json(
+            r#"[{"name": "x", "median_secs": "fast", "macro_cycles_per_s": null}]"#
+        )
+        .is_err());
+        // Negative median.
+        assert!(validate_bench_json(
+            r#"[{"name": "x", "median_secs": -1.0, "macro_cycles_per_s": null}]"#
+        )
+        .is_err());
+        // Not an array / trailing garbage.
+        assert!(validate_bench_json(r#"{"name": "x"}"#).is_err());
+        assert!(validate_bench_json("[] tail").is_err());
+        // Escapes in names are tolerated, not mis-parsed as delimiters.
+        assert_eq!(
+            validate_bench_json(
+                r#"[{"name": "we\"ird", "median_secs": 1.0, "macro_cycles_per_s": null}]"#
+            ),
+            Ok(1)
+        );
+    }
+
+    #[test]
+    fn env_u64_parses_and_falls_back() {
+        assert_eq!(env_u64("GPP_BENCHKIT_TEST_UNSET_VAR", 42), 42);
+        std::env::set_var("GPP_BENCHKIT_TEST_VAR", "17");
+        assert_eq!(env_u64("GPP_BENCHKIT_TEST_VAR", 42), 17);
+        std::env::set_var("GPP_BENCHKIT_TEST_VAR", "junk");
+        assert_eq!(env_u64("GPP_BENCHKIT_TEST_VAR", 42), 42);
+        std::env::remove_var("GPP_BENCHKIT_TEST_VAR");
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Grouping requests into workload classes.
+//!
+//! Two requests belong to the same *class* when they lower to the same
+//! `(strategy, plan, arch)` triple — exactly the sweep codegen cache key.
+//! Since strategy codegen and the simulator are deterministic, every
+//! member of a class is the *same* simulation, so a class costs one
+//! codegen and one engine run regardless of its population.  This is the
+//! serving-side analogue of the sweep cache: the cache deduplicates
+//! programs across *grids*, the batcher deduplicates whole simulations
+//! across *requests*.
+
+use super::{Request, ServeError};
+use crate::arch::ArchConfig;
+use crate::coordinator::plan_for;
+use crate::sched::{SchedulePlan, Strategy};
+use std::collections::HashMap;
+
+/// The identity of one batch: everything the simulator needs, nothing it
+/// doesn't.  Identical to the sweep cache key, so batches formed here hit
+/// the same [`CodegenCache`](crate::sweep::CodegenCache) entries a sweep
+/// over the same points would.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WorkloadClass {
+    pub strategy: Strategy,
+    pub plan: SchedulePlan,
+    pub arch: ArchConfig,
+}
+
+/// One batch: a class plus the requests riding on it.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub class: WorkloadClass,
+    /// Indices into the submitted request slice, in submission order.
+    pub members: Vec<usize>,
+}
+
+/// The result of batching a request stream.
+#[derive(Debug, Clone)]
+pub struct BatchSet {
+    /// Batches in first-appearance order (deterministic: independent of
+    /// hash-map iteration order).
+    pub batches: Vec<Batch>,
+    /// `class_of[i]` = index into `batches` for request `i`.
+    pub class_of: Vec<usize>,
+}
+
+impl BatchSet {
+    /// Number of distinct classes.
+    pub fn classes(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Total requests across all batches.
+    pub fn requests(&self) -> usize {
+        self.class_of.len()
+    }
+}
+
+/// Groups requests by workload class for a fixed chip architecture.
+#[derive(Debug)]
+pub struct Batcher {
+    arch: ArchConfig,
+}
+
+impl Batcher {
+    /// A batcher for chips configured as `arch` (replicas share it).
+    pub fn new(arch: ArchConfig) -> Self {
+        Self { arch }
+    }
+
+    /// Lower every request to its class and group by class, preserving
+    /// first-appearance order.  Fails on the first request that cannot be
+    /// planned (empty workload).
+    pub fn batch(&self, requests: &[Request]) -> Result<BatchSet, ServeError> {
+        let mut index: HashMap<WorkloadClass, usize> = HashMap::new();
+        let mut batches: Vec<Batch> = Vec::new();
+        let mut class_of = Vec::with_capacity(requests.len());
+        for (i, req) in requests.iter().enumerate() {
+            let plan =
+                plan_for(&self.arch, &req.workload, &req.cfg).map_err(|reason| {
+                    ServeError::Plan {
+                        id: req.id,
+                        name: req.workload.name.clone(),
+                        reason,
+                    }
+                })?;
+            let class = WorkloadClass {
+                strategy: req.cfg.strategy,
+                plan,
+                arch: self.arch.clone(),
+            };
+            let b = *index.entry(class.clone()).or_insert_with(|| {
+                batches.push(Batch {
+                    class,
+                    members: Vec::new(),
+                });
+                batches.len() - 1
+            });
+            batches[b].members.push(i);
+            class_of.push(b);
+        }
+        Ok(BatchSet { batches, class_of })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RunConfig;
+    use crate::gemm::blas;
+
+    fn req(id: u32, workload: crate::gemm::Workload, strategy: Strategy, n_in: u32) -> Request {
+        let arch = ArchConfig::paper_default();
+        let cfg = RunConfig {
+            n_in,
+            ..RunConfig::from_arch(&arch, strategy)
+        };
+        Request {
+            id,
+            arrival_cycle: id as u64 * 100,
+            workload,
+            cfg,
+        }
+    }
+
+    #[test]
+    fn identical_requests_share_one_class() {
+        let b = Batcher::new(ArchConfig::paper_default());
+        let reqs = vec![
+            req(0, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+            req(1, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+            req(2, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+        ];
+        let set = b.batch(&reqs).unwrap();
+        assert_eq!(set.classes(), 1);
+        assert_eq!(set.batches[0].members, vec![0, 1, 2]);
+        assert_eq!(set.class_of, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn strategy_shape_and_batchsize_split_classes() {
+        let b = Batcher::new(ArchConfig::paper_default());
+        let reqs = vec![
+            req(0, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+            req(1, blas::e2e_ffn(), Strategy::InSitu, 4),
+            req(2, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 8),
+            req(3, blas::square_chain(64, 1, 8), Strategy::GeneralizedPingPong, 4),
+            req(4, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+        ];
+        let set = b.batch(&reqs).unwrap();
+        assert_eq!(set.classes(), 4);
+        // First-appearance order, and the duplicate folds into class 0.
+        assert_eq!(set.class_of, vec![0, 1, 2, 3, 0]);
+        assert_eq!(set.batches[0].members, vec![0, 4]);
+    }
+
+    #[test]
+    fn empty_workload_is_a_plan_error() {
+        let b = Batcher::new(ArchConfig::paper_default());
+        let reqs = vec![req(
+            7,
+            crate::gemm::Workload::new("empty", vec![]),
+            Strategy::InSitu,
+            4,
+        )];
+        let err = b.batch(&reqs).unwrap_err();
+        assert!(matches!(err, ServeError::Plan { id: 7, .. }));
+    }
+
+    #[test]
+    fn plans_match_the_coordinator() {
+        // The batcher must lower exactly as Coordinator::run would.
+        let arch = ArchConfig::paper_default();
+        let wl = blas::square_chain(64, 2, 8);
+        let cfg = RunConfig::from_arch(&arch, Strategy::NaivePingPong);
+        let plan = plan_for(&arch, &wl, &cfg).unwrap();
+        let set = Batcher::new(arch)
+            .batch(&[Request {
+                id: 0,
+                arrival_cycle: 0,
+                workload: wl,
+                cfg,
+            }])
+            .unwrap();
+        assert_eq!(set.batches[0].class.plan, plan);
+    }
+}

@@ -1,0 +1,314 @@
+//! The serving engine: batches → shared executor → merged report.
+//!
+//! `run` is three deterministic stages:
+//!
+//! 1. **Batch** the request stream into workload classes
+//!    ([`Batcher`]).
+//! 2. **Simulate** each unique class exactly once through the shared
+//!    work-stealing executor ([`run_indexed`]) — per-worker
+//!    [`SimWorkspace`] pools, programs memoized in the engine's
+//!    [`CodegenCache`] (reusing the engine across streams turns repeat
+//!    classes into pure cache hits).  Batches are sharded round-robin
+//!    across `chips` replicated chips; since replicas are identical and
+//!    the simulator is deterministic, the shard → result mapping is
+//!    independent of the chip count, and per-request results re-merge in
+//!    request order bit-identically.
+//! 3. **Merge**: fan class results out to member requests, lay the
+//!    requests on the canonical reference timeline (FIFO in arrival
+//!    order; see [`super::report`]) and aggregate the [`ServeReport`].
+
+use super::batcher::{Batch, Batcher};
+use super::report::{RequestRecord, ServeReport};
+use super::{Request, ServeError};
+use crate::arch::ArchConfig;
+use crate::sim::{simulate_in, SimStats, SimWorkspace};
+use crate::sweep::{run_indexed, CodegenCache};
+
+/// Multiplexes request streams onto simulated chips.
+#[derive(Debug)]
+pub struct ServeEngine {
+    arch: ArchConfig,
+    jobs: usize,
+    chips: usize,
+    cache: CodegenCache,
+}
+
+impl ServeEngine {
+    /// An engine with `jobs` host workers serving `chips` replicated
+    /// chips configured as `arch` (`0` is clamped to 1 for both).
+    pub fn new(arch: ArchConfig, jobs: usize, chips: usize) -> Self {
+        Self {
+            arch,
+            jobs: jobs.max(1),
+            chips: chips.max(1),
+            cache: CodegenCache::new(),
+        }
+    }
+
+    /// Single-worker, single-chip engine (the determinism baseline).
+    pub fn sequential(arch: ArchConfig) -> Self {
+        Self::new(arch, 1, 1)
+    }
+
+    /// Configured host worker count.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Configured chip-replica count.
+    pub fn chips(&self) -> usize {
+        self.chips
+    }
+
+    /// The chip architecture replicas share.
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    /// The engine's codegen cache (hit/miss introspection; persists
+    /// across `run` calls).
+    pub fn cache(&self) -> &CodegenCache {
+        &self.cache
+    }
+
+    /// One-line diagnostic for CLI/bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "[serve: {} workers, {} chips, {} programs generated, {} cache hits]",
+            self.jobs,
+            self.chips,
+            self.cache.misses(),
+            self.cache.hits()
+        )
+    }
+
+    /// Serve a request stream: batch, simulate unique classes, merge.
+    ///
+    /// Fails fast on the first error in class order (deterministically —
+    /// not in completion order).
+    pub fn run(&self, requests: &[Request]) -> Result<ServeReport, ServeError> {
+        let set = Batcher::new(self.arch.clone()).batch(requests)?;
+
+        // Stage 2: one simulation per unique class, work-stolen across
+        // the host worker pool.
+        let results = run_indexed(self.jobs, set.batches.len(), |i, ws| {
+            self.eval(i, &set.batches[i], ws)
+        });
+        let mut class_stats: Vec<SimStats> = Vec::with_capacity(results.len());
+        for r in results {
+            class_stats.push(r?);
+        }
+
+        // Round-robin batch sharding across chip replicas: every member
+        // of batch `b` is served by chip `b % chips`.
+        let mut chip_busy_cycles = vec![0u64; self.chips];
+        for (b, batch) in set.batches.iter().enumerate() {
+            chip_busy_cycles[b % self.chips] +=
+                class_stats[b].cycles * batch.members.len() as u64;
+        }
+
+        // Stage 3: fan out to per-request records (id order) and lay the
+        // canonical reference timeline (FIFO in arrival order).
+        let mut records: Vec<RequestRecord> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let b = set.class_of[i];
+                let class = &set.batches[b].class;
+                let stats = &class_stats[b];
+                RequestRecord {
+                    id: req.id,
+                    class: b,
+                    strategy: class.strategy,
+                    tasks: class.plan.tasks,
+                    n_in: class.plan.n_in,
+                    active_macros: class.plan.active_macros,
+                    arrival_cycle: req.arrival_cycle,
+                    queue_cycles: 0,
+                    service_cycles: stats.cycles,
+                    vectors: stats.vectors_computed,
+                    macro_cycles: stats.cycles * stats.active_macros() as u64,
+                }
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..records.len()).collect();
+        order.sort_by_key(|&i| (records[i].arrival_cycle, records[i].id));
+        let mut clock = 0u64;
+        for i in order {
+            let start = clock.max(records[i].arrival_cycle);
+            records[i].queue_cycles = start - records[i].arrival_cycle;
+            clock = start + records[i].service_cycles;
+        }
+        records.sort_by_key(|r| (r.id, r.arrival_cycle));
+
+        Ok(ServeReport {
+            records,
+            classes: set.batches.len(),
+            class_service_cycles: class_stats.iter().map(|s| s.cycles).collect(),
+            chip_busy_cycles,
+        })
+    }
+
+    fn eval(
+        &self,
+        class: usize,
+        batch: &Batch,
+        ws: &mut SimWorkspace,
+    ) -> Result<SimStats, ServeError> {
+        let c = &batch.class;
+        let program = self
+            .cache
+            .get_or_generate(&c.arch, c.strategy, &c.plan)
+            .map_err(|source| ServeError::Codegen {
+                class,
+                strategy: c.strategy.name(),
+                source,
+            })?;
+        let result = simulate_in(&c.arch, &program, c.strategy.sim_options(), ws).map_err(
+            |source| ServeError::Sim {
+                class,
+                strategy: c.strategy.name(),
+                source,
+            },
+        )?;
+        debug_assert_eq!(
+            result.stats.vmms_completed,
+            c.plan.tasks as u64,
+            "class {class}: scheduler completed {} of {} tasks",
+            result.stats.vmms_completed,
+            c.plan.tasks
+        );
+        Ok(result.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, RunConfig};
+    use crate::gemm::blas;
+    use crate::sched::Strategy;
+    use crate::serve::traffic::{synthetic_traffic, TrafficConfig};
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default()
+    }
+
+    fn small_traffic(n: u32) -> Vec<Request> {
+        synthetic_traffic(
+            &arch(),
+            &TrafficConfig {
+                requests: n,
+                seed: 11,
+                mean_gap_cycles: 1024,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_a_stream_end_to_end() {
+        let engine = ServeEngine::new(arch(), 4, 1);
+        let reqs = small_traffic(48);
+        let report = engine.run(&reqs).unwrap();
+        assert_eq!(report.requests(), 48);
+        assert!(report.classes >= 1 && report.classes < 48);
+        assert!(report.records.iter().all(|r| r.service_cycles > 0));
+        assert!(report.p50() <= report.p95() && report.p95() <= report.p99());
+        // Records come back in id order.
+        assert!(report.records.windows(2).all(|p| p[0].id < p[1].id));
+    }
+
+    #[test]
+    fn service_cycles_match_a_standalone_coordinator_run() {
+        // A request's service must be planned and timed exactly as a
+        // direct Coordinator::run of the same workload/config.
+        let wl = blas::e2e_ffn();
+        let cfg = RunConfig::from_arch(&arch(), Strategy::GeneralizedPingPong);
+        let expected = Coordinator::new(arch()).run(&wl, &cfg).unwrap().cycles;
+        let report = ServeEngine::sequential(arch())
+            .run(&[Request {
+                id: 0,
+                arrival_cycle: 0,
+                workload: wl,
+                cfg,
+            }])
+            .unwrap();
+        assert_eq!(report.records[0].service_cycles, expected);
+        assert_eq!(report.records[0].queue_cycles, 0);
+    }
+
+    #[test]
+    fn reference_timeline_is_fifo_in_arrival_order() {
+        let wl = blas::e2e_ffn();
+        let cfg = RunConfig::from_arch(&arch(), Strategy::GeneralizedPingPong);
+        // Three back-to-back arrivals at cycle 0: FIFO by id.
+        let reqs: Vec<Request> = (0..3)
+            .map(|id| Request {
+                id,
+                arrival_cycle: 0,
+                workload: wl.clone(),
+                cfg,
+            })
+            .collect();
+        let report = ServeEngine::sequential(arch()).run(&reqs).unwrap();
+        let s = report.records[0].service_cycles;
+        assert_eq!(report.records[0].queue_cycles, 0);
+        assert_eq!(report.records[1].queue_cycles, s);
+        assert_eq!(report.records[2].queue_cycles, 2 * s);
+        assert_eq!(report.reference_makespan(), 3 * s);
+        assert_eq!(report.classes, 1, "identical requests must share a class");
+    }
+
+    #[test]
+    fn rerunning_the_same_stream_hits_the_codegen_cache() {
+        let engine = ServeEngine::new(arch(), 2, 1);
+        let reqs = small_traffic(32);
+        let first = engine.run(&reqs).unwrap();
+        let misses = engine.cache().misses();
+        assert_eq!(misses, first.classes as u64);
+        assert_eq!(engine.cache().hits(), 0);
+        let second = engine.run(&reqs).unwrap();
+        assert_eq!(first, second);
+        assert_eq!(engine.cache().misses(), misses, "no new programs");
+        assert_eq!(engine.cache().hits(), misses, "every class re-served from cache");
+    }
+
+    #[test]
+    fn chip_sharding_conserves_work() {
+        let reqs = small_traffic(40);
+        let one = ServeEngine::new(arch(), 4, 1).run(&reqs).unwrap();
+        let four = ServeEngine::new(arch(), 4, 4).run(&reqs).unwrap();
+        assert_eq!(one.chip_busy_cycles.len(), 1);
+        assert_eq!(four.chip_busy_cycles.len(), 4);
+        assert_eq!(
+            one.chip_busy_cycles[0],
+            four.chip_busy_cycles.iter().sum::<u64>(),
+            "sharding must neither lose nor invent work"
+        );
+        assert!(four.fleet_makespan() <= one.fleet_makespan());
+        assert!(four.fleet_speedup() >= 1.0);
+    }
+
+    #[test]
+    fn empty_stream_is_fine() {
+        let report = ServeEngine::sequential(arch()).run(&[]).unwrap();
+        assert_eq!(report.requests(), 0);
+        assert_eq!(report.classes, 0);
+        assert_eq!(report.p99(), 0);
+    }
+
+    #[test]
+    fn oversized_plan_is_a_class_error() {
+        let mut cfg = RunConfig::from_arch(&arch(), Strategy::InSitu);
+        cfg.write_speed = 99; // outside [1, 8]
+        let err = ServeEngine::sequential(arch())
+            .run(&[Request {
+                id: 0,
+                arrival_cycle: 0,
+                workload: blas::e2e_ffn(),
+                cfg,
+            }])
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Codegen { class: 0, .. }), "{err}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Batched request serving: many GeMM workloads multiplexed onto
+//! simulated PIM chips.
+//!
+//! The sweep layer ([`crate::sweep`]) evaluates *design points*; this
+//! layer evaluates *requests* — the shape of production traffic the paper
+//! motivates (a stream of GeMM workloads whose weights never fit
+//! on-chip).  The pipeline:
+//!
+//! 1. [`traffic`] — a deterministic synthetic arrival process
+//!    ([`crate::util::rng`]-seeded) over a mixed catalog of layer shapes
+//!    ([`crate::gemm::blas::serving_catalog`]); every [`Request`] wraps a
+//!    [`Workload`] + [`RunConfig`] overrides + arrival metadata.
+//! 2. [`Batcher`] — groups compatible requests by *workload class*
+//!    `(strategy, plan, arch)`.  Class members are guaranteed identical
+//!    simulations (codegen and the engine are deterministic), so each
+//!    class costs one codegen — through the shared
+//!    [`CodegenCache`](crate::sweep::CodegenCache) — and one simulation,
+//!    no matter how many requests ride on it.
+//! 3. [`ServeEngine`] — drives the unique classes through per-worker
+//!    [`SimWorkspace`](crate::sim::SimWorkspace) pools via the shared
+//!    work-stealing executor ([`crate::sweep::run_indexed`]), shards
+//!    batches round-robin across `--chips` replicated chips, and
+//!    re-merges per-request results in request order.
+//! 4. [`ServeReport`] — per-request latency (queue + simulated service
+//!    cycles), p50/p95/p99 percentiles, and aggregate throughput, as CSV
+//!    tables (`serve.csv`, `serve_summary.csv`) and, from
+//!    `benches/serve_perf.rs`, `BENCH_serve.json`.
+//!
+//! **Determinism:** report CSVs are a pure function of `(traffic, arch)`
+//! — byte-identical across `--jobs` and `--chips` settings.  Latency is
+//! therefore measured on the *canonical reference timeline* (FIFO service
+//! in arrival order on one chip; see [`report`]), while chip-fleet
+//! figures (per-chip load, fleet makespan, fleet speedup) are reported
+//! separately.  Verified by `tests/serve_determinism.rs`.
+
+pub mod batcher;
+pub mod engine;
+pub mod report;
+pub mod traffic;
+
+pub use batcher::{Batch, Batcher, BatchSet, WorkloadClass};
+pub use engine::ServeEngine;
+pub use report::{RequestRecord, ServeReport};
+pub use traffic::{synthetic_traffic, TrafficConfig};
+
+use crate::coordinator::RunConfig;
+use crate::gemm::Workload;
+use crate::sched::ScheduleError;
+use crate::sim::SimError;
+use thiserror::Error;
+
+/// One serving request: a GeMM workload, how to run it, and when it
+/// arrived (in simulated cycles since the epoch of the request stream).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Dense request id (also the CSV row key).
+    pub id: u32,
+    /// Arrival time in simulated cycles.
+    pub arrival_cycle: u64,
+    /// The GeMM workload to serve.
+    pub workload: Workload,
+    /// Strategy/resource overrides, as a coordinator [`RunConfig`].
+    pub cfg: RunConfig,
+}
+
+/// What went wrong serving a request stream.
+#[derive(Debug, Error)]
+pub enum ServeError {
+    // `reason` is deliberately not named `source`: `anyhow::Error` does
+    // not implement `std::error::Error`, so it cannot be a thiserror
+    // source field.
+    #[error("request {id} ('{name}'): cannot plan: {reason}")]
+    Plan {
+        id: u32,
+        name: String,
+        reason: anyhow::Error,
+    },
+    #[error("class {class} ({strategy}): codegen failed: {source}")]
+    Codegen {
+        class: usize,
+        strategy: &'static str,
+        source: ScheduleError,
+    },
+    #[error("class {class} ({strategy}): simulation failed: {source}")]
+    Sim {
+        class: usize,
+        strategy: &'static str,
+        source: SimError,
+    },
+}

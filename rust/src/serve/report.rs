@@ -1,0 +1,350 @@
+//! The serving report: per-request latency, percentiles, throughput.
+//!
+//! ## Latency methodology (EXPERIMENTS.md §Serve)
+//!
+//! Per-request latency = queue cycles + service cycles, measured on the
+//! **canonical reference timeline**: requests are served FIFO in
+//! `(arrival_cycle, id)` order by a single chip, so
+//! `start = max(arrival, previous finish)` and `queue = start − arrival`.
+//! Service cycles come from the cycle-accurate simulation of the
+//! request's workload class and are independent of which chip replica or
+//! worker thread ran the simulation — which makes every number here (and
+//! both CSV tables) a pure function of `(traffic, arch)`, byte-identical
+//! across `--jobs` and `--chips`.
+//!
+//! Chip-fleet figures (per-chip busy cycles from the round-robin batch
+//! sharding, fleet makespan, fleet speedup) *do* depend on `--chips`;
+//! they are kept out of the CSVs and surfaced via [`ServeReport::fleet_lines`].
+
+use crate::sched::Strategy;
+use crate::util::csv::CsvTable;
+
+/// One served request, fully resolved.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestRecord {
+    /// Request id (CSV row key; rows are emitted in id order).
+    pub id: u32,
+    /// Workload-class index (first-appearance order from the batcher).
+    pub class: usize,
+    /// Strategy the request ran under.
+    pub strategy: Strategy,
+    /// Scheduler tasks of the class plan.
+    pub tasks: u32,
+    /// Batch size (`n_in`) of the class plan.
+    pub n_in: u32,
+    /// Active macros of the class plan.
+    pub active_macros: u32,
+    /// Arrival time, cycles.
+    pub arrival_cycle: u64,
+    /// Cycles spent queued on the reference timeline.
+    pub queue_cycles: u64,
+    /// Simulated execution cycles of the workload class.
+    pub service_cycles: u64,
+    /// Input vectors computed by the service simulation.
+    pub vectors: u64,
+    /// `service_cycles ×` macros that did work — the request's share of
+    /// simulated hardware time.
+    pub macro_cycles: u64,
+}
+
+impl RequestRecord {
+    /// End-to-end latency on the reference timeline.
+    pub fn latency_cycles(&self) -> u64 {
+        self.queue_cycles + self.service_cycles
+    }
+}
+
+/// Aggregated outcome of one [`ServeEngine::run`](super::ServeEngine::run).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeReport {
+    /// Per-request records in id order.
+    pub records: Vec<RequestRecord>,
+    /// Distinct workload classes simulated.
+    pub classes: usize,
+    /// Simulated cycles actually executed per class (the deduplicated
+    /// work), indexed by class.
+    pub class_service_cycles: Vec<u64>,
+    /// Per-chip busy cycles under round-robin batch sharding
+    /// (`chip_busy[c]` = Σ service over requests of batches owned by `c`).
+    pub chip_busy_cycles: Vec<u64>,
+}
+
+impl ServeReport {
+    /// Requests served.
+    pub fn requests(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Nearest-rank percentiles of end-to-end latency, one per entry of
+    /// `ps` (each in (0, 100]), sorting the latency vector once.
+    pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        if self.records.is_empty() {
+            return vec![0; ps.len()];
+        }
+        let mut lat: Vec<u64> = self.records.iter().map(RequestRecord::latency_cycles).collect();
+        lat.sort_unstable();
+        let n = lat.len();
+        ps.iter()
+            .map(|p| {
+                let rank = ((p / 100.0) * n as f64).ceil() as usize;
+                lat[rank.clamp(1, n) - 1]
+            })
+            .collect()
+    }
+
+    /// Nearest-rank percentile of end-to-end latency, `p` in (0, 100].
+    pub fn latency_percentile(&self, p: f64) -> u64 {
+        self.latency_percentiles(&[p])[0]
+    }
+
+    /// Median latency, cycles.
+    pub fn p50(&self) -> u64 {
+        self.latency_percentile(50.0)
+    }
+
+    /// 95th-percentile latency, cycles.
+    pub fn p95(&self) -> u64 {
+        self.latency_percentile(95.0)
+    }
+
+    /// 99th-percentile latency, cycles.
+    pub fn p99(&self) -> u64 {
+        self.latency_percentile(99.0)
+    }
+
+    /// Mean latency, cycles (floor — kept integral for byte-stable CSVs).
+    pub fn mean_latency(&self) -> u64 {
+        if self.records.is_empty() {
+            return 0;
+        }
+        let total: u128 = self
+            .records
+            .iter()
+            .map(|r| r.latency_cycles() as u128)
+            .sum();
+        (total / self.records.len() as u128) as u64
+    }
+
+    /// Σ service cycles as *seen by requests* (class results fan out to
+    /// every member).
+    pub fn served_cycles(&self) -> u64 {
+        self.records.iter().map(|r| r.service_cycles).sum()
+    }
+
+    /// Σ macro-cycles as seen by requests.
+    pub fn served_macro_cycles(&self) -> u64 {
+        self.records.iter().map(|r| r.macro_cycles).sum()
+    }
+
+    /// Σ simulated cycles actually executed (once per class) — the
+    /// denominator for host-side throughput; always ≤ [`Self::served_cycles`].
+    pub fn simulated_cycles(&self) -> u64 {
+        self.class_service_cycles.iter().sum()
+    }
+
+    /// Total input vectors computed across requests.
+    pub fn served_vectors(&self) -> u64 {
+        self.records.iter().map(|r| r.vectors).sum()
+    }
+
+    /// Finish time of the last request on the reference timeline.
+    pub fn reference_makespan(&self) -> u64 {
+        self.records
+            .iter()
+            .map(|r| r.arrival_cycle + r.queue_cycles + r.service_cycles)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Simulated serving throughput: requests per mega-cycle of the
+    /// reference timeline.
+    pub fn requests_per_mcycle(&self) -> f64 {
+        let span = self.reference_makespan();
+        if span == 0 {
+            return 0.0;
+        }
+        self.records.len() as f64 * 1e6 / span as f64
+    }
+
+    /// Busiest chip's load — the fleet completion bound under the
+    /// round-robin sharding.
+    pub fn fleet_makespan(&self) -> u64 {
+        self.chip_busy_cycles.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fleet parallel speedup: total served cycles / fleet makespan.
+    pub fn fleet_speedup(&self) -> f64 {
+        let makespan = self.fleet_makespan();
+        if makespan == 0 {
+            return 0.0;
+        }
+        self.served_cycles() as f64 / makespan as f64
+    }
+
+    /// Per-request table (`serve.csv`): integer-only columns, id order —
+    /// the byte-comparison surface of the determinism tests.
+    pub fn to_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec![
+            "id",
+            "class",
+            "strategy",
+            "tasks",
+            "n_in",
+            "active_macros",
+            "arrival",
+            "queue",
+            "service",
+            "latency",
+            "vectors",
+        ]);
+        for r in &self.records {
+            t.push_row(vec![
+                r.id.to_string(),
+                r.class.to_string(),
+                r.strategy.name().to_string(),
+                r.tasks.to_string(),
+                r.n_in.to_string(),
+                r.active_macros.to_string(),
+                r.arrival_cycle.to_string(),
+                r.queue_cycles.to_string(),
+                r.service_cycles.to_string(),
+                r.latency_cycles().to_string(),
+                r.vectors.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Aggregate table (`serve_summary.csv`): percentiles + throughput.
+    pub fn summary_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec![
+            "requests",
+            "classes",
+            "p50_latency",
+            "p95_latency",
+            "p99_latency",
+            "mean_latency",
+            "makespan",
+            "requests_per_mcycle",
+            "served_cycles",
+            "simulated_cycles",
+            "served_macro_cycles",
+            "served_vectors",
+        ]);
+        let pcts = self.latency_percentiles(&[50.0, 95.0, 99.0]);
+        t.push_row(vec![
+            self.requests().to_string(),
+            self.classes.to_string(),
+            pcts[0].to_string(),
+            pcts[1].to_string(),
+            pcts[2].to_string(),
+            self.mean_latency().to_string(),
+            self.reference_makespan().to_string(),
+            format!("{:.4}", self.requests_per_mcycle()),
+            self.served_cycles().to_string(),
+            self.simulated_cycles().to_string(),
+            self.served_macro_cycles().to_string(),
+            self.served_vectors().to_string(),
+        ]);
+        t
+    }
+
+    /// Human-readable chip-fleet lines for stdout (chips-dependent, so
+    /// deliberately *not* part of any CSV).
+    pub fn fleet_lines(&self) -> String {
+        let mut out = String::new();
+        for (c, busy) in self.chip_busy_cycles.iter().enumerate() {
+            out.push_str(&format!("  chip {c:<3} busy {busy} cycles\n"));
+        }
+        out.push_str(&format!(
+            "  fleet makespan {} cycles, speedup {:.2}x over 1 chip\n",
+            self.fleet_makespan(),
+            self.fleet_speedup()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u32, arrival: u64, queue: u64, service: u64) -> RequestRecord {
+        RequestRecord {
+            id,
+            class: 0,
+            strategy: Strategy::GeneralizedPingPong,
+            tasks: 8,
+            n_in: 4,
+            active_macros: 8,
+            arrival_cycle: arrival,
+            queue_cycles: queue,
+            service_cycles: service,
+            vectors: 32,
+            macro_cycles: service * 8,
+        }
+    }
+
+    fn report() -> ServeReport {
+        ServeReport {
+            records: (0..100)
+                .map(|i| rec(i, i as u64 * 10, 0, (i as u64 + 1) * 10))
+                .collect(),
+            classes: 1,
+            class_service_cycles: vec![10],
+            chip_busy_cycles: vec![30, 20],
+        }
+    }
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        // Latencies are 10, 20, ..., 1000.
+        let r = report();
+        assert_eq!(r.p50(), 500);
+        assert_eq!(r.p95(), 950);
+        assert_eq!(r.p99(), 990);
+        assert_eq!(r.latency_percentile(100.0), 1000);
+        assert_eq!(r.latency_percentile(1.0), 10);
+        // The batch form sorts once and agrees with the single form.
+        assert_eq!(
+            r.latency_percentiles(&[1.0, 50.0, 95.0, 99.0, 100.0]),
+            vec![10, 500, 950, 990, 1000]
+        );
+    }
+
+    #[test]
+    fn empty_report_is_all_zeros() {
+        let r = ServeReport {
+            records: vec![],
+            classes: 0,
+            class_service_cycles: vec![],
+            chip_busy_cycles: vec![0],
+        };
+        assert_eq!(r.p50(), 0);
+        assert_eq!(r.mean_latency(), 0);
+        assert_eq!(r.reference_makespan(), 0);
+        assert_eq!(r.requests_per_mcycle(), 0.0);
+        assert_eq!(r.fleet_speedup(), 0.0);
+        assert_eq!(r.to_table().len(), 0);
+        assert_eq!(r.summary_table().len(), 1);
+    }
+
+    #[test]
+    fn aggregates_sum_over_records() {
+        let r = report();
+        assert_eq!(r.served_cycles(), (1..=100u64).map(|i| i * 10).sum());
+        assert_eq!(r.served_macro_cycles(), r.served_cycles() * 8);
+        assert_eq!(r.simulated_cycles(), 10);
+        assert_eq!(r.fleet_makespan(), 30);
+    }
+
+    #[test]
+    fn tables_are_deterministic_text() {
+        let a = report().to_table().to_csv();
+        let b = report().to_table().to_csv();
+        assert_eq!(a, b);
+        assert!(a.starts_with("id,class,strategy,"));
+        let s = report().summary_table().to_csv();
+        assert!(s.contains("p50_latency"));
+    }
+}

@@ -1,0 +1,172 @@
+//! Deterministic synthetic request traffic.
+//!
+//! Models the serving mix the paper's introduction motivates: a couple of
+//! "hot" production layer shapes dominate the stream, with a long tail of
+//! diverse shapes, batch sizes, strategies and resource settings.  The
+//! whole stream — shapes, knobs and the arrival process — is a pure
+//! function of the seed ([`XorShift64`]), so every experiment is exactly
+//! reproducible and the serve determinism tests can compare runs
+//! byte-for-byte.
+
+use super::Request;
+use crate::arch::ArchConfig;
+use crate::coordinator::RunConfig;
+use crate::gemm::blas::serving_catalog;
+use crate::sched::Strategy;
+use crate::util::rng::XorShift64;
+
+/// Traffic-stream parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficConfig {
+    /// Requests to generate.
+    pub requests: u32,
+    /// RNG seed; same seed ⇒ byte-identical stream.
+    pub seed: u64,
+    /// Mean inter-arrival gap in cycles (gaps are uniform in
+    /// `[0, 2 * mean]`, so this is the exact expectation).
+    pub mean_gap_cycles: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            requests: 256,
+            seed: 7,
+            mean_gap_cycles: 2048,
+        }
+    }
+}
+
+/// Share of requests drawn from the hot-path mix (per mille would be
+/// overkill: 7 in 10).
+const HOT_IN_TEN: u64 = 7;
+
+/// Generate a deterministic request stream for chips configured as
+/// `arch`.
+///
+/// 70% of requests are "hot": the first two catalog shapes at the
+/// architecture-default batch/speed on the full chip, GPP-heavy — these
+/// collapse into a handful of workload classes, which is what makes
+/// batched serving pay.  The remaining 30% sample the full catalog and
+/// knob space (every implemented strategy, `n_in ∈ {2,4,8,16}`,
+/// `active_macros ∈ {64,128,256}`, `write_speed ∈ {2,4,8}`), all within
+/// the validity envelope of [`SchedulePlan::check`].
+///
+/// [`SchedulePlan::check`]: crate::sched::SchedulePlan::check
+pub fn synthetic_traffic(arch: &ArchConfig, cfg: &TrafficConfig) -> Vec<Request> {
+    let catalog = serving_catalog();
+    let mut rng = XorShift64::new(cfg.seed);
+    let mut arrival = 0u64;
+    let mut out = Vec::with_capacity(cfg.requests as usize);
+    for id in 0..cfg.requests {
+        if cfg.mean_gap_cycles > 0 {
+            arrival += rng.next_below(2 * cfg.mean_gap_cycles + 1);
+        }
+        let hot = rng.next_below(10) < HOT_IN_TEN;
+        let (workload, run_cfg) = if hot {
+            let workload = catalog[rng.next_below(2) as usize].clone();
+            let strategy = if rng.next_below(4) == 0 {
+                Strategy::NaivePingPong
+            } else {
+                Strategy::GeneralizedPingPong
+            };
+            (workload, RunConfig::from_arch(arch, strategy))
+        } else {
+            let workload = catalog[rng.next_below(catalog.len() as u64) as usize].clone();
+            let strategy = Strategy::ALL_EXTENDED[rng.next_below(4) as usize];
+            let n_in = [2u32, 4, 8, 16][rng.next_below(4) as usize];
+            let active_macros = [64u32, 128, 256][rng.next_below(3) as usize];
+            let write_speed = [2u32, 4, 8][rng.next_below(3) as usize];
+            let run_cfg = RunConfig {
+                n_in,
+                active_macros: active_macros.min(arch.total_macros()),
+                write_speed: write_speed.clamp(arch.min_write_speed, arch.max_write_speed),
+                ..RunConfig::from_arch(arch, strategy)
+            };
+            (workload, run_cfg)
+        };
+        out.push(Request {
+            id,
+            arrival_cycle: arrival,
+            workload,
+            cfg: run_cfg,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::Batcher;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default()
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let cfg = TrafficConfig::default();
+        let a = synthetic_traffic(&arch(), &cfg);
+        let b = synthetic_traffic(&arch(), &cfg);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_cycle, y.arrival_cycle);
+            assert_eq!(x.workload.name, y.workload.name);
+            assert_eq!(x.cfg.strategy, y.cfg.strategy);
+            assert_eq!(x.cfg.n_in, y.cfg.n_in);
+            assert_eq!(x.cfg.active_macros, y.cfg.active_macros);
+            assert_eq!(x.cfg.write_speed, y.cfg.write_speed);
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = synthetic_traffic(&arch(), &TrafficConfig { seed: 1, ..Default::default() });
+        let b = synthetic_traffic(&arch(), &TrafficConfig { seed: 2, ..Default::default() });
+        assert!(
+            a.iter()
+                .zip(&b)
+                .any(|(x, y)| x.workload.name != y.workload.name
+                    || x.arrival_cycle != y.arrival_cycle),
+            "seeds 1 and 2 produced identical streams"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_nondecreasing_with_the_right_mean() {
+        let cfg = TrafficConfig {
+            requests: 512,
+            ..Default::default()
+        };
+        let reqs = synthetic_traffic(&arch(), &cfg);
+        assert!(reqs.windows(2).all(|p| p[0].arrival_cycle <= p[1].arrival_cycle));
+        let span = reqs.last().unwrap().arrival_cycle as f64;
+        let mean_gap = span / (reqs.len() as f64);
+        // Uniform [0, 2m] gaps: the empirical mean should be near m.
+        assert!(
+            (mean_gap / cfg.mean_gap_cycles as f64 - 1.0).abs() < 0.25,
+            "empirical mean gap {mean_gap} vs configured {}",
+            cfg.mean_gap_cycles
+        );
+    }
+
+    #[test]
+    fn every_generated_request_is_plannable_and_classes_collapse() {
+        let reqs = synthetic_traffic(&arch(), &TrafficConfig::default());
+        let set = Batcher::new(arch()).batch(&reqs).unwrap();
+        assert_eq!(set.requests(), reqs.len());
+        // The hot-path mix must make batching worthwhile.
+        assert!(
+            set.classes() * 2 < reqs.len(),
+            "{} classes for {} requests — traffic too diverse to batch",
+            set.classes(),
+            reqs.len()
+        );
+        // Every class plan passes validation against the architecture.
+        for b in &set.batches {
+            b.class.plan.check(&b.class.arch).unwrap();
+        }
+    }
+}

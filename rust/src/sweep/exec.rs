@@ -1,0 +1,97 @@
+//! The shared work-stealing indexed executor.
+//!
+//! Both the design-point sweep ([`super::SweepRunner`]) and the request
+//! serving engine ([`crate::serve::ServeEngine`]) have the same execution
+//! shape: `n` independent simulation jobs, each needing a recycled
+//! [`SimWorkspace`], with results that must come back in input order no
+//! matter how threads interleave.  This module is that shape, extracted
+//! once so the two subsystems cannot drift apart.
+//!
+//! Workers claim indices from a shared atomic counter (a worker that draws
+//! short simulations simply claims more indices — no static partitioning
+//! imbalance) and each owns one workspace for its whole lifetime, so the
+//! engine's per-run heap allocations amortize over every index the worker
+//! claims.
+
+use crate::sim::SimWorkspace;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Evaluate `eval(0..n)` with up to `jobs` worker threads, returning
+/// results in index order.
+///
+/// `eval` receives the index to evaluate and the calling worker's private
+/// recycled workspace.  With `jobs <= 1` (or `n <= 1`) everything runs on
+/// the calling thread — the determinism baseline, still with workspace
+/// reuse.  Results are keyed by input index, so for a deterministic `eval`
+/// the output is identical at every worker count.
+pub fn run_indexed<T, F>(jobs: usize, n: usize, eval: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut SimWorkspace) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let jobs = jobs.clamp(1, n);
+    if jobs == 1 {
+        let mut ws = SimWorkspace::new();
+        return (0..n).map(|i| eval(i, &mut ws)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            let eval = &eval;
+            scope.spawn(move || {
+                // One recycled workspace per worker: the engine's heap
+                // allocations are paid once per worker, not once per index.
+                let mut ws = SimWorkspace::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if tx.send((i, eval(i, &mut ws))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    drop(tx);
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|slot| slot.expect("every claimed index sends exactly one result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_index_order() {
+        let out = run_indexed(4, 100, |i, _ws| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn oversubscription_and_empty_are_fine() {
+        assert_eq!(run_indexed(64, 3, |i, _ws| i), vec![0, 1, 2]);
+        assert!(run_indexed(8, 0, |i, _ws| i).is_empty());
+    }
+
+    #[test]
+    fn sequential_path_matches_parallel() {
+        let f = |i: usize, _ws: &mut SimWorkspace| (i as u64).wrapping_mul(0x9E37);
+        assert_eq!(run_indexed(1, 37, f), run_indexed(5, 37, f));
+    }
+}

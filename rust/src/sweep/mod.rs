@@ -19,11 +19,14 @@
 //! - [`CodegenCache`] — programs memoized by `(strategy, plan, arch)`,
 //!   shared across worker threads (and across figures when one
 //!   [`SweepRunner`] is reused).
-//! - [`SweepRunner`] — a work-stealing parallel executor over OS threads
+//! - [`run_indexed`] — the generic work-stealing executor over OS threads
 //!   (`std::thread::scope`; no external deps).  Each worker owns one
 //!   recycled [`SimWorkspace`](crate::sim::SimWorkspace), so the engine's
 //!   per-run heap allocations are paid once per worker, not once per
-//!   point.
+//!   point.  Shared with [`crate::serve`], which multiplexes *requests*
+//!   instead of design points over the same loop.
+//! - [`SweepRunner`] — [`run_indexed`] plus the codegen cache and
+//!   per-point error attribution.
 //!
 //! **Determinism:** every point is simulated by a deterministic engine and
 //! results are written back by input index, so the output of a parallel
@@ -31,9 +34,11 @@
 //! by `tests/sweep_determinism.rs`.
 
 mod cache;
+mod exec;
 mod runner;
 
 pub use cache::CodegenCache;
+pub use exec::run_indexed;
 pub use runner::{default_jobs, SweepRunner};
 
 use crate::arch::ArchConfig;

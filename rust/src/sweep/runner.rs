@@ -1,15 +1,12 @@
 //! The parallel sweep executor.
 //!
-//! Work-stealing over plain OS threads: workers claim point indices from a
-//! shared atomic counter, so a worker that draws short simulations simply
-//! claims more points (no static partitioning imbalance).  Results are
-//! keyed by input index, making output ordering — and therefore every CSV
-//! and table rendered from it — independent of thread scheduling.
+//! The work-stealing loop itself lives in [`super::run_indexed`] (shared
+//! with the serving engine); this module adds the sweep-specific parts:
+//! the codegen cache, per-point error attribution, and the
+//! submission-order result contract every CSV and table relies on.
 
-use super::{CodegenCache, SweepError, SweepGrid, SweepPoint};
+use super::{exec, CodegenCache, SweepError, SweepGrid, SweepPoint};
 use crate::sim::{simulate_in, SimStats, SimWorkspace};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 
 /// Default worker count: one per available hardware thread.
 pub fn default_jobs() -> usize {
@@ -78,53 +75,9 @@ impl SweepRunner {
 
     /// [`SweepRunner::run`] over a raw point slice.
     pub fn run_points(&self, points: &[SweepPoint]) -> Vec<Result<SimStats, SweepError>> {
-        let n = points.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let jobs = self.jobs.min(n);
-        if jobs == 1 {
-            let mut ws = SimWorkspace::new();
-            return points
-                .iter()
-                .enumerate()
-                .map(|(i, p)| self.eval(i, p, &mut ws))
-                .collect();
-        }
-
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, Result<SimStats, SweepError>)>();
-        std::thread::scope(|scope| {
-            for _ in 0..jobs {
-                let tx = tx.clone();
-                let next = &next;
-                scope.spawn(move || {
-                    // One recycled workspace per worker: the engine's heap
-                    // allocations amortize over every point this worker
-                    // claims.
-                    let mut ws = SimWorkspace::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        if tx.send((i, self.eval(i, &points[i], &mut ws))).is_err() {
-                            break;
-                        }
-                    }
-                });
-            }
-        });
-        drop(tx);
-
-        let mut out: Vec<Option<Result<SimStats, SweepError>>> =
-            (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
-        }
-        out.into_iter()
-            .map(|slot| slot.expect("every claimed index sends exactly one result"))
-            .collect()
+        exec::run_indexed(self.jobs, points.len(), |i, ws| {
+            self.eval(i, &points[i], ws)
+        })
     }
 
     /// Evaluate every point, failing fast on the first error (by input

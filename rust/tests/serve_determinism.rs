@@ -1,0 +1,110 @@
+//! Serve determinism: the serving report must be a pure function of
+//! `(traffic, arch)` — independent of host worker count and chip-replica
+//! count — because the report CSVs are the artifact users diff and the
+//! perf-gate compares byte-for-byte in CI.
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::serve::{synthetic_traffic, Batcher, Request, ServeEngine, TrafficConfig};
+
+fn arch() -> ArchConfig {
+    ArchConfig::paper_default()
+}
+
+fn traffic(requests: u32, seed: u64) -> Vec<Request> {
+    synthetic_traffic(
+        &arch(),
+        &TrafficConfig {
+            requests,
+            seed,
+            mean_gap_cycles: 2048,
+        },
+    )
+}
+
+/// Per-request CSV + summary CSV: the full byte-comparison surface.
+fn report_csv(jobs: usize, chips: usize, requests: &[Request]) -> String {
+    let report = ServeEngine::new(arch(), jobs, chips).run(requests).unwrap();
+    format!(
+        "{}{}",
+        report.to_table().to_csv(),
+        report.summary_table().to_csv()
+    )
+}
+
+#[test]
+fn same_seed_same_jobs_byte_identical() {
+    let reqs = traffic(96, 7);
+    assert_eq!(report_csv(1, 1, &reqs), report_csv(1, 1, &reqs));
+}
+
+#[test]
+fn jobs_1_vs_n_byte_identical() {
+    let reqs = traffic(96, 7);
+    let base = report_csv(1, 1, &reqs);
+    for jobs in [2usize, 4, 16] {
+        assert_eq!(base, report_csv(jobs, 1, &reqs), "jobs={jobs} diverged");
+    }
+}
+
+#[test]
+fn chips_1_vs_2_remerge_byte_identical() {
+    let reqs = traffic(96, 7);
+    let base = report_csv(4, 1, &reqs);
+    for chips in [2usize, 3, 8] {
+        assert_eq!(base, report_csv(4, chips, &reqs), "chips={chips} diverged");
+    }
+}
+
+#[test]
+fn different_seeds_produce_different_reports() {
+    // Guards against the degenerate "deterministic because constant" bug.
+    let a = report_csv(2, 1, &traffic(64, 7));
+    let b = report_csv(2, 1, &traffic(64, 8));
+    assert_ne!(a, b);
+}
+
+#[test]
+fn batcher_shares_codegen_across_requests_in_one_class() {
+    // Classes with identical (strategy, plan, arch) must share one
+    // codegen cache entry: an engine reused across identical streams
+    // generates zero new programs and serves every class from cache.
+    let reqs = traffic(128, 7);
+    let set = Batcher::new(arch()).batch(&reqs).unwrap();
+    assert!(
+        set.classes() < reqs.len() / 2,
+        "traffic must fold {} requests into fewer than {} classes (got {})",
+        reqs.len(),
+        reqs.len() / 2,
+        set.classes()
+    );
+
+    let engine = ServeEngine::new(arch(), 4, 1);
+    engine.run(&reqs).unwrap();
+    assert_eq!(
+        engine.cache().misses(),
+        set.classes() as u64,
+        "exactly one generated program per class"
+    );
+    assert_eq!(engine.cache().hits(), 0);
+
+    engine.run(&reqs).unwrap();
+    assert_eq!(
+        engine.cache().misses(),
+        set.classes() as u64,
+        "re-serving the stream must not generate new programs"
+    );
+    assert_eq!(
+        engine.cache().hits(),
+        set.classes() as u64,
+        "every class must hit the shared cache entry on re-serve"
+    );
+}
+
+#[test]
+fn oversubscribed_engine_is_fine() {
+    // More workers than classes: the work-stealing loop must neither
+    // deadlock nor drop classes.
+    let reqs = traffic(24, 3);
+    let report = ServeEngine::new(arch(), 64, 2).run(&reqs).unwrap();
+    assert_eq!(report.requests(), 24);
+}

@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# Validate BENCH_*.json files against the EXPERIMENTS.md §Tracking schema:
+# a JSON array of records {name: string, median_secs: number >= 0,
+# macro_cycles_per_s: number | null} — exactly those fields, no extras.
+#
+# Usage:
+#   scripts/check_bench_schema.sh            # every committed BENCH_*.json
+#   scripts/check_bench_schema.sh FILE...    # explicit files (CI validates
+#                                            # freshly produced bench output)
+#
+# The same rules are implemented in Rust for the benches themselves
+# (report::benchkit::validate_bench_json, unit-tested); this script is the
+# toolchain-independent CI hook for *committed* files.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "$#" -gt 0 ]; then
+  files=("$@")
+else
+  # All committed BENCH_*.json anywhere in the repo.
+  mapfile -t files < <(git ls-files 'BENCH_*.json' '*/BENCH_*.json' '**/BENCH_*.json' | sort -u)
+fi
+
+if [ "${#files[@]}" -eq 0 ]; then
+  echo "check_bench_schema: no BENCH_*.json files to validate (ok)"
+  exit 0
+fi
+
+python3 - "${files[@]}" <<'EOF'
+import json
+import math
+import sys
+
+REQUIRED = {"name", "median_secs", "macro_cycles_per_s"}
+failed = False
+
+def err(path, msg):
+    global failed, file_ok
+    failed = True
+    file_ok = False
+    print(f"check_bench_schema: {path}: {msg}", file=sys.stderr)
+
+for path in sys.argv[1:]:
+    file_ok = True
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        err(path, f"unreadable or invalid JSON: {e}")
+        continue
+    if not isinstance(data, list):
+        err(path, f"top level must be an array, got {type(data).__name__}")
+        continue
+    for i, rec in enumerate(data):
+        where = f"record {i}"
+        if not isinstance(rec, dict):
+            err(path, f"{where}: must be an object")
+            continue
+        if set(rec) != REQUIRED:
+            err(path, f"{where}: fields {sorted(rec)} != {sorted(REQUIRED)}")
+            continue
+        if not isinstance(rec["name"], str) or not rec["name"]:
+            err(path, f"{where}: name must be a non-empty string")
+        ms = rec["median_secs"]
+        if isinstance(ms, bool) or not isinstance(ms, (int, float)) \
+                or not math.isfinite(ms) or ms < 0:
+            err(path, f"{where}: median_secs must be a finite number >= 0, got {ms!r}")
+        rate = rec["macro_cycles_per_s"]
+        if rate is not None and (isinstance(rate, bool) or not isinstance(rate, (int, float))):
+            err(path, f"{where}: macro_cycles_per_s must be a number or null, got {rate!r}")
+    if file_ok:
+        print(f"check_bench_schema: {path}: OK ({len(data)} records)")
+
+sys.exit(1 if failed else 0)
+EOF
