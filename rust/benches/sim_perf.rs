@@ -3,22 +3,33 @@
 //! EXPERIMENTS.md is >= 50M macro-cycles/s on the full-chip workload —
 //! for both the fresh-allocation path (`simulate`) and the recycled
 //! workspace path (`simulate_in`), so the zero-realloc win is visible.
-//! `cargo bench --bench sim_perf`
+//!
+//! Writes `BENCH_sim.json` (schema: EXPERIMENTS.md §Tracking): one
+//! engine-level record, the single-point `simulate_in` throughput on the
+//! full-chip workload, validated against the schema before exiting.
+//! Reduced-size runs: set `GPP_SIM_TASKS` / `GPP_BENCH_ITERS` (CI
+//! bench-smoke).  `cargo bench --bench sim_perf`
 
 use gpp_pim::arch::ArchConfig;
-use gpp_pim::report::benchkit::{section, Bench};
+use gpp_pim::report::benchkit::{
+    env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
+};
 use gpp_pim::sched::{SchedulePlan, Strategy};
 use gpp_pim::sim::{simulate, simulate_in, SimOptions, SimWorkspace};
+use std::path::Path;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let iters = env_u64("GPP_BENCH_ITERS", 7) as usize;
+    let full_chip_tasks = env_u64("GPP_SIM_TASKS", 8192) as u32;
+
     section("simulator throughput (event-accelerated engine)");
-    let bench = Bench::new(1, 7);
+    let bench = Bench::new(1, iters);
 
     for (name, tasks, active, n_in, band) in [
-        ("full-chip/256-macros/8k-tasks", 8192u32, 256u32, 4u32, 512u64),
-        ("full-chip/256-macros/32k-tasks", 32768, 256, 4, 512),
-        ("contended-bus/64-macros", 8192, 64, 4, 32),
-        ("compute-heavy/128-macros", 8192, 128, 16, 128),
+        ("full-chip/256-macros/8k-tasks", full_chip_tasks, 256u32, 4u32, 512u64),
+        ("full-chip/256-macros/32k-tasks", 4 * full_chip_tasks, 256, 4, 512),
+        ("contended-bus/64-macros", full_chip_tasks, 64, 4, 32),
+        ("compute-heavy/128-macros", full_chip_tasks, 128, 16, 128),
     ] {
         let mut arch = ArchConfig::paper_default();
         arch.bandwidth = band;
@@ -59,7 +70,7 @@ fn main() {
         write_speed: 8,
     };
     let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
-    let bench = Bench::new(2, 15);
+    let bench = Bench::new(2, (2 * iters).max(2));
     let fresh = bench.run("short-run/fresh-alloc", || {
         simulate(&arch, &program, SimOptions::default()).unwrap().stats.cycles
     });
@@ -76,4 +87,36 @@ fn main() {
         "-> workspace reuse: {:.2}x on short runs",
         fresh.median_secs() / reused.median_secs()
     );
+
+    section("tracking record: single-point simulate_in throughput");
+    // The engine-level BENCH_sim.json record (§Tracking): the gpp
+    // full-chip point through the recycled-workspace path — the exact
+    // per-point cost every sweep and serve simulation pays.
+    let plan = SchedulePlan {
+        tasks: full_chip_tasks,
+        active_macros: 256,
+        n_in: 4,
+        write_speed: 8,
+    };
+    let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+    let mut ws = SimWorkspace::new();
+    let mut sim_cycles = 0u64;
+    let m = Bench::new(1, iters).run("sim/full-chip-gpp/simulate_in", || {
+        let r = simulate_in(&arch, &program, SimOptions::default(), &mut ws).unwrap();
+        sim_cycles = r.stats.cycles;
+        r.stats.cycles
+    });
+    let macro_cycles = sim_cycles as f64 * 256.0;
+    println!(
+        "{}   -> {:.1}M macro-cycles/s",
+        m.line(),
+        macro_cycles / m.median_secs() / 1e6
+    );
+    let records = [BenchRecord::new(&m, Some(macro_cycles))];
+    let out = Path::new("BENCH_sim.json");
+    write_bench_json(out, &records)?;
+    let text = std::fs::read_to_string(out)?;
+    let n = validate_bench_json(&text).map_err(|e| anyhow::anyhow!("schema: {e}"))?;
+    println!("\n[wrote {} ({n} records, schema OK)]", out.display());
+    Ok(())
 }

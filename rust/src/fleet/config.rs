@@ -1,0 +1,278 @@
+//! Fleet composition: one [`ArchConfig`] per chip.
+//!
+//! A fleet is an ordered list of chip architectures.  The *reference*
+//! chip is chip 0: the serving reports lay their chips-invariant
+//! reference timeline on it (see [`crate::serve::report`]), and CLI
+//! traffic is generated against it.  Homogeneous fleets (every chip the
+//! same arch — the replicated-chip sharding of earlier PRs) are the
+//! special case [`FleetConfig::homogeneous`].
+
+use crate::arch::{ArchConfig, ArchError};
+use thiserror::Error;
+
+/// What went wrong building a fleet.
+#[derive(Debug, Error)]
+pub enum FleetError {
+    #[error("fleet must have at least one chip")]
+    Empty,
+    #[error("bad fleet spec '{spec}': {reason}")]
+    Spec { spec: String, reason: String },
+    #[error("fleet chip architecture invalid: {0}")]
+    Arch(#[from] ArchError),
+}
+
+/// An ordered, non-empty list of chip architectures.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FleetConfig {
+    chips: Vec<ArchConfig>,
+}
+
+impl FleetConfig {
+    /// A fleet from an explicit per-chip arch list; rejects empty fleets.
+    pub fn new(chips: Vec<ArchConfig>) -> Result<Self, FleetError> {
+        if chips.is_empty() {
+            return Err(FleetError::Empty);
+        }
+        Ok(Self { chips })
+    }
+
+    /// `n` identical chips (`0` is clamped to 1 — the library-level
+    /// last-resort guard; the CLI rejects `--chips 0` outright).
+    pub fn homogeneous(arch: ArchConfig, n: usize) -> Self {
+        Self {
+            chips: vec![arch; n.max(1)],
+        }
+    }
+
+    /// Number of chips.
+    pub fn len(&self) -> usize {
+        self.chips.len()
+    }
+
+    /// Fleets are never empty, but the conventional probe exists.
+    pub fn is_empty(&self) -> bool {
+        self.chips.is_empty()
+    }
+
+    /// The per-chip architectures, in chip order.
+    pub fn chips(&self) -> &[ArchConfig] {
+        &self.chips
+    }
+
+    /// The reference chip's architecture (chip 0).
+    pub fn reference(&self) -> &ArchConfig {
+        &self.chips[0]
+    }
+
+    /// True when every chip shares one architecture.
+    pub fn is_homogeneous(&self) -> bool {
+        self.chips.iter().all(|c| c == &self.chips[0])
+    }
+
+    /// Deduplicated architectures in first-appearance chip order, plus
+    /// the chip → distinct-arch index map.  `distinct().0[0]` is always
+    /// the reference arch.  Heterogeneous serving keys codegen and
+    /// simulation on these distinct archs, not on chips.
+    pub fn distinct(&self) -> (Vec<ArchConfig>, Vec<usize>) {
+        let mut archs: Vec<ArchConfig> = Vec::new();
+        let mut arch_of_chip = Vec::with_capacity(self.chips.len());
+        for chip in &self.chips {
+            let a = match archs.iter().position(|a| a == chip) {
+                Some(a) => a,
+                None => {
+                    archs.push(chip.clone());
+                    archs.len() - 1
+                }
+            };
+            arch_of_chip.push(a);
+        }
+        (archs, arch_of_chip)
+    }
+
+    /// Compact signature of one chip's arch for tables and CSVs:
+    /// cores×macros, bandwidth, write speed, `n_in`.  (A label, not a
+    /// full fingerprint — chips differing only in buffer size or OU
+    /// geometry share one.)
+    pub fn arch_label(&self, chip: usize) -> String {
+        let a = &self.chips[chip];
+        format!(
+            "c{}x{}-b{}-s{}-n{}",
+            a.n_cores, a.macros_per_core, a.bandwidth, a.write_speed, a.n_in
+        )
+    }
+
+    /// One-line fleet description: distinct archs with their chip counts,
+    /// e.g. `2xc16x16-b512-s8-n4+1xc16x16-b256-s8-n4`.
+    pub fn describe(&self) -> String {
+        let (archs, arch_of_chip) = self.distinct();
+        let mut counts = vec![0usize; archs.len()];
+        for &a in &arch_of_chip {
+            counts[a] += 1;
+        }
+        let first_chip_of: Vec<usize> = (0..archs.len())
+            .map(|a| arch_of_chip.iter().position(|&x| x == a).unwrap())
+            .collect();
+        counts
+            .iter()
+            .zip(&first_chip_of)
+            .map(|(n, &c)| format!("{n}x{}", self.arch_label(c)))
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Parse a CLI fleet spec: comma-separated groups
+    /// `[COUNTx]PRESET[:KEY=VALUE...]`.
+    ///
+    /// Presets: `paper` ([`ArchConfig::paper_default`]), `fig4`
+    /// ([`ArchConfig::fig4_default`]), `base` (the `--config`-loaded
+    /// architecture).  Keys: `band` (bandwidth B/cyc), `s` (write
+    /// speed), `cores`, `macros` (macros per core), `nin`, `buf` (core
+    /// buffer bytes).  Every resulting arch is validated.
+    ///
+    /// Examples: `4xpaper`, `2xbase,2xbase:band=256`,
+    /// `paper,paper:s=4:nin=8`.
+    pub fn parse(spec: &str, base: &ArchConfig) -> Result<Self, FleetError> {
+        let err = |reason: String| FleetError::Spec {
+            spec: spec.to_string(),
+            reason,
+        };
+        let mut chips = Vec::new();
+        for group in spec.split(',') {
+            let group = group.trim();
+            if group.is_empty() {
+                return Err(err("empty chip group".into()));
+            }
+            let mut parts = group.split(':');
+            let head = parts.next().unwrap_or_default();
+            let (count, preset) = match head.split_once('x') {
+                Some((n, p)) if !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()) => {
+                    let count: usize = n
+                        .parse()
+                        .map_err(|_| err(format!("bad chip count '{n}'")))?;
+                    (count, p)
+                }
+                _ => (1, head),
+            };
+            if count == 0 {
+                return Err(err(format!("chip count must be >= 1 in '{group}'")));
+            }
+            let mut arch = match preset {
+                "paper" => ArchConfig::paper_default(),
+                "fig4" => ArchConfig::fig4_default(),
+                "base" | "config" => base.clone(),
+                other => {
+                    return Err(err(format!(
+                        "unknown preset '{other}' (paper|fig4|base)"
+                    )))
+                }
+            };
+            for kv in parts {
+                let (key, value) = kv
+                    .split_once('=')
+                    .ok_or_else(|| err(format!("expected KEY=VALUE, got '{kv}'")))?;
+                let bad = |what: &str| err(format!("bad {what} '{value}' in '{group}'"));
+                match key {
+                    "band" => arch.bandwidth = value.parse().map_err(|_| bad("band"))?,
+                    "s" => arch.write_speed = value.parse().map_err(|_| bad("s"))?,
+                    "cores" => arch.n_cores = value.parse().map_err(|_| bad("cores"))?,
+                    "macros" => {
+                        arch.macros_per_core = value.parse().map_err(|_| bad("macros"))?
+                    }
+                    "nin" => arch.n_in = value.parse().map_err(|_| bad("nin"))?,
+                    "buf" => {
+                        arch.core_buffer_bytes = value.parse().map_err(|_| bad("buf"))?
+                    }
+                    other => {
+                        return Err(err(format!(
+                            "unknown key '{other}' (band|s|cores|macros|nin|buf)"
+                        )))
+                    }
+                }
+            }
+            arch.validate()?;
+            for _ in 0..count {
+                chips.push(arch.clone());
+            }
+        }
+        Self::new(chips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arch() -> ArchConfig {
+        ArchConfig::paper_default()
+    }
+
+    #[test]
+    fn homogeneous_clamps_and_replicates() {
+        let f = FleetConfig::homogeneous(arch(), 3);
+        assert_eq!(f.len(), 3);
+        assert!(f.is_homogeneous());
+        assert_eq!(f.reference(), &arch());
+        assert_eq!(FleetConfig::homogeneous(arch(), 0).len(), 1);
+    }
+
+    #[test]
+    fn new_rejects_empty() {
+        assert!(matches!(FleetConfig::new(vec![]), Err(FleetError::Empty)));
+    }
+
+    #[test]
+    fn distinct_dedups_in_first_appearance_order() {
+        let mut slow = arch();
+        slow.bandwidth = 256;
+        let f = FleetConfig::new(vec![arch(), slow.clone(), arch(), slow.clone()]).unwrap();
+        let (archs, arch_of_chip) = f.distinct();
+        assert_eq!(archs.len(), 2);
+        assert_eq!(archs[0], arch());
+        assert_eq!(archs[1], slow);
+        assert_eq!(arch_of_chip, vec![0, 1, 0, 1]);
+        assert!(!f.is_homogeneous());
+    }
+
+    #[test]
+    fn parse_counts_presets_and_overrides() {
+        let f = FleetConfig::parse("2xpaper,1xpaper:band=256:s=4", &arch()).unwrap();
+        assert_eq!(f.len(), 3);
+        assert_eq!(f.chips()[0], arch());
+        assert_eq!(f.chips()[2].bandwidth, 256);
+        assert_eq!(f.chips()[2].write_speed, 4);
+        let (archs, _) = f.distinct();
+        assert_eq!(archs.len(), 2);
+    }
+
+    #[test]
+    fn parse_base_uses_the_loaded_arch() {
+        let mut custom = arch();
+        custom.bandwidth = 64;
+        let f = FleetConfig::parse("base,base:band=128", &custom).unwrap();
+        assert_eq!(f.chips()[0].bandwidth, 64);
+        assert_eq!(f.chips()[1].bandwidth, 128);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "",
+            "0xpaper",
+            "2xunknown",
+            "paper:band",
+            "paper:color=red",
+            "paper,,paper",
+            "paper:s=99", // validated: outside [min, max] write speed
+        ] {
+            assert!(FleetConfig::parse(bad, &arch()).is_err(), "spec '{bad}'");
+        }
+    }
+
+    #[test]
+    fn labels_and_describe_are_stable() {
+        let f = FleetConfig::parse("2xpaper,1xpaper:band=256", &arch()).unwrap();
+        assert_eq!(f.arch_label(0), "c16x16-b512-s8-n4");
+        assert_eq!(f.arch_label(2), "c16x16-b256-s8-n4");
+        assert_eq!(f.describe(), "2xc16x16-b512-s8-n4+1xc16x16-b256-s8-n4");
+    }
+}

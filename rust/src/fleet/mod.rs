@@ -1,0 +1,36 @@
+//! Multi-chip fleets: heterogeneous chip configurations, pluggable
+//! placement policies, and a deterministic cross-chip queueing model.
+//!
+//! The paper's generalized ping-pong strategy exists because one PIM
+//! chip cannot hold large-model weights; at serving scale the same
+//! pressure recurs one level up — a *fleet* of chips cannot be modelled
+//! as one replicated timeline.  This module owns the fleet-level system
+//! model the serving layer ([`crate::serve`]) runs on:
+//!
+//! - [`FleetConfig`] — N chips, each with its own
+//!   [`ArchConfig`](crate::arch::ArchConfig); homogeneous replication is
+//!   the special case.  Parses CLI `--fleet` specs.
+//! - [`Placement`] — the chip-selection policy trait, with deterministic
+//!   [`RoundRobin`], [`LeastLoaded`] (ties by chip index) and
+//!   [`ClassAffinity`] (cache locality: a workload class stays with the
+//!   chip that already generated its program) implementations, selected
+//!   by [`PlacementPolicy`].
+//! - [`dispatch_fifo`] — a discrete-event timeline dispatching requests
+//!   at their arrival cycles onto per-chip FIFO queues, yielding true
+//!   per-request queueing + service latency per policy.
+//!
+//! **Determinism:** every piece here is a pure function of its inputs —
+//! no wall clock, no map-iteration order, no thread interleaving — so
+//! fleet reports stay byte-identical across `--jobs` settings
+//! (`tests/fleet_determinism.rs`).
+
+mod config;
+mod placement;
+mod timeline;
+
+pub use config::{FleetConfig, FleetError};
+pub use placement::{
+    ClassAffinity, DispatchContext, FleetState, LeastLoaded, Placement, PlacementPolicy,
+    RoundRobin,
+};
+pub use timeline::{dispatch_fifo, Dispatch, FleetTimeline, PlacedRequest};

@@ -1,0 +1,270 @@
+//! Pluggable chip-placement policies.
+//!
+//! A [`Placement`] decides, per dispatched request, which chip's FIFO
+//! queue to append it to.  Policies see the fleet's queue state
+//! ([`FleetState`]) and the request's identity/cost ([`DispatchContext`])
+//! and must be **deterministic**: same dispatch sequence, same decisions.
+//! That keeps every fleet report a pure function of `(traffic, fleet,
+//! policy)` — byte-identical across host worker counts.
+//!
+//! The three built-in policies mirror the knobs multi-core PIM stacks
+//! expose (PIMCOMP, arXiv 2411.09159): static round-robin, load
+//! balancing, and cache locality.
+
+use std::collections::HashMap;
+
+/// One request about to be dispatched.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchContext<'a> {
+    /// Request id.
+    pub id: u32,
+    /// Arrival (= dispatch) cycle.
+    pub arrival_cycle: u64,
+    /// Reference workload-class index of the request — stable across
+    /// chips, the key [`ClassAffinity`] pins.
+    pub class: usize,
+    /// Service cycles this request would cost on each chip (heterogeneous
+    /// fleets: one entry per chip, differing by chip arch).
+    pub service_on: &'a [u64],
+}
+
+/// Fleet queue state at dispatch time.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetState<'a> {
+    /// Cycle at which each chip's FIFO queue drains.
+    pub busy_until: &'a [u64],
+    /// The dispatch cycle (the request's arrival).
+    pub now: u64,
+}
+
+impl FleetState<'_> {
+    /// Number of chips in the fleet.
+    pub fn chips(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    /// Outstanding queued work on `chip` at `now`, in cycles.
+    pub fn backlog(&self, chip: usize) -> u64 {
+        self.busy_until[chip].saturating_sub(self.now)
+    }
+
+    /// Chip with the smallest backlog; ties broken by lowest chip index
+    /// (the deterministic tie-break every policy shares).
+    pub fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        for c in 1..self.chips() {
+            if self.backlog(c) < self.backlog(best) {
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+/// A deterministic chip-placement policy.
+pub trait Placement {
+    /// Short policy name (CSV `policy` column, CLI value).
+    fn name(&self) -> &'static str;
+
+    /// Chip for this dispatch.  Out-of-range returns are clamped by the
+    /// timeline; implementations should stay within `0..state.chips()`.
+    fn place(&mut self, ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize;
+}
+
+/// Static round-robin over chips in dispatch order — the replicated-chip
+/// sharding of earlier PRs, now expressed as a policy.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    /// A fresh round-robin counter starting at chip 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        PlacementPolicy::RoundRobin.name()
+    }
+
+    fn place(&mut self, _ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize {
+        let c = self.next % state.chips();
+        self.next = self.next.wrapping_add(1);
+        c
+    }
+}
+
+/// Greedy load balancing: the chip with the least outstanding queued
+/// work at dispatch time, ties broken by chip index.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Placement for LeastLoaded {
+    fn name(&self) -> &'static str {
+        PlacementPolicy::LeastLoaded.name()
+    }
+
+    fn place(&mut self, _ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize {
+        state.least_loaded()
+    }
+}
+
+/// Cache locality: a workload class stays on the chip that first served
+/// it (that chip already generated — and cached — the class's program).
+/// First appearance places least-loaded, ties by chip index.
+#[derive(Debug, Default)]
+pub struct ClassAffinity {
+    owner: HashMap<usize, usize>,
+}
+
+impl ClassAffinity {
+    /// An affinity map with no classes pinned yet.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Placement for ClassAffinity {
+    fn name(&self) -> &'static str {
+        PlacementPolicy::ClassAffinity.name()
+    }
+
+    fn place(&mut self, ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize {
+        if let Some(&c) = self.owner.get(&ctx.class) {
+            return c;
+        }
+        let c = state.least_loaded();
+        self.owner.insert(ctx.class, c);
+        c
+    }
+}
+
+/// Policy selector (CLI `--placement`, sweep axes, reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlacementPolicy {
+    /// [`RoundRobin`].
+    RoundRobin,
+    /// [`LeastLoaded`].
+    LeastLoaded,
+    /// [`ClassAffinity`].
+    ClassAffinity,
+}
+
+impl PlacementPolicy {
+    /// Every built-in policy, in CLI order.
+    pub const ALL: [PlacementPolicy; 3] = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastLoaded,
+        PlacementPolicy::ClassAffinity,
+    ];
+
+    /// Short name used in reports and CLI arguments.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "rr",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::ClassAffinity => "affinity",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" | "roundrobin" => Some(PlacementPolicy::RoundRobin),
+            "least-loaded" | "ll" | "leastloaded" => Some(PlacementPolicy::LeastLoaded),
+            "affinity" | "class-affinity" => Some(PlacementPolicy::ClassAffinity),
+            _ => None,
+        }
+    }
+
+    /// A fresh, stateless-start policy instance for one timeline run.
+    pub fn instance(&self) -> Box<dyn Placement> {
+        match self {
+            PlacementPolicy::RoundRobin => Box::new(RoundRobin::new()),
+            PlacementPolicy::LeastLoaded => Box::new(LeastLoaded),
+            PlacementPolicy::ClassAffinity => Box::new(ClassAffinity::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(class: usize) -> DispatchContext<'static> {
+        DispatchContext {
+            id: 0,
+            arrival_cycle: 0,
+            class,
+            service_on: &[10, 10, 10],
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::from_name(p.name()), Some(p));
+            assert_eq!(p.instance().name(), p.name());
+        }
+        assert_eq!(PlacementPolicy::from_name("nope"), None);
+        assert_eq!(
+            PlacementPolicy::from_name("LL"),
+            Some(PlacementPolicy::LeastLoaded)
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut p = RoundRobin::new();
+        let busy = [0u64; 3];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 0,
+        };
+        let picks: Vec<usize> = (0..6).map(|_| p.place(&ctx(0), &state)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_by_index() {
+        let mut p = LeastLoaded;
+        let busy = [50u64, 20, 20];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 10,
+        };
+        assert_eq!(state.backlog(0), 40);
+        assert_eq!(state.backlog(1), 10);
+        assert_eq!(p.place(&ctx(0), &state), 1, "tie between 1 and 2 -> 1");
+        // A drained queue (busy_until in the past) has zero backlog.
+        let busy = [5u64, 20, 30];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 10,
+        };
+        assert_eq!(p.place(&ctx(0), &state), 0);
+    }
+
+    #[test]
+    fn class_affinity_pins_first_placement() {
+        let mut p = ClassAffinity::new();
+        let busy = [100u64, 0, 50];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 0,
+        };
+        assert_eq!(p.place(&ctx(7), &state), 1, "first sighting: least loaded");
+        // Class 7 stays on chip 1 even when chip 1 is now the busiest.
+        let busy = [0u64, 500, 0];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 0,
+        };
+        assert_eq!(p.place(&ctx(7), &state), 1);
+        // A new class goes by load again.
+        assert_eq!(p.place(&ctx(8), &state), 0);
+    }
+}

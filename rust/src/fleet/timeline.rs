@@ -1,0 +1,191 @@
+//! The deterministic discrete-event fleet timeline.
+//!
+//! Requests are dispatched at their arrival cycles, in `(arrival, id)`
+//! order, onto per-chip FIFO queues; the placement policy picks the
+//! queue.  Because every chip serves FIFO, a chip's whole queue state is
+//! its drain time (`busy_until`), so the "event loop" is a single pass
+//! over dispatches — O(n·chips) — yet yields exact per-request queueing
+//! and service latency under the chosen policy, replacing the
+//! single-chip reference-timeline proxy of earlier PRs.
+
+use super::placement::{DispatchContext, FleetState, Placement};
+
+/// One request to dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    /// Request id (the `(arrival, id)` dispatch-order tie-break).
+    pub id: u32,
+    /// Arrival (= dispatch) cycle.
+    pub arrival_cycle: u64,
+    /// Reference workload-class index (what [`ClassAffinity`] pins).
+    ///
+    /// [`ClassAffinity`]: super::ClassAffinity
+    pub class: usize,
+}
+
+/// Where one dispatch landed and what it cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacedRequest {
+    /// Serving chip.
+    pub chip: usize,
+    /// Cycle service began (`max(arrival, chip drain time)`).
+    pub start_cycle: u64,
+    /// Service cycles on the serving chip's architecture.
+    pub service_cycles: u64,
+}
+
+/// The outcome of one timeline run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetTimeline {
+    /// Per-dispatch placements, indexed like the input slice.
+    pub placements: Vec<PlacedRequest>,
+    /// Σ service cycles executed per chip.
+    pub chip_busy_cycles: Vec<u64>,
+    /// Requests served per chip.
+    pub chip_requests: Vec<u64>,
+    /// Finish cycle of the last request (0 for an empty timeline).
+    pub makespan: u64,
+}
+
+/// Run the timeline: dispatch every request in `(arrival, id)` order
+/// onto the chip `policy` picks; chips serve FIFO.
+///
+/// `service_on(dispatch_index, chip)` is the request's service cost on
+/// that chip (heterogeneous fleets: per-chip-arch simulation cycles).
+/// Output is a pure function of the inputs — the policy contract
+/// requires deterministic `place` decisions.
+pub fn dispatch_fifo(
+    chips: usize,
+    dispatches: &[Dispatch],
+    service_on: impl Fn(usize, usize) -> u64,
+    policy: &mut dyn Placement,
+) -> FleetTimeline {
+    let chips = chips.max(1);
+    let mut order: Vec<usize> = (0..dispatches.len()).collect();
+    order.sort_by_key(|&i| (dispatches[i].arrival_cycle, dispatches[i].id));
+
+    let mut busy_until = vec![0u64; chips];
+    let mut chip_busy_cycles = vec![0u64; chips];
+    let mut chip_requests = vec![0u64; chips];
+    let mut placements = vec![
+        PlacedRequest {
+            chip: 0,
+            start_cycle: 0,
+            service_cycles: 0,
+        };
+        dispatches.len()
+    ];
+    let mut service = vec![0u64; chips];
+    for &i in &order {
+        let d = &dispatches[i];
+        for (c, s) in service.iter_mut().enumerate() {
+            *s = service_on(i, c);
+        }
+        let chip = policy
+            .place(
+                &DispatchContext {
+                    id: d.id,
+                    arrival_cycle: d.arrival_cycle,
+                    class: d.class,
+                    service_on: &service,
+                },
+                &FleetState {
+                    busy_until: &busy_until,
+                    now: d.arrival_cycle,
+                },
+            )
+            .min(chips - 1);
+        let start = busy_until[chip].max(d.arrival_cycle);
+        busy_until[chip] = start + service[chip];
+        chip_busy_cycles[chip] += service[chip];
+        chip_requests[chip] += 1;
+        placements[i] = PlacedRequest {
+            chip,
+            start_cycle: start,
+            service_cycles: service[chip],
+        };
+    }
+    FleetTimeline {
+        placements,
+        chip_busy_cycles,
+        chip_requests,
+        makespan: busy_until.iter().copied().max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{LeastLoaded, RoundRobin};
+
+    fn dispatches(arrivals: &[u64]) -> Vec<Dispatch> {
+        arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| Dispatch {
+                id: i as u32,
+                arrival_cycle: a,
+                class: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_chip_is_fifo_in_arrival_order() {
+        let d = dispatches(&[0, 0, 5]);
+        let t = dispatch_fifo(1, &d, |_, _| 10, &mut RoundRobin::new());
+        assert_eq!(t.placements[0].start_cycle, 0);
+        assert_eq!(t.placements[1].start_cycle, 10);
+        assert_eq!(t.placements[2].start_cycle, 20);
+        assert_eq!(t.makespan, 30);
+        assert_eq!(t.chip_busy_cycles, vec![30]);
+        assert_eq!(t.chip_requests, vec![3]);
+    }
+
+    #[test]
+    fn dispatch_order_is_arrival_then_id() {
+        // Input out of arrival order: id 1 arrives first and must queue
+        // first.
+        let d = vec![
+            Dispatch {
+                id: 0,
+                arrival_cycle: 100,
+                class: 0,
+            },
+            Dispatch {
+                id: 1,
+                arrival_cycle: 0,
+                class: 0,
+            },
+        ];
+        let t = dispatch_fifo(1, &d, |_, _| 50, &mut RoundRobin::new());
+        assert_eq!(t.placements[1].start_cycle, 0);
+        assert_eq!(t.placements[0].start_cycle, 100, "drained before id 0 arrives");
+    }
+
+    #[test]
+    fn idle_gaps_count_toward_makespan_not_busy() {
+        let d = dispatches(&[1000]);
+        let t = dispatch_fifo(2, &d, |_, _| 10, &mut LeastLoaded);
+        assert_eq!(t.makespan, 1010);
+        assert_eq!(t.chip_busy_cycles.iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn heterogeneous_service_cost_follows_the_serving_chip() {
+        // Chip 1 is twice as slow; round-robin alternates anyway.
+        let d = dispatches(&[0, 0]);
+        let t = dispatch_fifo(2, &d, |_, chip| if chip == 0 { 10 } else { 20 }, &mut RoundRobin::new());
+        assert_eq!(t.placements[0].service_cycles, 10);
+        assert_eq!(t.placements[1].service_cycles, 20);
+        assert_eq!(t.makespan, 20);
+    }
+
+    #[test]
+    fn empty_timeline_is_all_zeros() {
+        let t = dispatch_fifo(3, &[], |_, _| 1, &mut RoundRobin::new());
+        assert!(t.placements.is_empty());
+        assert_eq!(t.makespan, 0);
+        assert_eq!(t.chip_busy_cycles, vec![0, 0, 0]);
+    }
+}

@@ -20,7 +20,10 @@
 //! - [`sim`] — instruction-driven cycle-accurate simulator.
 //! - [`sched`] — the three strategies as ISA code generators.
 //! - [`sweep`] — batched design-point evaluation: codegen cache,
-//!   zero-realloc engine reuse, work-stealing parallel runner.
+//!   zero-realloc engine reuse, work-stealing parallel runner, fleet
+//!   sweep axes, top-k reporting.
+//! - [`fleet`] — multi-chip fleets: heterogeneous per-chip archs,
+//!   pluggable placement policies, deterministic cross-chip queueing.
 //! - [`model`] — closed-form analytical model (paper Eqs. 1–9), DSE,
 //!   runtime adaptation.
 //! - [`gemm`] — GeMM workloads, macro tiling, BLAS-level benchmark suites.
@@ -34,6 +37,7 @@
 pub mod arch;
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod gemm;
 pub mod isa;
 pub mod model;

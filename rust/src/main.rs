@@ -9,8 +9,11 @@
 //! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
 //!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
-//! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C] [--mean-gap G] [--csv-dir D]
-//! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N]
+//! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C | --fleet SPEC]
+//!               [--placement rr|least-loaded|affinity] [--mean-gap G] [--csv-dir D]
+//! gpp-pim fleet [--requests N] [--seed S] [--jobs J] [--sizes 1,2,4 | --fleet SPEC]
+//!               [--placement P|all] [--mean-gap G] [--csv-dir D]
+//! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
@@ -19,6 +22,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use gpp_pim::arch::ArchConfig;
 use gpp_pim::coordinator::{Coordinator, RunConfig};
+use gpp_pim::fleet::{FleetConfig, PlacementPolicy};
 use gpp_pim::gemm::blas;
 use gpp_pim::isa;
 use gpp_pim::model::adapt::RuntimeAdaptation;
@@ -26,9 +30,9 @@ use gpp_pim::model::dse::DesignSpace;
 use gpp_pim::report::figures as figs;
 use gpp_pim::runtime::Runtime;
 use gpp_pim::sched::{SchedulePlan, Strategy};
-use gpp_pim::serve::{synthetic_traffic, ServeEngine, TrafficConfig};
+use gpp_pim::serve::{run_fleet_axis, synthetic_traffic, ServeEngine, TrafficConfig};
 use gpp_pim::sim::{simulate, trace, SimOptions};
-use gpp_pim::sweep::SweepRunner;
+use gpp_pim::sweep::{top_k_by, FleetAxis, SweepGrid, SweepRunner};
 use gpp_pim::util::csv::CsvTable;
 use std::collections::HashMap;
 use std::path::Path;
@@ -85,12 +89,51 @@ impl Args {
 }
 
 /// Worker count from `--jobs N` (default: one worker per hardware
-/// thread; `--jobs 1` forces the sequential path).
+/// thread; `--jobs 1` forces the sequential path).  `--jobs 0` is a
+/// parse-time error — the library clamp in the engines stays as a
+/// last-resort guard only.
 fn jobs_arg(args: &Args) -> Result<usize> {
     Ok(match args.get("jobs") {
-        Some(v) => v.parse().with_context(|| format!("--jobs {v}"))?,
+        Some(v) => {
+            let jobs: usize = v.parse().with_context(|| format!("--jobs {v}"))?;
+            if jobs == 0 {
+                bail!("--jobs must be >= 1 (got 0); omit the flag for one worker per hardware thread");
+            }
+            jobs
+        }
         None => gpp_pim::sweep::default_jobs(),
     })
+}
+
+/// Placement policy from `--placement` (default: round-robin).
+fn placement_arg(args: &Args) -> Result<PlacementPolicy> {
+    match args.get("placement") {
+        Some(p) => PlacementPolicy::from_name(p)
+            .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity)")),
+        None => Ok(PlacementPolicy::RoundRobin),
+    }
+}
+
+/// Fleet from `--fleet SPEC` or `--chips C` (default: one chip of the
+/// loaded architecture).  `--chips 0` is a parse-time error.
+fn fleet_arg(args: &Args, arch: &ArchConfig) -> Result<FleetConfig> {
+    if let Some(spec) = args.get("fleet") {
+        if args.has("chips") {
+            bail!("--fleet and --chips are mutually exclusive");
+        }
+        return FleetConfig::parse(spec, arch).map_err(|e| anyhow!("{e}"));
+    }
+    let chips = match args.get("chips") {
+        Some(v) => {
+            let chips: usize = v.parse().with_context(|| format!("--chips {v}"))?;
+            if chips == 0 {
+                bail!("--chips must be >= 1 (got 0)");
+            }
+            chips
+        }
+        None => 1,
+    };
+    Ok(FleetConfig::homogeneous(arch.clone(), chips))
 }
 
 /// Build the sweep runner from `--jobs N`.
@@ -332,21 +375,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mean_gap_cycles: args.get_u64("mean-gap", 2048)?,
     };
     let jobs = jobs_arg(args)?;
-    let chips = args.get_u32("chips", 1)?.max(1) as usize;
-    let requests = synthetic_traffic(&arch, &traffic_cfg);
-    let engine = ServeEngine::new(arch, jobs, chips);
+    let fleet = fleet_arg(args, &arch)?;
+    let policy = placement_arg(args)?;
+    let engine = ServeEngine::with_fleet(fleet, policy, jobs);
+    // Traffic targets the *reference* chip (fleet chip 0) so every
+    // request's resource knobs fit the reference-arch contract even when
+    // a --fleet spec's chip 0 is smaller than the base arch.
+    let requests = synthetic_traffic(engine.arch(), &traffic_cfg);
     let report = engine.run(&requests).map_err(|e| anyhow!("{e}"))?;
     println!(
-        "## Serve — {} requests (seed {}) on {} chip(s), {} worker(s)",
+        "## Serve — {} requests (seed {}) on {} chip(s) [{}], policy {}, {} worker(s)",
         report.requests(),
         traffic_cfg.seed,
         engine.chips(),
+        engine.fleet().describe(),
+        engine.placement().name(),
         engine.jobs()
     );
     emit(&report.summary_table(), "serve_summary", args.get("csv-dir"))?;
     let pcts = report.latency_percentiles(&[50.0, 95.0, 99.0]);
     println!(
-        "latency p50/p95/p99 : {} / {} / {} cycles",
+        "latency p50/p95/p99 : {} / {} / {} cycles (reference timeline)",
         pcts[0], pcts[1], pcts[2]
     );
     println!(
@@ -358,17 +407,106 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     print!("{}", report.fleet_lines());
     if let Some(dir) = args.get("csv-dir") {
-        let path = Path::new(dir).join("serve.csv");
-        report.to_table().write_to(&path)?;
-        println!("[wrote {}]", path.display());
+        for (name, table) in [
+            ("serve", report.to_table()),
+            ("fleet", report.fleet.to_table()),
+            ("fleet_requests", report.fleet.requests_table()),
+        ] {
+            let path = Path::new(dir).join(format!("{name}.csv"));
+            table.write_to(&path)?;
+            println!("[wrote {}]", path.display());
+        }
     }
     println!("{}", engine.summary());
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let arch = load_arch(args)?;
+    arch.validate().map_err(|e| anyhow!("{e}"))?;
+    let traffic_cfg = TrafficConfig {
+        requests: args.get_u32("requests", 192)?,
+        seed: args.get_u64("seed", 7)?,
+        mean_gap_cycles: args.get_u64("mean-gap", 1024)?,
+    };
+    let jobs = jobs_arg(args)?;
+    let policies = match args.get("placement") {
+        None | Some("all") => PlacementPolicy::ALL.to_vec(),
+        Some(p) => vec![PlacementPolicy::from_name(p)
+            .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity|all)"))?],
+    };
+    let fleets: Vec<FleetConfig> = if let Some(spec) = args.get("fleet") {
+        if args.has("sizes") {
+            bail!("--fleet and --sizes are mutually exclusive");
+        }
+        vec![FleetConfig::parse(spec, &arch).map_err(|e| anyhow!("{e}"))?]
+    } else {
+        let sizes: Vec<usize> = match args.get("sizes") {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().with_context(|| format!("--sizes {v}")))
+                .collect::<Result<_>>()?,
+            None => vec![1, 2, 4],
+        };
+        if sizes.is_empty() || sizes.contains(&0) {
+            bail!("--sizes entries must be >= 1");
+        }
+        sizes
+            .iter()
+            .map(|&n| FleetConfig::homogeneous(arch.clone(), n))
+            .collect()
+    };
+    // Traffic targets the first fleet's reference chip (all CLI-built
+    // axes share one reference arch).
+    let requests = synthetic_traffic(fleets[0].reference(), &traffic_cfg);
+    // Carry the axis on a sweep grid — the same description a DSE over
+    // fleet size × policy would use.
+    let grid = SweepGrid::new().with_fleet_axis(FleetAxis::new(fleets, policies));
+    println!(
+        "## Fleet sweep — {} requests (seed {}) over {} (fleet, policy) points",
+        requests.len(),
+        traffic_cfg.seed,
+        grid.fleet_axis().len()
+    );
+    let rows = run_fleet_axis(grid.fleet_axis(), &requests, jobs).map_err(|e| anyhow!("{e}"))?;
+    let mut t = CsvTable::new(vec![
+        "fleet",
+        "chips",
+        "policy",
+        "p50_latency",
+        "p95_latency",
+        "p99_latency",
+        "mean_latency",
+        "makespan",
+        "speedup",
+        "max_utilization",
+    ]);
+    for (point, report) in &rows {
+        let f = &report.fleet;
+        let pcts = f.latency_percentiles(&[50.0, 95.0, 99.0]);
+        let max_util = (0..f.chips())
+            .map(|c| f.utilization(c))
+            .fold(0.0f64, f64::max);
+        t.push_row(vec![
+            point.fleet.describe(),
+            point.fleet.len().to_string(),
+            point.policy.name().to_string(),
+            pcts[0].to_string(),
+            pcts[1].to_string(),
+            pcts[2].to_string(),
+            f.mean_latency().to_string(),
+            f.makespan.to_string(),
+            format!("{:.2}", report.fleet_speedup()),
+            format!("{max_util:.4}"),
+        ]);
+    }
+    emit(&t, "fleet_axis", args.get("csv-dir"))
+}
+
 fn cmd_dse(args: &Args) -> Result<()> {
     let mut arch = load_arch(args)?;
     arch.bandwidth = args.get_u64("band", 128)?;
+    let top = args.get_u32("top", 0)? as usize;
     let mut space = DesignSpace::fig6(&arch);
     space.bandwidth = arch.bandwidth as f64;
     if args.has("sim") {
@@ -408,8 +546,32 @@ fn cmd_dse(args: &Args) -> Result<()> {
             ]);
         }
         println!("{}", runner.summary());
-        return emit(&t, "dse_sim", args.get("csv-dir"));
+        emit(&t, "dse_sim", args.get("csv-dir"))?;
+        if top > 0 {
+            // Top-k by *simulated* gpp execution cycles, deterministic
+            // tie-break by input index.
+            let k = top_k_by(pts.len(), top, |i| pts[i].cycles[2] as f64);
+            let mut t = CsvTable::new(vec![
+                "rank", "index", "tr:tp", "s", "n_in", "macros_gpp", "cycles_gpp",
+            ]);
+            for (rank, &i) in k.iter().enumerate() {
+                let p = &pts[i];
+                t.push_row(vec![
+                    (rank + 1).to_string(),
+                    i.to_string(),
+                    format!("{:.3}", p.model.ratio_tr_over_tp),
+                    p.write_speed.to_string(),
+                    p.n_in.to_string(),
+                    p.macros[2].to_string(),
+                    p.cycles[2].to_string(),
+                ]);
+            }
+            println!("## DSE top-{top} (by simulated gpp execution cycles)");
+            emit(&t, "dse_topk", args.get("csv-dir"))?;
+        }
+        return Ok(());
     }
+    let pts = space.sweep_fig6();
     let mut t = CsvTable::new(vec![
         "tr:tp",
         "n_in",
@@ -421,7 +583,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         "eff_gpp",
         "peak_bw_gpp",
     ]);
-    for p in space.sweep_fig6() {
+    for p in &pts {
         t.push_row(vec![
             format!("{:.3}", p.ratio_tr_over_tp),
             format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
@@ -434,7 +596,29 @@ fn cmd_dse(args: &Args) -> Result<()> {
             format!("{:.1}", p.gpp.peak_bandwidth),
         ]);
     }
-    emit(&t, "dse", args.get("csv-dir"))
+    emit(&t, "dse", args.get("csv-dir"))?;
+    if top > 0 {
+        // Top-k by *model* gpp execution cycles, deterministic tie-break
+        // by input index.
+        let k = top_k_by(pts.len(), top, |i| pts[i].gpp.exec_cycles);
+        let mut t = CsvTable::new(vec![
+            "rank", "index", "tr:tp", "n_in", "macros_gpp", "exec_cycles_gpp",
+        ]);
+        for (rank, &i) in k.iter().enumerate() {
+            let p = &pts[i];
+            t.push_row(vec![
+                (rank + 1).to_string(),
+                i.to_string(),
+                format!("{:.3}", p.ratio_tr_over_tp),
+                format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
+                format!("{:.1}", p.gpp.num_macros),
+                format!("{:.1}", p.gpp.exec_cycles),
+            ]);
+        }
+        println!("## DSE top-{top} (by model gpp execution cycles)");
+        emit(&t, "dse_topk", args.get("csv-dir"))?;
+    }
+    Ok(())
 }
 
 fn cmd_adapt(args: &Args) -> Result<()> {
@@ -525,12 +709,19 @@ COMMANDS:
   run        simulate+validate a GeMM workload end-to-end
              (--workload ffn|e2e|square|mlp or --trace FILE, --numerics)
   serve      batched request serving: multiplex a synthetic GeMM request
-             stream onto replicated chips (--requests N, --seed S,
-              --jobs J host workers, --chips C, --mean-gap CYCLES,
-              --csv-dir DIR writes serve.csv + serve_summary.csv)
+             stream onto a chip fleet (--requests N, --seed S,
+              --jobs J host workers, --chips C or --fleet SPEC for
+              heterogeneous fleets e.g. 2xpaper,1xpaper:band=256,
+              --placement rr|least-loaded|affinity, --mean-gap CYCLES,
+              --csv-dir DIR writes serve.csv + serve_summary.csv +
+              fleet.csv + fleet_requests.csv)
+  fleet      sweep fleet size x placement policy over one request stream
+             (--sizes 1,2,4 or --fleet SPEC, --placement P|all,
+              --requests N, --seed S, --jobs J, --csv-dir DIR writes
+              fleet_axis.csv)
   dse        design-space exploration table (--band; --sim validates the
               model cycle-accurately through the parallel runner, --jobs N,
-              --tasks N)
+              --tasks N; --top K writes dse_topk.csv)
   adapt      runtime bandwidth-adaptation model (--max-n)
   assemble   assemble ISA text to binary machine code
   disasm     disassemble binary machine code
@@ -549,6 +740,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "dse" => cmd_dse(&args),
         "adapt" => cmd_adapt(&args),
         "assemble" => cmd_assemble(&args),

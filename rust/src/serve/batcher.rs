@@ -11,7 +11,8 @@
 
 use super::{Request, ServeError};
 use crate::arch::ArchConfig;
-use crate::coordinator::plan_for;
+use crate::coordinator::{plan_for, RunConfig};
+use crate::fleet::FleetConfig;
 use crate::sched::{SchedulePlan, Strategy};
 use std::collections::HashMap;
 
@@ -60,12 +61,39 @@ impl BatchSet {
 #[derive(Debug)]
 pub struct Batcher {
     arch: ArchConfig,
+    fit: bool,
 }
 
 impl Batcher {
     /// A batcher for chips configured as `arch` (replicas share it).
+    /// Requests are lowered exactly as submitted — out-of-envelope
+    /// resource knobs become class errors, as a standalone coordinator
+    /// run would report.
     pub fn new(arch: ArchConfig) -> Self {
-        Self { arch }
+        Self { arch, fit: false }
+    }
+
+    /// A batcher that *fits* each request's resource knobs to `arch`'s
+    /// envelope (macro count clamped to the chip, write speed clamped to
+    /// its port range) before lowering.  Heterogeneous fleets use this
+    /// for non-reference chips: a request is expressed against the
+    /// reference arch, and other chips adapt it to their capacity.
+    pub fn with_fitting(arch: ArchConfig) -> Self {
+        Self { arch, fit: true }
+    }
+
+    /// The request config as this batcher's chip will run it.
+    fn fitted(&self, cfg: &RunConfig) -> RunConfig {
+        if !self.fit {
+            return *cfg;
+        }
+        RunConfig {
+            active_macros: cfg.active_macros.min(self.arch.total_macros()),
+            write_speed: cfg
+                .write_speed
+                .clamp(self.arch.min_write_speed, self.arch.max_write_speed),
+            ..*cfg
+        }
     }
 
     /// Lower every request to its class and group by class, preserving
@@ -76,8 +104,9 @@ impl Batcher {
         let mut batches: Vec<Batch> = Vec::new();
         let mut class_of = Vec::with_capacity(requests.len());
         for (i, req) in requests.iter().enumerate() {
+            let cfg = self.fitted(&req.cfg);
             let plan =
-                plan_for(&self.arch, &req.workload, &req.cfg).map_err(|reason| {
+                plan_for(&self.arch, &req.workload, &cfg).map_err(|reason| {
                     ServeError::Plan {
                         id: req.id,
                         name: req.workload.name.clone(),
@@ -85,7 +114,7 @@ impl Batcher {
                     }
                 })?;
             let class = WorkloadClass {
-                strategy: req.cfg.strategy,
+                strategy: cfg.strategy,
                 plan,
                 arch: self.arch.clone(),
             };
@@ -100,6 +129,57 @@ impl Batcher {
             class_of.push(b);
         }
         Ok(BatchSet { batches, class_of })
+    }
+}
+
+/// Batches for every *distinct* architecture of a fleet: heterogeneous
+/// fleets codegen and simulate per distinct arch, not per chip, so a
+/// thousand-replica fleet of two chip models costs exactly two arch
+/// passes.
+#[derive(Debug, Clone)]
+pub struct FleetBatches {
+    /// Distinct chip architectures, first-appearance chip order
+    /// (`archs[0]` is the reference arch — chip 0's).
+    pub archs: Vec<ArchConfig>,
+    /// Chip index → index into `archs` / `sets`.
+    pub arch_of_chip: Vec<usize>,
+    /// One batch set per distinct arch; `sets[0]` uses the exact
+    /// (unfitted) request configs, non-reference archs fit requests to
+    /// their envelope ([`Batcher::with_fitting`]).
+    pub sets: Vec<BatchSet>,
+}
+
+impl FleetBatches {
+    /// Batch `requests` once per distinct arch of `fleet`.
+    pub fn batch(fleet: &FleetConfig, requests: &[Request]) -> Result<Self, ServeError> {
+        let (archs, arch_of_chip) = fleet.distinct();
+        let sets = archs
+            .iter()
+            .enumerate()
+            .map(|(a, arch)| {
+                let batcher = if a == 0 {
+                    Batcher::new(arch.clone())
+                } else {
+                    Batcher::with_fitting(arch.clone())
+                };
+                batcher.batch(requests)
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Self {
+            archs,
+            arch_of_chip,
+            sets,
+        })
+    }
+
+    /// The reference arch's batch set (the reference-timeline classes).
+    pub fn reference(&self) -> &BatchSet {
+        &self.sets[0]
+    }
+
+    /// Total unique `(arch, class)` simulations across the fleet.
+    pub fn total_classes(&self) -> usize {
+        self.sets.iter().map(|s| s.batches.len()).sum()
     }
 }
 
@@ -165,6 +245,56 @@ mod tests {
         )];
         let err = b.batch(&reqs).unwrap_err();
         assert!(matches!(err, ServeError::Plan { id: 7, .. }));
+    }
+
+    #[test]
+    fn fleet_batches_once_per_distinct_arch() {
+        let base = ArchConfig::paper_default();
+        let mut slow = base.clone();
+        slow.bandwidth = 128;
+        // 4 chips, 2 distinct archs.
+        let fleet =
+            FleetConfig::new(vec![base.clone(), slow.clone(), base.clone(), slow]).unwrap();
+        let reqs = vec![
+            req(0, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+            req(1, blas::e2e_ffn(), Strategy::InSitu, 4),
+        ];
+        let fb = FleetBatches::batch(&fleet, &reqs).unwrap();
+        assert_eq!(fb.archs.len(), 2);
+        assert_eq!(fb.arch_of_chip, vec![0, 1, 0, 1]);
+        assert_eq!(fb.sets.len(), 2);
+        // Bandwidth does not change plans: classes align 1:1 across archs.
+        assert_eq!(fb.reference().classes(), 2);
+        assert_eq!(fb.total_classes(), 4);
+        assert_eq!(fb.sets[0].class_of, fb.sets[1].class_of);
+    }
+
+    #[test]
+    fn fitting_adapts_requests_to_smaller_chips() {
+        // A chip with half the macros and a slower write port: fitted
+        // lowering clamps both instead of failing codegen.
+        let base = ArchConfig::paper_default();
+        let mut small = base.clone();
+        small.macros_per_core = 8;
+        small.max_write_speed = 4;
+        let mut cfg = RunConfig::from_arch(&base, Strategy::GeneralizedPingPong);
+        cfg.active_macros = base.total_macros(); // 256 > small's 128
+        let reqs = vec![Request {
+            id: 0,
+            arrival_cycle: 0,
+            workload: blas::e2e_ffn(),
+            cfg,
+        }];
+        let set = Batcher::with_fitting(small.clone()).batch(&reqs).unwrap();
+        let plan = &set.batches[0].class.plan;
+        assert!(plan.active_macros <= small.total_macros());
+        assert_eq!(plan.write_speed, 4);
+        plan.check(&small).unwrap();
+        // The unfitted batcher reports the same over-ask at codegen time
+        // instead (the reference-arch contract is strict) — but lowering
+        // itself still succeeds because plans clamp to the task count.
+        let strict = Batcher::new(small).batch(&reqs).unwrap();
+        assert_eq!(strict.batches[0].class.plan.write_speed, 8);
     }
 
     #[test]

@@ -1,46 +1,62 @@
 //! The serving engine: batches → shared executor → merged report.
 //!
-//! `run` is three deterministic stages:
+//! `run` is four deterministic stages:
 //!
-//! 1. **Batch** the request stream into workload classes
-//!    ([`Batcher`]).
-//! 2. **Simulate** each unique class exactly once through the shared
-//!    work-stealing executor ([`run_indexed`]) — per-worker
+//! 1. **Batch** the request stream into workload classes, once per
+//!    *distinct* chip architecture of the fleet ([`FleetBatches`]) —
+//!    heterogeneous fleets codegen per distinct arch, not per chip.
+//! 2. **Simulate** each unique `(arch, class)` exactly once through the
+//!    shared work-stealing executor ([`run_indexed`]) — per-worker
 //!    [`SimWorkspace`] pools, programs memoized in the engine's
 //!    [`CodegenCache`] (reusing the engine across streams turns repeat
-//!    classes into pure cache hits).  Batches are sharded round-robin
-//!    across `chips` replicated chips; since replicas are identical and
-//!    the simulator is deterministic, the shard → result mapping is
-//!    independent of the chip count, and per-request results re-merge in
-//!    request order bit-identically.
-//! 3. **Merge**: fan class results out to member requests, lay the
-//!    requests on the canonical reference timeline (FIFO in arrival
-//!    order; see [`super::report`]) and aggregate the [`ServeReport`].
+//!    classes into pure cache hits).
+//! 3. **Reference timeline**: fan class results out to member requests
+//!    and lay them on the canonical single-chip FIFO timeline of the
+//!    reference arch (fleet chip 0; see [`super::report`]).  This stage
+//!    is byte-identical to the replicated-chip engine of earlier PRs
+//!    regardless of fleet composition or placement policy.
+//! 4. **Policy timeline**: dispatch every request at its arrival cycle
+//!    onto per-chip FIFO queues via the placement policy
+//!    ([`dispatch_fifo`]), yielding true per-request queueing + service
+//!    latency for the configured fleet.
 
-use super::batcher::{Batch, Batcher};
-use super::report::{RequestRecord, ServeReport};
+use super::batcher::{Batch, FleetBatches};
+use super::report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
 use super::{Request, ServeError};
 use crate::arch::ArchConfig;
+use crate::fleet::{dispatch_fifo, Dispatch, FleetConfig, PlacementPolicy};
 use crate::sim::{simulate_in, SimStats, SimWorkspace};
-use crate::sweep::{run_indexed, CodegenCache};
+use crate::sweep::{run_indexed, CodegenCache, FleetAxis, FleetSweepPoint};
 
-/// Multiplexes request streams onto simulated chips.
+/// Multiplexes request streams onto a simulated chip fleet.
 #[derive(Debug)]
 pub struct ServeEngine {
-    arch: ArchConfig,
+    fleet: FleetConfig,
+    policy: PlacementPolicy,
     jobs: usize,
-    chips: usize,
     cache: CodegenCache,
 }
 
 impl ServeEngine {
-    /// An engine with `jobs` host workers serving `chips` replicated
-    /// chips configured as `arch` (`0` is clamped to 1 for both).
+    /// The replicated-chip constructor of earlier PRs: `chips` identical
+    /// chips configured as `arch`, round-robin placement, `jobs` host
+    /// workers (`0` is clamped to 1 for both — the library-level
+    /// last-resort guard; the CLI rejects zeros outright).
     pub fn new(arch: ArchConfig, jobs: usize, chips: usize) -> Self {
+        Self::with_fleet(
+            FleetConfig::homogeneous(arch, chips),
+            PlacementPolicy::RoundRobin,
+            jobs,
+        )
+    }
+
+    /// An engine over an explicit (possibly heterogeneous) fleet and
+    /// placement policy.
+    pub fn with_fleet(fleet: FleetConfig, policy: PlacementPolicy, jobs: usize) -> Self {
         Self {
-            arch,
+            fleet,
+            policy,
             jobs: jobs.max(1),
-            chips: chips.max(1),
             cache: CodegenCache::new(),
         }
     }
@@ -55,14 +71,24 @@ impl ServeEngine {
         self.jobs
     }
 
-    /// Configured chip-replica count.
+    /// Number of chips in the fleet.
     pub fn chips(&self) -> usize {
-        self.chips
+        self.fleet.len()
     }
 
-    /// The chip architecture replicas share.
+    /// The fleet this engine serves on.
+    pub fn fleet(&self) -> &FleetConfig {
+        &self.fleet
+    }
+
+    /// The configured placement policy.
+    pub fn placement(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// The reference chip's architecture (fleet chip 0).
     pub fn arch(&self) -> &ArchConfig {
-        &self.arch
+        self.fleet.reference()
     }
 
     /// The engine's codegen cache (hit/miss introspection; persists
@@ -74,48 +100,75 @@ impl ServeEngine {
     /// One-line diagnostic for CLI/bench output.
     pub fn summary(&self) -> String {
         format!(
-            "[serve: {} workers, {} chips, {} programs generated, {} cache hits]",
+            "[serve: {} workers, {} chips ({}), policy {}, {} programs generated, {} cache hits]",
             self.jobs,
-            self.chips,
+            self.fleet.len(),
+            self.fleet.describe(),
+            self.policy.name(),
             self.cache.misses(),
             self.cache.hits()
         )
     }
 
-    /// Serve a request stream: batch, simulate unique classes, merge.
+    /// Serve a request stream: batch per distinct arch, simulate unique
+    /// classes, lay both timelines, merge.
     ///
-    /// Fails fast on the first error in class order (deterministically —
-    /// not in completion order).
+    /// Fails fast on the first error in `(arch, class)` order
+    /// (deterministically — not in completion order).
     pub fn run(&self, requests: &[Request]) -> Result<ServeReport, ServeError> {
-        let set = Batcher::new(self.arch.clone()).batch(requests)?;
+        let ev = self.evaluate(requests)?;
+        Ok(self.report_for(requests, &ev, self.policy))
+    }
 
-        // Stage 2: one simulation per unique class, work-stolen across
-        // the host worker pool.
-        let results = run_indexed(self.jobs, set.batches.len(), |i, ws| {
-            self.eval(i, &set.batches[i], ws)
+    /// Stages 1–2: batch per distinct arch and run one simulation per
+    /// unique `(arch, class)`, work-stolen across the host worker pool.
+    /// Policy-independent — [`run_fleet_axis`] reuses one evaluation
+    /// across every placement policy of a fleet.
+    fn evaluate(&self, requests: &[Request]) -> Result<Evaluated, ServeError> {
+        let fb = FleetBatches::batch(&self.fleet, requests)?;
+        let flat: Vec<(usize, usize)> = fb
+            .sets
+            .iter()
+            .enumerate()
+            .flat_map(|(a, s)| (0..s.batches.len()).map(move |b| (a, b)))
+            .collect();
+        let results = run_indexed(self.jobs, flat.len(), |i, ws| {
+            let (a, b) = flat[i];
+            self.eval(b, &fb.sets[a].batches[b], ws)
         });
-        let mut class_stats: Vec<SimStats> = Vec::with_capacity(results.len());
-        for r in results {
-            class_stats.push(r?);
+        let mut class_stats: Vec<Vec<SimStats>> = fb
+            .sets
+            .iter()
+            .map(|s| Vec::with_capacity(s.batches.len()))
+            .collect();
+        for (r, &(a, _)) in results.into_iter().zip(&flat) {
+            class_stats[a].push(r?);
         }
+        Ok(Evaluated { fb, class_stats })
+    }
 
-        // Round-robin batch sharding across chip replicas: every member
-        // of batch `b` is served by chip `b % chips`.
-        let mut chip_busy_cycles = vec![0u64; self.chips];
-        for (b, batch) in set.batches.iter().enumerate() {
-            chip_busy_cycles[b % self.chips] +=
-                class_stats[b].cycles * batch.members.len() as u64;
-        }
+    /// Stages 3–4: lay the reference and policy timelines over an
+    /// evaluation and assemble the report.
+    fn report_for(
+        &self,
+        requests: &[Request],
+        ev: &Evaluated,
+        policy: PlacementPolicy,
+    ) -> ServeReport {
+        let Evaluated { fb, class_stats } = ev;
 
-        // Stage 3: fan out to per-request records (id order) and lay the
-        // canonical reference timeline (FIFO in arrival order).
+        // Stage 3: the reference timeline — fan out to per-request
+        // records (id order) and serve FIFO in (arrival, id) order on
+        // one reference-arch chip.
+        let set = fb.reference();
+        let ref_stats = &class_stats[0];
         let mut records: Vec<RequestRecord> = requests
             .iter()
             .enumerate()
             .map(|(i, req)| {
                 let b = set.class_of[i];
                 let class = &set.batches[b].class;
-                let stats = &class_stats[b];
+                let stats = &ref_stats[b];
                 RequestRecord {
                     id: req.id,
                     class: b,
@@ -141,12 +194,58 @@ impl ServeEngine {
         }
         records.sort_by_key(|r| (r.id, r.arrival_cycle));
 
-        Ok(ServeReport {
+        // Stage 4: the policy timeline — dispatch each request at its
+        // arrival onto the chip the placement policy picks.
+        let dispatches: Vec<Dispatch> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| Dispatch {
+                id: req.id,
+                arrival_cycle: req.arrival_cycle,
+                class: set.class_of[i],
+            })
+            .collect();
+        let mut policy_state = policy.instance();
+        let timeline = dispatch_fifo(
+            self.fleet.len(),
+            &dispatches,
+            |i, chip| {
+                let a = fb.arch_of_chip[chip];
+                class_stats[a][fb.sets[a].class_of[i]].cycles
+            },
+            policy_state.as_mut(),
+        );
+        let mut assignments: Vec<FleetAssignment> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let p = &timeline.placements[i];
+                FleetAssignment {
+                    id: req.id,
+                    chip: p.chip,
+                    arrival_cycle: req.arrival_cycle,
+                    queue_cycles: p.start_cycle - req.arrival_cycle,
+                    service_cycles: p.service_cycles,
+                }
+            })
+            .collect();
+        assignments.sort_by_key(|a| (a.id, a.arrival_cycle));
+
+        ServeReport {
             records,
             classes: set.batches.len(),
-            class_service_cycles: class_stats.iter().map(|s| s.cycles).collect(),
-            chip_busy_cycles,
-        })
+            class_service_cycles: ref_stats.iter().map(|s| s.cycles).collect(),
+            fleet: FleetReport {
+                policy,
+                assignments,
+                chip_archs: (0..self.fleet.len())
+                    .map(|c| self.fleet.arch_label(c))
+                    .collect(),
+                chip_busy_cycles: timeline.chip_busy_cycles,
+                chip_requests: timeline.chip_requests,
+                makespan: timeline.makespan,
+            },
+        }
     }
 
     fn eval(
@@ -182,6 +281,40 @@ impl ServeEngine {
     }
 }
 
+/// Stages 1–2 of a serve run, held so multiple policy timelines can be
+/// laid over one set of class simulations (which are policy-independent).
+struct Evaluated {
+    fb: FleetBatches,
+    class_stats: Vec<Vec<SimStats>>,
+}
+
+/// Evaluate a fleet/placement axis over one request stream; results come
+/// back in axis order ([`FleetAxis::points`]: fleets outer, policies
+/// fastest).  Classes are batched and simulated **once per fleet** —
+/// placement policies only change the dispatch timeline, so each
+/// additional policy costs a timeline pass, not a re-simulation.
+pub fn run_fleet_axis(
+    axis: &FleetAxis,
+    requests: &[Request],
+    jobs: usize,
+) -> Result<Vec<(FleetSweepPoint, ServeReport)>, ServeError> {
+    let mut out = Vec::with_capacity(axis.len());
+    for fleet in axis.fleets() {
+        let engine = ServeEngine::with_fleet(fleet.clone(), PlacementPolicy::RoundRobin, jobs);
+        let ev = engine.evaluate(requests)?;
+        for &policy in axis.policies() {
+            out.push((
+                FleetSweepPoint {
+                    fleet: fleet.clone(),
+                    policy,
+                },
+                engine.report_for(requests, &ev, policy),
+            ));
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,8 +347,10 @@ mod tests {
         assert!(report.classes >= 1 && report.classes < 48);
         assert!(report.records.iter().all(|r| r.service_cycles > 0));
         assert!(report.p50() <= report.p95() && report.p95() <= report.p99());
-        // Records come back in id order.
+        // Records come back in id order, and every request got placed.
         assert!(report.records.windows(2).all(|p| p[0].id < p[1].id));
+        assert_eq!(report.fleet.assignments.len(), 48);
+        assert_eq!(report.fleet.chip_requests, vec![48]);
     }
 
     #[test]
@@ -235,6 +370,7 @@ mod tests {
             .unwrap();
         assert_eq!(report.records[0].service_cycles, expected);
         assert_eq!(report.records[0].queue_cycles, 0);
+        assert_eq!(report.fleet.assignments[0].service_cycles, expected);
     }
 
     #[test]
@@ -260,6 +396,27 @@ mod tests {
     }
 
     #[test]
+    fn one_chip_policy_timeline_is_the_reference_timeline() {
+        // On a homogeneous 1-chip fleet the policy timeline degenerates
+        // to the reference timeline, whatever the policy.
+        let reqs = small_traffic(32);
+        for policy in PlacementPolicy::ALL {
+            let report =
+                ServeEngine::with_fleet(FleetConfig::homogeneous(arch(), 1), policy, 4)
+                    .run(&reqs)
+                    .unwrap();
+            for (rec, a) in report.records.iter().zip(&report.fleet.assignments) {
+                assert_eq!(rec.id, a.id);
+                assert_eq!(a.chip, 0);
+                assert_eq!(rec.queue_cycles, a.queue_cycles, "policy {}", policy.name());
+                assert_eq!(rec.service_cycles, a.service_cycles);
+            }
+            assert_eq!(report.fleet.makespan, report.reference_makespan());
+            assert!((report.fleet_speedup() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn rerunning_the_same_stream_hits_the_codegen_cache() {
         let engine = ServeEngine::new(arch(), 2, 1);
         let reqs = small_traffic(32);
@@ -274,19 +431,22 @@ mod tests {
     }
 
     #[test]
-    fn chip_sharding_conserves_work() {
+    fn policy_timeline_conserves_work_across_chip_counts() {
         let reqs = small_traffic(40);
         let one = ServeEngine::new(arch(), 4, 1).run(&reqs).unwrap();
         let four = ServeEngine::new(arch(), 4, 4).run(&reqs).unwrap();
-        assert_eq!(one.chip_busy_cycles.len(), 1);
-        assert_eq!(four.chip_busy_cycles.len(), 4);
+        assert_eq!(one.fleet.chip_busy_cycles.len(), 1);
+        assert_eq!(four.fleet.chip_busy_cycles.len(), 4);
         assert_eq!(
-            one.chip_busy_cycles[0],
-            four.chip_busy_cycles.iter().sum::<u64>(),
-            "sharding must neither lose nor invent work"
+            one.fleet.chip_busy_cycles[0],
+            four.fleet.chip_busy_cycles.iter().sum::<u64>(),
+            "placement must neither lose nor invent work"
         );
+        assert_eq!(four.fleet.chip_requests.iter().sum::<u64>(), 40);
+        // Spreading a FIFO across more chips never finishes later.
         assert!(four.fleet_makespan() <= one.fleet_makespan());
         assert!(four.fleet_speedup() >= 1.0);
+        assert!((one.fleet_speedup() - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -295,6 +455,8 @@ mod tests {
         assert_eq!(report.requests(), 0);
         assert_eq!(report.classes, 0);
         assert_eq!(report.p99(), 0);
+        assert_eq!(report.fleet.makespan, 0);
+        assert!(report.fleet.assignments.is_empty());
     }
 
     #[test]
@@ -310,5 +472,22 @@ mod tests {
             }])
             .unwrap_err();
         assert!(matches!(err, ServeError::Codegen { class: 0, .. }), "{err}");
+    }
+
+    #[test]
+    fn fleet_axis_rows_come_back_in_axis_order() {
+        let reqs = small_traffic(24);
+        let axis = FleetAxis::homogeneous_sizes(&arch(), &[1, 2], &PlacementPolicy::ALL);
+        let rows = run_fleet_axis(&axis, &reqs, 2).unwrap();
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0].0.fleet.len(), 1);
+        assert_eq!(rows[0].0.policy, PlacementPolicy::RoundRobin);
+        assert_eq!(rows[5].0.fleet.len(), 2);
+        assert_eq!(rows[5].0.policy, PlacementPolicy::ClassAffinity);
+        // Reference CSVs are fleet/policy-invariant across the axis.
+        let base = rows[0].1.to_table().to_csv();
+        for (_, r) in &rows {
+            assert_eq!(r.to_table().to_csv(), base);
+        }
     }
 }

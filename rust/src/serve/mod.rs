@@ -15,32 +15,40 @@
 //!    simulations (codegen and the engine are deterministic), so each
 //!    class costs one codegen — through the shared
 //!    [`CodegenCache`](crate::sweep::CodegenCache) — and one simulation,
-//!    no matter how many requests ride on it.
-//! 3. [`ServeEngine`] — drives the unique classes through per-worker
-//!    [`SimWorkspace`](crate::sim::SimWorkspace) pools via the shared
-//!    work-stealing executor ([`crate::sweep::run_indexed`]), shards
-//!    batches round-robin across `--chips` replicated chips, and
-//!    re-merges per-request results in request order.
-//! 4. [`ServeReport`] — per-request latency (queue + simulated service
-//!    cycles), p50/p95/p99 percentiles, and aggregate throughput, as CSV
-//!    tables (`serve.csv`, `serve_summary.csv`) and, from
+//!    no matter how many requests ride on it.  [`FleetBatches`] repeats
+//!    this once per *distinct* chip architecture of a heterogeneous
+//!    fleet (not per chip).
+//! 3. [`ServeEngine`] — drives the unique `(arch, class)` simulations
+//!    through per-worker [`SimWorkspace`](crate::sim::SimWorkspace)
+//!    pools via the shared work-stealing executor
+//!    ([`crate::sweep::run_indexed`]), then lays two timelines: the
+//!    single-chip *reference* timeline, and the *policy* timeline that
+//!    dispatches requests onto the fleet's per-chip FIFO queues via a
+//!    [`crate::fleet::Placement`] policy (`--placement
+//!    rr|least-loaded|affinity`).
+//! 4. [`ServeReport`] — reference-timeline latency percentiles and
+//!    throughput (`serve.csv`, `serve_summary.csv`), the policy-timeline
+//!    [`FleetReport`] (`fleet.csv` per-chip latency + utilization,
+//!    `fleet_requests.csv` per-request placements), and, from
 //!    `benches/serve_perf.rs`, `BENCH_serve.json`.
 //!
-//! **Determinism:** report CSVs are a pure function of `(traffic, arch)`
-//! — byte-identical across `--jobs` and `--chips` settings.  Latency is
-//! therefore measured on the *canonical reference timeline* (FIFO service
-//! in arrival order on one chip; see [`report`]), while chip-fleet
-//! figures (per-chip load, fleet makespan, fleet speedup) are reported
-//! separately.  Verified by `tests/serve_determinism.rs`.
+//! **Determinism:** `serve.csv`/`serve_summary.csv` are a pure function
+//! of `(traffic, reference arch)` — byte-identical across `--jobs`,
+//! fleet composition and placement policy, because latency there is
+//! measured on the *canonical reference timeline* (FIFO service in
+//! arrival order on one reference-arch chip; see [`report`]).  The fleet
+//! CSVs vary with `--fleet`/`--placement` *by design* and stay
+//! byte-identical across `--jobs`.  Verified by
+//! `tests/serve_determinism.rs` and `tests/fleet_determinism.rs`.
 
 pub mod batcher;
 pub mod engine;
 pub mod report;
 pub mod traffic;
 
-pub use batcher::{Batch, Batcher, BatchSet, WorkloadClass};
-pub use engine::ServeEngine;
-pub use report::{RequestRecord, ServeReport};
+pub use batcher::{Batch, Batcher, BatchSet, FleetBatches, WorkloadClass};
+pub use engine::{run_fleet_axis, ServeEngine};
+pub use report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
 pub use traffic::{synthetic_traffic, TrafficConfig};
 
 use crate::coordinator::RunConfig;

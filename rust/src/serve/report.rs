@@ -1,25 +1,30 @@
-//! The serving report: per-request latency, percentiles, throughput.
+//! The serving report: per-request latency, percentiles, throughput,
+//! and the fleet policy timeline.
 //!
-//! ## Latency methodology (EXPERIMENTS.md §Serve)
+//! ## Latency methodology (EXPERIMENTS.md §Serve, §Fleet)
 //!
-//! Per-request latency = queue cycles + service cycles, measured on the
-//! **canonical reference timeline**: requests are served FIFO in
-//! `(arrival_cycle, id)` order by a single chip, so
-//! `start = max(arrival, previous finish)` and `queue = start − arrival`.
-//! Service cycles come from the cycle-accurate simulation of the
-//! request's workload class and are independent of which chip replica or
-//! worker thread ran the simulation — which makes every number here (and
-//! both CSV tables) a pure function of `(traffic, arch)`, byte-identical
-//! across `--jobs` and `--chips`.
+//! Two timelines per run:
 //!
-//! Chip-fleet figures (per-chip busy cycles from the round-robin batch
-//! sharding, fleet makespan, fleet speedup) *do* depend on `--chips`;
-//! they are kept out of the CSVs and surfaced via [`ServeReport::fleet_lines`].
+//! - **Reference timeline** (`serve.csv`, `serve_summary.csv`): requests
+//!   served FIFO in `(arrival_cycle, id)` order by a single chip of the
+//!   *reference* architecture (fleet chip 0), so
+//!   `start = max(arrival, previous finish)` and `queue = start − arrival`.
+//!   A pure function of `(traffic, reference arch)` — byte-identical
+//!   across `--jobs`, fleet composition and placement policy.  This is
+//!   the regression surface every determinism test diffs.
+//! - **Policy timeline** (`fleet.csv`, `fleet_requests.csv`,
+//!   [`FleetReport`]): requests dispatched at their arrival cycles onto
+//!   per-chip FIFO queues by the placement policy
+//!   ([`crate::fleet::dispatch_fifo`]).  True per-request queueing +
+//!   service latency under the chosen fleet and policy — it *should*
+//!   change with `--fleet`/`--placement`, and stays byte-identical
+//!   across `--jobs`.
 
+use crate::fleet::PlacementPolicy;
 use crate::sched::Strategy;
 use crate::util::csv::CsvTable;
 
-/// One served request, fully resolved.
+/// One served request on the reference timeline, fully resolved.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestRecord {
     /// Request id (CSV row key; rows are emitted in id order).
@@ -54,19 +59,188 @@ impl RequestRecord {
     }
 }
 
+/// One request's placement on the policy timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetAssignment {
+    /// Request id.
+    pub id: u32,
+    /// Chip that served the request.
+    pub chip: usize,
+    /// Arrival time, cycles.
+    pub arrival_cycle: u64,
+    /// Cycles queued behind the chip's FIFO backlog.
+    pub queue_cycles: u64,
+    /// Service cycles on the serving chip's architecture.
+    pub service_cycles: u64,
+}
+
+impl FleetAssignment {
+    /// End-to-end latency on the policy timeline.
+    pub fn latency_cycles(&self) -> u64 {
+        self.queue_cycles + self.service_cycles
+    }
+}
+
+/// The policy-timeline side of a serve run: placements, per-chip load,
+/// and the fleet makespan under one placement policy.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetReport {
+    /// The placement policy that produced this timeline.
+    pub policy: PlacementPolicy,
+    /// Per-request placements in id order.
+    pub assignments: Vec<FleetAssignment>,
+    /// Compact arch label per chip (the `arch` column of `fleet.csv`).
+    pub chip_archs: Vec<String>,
+    /// Σ service cycles executed per chip.
+    pub chip_busy_cycles: Vec<u64>,
+    /// Requests served per chip.
+    pub chip_requests: Vec<u64>,
+    /// Finish cycle of the last request on the policy timeline.
+    pub makespan: u64,
+}
+
+impl FleetReport {
+    /// Number of chips in the fleet.
+    pub fn chips(&self) -> usize {
+        self.chip_busy_cycles.len()
+    }
+
+    /// Nearest-rank policy-timeline latency percentiles, one per entry
+    /// of `ps` (each in (0, 100]).
+    pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        nearest_rank_percentiles(
+            self.assignments
+                .iter()
+                .map(FleetAssignment::latency_cycles)
+                .collect(),
+            ps,
+        )
+    }
+
+    /// Median policy-timeline latency, cycles.
+    pub fn p50(&self) -> u64 {
+        self.latency_percentiles(&[50.0])[0]
+    }
+
+    /// 95th-percentile policy-timeline latency, cycles.
+    pub fn p95(&self) -> u64 {
+        self.latency_percentiles(&[95.0])[0]
+    }
+
+    /// 99th-percentile policy-timeline latency, cycles.
+    pub fn p99(&self) -> u64 {
+        self.latency_percentiles(&[99.0])[0]
+    }
+
+    /// Mean policy-timeline latency, cycles (floor — integral for
+    /// byte-stable CSVs).
+    pub fn mean_latency(&self) -> u64 {
+        mean_floor(
+            self.assignments
+                .iter()
+                .map(FleetAssignment::latency_cycles),
+        )
+    }
+
+    /// Fraction of the policy-timeline makespan `chip` spent busy.
+    pub fn utilization(&self, chip: usize) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.chip_busy_cycles[chip] as f64 / self.makespan as f64
+    }
+
+    /// Per-chip policy-timeline table (`fleet.csv`): latency columns +
+    /// utilization per chip, plus a final `all` aggregate row.
+    pub fn to_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec![
+            "policy",
+            "chip",
+            "arch",
+            "requests",
+            "busy_cycles",
+            "utilization",
+            "p50_latency",
+            "p95_latency",
+            "p99_latency",
+            "mean_latency",
+        ]);
+        for chip in 0..self.chips() {
+            let lat: Vec<u64> = self
+                .assignments
+                .iter()
+                .filter(|a| a.chip == chip)
+                .map(FleetAssignment::latency_cycles)
+                .collect();
+            let mean = mean_floor(lat.iter().copied());
+            let pcts = nearest_rank_percentiles(lat, &[50.0, 95.0, 99.0]);
+            t.push_row(vec![
+                self.policy.name().to_string(),
+                chip.to_string(),
+                self.chip_archs[chip].clone(),
+                self.chip_requests[chip].to_string(),
+                self.chip_busy_cycles[chip].to_string(),
+                format!("{:.4}", self.utilization(chip)),
+                pcts[0].to_string(),
+                pcts[1].to_string(),
+                pcts[2].to_string(),
+                mean.to_string(),
+            ]);
+        }
+        let busy: u64 = self.chip_busy_cycles.iter().sum();
+        let util = if self.makespan == 0 {
+            0.0
+        } else {
+            busy as f64 / (self.makespan as f64 * self.chips() as f64)
+        };
+        let pcts = self.latency_percentiles(&[50.0, 95.0, 99.0]);
+        t.push_row(vec![
+            self.policy.name().to_string(),
+            "all".to_string(),
+            "-".to_string(),
+            self.assignments.len().to_string(),
+            busy.to_string(),
+            format!("{util:.4}"),
+            pcts[0].to_string(),
+            pcts[1].to_string(),
+            pcts[2].to_string(),
+            self.mean_latency().to_string(),
+        ]);
+        t
+    }
+
+    /// Per-request policy-timeline table (`fleet_requests.csv`):
+    /// integer-only columns, id order.
+    pub fn requests_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(vec![
+            "id", "chip", "arrival", "queue", "service", "latency",
+        ]);
+        for a in &self.assignments {
+            t.push_row(vec![
+                a.id.to_string(),
+                a.chip.to_string(),
+                a.arrival_cycle.to_string(),
+                a.queue_cycles.to_string(),
+                a.service_cycles.to_string(),
+                a.latency_cycles().to_string(),
+            ]);
+        }
+        t
+    }
+}
+
 /// Aggregated outcome of one [`ServeEngine::run`](super::ServeEngine::run).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ServeReport {
-    /// Per-request records in id order.
+    /// Per-request reference-timeline records in id order.
     pub records: Vec<RequestRecord>,
-    /// Distinct workload classes simulated.
+    /// Distinct workload classes under the reference arch.
     pub classes: usize,
-    /// Simulated cycles actually executed per class (the deduplicated
-    /// work), indexed by class.
+    /// Simulated cycles actually executed per reference class (the
+    /// deduplicated work), indexed by class.
     pub class_service_cycles: Vec<u64>,
-    /// Per-chip busy cycles under round-robin batch sharding
-    /// (`chip_busy[c]` = Σ service over requests of batches owned by `c`).
-    pub chip_busy_cycles: Vec<u64>,
+    /// The policy timeline: placements, per-chip load, makespan.
+    pub fleet: FleetReport,
 }
 
 impl ServeReport {
@@ -75,24 +249,19 @@ impl ServeReport {
         self.records.len()
     }
 
-    /// Nearest-rank percentiles of end-to-end latency, one per entry of
-    /// `ps` (each in (0, 100]), sorting the latency vector once.
+    /// Nearest-rank percentiles of reference-timeline latency, one per
+    /// entry of `ps` (each in (0, 100]), sorting the latency vector once.
     pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<u64> {
-        if self.records.is_empty() {
-            return vec![0; ps.len()];
-        }
-        let mut lat: Vec<u64> = self.records.iter().map(RequestRecord::latency_cycles).collect();
-        lat.sort_unstable();
-        let n = lat.len();
-        ps.iter()
-            .map(|p| {
-                let rank = ((p / 100.0) * n as f64).ceil() as usize;
-                lat[rank.clamp(1, n) - 1]
-            })
-            .collect()
+        nearest_rank_percentiles(
+            self.records
+                .iter()
+                .map(RequestRecord::latency_cycles)
+                .collect(),
+            ps,
+        )
     }
 
-    /// Nearest-rank percentile of end-to-end latency, `p` in (0, 100].
+    /// Nearest-rank percentile of reference latency, `p` in (0, 100].
     pub fn latency_percentile(&self, p: f64) -> u64 {
         self.latency_percentiles(&[p])[0]
     }
@@ -114,15 +283,7 @@ impl ServeReport {
 
     /// Mean latency, cycles (floor — kept integral for byte-stable CSVs).
     pub fn mean_latency(&self) -> u64 {
-        if self.records.is_empty() {
-            return 0;
-        }
-        let total: u128 = self
-            .records
-            .iter()
-            .map(|r| r.latency_cycles() as u128)
-            .sum();
-        (total / self.records.len() as u128) as u64
+        mean_floor(self.records.iter().map(RequestRecord::latency_cycles))
     }
 
     /// Σ service cycles as *seen by requests* (class results fan out to
@@ -136,8 +297,9 @@ impl ServeReport {
         self.records.iter().map(|r| r.macro_cycles).sum()
     }
 
-    /// Σ simulated cycles actually executed (once per class) — the
-    /// denominator for host-side throughput; always ≤ [`Self::served_cycles`].
+    /// Σ simulated cycles actually executed (once per reference class) —
+    /// the denominator for host-side throughput; always ≤
+    /// [`Self::served_cycles`].
     pub fn simulated_cycles(&self) -> u64 {
         self.class_service_cycles.iter().sum()
     }
@@ -166,19 +328,20 @@ impl ServeReport {
         self.records.len() as f64 * 1e6 / span as f64
     }
 
-    /// Busiest chip's load — the fleet completion bound under the
-    /// round-robin sharding.
+    /// Policy-timeline makespan: finish cycle of the last request on the
+    /// fleet under the placement policy.
     pub fn fleet_makespan(&self) -> u64 {
-        self.chip_busy_cycles.iter().copied().max().unwrap_or(0)
+        self.fleet.makespan
     }
 
-    /// Fleet parallel speedup: total served cycles / fleet makespan.
+    /// Completion-time speedup of the fleet over the single-chip
+    /// reference timeline.  A homogeneous 1-chip fleet is exactly 1.0
+    /// (its policy timeline *is* the reference timeline).
     pub fn fleet_speedup(&self) -> f64 {
-        let makespan = self.fleet_makespan();
-        if makespan == 0 {
+        if self.fleet.makespan == 0 {
             return 0.0;
         }
-        self.served_cycles() as f64 / makespan as f64
+        self.reference_makespan() as f64 / self.fleet.makespan as f64
     }
 
     /// Per-request table (`serve.csv`): integer-only columns, id order —
@@ -249,19 +412,62 @@ impl ServeReport {
         t
     }
 
-    /// Human-readable chip-fleet lines for stdout (chips-dependent, so
-    /// deliberately *not* part of any CSV).
+    /// Human-readable policy-timeline lines for stdout.
     pub fn fleet_lines(&self) -> String {
+        let f = &self.fleet;
         let mut out = String::new();
-        for (c, busy) in self.chip_busy_cycles.iter().enumerate() {
-            out.push_str(&format!("  chip {c:<3} busy {busy} cycles\n"));
+        for (chip, (busy, n)) in f
+            .chip_busy_cycles
+            .iter()
+            .zip(&f.chip_requests)
+            .enumerate()
+        {
+            out.push_str(&format!(
+                "  chip {chip:<3} [{}] {n} requests, busy {busy} cycles ({:.1}% of makespan)\n",
+                f.chip_archs[chip],
+                100.0 * f.utilization(chip)
+            ));
         }
         out.push_str(&format!(
-            "  fleet makespan {} cycles, speedup {:.2}x over 1 chip\n",
-            self.fleet_makespan(),
+            "  policy {}: p50/p95/p99 latency {} / {} / {} cycles, makespan {} ({:.2}x vs 1-chip reference)\n",
+            f.policy.name(),
+            f.p50(),
+            f.p95(),
+            f.p99(),
+            f.makespan,
             self.fleet_speedup()
         ));
         out
+    }
+}
+
+/// Nearest-rank percentiles (each `p` in (0, 100]) over `values`,
+/// sorting once; zeros when `values` is empty.
+fn nearest_rank_percentiles(mut values: Vec<u64>, ps: &[f64]) -> Vec<u64> {
+    if values.is_empty() {
+        return vec![0; ps.len()];
+    }
+    values.sort_unstable();
+    let n = values.len();
+    ps.iter()
+        .map(|p| {
+            let rank = ((p / 100.0) * n as f64).ceil() as usize;
+            values[rank.clamp(1, n) - 1]
+        })
+        .collect()
+}
+
+/// Integer mean (floor), 0 for an empty iterator.
+fn mean_floor(values: impl Iterator<Item = u64>) -> u64 {
+    let (mut total, mut count) = (0u128, 0u128);
+    for v in values {
+        total += v as u128;
+        count += 1;
+    }
+    if count == 0 {
+        0
+    } else {
+        (total / count) as u64
     }
 }
 
@@ -285,6 +491,25 @@ mod tests {
         }
     }
 
+    fn fleet_report() -> FleetReport {
+        FleetReport {
+            policy: PlacementPolicy::RoundRobin,
+            assignments: (0..100)
+                .map(|i| FleetAssignment {
+                    id: i,
+                    chip: (i % 2) as usize,
+                    arrival_cycle: i as u64 * 10,
+                    queue_cycles: 0,
+                    service_cycles: (i as u64 + 1) * 10,
+                })
+                .collect(),
+            chip_archs: vec!["a".into(), "b".into()],
+            chip_busy_cycles: vec![30, 20],
+            chip_requests: vec![50, 50],
+            makespan: 40,
+        }
+    }
+
     fn report() -> ServeReport {
         ServeReport {
             records: (0..100)
@@ -292,12 +517,12 @@ mod tests {
                 .collect(),
             classes: 1,
             class_service_cycles: vec![10],
-            chip_busy_cycles: vec![30, 20],
+            fleet: fleet_report(),
         }
     }
 
     #[test]
-    fn nearest_rank_percentiles() {
+    fn nearest_rank_percentiles_match() {
         // Latencies are 10, 20, ..., 1000.
         let r = report();
         assert_eq!(r.p50(), 500);
@@ -310,6 +535,9 @@ mod tests {
             r.latency_percentiles(&[1.0, 50.0, 95.0, 99.0, 100.0]),
             vec![10, 500, 950, 990, 1000]
         );
+        // Fleet latencies are the same series here.
+        assert_eq!(r.fleet.p50(), 500);
+        assert_eq!(r.fleet.p99(), 990);
     }
 
     #[test]
@@ -318,15 +546,26 @@ mod tests {
             records: vec![],
             classes: 0,
             class_service_cycles: vec![],
-            chip_busy_cycles: vec![0],
+            fleet: FleetReport {
+                policy: PlacementPolicy::LeastLoaded,
+                assignments: vec![],
+                chip_archs: vec!["a".into()],
+                chip_busy_cycles: vec![0],
+                chip_requests: vec![0],
+                makespan: 0,
+            },
         };
         assert_eq!(r.p50(), 0);
         assert_eq!(r.mean_latency(), 0);
         assert_eq!(r.reference_makespan(), 0);
         assert_eq!(r.requests_per_mcycle(), 0.0);
         assert_eq!(r.fleet_speedup(), 0.0);
+        assert_eq!(r.fleet.p99(), 0);
+        assert_eq!(r.fleet.utilization(0), 0.0);
         assert_eq!(r.to_table().len(), 0);
         assert_eq!(r.summary_table().len(), 1);
+        assert_eq!(r.fleet.requests_table().len(), 0);
+        assert_eq!(r.fleet.to_table().len(), 2, "one chip row + aggregate");
     }
 
     #[test]
@@ -335,7 +574,9 @@ mod tests {
         assert_eq!(r.served_cycles(), (1..=100u64).map(|i| i * 10).sum());
         assert_eq!(r.served_macro_cycles(), r.served_cycles() * 8);
         assert_eq!(r.simulated_cycles(), 10);
-        assert_eq!(r.fleet_makespan(), 30);
+        assert_eq!(r.fleet_makespan(), 40);
+        assert!((r.fleet.utilization(0) - 0.75).abs() < 1e-12);
+        assert!((r.fleet.utilization(1) - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -346,5 +587,22 @@ mod tests {
         assert!(a.starts_with("id,class,strategy,"));
         let s = report().summary_table().to_csv();
         assert!(s.contains("p50_latency"));
+        let f = report().fleet.to_table().to_csv();
+        assert!(f.starts_with("policy,chip,arch,"));
+        assert!(f.contains("\nrr,all,-,100,"));
+        let fr = report().fleet.requests_table().to_csv();
+        assert!(fr.starts_with("id,chip,arrival,"));
+        assert_eq!(fr.lines().count(), 101);
+    }
+
+    #[test]
+    fn fleet_speedup_is_reference_over_policy_makespan() {
+        let mut r = report();
+        // reference makespan: last record finishes at 99*10 + 1000 = 1990.
+        assert_eq!(r.reference_makespan(), 1990);
+        r.fleet.makespan = 995;
+        assert!((r.fleet_speedup() - 2.0).abs() < 1e-12);
+        r.fleet.makespan = 1990;
+        assert!((r.fleet_speedup() - 1.0).abs() < 1e-12);
     }
 }

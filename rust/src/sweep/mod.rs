@@ -42,6 +42,7 @@ pub use exec::run_indexed;
 pub use runner::{default_jobs, SweepRunner};
 
 use crate::arch::ArchConfig;
+use crate::fleet::{FleetConfig, PlacementPolicy};
 use crate::sched::{ScheduleError, SchedulePlan, Strategy};
 use crate::sim::{SimError, SimOptions};
 use thiserror::Error;
@@ -112,11 +113,106 @@ impl SweepError {
     }
 }
 
+/// One point of a fleet/placement sweep: a chip fleet and the placement
+/// policy to serve it with.
+#[derive(Debug, Clone)]
+pub struct FleetSweepPoint {
+    pub fleet: FleetConfig,
+    pub policy: PlacementPolicy,
+}
+
+/// A fleet-size × placement-policy axis for design-space sweeps.
+///
+/// Design points ([`SweepPoint`]) answer "how fast is one chip at this
+/// configuration"; a fleet axis answers "how does a *fleet* of chips
+/// serve traffic under each placement policy".  The axis is evaluated by
+/// [`crate::serve::run_fleet_axis`] (every point serves the same request
+/// stream); attach one to a [`SweepGrid`] via
+/// [`SweepGrid::with_fleet_axis`] so a DSE can carry both kinds of
+/// sweep in one description.
+#[derive(Debug, Clone, Default)]
+pub struct FleetAxis {
+    fleets: Vec<FleetConfig>,
+    policies: Vec<PlacementPolicy>,
+}
+
+impl FleetAxis {
+    /// An axis over explicit fleets × policies.
+    pub fn new(fleets: Vec<FleetConfig>, policies: Vec<PlacementPolicy>) -> Self {
+        Self { fleets, policies }
+    }
+
+    /// The common case: homogeneous fleets of `arch` at each size in
+    /// `sizes`, crossed with `policies`.
+    pub fn homogeneous_sizes(
+        arch: &ArchConfig,
+        sizes: &[usize],
+        policies: &[PlacementPolicy],
+    ) -> Self {
+        Self {
+            fleets: sizes
+                .iter()
+                .map(|&n| FleetConfig::homogeneous(arch.clone(), n))
+                .collect(),
+            policies: policies.to_vec(),
+        }
+    }
+
+    /// The fleets of the axis, in sweep order.
+    pub fn fleets(&self) -> &[FleetConfig] {
+        &self.fleets
+    }
+
+    /// The placement policies of the axis, in sweep order.
+    pub fn policies(&self) -> &[PlacementPolicy] {
+        &self.policies
+    }
+
+    /// Cartesian points, row-major with the policy fastest — the result
+    /// order of [`crate::serve::run_fleet_axis`].
+    pub fn points(&self) -> Vec<FleetSweepPoint> {
+        let mut out = Vec::with_capacity(self.len());
+        for fleet in &self.fleets {
+            for &policy in &self.policies {
+                out.push(FleetSweepPoint {
+                    fleet: fleet.clone(),
+                    policy,
+                });
+            }
+        }
+        out
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.fleets.len() * self.policies.len()
+    }
+
+    /// True when the axis has no points.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Indices of the `k` best results by `key` (ascending — e.g. exec
+/// cycles), with a deterministic tie-break by input index.  The top-k
+/// reporter over sweep results (`dse --top K`).
+pub fn top_k_by(n: usize, k: usize, key: impl Fn(usize) -> f64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
 /// An ordered batch of design points.  Order is significant: results come
 /// back in exactly this order regardless of execution parallelism.
+///
+/// A grid may also carry a [`FleetAxis`]; [`SweepRunner`] evaluates only
+/// the design points, the fleet axis is consumed by the serving layer.
 #[derive(Debug, Clone, Default)]
 pub struct SweepGrid {
     points: Vec<SweepPoint>,
+    fleet_axis: FleetAxis,
 }
 
 impl SweepGrid {
@@ -128,7 +224,21 @@ impl SweepGrid {
     /// Wrap an explicit point list (the figure reproductions build their
     /// irregular grids this way).
     pub fn from_points(points: Vec<SweepPoint>) -> Self {
-        Self { points }
+        Self {
+            points,
+            fleet_axis: FleetAxis::default(),
+        }
+    }
+
+    /// Attach a fleet/placement axis (builder style).
+    pub fn with_fleet_axis(mut self, axis: FleetAxis) -> Self {
+        self.fleet_axis = axis;
+        self
+    }
+
+    /// The grid's fleet/placement axis (empty by default).
+    pub fn fleet_axis(&self) -> &FleetAxis {
+        &self.fleet_axis
     }
 
     /// Cartesian product `archs × plans × strategies`, row-major in that
@@ -146,7 +256,7 @@ impl SweepGrid {
                 }
             }
         }
-        Self { points }
+        Self::from_points(points)
     }
 
     /// Append one point; returns its index (= result index).
@@ -203,6 +313,38 @@ mod tests {
             1
         );
         assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn fleet_axis_points_are_policy_fastest() {
+        let arch = ArchConfig::paper_default();
+        let axis = FleetAxis::homogeneous_sizes(&arch, &[1, 2], &PlacementPolicy::ALL);
+        assert_eq!(axis.len(), 6);
+        let pts = axis.points();
+        assert_eq!(pts.len(), 6);
+        assert_eq!(pts[0].fleet.len(), 1);
+        assert_eq!(pts[0].policy, PlacementPolicy::RoundRobin);
+        assert_eq!(pts[2].policy, PlacementPolicy::ClassAffinity);
+        assert_eq!(pts[3].fleet.len(), 2);
+        assert_eq!(pts[3].policy, PlacementPolicy::RoundRobin);
+        assert!(FleetAxis::default().is_empty());
+        // Grids carry the axis without disturbing design points.
+        let grid = SweepGrid::new().with_fleet_axis(axis);
+        assert!(grid.is_empty());
+        assert_eq!(grid.fleet_axis().len(), 6);
+    }
+
+    #[test]
+    fn top_k_is_ascending_with_index_tie_break() {
+        let cycles = [30.0, 10.0, 20.0, 10.0, 5.0];
+        assert_eq!(top_k_by(cycles.len(), 3, |i| cycles[i]), vec![4, 1, 3]);
+        // k larger than n returns everything, still ordered.
+        assert_eq!(
+            top_k_by(cycles.len(), 10, |i| cycles[i]),
+            vec![4, 1, 3, 2, 0]
+        );
+        assert!(top_k_by(0, 3, |_| 0.0).is_empty());
+        assert!(top_k_by(5, 0, |i| cycles[i]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Fleet determinism and placement-policy invariants (ISSUE 3):
+//!
+//! - every report CSV — reference *and* policy timeline — is
+//!   byte-identical across `--jobs`;
+//! - `serve.csv`/`serve_summary.csv` (the PR 2 regression surface) are
+//!   invariant to fleet composition, chip count and placement policy;
+//! - heterogeneous fleets codegen once per *distinct arch × class*, not
+//!   per chip;
+//! - placement policies genuinely diverge on a skewed traffic mix.
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::coordinator::{Coordinator, RunConfig};
+use gpp_pim::fleet::{FleetConfig, PlacementPolicy};
+use gpp_pim::gemm::blas;
+use gpp_pim::sched::Strategy;
+use gpp_pim::serve::{synthetic_traffic, Batcher, Request, ServeEngine, ServeReport, TrafficConfig};
+
+fn arch() -> ArchConfig {
+    ArchConfig::paper_default()
+}
+
+/// Two distinct archs (paper + half-bandwidth paper): same geometry, so
+/// plans — and with them class structure — align 1:1 across archs.
+fn het_fleet() -> FleetConfig {
+    let mut slow = arch();
+    slow.bandwidth = 256;
+    FleetConfig::new(vec![arch(), slow]).unwrap()
+}
+
+fn traffic(requests: u32) -> Vec<Request> {
+    synthetic_traffic(
+        &arch(),
+        &TrafficConfig {
+            requests,
+            seed: 7,
+            mean_gap_cycles: 2048,
+        },
+    )
+}
+
+/// Reference CSVs only — the PR 2 byte-comparison surface.
+fn reference_csv(engine: &ServeEngine, reqs: &[Request]) -> String {
+    let r = engine.run(reqs).unwrap();
+    format!("{}{}", r.to_table().to_csv(), r.summary_table().to_csv())
+}
+
+/// Everything: reference CSVs + both policy-timeline CSVs.
+fn full_csv(engine: &ServeEngine, reqs: &[Request]) -> String {
+    let r = engine.run(reqs).unwrap();
+    format!(
+        "{}{}{}{}",
+        r.to_table().to_csv(),
+        r.summary_table().to_csv(),
+        r.fleet.to_table().to_csv(),
+        r.fleet.requests_table().to_csv()
+    )
+}
+
+#[test]
+fn heterogeneous_reports_byte_identical_across_jobs() {
+    let reqs = traffic(96);
+    for policy in PlacementPolicy::ALL {
+        let base = full_csv(&ServeEngine::with_fleet(het_fleet(), policy, 1), &reqs);
+        for jobs in [2usize, 4, 16] {
+            assert_eq!(
+                base,
+                full_csv(&ServeEngine::with_fleet(het_fleet(), policy, jobs), &reqs),
+                "policy {} diverged at jobs={jobs}",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn reference_csvs_invariant_to_fleet_and_policy() {
+    // serve.csv / serve_summary.csv are a pure function of
+    // (traffic, reference arch): the PR 2 constructor, homogeneous
+    // fleets of any size under any policy, and a heterogeneous fleet
+    // sharing the reference arch must all reproduce the same bytes.
+    let reqs = traffic(96);
+    let base = reference_csv(&ServeEngine::new(arch(), 1, 1), &reqs);
+    for policy in PlacementPolicy::ALL {
+        for chips in [1usize, 2, 4] {
+            assert_eq!(
+                base,
+                reference_csv(
+                    &ServeEngine::with_fleet(
+                        FleetConfig::homogeneous(arch(), chips),
+                        policy,
+                        4
+                    ),
+                    &reqs
+                ),
+                "policy {} chips {chips}",
+                policy.name()
+            );
+        }
+        assert_eq!(
+            base,
+            reference_csv(&ServeEngine::with_fleet(het_fleet(), policy, 4), &reqs),
+            "heterogeneous fleet, policy {}",
+            policy.name()
+        );
+    }
+}
+
+#[test]
+fn reference_timeline_matches_direct_coordinator_runs() {
+    // In-process PR 2 "fixture": each request's reference service must
+    // equal a standalone Coordinator::run of the same workload/config,
+    // and queueing must be FIFO in (arrival, id) order — the §Serve
+    // latency methodology re-derived independently of the serving
+    // engine.  (A committed golden file cannot be blessed in the
+    // offline authoring container; this pins the same bytes
+    // semantically.)
+    let reqs = traffic(48);
+    let report = ServeEngine::with_fleet(het_fleet(), PlacementPolicy::LeastLoaded, 4)
+        .run(&reqs)
+        .unwrap();
+    let mut coord = Coordinator::new(arch());
+    let expected_service: Vec<u64> = reqs
+        .iter()
+        .map(|r| coord.run(&r.workload, &r.cfg).unwrap().cycles)
+        .collect();
+    let mut order: Vec<usize> = (0..reqs.len()).collect();
+    order.sort_by_key(|&i| (reqs[i].arrival_cycle, reqs[i].id));
+    let mut clock = 0u64;
+    let mut expected_queue = vec![0u64; reqs.len()];
+    for &i in &order {
+        let start = clock.max(reqs[i].arrival_cycle);
+        expected_queue[i] = start - reqs[i].arrival_cycle;
+        clock = start + expected_service[i];
+    }
+    assert_eq!(report.records.len(), reqs.len());
+    for (i, rec) in report.records.iter().enumerate() {
+        assert_eq!(rec.id, reqs[i].id);
+        assert_eq!(rec.service_cycles, expected_service[i], "request {i}");
+        assert_eq!(rec.queue_cycles, expected_queue[i], "request {i}");
+    }
+    assert_eq!(report.reference_makespan(), clock);
+}
+
+#[test]
+fn heterogeneous_codegen_once_per_arch_per_class() {
+    let reqs = traffic(64);
+    let classes = Batcher::new(arch()).batch(&reqs).unwrap().classes() as u64;
+    assert!(classes > 1);
+    let engine = ServeEngine::with_fleet(het_fleet(), PlacementPolicy::RoundRobin, 4);
+    engine.run(&reqs).unwrap();
+    assert_eq!(
+        engine.cache().misses(),
+        2 * classes,
+        "2 distinct archs x {classes} classes must each codegen exactly once"
+    );
+    assert_eq!(engine.cache().hits(), 0);
+    // Re-serving the stream is pure cache hits.
+    engine.run(&reqs).unwrap();
+    assert_eq!(engine.cache().misses(), 2 * classes);
+    assert_eq!(engine.cache().hits(), 2 * classes);
+}
+
+#[test]
+fn codegen_is_per_distinct_arch_not_per_chip() {
+    let reqs = traffic(48);
+    let classes = Batcher::new(arch()).batch(&reqs).unwrap().classes() as u64;
+    // 6 chips but only 2 distinct archs.
+    let mut slow = arch();
+    slow.bandwidth = 256;
+    let fleet = FleetConfig::new(vec![
+        arch(),
+        slow.clone(),
+        arch(),
+        slow.clone(),
+        arch(),
+        slow,
+    ])
+    .unwrap();
+    let engine = ServeEngine::with_fleet(fleet, PlacementPolicy::LeastLoaded, 4);
+    engine.run(&reqs).unwrap();
+    assert_eq!(engine.cache().misses(), 2 * classes);
+}
+
+/// Skewed mix: one heavy class and one light class, all arriving at
+/// cycle 0 in the order H L H L L L — chosen so the three policies
+/// provably place differently on a 2-chip fleet whenever
+/// `service(H) > service(L)`.
+fn skewed_requests() -> Vec<Request> {
+    let a = arch();
+    // Heavy: 64 tasks squeezed onto 8 macros (8 serial rounds) — an
+    // order of magnitude above the light single-task class.
+    let heavy = || {
+        (
+            blas::e2e_ffn(),
+            RunConfig {
+                active_macros: 8,
+                ..RunConfig::from_arch(&a, Strategy::GeneralizedPingPong)
+            },
+        )
+    };
+    let light = || {
+        (
+            blas::square_chain(32, 1, 4),
+            RunConfig::from_arch(&a, Strategy::GeneralizedPingPong),
+        )
+    };
+    [heavy(), light(), heavy(), light(), light(), light()]
+        .into_iter()
+        .enumerate()
+        .map(|(i, (workload, cfg))| Request {
+            id: i as u32,
+            arrival_cycle: 0,
+            workload,
+            cfg,
+        })
+        .collect()
+}
+
+#[test]
+fn policies_diverge_on_a_skewed_mix_but_reference_csvs_do_not() {
+    let reqs = skewed_requests();
+    let fleet = FleetConfig::homogeneous(arch(), 2);
+    let run = |policy| {
+        ServeEngine::with_fleet(fleet.clone(), policy, 2)
+            .run(&reqs)
+            .unwrap()
+    };
+    let rr = run(PlacementPolicy::RoundRobin);
+    let ll = run(PlacementPolicy::LeastLoaded);
+    let aff = run(PlacementPolicy::ClassAffinity);
+
+    // The mix really is skewed: the heavy class costs more.
+    assert!(
+        rr.records[0].service_cycles > rr.records[1].service_cycles,
+        "heavy ({}) must out-cost light ({})",
+        rr.records[0].service_cycles,
+        rr.records[1].service_cycles
+    );
+
+    // Acceptance criterion: reference CSVs identical across policies...
+    assert_eq!(rr.to_table().to_csv(), ll.to_table().to_csv());
+    assert_eq!(rr.to_table().to_csv(), aff.to_table().to_csv());
+    assert_eq!(rr.summary_table().to_csv(), ll.summary_table().to_csv());
+    assert_eq!(rr.summary_table().to_csv(), aff.summary_table().to_csv());
+
+    // ...while chip assignments — and with them per-request policy
+    // latency — differ pairwise.
+    let chips = |r: &ServeReport| {
+        r.fleet
+            .assignments
+            .iter()
+            .map(|a| a.chip)
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(chips(&rr), vec![0, 1, 0, 1, 0, 1]);
+    assert_eq!(chips(&ll), vec![0, 1, 1, 0, 0, 1]);
+    assert_eq!(chips(&aff), vec![0, 1, 0, 1, 1, 1]);
+
+    // fleet.csv / fleet_requests.csv (policy-timeline latency) differ.
+    assert_ne!(rr.fleet.to_table().to_csv(), ll.fleet.to_table().to_csv());
+    assert_ne!(rr.fleet.to_table().to_csv(), aff.fleet.to_table().to_csv());
+    assert_ne!(
+        rr.fleet.requests_table().to_csv(),
+        ll.fleet.requests_table().to_csv()
+    );
+    assert_ne!(
+        ll.fleet.requests_table().to_csv(),
+        aff.fleet.requests_table().to_csv()
+    );
+    assert_ne!(
+        rr.fleet.requests_table().to_csv(),
+        aff.fleet.requests_table().to_csv()
+    );
+}
+
+#[test]
+fn heterogeneous_service_cycles_follow_the_serving_chip() {
+    // Policy-timeline service cycles must come from the *serving* chip's
+    // arch, not the reference proxy.  Two identical, deliberately
+    // bus-bound in-situ requests (256 macros writing concurrently at
+    // 8 B/cyc: 2048 B/cyc of demand) land on chip 0 and chip 1 under
+    // round-robin; the half-bandwidth chip must take strictly longer.
+    let mut reqs = traffic(64);
+    let t = reqs.last().unwrap().arrival_cycle;
+    let cfg = RunConfig::from_arch(&arch(), Strategy::InSitu);
+    for id in [64u32, 65] {
+        reqs.push(Request {
+            id,
+            arrival_cycle: t,
+            workload: blas::square_chain(256, 2, 16),
+            cfg,
+        });
+    }
+    let report = ServeEngine::with_fleet(het_fleet(), PlacementPolicy::RoundRobin, 4)
+        .run(&reqs)
+        .unwrap();
+    // Round-robin by dispatch order: even index -> chip 0, odd -> chip 1.
+    let a64 = &report.fleet.assignments[64];
+    let a65 = &report.fleet.assignments[65];
+    assert_eq!((a64.chip, a65.chip), (0, 1));
+    let reference = report.records[64].service_cycles;
+    assert_eq!(report.records[65].service_cycles, reference, "same class");
+    assert_eq!(
+        a64.service_cycles, reference,
+        "chip 0 is the reference arch"
+    );
+    assert!(
+        a65.service_cycles > reference,
+        "half-bandwidth chip served a 2048 B/cyc-demand class in {} cycles, \
+         reference took {reference}",
+        a65.service_cycles
+    );
+    // Reference-arch chips always agree with the reference records.
+    for (rec, a) in report.records.iter().zip(&report.fleet.assignments) {
+        if a.chip == 0 {
+            assert_eq!(a.service_cycles, rec.service_cycles, "id {}", rec.id);
+        }
+    }
+}
