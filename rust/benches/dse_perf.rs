@@ -1,0 +1,145 @@
+//! Perf bench: the full-cartesian DSE (`dse --full`) — the consumer the
+//! steady-state fast-forward was built for.  Every cartesian point runs
+//! all three strategies through the parallel sweep runner with looped
+//! codegen; the same grid is then re-run with
+//! `SimOptions::no_fast_forward` and the two result sets are asserted
+//! **bit-identical** before any timing is reported.
+//!
+//! Writes `BENCH_dse.json` (schema: EXPERIMENTS.md §Tracking):
+//! `dse/full-cartesian/fast-forward` and
+//! `dse/full-cartesian/no-fast-forward`, validated before exiting.
+//! Reduced-size runs: set `GPP_DSE_POINTS` (cartesian point cap),
+//! `GPP_DSE_TASKS` (tasks per point) and `GPP_BENCH_ITERS` (CI
+//! bench-smoke).  `cargo bench --bench dse_perf`
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::model::dse::CartesianSpace;
+use gpp_pim::report::benchkit::{
+    env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
+};
+use gpp_pim::sched::{CodegenStyle, SchedulePlan, Strategy};
+use gpp_pim::sim::{simulate, SimOptions};
+use gpp_pim::sweep::SweepRunner;
+use std::path::Path;
+
+/// Deterministically trim the space to at most `cap` cartesian points by
+/// popping from the longest axis (fixed priority on ties) until it fits.
+fn trim_to_cap(space: &mut CartesianSpace, cap: usize) {
+    while space.len() > cap {
+        let lens = [
+            space.bandwidths.len(),
+            space.n_in.len(),
+            space.cores.len(),
+            space.macros_per_core.len(),
+        ];
+        let max = *lens.iter().max().unwrap();
+        if max <= 1 {
+            break; // every trimmable axis is down to one value
+        }
+        if space.bandwidths.len() == max {
+            space.bandwidths.pop();
+        } else if space.n_in.len() == max {
+            space.n_in.pop();
+        } else if space.cores.len() == max {
+            space.cores.pop();
+        } else {
+            space.macros_per_core.pop();
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters = env_u64("GPP_BENCH_ITERS", 5) as usize;
+    let tasks = env_u64("GPP_DSE_TASKS", 16384) as u32;
+    let point_cap = env_u64("GPP_DSE_POINTS", 48) as usize;
+
+    let arch = ArchConfig::paper_default();
+    let mut space = CartesianSpace {
+        cores: vec![4, 8, 16],
+        macros_per_core: vec![8, 16],
+        n_in: vec![2, 4, 8],
+        bandwidths: vec![64, 128, 256, 512],
+        // One deep buffer: this bench measures evaluation speed, not the
+        // buffer-feasibility frontier (the CLI default axes cover that).
+        buffers: vec![1 << 20],
+        tasks,
+        write_speed: 8,
+    };
+    trim_to_cap(&mut space, point_cap.max(1));
+    space.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    section("full-cartesian DSE: fast-forward on vs off (byte-identity first)");
+    println!(
+        "space: {} points x {} strategies, {} tasks/point",
+        space.len(),
+        Strategy::ALL.len(),
+        space.tasks
+    );
+
+    // Correctness gate: identical stats for every point, fast-forward on
+    // vs off, plus proof the fast-forward actually engaged.
+    let runner = SweepRunner::default();
+    let grid_on = space
+        .grid(&arch, CodegenStyle::Looped, true)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let grid_off = space
+        .grid(&arch, CodegenStyle::Looped, false)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let on = runner.run_all(&grid_on).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let off = runner.run_all(&grid_off).map_err(|e| anyhow::anyhow!("{e}"))?;
+    assert_eq!(
+        on, off,
+        "fast-forward on/off must produce byte-identical stats on every DSE point"
+    );
+    let probe_plan = SchedulePlan {
+        tasks,
+        active_macros: arch.total_macros().min(tasks),
+        n_in: 4,
+        write_speed: 8,
+    };
+    let mut probe_arch = arch.clone();
+    probe_arch.core_buffer_bytes = 1 << 20;
+    // Uncontended bus for the engagement probe: the steady state then
+    // recurs at exactly one loop iteration, so detection is guaranteed.
+    probe_arch.bandwidth = 4096;
+    let probe = Strategy::GeneralizedPingPong
+        .codegen_styled(&probe_arch, &probe_plan, CodegenStyle::Looped)
+        .unwrap();
+    let probe_run = simulate(&probe_arch, &probe, SimOptions::default()).unwrap();
+    assert!(
+        probe_run.fast_forward.periods > 0,
+        "fast-forward must engage on the DSE workload: {:?}",
+        probe_run.fast_forward
+    );
+
+    // Timing: whole-space evaluation, fresh runner per iteration so the
+    // codegen cache cost is measured too (both arms pay it equally).
+    let bench = Bench::new(1, iters);
+    let m_fast = bench.run("dse/full-cartesian/fast-forward", || {
+        SweepRunner::default().run_all(&grid_on).unwrap().len()
+    });
+    println!("{}", m_fast.line());
+    let m_slow = bench.run("dse/full-cartesian/no-fast-forward", || {
+        SweepRunner::default().run_all(&grid_off).unwrap().len()
+    });
+    println!("{}", m_slow.line());
+    let speedup = m_slow.median_secs() / m_fast.median_secs();
+    println!(
+        "-> fast-forward: {:.1}x end-to-end on the full-cartesian DSE \
+         ({} points; naive ping-pong has no looped lowering yet and runs \
+         the slow path in both arms)",
+        speedup,
+        space.len()
+    );
+
+    let records = [
+        BenchRecord::new(&m_fast, None),
+        BenchRecord::new(&m_slow, None),
+    ];
+    let out = Path::new("BENCH_dse.json");
+    write_bench_json(out, &records)?;
+    let text = std::fs::read_to_string(out)?;
+    let n = validate_bench_json(&text).map_err(|e| anyhow::anyhow!("schema: {e}"))?;
+    println!("\n[wrote {} ({n} records, schema OK)]", out.display());
+    Ok(())
+}

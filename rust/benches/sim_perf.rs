@@ -4,23 +4,26 @@
 //! for both the fresh-allocation path (`simulate`) and the recycled
 //! workspace path (`simulate_in`), so the zero-realloc win is visible.
 //!
-//! Writes `BENCH_sim.json` (schema: EXPERIMENTS.md §Tracking): one
-//! engine-level record, the single-point `simulate_in` throughput on the
-//! full-chip workload, validated against the schema before exiting.
-//! Reduced-size runs: set `GPP_SIM_TASKS` / `GPP_BENCH_ITERS` (CI
-//! bench-smoke).  `cargo bench --bench sim_perf`
+//! Writes `BENCH_sim.json` (schema: EXPERIMENTS.md §Tracking): the
+//! single-point `simulate_in` throughput on the full-chip workload plus
+//! the loop-workload fast-forward pair (`sim/loop-gpp/fast-forward` vs
+//! `sim/loop-gpp/no-fast-forward`, asserted bit-identical and >= 5x
+//! apart), validated against the schema before exiting.
+//! Reduced-size runs: set `GPP_SIM_TASKS` / `GPP_FF_TASKS` /
+//! `GPP_BENCH_ITERS` (CI bench-smoke).  `cargo bench --bench sim_perf`
 
 use gpp_pim::arch::ArchConfig;
 use gpp_pim::report::benchkit::{
     env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
 };
-use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sched::{CodegenStyle, SchedulePlan, Strategy};
 use gpp_pim::sim::{simulate, simulate_in, SimOptions, SimWorkspace};
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let iters = env_u64("GPP_BENCH_ITERS", 7) as usize;
     let full_chip_tasks = env_u64("GPP_SIM_TASKS", 8192) as u32;
+    let ff_tasks = env_u64("GPP_FF_TASKS", 65536) as u32;
 
     section("simulator throughput (event-accelerated engine)");
     let bench = Bench::new(1, iters);
@@ -88,6 +91,72 @@ fn main() -> anyhow::Result<()> {
         fresh.median_secs() / reused.median_secs()
     );
 
+    section("steady-state fast-forward: looped gpp, 256 macros");
+    // The large-loop workload of the §Sim acceptance gate: a looped-
+    // codegen full-chip gpp program whose steady state the engine
+    // detects and extrapolates.  Bandwidth covers all write ports
+    // (uncontended bus) so the steady state recurs at exactly one
+    // iteration — the regime fast-forward is specified for.  Correctness
+    // first (bit-identical stats, deterministic), then wall-clock.
+    let mut ff_arch = arch.clone();
+    ff_arch.bandwidth = 4096; // >= 256 macros x 8 B/cyc
+    let ff_plan = SchedulePlan {
+        tasks: ff_tasks,
+        active_macros: 256,
+        n_in: 4,
+        write_speed: 8,
+    };
+    let ff_program = Strategy::GeneralizedPingPong
+        .codegen_styled(&ff_arch, &ff_plan, CodegenStyle::Looped)
+        .unwrap();
+    let slow_opts = SimOptions {
+        no_fast_forward: true,
+        ..SimOptions::default()
+    };
+    let fast_run = simulate(&ff_arch, &ff_program, SimOptions::default()).unwrap();
+    let slow_run = simulate(&ff_arch, &ff_program, slow_opts.clone()).unwrap();
+    assert_eq!(
+        fast_run.stats, slow_run.stats,
+        "fast-forward must be bit-identical to the slow path"
+    );
+    assert!(
+        fast_run.fast_forward.periods > 0,
+        "fast-forward must engage on the loop workload: {:?}",
+        fast_run.fast_forward
+    );
+    println!(
+        "fast-forward engaged: {} periods / {} cycles over {} skips (of {} total cycles)",
+        fast_run.fast_forward.periods,
+        fast_run.fast_forward.cycles,
+        fast_run.fast_forward.skips,
+        fast_run.stats.cycles
+    );
+    let ff_bench = Bench::new(1, iters);
+    let mut ws = SimWorkspace::new();
+    let mut ff_cycles = 0u64;
+    let m_fast = ff_bench.run("sim/loop-gpp/fast-forward", || {
+        let r = simulate_in(&ff_arch, &ff_program, SimOptions::default(), &mut ws).unwrap();
+        ff_cycles = r.stats.cycles;
+        r.stats.cycles
+    });
+    let ff_macro_cycles = ff_cycles as f64 * 256.0;
+    println!("{}", m_fast.line());
+    let m_slow = ff_bench.run("sim/loop-gpp/no-fast-forward", || {
+        simulate_in(&ff_arch, &ff_program, slow_opts.clone(), &mut ws)
+            .unwrap()
+            .stats
+            .cycles
+    });
+    println!("{}", m_slow.line());
+    let ff_speedup = m_slow.median_secs() / m_fast.median_secs();
+    println!("-> steady-state fast-forward: {ff_speedup:.1}x on the {ff_tasks}-task loop workload");
+    // Hard gate (ample margin: the expected ratio is tasks/active over a
+    // handful of detection periods, i.e. tens to hundreds of x).
+    assert!(
+        ff_speedup >= 5.0,
+        "fast-forward speedup {ff_speedup:.2}x below the 5x acceptance gate"
+    );
+
     section("tracking record: single-point simulate_in throughput");
     // The engine-level BENCH_sim.json record (§Tracking): the gpp
     // full-chip point through the recycled-workspace path — the exact
@@ -112,7 +181,11 @@ fn main() -> anyhow::Result<()> {
         m.line(),
         macro_cycles / m.median_secs() / 1e6
     );
-    let records = [BenchRecord::new(&m, Some(macro_cycles))];
+    let records = [
+        BenchRecord::new(&m, Some(macro_cycles)),
+        BenchRecord::new(&m_fast, Some(ff_macro_cycles)),
+        BenchRecord::new(&m_slow, Some(ff_macro_cycles)),
+    ];
     let out = Path::new("BENCH_sim.json");
     write_bench_json(out, &records)?;
     let text = std::fs::read_to_string(out)?;

@@ -14,6 +14,8 @@
 //! gpp-pim fleet [--requests N] [--seed S] [--jobs J] [--sizes 1,2,4 | --fleet SPEC]
 //!               [--placement P|all] [--mean-gap G] [--csv-dir D]
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
+//! gpp-pim dse  --full [--cores L] [--macros L] [--n-in L] [--bands L] [--buffers L]
+//!              [--tasks N] [--write-speed S] [--jobs N] [--top K] [--unrolled]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
@@ -26,10 +28,10 @@ use gpp_pim::fleet::{FleetConfig, PlacementPolicy};
 use gpp_pim::gemm::blas;
 use gpp_pim::isa;
 use gpp_pim::model::adapt::RuntimeAdaptation;
-use gpp_pim::model::dse::DesignSpace;
+use gpp_pim::model::dse::{CartesianSpace, DesignSpace};
 use gpp_pim::report::figures as figs;
 use gpp_pim::runtime::Runtime;
-use gpp_pim::sched::{SchedulePlan, Strategy};
+use gpp_pim::sched::{CodegenStyle, SchedulePlan, Strategy};
 use gpp_pim::serve::{run_fleet_axis, synthetic_traffic, ServeEngine, TrafficConfig};
 use gpp_pim::sim::{simulate, trace, SimOptions};
 use gpp_pim::sweep::{top_k_by, FleetAxis, SweepGrid, SweepRunner};
@@ -103,6 +105,52 @@ fn jobs_arg(args: &Args) -> Result<usize> {
         }
         None => gpp_pim::sweep::default_jobs(),
     })
+}
+
+/// Top-k count from `--top K`.  `--top 0` is a parse-time error (the
+/// `--jobs 0`/`--chips 0` precedent): silently clamping would hide a
+/// typo'd flag; omitting the flag is how you skip the report.
+fn top_arg(args: &Args) -> Result<Option<usize>> {
+    match args.get("top") {
+        Some(v) => {
+            let top: usize = v.parse().with_context(|| format!("--top {v}"))?;
+            if top == 0 {
+                bail!("--top must be >= 1 (got 0); omit the flag to skip the top-k report");
+            }
+            Ok(Some(top))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Comma-separated positive-integer axis from `--KEY a,b,c`.  Empty
+/// lists and zero entries are rejected — a degenerate axis would
+/// silently collapse the whole cartesian space.
+fn axis_u64(args: &Args, key: &str, default: &[u64]) -> Result<Vec<u64>> {
+    match args.get(key) {
+        None => Ok(default.to_vec()),
+        Some(v) => {
+            if v.trim().is_empty() || v == "true" {
+                bail!("--{key} needs a comma-separated list of values >= 1");
+            }
+            let items: Vec<u64> = v
+                .split(',')
+                .map(|s| s.trim().parse::<u64>().with_context(|| format!("--{key} {v}")))
+                .collect::<Result<_>>()?;
+            if items.contains(&0) {
+                bail!("--{key} entries must be >= 1 (got 0 in '{v}')");
+            }
+            Ok(items)
+        }
+    }
+}
+
+/// [`axis_u64`] narrowed to u32 axes.
+fn axis_u32(args: &Args, key: &str, default: &[u32]) -> Result<Vec<u32>> {
+    axis_u64(args, key, &default.iter().map(|&v| v as u64).collect::<Vec<_>>())?
+        .into_iter()
+        .map(|v| u32::try_from(v).map_err(|_| anyhow!("--{key} entry {v} exceeds u32 range")))
+        .collect()
 }
 
 /// Placement policy from `--placement` (default: round-robin).
@@ -506,7 +554,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 fn cmd_dse(args: &Args) -> Result<()> {
     let mut arch = load_arch(args)?;
     arch.bandwidth = args.get_u64("band", 128)?;
-    let top = args.get_u32("top", 0)? as usize;
+    let top = top_arg(args)?;
+    if args.has("full") {
+        if args.has("sim") {
+            bail!("--full and --sim are mutually exclusive (--full is always simulated)");
+        }
+        return cmd_dse_full(args, &arch, top);
+    }
     let mut space = DesignSpace::fig6(&arch);
     space.bandwidth = arch.bandwidth as f64;
     if args.has("sim") {
@@ -547,7 +601,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         }
         println!("{}", runner.summary());
         emit(&t, "dse_sim", args.get("csv-dir"))?;
-        if top > 0 {
+        if let Some(top) = top {
             // Top-k by *simulated* gpp execution cycles, deterministic
             // tie-break by input index.
             let k = top_k_by(pts.len(), top, |i| pts[i].cycles[2] as f64);
@@ -597,7 +651,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
         ]);
     }
     emit(&t, "dse", args.get("csv-dir"))?;
-    if top > 0 {
+    if let Some(top) = top {
         // Top-k by *model* gpp execution cycles, deterministic tie-break
         // by input index.
         let k = top_k_by(pts.len(), top, |i| pts[i].gpp.exec_cycles);
@@ -619,6 +673,119 @@ fn cmd_dse(args: &Args) -> Result<()> {
         emit(&t, "dse_topk", args.get("csv-dir"))?;
     }
     Ok(())
+}
+
+/// `dse --full`: exhaustive cartesian `(cores × macros × n_in) × band ×
+/// buffer` exploration, simulated cycle-accurately per strategy through
+/// the parallel runner with looped codegen + engine fast-forward
+/// (`--unrolled` forces the slow faithful lowering; results are
+/// identical by construction — the CI smoke byte-compares them).
+fn cmd_dse_full(args: &Args, arch: &ArchConfig, top: Option<usize>) -> Result<()> {
+    let runner = make_runner(args)?;
+    let style = if args.has("unrolled") {
+        CodegenStyle::Unrolled
+    } else {
+        CodegenStyle::Looped
+    };
+    let defaults = CartesianSpace::default_axes(arch);
+    let space = CartesianSpace {
+        cores: axis_u32(args, "cores", &defaults.cores)?,
+        macros_per_core: axis_u32(args, "macros", &defaults.macros_per_core)?,
+        n_in: axis_u32(args, "n-in", &defaults.n_in)?,
+        bandwidths: axis_u64(args, "bands", &defaults.bandwidths)?,
+        buffers: axis_u64(args, "buffers", &defaults.buffers)?,
+        tasks: args.get_u32("tasks", defaults.tasks)?,
+        write_speed: args.get_u32("write-speed", defaults.write_speed)?,
+    };
+    space.validate().map_err(|e| anyhow!("{e}"))?;
+    let pts = space.sweep(arch, &runner, style).map_err(|e| anyhow!("{e}"))?;
+    let feasible = pts.iter().filter(|p| p.feasible()).count();
+    println!(
+        "## DSE full cartesian — {} points ({} feasible) x 3 strategies, {} tasks/point [{} codegen]",
+        pts.len(),
+        feasible,
+        space.tasks,
+        style.name()
+    );
+    println!("{}", runner.summary());
+    // The full table can run to thousands of rows: CSV only (and only
+    // built when requested), stdout gets the summary and top-k report.
+    if let Some(dir) = args.get("csv-dir") {
+        let mut t = CsvTable::new(vec![
+            "cores",
+            "macros_per_core",
+            "n_in",
+            "band",
+            "buffer",
+            "feasible",
+            "cycles_insitu",
+            "cycles_naive",
+            "cycles_gpp",
+            "gpp/insitu",
+        ]);
+        let cell = |c: Option<u64>| c.map(|v| v.to_string()).unwrap_or_default();
+        for p in &pts {
+            let ratio = match (p.cycles[0], p.cycles[2]) {
+                (Some(i), Some(g)) if g > 0 => format!("{:.2}", i as f64 / g as f64),
+                _ => String::new(),
+            };
+            t.push_row(vec![
+                p.cores.to_string(),
+                p.macros_per_core.to_string(),
+                p.n_in.to_string(),
+                p.bandwidth.to_string(),
+                p.buffer_bytes.to_string(),
+                p.feasible().to_string(),
+                cell(p.cycles[0]),
+                cell(p.cycles[1]),
+                cell(p.cycles[2]),
+                ratio,
+            ]);
+        }
+        let path = Path::new(dir).join("dse_full.csv");
+        t.write_to(&path)?;
+        println!("[wrote {}]", path.display());
+    }
+    // Top-k over feasible points by simulated gpp cycles (deterministic
+    // index tie-break); default 10 so --full always reports something.
+    let top = top.unwrap_or(10);
+    let feasible_idx: Vec<usize> = pts
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.feasible())
+        .map(|(i, _)| i)
+        .collect();
+    let k = top_k_by(feasible_idx.len(), top, |j| {
+        pts[feasible_idx[j]].cycles[2].unwrap() as f64
+    });
+    let mut tk = CsvTable::new(vec![
+        "rank",
+        "index",
+        "cores",
+        "macros_per_core",
+        "n_in",
+        "band",
+        "buffer",
+        "cycles_gpp",
+        "gpp/insitu",
+    ]);
+    for (rank, &j) in k.iter().enumerate() {
+        let i = feasible_idx[j];
+        let p = &pts[i];
+        tk.push_row(vec![
+            (rank + 1).to_string(),
+            i.to_string(),
+            p.cores.to_string(),
+            p.macros_per_core.to_string(),
+            p.n_in.to_string(),
+            p.bandwidth.to_string(),
+            p.buffer_bytes.to_string(),
+            p.cycles[2].unwrap().to_string(),
+            format!("{:.2}", p.cycles[0].unwrap() as f64 / p.cycles[2].unwrap() as f64),
+        ]);
+    }
+    println!("## DSE top-{top} (by simulated gpp execution cycles, feasible points)");
+    emit(&tk, "dse_topk", args.get("csv-dir"))
 }
 
 fn cmd_adapt(args: &Args) -> Result<()> {
@@ -721,7 +888,13 @@ COMMANDS:
               fleet_axis.csv)
   dse        design-space exploration table (--band; --sim validates the
               model cycle-accurately through the parallel runner, --jobs N,
-              --tasks N; --top K writes dse_topk.csv)
+              --tasks N; --top K writes dse_topk.csv).
+             --full sweeps the full cartesian space instead: comma-list
+              axes --cores/--macros/--n-in/--bands/--buffers, --tasks N
+              per point, all 3 strategies simulated per point via looped
+              codegen + steady-state fast-forward (--unrolled forces the
+              slow faithful lowering; identical results), --csv-dir
+              writes dse_full.csv + dse_topk.csv
   adapt      runtime bandwidth-adaptation model (--max-n)
   assemble   assemble ISA text to binary machine code
   disasm     disassemble binary machine code

@@ -4,11 +4,18 @@
 //! ratio compute — per strategy — the macro count that saturates the
 //! bandwidth (Eqs. 3–4), the aggregate throughput, and the execution time
 //! of a fixed workload.  This regenerates both panels of Fig. 6.
+//!
+//! Beyond the paper's 15-ratio sweep, [`CartesianSpace`] enumerates a
+//! full `(cores × macros/core × n_in) × bandwidth × buffer` product and
+//! simulates every buildable point cycle-accurately (`dse --full`),
+//! riding the looped codegen + engine fast-forward so per-point cost no
+//! longer scales with workload size.
 
 use crate::arch::ArchConfig;
 use crate::model::eqs;
-use crate::sched::{SchedulePlan, Strategy};
+use crate::sched::{CodegenStyle, SchedulePlan, Strategy};
 use crate::sweep::{SweepError, SweepGrid, SweepPoint, SweepRunner};
+use thiserror::Error;
 
 /// One strategy's numbers at a design point.
 #[derive(Debug, Clone, Copy)]
@@ -237,6 +244,233 @@ impl DesignSpace {
     }
 }
 
+/// Validation failures for a [`CartesianSpace`].
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum DseError {
+    #[error("axis '{0}' is empty — every cartesian axis needs at least one value")]
+    EmptyAxis(&'static str),
+    #[error("axis '{0}' contains 0 — design points must be non-degenerate")]
+    ZeroInAxis(&'static str),
+    #[error("'{0}' must be >= 1")]
+    ZeroParam(&'static str),
+}
+
+/// A full cartesian architecture design space: geometry
+/// (`cores × macros/core × n_in`) × off-chip bandwidth × core-buffer
+/// depth, every point evaluated cycle-accurately for all three paper
+/// strategies through the parallel sweep runner.
+///
+/// This is the "DSE at scale" arm next to the Fig. 6 ratio sweep
+/// ([`DesignSpace::sweep_fig6_sim`]): instead of 15 hand-picked
+/// `tr:tp` ratios it enumerates thousands of buildable chips.  Points
+/// are evaluated with [`CodegenStyle::Looped`] programs by default so
+/// the engine's steady-state fast-forward makes per-point cost
+/// O(distinct phases) instead of O(tasks) — that is what makes
+/// exhaustive enumeration affordable.
+#[derive(Debug, Clone)]
+pub struct CartesianSpace {
+    /// Core-count axis.
+    pub cores: Vec<u32>,
+    /// Macros-per-core axis.
+    pub macros_per_core: Vec<u32>,
+    /// Compute batch (`n_in`) axis.
+    pub n_in: Vec<u32>,
+    /// Off-chip bandwidth axis, bytes/cycle.
+    pub bandwidths: Vec<u64>,
+    /// Per-core buffer-depth axis, bytes.
+    pub buffers: Vec<u64>,
+    /// Reference workload: tile-tasks per point (identical across points
+    /// so execution cycles compare 1:1).
+    pub tasks: u32,
+    /// Write speed `s` for every point, bytes/cycle.
+    pub write_speed: u32,
+}
+
+impl CartesianSpace {
+    /// Default axes around the paper's exemplary chip: 288 design points
+    /// (× 3 strategies).  CLI flags replace any axis.
+    pub fn default_axes(arch: &ArchConfig) -> Self {
+        Self {
+            cores: vec![4, 8, 16],
+            macros_per_core: vec![8, 16],
+            n_in: vec![2, 4, 8, 16],
+            bandwidths: vec![64, 128, 256, 512],
+            buffers: vec![16 * 1024, 64 * 1024, 256 * 1024],
+            tasks: 4096,
+            write_speed: arch.write_speed,
+        }
+    }
+
+    /// Reject empty or degenerate axes (a zero anywhere would silently
+    /// collapse the space or crash the plan checks downstream).
+    pub fn validate(&self) -> Result<(), DseError> {
+        for (axis, name) in [
+            (&self.cores, "cores"),
+            (&self.macros_per_core, "macros_per_core"),
+            (&self.n_in, "n_in"),
+        ] {
+            if axis.is_empty() {
+                return Err(DseError::EmptyAxis(name));
+            }
+            if axis.contains(&0) {
+                return Err(DseError::ZeroInAxis(name));
+            }
+        }
+        for (axis, name) in [(&self.bandwidths, "bandwidths"), (&self.buffers, "buffers")] {
+            if axis.is_empty() {
+                return Err(DseError::EmptyAxis(name));
+            }
+            if axis.contains(&0) {
+                return Err(DseError::ZeroInAxis(name));
+            }
+        }
+        if self.tasks == 0 {
+            return Err(DseError::ZeroParam("tasks"));
+        }
+        if self.write_speed == 0 {
+            return Err(DseError::ZeroParam("write_speed"));
+        }
+        Ok(())
+    }
+
+    /// Number of cartesian points (each evaluated for all 3 strategies).
+    pub fn len(&self) -> usize {
+        self.cores.len()
+            * self.macros_per_core.len()
+            * self.n_in.len()
+            * self.bandwidths.len()
+            * self.buffers.len()
+    }
+
+    /// True when any axis is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cartesian combos in sweep order: row-major with `buffers`
+    /// fastest, `cores` slowest.
+    fn combos(&self) -> Vec<(u32, u32, u32, u64, u64)> {
+        let mut out = Vec::with_capacity(self.len());
+        for &cores in &self.cores {
+            for &mpc in &self.macros_per_core {
+                for &n_in in &self.n_in {
+                    for &band in &self.bandwidths {
+                        for &buf in &self.buffers {
+                            out.push((cores, mpc, n_in, band, buf));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The architecture and plan realizing one combo on `base` (geometry
+    /// and write-port limits inherited from the base chip).
+    fn realize(
+        &self,
+        base: &ArchConfig,
+        (cores, mpc, n_in, band, buf): (u32, u32, u32, u64, u64),
+    ) -> (ArchConfig, SchedulePlan) {
+        let mut a = base.clone();
+        a.n_cores = cores;
+        a.macros_per_core = mpc;
+        a.n_in = n_in;
+        a.bandwidth = band;
+        a.core_buffer_bytes = buf;
+        let plan = SchedulePlan {
+            tasks: self.tasks,
+            active_macros: a.total_macros().min(self.tasks),
+            n_in,
+            write_speed: self.write_speed,
+        };
+        (a, plan)
+    }
+
+    /// Build the evaluation grid: `Strategy::ALL` points per combo, in
+    /// [`CartesianSpace::combos`] order with the strategy fastest.
+    /// `fast_forward = false` forces [`crate::sim::SimOptions::no_fast_forward`]
+    /// on every point — the slow-path baseline `benches/dse_perf.rs`
+    /// measures against.
+    pub fn grid(
+        &self,
+        base: &ArchConfig,
+        style: CodegenStyle,
+        fast_forward: bool,
+    ) -> Result<SweepGrid, DseError> {
+        self.validate()?;
+        let mut grid = SweepGrid::new();
+        for combo in self.combos() {
+            let (a, plan) = self.realize(base, combo);
+            for &strategy in &Strategy::ALL {
+                let mut opts = strategy.sim_options();
+                opts.no_fast_forward = !fast_forward;
+                grid.push(SweepPoint::with_opts(a.clone(), strategy, plan, opts).with_style(style));
+            }
+        }
+        Ok(grid)
+    }
+
+    /// Evaluate the whole space on `runner`.  Infeasible combos (plan or
+    /// buffer constraints violated — e.g. a batch that cannot fit the
+    /// buffer axis value) come back with `None` cycles instead of
+    /// failing the sweep: in an exhaustive enumeration, infeasibility is
+    /// data, not an error.
+    pub fn sweep(
+        &self,
+        base: &ArchConfig,
+        runner: &SweepRunner,
+        style: CodegenStyle,
+    ) -> Result<Vec<CartesianPointResult>, DseError> {
+        let grid = self.grid(base, style, true)?;
+        let results = runner.run(&grid);
+        Ok(self
+            .combos()
+            .into_iter()
+            .zip(results.chunks_exact(Strategy::ALL.len()))
+            .map(|((cores, mpc, n_in, band, buf), per_strategy)| {
+                let mut cycles = [None; 3];
+                for (slot, r) in cycles.iter_mut().zip(per_strategy) {
+                    *slot = r.as_ref().ok().map(|s| s.cycles);
+                }
+                CartesianPointResult {
+                    cores,
+                    macros_per_core: mpc,
+                    n_in,
+                    bandwidth: band,
+                    buffer_bytes: buf,
+                    cycles,
+                }
+            })
+            .collect())
+    }
+}
+
+/// One evaluated cartesian design point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CartesianPointResult {
+    pub cores: u32,
+    pub macros_per_core: u32,
+    pub n_in: u32,
+    pub bandwidth: u64,
+    pub buffer_bytes: u64,
+    /// Simulated execution cycles per strategy in [`Strategy::ALL`]
+    /// order (`[insitu, naive, gpp]`); `None` = infeasible combo.
+    pub cycles: [Option<u64>; 3],
+}
+
+impl CartesianPointResult {
+    /// All three strategies simulated successfully.
+    pub fn feasible(&self) -> bool {
+        self.cycles.iter().all(|c| c.is_some())
+    }
+
+    /// GPP execution cycles (the default top-k ranking metric).
+    pub fn gpp_cycles(&self) -> Option<u64> {
+        self.cycles[2]
+    }
+}
+
 /// One Fig. 6 design point with its integer realization and simulated
 /// execution cycles per strategy (`[insitu, naive, gpp]`).
 #[derive(Debug, Clone, Copy)]
@@ -363,6 +597,78 @@ mod tests {
         for (a, b) in pts.iter().zip(&seq) {
             assert_eq!(a.cycles, b.cycles);
             assert_eq!(a.macros, b.macros);
+        }
+    }
+
+    fn small_cartesian() -> CartesianSpace {
+        CartesianSpace {
+            cores: vec![2, 4],
+            macros_per_core: vec![2, 4],
+            n_in: vec![2, 16],
+            bandwidths: vec![16, 64],
+            buffers: vec![4 * 1024, 64 * 1024],
+            tasks: 64,
+            write_speed: 8,
+        }
+    }
+
+    #[test]
+    fn cartesian_len_and_validation() {
+        let s = small_cartesian();
+        assert_eq!(s.len(), 32);
+        s.validate().unwrap();
+        let mut bad = s.clone();
+        bad.n_in.clear();
+        assert_eq!(bad.validate(), Err(DseError::EmptyAxis("n_in")));
+        let mut bad = s.clone();
+        bad.bandwidths.push(0);
+        assert_eq!(bad.validate(), Err(DseError::ZeroInAxis("bandwidths")));
+        let mut bad = s.clone();
+        bad.tasks = 0;
+        assert_eq!(bad.validate(), Err(DseError::ZeroParam("tasks")));
+    }
+
+    #[test]
+    fn cartesian_sweep_matches_across_style_and_jobs() {
+        let base = ArchConfig::paper_default();
+        let s = small_cartesian();
+        let looped = s
+            .sweep(&base, &SweepRunner::new(4), CodegenStyle::Looped)
+            .unwrap();
+        let unrolled = s
+            .sweep(&base, &SweepRunner::sequential(), CodegenStyle::Unrolled)
+            .unwrap();
+        assert_eq!(looped.len(), 32);
+        // Looped codegen (with fast-forward) and unrolled codegen (slow
+        // path, different worker count) must agree on every cycle count.
+        assert_eq!(looped, unrolled);
+        // The small-buffer × large-batch corner must come back
+        // infeasible (`None` cycles), not fail the sweep: n_in=16 needs
+        // macros/core × 16 × 160 B of buffer, which overflows the 4 KiB
+        // axis value but fits the 64 KiB one.
+        assert!(looped.iter().any(|p| p.feasible()));
+        assert!(looped.iter().any(|p| !p.feasible()));
+        for p in &looped {
+            if !p.feasible() {
+                assert_eq!((p.buffer_bytes, p.n_in), (4 * 1024, 16), "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cartesian_fast_forward_off_is_bit_identical() {
+        let base = ArchConfig::paper_default();
+        let s = small_cartesian();
+        let runner = SweepRunner::new(2);
+        let on = runner.run(&s.grid(&base, CodegenStyle::Looped, true).unwrap());
+        let off = runner.run(&s.grid(&base, CodegenStyle::Looped, false).unwrap());
+        assert_eq!(on.len(), off.len());
+        for (a, b) in on.iter().zip(&off) {
+            match (a, b) {
+                (Ok(x), Ok(y)) => assert_eq!(x, y),
+                (Err(_), Err(_)) => {}
+                other => panic!("feasibility diverged: {other:?}"),
+            }
         }
     }
 

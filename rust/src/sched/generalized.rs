@@ -57,6 +57,55 @@ pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
     program
 }
 
+/// The looped form of [`codegen`]: each stream's steady state is rolled
+/// into one `Inst::Loop` over the write→compute body, with a single
+/// representative tile per stream (`tile_id(slot)`) instead of the
+/// globally-unique per-task tiles.  Tile ids never influence timing, so
+/// the program is cycle- and stats-identical to the unrolled form at
+/// `issue_cost == 0` — but the rolled loop lets the engine's steady-state
+/// fast-forward skip the thousands of identical iterations in O(1).
+pub fn codegen_looped(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let mut program = Program::new(arch.n_cores);
+    let n_vec = plan.n_in as u16;
+
+    for core in 0..arch.n_cores {
+        for (pos, &m) in plan.macros_on_core(arch, core).iter().enumerate() {
+            let slot = plan.slot_of(arch, core, pos as u32);
+            let offset = stagger_offset(arch, plan, slot);
+            let iters = plan.tasks_of_slot(slot).count() as u32;
+            let mut insts = vec![Inst::SetSpd {
+                speed: plan.write_speed as u16,
+            }];
+            if offset > 0 {
+                insts.push(Inst::Delay {
+                    cycles: offset as u32,
+                });
+            }
+            if iters > 0 {
+                let tile = tile_id(slot);
+                let body = [
+                    Inst::Wrw { m, tile },
+                    Inst::WaitW { m },
+                    Inst::LdIn { n_vec },
+                    Inst::Vmm { m, n_vec, tile },
+                    Inst::WaitC { m },
+                    Inst::StOut { n_vec },
+                ];
+                if iters >= 2 {
+                    insts.push(Inst::Loop { count: iters });
+                    insts.extend(body);
+                    insts.push(Inst::EndLoop);
+                } else {
+                    insts.extend(body);
+                }
+            }
+            insts.push(Inst::Halt);
+            program.add_stream(core, insts);
+        }
+    }
+    program
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +236,44 @@ mod tests {
         tiles.sort_unstable();
         let expect: Vec<u32> = (1..=300).collect();
         assert_eq!(tiles, expect);
+    }
+
+    #[test]
+    fn looped_codegen_is_stat_identical_to_unrolled() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        for (tasks, active, n_in, band) in
+            [(64u32, 8u32, 4u32, 512u64), (50, 7, 12, 16), (9, 4, 2, 8)]
+        {
+            a.bandwidth = band;
+            let plan = SchedulePlan {
+                tasks,
+                active_macros: active,
+                n_in,
+                write_speed: 8,
+            };
+            let unrolled = simulate(&a, &codegen(&a, &plan), SimOptions::default()).unwrap();
+            let looped = simulate(&a, &codegen_looped(&a, &plan), SimOptions::default()).unwrap();
+            assert_eq!(
+                unrolled.stats, looped.stats,
+                "tasks={tasks} active={active} n_in={n_in} band={band}"
+            );
+        }
+    }
+
+    #[test]
+    fn looped_codegen_validates_and_loops() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 1024);
+        let p = codegen_looped(&a, &plan);
+        p.validate(a.macros_per_core).unwrap();
+        let loops = p
+            .streams
+            .iter()
+            .flat_map(|s| &s.insts)
+            .filter(|i| matches!(i, Inst::Loop { .. }))
+            .count();
+        assert_eq!(loops, 256, "one rolled loop per active macro");
     }
 
     #[test]

@@ -67,6 +67,77 @@ pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
     program
 }
 
+/// The looped form of [`codegen`]: the full synchronized rounds (every
+/// slot owns a task) are rolled into one `Inst::Loop` per core stream
+/// with representative tiles (`tile_id(slot)`); the ragged final round —
+/// if `tasks % active_macros != 0` — stays unrolled.  Timing-identical
+/// to the unrolled form at `issue_cost == 0`; see
+/// [`crate::sched::CodegenStyle::Looped`].
+pub fn codegen_looped(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let mut program = Program::new(arch.n_cores);
+    let n_vec = plan.n_in as u16;
+    let full_rounds = plan.tasks / plan.active_macros;
+    let rounds = plan.rounds();
+
+    for core in 0..arch.n_cores {
+        let macros = plan.macros_on_core(arch, core);
+        if macros.is_empty() {
+            continue;
+        }
+        let mut insts = vec![Inst::SetSpd {
+            speed: plan.write_speed as u16,
+        }];
+        // One synchronized write→compute round over `tiles`; empty tile
+        // sets still hit both barriers (a core whose slots are past the
+        // task count must keep pace with the chip).
+        let push_round = |insts: &mut Vec<Inst>, tiles: &[(u8, u32)]| {
+            for &(m, tile) in tiles {
+                insts.push(Inst::Wrw { m, tile });
+            }
+            for &(m, _) in tiles {
+                insts.push(Inst::WaitW { m });
+            }
+            insts.push(Inst::Barrier);
+            for &(m, tile) in tiles {
+                insts.push(Inst::LdIn { n_vec });
+                insts.push(Inst::Vmm { m, n_vec, tile });
+            }
+            for &(m, _) in tiles {
+                insts.push(Inst::WaitC { m });
+                insts.push(Inst::StOut { n_vec });
+            }
+            insts.push(Inst::Barrier);
+        };
+        let rep: Vec<(u8, u32)> = macros
+            .iter()
+            .enumerate()
+            .map(|(pos, &m)| (m, tile_id(plan.slot_of(arch, core, pos as u32))))
+            .collect();
+        if full_rounds >= 2 {
+            insts.push(Inst::Loop { count: full_rounds });
+            push_round(&mut insts, &rep);
+            insts.push(Inst::EndLoop);
+        } else if full_rounds == 1 {
+            push_round(&mut insts, &rep);
+        }
+        for round in full_rounds..rounds {
+            let tail: Vec<(u8, u32)> = macros
+                .iter()
+                .enumerate()
+                .filter_map(|(pos, &m)| {
+                    let slot = plan.slot_of(arch, core, pos as u32);
+                    let task = round * plan.active_macros + slot;
+                    (task < plan.tasks).then_some((m, tile_id(task)))
+                })
+                .collect();
+            push_round(&mut insts, &tail);
+        }
+        insts.push(Inst::Halt);
+        program.add_stream(core, insts);
+    }
+    program
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +222,28 @@ mod tests {
         assert_eq!(r.stats.writes_completed, 3);
         assert_eq!(r.stats.vmms_completed, 3);
         assert_eq!(r.stats.cycles, 2 * 256);
+    }
+
+    #[test]
+    fn looped_codegen_is_stat_identical_to_unrolled() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        for (tasks, active, band) in [(8u32, 2u32, 1024u64), (8, 2, 8), (3, 2, 512), (37, 5, 16)] {
+            a.bandwidth = band;
+            let plan = SchedulePlan {
+                tasks,
+                active_macros: active,
+                n_in: 4,
+                write_speed: 8,
+            };
+            let unrolled = simulate(&a, &codegen(&a, &plan), SimOptions::default()).unwrap();
+            let looped = simulate(&a, &codegen_looped(&a, &plan), SimOptions::default()).unwrap();
+            assert_eq!(
+                unrolled.stats, looped.stats,
+                "tasks={tasks} active={active} band={band}"
+            );
+            codegen_looped(&a, &plan).validate(a.macros_per_core).unwrap();
+        }
     }
 
     #[test]

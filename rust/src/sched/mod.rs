@@ -29,6 +29,35 @@ pub use plan::{tile_id, SchedulePlan, ScheduleError};
 use crate::arch::ArchConfig;
 use crate::isa::Program;
 
+/// How a strategy's schedule is lowered to ISA code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CodegenStyle {
+    /// Fully unrolled task list with globally-unique tile ids — the
+    /// faithful form for op-log consumers (the coordinator's numerics
+    /// replay identifies weight tiles by id).
+    #[default]
+    Unrolled,
+    /// Steady-state iterations rolled into `Inst::Loop` with one
+    /// representative tile per stream/macro.  Cycle- and stats-identical
+    /// to [`CodegenStyle::Unrolled`] at `issue_cost == 0` (asserted by
+    /// `tests/fast_forward.rs`), but op-log tile ids are no longer
+    /// globally unique — use for timing-only evaluation (DSE, serving
+    /// capacity models), where the rolled loops unlock the engine's
+    /// steady-state fast-forward: simulated cost O(distinct phases)
+    /// instead of O(tasks).
+    Looped,
+}
+
+impl CodegenStyle {
+    /// Short name for CLI/report output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodegenStyle::Unrolled => "unrolled",
+            CodegenStyle::Looped => "looped",
+        }
+    }
+}
+
 /// Strategy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
@@ -94,14 +123,35 @@ impl Strategy {
         }
     }
 
-    /// Generate the program implementing this strategy for `plan`.
+    /// Generate the program implementing this strategy for `plan`
+    /// (unrolled — see [`Strategy::codegen_styled`]).
     pub fn codegen(&self, arch: &ArchConfig, plan: &SchedulePlan) -> Result<Program, ScheduleError> {
+        self.codegen_styled(arch, plan, CodegenStyle::Unrolled)
+    }
+
+    /// Generate the program in the requested [`CodegenStyle`].
+    ///
+    /// The looped form exists for `insitu` and `gpp` (their steady state
+    /// is a per-stream/per-core period); `naive` and `intra` fall back to
+    /// the unrolled form, which is timing-identical by definition.
+    pub fn codegen_styled(
+        &self,
+        arch: &ArchConfig,
+        plan: &SchedulePlan,
+        style: CodegenStyle,
+    ) -> Result<Program, ScheduleError> {
         plan.check(arch)?;
-        Ok(match self {
-            Strategy::InSitu => insitu::codegen(arch, plan),
-            Strategy::NaivePingPong => naive::codegen(arch, plan),
-            Strategy::IntraMacroPingPong => intra::codegen(arch, plan),
-            Strategy::GeneralizedPingPong => generalized::codegen(arch, plan),
+        Ok(match (self, style) {
+            (Strategy::InSitu, CodegenStyle::Unrolled) => insitu::codegen(arch, plan),
+            (Strategy::InSitu, CodegenStyle::Looped) => insitu::codegen_looped(arch, plan),
+            (Strategy::NaivePingPong, _) => naive::codegen(arch, plan),
+            (Strategy::IntraMacroPingPong, _) => intra::codegen(arch, plan),
+            (Strategy::GeneralizedPingPong, CodegenStyle::Unrolled) => {
+                generalized::codegen(arch, plan)
+            }
+            (Strategy::GeneralizedPingPong, CodegenStyle::Looped) => {
+                generalized::codegen_looped(arch, plan)
+            }
         })
     }
 }

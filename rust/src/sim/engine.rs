@@ -41,6 +41,14 @@ pub struct SimOptions {
     /// runtime (paper §IV-C).  Empty = constant `arch.bandwidth`.
     /// Must be sorted by cycle.
     pub bandwidth_schedule: Vec<(u64, u64)>,
+    /// Disable the periodic steady-state fast-forward and simulate every
+    /// event of every loop iteration — the slow-path escape hatch the
+    /// exactness tests and benches compare against.  Fast-forward is
+    /// also disabled automatically while op-log recording is on (the log
+    /// needs every operation) and for any span of the run with pending
+    /// `bandwidth_schedule` steps (the period measurement assumes
+    /// constant bandwidth).
+    pub no_fast_forward: bool,
 }
 
 impl Default for SimOptions {
@@ -51,6 +59,7 @@ impl Default for SimOptions {
             allow_intra_overlap: false,
             max_cycles: u64::MAX / 4,
             bandwidth_schedule: Vec::new(),
+            no_fast_forward: false,
         }
     }
 }
@@ -95,6 +104,23 @@ pub struct SimResult {
     pub stats: SimStats,
     /// Per-operation timeline (empty unless `record_op_log`).
     pub op_log: Vec<OpRecord>,
+    /// What the steady-state fast-forward did (all zeros when it never
+    /// engaged).  Telemetry only — deliberately *not* part of
+    /// [`SimStats`], so fast-forward-on and fast-forward-off runs of the
+    /// same program compare bit-identical on `stats`.
+    pub fast_forward: FastForwardInfo,
+}
+
+/// Fast-forward telemetry: how much of the run was extrapolated instead
+/// of simulated event-by-event.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FastForwardInfo {
+    /// Whole steady-state periods extrapolated in O(1).
+    pub periods: u64,
+    /// Simulated cycles covered by extrapolation.
+    pub cycles: u64,
+    /// Distinct skip events (≈ distinct periodic phases of the program).
+    pub skips: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -145,6 +171,59 @@ struct StreamState {
     speed: u32,
 }
 
+/// Steady-state fast-forward detector (see [`Engine::try_fast_forward`]).
+///
+/// The detector runs Brent's cycle-finding over *ticks* — advance epochs
+/// that follow a loop back-edge of the leader stream (the lowest-indexed
+/// stream containing an `Inst::Loop`) — comparing a canonical,
+/// time-relative serialization of the engine's dynamic state against a
+/// stored anchor.  Loop iteration counters are excluded from the
+/// canonical form (they are what changes between periods) and validated
+/// separately when a match is found.  All buffers live here so a
+/// recycled [`SimWorkspace`] pays their allocations once.
+#[derive(Debug, Default)]
+struct FfDetect {
+    /// Canonical serialization scratch for the current state.
+    canon: Vec<u64>,
+    /// Loop-counter snapshot scratch (parallel flattening of all stacks).
+    counts: Vec<u64>,
+    /// Anchor state the current state is compared against.
+    anchor_canon: Vec<u64>,
+    anchor_counts: Vec<u64>,
+    anchor_stats: SimStats,
+    anchor_now: u64,
+    anchor_valid: bool,
+    /// Per-stream minimum loop-stack depth observed since the anchor:
+    /// stack entries *below* this depth were never popped during the
+    /// candidate period, so their counter deltas are pure decrements and
+    /// can be extrapolated; entries at or above it were re-pushed and
+    /// must match the anchor exactly.
+    min_depth: Vec<usize>,
+    /// Ticks since the anchor (Brent's λ search).
+    steps: u64,
+    /// Re-anchor threshold, doubled each time it is reached.
+    power: u64,
+    /// Sort scratch for heap serialization.
+    scratch_events: Vec<(u64, usize)>,
+}
+
+impl FfDetect {
+    fn reset(&mut self) {
+        self.canon.clear();
+        self.counts.clear();
+        self.anchor_canon.clear();
+        self.anchor_counts.clear();
+        self.anchor_now = 0;
+        self.anchor_valid = false;
+        self.min_depth.clear();
+        self.steps = 0;
+        self.power = 2;
+        self.scratch_events.clear();
+        // `anchor_stats` is overwritten wholesale at the next anchor
+        // (`clone_from` reuses its vectors) — nothing to reset.
+    }
+}
+
 /// Recyclable per-run engine state: the scheduler/event containers
 /// (waiter lists, event heaps, loop stacks, FIFO, buffers, stream table)
 /// kept alive between runs so a sweep over thousands of design points
@@ -172,6 +251,7 @@ pub struct SimWorkspace {
     ready: Vec<usize>,
     buffers: Vec<u64>,
     op_log: Vec<OpRecord>,
+    ff: FfDetect,
 }
 
 impl SimWorkspace {
@@ -226,6 +306,17 @@ pub struct Engine<'a> {
     bus_dirty: bool,
     /// Cached total granted rate from the last arbitration.
     bus_total_rate: u64,
+    /// Fast-forward is armed: the program contains loops, op-log
+    /// recording is off and `no_fast_forward` was not requested.
+    ff_enabled: bool,
+    /// Lowest-indexed stream containing an `Inst::Loop` — its back-edges
+    /// pace the detector (one detection attempt per leader iteration,
+    /// not per event).
+    ff_leader: usize,
+    /// The leader took a back-edge since the last advance epoch.
+    ff_tick: bool,
+    ff: FfDetect,
+    ff_info: FastForwardInfo,
 }
 
 impl<'a> Engine<'a> {
@@ -289,6 +380,12 @@ impl<'a> Engine<'a> {
         ws.buffers.clear();
         ws.buffers.resize(arch.n_cores as usize, 0);
         ws.op_log.clear();
+        ws.ff.reset();
+        let ff_leader = program
+            .streams
+            .iter()
+            .position(|s| s.insts.iter().any(|i| matches!(i, Inst::Loop { .. })));
+        let ff_enabled = ff_leader.is_some() && !opts.record_op_log && !opts.no_fast_forward;
         let band_now = arch.bandwidth;
         Ok(Self {
             arch,
@@ -313,6 +410,11 @@ impl<'a> Engine<'a> {
             sched_idx: 0,
             bus_dirty: true,
             bus_total_rate: 0,
+            ff_enabled,
+            ff_leader: ff_leader.unwrap_or(0),
+            ff_tick: false,
+            ff: ws.ff,
+            ff_info: FastForwardInfo::default(),
         })
     }
 
@@ -334,6 +436,17 @@ impl<'a> Engine<'a> {
             if self.halted == self.streams.len() {
                 break;
             }
+            // A leader back-edge just replayed the loop body: attempt
+            // steady-state detection before paying for the next epoch.
+            // Pending bandwidth-schedule steps suspend detection — the
+            // period measurement assumes constant bandwidth — and any
+            // stale anchor dies with the next `set_anchor`.
+            if self.ff_tick {
+                self.ff_tick = false;
+                if self.sched_idx == self.opts.bandwidth_schedule.len() {
+                    self.try_fast_forward();
+                }
+            }
             self.advance()?;
             if self.now > self.opts.max_cycles {
                 return Err(SimError::MaxCycles {
@@ -345,6 +458,7 @@ impl<'a> Engine<'a> {
         let result = SimResult {
             stats: self.stats,
             op_log: self.op_log,
+            fast_forward: self.ff_info,
         };
         let ws = SimWorkspace {
             streams: self.streams,
@@ -360,6 +474,7 @@ impl<'a> Engine<'a> {
             // The op log is part of the result; the workspace starts the
             // next run with an empty one (no allocation until recording).
             op_log: Vec::new(),
+            ff: self.ff,
         };
         Ok((result, ws))
     }
@@ -563,8 +678,20 @@ impl<'a> Engine<'a> {
                 if remaining > 1 {
                     self.loop_stacks[si].push((start, remaining - 1));
                     self.streams[si].pc = start + 1;
+                    // Leader back-edge: pace the fast-forward detector.
+                    if self.ff_enabled && si == self.ff_leader {
+                        self.ff_tick = true;
+                    }
                 } else {
                     self.streams[si].pc += 1;
+                    // A loop exited: entries now at this depth or deeper
+                    // are re-pushed instances, not survivors — record the
+                    // low-water mark for the period validation.
+                    if self.ff_enabled {
+                        if let Some(d) = self.ff.min_depth.get_mut(si) {
+                            *d = (*d).min(self.loop_stacks[si].len());
+                        }
+                    }
                 }
             }
             Inst::Halt => {
@@ -679,14 +806,17 @@ impl<'a> Engine<'a> {
         }
 
         // Integrate write-side statistics over the epoch (compute busy
-        // cycles are credited at completion — fixed-rate ops).
+        // cycles are credited at completion — fixed-rate ops).  The
+        // `rate × dt` products are widened to u128: `dt` can be a whole
+        // sleep/schedule epoch and `rate` a full-bandwidth grant, and the
+        // clamp to `remaining` must happen on the unwrapped product.
         let mut moved = 0u64;
         for &g in &self.bus_fifo {
             let w = self.macros[g].write.as_ref().unwrap();
             if w.rate == 0 {
                 break; // starved tail is contiguous after arbitrate()
             }
-            moved += (w.rate * dt).min(w.remaining);
+            moved += (w.rate as u128 * dt as u128).min(w.remaining as u128) as u64;
             self.stats.macro_write_cycles[g] += dt;
         }
         self.stats.bus_bytes += moved;
@@ -711,7 +841,8 @@ impl<'a> Engine<'a> {
                 if w.rate == 0 {
                     break;
                 }
-                w.remaining = w.remaining.saturating_sub(w.rate * dt);
+                w.remaining =
+                    (w.remaining as u128).saturating_sub(w.rate as u128 * dt as u128) as u64;
                 w.remaining == 0
             };
             if done {
@@ -781,6 +912,286 @@ impl<'a> Engine<'a> {
             }
         }
         Ok(())
+    }
+
+    // --- steady-state fast-forward ------------------------------------
+    //
+    // Loop-heavy programs replay the same write/compute/ping-pong pattern
+    // for thousands of iterations; every iteration after the pipeline
+    // fills is event-for-event identical, shifted in time.  The detector
+    // below finds that recurrence and extrapolates K whole periods in
+    // O(1), with the same exact integer statistics the slow path would
+    // accumulate — bit-identical `SimResult.stats` by construction:
+    //
+    // 1. At each *tick* (the advance epoch after a leader back-edge) the
+    //    dynamic state is serialized canonically and time-relatively:
+    //    per-stream `(pc, loop-stack structure, status)` with sleep/
+    //    completion times stored as offsets from `now`, in-flight write
+    //    residuals and granted rates, compute residuals, the bus FIFO
+    //    order, waiter lists, sorted event heaps, buffer occupancies and
+    //    the arbitration flags.  Loop iteration *counters* are excluded —
+    //    they are what differs between periods.
+    // 2. Brent's algorithm compares the tick state against a stored
+    //    anchor (doubling the re-anchor window), so any period length is
+    //    found after O(period) ticks.
+    // 3. On a match the counter deltas are validated: entries that
+    //    survived the whole period (below the `min_depth` low-water mark)
+    //    must have decremented by a constant `d ≥ 0`; re-pushed entries
+    //    must match exactly.  K = min over persistent entries of
+    //    `(count − 1) / d` keeps every skipped period's back-edge
+    //    decisions identical to the measured one.
+    // 4. The skip adds `K × Δstats` to the additive counters
+    //    ([`SimStats::extrapolate_periods`]), advances the clock by
+    //    `K × Δt`, subtracts `K × d` from the loop counters, and shifts
+    //    every absolute timestamp (sleeps, compute completions, op start
+    //    times) by the same amount.  Simulation then resumes normally
+    //    for the final partial periods and the drain.
+
+    /// Serialize the canonical relative state into `ff.canon` and the
+    /// loop counters into `ff.counts`.
+    fn serialize_canon(&mut self) {
+        debug_assert!(self.ready.is_empty(), "canon only at advance epochs");
+        let mut canon = std::mem::take(&mut self.ff.canon);
+        let mut counts = std::mem::take(&mut self.ff.counts);
+        let mut events = std::mem::take(&mut self.ff.scratch_events);
+        canon.clear();
+        counts.clear();
+        let now = self.now;
+        canon.push(self.streams.len() as u64);
+        for s in &self.streams {
+            canon.push(s.core as u64);
+            canon.push(s.pc as u64);
+            canon.push(s.speed as u64);
+            match s.status {
+                Status::Ready => canon.push(0),
+                Status::Sleep(until) => {
+                    canon.push(1);
+                    canon.push(until - now);
+                }
+                Status::WaitW(g) => {
+                    canon.push(2);
+                    canon.push(g as u64);
+                }
+                Status::WaitC(g) => {
+                    canon.push(3);
+                    canon.push(g as u64);
+                }
+                Status::AtBarrier => canon.push(4),
+                Status::Halted => canon.push(5),
+            }
+        }
+        for stack in &self.loop_stacks {
+            canon.push(stack.len() as u64);
+            for &(start, remaining) in stack {
+                canon.push(start as u64);
+                counts.push(remaining as u64);
+            }
+        }
+        for m in &self.macros {
+            match m.loaded_tile {
+                Some(t) => {
+                    canon.push(1);
+                    canon.push(t as u64);
+                }
+                None => canon.push(0),
+            }
+            match &m.write {
+                Some(w) => {
+                    canon.push(1);
+                    canon.push(w.tile as u64);
+                    canon.push(w.remaining);
+                    canon.push(w.cap as u64);
+                    canon.push(w.rate);
+                }
+                None => canon.push(0),
+            }
+            match &m.compute {
+                Some(c) => {
+                    canon.push(1);
+                    canon.push(c.tile as u64);
+                    canon.push(c.n_vec as u64);
+                    canon.push(c.end - now);
+                }
+                None => canon.push(0),
+            }
+        }
+        canon.push(self.bus_fifo.len() as u64);
+        canon.extend(self.bus_fifo.iter().map(|&g| g as u64));
+        // Waiter-list *order* matters: it fixes the wake → ready → issue
+        // order, so it must recur for the replay to be identical.
+        for lst in &self.waiters_w {
+            canon.push(lst.len() as u64);
+            canon.extend(lst.iter().map(|&s| s as u64));
+        }
+        for lst in &self.waiters_c {
+            canon.push(lst.len() as u64);
+            canon.extend(lst.iter().map(|&s| s as u64));
+        }
+        // Heap *content* matters but internal layout does not (pop order
+        // is total on the unique keys): serialize sorted.
+        events.clear();
+        events.extend(self.sleepers.iter().map(|&std::cmp::Reverse((u, si))| (u - now, si)));
+        events.sort_unstable();
+        canon.push(events.len() as u64);
+        for &(rel, si) in &events {
+            canon.push(rel);
+            canon.push(si as u64);
+        }
+        events.clear();
+        events.extend(self.computes.iter().map(|&std::cmp::Reverse((e, g))| (e - now, g)));
+        events.sort_unstable();
+        canon.push(events.len() as u64);
+        for &(rel, g) in &events {
+            canon.push(rel);
+            canon.push(g as u64);
+        }
+        canon.extend(self.buffers.iter().copied());
+        canon.push(self.at_barrier as u64);
+        canon.push(self.halted as u64);
+        canon.push(self.band_now);
+        canon.push(self.bus_total_rate);
+        canon.push(self.bus_dirty as u64);
+        self.ff.canon = canon;
+        self.ff.counts = counts;
+        self.ff.scratch_events = events;
+    }
+
+    /// Make the just-serialized state the new anchor.
+    fn set_anchor(&mut self) {
+        std::mem::swap(&mut self.ff.anchor_canon, &mut self.ff.canon);
+        std::mem::swap(&mut self.ff.anchor_counts, &mut self.ff.counts);
+        self.ff.anchor_stats.clone_from(&self.stats);
+        self.ff.anchor_now = self.now;
+        self.ff.anchor_valid = true;
+        self.ff.steps = 0;
+        self.ff.min_depth.clear();
+        self.ff.min_depth.extend(self.loop_stacks.iter().map(|s| s.len()));
+    }
+
+    /// One detection attempt (called once per leader loop iteration).
+    fn try_fast_forward(&mut self) {
+        self.serialize_canon();
+        if !self.ff.anchor_valid {
+            self.ff.power = 2;
+            self.set_anchor();
+            return;
+        }
+        if self.ff.canon == self.ff.anchor_canon {
+            if self.apply_skip() {
+                // Phase extrapolated; restart detection fresh for any
+                // later periodic phase.
+                self.ff.anchor_valid = false;
+                self.ff.power = 2;
+                return;
+            }
+            // Recurrence without extrapolatable progress (e.g. counters
+            // nearly exhausted): move the anchor forward so the pair is
+            // not retried forever.
+            self.ff.power = 2;
+            self.set_anchor();
+            return;
+        }
+        self.ff.steps += 1;
+        if self.ff.steps >= self.ff.power {
+            // Brent: double the window and re-anchor at the current
+            // state, so a period of any length λ is caught once the
+            // window reaches it.
+            self.ff.power = self.ff.power.saturating_mul(2);
+            self.set_anchor();
+        }
+    }
+
+    /// The canonical state matched the anchor: validate the loop-counter
+    /// deltas, pick the largest safe K, and extrapolate K whole periods.
+    /// Returns false (and leaves all state untouched) when no whole
+    /// period can be skipped.
+    fn apply_skip(&mut self) -> bool {
+        let dt = self.now - self.ff.anchor_now;
+        if dt == 0 {
+            return false;
+        }
+        debug_assert_eq!(self.ff.counts.len(), self.ff.anchor_counts.len());
+        // Pass 1: validate deltas and bound K.  A persistent entry with
+        // per-period decrement d stays on the same branch of its EndLoop
+        // for K periods iff count ≥ K·d + 1.
+        let mut k = u64::MAX;
+        let mut progress = false;
+        let mut idx = 0usize;
+        for (si, stack) in self.loop_stacks.iter().enumerate() {
+            for (depth, &(_, cur)) in stack.iter().enumerate() {
+                let anchor = self.ff.anchor_counts[idx];
+                idx += 1;
+                let cur = cur as u64;
+                if depth < self.ff.min_depth[si] {
+                    if anchor < cur {
+                        return false; // count grew: not a period
+                    }
+                    let d = anchor - cur;
+                    if d > 0 {
+                        progress = true;
+                        k = k.min((cur - 1) / d);
+                    }
+                } else if anchor != cur {
+                    // Re-pushed during the period: must replay from the
+                    // same fresh constant.
+                    return false;
+                }
+            }
+        }
+        if !progress {
+            return false;
+        }
+        // Never extrapolate past max_cycles: the slow path would have
+        // errored inside the window, and it still will after we resume.
+        k = k.min(self.opts.max_cycles.saturating_sub(self.now) / dt);
+        if k == 0 {
+            return false;
+        }
+        let shift = k * dt;
+        // Additive statistics: K more copies of the measured period.
+        self.stats.extrapolate_periods(&self.ff.anchor_stats, k);
+        // Loop counters: K more decrements per persistent entry.
+        let mut idx = 0usize;
+        for (si, stack) in self.loop_stacks.iter_mut().enumerate() {
+            for (depth, entry) in stack.iter_mut().enumerate() {
+                let anchor = self.ff.anchor_counts[idx];
+                idx += 1;
+                if depth < self.ff.min_depth[si] {
+                    let d = anchor - entry.1 as u64;
+                    entry.1 -= (k * d) as u32;
+                }
+            }
+        }
+        // Shift every absolute timestamp into the new epoch.
+        self.now += shift;
+        for s in &mut self.streams {
+            if let Status::Sleep(until) = s.status {
+                s.status = Status::Sleep(until + shift);
+            }
+        }
+        for m in &mut self.macros {
+            if let Some(w) = &mut m.write {
+                w.start += shift;
+            }
+            if let Some(c) = &mut m.compute {
+                c.start += shift;
+                c.end += shift;
+            }
+        }
+        let mut heap = std::mem::take(&mut self.sleepers).into_vec();
+        for e in &mut heap {
+            e.0 .0 += shift;
+        }
+        self.sleepers = heap.into();
+        let mut heap = std::mem::take(&mut self.computes).into_vec();
+        for e in &mut heap {
+            e.0 .0 += shift;
+        }
+        self.computes = heap.into();
+        self.ff_info.skips += 1;
+        self.ff_info.periods += k;
+        self.ff_info.cycles += shift;
+        true
     }
 }
 
@@ -1193,6 +1604,234 @@ mod tests {
         assert!(simulate_in(&a, &bad, SimOptions::default(), &mut ws).is_err());
         let r = simulate_in(&a, &good, SimOptions::default(), &mut ws).unwrap();
         assert_eq!(r.stats.cycles, 128);
+    }
+
+    /// Slow-path options: identical semantics, no fast-forward.
+    fn opts_slow() -> SimOptions {
+        SimOptions {
+            no_fast_forward: true,
+            ..SimOptions::default()
+        }
+    }
+
+    #[test]
+    fn fast_forward_engages_and_is_bit_identical_on_long_loop() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        let p = one_stream(vec![
+            Inst::Loop { count: 1000 },
+            Inst::Wrw { m: 0, tile: 9 },
+            Inst::WaitW { m: 0 },
+            Inst::LdIn { n_vec: 4 },
+            Inst::Vmm { m: 0, n_vec: 4, tile: 9 },
+            Inst::WaitC { m: 0 },
+            Inst::StOut { n_vec: 4 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ]);
+        let fast = simulate(&a, &p, SimOptions::default()).unwrap();
+        let slow = simulate(&a, &p, opts_slow()).unwrap();
+        assert_eq!(fast.stats, slow.stats);
+        assert_eq!(fast.stats.cycles, 1000 * (128 + 128));
+        assert_eq!(fast.stats.writes_completed, 1000);
+        assert_eq!(fast.stats.vmms_completed, 1000);
+        assert!(
+            fast.fast_forward.periods > 900,
+            "expected most periods skipped, got {:?}",
+            fast.fast_forward
+        );
+        assert_eq!(slow.fast_forward, FastForwardInfo::default());
+    }
+
+    #[test]
+    fn fast_forward_multi_stream_contended_bus_exact() {
+        // Two streams on one core, macros 0/1, loops of different counts,
+        // bus too narrow for both writers: the FIFO interleaving must
+        // recur and the extrapolation must stay exact.
+        let mut a = arch();
+        a.bandwidth = 12; // 1.5 writers' worth at s=8
+        a.core_buffer_bytes = 1 << 20;
+        let mut p = Program::new(16);
+        for (m, count) in [(0u8, 600u32), (1u8, 400u32)] {
+            p.add_stream(
+                0,
+                vec![
+                    Inst::Loop { count },
+                    Inst::Wrw { m, tile: m as u32 + 1 },
+                    Inst::WaitW { m },
+                    Inst::LdIn { n_vec: 2 },
+                    Inst::Vmm { m, n_vec: 2, tile: m as u32 + 1 },
+                    Inst::WaitC { m },
+                    Inst::StOut { n_vec: 2 },
+                    Inst::EndLoop,
+                    Inst::Halt,
+                ],
+            );
+        }
+        let fast = simulate(&a, &p, SimOptions::default()).unwrap();
+        let slow = simulate(&a, &p, opts_slow()).unwrap();
+        assert_eq!(fast.stats, slow.stats);
+        assert!(fast.fast_forward.periods > 0, "{:?}", fast.fast_forward);
+    }
+
+    #[test]
+    fn fast_forward_nested_loops_exact() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        let p = one_stream(vec![
+            Inst::Loop { count: 50 },
+            Inst::Loop { count: 7 },
+            Inst::Wrw { m: 0, tile: 3 },
+            Inst::WaitW { m: 0 },
+            Inst::EndLoop,
+            Inst::Delay { cycles: 13 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ]);
+        let fast = simulate(&a, &p, SimOptions::default()).unwrap();
+        let slow = simulate(&a, &p, opts_slow()).unwrap();
+        assert_eq!(fast.stats, slow.stats);
+        assert_eq!(fast.stats.cycles, 50 * (7 * 128 + 13));
+        assert!(fast.fast_forward.periods > 0, "{:?}", fast.fast_forward);
+    }
+
+    #[test]
+    fn fast_forward_disabled_by_op_log_and_stays_off_on_unrolled() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        let p = one_stream(vec![
+            Inst::Loop { count: 200 },
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ]);
+        // Op-log recording needs every operation: no skipping, same log.
+        let logged = simulate(&a, &p, opts_logged()).unwrap();
+        assert_eq!(logged.fast_forward, FastForwardInfo::default());
+        assert_eq!(logged.op_log.len(), 200);
+        // A loop-free program never arms the detector.
+        let flat = one_stream(vec![
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::Halt,
+        ]);
+        let r = simulate(&a, &flat, SimOptions::default()).unwrap();
+        assert_eq!(r.fast_forward, FastForwardInfo::default());
+    }
+
+    #[test]
+    fn fast_forward_respects_max_cycles() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        let p = one_stream(vec![
+            Inst::Loop { count: 1_000_000 },
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ]);
+        let opts = SimOptions {
+            max_cycles: 10_000,
+            ..SimOptions::default()
+        };
+        let fast = simulate(&a, &p, opts.clone()).unwrap_err();
+        let slow = simulate(
+            &a,
+            &p,
+            SimOptions {
+                no_fast_forward: true,
+                ..opts
+            },
+        )
+        .unwrap_err();
+        assert_eq!(fast, slow);
+        assert!(matches!(fast, SimError::MaxCycles { max: 10_000 }));
+    }
+
+    #[test]
+    fn fast_forward_exact_after_bandwidth_schedule_exhausts() {
+        // Steps pending → detection suspended; once the last step applies
+        // the remaining loop iterations fast-forward, still bit-identical.
+        let mut a = arch();
+        a.bandwidth = 8;
+        a.core_buffer_bytes = 1 << 20;
+        let p = one_stream(vec![
+            Inst::Loop { count: 300 },
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::EndLoop,
+            Inst::Halt,
+        ]);
+        let opts = SimOptions {
+            bandwidth_schedule: vec![(1000, 2), (5000, 8)],
+            ..SimOptions::default()
+        };
+        let fast = simulate(&a, &p, opts.clone()).unwrap();
+        let slow = simulate(
+            &a,
+            &p,
+            SimOptions {
+                no_fast_forward: true,
+                ..opts
+            },
+        )
+        .unwrap();
+        assert_eq!(fast.stats, slow.stats);
+        assert!(fast.fast_forward.periods > 0, "{:?}", fast.fast_forward);
+    }
+
+    #[test]
+    fn extreme_rates_and_epochs_do_not_overflow() {
+        // Regression guard for the u128-widened write-progress math:
+        // maximal geometry (size_macro ≈ 2^64) at a u32::MAX write cap
+        // over u64-scale bandwidth pushes `rate × dt` to the very top of
+        // u64 — any narrower intermediate reintroduced in `advance()`
+        // panics here under debug overflow checks.
+        let mut a = arch();
+        a.geom = crate::arch::MacroGeometry {
+            rows: u32::MAX,
+            cols: u32::MAX,
+            ou_rows: u32::MAX,
+            ou_cols: u32::MAX,
+        };
+        a.bandwidth = u64::MAX;
+        a.min_write_speed = 1;
+        a.max_write_speed = u32::MAX;
+        a.write_speed = u32::MAX;
+        a.core_buffer_bytes = u64::MAX;
+        let size = u32::MAX as u64 * u32::MAX as u64;
+        let rate = u32::MAX as u64;
+        let mut p = Program::new(16);
+        p.add_stream(
+            0,
+            vec![
+                Inst::Wrw { m: 0, tile: 1 },
+                Inst::WaitW { m: 0 },
+                Inst::Halt,
+            ],
+        );
+        // A long-sleeping sibling stream holds buffer bytes across the
+        // whole epoch, stressing the u128 buffer integral as well.
+        p.add_stream(
+            1,
+            vec![
+                Inst::LdIn { n_vec: 16 },
+                Inst::Delay { cycles: u32::MAX },
+                Inst::StOut { n_vec: 0 },
+                Inst::Halt,
+            ],
+        );
+        let r = simulate(&a, &p, SimOptions::default()).unwrap();
+        assert_eq!(r.stats.bus_bytes, size);
+        assert_eq!(r.stats.writes_completed, 1);
+        // The write takes ceil(size / rate) cycles; the sibling sleeps
+        // longer and bounds the total.
+        assert_eq!(
+            r.stats.macro_write_cycles[0],
+            crate::util::div_ceil(size, rate)
+        );
+        assert_eq!(r.stats.cycles, u32::MAX as u64);
     }
 
     #[test]

@@ -19,6 +19,13 @@
 //! reported quantities are exact cycle counts, identical to a naive
 //! per-cycle loop (tested against one in `tests/`).
 //!
+//! On top of that, `Inst::Loop`-heavy programs get a *steady-state
+//! fast-forward*: when the engine's dynamic state recurs at a loop
+//! back-edge under constant bandwidth, whole periods are extrapolated in
+//! O(1) with bit-identical statistics — simulated cost drops from
+//! O(loop iterations) to O(distinct periodic phases).  See
+//! [`SimOptions::no_fast_forward`] and `tests/fast_forward.rs`.
+//!
 //! [`Program`]: crate::isa::Program
 
 mod engine;
@@ -26,6 +33,8 @@ mod stats;
 pub mod trace;
 pub mod vcd;
 
-pub use engine::{simulate, simulate_in, Engine, SimError, SimOptions, SimResult, SimWorkspace};
+pub use engine::{
+    simulate, simulate_in, Engine, FastForwardInfo, SimError, SimOptions, SimResult, SimWorkspace,
+};
 pub use stats::SimStats;
 pub use trace::{OpKind, OpRecord};

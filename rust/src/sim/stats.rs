@@ -45,6 +45,44 @@ impl SimStats {
         }
     }
 
+    /// Extrapolate `k` additional whole steady-state periods: every
+    /// *additive* counter advances by `k` times its delta since
+    /// `period_start` (the snapshot taken exactly one period earlier by
+    /// the engine's fast-forward detector).  The max-trackers
+    /// (`peak_bus_rate`, `buffer_peak`) are deliberately untouched — the
+    /// skipped periods replay the measured one event-for-event, so their
+    /// maxima are already folded in — and `cycles` is derived from the
+    /// engine clock at run end.  Keeping the field-by-field walk here,
+    /// next to the field definitions, is what makes "add a counter,
+    /// forget the fast-forward" hard to do silently.
+    pub(crate) fn extrapolate_periods(&mut self, period_start: &SimStats, k: u64) {
+        fn ext(cur: &mut u64, base: u64, k: u64) {
+            *cur += k * (*cur - base);
+        }
+        ext(&mut self.bus_busy_cycles, period_start.bus_busy_cycles, k);
+        ext(&mut self.bus_bytes, period_start.bus_bytes, k);
+        ext(&mut self.writes_completed, period_start.writes_completed, k);
+        ext(&mut self.vmms_completed, period_start.vmms_completed, k);
+        ext(&mut self.vectors_computed, period_start.vectors_computed, k);
+        for (cur, base) in self
+            .macro_write_cycles
+            .iter_mut()
+            .zip(&period_start.macro_write_cycles)
+        {
+            ext(cur, *base, k);
+        }
+        for (cur, base) in self
+            .macro_compute_cycles
+            .iter_mut()
+            .zip(&period_start.macro_compute_cycles)
+        {
+            ext(cur, *base, k);
+        }
+        for (cur, base) in self.buffer_integral.iter_mut().zip(&period_start.buffer_integral) {
+            *cur += k as u128 * (*cur - *base);
+        }
+    }
+
     /// Off-chip bandwidth utilization: bytes moved / (band × cycles).
     pub fn bandwidth_utilization(&self, bandwidth: u64) -> f64 {
         if self.cycles == 0 || bandwidth == 0 {
@@ -196,5 +234,35 @@ mod tests {
     #[test]
     fn vectors_per_kcycle() {
         assert!((stats().vectors_per_kcycle() - 320.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extrapolate_periods_scales_additive_counters_only() {
+        let base = stats();
+        let mut cur = base.clone();
+        // One measured period on top of the base snapshot.
+        cur.bus_busy_cycles += 10;
+        cur.bus_bytes += 80;
+        cur.writes_completed += 2;
+        cur.vmms_completed += 2;
+        cur.vectors_computed += 8;
+        cur.macro_write_cycles[1] += 5;
+        cur.macro_compute_cycles[0] += 7;
+        cur.buffer_integral[0] += 1_000;
+        let mut fast = cur.clone();
+        fast.extrapolate_periods(&base, 3);
+        // Additive counters advance by 3 more deltas...
+        assert_eq!(fast.bus_busy_cycles, cur.bus_busy_cycles + 30);
+        assert_eq!(fast.bus_bytes, cur.bus_bytes + 240);
+        assert_eq!(fast.writes_completed, cur.writes_completed + 6);
+        assert_eq!(fast.vmms_completed, cur.vmms_completed + 6);
+        assert_eq!(fast.vectors_computed, cur.vectors_computed + 24);
+        assert_eq!(fast.macro_write_cycles[1], cur.macro_write_cycles[1] + 15);
+        assert_eq!(fast.macro_compute_cycles[0], cur.macro_compute_cycles[0] + 21);
+        assert_eq!(fast.buffer_integral[0], cur.buffer_integral[0] + 3_000);
+        // ...while the max-trackers and the clock stay untouched.
+        assert_eq!(fast.peak_bus_rate, cur.peak_bus_rate);
+        assert_eq!(fast.buffer_peak, cur.buffer_peak);
+        assert_eq!(fast.cycles, cur.cycles);
     }
 }

@@ -9,16 +9,16 @@
 
 use crate::arch::ArchConfig;
 use crate::isa::Program;
-use crate::sched::{ScheduleError, SchedulePlan, Strategy};
+use crate::sched::{CodegenStyle, ScheduleError, SchedulePlan, Strategy};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Full-fidelity cache key: the complete architecture is part of the key
 /// (all-integer, `Eq + Hash`), so there is no fingerprint collision risk.
-type Key = (Strategy, SchedulePlan, ArchConfig);
+type Key = (Strategy, SchedulePlan, ArchConfig, CodegenStyle);
 
-/// Thread-safe program cache keyed by `(strategy, plan, arch)`.
+/// Thread-safe program cache keyed by `(strategy, plan, arch, style)`.
 #[derive(Debug, Default)]
 pub struct CodegenCache {
     map: Mutex<HashMap<Key, Arc<Program>>>,
@@ -32,24 +32,37 @@ impl CodegenCache {
         Self::default()
     }
 
-    /// Fetch the program for a point, generating it on first use.
-    ///
-    /// Generation happens outside the lock so a slow codegen does not
-    /// serialize unrelated lookups; if two workers race on the same miss,
-    /// the first insert wins and the duplicate (identical, codegen is
-    /// deterministic) is dropped.
+    /// Fetch the unrolled program for a point, generating it on first
+    /// use (see [`CodegenCache::get_or_generate_styled`]).
     pub fn get_or_generate(
         &self,
         arch: &ArchConfig,
         strategy: Strategy,
         plan: &SchedulePlan,
     ) -> Result<Arc<Program>, ScheduleError> {
-        let key = (strategy, *plan, arch.clone());
+        self.get_or_generate_styled(arch, strategy, plan, CodegenStyle::Unrolled)
+    }
+
+    /// Fetch the program for a point in the given codegen style,
+    /// generating it on first use.
+    ///
+    /// Generation happens outside the lock so a slow codegen does not
+    /// serialize unrelated lookups; if two workers race on the same miss,
+    /// the first insert wins and the duplicate (identical, codegen is
+    /// deterministic) is dropped.
+    pub fn get_or_generate_styled(
+        &self,
+        arch: &ArchConfig,
+        strategy: Strategy,
+        plan: &SchedulePlan,
+        style: CodegenStyle,
+    ) -> Result<Arc<Program>, ScheduleError> {
+        let key = (strategy, *plan, arch.clone(), style);
         if let Some(hit) = self.map.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(hit));
         }
-        let generated = Arc::new(strategy.codegen(arch, plan)?);
+        let generated = Arc::new(strategy.codegen_styled(arch, plan, style)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().unwrap();
         Ok(Arc::clone(map.entry(key).or_insert(generated)))
@@ -111,6 +124,23 @@ mod tests {
         cache.get_or_generate(&arch2, Strategy::InSitu, &plan).unwrap();
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn styles_are_distinct_keys() {
+        let cache = CodegenCache::new();
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 16);
+        let gpp = Strategy::GeneralizedPingPong;
+        let unrolled = cache
+            .get_or_generate_styled(&arch, gpp, &plan, CodegenStyle::Unrolled)
+            .unwrap();
+        let looped = cache
+            .get_or_generate_styled(&arch, gpp, &plan, CodegenStyle::Looped)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&unrolled, &looped));
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

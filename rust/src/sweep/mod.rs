@@ -16,8 +16,8 @@
 //!
 //! - [`SweepPoint`] / [`SweepGrid`] — a declarative batch of design
 //!   points, either listed explicitly or built as a cartesian product.
-//! - [`CodegenCache`] — programs memoized by `(strategy, plan, arch)`,
-//!   shared across worker threads (and across figures when one
+//! - [`CodegenCache`] — programs memoized by `(strategy, plan, arch,
+//!   style)`, shared across worker threads (and across figures when one
 //!   [`SweepRunner`] is reused).
 //! - [`run_indexed`] — the generic work-stealing executor over OS threads
 //!   (`std::thread::scope`; no external deps).  Each worker owns one
@@ -43,7 +43,7 @@ pub use runner::{default_jobs, SweepRunner};
 
 use crate::arch::ArchConfig;
 use crate::fleet::{FleetConfig, PlacementPolicy};
-use crate::sched::{ScheduleError, SchedulePlan, Strategy};
+use crate::sched::{CodegenStyle, ScheduleError, SchedulePlan, Strategy};
 use crate::sim::{SimError, SimOptions};
 use thiserror::Error;
 
@@ -56,6 +56,10 @@ pub struct SweepPoint {
     pub strategy: Strategy,
     pub plan: SchedulePlan,
     pub opts: SimOptions,
+    /// Codegen lowering for this point (unrolled by default; the
+    /// cartesian DSE uses [`CodegenStyle::Looped`] to unlock the
+    /// engine's steady-state fast-forward).
+    pub style: CodegenStyle,
 }
 
 impl SweepPoint {
@@ -67,6 +71,7 @@ impl SweepPoint {
             arch,
             strategy,
             plan,
+            style: CodegenStyle::Unrolled,
         }
     }
 
@@ -83,7 +88,14 @@ impl SweepPoint {
             strategy,
             plan,
             opts,
+            style: CodegenStyle::Unrolled,
         }
+    }
+
+    /// Builder: switch the codegen lowering.
+    pub fn with_style(mut self, style: CodegenStyle) -> Self {
+        self.style = style;
+        self
     }
 }
 

@@ -98,7 +98,7 @@ impl SweepRunner {
     ) -> Result<SimStats, SweepError> {
         let program = self
             .cache
-            .get_or_generate(&point.arch, point.strategy, &point.plan)
+            .get_or_generate_styled(&point.arch, point.strategy, &point.plan, point.style)
             .map_err(|source| SweepError::Codegen {
                 index,
                 strategy: point.strategy.name(),

@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Informational BENCH_*.json trend diff (ROADMAP "perf tracking" item):
+# compares bench records in the working tree (or explicit files, e.g. a
+# bench-smoke job's fresh output) against the same paths at a base git
+# ref, printing per-record median_secs / macro_cycles_per_s deltas.
+#
+# Deliberately never fails the build: a missing base ref (shallow
+# clone), missing baseline files and added/removed records are all
+# reported as notes, not errors — this is a trend lens, the hard gates
+# live in the benches themselves and in check_bench_schema.sh.
+#
+# Usage:
+#   scripts/bench_trend.sh                  # committed BENCH_*.json vs HEAD~1
+#   scripts/bench_trend.sh BASE_REF         # ... vs an explicit base ref
+#   scripts/bench_trend.sh BASE_REF FILE... # explicit files vs base ref
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+base="HEAD~1"
+if [ "$#" -gt 0 ]; then
+  base="$1"
+  shift
+fi
+
+if ! git rev-parse -q --verify "${base}^{commit}" >/dev/null 2>&1; then
+  echo "bench_trend: base ref '${base}' not available (shallow clone?) — skipping (ok)"
+  exit 0
+fi
+
+if [ "$#" -gt 0 ]; then
+  files=("$@")
+else
+  mapfile -t files < <(git ls-files 'BENCH_*.json' '*/BENCH_*.json' '**/BENCH_*.json' | sort -u)
+fi
+
+if [ "${#files[@]}" -eq 0 ]; then
+  echo "bench_trend: no BENCH_*.json files to diff (ok)"
+  exit 0
+fi
+
+python3 - "$base" "${files[@]}" <<'EOF'
+import json
+import subprocess
+import sys
+
+base = sys.argv[1]
+
+def fmt_rate(v):
+    return f"{v:.3g}" if isinstance(v, (int, float)) else "null"
+
+for path in sys.argv[2:]:
+    try:
+        with open(path) as f:
+            new = {r["name"]: r for r in json.load(f)}
+    except Exception as e:  # noqa: BLE001 - informational tool
+        print(f"bench_trend: {path}: unreadable ({e}) — skipping")
+        continue
+    proc = subprocess.run(
+        ["git", "show", f"{base}:{path}"], capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        print(f"bench_trend: {path}: no baseline at {base} (new file) — "
+              f"{len(new)} record(s)")
+        continue
+    try:
+        old = {r["name"]: r for r in json.loads(proc.stdout)}
+    except Exception as e:  # noqa: BLE001
+        print(f"bench_trend: {path}: baseline at {base} unparsable ({e}) — skipping")
+        continue
+    print(f"bench_trend: {path} vs {base}:")
+    for name in sorted(set(old) | set(new)):
+        if name not in old:
+            print(f"  + {name}: new record "
+                  f"(median {new[name]['median_secs']:.6f} s)")
+            continue
+        if name not in new:
+            print(f"  - {name}: removed "
+                  f"(was median {old[name]['median_secs']:.6f} s)")
+            continue
+        om, nm = old[name]["median_secs"], new[name]["median_secs"]
+        pct = f"{(nm - om) / om * 100:+.1f}%" if om > 0 else "n/a"
+        line = f"    {name}: median {om:.6f} -> {nm:.6f} s ({pct})"
+        orate = old[name].get("macro_cycles_per_s")
+        nrate = new[name].get("macro_cycles_per_s")
+        if isinstance(orate, (int, float)) and isinstance(nrate, (int, float)) and orate > 0:
+            line += (f", macro-cycles/s {fmt_rate(orate)} -> {fmt_rate(nrate)} "
+                     f"({(nrate - orate) / orate * 100:+.1f}%)")
+        print(line)
+EOF
