@@ -1,0 +1,53 @@
+//! The unified experiment API: `RunSpec → Session → ReportSink`.
+//!
+//! Every entry point — the CLI subcommands, `gpp-pim exec SPEC`, the CI
+//! smokes, the golden tests, and external embedders — runs experiments
+//! through the same three-piece pipeline:
+//!
+//! 1. [`RunSpec`] — a typed, plain-data description of the experiment
+//!    (workload or traffic, strategy set, codegen style, arch or fleet +
+//!    placement, sweep axes, worker count, sim options) with a
+//!    `parse`/`Display` round-trip grammar, so a spec string like
+//!    `"serve:fleet=2xpaper:placement=least-loaded:requests=512"` is the
+//!    same value whether it came from CLI flags, a CI script or code.
+//! 2. [`Session`] — the single execution path.  Owns the
+//!    [`SweepRunner`](crate::sweep::SweepRunner) (work-stealing
+//!    executor, shared [`CodegenCache`](crate::sweep::CodegenCache),
+//!    per-worker [`SimWorkspace`](crate::sim::SimWorkspace) pools) and
+//!    lowers specs onto the `sweep`/`serve`/`fleet`/`model::dse`
+//!    machinery.  Returns a typed [`Outcome`].
+//! 3. [`ReportSink`] — where the report goes, declared once per run:
+//!    [`StdoutSink`] (terminal), [`CsvDirSink`] (reference CSVs,
+//!    byte-identical to the pre-API CLI output), [`BenchJsonSink`]
+//!    (`BENCH_*.json`-schema wall-time records), [`MemorySink`]
+//!    (capture for tests/embedders) — or any custom implementation.
+//!
+//! ```
+//! use gpp_pim::api::{MemorySink, Outcome, RunSpec, Session, SinkSet};
+//!
+//! let spec = RunSpec::parse("simulate:strategy=gpp:tasks=16:macros=4")?;
+//! assert_eq!(RunSpec::parse(&spec.to_string())?, spec); // canonical round-trip
+//!
+//! let session = Session::default(); // paper architecture
+//! let mut sink = MemorySink::new();
+//! let outcome = session.run(&spec, &mut SinkSet::new().with(&mut sink))?;
+//! if let Outcome::Simulate(sim) = outcome {
+//!     assert!(sim.result.stats.cycles > 0);
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+mod session;
+mod sink;
+mod spec;
+
+pub use session::{
+    FleetSweepOutcome, Outcome, RunOutcome, ServeOutcome, Session, SimulateOutcome, SweepOutcome,
+};
+pub use sink::{
+    BenchJsonSink, CsvDirSink, MemorySink, ReportSink, SinkSet, StdoutSink, TableDest,
+};
+pub use spec::{
+    AdaptSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec, RunWorkloadSpec,
+    ServeSpec, SimulateSpec, SpecError, VALID_KINDS,
+};

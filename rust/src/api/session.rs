@@ -1,0 +1,1026 @@
+//! `Session` — the single execution path behind every entry point.
+//!
+//! A session owns the machinery every experiment shares: the base
+//! [`ArchConfig`], and a [`SweepRunner`] (work-stealing executor +
+//! [`CodegenCache`](crate::sweep::CodegenCache) + per-worker
+//! [`SimWorkspace`](crate::sim::SimWorkspace) pools).  [`Session::run`]
+//! lowers a [`RunSpec`] onto the existing `sweep`/`serve`/`fleet`/
+//! `model::dse` machinery, streams the report into the attached
+//! [`SinkSet`], and returns a typed [`Outcome`] for embedders.
+//!
+//! Reusing one session across sweep-backed runs (`repro`, `dse`,
+//! `dse-full`) shares the runner's codegen cache: repeated points
+//! across specs become pure cache hits.  The serving kinds (`serve`,
+//! `fleet`) build a [`ServeEngine`] per run — their cache deduplicates
+//! workload classes *within* a run, not across runs.
+//!
+//! Table bytes are sacred: every table built here is byte-identical to
+//! the pre-API CLI output (asserted by `tests/api_golden.rs` and the CI
+//! smokes), so reference CSVs never move when entry points are ported.
+
+use super::sink::{SinkSet, TableDest};
+use super::spec::{
+    AdaptSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec, RunWorkloadSpec,
+    ServeSpec, SimulateSpec,
+};
+use crate::arch::ArchConfig;
+use crate::coordinator::{Coordinator, RunConfig, RunReport};
+use crate::gemm::blas;
+use crate::model::adapt::RuntimeAdaptation;
+use crate::model::dse::{CartesianPointResult, CartesianSpace, DesignSpace};
+use crate::report::benchkit::BenchRecord;
+use crate::report::figures as figs;
+use crate::runtime::Runtime;
+use crate::sched::{SchedulePlan, Strategy};
+use crate::serve::{run_fleet_axis, synthetic_traffic, ServeEngine, ServeReport, TrafficConfig};
+use crate::sim::{simulate, SimOptions, SimResult};
+use crate::sweep::{pareto_min_by, top_k_by, FleetAxis, FleetSweepPoint, SweepRunner};
+use crate::util::csv::CsvTable;
+use anyhow::{anyhow, bail, Context, Result};
+use std::time::Instant;
+
+/// Typed result of one [`Session::run`], next to whatever the sinks
+/// persisted.
+#[derive(Debug)]
+pub enum Outcome {
+    /// A table-producing sweep (`repro`, `dse`, `dse-full`, `adapt`).
+    Sweep(SweepOutcome),
+    /// One coordinator workload run (`run`).
+    Run(RunOutcome),
+    /// One abstract-plan simulation (`simulate`).
+    Simulate(SimulateOutcome),
+    /// One serve run (`serve`).
+    Serve(ServeOutcome),
+    /// A fleet-axis sweep (`fleet`).
+    FleetSweep(FleetSweepOutcome),
+}
+
+impl Outcome {
+    /// The serve report, when this outcome carries one.
+    pub fn serve(&self) -> Option<&ServeReport> {
+        match self {
+            Outcome::Serve(s) => Some(&s.report),
+            _ => None,
+        }
+    }
+}
+
+/// What a table-producing sweep did — replaces the per-subcommand
+/// ad-hoc tuples the CLI used to thread around.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Spec kind that produced it.
+    pub kind: &'static str,
+    /// Design points evaluated (all points, including infeasible ones).
+    pub points: usize,
+    /// Points where every strategy simulated successfully.
+    pub feasible: usize,
+    /// Table names emitted, in emission order.
+    pub tables: Vec<String>,
+    /// Executor diagnostic ([`SweepRunner::summary`]); empty for pure
+    /// model sweeps.
+    pub summary: String,
+}
+
+/// Typed result of a `run` spec.
+#[derive(Debug)]
+pub struct RunOutcome {
+    /// Workload name.
+    pub workload: String,
+    /// One report per compared strategy.
+    pub reports: Vec<RunReport>,
+}
+
+/// Typed result of a `simulate` spec.
+#[derive(Debug)]
+pub struct SimulateOutcome {
+    /// The architecture actually simulated (band override applied).
+    pub arch: ArchConfig,
+    pub strategy: Strategy,
+    pub plan: SchedulePlan,
+    /// Full simulation result (op log populated when `oplog=true`).
+    pub result: SimResult,
+}
+
+/// Typed result of a `serve` spec.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    pub report: ServeReport,
+    /// Engine diagnostic ([`ServeEngine::summary`]).
+    pub summary: String,
+}
+
+/// Typed result of a `fleet` spec: one report per (fleet, policy) point
+/// in axis order.
+#[derive(Debug)]
+pub struct FleetSweepOutcome {
+    pub rows: Vec<(FleetSweepPoint, ServeReport)>,
+}
+
+/// The single execution path: lowers [`RunSpec`]s onto the sweep /
+/// serve / fleet / DSE machinery.
+#[derive(Debug)]
+pub struct Session {
+    arch: ArchConfig,
+    runner: SweepRunner,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new(ArchConfig::paper_default())
+    }
+}
+
+impl Session {
+    /// A session over `arch` with one worker per hardware thread.
+    pub fn new(arch: ArchConfig) -> Self {
+        Self {
+            runner: SweepRunner::default(),
+            arch,
+        }
+    }
+
+    /// A session with an explicit default worker count (a spec's `jobs`
+    /// key overrides it per run).
+    pub fn with_jobs(arch: ArchConfig, jobs: usize) -> Self {
+        Self {
+            runner: SweepRunner::new(jobs),
+            arch,
+        }
+    }
+
+    /// The session's base architecture (the `base` preset of fleet
+    /// specs, and the default chip everywhere).
+    pub fn arch(&self) -> &ArchConfig {
+        &self.arch
+    }
+
+    /// The session's sweep runner (codegen-cache introspection).
+    pub fn runner(&self) -> &SweepRunner {
+        &self.runner
+    }
+
+    /// Resolved worker count for a spec.
+    fn jobs(&self, spec_jobs: Option<usize>) -> usize {
+        spec_jobs.unwrap_or_else(|| self.runner.jobs())
+    }
+
+    /// Run `f` on the session runner, or on a temporary one when the
+    /// spec overrides the worker count (the session cache is only
+    /// bypassed in that case).
+    fn with_runner<R>(&self, spec_jobs: Option<usize>, f: impl FnOnce(&SweepRunner) -> R) -> R {
+        match spec_jobs {
+            Some(j) if j != self.runner.jobs() => f(&SweepRunner::new(j)),
+            _ => f(&self.runner),
+        }
+    }
+
+    /// Execute a spec: lower it, stream the report into `sinks`, return
+    /// the typed outcome.  A wall-time [`BenchRecord`] (`exec/<kind>`)
+    /// goes to bench-aware sinks, and sinks are flushed at the end.
+    pub fn run(&self, spec: &RunSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let start = Instant::now();
+        let outcome = match spec {
+            RunSpec::Repro(s) => self.run_repro(s, sinks)?,
+            RunSpec::Run(s) => self.run_workload(s, sinks)?,
+            RunSpec::Simulate(s) => self.run_simulate(s, sinks)?,
+            RunSpec::Serve(s) => self.run_serve(s, sinks)?,
+            RunSpec::FleetSweep(s) => self.run_fleet_sweep(s, sinks)?,
+            RunSpec::Dse(s) => self.run_dse(s, sinks)?,
+            RunSpec::DseFull(s) => self.run_dse_full(s, sinks)?,
+            RunSpec::Adapt(s) => self.run_adapt(s, sinks)?,
+        };
+        sinks.bench(&BenchRecord {
+            name: format!("exec/{}", spec.kind()),
+            median_secs: start.elapsed().as_secs_f64(),
+            macro_cycles_per_s: None,
+        })?;
+        sinks.finish()?;
+        Ok(outcome)
+    }
+
+    // --- repro ----------------------------------------------------------
+
+    fn run_repro(&self, spec: &ReproSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let exp = spec.exp.as_str();
+        let vectors = spec.vectors;
+        let run_fig4 = matches!(exp, "fig4" | "all");
+        let run_fig6 = matches!(exp, "fig6" | "fig6a" | "fig6b" | "all");
+        let run_fig7 = matches!(exp, "fig7" | "fig7a" | "fig7b" | "fig7c" | "fig7d" | "all");
+        let run_t2 = matches!(exp, "table2" | "all");
+        let run_head = matches!(exp, "headline" | "all");
+        if !(run_fig4 || run_fig6 || run_fig7 || run_t2 || run_head) {
+            bail!("unknown experiment '{exp}' (fig4|fig6|fig7|table2|headline|all)");
+        }
+        self.with_runner(spec.jobs, |runner| {
+            let mut tables = Vec::new();
+            let mut points = 0usize;
+            if run_fig4 {
+                sinks.section("Fig. 4 — naive ping-pong utilization vs n_in (s=4 B/cyc)")?;
+                let rows = figs::fig4_with(runner)?;
+                points += rows.len();
+                emit(sinks, &mut tables, "fig4", &figs::fig4_table(&rows))?;
+            }
+            if run_fig6 {
+                sinks.section("Fig. 6 — design-phase comparison at band=128 B/cyc")?;
+                let rows = figs::fig6_with(runner, vectors)?;
+                points += rows.len();
+                emit(sinks, &mut tables, "fig6", &figs::fig6_table(&rows))?;
+            }
+            let mut fig7_rows = None;
+            if run_fig7 {
+                sinks.section("Fig. 7 — runtime adaptation from the tp==tr design point")?;
+                let rows = figs::fig7_with(runner, &[1, 2, 4, 8, 16, 32, 64], vectors)?;
+                points += rows.len();
+                emit(sinks, &mut tables, "fig7a", &figs::fig7a_table(&rows))?;
+                emit(sinks, &mut tables, "fig7bcd", &figs::fig7bcd_table(&rows))?;
+                fig7_rows = Some(rows);
+            }
+            if run_t2 {
+                sinks.section("Table II — theory vs practice")?;
+                // Table II is a projection of the Fig. 7 sweep: reuse the
+                // rows when they were just computed instead of
+                // re-simulating.
+                let rows = match &fig7_rows {
+                    Some(rows) => figs::table2_from_fig7(rows),
+                    None => figs::table2_with(runner, vectors)?,
+                };
+                points += rows.len();
+                emit(sinks, &mut tables, "table2", &figs::table2_table(&rows))?;
+            }
+            if run_head {
+                sinks.section("Headline — bandwidth sweep 8..256 B/cyc (tp = 4 tr)")?;
+                let rows = figs::headline_with(runner, vectors)?;
+                points += rows.len();
+                emit(sinks, &mut tables, "headline", &figs::headline_table(&rows))?;
+            }
+            sinks.line(&runner.summary())?;
+            Ok(Outcome::Sweep(SweepOutcome {
+                kind: "repro",
+                points,
+                feasible: points,
+                tables,
+                summary: runner.summary(),
+            }))
+        })
+    }
+
+    // --- simulate -------------------------------------------------------
+
+    fn run_simulate(&self, spec: &SimulateSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let mut arch = self.arch.clone();
+        if let Some(band) = spec.band {
+            arch.bandwidth = band;
+        }
+        let plan = SchedulePlan {
+            tasks: spec.tasks,
+            active_macros: spec.macros.unwrap_or_else(|| arch.total_macros()),
+            n_in: spec.n_in.unwrap_or(arch.n_in),
+            write_speed: spec.write_speed.unwrap_or(arch.write_speed),
+        };
+        let strategy = spec.strategy;
+        let program = strategy.codegen(&arch, &plan).map_err(|e| anyhow!("{e}"))?;
+        let opts = SimOptions {
+            record_op_log: spec.oplog,
+            allow_intra_overlap: strategy.requires_intra_overlap(),
+            ..SimOptions::default()
+        };
+        let r = simulate(&arch, &program, opts).map_err(|e| anyhow!("{e}"))?;
+        sinks.line(&format!("strategy        : {}", strategy.name()))?;
+        sinks.line(&format!(
+            "tasks           : {} ({} vectors)",
+            plan.tasks, r.stats.vectors_computed
+        ))?;
+        sinks.line(&format!("active macros   : {}", r.stats.active_macros()))?;
+        sinks.line(&format!("cycles          : {}", r.stats.cycles))?;
+        sinks.line(&format!(
+            "bus bytes       : {} (util {:.1}%)",
+            r.stats.bus_bytes,
+            100.0 * r.stats.bandwidth_utilization(arch.bandwidth)
+        ))?;
+        sinks.line(&format!("peak bus rate   : {} B/cycle", r.stats.peak_bus_rate))?;
+        sinks.line(&format!(
+            "macro util      : {:.1}% (compute-only {:.1}%)",
+            100.0 * r.stats.macro_utilization_active(),
+            100.0 * r.stats.compute_utilization_active()
+        ))?;
+        sinks.line(&format!(
+            "throughput      : {:.2} vectors/kcycle",
+            r.stats.vectors_per_kcycle()
+        ))?;
+        Ok(Outcome::Simulate(SimulateOutcome {
+            arch,
+            strategy,
+            plan,
+            result: r,
+        }))
+    }
+
+    // --- run ------------------------------------------------------------
+
+    fn run_workload(&self, spec: &RunWorkloadSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let workload = if let Some(path) = &spec.trace {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading trace {path}"))?;
+            crate::gemm::parse_trace(path, &text).map_err(|e| anyhow!("{e}"))?
+        } else {
+            match spec.workload.as_str() {
+                "ffn" => blas::transformer_ffn(16, 64, 128, 2),
+                "e2e" => blas::e2e_ffn(),
+                "square" => blas::square_chain(128, 8, 16),
+                "mlp" => blas::mlp_tower(16, &[256, 128, 64, 32]),
+                other => {
+                    bail!("unknown workload '{other}' (ffn|e2e|square|mlp) — or use a trace")
+                }
+            }
+        };
+        let artifacts = spec.artifacts.as_deref().unwrap_or("artifacts");
+        let mut coord = if spec.numerics && Runtime::available(artifacts) {
+            Coordinator::with_runtime(self.arch.clone(), artifacts)?
+        } else {
+            Coordinator::new(self.arch.clone())
+        };
+        let cfg = RunConfig {
+            check_numerics: spec.numerics,
+            ..RunConfig::from_arch(&coord.arch, spec.strategy)
+        };
+        let reports = coord.compare(&workload, &cfg)?;
+        sinks.line(&format!(
+            "workload: {} ({} MACs)",
+            workload.name,
+            workload.total_macs()
+        ))?;
+        sinks.line(&format!(
+            "numerics: {}",
+            if cfg.check_numerics {
+                if coord.has_runtime() {
+                    "PJRT (AOT JAX/Pallas artifacts)"
+                } else {
+                    "built-in OU model (artifacts missing)"
+                }
+            } else {
+                "off"
+            }
+        ))?;
+        let base = reports
+            .iter()
+            .find(|r| r.strategy == Strategy::GeneralizedPingPong)
+            .unwrap()
+            .cycles;
+        for r in &reports {
+            let line = format!(
+                "  {:<8} {:>10} cycles  ({:.2}x vs gpp)  macs/cyc {:>8.1}",
+                r.strategy.name(),
+                r.cycles,
+                r.cycles as f64 / base as f64,
+                r.macs_per_cycle(&workload),
+            );
+            match &r.numerics {
+                Some(n) => sinks.line(&format!("{line}  max|err| {}", n.max_abs_err))?,
+                None => sinks.line(&line)?,
+            }
+        }
+        Ok(Outcome::Run(RunOutcome {
+            workload: workload.name.clone(),
+            reports,
+        }))
+    }
+
+    // --- serve ----------------------------------------------------------
+
+    fn run_serve(&self, spec: &ServeSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        self.arch.validate().map_err(|e| anyhow!("{e}"))?;
+        let traffic_cfg = TrafficConfig {
+            requests: spec.requests,
+            seed: spec.seed,
+            mean_gap_cycles: spec.mean_gap,
+        };
+        let fleet = spec.fleet_config(&self.arch)?;
+        let engine = ServeEngine::with_fleet(fleet, spec.placement, self.jobs(spec.jobs));
+        // Traffic targets the *reference* chip (fleet chip 0) so every
+        // request's resource knobs fit the reference-arch contract even
+        // when a fleet spec's chip 0 is smaller than the base arch.
+        let requests = synthetic_traffic(engine.arch(), &traffic_cfg);
+        let report = engine.run(&requests).map_err(|e| anyhow!("{e}"))?;
+        sinks.section(&format!(
+            "Serve — {} requests (seed {}) on {} chip(s) [{}], policy {}, {} worker(s)",
+            report.requests(),
+            traffic_cfg.seed,
+            engine.chips(),
+            engine.fleet().describe(),
+            engine.placement().name(),
+            engine.jobs()
+        ))?;
+        sinks.table("serve_summary", &report.summary_table(), TableDest::Show)?;
+        let pcts = report.latency_percentiles(&[50.0, 95.0, 99.0]);
+        sinks.line(&format!(
+            "latency p50/p95/p99 : {} / {} / {} cycles (reference timeline)",
+            pcts[0], pcts[1], pcts[2]
+        ))?;
+        sinks.line(&format!(
+            "serving throughput  : {:.4} requests/Mcycle ({} classes for {} requests, {:.1}% sim deduped)",
+            report.requests_per_mcycle(),
+            report.classes,
+            report.requests(),
+            100.0 * (1.0 - report.simulated_cycles() as f64 / report.served_cycles().max(1) as f64),
+        ))?;
+        for line in report.fleet_lines().lines() {
+            sinks.line(line)?;
+        }
+        if sinks.persists_tables() {
+            sinks.table("serve", &report.to_table(), TableDest::CsvOnly)?;
+            sinks.table("fleet", &report.fleet.to_table(), TableDest::CsvOnly)?;
+            sinks.table("fleet_requests", &report.fleet.requests_table(), TableDest::CsvOnly)?;
+        }
+        sinks.line(&engine.summary())?;
+        Ok(Outcome::Serve(ServeOutcome {
+            report,
+            summary: engine.summary(),
+        }))
+    }
+
+    // --- fleet ----------------------------------------------------------
+
+    fn run_fleet_sweep(&self, spec: &FleetSweepSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        self.arch.validate().map_err(|e| anyhow!("{e}"))?;
+        let traffic_cfg = TrafficConfig {
+            requests: spec.requests,
+            seed: spec.seed,
+            mean_gap_cycles: spec.mean_gap,
+        };
+        let fleets = spec.fleets(&self.arch)?;
+        // Traffic targets the first fleet's reference chip (all
+        // spec-built axes share one reference arch).
+        let requests = synthetic_traffic(fleets[0].reference(), &traffic_cfg);
+        // Carry the axis on a sweep grid — the same description a DSE
+        // over fleet size × policy would use.
+        let axis = FleetAxis::new(fleets, spec.placements.clone());
+        sinks.section(&format!(
+            "Fleet sweep — {} requests (seed {}) over {} (fleet, policy) points",
+            requests.len(),
+            traffic_cfg.seed,
+            axis.len()
+        ))?;
+        let rows = run_fleet_axis(&axis, &requests, self.jobs(spec.jobs))
+            .map_err(|e| anyhow!("{e}"))?;
+        sinks.table("fleet_axis", &fleet_axis_table(&rows), TableDest::Show)?;
+        Ok(Outcome::FleetSweep(FleetSweepOutcome { rows }))
+    }
+
+    // --- dse (Fig. 6 ratio sweep) ---------------------------------------
+
+    fn run_dse(&self, spec: &DseSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let mut arch = self.arch.clone();
+        arch.bandwidth = spec.band;
+        let mut space = DesignSpace::fig6(&arch);
+        space.bandwidth = arch.bandwidth as f64;
+        if spec.sim {
+            // Simulation arm: validate the model sweep cycle-accurately
+            // through the parallel runner (45 simulations in one batch).
+            return self.with_runner(spec.jobs, |runner| {
+                let pts = space
+                    .sweep_fig6_sim(&arch, runner, spec.tasks)
+                    .map_err(|e| anyhow!("{e}"))?;
+                let mut t = CsvTable::new(vec![
+                    "tr:tp",
+                    "s",
+                    "n_in",
+                    "macros_insitu",
+                    "macros_naive",
+                    "macros_gpp",
+                    "cycles_insitu",
+                    "cycles_naive",
+                    "cycles_gpp",
+                    "gpp/insitu_sim",
+                    "model_exec_gpp",
+                ]);
+                for p in &pts {
+                    t.push_row(vec![
+                        format!("{:.3}", p.model.ratio_tr_over_tp),
+                        p.write_speed.to_string(),
+                        p.n_in.to_string(),
+                        p.macros[0].to_string(),
+                        p.macros[1].to_string(),
+                        p.macros[2].to_string(),
+                        p.cycles[0].to_string(),
+                        p.cycles[1].to_string(),
+                        p.cycles[2].to_string(),
+                        format!("{:.2}", p.cycles[0] as f64 / p.cycles[2] as f64),
+                        format!("{:.1}", p.model.gpp.exec_cycles),
+                    ]);
+                }
+                sinks.line(&runner.summary())?;
+                sinks.table("dse_sim", &t, TableDest::Show)?;
+                let mut tables = vec!["dse_sim".to_string()];
+                if let Some(top) = spec.top {
+                    // Top-k by *simulated* gpp execution cycles,
+                    // deterministic tie-break by input index.
+                    let k = top_k_by(pts.len(), top, |i| pts[i].cycles[2] as f64);
+                    let mut t = CsvTable::new(vec![
+                        "rank", "index", "tr:tp", "s", "n_in", "macros_gpp", "cycles_gpp",
+                    ]);
+                    for (rank, &i) in k.iter().enumerate() {
+                        let p = &pts[i];
+                        t.push_row(vec![
+                            (rank + 1).to_string(),
+                            i.to_string(),
+                            format!("{:.3}", p.model.ratio_tr_over_tp),
+                            p.write_speed.to_string(),
+                            p.n_in.to_string(),
+                            p.macros[2].to_string(),
+                            p.cycles[2].to_string(),
+                        ]);
+                    }
+                    sinks.section(&format!("DSE top-{top} (by simulated gpp execution cycles)"))?;
+                    sinks.table("dse_topk", &t, TableDest::Show)?;
+                    tables.push("dse_topk".to_string());
+                }
+                Ok(Outcome::Sweep(SweepOutcome {
+                    kind: "dse",
+                    points: pts.len(),
+                    feasible: pts.len(),
+                    tables,
+                    summary: runner.summary(),
+                }))
+            });
+        }
+        let pts = space.sweep_fig6();
+        let mut t = CsvTable::new(vec![
+            "tr:tp",
+            "n_in",
+            "macros_insitu",
+            "macros_naive",
+            "macros_gpp",
+            "eff_insitu",
+            "eff_naive",
+            "eff_gpp",
+            "peak_bw_gpp",
+        ]);
+        for p in &pts {
+            t.push_row(vec![
+                format!("{:.3}", p.ratio_tr_over_tp),
+                format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
+                format!("{:.1}", p.insitu.num_macros),
+                format!("{:.1}", p.naive.num_macros),
+                format!("{:.1}", p.gpp.num_macros),
+                format!("{:.1}", p.insitu.effective_macros),
+                format!("{:.1}", p.naive.effective_macros),
+                format!("{:.1}", p.gpp.effective_macros),
+                format!("{:.1}", p.gpp.peak_bandwidth),
+            ]);
+        }
+        sinks.table("dse", &t, TableDest::Show)?;
+        let mut tables = vec!["dse".to_string()];
+        if let Some(top) = spec.top {
+            // Top-k by *model* gpp execution cycles, deterministic
+            // tie-break by input index.
+            let k = top_k_by(pts.len(), top, |i| pts[i].gpp.exec_cycles);
+            let mut t = CsvTable::new(vec![
+                "rank", "index", "tr:tp", "n_in", "macros_gpp", "exec_cycles_gpp",
+            ]);
+            for (rank, &i) in k.iter().enumerate() {
+                let p = &pts[i];
+                t.push_row(vec![
+                    (rank + 1).to_string(),
+                    i.to_string(),
+                    format!("{:.3}", p.ratio_tr_over_tp),
+                    format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
+                    format!("{:.1}", p.gpp.num_macros),
+                    format!("{:.1}", p.gpp.exec_cycles),
+                ]);
+            }
+            sinks.section(&format!("DSE top-{top} (by model gpp execution cycles)"))?;
+            sinks.table("dse_topk", &t, TableDest::Show)?;
+            tables.push("dse_topk".to_string());
+        }
+        Ok(Outcome::Sweep(SweepOutcome {
+            kind: "dse",
+            points: pts.len(),
+            feasible: pts.len(),
+            tables,
+            summary: String::new(),
+        }))
+    }
+
+    // --- dse-full (cartesian space) -------------------------------------
+
+    fn run_dse_full(&self, spec: &DseFullSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let arch = &self.arch;
+        let defaults = CartesianSpace::default_axes(arch);
+        let space = CartesianSpace {
+            cores: spec.cores.clone().unwrap_or(defaults.cores),
+            macros_per_core: spec.macros_per_core.clone().unwrap_or(defaults.macros_per_core),
+            n_in: spec.n_in.clone().unwrap_or(defaults.n_in),
+            bandwidths: spec.bands.clone().unwrap_or(defaults.bandwidths),
+            buffers: spec.buffers.clone().unwrap_or(defaults.buffers),
+            tasks: spec.tasks.unwrap_or(defaults.tasks),
+            write_speed: spec.write_speed.unwrap_or(defaults.write_speed),
+        };
+        space.validate().map_err(|e| anyhow!("{e}"))?;
+        let style = spec.style;
+        let (pts, summary) = self.with_runner(spec.jobs, |runner| {
+            let pts = space.sweep(arch, runner, style).map_err(|e| anyhow!("{e}"))?;
+            Ok::<_, anyhow::Error>((pts, runner.summary()))
+        })?;
+        let feasible = pts.iter().filter(|p| p.feasible()).count();
+        sinks.section(&format!(
+            "DSE full cartesian — {} points ({} feasible) x 3 strategies, {} tasks/point [{} codegen]",
+            pts.len(),
+            feasible,
+            space.tasks,
+            style.name()
+        ))?;
+        sinks.line(&summary)?;
+        let mut tables = Vec::new();
+        // The full table can run to thousands of rows: persisting sinks
+        // only, stdout gets the summary and the report tables.
+        if sinks.persists_tables() {
+            let mut t = CsvTable::new(vec![
+                "cores",
+                "macros_per_core",
+                "n_in",
+                "band",
+                "buffer",
+                "feasible",
+                "cycles_insitu",
+                "cycles_naive",
+                "cycles_gpp",
+                "gpp/insitu",
+            ]);
+            let cell = |c: Option<u64>| c.map(|v| v.to_string()).unwrap_or_default();
+            for p in &pts {
+                let ratio = match (p.cycles[0], p.cycles[2]) {
+                    (Some(i), Some(g)) if g > 0 => format!("{:.2}", i as f64 / g as f64),
+                    _ => String::new(),
+                };
+                t.push_row(vec![
+                    p.cores.to_string(),
+                    p.macros_per_core.to_string(),
+                    p.n_in.to_string(),
+                    p.bandwidth.to_string(),
+                    p.buffer_bytes.to_string(),
+                    p.feasible().to_string(),
+                    cell(p.cycles[0]),
+                    cell(p.cycles[1]),
+                    cell(p.cycles[2]),
+                    ratio,
+                ]);
+            }
+            sinks.table("dse_full", &t, TableDest::CsvOnly)?;
+            tables.push("dse_full".to_string());
+        }
+        let feasible_idx: Vec<usize> = pts
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.feasible())
+            .map(|(i, _)| i)
+            .collect();
+        // Top-k over feasible points by simulated gpp cycles
+        // (deterministic index tie-break); default 10 so dse-full always
+        // reports something.
+        let top = spec.top.unwrap_or(10);
+        let k = top_k_by(feasible_idx.len(), top, |j| {
+            pts[feasible_idx[j]].cycles[2].unwrap() as f64
+        });
+        let mut tk = CsvTable::new(vec![
+            "rank",
+            "index",
+            "cores",
+            "macros_per_core",
+            "n_in",
+            "band",
+            "buffer",
+            "cycles_gpp",
+            "gpp/insitu",
+        ]);
+        for (rank, &j) in k.iter().enumerate() {
+            let i = feasible_idx[j];
+            let p = &pts[i];
+            tk.push_row(vec![
+                (rank + 1).to_string(),
+                i.to_string(),
+                p.cores.to_string(),
+                p.macros_per_core.to_string(),
+                p.n_in.to_string(),
+                p.bandwidth.to_string(),
+                p.buffer_bytes.to_string(),
+                p.cycles[2].unwrap().to_string(),
+                format!("{:.2}", p.cycles[0].unwrap() as f64 / p.cycles[2].unwrap() as f64),
+            ]);
+        }
+        sinks.section(&format!("DSE top-{top} (by simulated gpp execution cycles, feasible points)"))?;
+        sinks.table("dse_topk", &tk, TableDest::Show)?;
+        tables.push("dse_topk".to_string());
+
+        // Pareto frontier over feasible points: gpp cycles × macro count
+        // × buffer depth, minimized jointly — the build-this-chip menu
+        // next to the single-metric top-k.
+        let front = pareto_min_by(feasible_idx.len(), |j| {
+            let p = &pts[feasible_idx[j]];
+            vec![
+                p.cycles[2].unwrap(),
+                p.cores as u64 * p.macros_per_core as u64,
+                p.buffer_bytes,
+            ]
+        });
+        sinks.section(&format!(
+            "DSE Pareto frontier — {} of {} feasible points (cycles x macros x buffer)",
+            front.len(),
+            feasible_idx.len()
+        ))?;
+        sinks.table("dse_pareto", &pareto_table(&pts, &feasible_idx, &front), TableDest::Show)?;
+        tables.push("dse_pareto".to_string());
+
+        // Optional fleet axis: how fleets of the session chip serve one
+        // synthetic stream at each size × policy — the serving-capacity
+        // face of the same exploration.
+        if !spec.fleets.is_empty() {
+            self.arch.validate().map_err(|e| anyhow!("{e}"))?;
+            let traffic_cfg = TrafficConfig {
+                requests: spec.requests,
+                seed: spec.seed,
+                mean_gap_cycles: spec.mean_gap,
+            };
+            let axis = FleetAxis::homogeneous_sizes(arch, &spec.fleets, &spec.placements);
+            let requests = synthetic_traffic(arch, &traffic_cfg);
+            sinks.section(&format!(
+                "DSE fleet axis — {} requests (seed {}) over {} (fleet, policy) points",
+                requests.len(),
+                traffic_cfg.seed,
+                axis.len()
+            ))?;
+            let rows = run_fleet_axis(&axis, &requests, self.jobs(spec.jobs))
+                .map_err(|e| anyhow!("{e}"))?;
+            sinks.table("dse_fleet", &fleet_axis_table(&rows), TableDest::Show)?;
+            tables.push("dse_fleet".to_string());
+        }
+        Ok(Outcome::Sweep(SweepOutcome {
+            kind: "dse-full",
+            points: pts.len(),
+            feasible,
+            tables,
+            summary,
+        }))
+    }
+
+    // --- adapt ----------------------------------------------------------
+
+    fn run_adapt(&self, spec: &AdaptSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let adapt = RuntimeAdaptation::from_arch(&self.arch, 128.0);
+        let mut t = CsvTable::new(vec![
+            "n",
+            "perf_insitu(Eq7)",
+            "perf_naive(Eq8)",
+            "perf_gpp(Eq9)",
+            "gpp_macros",
+            "gpp_tp:tr",
+        ]);
+        let mut n = 1u32;
+        let mut points = 0usize;
+        while n <= spec.max_n {
+            let p = adapt.point(n as f64);
+            t.push_row(vec![
+                n.to_string(),
+                format!("{:.4}", p.perf_insitu),
+                format!("{:.4}", p.perf_naive),
+                format!("{:.4}", p.perf_gpp),
+                format!("{:.2}", p.gpp_active_macros),
+                format!("{:.2}:1", p.gpp_ratio_tp_tr),
+            ]);
+            points += 1;
+            n *= 2;
+        }
+        sinks.table("adapt", &t, TableDest::Show)?;
+        Ok(Outcome::Sweep(SweepOutcome {
+            kind: "adapt",
+            points,
+            feasible: points,
+            tables: vec!["adapt".to_string()],
+            summary: String::new(),
+        }))
+    }
+}
+
+/// Emit a repro figure table and record its name.
+fn emit(sinks: &mut SinkSet, tables: &mut Vec<String>, name: &str, t: &CsvTable) -> Result<()> {
+    sinks.table(name, t, TableDest::Show)?;
+    tables.push(name.to_string());
+    Ok(())
+}
+
+/// The fleet-axis table (`fleet_axis.csv` from the `fleet` kind,
+/// `dse_fleet.csv` from `dse-full`): one row per (fleet, policy) point.
+fn fleet_axis_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "fleet",
+        "chips",
+        "policy",
+        "p50_latency",
+        "p95_latency",
+        "p99_latency",
+        "mean_latency",
+        "makespan",
+        "speedup",
+        "max_utilization",
+    ]);
+    for (point, report) in rows {
+        let f = &report.fleet;
+        let pcts = f.latency_percentiles(&[50.0, 95.0, 99.0]);
+        let max_util = (0..f.chips())
+            .map(|c| f.utilization(c))
+            .fold(0.0f64, f64::max);
+        t.push_row(vec![
+            point.fleet.describe(),
+            point.fleet.len().to_string(),
+            point.policy.name().to_string(),
+            pcts[0].to_string(),
+            pcts[1].to_string(),
+            pcts[2].to_string(),
+            f.mean_latency().to_string(),
+            f.makespan.to_string(),
+            format!("{:.2}", report.fleet_speedup()),
+            format!("{max_util:.4}"),
+        ]);
+    }
+    t
+}
+
+/// The Pareto-frontier table (`dse_pareto.csv`): frontier points in
+/// deterministic objective order (cycles, macros, buffer, then input
+/// index).
+fn pareto_table(
+    pts: &[CartesianPointResult],
+    feasible_idx: &[usize],
+    front: &[usize],
+) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "index",
+        "cores",
+        "macros_per_core",
+        "n_in",
+        "band",
+        "buffer",
+        "macros",
+        "cycles_gpp",
+        "gpp/insitu",
+    ]);
+    for &j in front {
+        let i = feasible_idx[j];
+        let p = &pts[i];
+        t.push_row(vec![
+            i.to_string(),
+            p.cores.to_string(),
+            p.macros_per_core.to_string(),
+            p.n_in.to_string(),
+            p.bandwidth.to_string(),
+            p.buffer_bytes.to_string(),
+            (p.cores as u64 * p.macros_per_core as u64).to_string(),
+            p.cycles[2].unwrap().to_string(),
+            format!("{:.2}", p.cycles[0].unwrap() as f64 / p.cycles[2].unwrap() as f64),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::sink::MemorySink;
+    use crate::fleet::PlacementPolicy;
+
+    fn session() -> Session {
+        Session::with_jobs(ArchConfig::paper_default(), 2)
+    }
+
+    #[test]
+    fn simulate_spec_runs_and_reports() {
+        let spec = RunSpec::parse("simulate:strategy=gpp:tasks=16:macros=4").unwrap();
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        let out = session().run(&spec, &mut sinks).unwrap();
+        let Outcome::Simulate(out) = out else { panic!() };
+        assert_eq!(out.plan.tasks, 16);
+        assert_eq!(out.plan.active_macros, 4);
+        assert!(out.result.stats.cycles > 0);
+        assert!(out.result.op_log.is_empty(), "oplog off by default");
+        assert!(mem.lines.iter().any(|l| l.starts_with("cycles")));
+        // The wall-time record was emitted for the run.
+        assert_eq!(mem.records.len(), 1);
+        assert_eq!(mem.records[0].name, "exec/simulate");
+    }
+
+    #[test]
+    fn serve_spec_produces_all_reference_tables() {
+        let spec = RunSpec::parse("serve:requests=24:seed=11:gap=1024").unwrap();
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        let out = session().run(&spec, &mut sinks).unwrap();
+        assert_eq!(out.serve().unwrap().requests(), 24);
+        for name in ["serve_summary", "serve", "fleet", "fleet_requests"] {
+            assert!(mem.csv(name).is_some(), "missing table '{name}'");
+        }
+    }
+
+    #[test]
+    fn serve_tables_match_direct_engine_output() {
+        // The façade must add nothing: session tables are byte-identical
+        // to driving ServeEngine directly (the pre-API path).
+        let spec = RunSpec::parse("serve:requests=32:seed=7:chips=2:placement=least-loaded")
+            .unwrap();
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        session().run(&spec, &mut sinks).unwrap();
+
+        let arch = ArchConfig::paper_default();
+        let engine = ServeEngine::with_fleet(
+            crate::fleet::FleetConfig::homogeneous(arch.clone(), 2),
+            PlacementPolicy::LeastLoaded,
+            2,
+        );
+        let requests = synthetic_traffic(
+            engine.arch(),
+            &TrafficConfig {
+                requests: 32,
+                seed: 7,
+                mean_gap_cycles: 2048,
+            },
+        );
+        let report = engine.run(&requests).unwrap();
+        assert_eq!(mem.csv("serve").unwrap(), report.to_table().to_csv());
+        assert_eq!(mem.csv("serve_summary").unwrap(), report.summary_table().to_csv());
+        assert_eq!(mem.csv("fleet").unwrap(), report.fleet.to_table().to_csv());
+        assert_eq!(
+            mem.csv("fleet_requests").unwrap(),
+            report.fleet.requests_table().to_csv()
+        );
+    }
+
+    #[test]
+    fn dse_model_and_adapt_run_silent() {
+        // No sinks attached: outcomes still come back typed.
+        let s = session();
+        let out = s.run(&RunSpec::parse("dse:top=3").unwrap(), &mut SinkSet::new()).unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert_eq!(out.kind, "dse");
+        assert_eq!(out.points, 15);
+        assert_eq!(out.tables, vec!["dse", "dse_topk"]);
+        let out = s.run(&RunSpec::parse("adapt:maxn=8").unwrap(), &mut SinkSet::new()).unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert_eq!(out.points, 4, "n = 1,2,4,8");
+    }
+
+    #[test]
+    fn dse_full_emits_pareto_and_fleet_axis() {
+        let spec = RunSpec::parse(
+            "dse-full:cores=2,4:macros=2:nin=2:bands=32,64:buffers=65536:tasks=64:top=3\
+             :fleets=1,2:placement=rr:requests=16",
+        )
+        .unwrap();
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        let out = session().run(&spec, &mut sinks).unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert_eq!(out.kind, "dse-full");
+        assert_eq!(out.points, 4);
+        assert_eq!(out.tables, vec!["dse_full", "dse_topk", "dse_pareto", "dse_fleet"]);
+        // The Pareto frontier is non-empty and its cycles column is the
+        // frontier's objective order (non-decreasing).
+        let pareto = mem.csv("dse_pareto").unwrap();
+        let cycles: Vec<u64> = pareto
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(7).unwrap().parse().unwrap())
+            .collect();
+        assert!(!cycles.is_empty());
+        assert!(cycles.windows(2).all(|w| w[0] <= w[1]), "{cycles:?}");
+        // The fleet axis served 2 sizes x 1 policy.
+        let fleet = mem.csv("dse_fleet").unwrap();
+        assert_eq!(fleet.lines().count(), 3, "{fleet}");
+    }
+
+    #[test]
+    fn session_cache_is_shared_across_runs() {
+        let s = session();
+        let spec = RunSpec::parse("dse-full:cores=2:macros=2:nin=2:bands=32:buffers=65536:tasks=32")
+            .unwrap();
+        s.run(&spec, &mut SinkSet::new()).unwrap();
+        let misses = s.runner().cache().misses();
+        assert!(misses > 0);
+        s.run(&spec, &mut SinkSet::new()).unwrap();
+        assert_eq!(s.runner().cache().misses(), misses, "second run fully cached");
+        assert!(s.runner().cache().hits() >= misses);
+    }
+
+    #[test]
+    fn spec_jobs_override_does_not_change_results() {
+        let s = session();
+        let base = RunSpec::parse("serve:requests=24:seed=3").unwrap();
+        let jobs1 = RunSpec::parse("serve:requests=24:seed=3:jobs=1").unwrap();
+        let mut a = MemorySink::new();
+        let mut b = MemorySink::new();
+        s.run(&base, &mut SinkSet::new().with(&mut a)).unwrap();
+        s.run(&jobs1, &mut SinkSet::new().with(&mut b)).unwrap();
+        assert_eq!(a.csv("serve"), b.csv("serve"));
+        assert_eq!(a.csv("fleet"), b.csv("fleet"));
+    }
+}

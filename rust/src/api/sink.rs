@@ -1,0 +1,314 @@
+//! `ReportSink` — where a session's outputs go, declared once per run.
+//!
+//! The session streams *sections* (headings), *lines* (free text),
+//! *tables* (named [`CsvTable`]s — the name is the CSV file stem) and
+//! *bench records* into every attached sink; each sink decides what to
+//! persist.  This replaces the ad-hoc `emit()` helpers the CLI
+//! subcommands used to hand-roll: stdout rendering, CSV emission and
+//! bench-JSON tracking are sinks, not call sites.
+//!
+//! Built-ins: [`StdoutSink`] (ASCII tables + headings), [`CsvDirSink`]
+//! (`<dir>/<name>.csv`, byte-identical to the pre-API CLI output),
+//! [`BenchJsonSink`] (`BENCH_*.json`-schema wall-time records) and
+//! [`MemorySink`] (captures everything — the golden tests' comparison
+//! surface).
+
+use crate::report::benchkit::{validate_bench_json, write_bench_json, BenchRecord};
+use crate::util::csv::CsvTable;
+use std::io;
+use std::path::PathBuf;
+
+/// Whether a table is part of the terminal report or CSV-only (large
+/// per-point dumps like `dse_full.csv` / `serve.csv`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableDest {
+    /// Render on terminal sinks *and* persist on persisting sinks.
+    Show,
+    /// Persist only; terminal sinks skip it.
+    CsvOnly,
+}
+
+/// One destination for a session's report stream.  All methods default
+/// to no-ops so a sink implements only what it cares about.
+pub trait ReportSink {
+    /// A `## ...` section heading.
+    fn section(&mut self, _title: &str) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// One line of report text.
+    fn line(&mut self, _text: &str) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// A named table; `name` is the CSV file stem (`fig4`, `serve`, ...).
+    fn table(&mut self, _name: &str, _table: &CsvTable, _dest: TableDest) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// A wall-time tracking record for the whole run.
+    fn bench(&mut self, _record: &BenchRecord) -> io::Result<()> {
+        Ok(())
+    }
+
+    /// True when the sink persists tables — lets the session skip
+    /// building huge [`TableDest::CsvOnly`] tables nobody will keep.
+    fn persists_tables(&self) -> bool {
+        false
+    }
+
+    /// Flush any buffered output (called once, after the run).
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// An ordered set of sinks; every event fans out to all of them.
+#[derive(Default)]
+pub struct SinkSet<'a> {
+    sinks: Vec<&'a mut dyn ReportSink>,
+}
+
+impl<'a> SinkSet<'a> {
+    /// An empty set (a silent run — the typed outcome is still returned).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Attach a sink (builder style).
+    pub fn with(mut self, sink: &'a mut dyn ReportSink) -> Self {
+        self.sinks.push(sink);
+        self
+    }
+
+    /// Attach a sink.
+    pub fn push(&mut self, sink: &'a mut dyn ReportSink) {
+        self.sinks.push(sink);
+    }
+
+    /// True when some sink persists tables (see
+    /// [`ReportSink::persists_tables`]).
+    pub fn persists_tables(&self) -> bool {
+        self.sinks.iter().any(|s| s.persists_tables())
+    }
+
+    pub(crate) fn section(&mut self, title: &str) -> io::Result<()> {
+        self.sinks.iter_mut().try_for_each(|s| s.section(title))
+    }
+
+    pub(crate) fn line(&mut self, text: &str) -> io::Result<()> {
+        self.sinks.iter_mut().try_for_each(|s| s.line(text))
+    }
+
+    pub(crate) fn table(&mut self, name: &str, table: &CsvTable, dest: TableDest) -> io::Result<()> {
+        self.sinks.iter_mut().try_for_each(|s| s.table(name, table, dest))
+    }
+
+    pub(crate) fn bench(&mut self, record: &BenchRecord) -> io::Result<()> {
+        self.sinks.iter_mut().try_for_each(|s| s.bench(record))
+    }
+
+    pub(crate) fn finish(&mut self) -> io::Result<()> {
+        self.sinks.iter_mut().try_for_each(|s| s.finish())
+    }
+}
+
+/// Terminal rendering: headings, text lines and ASCII tables — the CLI's
+/// stdout report.
+#[derive(Debug, Default)]
+pub struct StdoutSink;
+
+impl ReportSink for StdoutSink {
+    fn section(&mut self, title: &str) -> io::Result<()> {
+        println!("## {title}");
+        Ok(())
+    }
+
+    fn line(&mut self, text: &str) -> io::Result<()> {
+        println!("{text}");
+        Ok(())
+    }
+
+    fn table(&mut self, _name: &str, table: &CsvTable, dest: TableDest) -> io::Result<()> {
+        if dest == TableDest::Show {
+            println!("{}", table.to_ascii());
+        }
+        Ok(())
+    }
+}
+
+/// CSV persistence: every table becomes `<dir>/<name>.csv` (parent
+/// directories created), with the CLI's `[wrote ...]` confirmation line.
+#[derive(Debug)]
+pub struct CsvDirSink {
+    dir: PathBuf,
+}
+
+impl CsvDirSink {
+    /// A sink writing into `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+}
+
+impl ReportSink for CsvDirSink {
+    fn table(&mut self, name: &str, table: &CsvTable, _dest: TableDest) -> io::Result<()> {
+        let path = self.dir.join(format!("{name}.csv"));
+        table.write_to(&path)?;
+        println!("[wrote {}]", path.display());
+        Ok(())
+    }
+
+    fn persists_tables(&self) -> bool {
+        true
+    }
+}
+
+/// Wall-time tracking: collects the session's [`BenchRecord`]s and
+/// writes them as a `BENCH_*.json`-schema file on `finish` (validated
+/// in-process, like the benches).
+#[derive(Debug)]
+pub struct BenchJsonSink {
+    path: PathBuf,
+    records: Vec<BenchRecord>,
+}
+
+impl BenchJsonSink {
+    /// A sink writing to `path` when the run finishes.
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self {
+            path: path.into(),
+            records: Vec::new(),
+        }
+    }
+}
+
+impl ReportSink for BenchJsonSink {
+    fn bench(&mut self, record: &BenchRecord) -> io::Result<()> {
+        self.records.push(record.clone());
+        Ok(())
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        write_bench_json(&self.path, &self.records)?;
+        let text = std::fs::read_to_string(&self.path)?;
+        validate_bench_json(&text)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        println!("[wrote {}]", self.path.display());
+        Ok(())
+    }
+}
+
+/// Captures the full report stream in memory — the comparison surface of
+/// the golden tests and of embedders that post-process tables.
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    /// `(name, csv text, dest)` per table, in emission order.
+    pub tables: Vec<(String, String, TableDest)>,
+    /// Section headings and lines, in emission order.
+    pub lines: Vec<String>,
+    /// Bench records, in emission order.
+    pub records: Vec<BenchRecord>,
+}
+
+impl MemorySink {
+    /// An empty capture.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The CSV text of table `name`, if it was emitted.
+    pub fn csv(&self, name: &str) -> Option<&str> {
+        self.tables
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, csv, _)| csv.as_str())
+    }
+}
+
+impl ReportSink for MemorySink {
+    fn section(&mut self, title: &str) -> io::Result<()> {
+        self.lines.push(format!("## {title}"));
+        Ok(())
+    }
+
+    fn line(&mut self, text: &str) -> io::Result<()> {
+        self.lines.push(text.to_string());
+        Ok(())
+    }
+
+    fn table(&mut self, name: &str, table: &CsvTable, dest: TableDest) -> io::Result<()> {
+        self.tables.push((name.to_string(), table.to_csv(), dest));
+        Ok(())
+    }
+
+    fn bench(&mut self, record: &BenchRecord) -> io::Result<()> {
+        self.records.push(record.clone());
+        Ok(())
+    }
+
+    fn persists_tables(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> CsvTable {
+        let mut t = CsvTable::new(vec!["a", "b"]);
+        t.push_row(vec!["1", "2"]);
+        t
+    }
+
+    #[test]
+    fn memory_sink_captures_everything_in_order() {
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        assert!(sinks.persists_tables());
+        sinks.section("Title").unwrap();
+        sinks.line("hello").unwrap();
+        sinks.table("t1", &table(), TableDest::Show).unwrap();
+        sinks.table("t2", &table(), TableDest::CsvOnly).unwrap();
+        sinks.finish().unwrap();
+        assert_eq!(mem.lines, vec!["## Title", "hello"]);
+        assert_eq!(mem.csv("t1"), Some("a,b\n1,2\n"));
+        assert_eq!(mem.tables[1].2, TableDest::CsvOnly);
+        assert_eq!(mem.csv("missing"), None);
+    }
+
+    #[test]
+    fn csv_dir_sink_writes_files() {
+        let dir = std::env::temp_dir().join(format!("gpp-sink-{}", std::process::id()));
+        let mut sink = CsvDirSink::new(&dir);
+        sink.table("t", &table(), TableDest::CsvOnly).unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("t.csv")).unwrap(), "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_sink_set_is_silent() {
+        let mut sinks = SinkSet::new();
+        assert!(!sinks.persists_tables());
+        sinks.section("x").unwrap();
+        sinks.table("t", &table(), TableDest::Show).unwrap();
+        sinks.finish().unwrap();
+    }
+
+    #[test]
+    fn bench_json_sink_writes_schema_valid_records() {
+        let path = std::env::temp_dir().join(format!("gpp-bench-{}.json", std::process::id()));
+        let mut sink = BenchJsonSink::new(&path);
+        sink.bench(&BenchRecord {
+            name: "exec/serve".into(),
+            median_secs: 0.25,
+            macro_cycles_per_s: None,
+        })
+        .unwrap();
+        sink.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_bench_json(&text), Ok(1));
+        std::fs::remove_file(&path).ok();
+    }
+}

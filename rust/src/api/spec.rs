@@ -1,0 +1,1044 @@
+//! `RunSpec` — the typed, plain-data description of one experiment.
+//!
+//! Every entry point (CLI subcommands, `gpp-pim exec`, CI smokes, the
+//! golden tests, embedders) constructs the same value, so an experiment
+//! has exactly one definition no matter which door it came through.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! KIND[:KEY=VALUE]...
+//! ```
+//!
+//! Segments are `:`-separated; the first names the experiment kind, the
+//! rest are `key=value` pairs in any order.  Omitted keys take the
+//! kind's defaults (the CLI defaults).  Lists are comma-separated
+//! (`bands=64,128`).  One special case: a `fleet=` value is itself a
+//! fleet spec whose arch overrides use `:` (`2xpaper,1xpaper:band=256`),
+//! so arch-override segments (`band|s|cores|macros|nin|buf`) directly
+//! following a `fleet=` segment re-attach to it; put other keys before
+//! `fleet=` or after a non-arch key.  [`RunSpec`]'s `Display` emits the
+//! canonical form — non-default keys in a fixed order, `fleet` last —
+//! and re-parses to an equal value for every parse-produced spec
+//! (asserted by `tests/api_spec.rs`).  A typed-constructed value can
+//! carry fields its own configuration ignores (e.g. `chips` next to a
+//! set `fleet`); `Display` drops those, so its output always re-parses
+//! cleanly to the same *effective* experiment.
+//!
+//! ```text
+//! repro[:exp=fig4|fig6|fig7|table2|headline|all][:vectors=N][:jobs=N]
+//! run[:workload=ffn|e2e|square|mlp][:strategy=S][:trace=FILE][:numerics=true][:artifacts=DIR]
+//! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true]
+//! serve[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P][:chips=C][:fleet=SPEC]
+//! fleet[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P,..|all][:sizes=1,2,4][:fleet=SPEC]
+//! dse[:band=B][:sim=true][:tasks=N][:jobs=N][:top=K]
+//! dse-full[:cores=L][:macros=L][:nin=L][:bands=L][:buffers=L][:tasks=N][:s=W]
+//!         [:style=looped|unrolled][:jobs=N][:top=K]
+//!         [:fleets=1,2,4][:placement=P,..|all][:requests=N][:seed=S][:gap=CYC]
+//! adapt[:maxn=N]
+//! ```
+
+use crate::arch::ArchConfig;
+use crate::fleet::{FleetConfig, PlacementPolicy};
+use crate::sched::{CodegenStyle, Strategy};
+use std::fmt;
+use thiserror::Error;
+
+/// Experiment kinds, in `exec` usage order.
+pub const VALID_KINDS: [&str; 8] = [
+    "repro", "run", "simulate", "serve", "fleet", "dse", "dse-full", "adapt",
+];
+
+/// Arch-override keys of the `--fleet` sub-grammar: segments with these
+/// keys directly after a `fleet=` segment belong to the fleet spec.
+const FLEET_ARCH_KEYS: [&str; 6] = ["band", "s", "cores", "macros", "nin", "buf"];
+
+/// What went wrong parsing or validating a spec string.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum SpecError {
+    #[error("empty spec — expected KIND[:KEY=VALUE...] with KIND one of: {}", VALID_KINDS.join(", "))]
+    Empty,
+    #[error("unknown spec kind '{0}' (valid: {})", VALID_KINDS.join(", "))]
+    UnknownKind(String),
+    #[error("spec segment '{0}' is not KEY=VALUE")]
+    NotKeyValue(String),
+    #[error("unknown key '{key}' for '{kind}' spec (valid keys: {valid})")]
+    UnknownKey {
+        kind: &'static str,
+        key: String,
+        valid: &'static str,
+    },
+    #[error("bad value '{value}' for '{key}': {reason}")]
+    BadValue {
+        key: &'static str,
+        value: String,
+        reason: String,
+    },
+    #[error("keys '{0}' and '{1}' are mutually exclusive")]
+    Conflict(&'static str, &'static str),
+}
+
+/// A typed experiment description; see the [module docs](self) for the
+/// string grammar.  `Display` renders the canonical spec string, which
+/// re-parses to an equal value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunSpec {
+    /// Regenerate paper figures/tables (`repro`).
+    Repro(ReproSpec),
+    /// Simulate + validate one GeMM workload end-to-end (`run`).
+    Run(RunWorkloadSpec),
+    /// One strategy on an abstract task plan (`simulate`).
+    Simulate(SimulateSpec),
+    /// Batched request serving on a chip fleet (`serve`).
+    Serve(ServeSpec),
+    /// Fleet size × placement sweep over one stream (`fleet`).
+    FleetSweep(FleetSweepSpec),
+    /// Fig. 6 design-space exploration, model or simulated (`dse`).
+    Dse(DseSpec),
+    /// Full-cartesian DSE, optionally with a fleet axis (`dse-full`).
+    DseFull(DseFullSpec),
+    /// Runtime bandwidth-adaptation model (`adapt`).
+    Adapt(AdaptSpec),
+}
+
+/// `repro` — which experiments, at which workload size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReproSpec {
+    /// `fig4|fig6|fig7|table2|headline|all` (plus panel aliases).
+    pub exp: String,
+    /// Total input vectors per sweep point.
+    pub vectors: u32,
+    /// Host workers (`None` = one per hardware thread).
+    pub jobs: Option<usize>,
+}
+
+impl Default for ReproSpec {
+    fn default() -> Self {
+        Self {
+            exp: "all".into(),
+            vectors: 32768,
+            jobs: None,
+        }
+    }
+}
+
+/// `run` — one workload through the coordinator, all strategies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunWorkloadSpec {
+    /// Built-in workload name (`ffn|e2e|square|mlp`); ignored when
+    /// `trace` is set.
+    pub workload: String,
+    /// Reference strategy for the run config.
+    pub strategy: Strategy,
+    /// GeMM trace file instead of a built-in workload.
+    pub trace: Option<String>,
+    /// Execute and check functional numerics.
+    pub numerics: bool,
+    /// PJRT artifacts directory (`None` = `artifacts`).
+    pub artifacts: Option<String>,
+}
+
+impl Default for RunWorkloadSpec {
+    fn default() -> Self {
+        Self {
+            workload: "ffn".into(),
+            strategy: Strategy::GeneralizedPingPong,
+            trace: None,
+            numerics: false,
+            artifacts: None,
+        }
+    }
+}
+
+/// `simulate` — one strategy on an abstract plan.  `None` resource
+/// knobs take the session architecture's defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateSpec {
+    pub strategy: Strategy,
+    pub tasks: u32,
+    /// Active macros (`None` = full chip).
+    pub macros: Option<u32>,
+    /// Batch size (`None` = arch `n_in`).
+    pub n_in: Option<u32>,
+    /// Off-chip bandwidth override, B/cycle.
+    pub band: Option<u64>,
+    /// Write speed override, B/cycle.
+    pub write_speed: Option<u32>,
+    /// Record the op log (timeline/VCD consumers).
+    pub oplog: bool,
+}
+
+impl Default for SimulateSpec {
+    fn default() -> Self {
+        Self {
+            strategy: Strategy::GeneralizedPingPong,
+            tasks: 256,
+            macros: None,
+            n_in: None,
+            band: None,
+            write_speed: None,
+            oplog: false,
+        }
+    }
+}
+
+/// `serve` — synthetic traffic on a fleet under one placement policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    pub requests: u32,
+    pub seed: u64,
+    /// Mean inter-arrival gap, cycles.
+    pub mean_gap: u64,
+    pub jobs: Option<usize>,
+    pub placement: PlacementPolicy,
+    /// Homogeneous replica count.  Ignored — and not displayed — when
+    /// `fleet` is set ([`ServeSpec::fleet_config`] uses the fleet spec),
+    /// so `Display` never emits the `chips`/`fleet` conflict the parser
+    /// rejects.
+    pub chips: usize,
+    /// Heterogeneous fleet spec (the `--fleet` sub-grammar), resolved
+    /// against the session architecture by [`ServeSpec::fleet_config`].
+    pub fleet: Option<String>,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            requests: 256,
+            seed: 7,
+            mean_gap: 2048,
+            jobs: None,
+            placement: PlacementPolicy::RoundRobin,
+            chips: 1,
+            fleet: None,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// The fleet this spec serves on, resolved against `base` (the
+    /// session architecture — the `base` preset of a fleet spec).
+    pub fn fleet_config(&self, base: &ArchConfig) -> Result<FleetConfig, SpecError> {
+        resolve_fleet(self.fleet.as_deref(), self.chips, base)
+    }
+}
+
+/// `fleet` — fleet size × placement policy sweep over one stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSweepSpec {
+    pub requests: u32,
+    pub seed: u64,
+    pub mean_gap: u64,
+    pub jobs: Option<usize>,
+    /// Policies of the axis (default: all built-ins).
+    pub placements: Vec<PlacementPolicy>,
+    /// Homogeneous fleet sizes.  Ignored — and not displayed — when
+    /// `fleet` is set (see [`ServeSpec::chips`] for the rationale);
+    /// must be non-empty otherwise ([`FleetSweepSpec::fleets`] rejects
+    /// an empty axis).
+    pub sizes: Vec<usize>,
+    /// Single explicit fleet spec instead of the size axis.
+    pub fleet: Option<String>,
+}
+
+impl Default for FleetSweepSpec {
+    fn default() -> Self {
+        Self {
+            requests: 192,
+            seed: 7,
+            mean_gap: 1024,
+            jobs: None,
+            placements: PlacementPolicy::ALL.to_vec(),
+            sizes: vec![1, 2, 4],
+            fleet: None,
+        }
+    }
+}
+
+impl FleetSweepSpec {
+    /// The fleets of the axis, resolved against `base`.  Rejects an
+    /// empty size list (a typed-constructed spec could otherwise reach
+    /// the session with zero fleets).
+    pub fn fleets(&self, base: &ArchConfig) -> Result<Vec<FleetConfig>, SpecError> {
+        match &self.fleet {
+            Some(spec) => Ok(vec![parse_fleet(spec, base)?]),
+            None => {
+                if self.sizes.is_empty() {
+                    return Err(bad("sizes", "", "needs at least one fleet size"));
+                }
+                Ok(self
+                    .sizes
+                    .iter()
+                    .map(|&n| FleetConfig::homogeneous(base.clone(), n))
+                    .collect())
+            }
+        }
+    }
+}
+
+/// `dse` — the Fig. 6 ratio sweep (model, or simulated with `sim`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseSpec {
+    /// Off-chip bandwidth budget, B/cycle.
+    pub band: u64,
+    /// Validate the model cycle-accurately through the runner.
+    pub sim: bool,
+    /// Tasks per simulated point (`sim` arm).
+    pub tasks: u32,
+    pub jobs: Option<usize>,
+    /// Top-k report size (`None` = skip).
+    pub top: Option<usize>,
+}
+
+impl Default for DseSpec {
+    fn default() -> Self {
+        Self {
+            band: 128,
+            sim: false,
+            tasks: 4096,
+            jobs: None,
+            top: None,
+        }
+    }
+}
+
+/// `dse-full` — the cartesian space; `None` axes take
+/// [`crate::model::dse::CartesianSpace::default_axes`].  A non-empty
+/// `fleets` list attaches a fleet-size × placement axis served with
+/// synthetic traffic (`requests`/`seed`/`gap`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseFullSpec {
+    pub cores: Option<Vec<u32>>,
+    pub macros_per_core: Option<Vec<u32>>,
+    pub n_in: Option<Vec<u32>>,
+    pub bands: Option<Vec<u64>>,
+    pub buffers: Option<Vec<u64>>,
+    pub tasks: Option<u32>,
+    pub write_speed: Option<u32>,
+    pub style: CodegenStyle,
+    pub jobs: Option<usize>,
+    /// Top-k report size (`None` = the default 10).
+    pub top: Option<usize>,
+    /// Homogeneous fleet sizes of the optional fleet axis (empty = no
+    /// fleet axis).
+    pub fleets: Vec<usize>,
+    /// Placement policies of the fleet axis.
+    pub placements: Vec<PlacementPolicy>,
+    /// Synthetic-traffic knobs for the fleet axis.
+    pub requests: u32,
+    pub seed: u64,
+    pub mean_gap: u64,
+}
+
+impl Default for DseFullSpec {
+    fn default() -> Self {
+        Self {
+            cores: None,
+            macros_per_core: None,
+            n_in: None,
+            bands: None,
+            buffers: None,
+            tasks: None,
+            write_speed: None,
+            style: CodegenStyle::Looped,
+            jobs: None,
+            top: None,
+            fleets: Vec::new(),
+            placements: PlacementPolicy::ALL.to_vec(),
+            requests: 128,
+            seed: 7,
+            mean_gap: 1024,
+        }
+    }
+}
+
+/// `adapt` — the runtime bandwidth-adaptation table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptSpec {
+    /// Largest divisor `n` of the table (powers of two up to it).
+    pub max_n: u32,
+}
+
+impl Default for AdaptSpec {
+    fn default() -> Self {
+        Self { max_n: 64 }
+    }
+}
+
+/// Resolve an optional fleet spec + replica count to a [`FleetConfig`].
+fn resolve_fleet(
+    fleet: Option<&str>,
+    chips: usize,
+    base: &ArchConfig,
+) -> Result<FleetConfig, SpecError> {
+    match fleet {
+        Some(spec) => parse_fleet(spec, base),
+        None => Ok(FleetConfig::homogeneous(base.clone(), chips)),
+    }
+}
+
+fn parse_fleet(spec: &str, base: &ArchConfig) -> Result<FleetConfig, SpecError> {
+    FleetConfig::parse(spec, base).map_err(|e| SpecError::BadValue {
+        key: "fleet",
+        value: spec.to_string(),
+        reason: e.to_string(),
+    })
+}
+
+/// Eager fleet-spec check at parse time.  Specs using the `base`/`config`
+/// preset depend on the session architecture and are only checked for
+/// syntax at run time; everything else is fully validated here against
+/// the paper architecture.
+fn check_fleet_spec(spec: &str) -> Result<(), SpecError> {
+    let uses_base = spec
+        .split([',', ':'])
+        .any(|tok| matches!(tok.split('x').next_back(), Some("base" | "config")));
+    if uses_base {
+        return Ok(());
+    }
+    parse_fleet(spec, &ArchConfig::paper_default()).map(|_| ())
+}
+
+// --- value parsers -------------------------------------------------------
+
+fn bad(key: &'static str, value: &str, reason: impl fmt::Display) -> SpecError {
+    SpecError::BadValue {
+        key,
+        value: value.to_string(),
+        reason: reason.to_string(),
+    }
+}
+
+fn p_u32(key: &'static str, v: &str) -> Result<u32, SpecError> {
+    v.parse().map_err(|e| bad(key, v, e))
+}
+
+fn p_u64(key: &'static str, v: &str) -> Result<u64, SpecError> {
+    v.parse().map_err(|e| bad(key, v, e))
+}
+
+fn p_bool(key: &'static str, v: &str) -> Result<bool, SpecError> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(bad(key, v, "expected true|false")),
+    }
+}
+
+fn p_jobs(v: &str) -> Result<usize, SpecError> {
+    let jobs: usize = v.parse().map_err(|e| bad("jobs", v, e))?;
+    if jobs == 0 {
+        return Err(bad("jobs", v, "must be >= 1 (omit for one worker per hardware thread)"));
+    }
+    Ok(jobs)
+}
+
+fn p_top(v: &str) -> Result<usize, SpecError> {
+    let top: usize = v.parse().map_err(|e| bad("top", v, e))?;
+    if top == 0 {
+        return Err(bad("top", v, "must be >= 1 (omit to skip the top-k report)"));
+    }
+    Ok(top)
+}
+
+fn p_strategy(v: &str) -> Result<Strategy, SpecError> {
+    Strategy::from_name(v).ok_or_else(|| bad("strategy", v, "expected insitu|naive|intra|gpp"))
+}
+
+fn p_placement(v: &str) -> Result<PlacementPolicy, SpecError> {
+    PlacementPolicy::from_name(v)
+        .ok_or_else(|| bad("placement", v, "expected rr|least-loaded|affinity"))
+}
+
+fn p_placements(v: &str) -> Result<Vec<PlacementPolicy>, SpecError> {
+    if v == "all" {
+        return Ok(PlacementPolicy::ALL.to_vec());
+    }
+    v.split(',').map(|p| p_placement(p.trim())).collect()
+}
+
+fn p_style(v: &str) -> Result<CodegenStyle, SpecError> {
+    match v {
+        "unrolled" => Ok(CodegenStyle::Unrolled),
+        "looped" => Ok(CodegenStyle::Looped),
+        _ => Err(bad("style", v, "expected looped|unrolled")),
+    }
+}
+
+/// Comma list of values >= 1 (axes, fleet sizes).
+fn p_list<T: std::str::FromStr + PartialEq + From<u8>>(
+    key: &'static str,
+    v: &str,
+) -> Result<Vec<T>, SpecError>
+where
+    <T as std::str::FromStr>::Err: fmt::Display,
+{
+    if v.trim().is_empty() {
+        return Err(bad(key, v, "expected a comma-separated list of values >= 1"));
+    }
+    let items: Vec<T> = v
+        .split(',')
+        .map(|s| s.trim().parse::<T>().map_err(|e| bad(key, v, e)))
+        .collect::<Result<_, _>>()?;
+    if items.iter().any(|x| *x == T::from(0u8)) {
+        return Err(bad(key, v, "entries must be >= 1"));
+    }
+    Ok(items)
+}
+
+fn join<T: fmt::Display>(items: &[T]) -> String {
+    items
+        .iter()
+        .map(T::to_string)
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+// --- parsing -------------------------------------------------------------
+
+impl RunSpec {
+    /// Short kind name (the first spec segment).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RunSpec::Repro(_) => "repro",
+            RunSpec::Run(_) => "run",
+            RunSpec::Simulate(_) => "simulate",
+            RunSpec::Serve(_) => "serve",
+            RunSpec::FleetSweep(_) => "fleet",
+            RunSpec::Dse(_) => "dse",
+            RunSpec::DseFull(_) => "dse-full",
+            RunSpec::Adapt(_) => "adapt",
+        }
+    }
+
+    /// Valid keys of a kind, for usage/error messages.
+    pub fn valid_keys(kind: &str) -> &'static str {
+        match kind {
+            "repro" => "exp, vectors, jobs",
+            "run" => "workload, strategy, trace, numerics, artifacts",
+            "simulate" => "strategy, tasks, macros, nin, band, s, oplog",
+            "serve" => "requests, seed, gap, jobs, placement, chips, fleet",
+            "fleet" => "requests, seed, gap, jobs, placement, sizes, fleet",
+            "dse" => "band, sim, tasks, jobs, top",
+            "dse-full" => {
+                "cores, macros, nin, bands, buffers, tasks, s, style, jobs, top, \
+                 fleets, placement, requests, seed, gap"
+            }
+            "adapt" => "maxn",
+            _ => "",
+        }
+    }
+
+    /// Parse a spec string; see the [module docs](self) for the grammar.
+    pub fn parse(spec: &str) -> Result<RunSpec, SpecError> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(SpecError::Empty);
+        }
+        let mut segs = spec.split(':');
+        let kind = segs.next().unwrap_or_default();
+        // Re-attach fleet-spec arch overrides split off by the ':' pass.
+        let mut pairs: Vec<(String, String)> = Vec::new();
+        for seg in segs {
+            let Some((k, v)) = seg.split_once('=') else {
+                return Err(SpecError::NotKeyValue(seg.to_string()));
+            };
+            if let Some(last) = pairs.last_mut() {
+                if last.0 == "fleet" && FLEET_ARCH_KEYS.contains(&k) {
+                    last.1.push(':');
+                    last.1.push_str(seg);
+                    continue;
+                }
+            }
+            pairs.push((k.to_string(), v.to_string()));
+        }
+        match kind {
+            "repro" => Self::parse_repro(&pairs),
+            "run" => Self::parse_run(&pairs),
+            "simulate" => Self::parse_simulate(&pairs),
+            "serve" => Self::parse_serve(&pairs),
+            "fleet" => Self::parse_fleet_sweep(&pairs),
+            "dse" => Self::parse_dse(&pairs),
+            "dse-full" => Self::parse_dse_full(&pairs),
+            "adapt" => Self::parse_adapt(&pairs),
+            other => Err(SpecError::UnknownKind(other.to_string())),
+        }
+    }
+
+    fn unknown(kind: &'static str, key: &str) -> SpecError {
+        SpecError::UnknownKey {
+            kind,
+            key: key.to_string(),
+            valid: Self::valid_keys(kind),
+        }
+    }
+
+    fn parse_repro(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = ReproSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "exp" => {
+                    let valid = matches!(
+                        v.as_str(),
+                        "fig4" | "fig6" | "fig6a" | "fig6b" | "fig7" | "fig7a" | "fig7b"
+                            | "fig7c" | "fig7d" | "table2" | "headline" | "all"
+                    );
+                    if !valid {
+                        return Err(bad("exp", v, "expected fig4|fig6|fig7|table2|headline|all"));
+                    }
+                    s.exp = v.clone();
+                }
+                "vectors" => s.vectors = p_u32("vectors", v)?,
+                "jobs" => s.jobs = Some(p_jobs(v)?),
+                _ => return Err(Self::unknown("repro", k)),
+            }
+        }
+        Ok(RunSpec::Repro(s))
+    }
+
+    fn parse_run(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = RunWorkloadSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "workload" => {
+                    if !matches!(v.as_str(), "ffn" | "e2e" | "square" | "mlp") {
+                        return Err(bad("workload", v, "expected ffn|e2e|square|mlp"));
+                    }
+                    s.workload = v.clone();
+                }
+                "strategy" => s.strategy = p_strategy(v)?,
+                "trace" => s.trace = Some(v.clone()),
+                "numerics" => s.numerics = p_bool("numerics", v)?,
+                "artifacts" => s.artifacts = Some(v.clone()),
+                _ => return Err(Self::unknown("run", k)),
+            }
+        }
+        Ok(RunSpec::Run(s))
+    }
+
+    fn parse_simulate(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = SimulateSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "strategy" => s.strategy = p_strategy(v)?,
+                "tasks" => s.tasks = p_u32("tasks", v)?,
+                "macros" => s.macros = Some(p_u32("macros", v)?),
+                "nin" => s.n_in = Some(p_u32("nin", v)?),
+                "band" => s.band = Some(p_u64("band", v)?),
+                "s" => s.write_speed = Some(p_u32("s", v)?),
+                "oplog" => s.oplog = p_bool("oplog", v)?,
+                _ => return Err(Self::unknown("simulate", k)),
+            }
+        }
+        Ok(RunSpec::Simulate(s))
+    }
+
+    fn parse_serve(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = ServeSpec::default();
+        let mut chips_set = false;
+        for (k, v) in pairs {
+            match k.as_str() {
+                "requests" => s.requests = p_u32("requests", v)?,
+                "seed" => s.seed = p_u64("seed", v)?,
+                "gap" => s.mean_gap = p_u64("gap", v)?,
+                "jobs" => s.jobs = Some(p_jobs(v)?),
+                "placement" => s.placement = p_placement(v)?,
+                "chips" => {
+                    let chips: usize = v.parse().map_err(|e| bad("chips", v, e))?;
+                    if chips == 0 {
+                        return Err(bad("chips", v, "must be >= 1"));
+                    }
+                    s.chips = chips;
+                    chips_set = true;
+                }
+                "fleet" => {
+                    check_fleet_spec(v)?;
+                    s.fleet = Some(v.clone());
+                }
+                _ => return Err(Self::unknown("serve", k)),
+            }
+        }
+        if chips_set && s.fleet.is_some() {
+            return Err(SpecError::Conflict("chips", "fleet"));
+        }
+        Ok(RunSpec::Serve(s))
+    }
+
+    fn parse_fleet_sweep(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = FleetSweepSpec::default();
+        let mut sizes_set = false;
+        for (k, v) in pairs {
+            match k.as_str() {
+                "requests" => s.requests = p_u32("requests", v)?,
+                "seed" => s.seed = p_u64("seed", v)?,
+                "gap" => s.mean_gap = p_u64("gap", v)?,
+                "jobs" => s.jobs = Some(p_jobs(v)?),
+                "placement" => s.placements = p_placements(v)?,
+                "sizes" => {
+                    s.sizes = p_list::<u64>("sizes", v)?.into_iter().map(|n| n as usize).collect();
+                    sizes_set = true;
+                }
+                "fleet" => {
+                    check_fleet_spec(v)?;
+                    s.fleet = Some(v.clone());
+                }
+                _ => return Err(Self::unknown("fleet", k)),
+            }
+        }
+        if sizes_set && s.fleet.is_some() {
+            return Err(SpecError::Conflict("sizes", "fleet"));
+        }
+        Ok(RunSpec::FleetSweep(s))
+    }
+
+    fn parse_dse(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = DseSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "band" => s.band = p_u64("band", v)?,
+                "sim" => s.sim = p_bool("sim", v)?,
+                "tasks" => s.tasks = p_u32("tasks", v)?,
+                "jobs" => s.jobs = Some(p_jobs(v)?),
+                "top" => s.top = Some(p_top(v)?),
+                _ => return Err(Self::unknown("dse", k)),
+            }
+        }
+        Ok(RunSpec::Dse(s))
+    }
+
+    fn parse_dse_full(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = DseFullSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "cores" => s.cores = Some(p_list("cores", v)?),
+                "macros" => s.macros_per_core = Some(p_list("macros", v)?),
+                "nin" => s.n_in = Some(p_list("nin", v)?),
+                "bands" => s.bands = Some(p_list("bands", v)?),
+                "buffers" => s.buffers = Some(p_list("buffers", v)?),
+                "tasks" => {
+                    let tasks = p_u32("tasks", v)?;
+                    if tasks == 0 {
+                        return Err(bad("tasks", v, "must be >= 1"));
+                    }
+                    s.tasks = Some(tasks);
+                }
+                "s" => s.write_speed = Some(p_u32("s", v)?),
+                "style" => s.style = p_style(v)?,
+                "jobs" => s.jobs = Some(p_jobs(v)?),
+                "top" => s.top = Some(p_top(v)?),
+                "fleets" => {
+                    s.fleets = p_list::<u64>("fleets", v)?.into_iter().map(|n| n as usize).collect()
+                }
+                "placement" => s.placements = p_placements(v)?,
+                "requests" => s.requests = p_u32("requests", v)?,
+                "seed" => s.seed = p_u64("seed", v)?,
+                "gap" => s.mean_gap = p_u64("gap", v)?,
+                _ => return Err(Self::unknown("dse-full", k)),
+            }
+        }
+        Ok(RunSpec::DseFull(s))
+    }
+
+    fn parse_adapt(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = AdaptSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "maxn" => s.max_n = p_u32("maxn", v)?,
+                _ => return Err(Self::unknown("adapt", k)),
+            }
+        }
+        Ok(RunSpec::Adapt(s))
+    }
+}
+
+// --- canonical rendering -------------------------------------------------
+
+/// Pushes `:key=value` when the value differs from the default.
+struct Emit<'a, 'b> {
+    f: &'a mut fmt::Formatter<'b>,
+}
+
+impl Emit<'_, '_> {
+    fn kv(&mut self, key: &str, value: impl fmt::Display) -> fmt::Result {
+        write!(self.f, ":{key}={value}")
+    }
+
+    fn opt<T: fmt::Display>(&mut self, key: &str, value: &Option<T>) -> fmt::Result {
+        match value {
+            Some(v) => self.kv(key, v),
+            None => Ok(()),
+        }
+    }
+
+    fn flag(&mut self, key: &str, value: bool) -> fmt::Result {
+        if value {
+            self.kv(key, "true")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for RunSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.kind())?;
+        let mut e = Emit { f };
+        match self {
+            RunSpec::Repro(s) => {
+                let d = ReproSpec::default();
+                if s.exp != d.exp {
+                    e.kv("exp", &s.exp)?;
+                }
+                if s.vectors != d.vectors {
+                    e.kv("vectors", s.vectors)?;
+                }
+                e.opt("jobs", &s.jobs)
+            }
+            RunSpec::Run(s) => {
+                let d = RunWorkloadSpec::default();
+                if s.workload != d.workload {
+                    e.kv("workload", &s.workload)?;
+                }
+                if s.strategy != d.strategy {
+                    e.kv("strategy", s.strategy.name())?;
+                }
+                e.opt("trace", &s.trace)?;
+                e.flag("numerics", s.numerics)?;
+                e.opt("artifacts", &s.artifacts)
+            }
+            RunSpec::Simulate(s) => {
+                let d = SimulateSpec::default();
+                if s.strategy != d.strategy {
+                    e.kv("strategy", s.strategy.name())?;
+                }
+                if s.tasks != d.tasks {
+                    e.kv("tasks", s.tasks)?;
+                }
+                e.opt("macros", &s.macros)?;
+                e.opt("nin", &s.n_in)?;
+                e.opt("band", &s.band)?;
+                e.opt("s", &s.write_speed)?;
+                e.flag("oplog", s.oplog)
+            }
+            RunSpec::Serve(s) => {
+                let d = ServeSpec::default();
+                if s.requests != d.requests {
+                    e.kv("requests", s.requests)?;
+                }
+                if s.seed != d.seed {
+                    e.kv("seed", s.seed)?;
+                }
+                if s.mean_gap != d.mean_gap {
+                    e.kv("gap", s.mean_gap)?;
+                }
+                e.opt("jobs", &s.jobs)?;
+                if s.placement != d.placement {
+                    e.kv("placement", s.placement.name())?;
+                }
+                if s.chips != d.chips && s.fleet.is_none() {
+                    e.kv("chips", s.chips)?;
+                }
+                e.opt("fleet", &s.fleet)
+            }
+            RunSpec::FleetSweep(s) => {
+                let d = FleetSweepSpec::default();
+                if s.requests != d.requests {
+                    e.kv("requests", s.requests)?;
+                }
+                if s.seed != d.seed {
+                    e.kv("seed", s.seed)?;
+                }
+                if s.mean_gap != d.mean_gap {
+                    e.kv("gap", s.mean_gap)?;
+                }
+                e.opt("jobs", &s.jobs)?;
+                if s.placements != d.placements {
+                    e.kv(
+                        "placement",
+                        join(&s.placements.iter().map(|p| p.name()).collect::<Vec<_>>()),
+                    )?;
+                }
+                if s.sizes != d.sizes && s.fleet.is_none() {
+                    e.kv("sizes", join(&s.sizes))?;
+                }
+                e.opt("fleet", &s.fleet)
+            }
+            RunSpec::Dse(s) => {
+                let d = DseSpec::default();
+                if s.band != d.band {
+                    e.kv("band", s.band)?;
+                }
+                e.flag("sim", s.sim)?;
+                if s.tasks != d.tasks {
+                    e.kv("tasks", s.tasks)?;
+                }
+                e.opt("jobs", &s.jobs)?;
+                e.opt("top", &s.top)
+            }
+            RunSpec::DseFull(s) => {
+                let d = DseFullSpec::default();
+                if let Some(v) = &s.cores {
+                    e.kv("cores", join(v))?;
+                }
+                if let Some(v) = &s.macros_per_core {
+                    e.kv("macros", join(v))?;
+                }
+                if let Some(v) = &s.n_in {
+                    e.kv("nin", join(v))?;
+                }
+                if let Some(v) = &s.bands {
+                    e.kv("bands", join(v))?;
+                }
+                if let Some(v) = &s.buffers {
+                    e.kv("buffers", join(v))?;
+                }
+                e.opt("tasks", &s.tasks)?;
+                e.opt("s", &s.write_speed)?;
+                if s.style != d.style {
+                    e.kv("style", s.style.name())?;
+                }
+                e.opt("jobs", &s.jobs)?;
+                e.opt("top", &s.top)?;
+                if !s.fleets.is_empty() {
+                    e.kv("fleets", join(&s.fleets))?;
+                }
+                if s.placements != d.placements {
+                    e.kv(
+                        "placement",
+                        join(&s.placements.iter().map(|p| p.name()).collect::<Vec<_>>()),
+                    )?;
+                }
+                if s.requests != d.requests {
+                    e.kv("requests", s.requests)?;
+                }
+                if s.seed != d.seed {
+                    e.kv("seed", s.seed)?;
+                }
+                if s.mean_gap != d.mean_gap {
+                    e.kv("gap", s.mean_gap)?;
+                }
+                Ok(())
+            }
+            RunSpec::Adapt(s) => {
+                let d = AdaptSpec::default();
+                if s.max_n != d.max_n {
+                    e.kv("maxn", s.max_n)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(spec: &str) -> RunSpec {
+        let parsed = RunSpec::parse(spec).unwrap();
+        let printed = parsed.to_string();
+        let reparsed = RunSpec::parse(&printed)
+            .unwrap_or_else(|e| panic!("display '{printed}' of '{spec}' unparsable: {e}"));
+        assert_eq!(parsed, reparsed, "spec '{spec}' -> '{printed}'");
+        parsed
+    }
+
+    #[test]
+    fn issue_example_parses_and_roundtrips() {
+        let s = roundtrip("serve:fleet=2xpaper:placement=least-loaded:requests=512");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.fleet.as_deref(), Some("2xpaper"));
+        assert_eq!(s.placement, PlacementPolicy::LeastLoaded);
+        assert_eq!(s.requests, 512);
+    }
+
+    #[test]
+    fn fleet_arch_overrides_reattach() {
+        let s = roundtrip("serve:placement=rr:fleet=2xpaper,1xpaper:band=256:s=4");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.fleet.as_deref(), Some("2xpaper,1xpaper:band=256:s=4"));
+    }
+
+    #[test]
+    fn bare_kinds_are_all_defaults() {
+        for kind in VALID_KINDS {
+            let parsed = roundtrip(kind);
+            assert_eq!(parsed.to_string(), kind, "bare '{kind}' must display bare");
+        }
+        assert_eq!(RunSpec::parse("serve").unwrap(), RunSpec::Serve(ServeSpec::default()));
+    }
+
+    #[test]
+    fn default_values_display_bare() {
+        // Explicitly spelling a default must canonicalize away.
+        assert_eq!(RunSpec::parse("serve:requests=256:chips=1").unwrap().to_string(), "serve");
+        assert_eq!(RunSpec::parse("repro:exp=all").unwrap().to_string(), "repro");
+    }
+
+    #[test]
+    fn dse_full_axes_roundtrip() {
+        let s = roundtrip(
+            "dse-full:cores=2,4:macros=2:nin=2,4:bands=32,64:buffers=65536:tasks=512:top=5",
+        );
+        let RunSpec::DseFull(s) = s else { panic!() };
+        assert_eq!(s.cores, Some(vec![2, 4]));
+        assert_eq!(s.bands, Some(vec![32, 64]));
+        assert_eq!(s.top, Some(5));
+        assert_eq!(s.style, CodegenStyle::Looped);
+        // Fleet axis rides along.
+        let s = roundtrip("dse-full:cores=2:fleets=1,2:placement=rr,affinity:requests=64");
+        let RunSpec::DseFull(s) = s else { panic!() };
+        assert_eq!(s.fleets, vec![1, 2]);
+        assert_eq!(
+            s.placements,
+            vec![PlacementPolicy::RoundRobin, PlacementPolicy::ClassAffinity]
+        );
+    }
+
+    #[test]
+    fn rejections() {
+        assert_eq!(RunSpec::parse("  "), Err(SpecError::Empty));
+        assert!(matches!(RunSpec::parse("nope"), Err(SpecError::UnknownKind(_))));
+        assert!(matches!(RunSpec::parse("serve:wat"), Err(SpecError::NotKeyValue(_))));
+        // Unknown keys name the kind's valid key set.
+        let err = RunSpec::parse("serve:reqests=5").unwrap_err();
+        assert!(err.to_string().contains("requests, seed, gap"), "{err}");
+        // Degenerate values.
+        for bad_spec in [
+            "serve:jobs=0",
+            "serve:chips=0",
+            "dse:top=0",
+            "dse-full:cores=0,2",
+            "dse-full:tasks=0",
+            "dse-full:bands=",
+            "fleet:sizes=0",
+            "serve:fleet=2xunknown",
+            "simulate:strategy=warp",
+            "serve:placement=chaos",
+            "dse-full:style=rolled",
+            "run:workload=doom",
+            "repro:exp=fig99",
+        ] {
+            assert!(RunSpec::parse(bad_spec).is_err(), "accepted '{bad_spec}'");
+        }
+        // Mutual exclusions.
+        assert_eq!(
+            RunSpec::parse("serve:chips=2:fleet=2xpaper"),
+            Err(SpecError::Conflict("chips", "fleet"))
+        );
+        assert_eq!(
+            RunSpec::parse("fleet:sizes=1,2:fleet=2xpaper"),
+            Err(SpecError::Conflict("sizes", "fleet"))
+        );
+    }
+
+    #[test]
+    fn base_preset_fleet_defers_validation() {
+        // `base:s=16` may be valid under a custom session arch even
+        // though the paper arch rejects it — parse must not pre-judge.
+        let s = RunSpec::parse("serve:fleet=2xbase:s=16").unwrap();
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.fleet.as_deref(), Some("2xbase:s=16"));
+        // ...but a paper-preset typo is caught eagerly.
+        assert!(RunSpec::parse("serve:fleet=2xpaper:color=red").is_err());
+    }
+}

@@ -19,6 +19,11 @@
 //!   at their arrival cycles onto per-chip FIFO queues, yielding true
 //!   per-request queueing + service latency per policy.
 //!
+//! Entry points describe fleets through [`crate::api`]: a `RunSpec`'s
+//! `fleet=SPEC`/`chips=N` keys resolve to a [`FleetConfig`] against the
+//! session architecture, and fleet-size × policy axes
+//! ([`crate::sweep::FleetAxis`]) ride on `fleet` and `dse-full` specs.
+//!
 //! **Determinism:** every piece here is a pure function of its inputs —
 //! no wall clock, no map-iteration order, no thread interleaving — so
 //! fleet reports stay byte-identical across `--jobs` settings

@@ -12,8 +12,30 @@
 //! runtime that executes the AOT-lowered JAX/Pallas numerics
 //! (`artifacts/*.hlo.txt`) on the request path — Python never runs here.
 //!
+//! ## Embedding
+//!
+//! The documented embedding surface is [`api`]: describe an experiment
+//! as a typed [`api::RunSpec`] (or parse its spec-string form), execute
+//! it through an [`api::Session`], and receive the report through
+//! [`api::ReportSink`]s plus a typed [`api::Outcome`].  Every CLI
+//! subcommand is a thin adapter over this pipeline.
+//!
+//! ```
+//! use gpp_pim::api::{Outcome, RunSpec, Session, SinkSet};
+//!
+//! // One chip, 16 tile-tasks on 4 macros, generalized ping-pong.
+//! let spec = RunSpec::parse("simulate:tasks=16:macros=4")?;
+//! let outcome = Session::default().run(&spec, &mut SinkSet::new())?;
+//! if let Outcome::Simulate(sim) = outcome {
+//!     assert_eq!(sim.result.stats.vmms_completed, 16);
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
 //! ## Layout
 //!
+//! - [`api`] — the unified experiment pipeline:
+//!   `RunSpec → Session → ReportSink`.
 //! - [`arch`] — accelerator geometry and timing parameters.
 //! - [`config`] — TOML-subset config parser (no external deps).
 //! - [`isa`] — instruction set, assembler, encoder, disassembler.
@@ -34,6 +56,7 @@
 //! - [`report`] — figure/table renderers and the bench harness kit.
 //! - [`util`] — deterministic RNG, CSV, misc helpers.
 
+pub mod api;
 pub mod arch;
 pub mod config;
 pub mod coordinator;

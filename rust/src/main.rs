@@ -1,10 +1,18 @@
 //! `gpp-pim` — CLI for the Generalized Ping-Pong PIM accelerator framework.
 //!
+//! Every experiment subcommand is a thin adapter: flags build a typed
+//! [`RunSpec`], which runs through the one [`api::Session`] pipeline
+//! with the requested [`ReportSink`]s (stdout always; `--csv-dir` adds
+//! CSV persistence, `--bench-json` adds a wall-time tracking record).
+//! `gpp-pim exec SPEC` accepts the spec-string form directly — the same
+//! grammar `RunSpec::Display` emits.
+//!
 //! Subcommands (argument parsing is hand-rolled; `clap` is unavailable in
 //! this offline environment):
 //!
 //! ```text
 //! gpp-pim info  [--config FILE]
+//! gpp-pim exec  SPEC [--csv-dir DIR] [--bench-json FILE]
 //! gpp-pim repro --exp fig4|fig6|fig7|table2|headline|all [--csv-dir DIR] [--vectors N] [--jobs N]
 //! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
 //!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
@@ -16,38 +24,37 @@
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
 //! gpp-pim dse  --full [--cores L] [--macros L] [--n-in L] [--bands L] [--buffers L]
 //!              [--tasks N] [--write-speed S] [--jobs N] [--top K] [--unrolled]
+//!              [--fleets 1,2,4] [--placement P|all] [--requests N]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
 //! ```
 
 use anyhow::{anyhow, bail, Context, Result};
+use gpp_pim::api::{
+    AdaptSpec, BenchJsonSink, CsvDirSink, DseFullSpec, DseSpec, FleetSweepSpec, Outcome,
+    ReproSpec, RunSpec, RunWorkloadSpec, ServeSpec, Session, SimulateSpec, SinkSet, StdoutSink,
+};
 use gpp_pim::arch::ArchConfig;
-use gpp_pim::coordinator::{Coordinator, RunConfig};
-use gpp_pim::fleet::{FleetConfig, PlacementPolicy};
-use gpp_pim::gemm::blas;
+use gpp_pim::fleet::PlacementPolicy;
 use gpp_pim::isa;
-use gpp_pim::model::adapt::RuntimeAdaptation;
-use gpp_pim::model::dse::{CartesianSpace, DesignSpace};
-use gpp_pim::report::figures as figs;
 use gpp_pim::runtime::Runtime;
-use gpp_pim::sched::{CodegenStyle, SchedulePlan, Strategy};
-use gpp_pim::serve::{run_fleet_axis, synthetic_traffic, ServeEngine, TrafficConfig};
-use gpp_pim::sim::{simulate, trace, SimOptions};
-use gpp_pim::sweep::{top_k_by, FleetAxis, SweepGrid, SweepRunner};
-use gpp_pim::util::csv::CsvTable;
+use gpp_pim::sched::{CodegenStyle, Strategy};
+use gpp_pim::sim::trace;
 use std::collections::HashMap;
-use std::path::Path;
 
-/// Tiny flag parser: `--key value` pairs plus positionals.
+/// Tiny flag parser: `--key value` pairs plus positionals.  Keys are
+/// kept in parse order so unknown-flag errors are deterministic.
 struct Args {
     flags: HashMap<String, String>,
+    order: Vec<String>,
     positional: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Self {
         let mut flags = HashMap::new();
+        let mut order = Vec::new();
         let mut positional = Vec::new();
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
@@ -56,15 +63,23 @@ impl Args {
                     Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
                     _ => "true".to_string(),
                 };
-                flags.insert(key.to_string(), value);
+                if flags.insert(key.to_string(), value).is_none() {
+                    order.push(key.to_string());
+                }
             } else if let Some(key) = a.strip_prefix('-') {
                 let value = it.next().cloned().unwrap_or_else(|| "true".into());
-                flags.insert(key.to_string(), value);
+                if flags.insert(key.to_string(), value).is_none() {
+                    order.push(key.to_string());
+                }
             } else {
                 positional.push(a.clone());
             }
         }
-        Self { flags, positional }
+        Self {
+            flags,
+            order,
+            positional,
+        }
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -88,29 +103,60 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Reject flags outside `allowed` (and stray positionals when the
+    /// command takes none) with a usage message naming the valid flags
+    /// and, where the command maps to a spec kind, the `exec` spec keys.
+    fn check(&self, cmd: &str, allowed: &[&str], positionals: usize, kind: Option<&str>) -> Result<()> {
+        for key in &self.order {
+            if !allowed.contains(&key.as_str()) {
+                let mut msg = format!(
+                    "unknown flag --{key} for '{cmd}'\n  valid flags: {}",
+                    allowed
+                        .iter()
+                        .map(|f| format!("--{f}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+                if let Some(kind) = kind {
+                    msg.push_str(&format!(
+                        "\n  spec keys for `exec {kind}:...`: {}",
+                        RunSpec::valid_keys(kind)
+                    ));
+                }
+                bail!(msg);
+            }
+        }
+        if self.positional.len() > positionals {
+            bail!(
+                "unexpected argument '{}' for '{cmd}' (flags are --key value)",
+                self.positional[positionals]
+            );
+        }
+        Ok(())
+    }
 }
 
-/// Worker count from `--jobs N` (default: one worker per hardware
-/// thread; `--jobs 1` forces the sequential path).  `--jobs 0` is a
-/// parse-time error — the library clamp in the engines stays as a
-/// last-resort guard only.
-fn jobs_arg(args: &Args) -> Result<usize> {
-    Ok(match args.get("jobs") {
+/// Worker count from `--jobs N` (`None` = session default: one worker
+/// per hardware thread).  `--jobs 0` is a parse-time error — the library
+/// clamp in the engines stays as a last-resort guard only.
+fn jobs_flag(args: &Args) -> Result<Option<usize>> {
+    match args.get("jobs") {
         Some(v) => {
             let jobs: usize = v.parse().with_context(|| format!("--jobs {v}"))?;
             if jobs == 0 {
                 bail!("--jobs must be >= 1 (got 0); omit the flag for one worker per hardware thread");
             }
-            jobs
+            Ok(Some(jobs))
         }
-        None => gpp_pim::sweep::default_jobs(),
-    })
+        None => Ok(None),
+    }
 }
 
 /// Top-k count from `--top K`.  `--top 0` is a parse-time error (the
 /// `--jobs 0`/`--chips 0` precedent): silently clamping would hide a
 /// typo'd flag; omitting the flag is how you skip the report.
-fn top_arg(args: &Args) -> Result<Option<usize>> {
+fn top_flag(args: &Args) -> Result<Option<usize>> {
     match args.get("top") {
         Some(v) => {
             let top: usize = v.parse().with_context(|| format!("--top {v}"))?;
@@ -123,12 +169,13 @@ fn top_arg(args: &Args) -> Result<Option<usize>> {
     }
 }
 
-/// Comma-separated positive-integer axis from `--KEY a,b,c`.  Empty
-/// lists and zero entries are rejected — a degenerate axis would
-/// silently collapse the whole cartesian space.
-fn axis_u64(args: &Args, key: &str, default: &[u64]) -> Result<Vec<u64>> {
+/// Comma-separated positive-integer axis from `--KEY a,b,c` (`None`
+/// when absent — the spec defaults apply).  Empty lists and zero
+/// entries are rejected — a degenerate axis would silently collapse the
+/// whole cartesian space.
+fn axis_u64(args: &Args, key: &str) -> Result<Option<Vec<u64>>> {
     match args.get(key) {
-        None => Ok(default.to_vec()),
+        None => Ok(None),
         Some(v) => {
             if v.trim().is_empty() || v == "true" {
                 bail!("--{key} needs a comma-separated list of values >= 1");
@@ -140,21 +187,25 @@ fn axis_u64(args: &Args, key: &str, default: &[u64]) -> Result<Vec<u64>> {
             if items.contains(&0) {
                 bail!("--{key} entries must be >= 1 (got 0 in '{v}')");
             }
-            Ok(items)
+            Ok(Some(items))
         }
     }
 }
 
 /// [`axis_u64`] narrowed to u32 axes.
-fn axis_u32(args: &Args, key: &str, default: &[u32]) -> Result<Vec<u32>> {
-    axis_u64(args, key, &default.iter().map(|&v| v as u64).collect::<Vec<_>>())?
-        .into_iter()
-        .map(|v| u32::try_from(v).map_err(|_| anyhow!("--{key} entry {v} exceeds u32 range")))
-        .collect()
+fn axis_u32(args: &Args, key: &str) -> Result<Option<Vec<u32>>> {
+    axis_u64(args, key)?
+        .map(|items| {
+            items
+                .into_iter()
+                .map(|v| u32::try_from(v).map_err(|_| anyhow!("--{key} entry {v} exceeds u32 range")))
+                .collect()
+        })
+        .transpose()
 }
 
-/// Placement policy from `--placement` (default: round-robin).
-fn placement_arg(args: &Args) -> Result<PlacementPolicy> {
+/// Single placement policy from `--placement` (default: round-robin).
+fn placement_flag(args: &Args) -> Result<PlacementPolicy> {
     match args.get("placement") {
         Some(p) => PlacementPolicy::from_name(p)
             .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity)")),
@@ -162,31 +213,18 @@ fn placement_arg(args: &Args) -> Result<PlacementPolicy> {
     }
 }
 
-/// Fleet from `--fleet SPEC` or `--chips C` (default: one chip of the
-/// loaded architecture).  `--chips 0` is a parse-time error.
-fn fleet_arg(args: &Args, arch: &ArchConfig) -> Result<FleetConfig> {
-    if let Some(spec) = args.get("fleet") {
-        if args.has("chips") {
-            bail!("--fleet and --chips are mutually exclusive");
-        }
-        return FleetConfig::parse(spec, arch).map_err(|e| anyhow!("{e}"));
+/// Placement-policy list from `--placement P[,P...]|all` (default: all).
+fn placements_flag(args: &Args) -> Result<Vec<PlacementPolicy>> {
+    match args.get("placement") {
+        None | Some("all") => Ok(PlacementPolicy::ALL.to_vec()),
+        Some(list) => list
+            .split(',')
+            .map(|p| {
+                PlacementPolicy::from_name(p.trim())
+                    .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity|all)"))
+            })
+            .collect(),
     }
-    let chips = match args.get("chips") {
-        Some(v) => {
-            let chips: usize = v.parse().with_context(|| format!("--chips {v}"))?;
-            if chips == 0 {
-                bail!("--chips must be >= 1 (got 0)");
-            }
-            chips
-        }
-        None => 1,
-    };
-    Ok(FleetConfig::homogeneous(arch.clone(), chips))
-}
-
-/// Build the sweep runner from `--jobs N`.
-fn make_runner(args: &Args) -> Result<SweepRunner> {
-    Ok(SweepRunner::new(jobs_arg(args)?))
 }
 
 fn load_arch(args: &Args) -> Result<ArchConfig> {
@@ -200,17 +238,25 @@ fn load_arch(args: &Args) -> Result<ArchConfig> {
     }
 }
 
-fn emit(table: &CsvTable, name: &str, csv_dir: Option<&str>) -> Result<()> {
-    println!("{}", table.to_ascii());
-    if let Some(dir) = csv_dir {
-        let path = Path::new(dir).join(format!("{name}.csv"));
-        table.write_to(&path)?;
-        println!("[wrote {}]", path.display());
+/// Run a spec through one session with the sinks the flags ask for:
+/// stdout always, `--csv-dir` and `--bench-json` when given.
+fn run_spec(args: &Args, spec: &RunSpec) -> Result<Outcome> {
+    let session = Session::new(load_arch(args)?);
+    let mut stdout = StdoutSink;
+    let mut csv = args.get("csv-dir").map(CsvDirSink::new);
+    let mut bench = args.get("bench-json").map(BenchJsonSink::new);
+    let mut sinks = SinkSet::new().with(&mut stdout);
+    if let Some(c) = csv.as_mut() {
+        sinks.push(c);
     }
-    Ok(())
+    if let Some(b) = bench.as_mut() {
+        sinks.push(b);
+    }
+    session.run(spec, &mut sinks)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
+    args.check("info", &["config"], 0, None)?;
     let arch = load_arch(args)?;
     arch.validate().map_err(|e| anyhow!("{e}"))?;
     println!("Generalized Ping-Pong PIM accelerator — architecture");
@@ -242,581 +288,253 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_exec(args: &Args) -> Result<()> {
+    args.check("exec", &["config", "csv-dir", "bench-json"], 1, None)?;
+    let Some(text) = args.positional.first() else {
+        bail!(
+            "usage: gpp-pim exec SPEC [--csv-dir DIR] [--bench-json FILE]\n  SPEC kinds: {}",
+            gpp_pim::api::VALID_KINDS.join(", ")
+        );
+    };
+    let spec = RunSpec::parse(text)?;
+    run_spec(args, &spec)?;
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
-    let exp = args.get("exp").unwrap_or("all");
-    let csv_dir = args.get("csv-dir");
-    let vectors = args.get_u32("vectors", 32768)?;
-    // One runner for the whole invocation: the codegen cache deduplicates
-    // programs shared between figures (e.g. fig7 and table2 overlap).
-    let runner = make_runner(args)?;
-    let run_fig4 = matches!(exp, "fig4" | "all");
-    let run_fig6 = matches!(exp, "fig6" | "fig6a" | "fig6b" | "all");
-    let run_fig7 = matches!(exp, "fig7" | "fig7a" | "fig7b" | "fig7c" | "fig7d" | "all");
-    let run_t2 = matches!(exp, "table2" | "all");
-    let run_head = matches!(exp, "headline" | "all");
-    if !(run_fig4 || run_fig6 || run_fig7 || run_t2 || run_head) {
-        bail!("unknown experiment '{exp}' (fig4|fig6|fig7|table2|headline|all)");
-    }
-    if run_fig4 {
-        println!("## Fig. 4 — naive ping-pong utilization vs n_in (s=4 B/cyc)");
-        emit(&figs::fig4_table(&figs::fig4_with(&runner)?), "fig4", csv_dir)?;
-    }
-    if run_fig6 {
-        println!("## Fig. 6 — design-phase comparison at band=128 B/cyc");
-        emit(&figs::fig6_table(&figs::fig6_with(&runner, vectors)?), "fig6", csv_dir)?;
-    }
-    let mut fig7_rows = None;
-    if run_fig7 {
-        println!("## Fig. 7 — runtime adaptation from the tp==tr design point");
-        let rows = figs::fig7_with(&runner, &[1, 2, 4, 8, 16, 32, 64], vectors)?;
-        emit(&figs::fig7a_table(&rows), "fig7a", csv_dir)?;
-        emit(&figs::fig7bcd_table(&rows), "fig7bcd", csv_dir)?;
-        fig7_rows = Some(rows);
-    }
-    if run_t2 {
-        println!("## Table II — theory vs practice");
-        // Table II is a projection of the Fig. 7 sweep: reuse the rows
-        // when they were just computed instead of re-simulating.
-        let rows = match &fig7_rows {
-            Some(rows) => figs::table2_from_fig7(rows),
-            None => figs::table2_with(&runner, vectors)?,
-        };
-        emit(&figs::table2_table(&rows), "table2", csv_dir)?;
-    }
-    if run_head {
-        println!("## Headline — bandwidth sweep 8..256 B/cyc (tp = 4 tr)");
-        emit(
-            &figs::headline_table(&figs::headline_with(&runner, vectors)?),
-            "headline",
-            csv_dir,
-        )?;
-    }
-    println!("{}", runner.summary());
+    args.check(
+        "repro",
+        &["config", "exp", "csv-dir", "vectors", "jobs", "bench-json"],
+        0,
+        Some("repro"),
+    )?;
+    let spec = RunSpec::Repro(ReproSpec {
+        exp: args.get("exp").unwrap_or("all").to_string(),
+        vectors: args.get_u32("vectors", 32768)?,
+        jobs: jobs_flag(args)?,
+    });
+    run_spec(args, &spec)?;
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let mut arch = load_arch(args)?;
-    arch.bandwidth = args.get_u64("band", arch.bandwidth)?;
+    args.check(
+        "simulate",
+        &[
+            "config", "strategy", "tasks", "macros", "n-in", "band", "write-speed", "timeline",
+            "vcd", "csv-dir", "bench-json",
+        ],
+        0,
+        Some("simulate"),
+    )?;
     let strategy = Strategy::from_name(args.get("strategy").unwrap_or("gpp"))
-        .ok_or_else(|| anyhow!("bad --strategy (insitu|naive|gpp)"))?;
-    let plan = SchedulePlan {
+        .ok_or_else(|| anyhow!("bad --strategy (insitu|naive|intra|gpp)"))?;
+    let spec = RunSpec::Simulate(SimulateSpec {
+        strategy,
         tasks: args.get_u32("tasks", 256)?,
-        active_macros: args.get_u32("macros", arch.total_macros())?,
-        n_in: args.get_u32("n-in", arch.n_in)?,
-        write_speed: args.get_u32("write-speed", arch.write_speed)?,
+        macros: args.get("macros").map(|v| v.parse().with_context(|| format!("--macros {v}"))).transpose()?,
+        n_in: args.get("n-in").map(|v| v.parse().with_context(|| format!("--n-in {v}"))).transpose()?,
+        band: args.get("band").map(|v| v.parse().with_context(|| format!("--band {v}"))).transpose()?,
+        write_speed: args
+            .get("write-speed")
+            .map(|v| v.parse().with_context(|| format!("--write-speed {v}")))
+            .transpose()?,
+        oplog: args.has("timeline") || args.has("vcd"),
+    });
+    let outcome = run_spec(args, &spec)?;
+    let Outcome::Simulate(sim) = outcome else {
+        unreachable!("simulate spec yields a simulate outcome")
     };
-    let program = strategy.codegen(&arch, &plan).map_err(|e| anyhow!("{e}"))?;
-    let opts = SimOptions {
-        record_op_log: args.has("timeline") || args.has("vcd"),
-        allow_intra_overlap: strategy.requires_intra_overlap(),
-        ..SimOptions::default()
-    };
-    let r = simulate(&arch, &program, opts).map_err(|e| anyhow!("{e}"))?;
     if let Some(path) = args.get("vcd") {
-        let n = (plan.active_macros as usize).min(arch.total_macros() as usize);
-        std::fs::write(path, gpp_pim::sim::vcd::to_vcd(&r.op_log, arch.macros_per_core, n, 0))?;
+        let n = (sim.plan.active_macros as usize).min(sim.arch.total_macros() as usize);
+        std::fs::write(
+            path,
+            gpp_pim::sim::vcd::to_vcd(&sim.result.op_log, sim.arch.macros_per_core, n, 0),
+        )?;
         println!("[wrote VCD waveform to {path}]");
     }
-    println!("strategy        : {}", strategy.name());
-    println!(
-        "tasks           : {} ({} vectors)",
-        plan.tasks, r.stats.vectors_computed
-    );
-    println!("active macros   : {}", r.stats.active_macros());
-    println!("cycles          : {}", r.stats.cycles);
-    println!(
-        "bus bytes       : {} (util {:.1}%)",
-        r.stats.bus_bytes,
-        100.0 * r.stats.bandwidth_utilization(arch.bandwidth)
-    );
-    println!("peak bus rate   : {} B/cycle", r.stats.peak_bus_rate);
-    println!(
-        "macro util      : {:.1}% (compute-only {:.1}%)",
-        100.0 * r.stats.macro_utilization_active(),
-        100.0 * r.stats.compute_utilization_active()
-    );
-    println!(
-        "throughput      : {:.2} vectors/kcycle",
-        r.stats.vectors_per_kcycle()
-    );
     if args.has("timeline") {
-        let horizon = r.stats.cycles.min(4096);
+        let horizon = sim.result.stats.cycles.min(4096);
         let scale = (horizon / 96).max(1);
         println!("\ntimeline (first {horizon} cycles, {scale} cyc/char, W=write C=compute):");
         print!(
             "{}",
-            trace::to_timeline_ascii(&r.op_log, arch.macros_per_core, 32, horizon, scale)
+            trace::to_timeline_ascii(
+                &sim.result.op_log,
+                sim.arch.macros_per_core,
+                32,
+                horizon,
+                scale
+            )
         );
     }
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let arch = load_arch(args)?;
-    let strategy = Strategy::from_name(args.get("strategy").unwrap_or("gpp"))
-        .ok_or_else(|| anyhow!("bad --strategy"))?;
-    let workload = if let Some(path) = args.get("trace") {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading trace {path}"))?;
-        gpp_pim::gemm::parse_trace(path, &text).map_err(|e| anyhow!("{e}"))?
-    } else {
-        match args.get("workload").unwrap_or("ffn") {
-            "ffn" => blas::transformer_ffn(16, 64, 128, 2),
-            "e2e" => blas::e2e_ffn(),
-            "square" => blas::square_chain(128, 8, 16),
-            "mlp" => blas::mlp_tower(16, &[256, 128, 64, 32]),
-            other => bail!("unknown --workload '{other}' (ffn|e2e|square|mlp) — or use --trace FILE"),
-        }
-    };
-    let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let mut coord = if args.has("numerics") && Runtime::available(artifacts) {
-        Coordinator::with_runtime(arch, artifacts)?
-    } else {
-        Coordinator::new(arch)
-    };
-    let cfg = RunConfig {
-        check_numerics: args.has("numerics"),
-        ..RunConfig::from_arch(&coord.arch, strategy)
-    };
-    let reports = coord.compare(&workload, &cfg)?;
-    println!("workload: {} ({} MACs)", workload.name, workload.total_macs());
-    println!(
-        "numerics: {}",
-        if cfg.check_numerics {
-            if coord.has_runtime() {
-                "PJRT (AOT JAX/Pallas artifacts)"
-            } else {
-                "built-in OU model (artifacts missing)"
-            }
-        } else {
-            "off"
-        }
-    );
-    let base = reports
-        .iter()
-        .find(|r| r.strategy == Strategy::GeneralizedPingPong)
-        .unwrap()
-        .cycles;
-    for r in &reports {
-        let line = format!(
-            "  {:<8} {:>10} cycles  ({:.2}x vs gpp)  macs/cyc {:>8.1}",
-            r.strategy.name(),
-            r.cycles,
-            r.cycles as f64 / base as f64,
-            r.macs_per_cycle(&workload),
-        );
-        match &r.numerics {
-            Some(n) => println!("{line}  max|err| {}", n.max_abs_err),
-            None => println!("{line}"),
-        }
-    }
+    args.check(
+        "run",
+        &[
+            "config", "workload", "strategy", "trace", "numerics", "artifacts", "csv-dir",
+            "bench-json",
+        ],
+        0,
+        Some("run"),
+    )?;
+    let spec = RunSpec::Run(RunWorkloadSpec {
+        workload: args.get("workload").unwrap_or("ffn").to_string(),
+        strategy: Strategy::from_name(args.get("strategy").unwrap_or("gpp"))
+            .ok_or_else(|| anyhow!("bad --strategy"))?,
+        trace: args.get("trace").map(String::from),
+        numerics: args.has("numerics"),
+        artifacts: args.get("artifacts").map(String::from),
+    });
+    run_spec(args, &spec)?;
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let arch = load_arch(args)?;
-    arch.validate().map_err(|e| anyhow!("{e}"))?;
-    let traffic_cfg = TrafficConfig {
+    args.check(
+        "serve",
+        &[
+            "config", "requests", "seed", "jobs", "chips", "fleet", "placement", "mean-gap",
+            "csv-dir", "bench-json",
+        ],
+        0,
+        Some("serve"),
+    )?;
+    if args.has("fleet") && args.has("chips") {
+        bail!("--fleet and --chips are mutually exclusive");
+    }
+    let chips = match args.get("chips") {
+        Some(v) => {
+            let chips: usize = v.parse().with_context(|| format!("--chips {v}"))?;
+            if chips == 0 {
+                bail!("--chips must be >= 1 (got 0)");
+            }
+            chips
+        }
+        None => 1,
+    };
+    let spec = RunSpec::Serve(ServeSpec {
         requests: args.get_u32("requests", 256)?,
         seed: args.get_u64("seed", 7)?,
-        mean_gap_cycles: args.get_u64("mean-gap", 2048)?,
-    };
-    let jobs = jobs_arg(args)?;
-    let fleet = fleet_arg(args, &arch)?;
-    let policy = placement_arg(args)?;
-    let engine = ServeEngine::with_fleet(fleet, policy, jobs);
-    // Traffic targets the *reference* chip (fleet chip 0) so every
-    // request's resource knobs fit the reference-arch contract even when
-    // a --fleet spec's chip 0 is smaller than the base arch.
-    let requests = synthetic_traffic(engine.arch(), &traffic_cfg);
-    let report = engine.run(&requests).map_err(|e| anyhow!("{e}"))?;
-    println!(
-        "## Serve — {} requests (seed {}) on {} chip(s) [{}], policy {}, {} worker(s)",
-        report.requests(),
-        traffic_cfg.seed,
-        engine.chips(),
-        engine.fleet().describe(),
-        engine.placement().name(),
-        engine.jobs()
-    );
-    emit(&report.summary_table(), "serve_summary", args.get("csv-dir"))?;
-    let pcts = report.latency_percentiles(&[50.0, 95.0, 99.0]);
-    println!(
-        "latency p50/p95/p99 : {} / {} / {} cycles (reference timeline)",
-        pcts[0], pcts[1], pcts[2]
-    );
-    println!(
-        "serving throughput  : {:.4} requests/Mcycle ({} classes for {} requests, {:.1}% sim deduped)",
-        report.requests_per_mcycle(),
-        report.classes,
-        report.requests(),
-        100.0 * (1.0 - report.simulated_cycles() as f64 / report.served_cycles().max(1) as f64),
-    );
-    print!("{}", report.fleet_lines());
-    if let Some(dir) = args.get("csv-dir") {
-        for (name, table) in [
-            ("serve", report.to_table()),
-            ("fleet", report.fleet.to_table()),
-            ("fleet_requests", report.fleet.requests_table()),
-        ] {
-            let path = Path::new(dir).join(format!("{name}.csv"));
-            table.write_to(&path)?;
-            println!("[wrote {}]", path.display());
-        }
-    }
-    println!("{}", engine.summary());
+        mean_gap: args.get_u64("mean-gap", 2048)?,
+        jobs: jobs_flag(args)?,
+        placement: placement_flag(args)?,
+        chips,
+        fleet: args.get("fleet").map(String::from),
+    });
+    run_spec(args, &spec)?;
     Ok(())
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    let arch = load_arch(args)?;
-    arch.validate().map_err(|e| anyhow!("{e}"))?;
-    let traffic_cfg = TrafficConfig {
+    args.check(
+        "fleet",
+        &[
+            "config", "requests", "seed", "jobs", "sizes", "fleet", "placement", "mean-gap",
+            "csv-dir", "bench-json",
+        ],
+        0,
+        Some("fleet"),
+    )?;
+    if args.has("fleet") && args.has("sizes") {
+        bail!("--fleet and --sizes are mutually exclusive");
+    }
+    let sizes = match axis_u64(args, "sizes")? {
+        Some(sizes) => sizes.into_iter().map(|n| n as usize).collect(),
+        None => vec![1, 2, 4],
+    };
+    let spec = RunSpec::FleetSweep(FleetSweepSpec {
         requests: args.get_u32("requests", 192)?,
         seed: args.get_u64("seed", 7)?,
-        mean_gap_cycles: args.get_u64("mean-gap", 1024)?,
-    };
-    let jobs = jobs_arg(args)?;
-    let policies = match args.get("placement") {
-        None | Some("all") => PlacementPolicy::ALL.to_vec(),
-        Some(p) => vec![PlacementPolicy::from_name(p)
-            .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity|all)"))?],
-    };
-    let fleets: Vec<FleetConfig> = if let Some(spec) = args.get("fleet") {
-        if args.has("sizes") {
-            bail!("--fleet and --sizes are mutually exclusive");
-        }
-        vec![FleetConfig::parse(spec, &arch).map_err(|e| anyhow!("{e}"))?]
-    } else {
-        let sizes: Vec<usize> = match args.get("sizes") {
-            Some(v) => v
-                .split(',')
-                .map(|s| s.trim().parse::<usize>().with_context(|| format!("--sizes {v}")))
-                .collect::<Result<_>>()?,
-            None => vec![1, 2, 4],
-        };
-        if sizes.is_empty() || sizes.contains(&0) {
-            bail!("--sizes entries must be >= 1");
-        }
-        sizes
-            .iter()
-            .map(|&n| FleetConfig::homogeneous(arch.clone(), n))
-            .collect()
-    };
-    // Traffic targets the first fleet's reference chip (all CLI-built
-    // axes share one reference arch).
-    let requests = synthetic_traffic(fleets[0].reference(), &traffic_cfg);
-    // Carry the axis on a sweep grid — the same description a DSE over
-    // fleet size × policy would use.
-    let grid = SweepGrid::new().with_fleet_axis(FleetAxis::new(fleets, policies));
-    println!(
-        "## Fleet sweep — {} requests (seed {}) over {} (fleet, policy) points",
-        requests.len(),
-        traffic_cfg.seed,
-        grid.fleet_axis().len()
-    );
-    let rows = run_fleet_axis(grid.fleet_axis(), &requests, jobs).map_err(|e| anyhow!("{e}"))?;
-    let mut t = CsvTable::new(vec![
-        "fleet",
-        "chips",
-        "policy",
-        "p50_latency",
-        "p95_latency",
-        "p99_latency",
-        "mean_latency",
-        "makespan",
-        "speedup",
-        "max_utilization",
-    ]);
-    for (point, report) in &rows {
-        let f = &report.fleet;
-        let pcts = f.latency_percentiles(&[50.0, 95.0, 99.0]);
-        let max_util = (0..f.chips())
-            .map(|c| f.utilization(c))
-            .fold(0.0f64, f64::max);
-        t.push_row(vec![
-            point.fleet.describe(),
-            point.fleet.len().to_string(),
-            point.policy.name().to_string(),
-            pcts[0].to_string(),
-            pcts[1].to_string(),
-            pcts[2].to_string(),
-            f.mean_latency().to_string(),
-            f.makespan.to_string(),
-            format!("{:.2}", report.fleet_speedup()),
-            format!("{max_util:.4}"),
-        ]);
-    }
-    emit(&t, "fleet_axis", args.get("csv-dir"))
-}
-
-fn cmd_dse(args: &Args) -> Result<()> {
-    let mut arch = load_arch(args)?;
-    arch.bandwidth = args.get_u64("band", 128)?;
-    let top = top_arg(args)?;
-    if args.has("full") {
-        if args.has("sim") {
-            bail!("--full and --sim are mutually exclusive (--full is always simulated)");
-        }
-        return cmd_dse_full(args, &arch, top);
-    }
-    let mut space = DesignSpace::fig6(&arch);
-    space.bandwidth = arch.bandwidth as f64;
-    if args.has("sim") {
-        // Simulation arm: validate the model sweep cycle-accurately
-        // through the parallel runner (45 simulations in one batch).
-        let runner = make_runner(args)?;
-        let tasks = args.get_u32("tasks", 4096)?;
-        let pts = space
-            .sweep_fig6_sim(&arch, &runner, tasks)
-            .map_err(|e| anyhow!("{e}"))?;
-        let mut t = CsvTable::new(vec![
-            "tr:tp",
-            "s",
-            "n_in",
-            "macros_insitu",
-            "macros_naive",
-            "macros_gpp",
-            "cycles_insitu",
-            "cycles_naive",
-            "cycles_gpp",
-            "gpp/insitu_sim",
-            "model_exec_gpp",
-        ]);
-        for p in &pts {
-            t.push_row(vec![
-                format!("{:.3}", p.model.ratio_tr_over_tp),
-                p.write_speed.to_string(),
-                p.n_in.to_string(),
-                p.macros[0].to_string(),
-                p.macros[1].to_string(),
-                p.macros[2].to_string(),
-                p.cycles[0].to_string(),
-                p.cycles[1].to_string(),
-                p.cycles[2].to_string(),
-                format!("{:.2}", p.cycles[0] as f64 / p.cycles[2] as f64),
-                format!("{:.1}", p.model.gpp.exec_cycles),
-            ]);
-        }
-        println!("{}", runner.summary());
-        emit(&t, "dse_sim", args.get("csv-dir"))?;
-        if let Some(top) = top {
-            // Top-k by *simulated* gpp execution cycles, deterministic
-            // tie-break by input index.
-            let k = top_k_by(pts.len(), top, |i| pts[i].cycles[2] as f64);
-            let mut t = CsvTable::new(vec![
-                "rank", "index", "tr:tp", "s", "n_in", "macros_gpp", "cycles_gpp",
-            ]);
-            for (rank, &i) in k.iter().enumerate() {
-                let p = &pts[i];
-                t.push_row(vec![
-                    (rank + 1).to_string(),
-                    i.to_string(),
-                    format!("{:.3}", p.model.ratio_tr_over_tp),
-                    p.write_speed.to_string(),
-                    p.n_in.to_string(),
-                    p.macros[2].to_string(),
-                    p.cycles[2].to_string(),
-                ]);
-            }
-            println!("## DSE top-{top} (by simulated gpp execution cycles)");
-            emit(&t, "dse_topk", args.get("csv-dir"))?;
-        }
-        return Ok(());
-    }
-    let pts = space.sweep_fig6();
-    let mut t = CsvTable::new(vec![
-        "tr:tp",
-        "n_in",
-        "macros_insitu",
-        "macros_naive",
-        "macros_gpp",
-        "eff_insitu",
-        "eff_naive",
-        "eff_gpp",
-        "peak_bw_gpp",
-    ]);
-    for p in &pts {
-        t.push_row(vec![
-            format!("{:.3}", p.ratio_tr_over_tp),
-            format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
-            format!("{:.1}", p.insitu.num_macros),
-            format!("{:.1}", p.naive.num_macros),
-            format!("{:.1}", p.gpp.num_macros),
-            format!("{:.1}", p.insitu.effective_macros),
-            format!("{:.1}", p.naive.effective_macros),
-            format!("{:.1}", p.gpp.effective_macros),
-            format!("{:.1}", p.gpp.peak_bandwidth),
-        ]);
-    }
-    emit(&t, "dse", args.get("csv-dir"))?;
-    if let Some(top) = top {
-        // Top-k by *model* gpp execution cycles, deterministic tie-break
-        // by input index.
-        let k = top_k_by(pts.len(), top, |i| pts[i].gpp.exec_cycles);
-        let mut t = CsvTable::new(vec![
-            "rank", "index", "tr:tp", "n_in", "macros_gpp", "exec_cycles_gpp",
-        ]);
-        for (rank, &i) in k.iter().enumerate() {
-            let p = &pts[i];
-            t.push_row(vec![
-                (rank + 1).to_string(),
-                i.to_string(),
-                format!("{:.3}", p.ratio_tr_over_tp),
-                format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
-                format!("{:.1}", p.gpp.num_macros),
-                format!("{:.1}", p.gpp.exec_cycles),
-            ]);
-        }
-        println!("## DSE top-{top} (by model gpp execution cycles)");
-        emit(&t, "dse_topk", args.get("csv-dir"))?;
-    }
+        mean_gap: args.get_u64("mean-gap", 1024)?,
+        jobs: jobs_flag(args)?,
+        placements: placements_flag(args)?,
+        sizes,
+        fleet: args.get("fleet").map(String::from),
+    });
+    run_spec(args, &spec)?;
     Ok(())
 }
 
-/// `dse --full`: exhaustive cartesian `(cores × macros × n_in) × band ×
-/// buffer` exploration, simulated cycle-accurately per strategy through
-/// the parallel runner with looped codegen + engine fast-forward
-/// (`--unrolled` forces the slow faithful lowering; results are
-/// identical by construction — the CI smoke byte-compares them).
-fn cmd_dse_full(args: &Args, arch: &ArchConfig, top: Option<usize>) -> Result<()> {
-    let runner = make_runner(args)?;
-    let style = if args.has("unrolled") {
-        CodegenStyle::Unrolled
+fn cmd_dse(args: &Args) -> Result<()> {
+    if args.has("full") {
+        args.check(
+            "dse --full",
+            &[
+                "config", "full", "jobs", "tasks", "top", "csv-dir", "bench-json", "cores",
+                "macros", "n-in", "bands", "buffers", "write-speed", "unrolled", "fleets",
+                "placement", "requests", "seed", "mean-gap", "sim",
+            ],
+            0,
+            Some("dse-full"),
+        )?;
     } else {
-        CodegenStyle::Looped
-    };
-    let defaults = CartesianSpace::default_axes(arch);
-    let space = CartesianSpace {
-        cores: axis_u32(args, "cores", &defaults.cores)?,
-        macros_per_core: axis_u32(args, "macros", &defaults.macros_per_core)?,
-        n_in: axis_u32(args, "n-in", &defaults.n_in)?,
-        bandwidths: axis_u64(args, "bands", &defaults.bandwidths)?,
-        buffers: axis_u64(args, "buffers", &defaults.buffers)?,
-        tasks: args.get_u32("tasks", defaults.tasks)?,
-        write_speed: args.get_u32("write-speed", defaults.write_speed)?,
-    };
-    space.validate().map_err(|e| anyhow!("{e}"))?;
-    let pts = space.sweep(arch, &runner, style).map_err(|e| anyhow!("{e}"))?;
-    let feasible = pts.iter().filter(|p| p.feasible()).count();
-    println!(
-        "## DSE full cartesian — {} points ({} feasible) x 3 strategies, {} tasks/point [{} codegen]",
-        pts.len(),
-        feasible,
-        space.tasks,
-        style.name()
-    );
-    println!("{}", runner.summary());
-    // The full table can run to thousands of rows: CSV only (and only
-    // built when requested), stdout gets the summary and top-k report.
-    if let Some(dir) = args.get("csv-dir") {
-        let mut t = CsvTable::new(vec![
-            "cores",
-            "macros_per_core",
-            "n_in",
-            "band",
-            "buffer",
-            "feasible",
-            "cycles_insitu",
-            "cycles_naive",
-            "cycles_gpp",
-            "gpp/insitu",
-        ]);
-        let cell = |c: Option<u64>| c.map(|v| v.to_string()).unwrap_or_default();
-        for p in &pts {
-            let ratio = match (p.cycles[0], p.cycles[2]) {
-                (Some(i), Some(g)) if g > 0 => format!("{:.2}", i as f64 / g as f64),
-                _ => String::new(),
-            };
-            t.push_row(vec![
-                p.cores.to_string(),
-                p.macros_per_core.to_string(),
-                p.n_in.to_string(),
-                p.bandwidth.to_string(),
-                p.buffer_bytes.to_string(),
-                p.feasible().to_string(),
-                cell(p.cycles[0]),
-                cell(p.cycles[1]),
-                cell(p.cycles[2]),
-                ratio,
-            ]);
+        args.check(
+            "dse",
+            &["config", "band", "sim", "jobs", "tasks", "top", "csv-dir", "bench-json"],
+            0,
+            Some("dse"),
+        )?;
+    }
+    let spec = if args.has("full") {
+        if args.has("sim") {
+            bail!("--full and --sim are mutually exclusive (--full is always simulated)");
         }
-        let path = Path::new(dir).join("dse_full.csv");
-        t.write_to(&path)?;
-        println!("[wrote {}]", path.display());
-    }
-    // Top-k over feasible points by simulated gpp cycles (deterministic
-    // index tie-break); default 10 so --full always reports something.
-    let top = top.unwrap_or(10);
-    let feasible_idx: Vec<usize> = pts
-        .iter()
-        .enumerate()
-        .filter(|(_, p)| p.feasible())
-        .map(|(i, _)| i)
-        .collect();
-    let k = top_k_by(feasible_idx.len(), top, |j| {
-        pts[feasible_idx[j]].cycles[2].unwrap() as f64
-    });
-    let mut tk = CsvTable::new(vec![
-        "rank",
-        "index",
-        "cores",
-        "macros_per_core",
-        "n_in",
-        "band",
-        "buffer",
-        "cycles_gpp",
-        "gpp/insitu",
-    ]);
-    for (rank, &j) in k.iter().enumerate() {
-        let i = feasible_idx[j];
-        let p = &pts[i];
-        tk.push_row(vec![
-            (rank + 1).to_string(),
-            i.to_string(),
-            p.cores.to_string(),
-            p.macros_per_core.to_string(),
-            p.n_in.to_string(),
-            p.bandwidth.to_string(),
-            p.buffer_bytes.to_string(),
-            p.cycles[2].unwrap().to_string(),
-            format!("{:.2}", p.cycles[0].unwrap() as f64 / p.cycles[2].unwrap() as f64),
-        ]);
-    }
-    println!("## DSE top-{top} (by simulated gpp execution cycles, feasible points)");
-    emit(&tk, "dse_topk", args.get("csv-dir"))
+        let defaults = DseFullSpec::default();
+        RunSpec::DseFull(DseFullSpec {
+            cores: axis_u32(args, "cores")?,
+            macros_per_core: axis_u32(args, "macros")?,
+            n_in: axis_u32(args, "n-in")?,
+            bands: axis_u64(args, "bands")?,
+            buffers: axis_u64(args, "buffers")?,
+            tasks: args.get("tasks").map(|v| v.parse().with_context(|| format!("--tasks {v}"))).transpose()?,
+            write_speed: args
+                .get("write-speed")
+                .map(|v| v.parse().with_context(|| format!("--write-speed {v}")))
+                .transpose()?,
+            style: if args.has("unrolled") {
+                CodegenStyle::Unrolled
+            } else {
+                CodegenStyle::Looped
+            },
+            jobs: jobs_flag(args)?,
+            top: top_flag(args)?,
+            fleets: match axis_u64(args, "fleets")? {
+                Some(sizes) => sizes.into_iter().map(|n| n as usize).collect(),
+                None => Vec::new(),
+            },
+            placements: placements_flag(args)?,
+            requests: args.get_u32("requests", defaults.requests)?,
+            seed: args.get_u64("seed", defaults.seed)?,
+            mean_gap: args.get_u64("mean-gap", defaults.mean_gap)?,
+        })
+    } else {
+        RunSpec::Dse(DseSpec {
+            band: args.get_u64("band", 128)?,
+            sim: args.has("sim"),
+            tasks: args.get_u32("tasks", 4096)?,
+            jobs: jobs_flag(args)?,
+            top: top_flag(args)?,
+        })
+    };
+    run_spec(args, &spec)?;
+    Ok(())
 }
 
 fn cmd_adapt(args: &Args) -> Result<()> {
-    let arch = load_arch(args)?;
-    let max_n = args.get_u32("max-n", 64)?;
-    let adapt = RuntimeAdaptation::from_arch(&arch, 128.0);
-    let mut t = CsvTable::new(vec![
-        "n",
-        "perf_insitu(Eq7)",
-        "perf_naive(Eq8)",
-        "perf_gpp(Eq9)",
-        "gpp_macros",
-        "gpp_tp:tr",
-    ]);
-    let mut n = 1u32;
-    while n <= max_n {
-        let p = adapt.point(n as f64);
-        t.push_row(vec![
-            n.to_string(),
-            format!("{:.4}", p.perf_insitu),
-            format!("{:.4}", p.perf_naive),
-            format!("{:.4}", p.perf_gpp),
-            format!("{:.2}", p.gpp_active_macros),
-            format!("{:.2}:1", p.gpp_ratio_tp_tr),
-        ]);
-        n *= 2;
-    }
-    emit(&t, "adapt", args.get("csv-dir"))
+    args.check("adapt", &["config", "max-n", "csv-dir", "bench-json"], 0, Some("adapt"))?;
+    let spec = RunSpec::Adapt(AdaptSpec {
+        max_n: args.get_u32("max-n", 64)?,
+    });
+    run_spec(args, &spec)?;
+    Ok(())
 }
 
 fn cmd_assemble(args: &Args) -> Result<()> {
+    args.check("assemble", &["config", "o"], 1, None)?;
     let input = args
         .positional
         .first()
@@ -844,6 +562,7 @@ fn cmd_assemble(args: &Args) -> Result<()> {
 }
 
 fn cmd_disasm(args: &Args) -> Result<()> {
+    args.check("disasm", &[], 1, None)?;
     let input = args
         .positional
         .first()
@@ -866,8 +585,17 @@ gpp-pim — Generalized Ping-Pong PIM accelerator (paper reproduction)
 
 USAGE: gpp-pim <COMMAND> [flags]
 
+Every experiment command builds a typed RunSpec and runs through the one
+api::Session pipeline; `exec` takes the spec string directly.  Unknown
+flags are rejected with the command's valid flag/spec-key list.
+
 COMMANDS:
   info       show the architecture configuration
+  exec       run a spec string: KIND[:KEY=VALUE...], e.g.
+              exec \"serve:fleet=2xpaper:placement=least-loaded:requests=512\"
+             (kinds: repro|run|simulate|serve|fleet|dse|dse-full|adapt;
+              --csv-dir DIR persists tables, --bench-json FILE records
+              wall time in the BENCH_*.json schema)
   repro      regenerate paper figures/tables  (--exp fig4|fig6|fig7|table2|headline|all,
               --jobs N parallel sweep workers, --vectors N, --csv-dir DIR)
   simulate   run one strategy on an abstract task plan
@@ -893,8 +621,11 @@ COMMANDS:
               axes --cores/--macros/--n-in/--bands/--buffers, --tasks N
               per point, all 3 strategies simulated per point via looped
               codegen + steady-state fast-forward (--unrolled forces the
-              slow faithful lowering; identical results), --csv-dir
-              writes dse_full.csv + dse_topk.csv
+              slow faithful lowering; identical results), Pareto frontier
+              (cycles x macros x buffer) next to top-k, optional fleet
+              axis --fleets 1,2,4 [--placement P|all --requests N],
+              --csv-dir writes dse_full.csv + dse_topk.csv +
+              dse_pareto.csv [+ dse_fleet.csv]
   adapt      runtime bandwidth-adaptation model (--max-n)
   assemble   assemble ISA text to binary machine code
   disasm     disassemble binary machine code
@@ -909,6 +640,7 @@ fn main() {
     let args = Args::parse(&argv[1..]);
     let result = match cmd.as_str() {
         "info" => cmd_info(&args),
+        "exec" => cmd_exec(&args),
         "repro" => cmd_repro(&args),
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),

@@ -9,7 +9,11 @@
 //! full `(cores × macros/core × n_in) × bandwidth × buffer` product and
 //! simulates every buildable point cycle-accurately (`dse --full`),
 //! riding the looped codegen + engine fast-forward so per-point cost no
-//! longer scales with workload size.
+//! longer scales with workload size.  Entry points drive both arms
+//! through [`crate::api`] (`dse:...` / `dse-full:...` specs); the
+//! session layer adds top-k, Pareto-frontier
+//! ([`crate::sweep::pareto_min_by`]) and fleet-axis reporting on top of
+//! the raw [`CartesianPointResult`]s returned here.
 
 use crate::arch::ArchConfig;
 use crate::model::eqs;

@@ -4,7 +4,11 @@
 //! ("theory") with the cycle-accurate simulator ("practice") exactly the
 //! way the paper does.
 //!
-//! Consumed by the `[[bench]]` targets and by `gpp-pim repro --exp <id>`.
+//! Consumed by the `[[bench]]` targets and — through the unified
+//! [`crate::api`] pipeline (`RunSpec::Repro` → `Session`) — by
+//! `gpp-pim repro` / `gpp-pim exec "repro:..."`.  The table *bytes*
+//! built here are the reference-CSV contract: `tests/api_golden.rs`
+//! asserts the API façade reproduces them exactly.
 
 pub mod benchkit;
 pub mod figures;

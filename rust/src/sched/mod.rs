@@ -131,9 +131,10 @@ impl Strategy {
 
     /// Generate the program in the requested [`CodegenStyle`].
     ///
-    /// The looped form exists for `insitu` and `gpp` (their steady state
-    /// is a per-stream/per-core period); `naive` and `intra` fall back to
-    /// the unrolled form, which is timing-identical by definition.
+    /// The looped form exists for `insitu`, `naive` and `gpp` (their
+    /// steady states are per-core/per-stream periods — naive's is the
+    /// 2-phase bank period); `intra` falls back to the unrolled form,
+    /// which is timing-identical by definition.
     pub fn codegen_styled(
         &self,
         arch: &ArchConfig,
@@ -144,7 +145,8 @@ impl Strategy {
         Ok(match (self, style) {
             (Strategy::InSitu, CodegenStyle::Unrolled) => insitu::codegen(arch, plan),
             (Strategy::InSitu, CodegenStyle::Looped) => insitu::codegen_looped(arch, plan),
-            (Strategy::NaivePingPong, _) => naive::codegen(arch, plan),
+            (Strategy::NaivePingPong, CodegenStyle::Unrolled) => naive::codegen(arch, plan),
+            (Strategy::NaivePingPong, CodegenStyle::Looped) => naive::codegen_looped(arch, plan),
             (Strategy::IntraMacroPingPong, _) => intra::codegen(arch, plan),
             (Strategy::GeneralizedPingPong, CodegenStyle::Unrolled) => {
                 generalized::codegen(arch, plan)

@@ -13,20 +13,25 @@ use crate::isa::{Inst, Program};
 /// One task placement: which core/macro executes which task.
 type Assign = (u32, u8, u32); // (core, local macro, task)
 
-/// Split each core's active macros into bank A (first half, rounded up)
-/// and bank B; assemble the global phase table: phase p's assignments are
-/// computed by bank `p % 2` and were written during phase `p-1` (phase 0's
-/// writes form the prologue).
-fn phase_table(arch: &ArchConfig, plan: &SchedulePlan) -> Vec<Vec<Assign>> {
-    // Banks split the *global* slot space in half (slots are core-major,
-    // so bank A is the first half of active macros chip-wide) — the bus
-    // is global, so the bank boundary must be too.
+/// The global slot space, core-major: the bank boundary is chip-wide
+/// (the bus is global, so the bank split must be too), and the slot
+/// index doubles as the representative tile of the looped lowering.
+fn bank_slots(arch: &ArchConfig, plan: &SchedulePlan) -> Vec<(u32, u8)> {
     let mut slots: Vec<(u32, u8)> = Vec::new();
     for core in 0..arch.n_cores {
         for &m in &plan.macros_on_core(arch, core) {
             slots.push((core, m));
         }
     }
+    slots
+}
+
+/// Split each core's active macros into bank A (first half, rounded up)
+/// and bank B; assemble the global phase table: phase p's assignments are
+/// computed by bank `p % 2` and were written during phase `p-1` (phase 0's
+/// writes form the prologue).
+fn phase_table(arch: &ArchConfig, plan: &SchedulePlan) -> Vec<Vec<Assign>> {
+    let slots = bank_slots(arch, plan);
     let half = slots.len().div_ceil(2);
     let bank_a = &slots[..half];
     let bank_b = &slots[half..];
@@ -51,6 +56,39 @@ fn phase_table(arch: &ArchConfig, plan: &SchedulePlan) -> Vec<Vec<Assign>> {
     phases
 }
 
+/// Emit one bank-swap phase: the compute batch, the other bank's
+/// prefetch writes (concurrently — except writes targeting a macro still
+/// computing this phase, the degenerate single-bank case: those go after
+/// waitc), the waits on both banks, and the swap barrier.  `computing`
+/// and `writing` carry `(macro, tile)` pairs — real task tiles in the
+/// unrolled form, representative slot tiles in the rolled loop body.
+fn emit_phase(insts: &mut Vec<Inst>, n_vec: u16, computing: &[(u8, u32)], writing: &[(u8, u32)]) {
+    let computing_macros: Vec<u8> = computing.iter().map(|&(m, _)| m).collect();
+    for &(m, tile) in computing {
+        insts.push(Inst::LdIn { n_vec });
+        insts.push(Inst::Vmm { m, n_vec, tile });
+    }
+    for &(m, tile) in writing {
+        if !computing_macros.contains(&m) {
+            insts.push(Inst::Wrw { m, tile });
+        }
+    }
+    // The swap happens when BOTH banks are done.
+    for &(m, _) in computing {
+        insts.push(Inst::WaitC { m });
+        insts.push(Inst::StOut { n_vec });
+    }
+    for &(m, tile) in writing {
+        if computing_macros.contains(&m) {
+            insts.push(Inst::Wrw { m, tile });
+        }
+    }
+    for &(m, _) in writing {
+        insts.push(Inst::WaitW { m });
+    }
+    insts.push(Inst::Barrier);
+}
+
 /// Generate the naive ping-pong program: one stream per core, barriers at
 /// every bank swap.
 pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
@@ -66,7 +104,7 @@ pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
             phase
                 .iter()
                 .filter(|(c, _, _)| *c == core)
-                .map(|&(_, m, t)| (m, t))
+                .map(|&(_, m, t)| (m, tile_id(t)))
                 .collect()
         };
 
@@ -76,8 +114,8 @@ pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
 
         // Prologue: load phase 0's tiles into bank A.
         if let Some(first) = phases.first() {
-            for (m, t) in mine(first) {
-                insts.push(Inst::Wrw { m, tile: tile_id(t) });
+            for (m, tile) in mine(first) {
+                insts.push(Inst::Wrw { m, tile });
             }
             for (m, _) in mine(first) {
                 insts.push(Inst::WaitW { m });
@@ -88,38 +126,7 @@ pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
         for p in 0..phases.len() {
             let computing = mine(&phases[p]);
             let writing: Vec<(u8, u32)> = phases.get(p + 1).map(|ph| mine(ph)).unwrap_or_default();
-            let computing_macros: Vec<u8> = computing.iter().map(|&(m, _)| m).collect();
-            // Issue the compute batch...
-            for &(m, t) in &computing {
-                insts.push(Inst::LdIn { n_vec });
-                insts.push(Inst::Vmm {
-                    m,
-                    n_vec,
-                    tile: tile_id(t),
-                });
-            }
-            // ...and the other bank's prefetch writes, concurrently —
-            // except writes that target a macro still computing this
-            // phase (degenerate single-bank case): those go after waitc.
-            for &(m, t) in &writing {
-                if !computing_macros.contains(&m) {
-                    insts.push(Inst::Wrw { m, tile: tile_id(t) });
-                }
-            }
-            // The swap happens when BOTH banks are done.
-            for &(m, _) in &computing {
-                insts.push(Inst::WaitC { m });
-                insts.push(Inst::StOut { n_vec });
-            }
-            for &(m, t) in &writing {
-                if computing_macros.contains(&m) {
-                    insts.push(Inst::Wrw { m, tile: tile_id(t) });
-                }
-            }
-            for &(m, _) in &writing {
-                insts.push(Inst::WaitW { m });
-            }
-            insts.push(Inst::Barrier);
+            emit_phase(&mut insts, n_vec, &computing, &writing);
         }
         insts.push(Inst::Halt);
         program.add_stream(core, insts);
@@ -127,6 +134,114 @@ pub fn codegen(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
 
     // Barrier symmetry: every emitted stream has 1 + phases.len()
     // barriers by construction.
+    program
+}
+
+/// The looped form of [`codegen`]: the steady 2-phase bank period (bank A
+/// computes while bank B prefetches, then the roles swap) is rolled into
+/// one `Inst::Loop` per core stream with representative slot tiles, the
+/// ragged tail phases stay unrolled.  A pair of phases is rollable only
+/// while every phase it touches — including the *write target* of its
+/// second half — is full (all bank slots assigned), so the loop body is
+/// structurally identical across iterations.  Timing-identical to the
+/// unrolled form at `issue_cost == 0` (tile ids never influence timing);
+/// see [`crate::sched::CodegenStyle::Looped`].
+pub fn codegen_looped(arch: &ArchConfig, plan: &SchedulePlan) -> Program {
+    let phases = phase_table(arch, plan);
+    let slots = bank_slots(arch, plan);
+    let half = slots.len().div_ceil(2);
+    let bank_b_empty = slots.len() <= half;
+    // Phase p is full when every slot of its bank got a task.
+    let full = |p: usize| -> bool {
+        phases.get(p).is_some_and(|ph| {
+            let expected = if bank_b_empty || p % 2 == 0 {
+                half
+            } else {
+                slots.len() - half
+            };
+            ph.len() == expected
+        })
+    };
+    // Pair k covers phases 2k (computes A, prefetches B) and 2k+1
+    // (computes B, prefetches A = phases[2k+2]); all three must be full.
+    let mut pairs = 0usize;
+    while full(2 * pairs) && full(2 * pairs + 1) && full(2 * pairs + 2) {
+        pairs += 1;
+    }
+    let use_loop = pairs >= 2;
+    let mut program = Program::new(arch.n_cores);
+    let n_vec = plan.n_in as u16;
+
+    for core in 0..arch.n_cores {
+        if plan.macros_on_core(arch, core).is_empty() {
+            continue;
+        }
+        let mine = |phase: &[Assign]| -> Vec<(u8, u32)> {
+            phase
+                .iter()
+                .filter(|(c, _, _)| *c == core)
+                .map(|&(_, m, t)| (m, tile_id(t)))
+                .collect()
+        };
+        // Representative tile of a macro: its global slot index — fixed
+        // across iterations, so written and computed tiles stay
+        // consistent through the rolled loop.
+        let rep = |phase: &[Assign]| -> Vec<(u8, u32)> {
+            phase
+                .iter()
+                .filter(|(c, _, _)| *c == core)
+                .map(|&(cc, m, _)| {
+                    let slot = slots
+                        .iter()
+                        .position(|&(c2, m2)| c2 == cc && m2 == m)
+                        .expect("assigned macro is an active slot");
+                    (m, tile_id(slot as u32))
+                })
+                .collect()
+        };
+
+        let mut insts = vec![Inst::SetSpd {
+            speed: plan.write_speed as u16,
+        }];
+
+        // Prologue: load phase 0's tiles into bank A — representative
+        // tiles when phase 0 is computed inside the loop.
+        if let Some(first) = phases.first() {
+            let tiles = if use_loop { rep(first) } else { mine(first) };
+            for &(m, tile) in &tiles {
+                insts.push(Inst::Wrw { m, tile });
+            }
+            for &(m, _) in &tiles {
+                insts.push(Inst::WaitW { m });
+            }
+        }
+        insts.push(Inst::Barrier);
+
+        let tail_start = if use_loop {
+            insts.push(Inst::Loop {
+                count: pairs as u32,
+            });
+            emit_phase(&mut insts, n_vec, &rep(&phases[0]), &rep(&phases[1]));
+            emit_phase(&mut insts, n_vec, &rep(&phases[1]), &rep(&phases[2]));
+            insts.push(Inst::EndLoop);
+            2 * pairs
+        } else {
+            0
+        };
+        for p in tail_start..phases.len() {
+            // The first tail phase computes the tiles the last loop
+            // iteration prefetched — representative ones.
+            let computing = if use_loop && p == tail_start {
+                rep(&phases[p])
+            } else {
+                mine(&phases[p])
+            };
+            let writing: Vec<(u8, u32)> = phases.get(p + 1).map(|ph| mine(ph)).unwrap_or_default();
+            emit_phase(&mut insts, n_vec, &computing, &writing);
+        }
+        insts.push(Inst::Halt);
+        program.add_stream(core, insts);
+    }
     program
 }
 
@@ -233,5 +348,62 @@ mod tests {
         let r = simulate(&a, &p, SimOptions::default()).unwrap();
         assert_eq!(r.stats.vmms_completed, 300);
         assert_eq!(r.stats.writes_completed, 300);
+    }
+
+    #[test]
+    fn looped_codegen_is_stat_identical_to_unrolled() {
+        let mut a = arch();
+        a.core_buffer_bytes = 1 << 20;
+        for (tasks, active, n_in, band, s) in [
+            (64u32, 8u32, 4u32, 1024u64, 8u32), // balanced, even banks
+            (50, 7, 12, 16, 8),                 // odd banks, ragged tail, narrow bus
+            (37, 5, 4, 64, 1),                  // write-heavy
+            (9, 4, 2, 8, 8),                    // too short to roll: stays unrolled
+            (3, 1, 4, 512, 8),                  // degenerate single bank
+            (8, 2, 4, 1024, 8),                 // exact multiple: empty final writes
+        ] {
+            a.bandwidth = band;
+            let plan = SchedulePlan {
+                tasks,
+                active_macros: active,
+                n_in,
+                write_speed: s,
+            };
+            let unrolled = simulate(&a, &codegen(&a, &plan), SimOptions::default()).unwrap();
+            let looped = simulate(&a, &codegen_looped(&a, &plan), SimOptions::default()).unwrap();
+            assert_eq!(
+                unrolled.stats, looped.stats,
+                "tasks={tasks} active={active} n_in={n_in} band={band} s={s}"
+            );
+            codegen_looped(&a, &plan).validate(a.macros_per_core).unwrap();
+        }
+    }
+
+    #[test]
+    fn looped_codegen_rolls_the_two_phase_period() {
+        let a = arch();
+        let plan = SchedulePlan::full_chip(&a, 1024);
+        let p = codegen_looped(&a, &plan);
+        p.validate(a.macros_per_core).unwrap();
+        let loops = p
+            .streams
+            .iter()
+            .flat_map(|s| &s.insts)
+            .filter(|i| matches!(i, Inst::Loop { .. }))
+            .count();
+        // One rolled 2-phase loop per core stream.
+        assert_eq!(loops, a.n_cores as usize);
+        // 1024 tasks on 256 macros = 8 phases of 128 tasks: 3 full
+        // rollable pairs (the last pair's second phase prefetches
+        // nothing, so it stays unrolled).
+        for s in &p.streams {
+            if let Some(Inst::Loop { count }) = s
+                .insts
+                .iter()
+                .find(|i| matches!(i, Inst::Loop { .. }))
+            {
+                assert_eq!(*count, 3);
+            }
+        }
     }
 }

@@ -40,6 +40,13 @@
 //! CSVs vary with `--fleet`/`--placement` *by design* and stay
 //! byte-identical across `--jobs`.  Verified by
 //! `tests/serve_determinism.rs` and `tests/fleet_determinism.rs`.
+//!
+//! Entry points reach this layer through [`crate::api`]: a
+//! `serve:...`/`fleet:...` [`RunSpec`](crate::api::RunSpec) lowers onto
+//! [`ServeEngine`]/[`run_fleet_axis`] inside an
+//! [`api::Session`](crate::api::Session), which streams these reports'
+//! tables — byte-identical — into the declared
+//! [`ReportSink`](crate::api::ReportSink)s.
 
 pub mod batcher;
 pub mod engine;

@@ -216,6 +216,25 @@ pub fn top_k_by(n: usize, k: usize, key: impl Fn(usize) -> f64) -> Vec<usize> {
     idx
 }
 
+/// Indices of the Pareto-minimal points under multi-objective
+/// minimization: point `i` survives unless some point has `key` ≤ on
+/// every objective and < on at least one.  Points with identical
+/// objective vectors all survive (neither dominates the other).  The
+/// frontier comes back sorted by objective tuple with a final tie-break
+/// by input index — a deterministic order for CSV reporting
+/// (`dse_pareto.csv`).
+pub fn pareto_min_by(n: usize, key: impl Fn(usize) -> Vec<u64>) -> Vec<usize> {
+    let objs: Vec<Vec<u64>> = (0..n).map(&key).collect();
+    let dominates = |a: &[u64], b: &[u64]| {
+        a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+    };
+    let mut front: Vec<usize> = (0..n)
+        .filter(|&i| !objs.iter().any(|o| dominates(o, &objs[i])))
+        .collect();
+    front.sort_by(|&a, &b| objs[a].cmp(&objs[b]).then(a.cmp(&b)));
+    front
+}
+
 /// An ordered batch of design points.  Order is significant: results come
 /// back in exactly this order regardless of execution parallelism.
 ///
@@ -357,6 +376,20 @@ mod tests {
         );
         assert!(top_k_by(0, 3, |_| 0.0).is_empty());
         assert!(top_k_by(5, 0, |i| cycles[i]).is_empty());
+    }
+
+    #[test]
+    fn pareto_front_is_minimal_and_deterministic() {
+        // (cycles, macros): 2 and 4 are dominated; 0, 1, 3 trade off.
+        let pts = [(10u64, 5u64), (8, 7), (12, 6), (6, 9), (9, 8)];
+        let front = pareto_min_by(pts.len(), |i| vec![pts[i].0, pts[i].1]);
+        assert_eq!(front, vec![3, 1, 0], "sorted by objective tuple");
+        // Duplicates both survive, in index order.
+        let dup = [(4u64, 4u64), (4, 4), (5, 5)];
+        assert_eq!(pareto_min_by(dup.len(), |i| vec![dup[i].0, dup[i].1]), vec![0, 1]);
+        // Single objective degenerates to the minimum (all ties kept).
+        assert_eq!(pareto_min_by(3, |i| vec![[3u64, 1, 2][i]]), vec![1]);
+        assert!(pareto_min_by(0, |_| vec![]).is_empty());
     }
 
     #[test]

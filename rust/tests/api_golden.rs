@@ -1,0 +1,276 @@
+//! Golden byte-identity: the `api::Session` pipeline must produce the
+//! same CSV bytes as the pre-API entry points.  The "old path" here is
+//! either the underlying machinery driven directly (figures, serve
+//! engine) or a verbatim replica of the table-building loops the CLI
+//! subcommands used to inline — so a façade regression cannot hide
+//! behind a shared helper.
+
+use gpp_pim::api::{MemorySink, RunSpec, Session, SinkSet};
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::fleet::{FleetConfig, PlacementPolicy};
+use gpp_pim::model::dse::{CartesianSpace, DesignSpace};
+use gpp_pim::report::figures as figs;
+use gpp_pim::sched::CodegenStyle;
+use gpp_pim::serve::{run_fleet_axis, synthetic_traffic, ServeEngine, TrafficConfig};
+use gpp_pim::sweep::{top_k_by, FleetAxis, SweepRunner};
+use gpp_pim::util::csv::CsvTable;
+
+fn capture(spec: &str) -> MemorySink {
+    let session = Session::with_jobs(ArchConfig::paper_default(), 2);
+    let mut mem = MemorySink::new();
+    session
+        .run(
+            &RunSpec::parse(spec).unwrap(),
+            &mut SinkSet::new().with(&mut mem),
+        )
+        .unwrap();
+    mem
+}
+
+#[test]
+fn repro_fig4_matches_direct_figures_path() {
+    let mem = capture("repro:exp=fig4");
+    let runner = SweepRunner::new(2);
+    let expected = figs::fig4_table(&figs::fig4_with(&runner).unwrap()).to_csv();
+    assert_eq!(mem.csv("fig4").unwrap(), expected);
+}
+
+#[test]
+fn repro_headline_matches_direct_figures_path() {
+    let mem = capture("repro:exp=headline:vectors=2048");
+    let runner = SweepRunner::new(2);
+    let expected = figs::headline_table(&figs::headline_with(&runner, 2048).unwrap()).to_csv();
+    assert_eq!(mem.csv("headline").unwrap(), expected);
+}
+
+#[test]
+fn serve_heterogeneous_fleet_matches_direct_engine_path() {
+    let mem = capture(
+        "serve:requests=48:seed=7:gap=1024:placement=affinity:fleet=1xpaper,1xpaper:band=256",
+    );
+    let arch = ArchConfig::paper_default();
+    let fleet = FleetConfig::parse("1xpaper,1xpaper:band=256", &arch).unwrap();
+    let engine = ServeEngine::with_fleet(fleet, PlacementPolicy::ClassAffinity, 2);
+    let requests = synthetic_traffic(
+        engine.arch(),
+        &TrafficConfig {
+            requests: 48,
+            seed: 7,
+            mean_gap_cycles: 1024,
+        },
+    );
+    let report = engine.run(&requests).unwrap();
+    assert_eq!(mem.csv("serve").unwrap(), report.to_table().to_csv());
+    assert_eq!(mem.csv("serve_summary").unwrap(), report.summary_table().to_csv());
+    assert_eq!(mem.csv("fleet").unwrap(), report.fleet.to_table().to_csv());
+    assert_eq!(
+        mem.csv("fleet_requests").unwrap(),
+        report.fleet.requests_table().to_csv()
+    );
+}
+
+#[test]
+fn dse_model_table_matches_pre_api_bytes() {
+    let mem = capture("dse:top=3");
+    // Verbatim replica of the pre-API `cmd_dse` model-path table code.
+    let mut arch = ArchConfig::paper_default();
+    arch.bandwidth = 128;
+    let mut space = DesignSpace::fig6(&arch);
+    space.bandwidth = arch.bandwidth as f64;
+    let pts = space.sweep_fig6();
+    let mut t = CsvTable::new(vec![
+        "tr:tp",
+        "n_in",
+        "macros_insitu",
+        "macros_naive",
+        "macros_gpp",
+        "eff_insitu",
+        "eff_naive",
+        "eff_gpp",
+        "peak_bw_gpp",
+    ]);
+    for p in &pts {
+        t.push_row(vec![
+            format!("{:.3}", p.ratio_tr_over_tp),
+            format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
+            format!("{:.1}", p.insitu.num_macros),
+            format!("{:.1}", p.naive.num_macros),
+            format!("{:.1}", p.gpp.num_macros),
+            format!("{:.1}", p.insitu.effective_macros),
+            format!("{:.1}", p.naive.effective_macros),
+            format!("{:.1}", p.gpp.effective_macros),
+            format!("{:.1}", p.gpp.peak_bandwidth),
+        ]);
+    }
+    assert_eq!(mem.csv("dse").unwrap(), t.to_csv());
+    let k = top_k_by(pts.len(), 3, |i| pts[i].gpp.exec_cycles);
+    let mut tk = CsvTable::new(vec![
+        "rank", "index", "tr:tp", "n_in", "macros_gpp", "exec_cycles_gpp",
+    ]);
+    for (rank, &i) in k.iter().enumerate() {
+        let p = &pts[i];
+        tk.push_row(vec![
+            (rank + 1).to_string(),
+            i.to_string(),
+            format!("{:.3}", p.ratio_tr_over_tp),
+            format!("{:.1}", space.n_in_for_ratio(p.ratio_tr_over_tp)),
+            format!("{:.1}", p.gpp.num_macros),
+            format!("{:.1}", p.gpp.exec_cycles),
+        ]);
+    }
+    assert_eq!(mem.csv("dse_topk").unwrap(), tk.to_csv());
+}
+
+#[test]
+fn dse_full_tables_match_pre_api_bytes() {
+    let mem = capture(
+        "dse-full:cores=2,4:macros=2,4:nin=2,16:bands=16,64:buffers=4096,65536:tasks=64:top=5",
+    );
+    // Verbatim replica of the pre-API `cmd_dse_full` table code (same
+    // axes; the 4 KiB x n_in=16 corner is infeasible by design, so the
+    // empty-cell formatting is exercised too).
+    let arch = ArchConfig::paper_default();
+    let space = CartesianSpace {
+        cores: vec![2, 4],
+        macros_per_core: vec![2, 4],
+        n_in: vec![2, 16],
+        bandwidths: vec![16, 64],
+        buffers: vec![4096, 65536],
+        tasks: 64,
+        write_speed: arch.write_speed,
+    };
+    let runner = SweepRunner::new(2);
+    let pts = space.sweep(&arch, &runner, CodegenStyle::Looped).unwrap();
+    assert!(pts.iter().any(|p| !p.feasible()), "corner must be infeasible");
+    let mut t = CsvTable::new(vec![
+        "cores",
+        "macros_per_core",
+        "n_in",
+        "band",
+        "buffer",
+        "feasible",
+        "cycles_insitu",
+        "cycles_naive",
+        "cycles_gpp",
+        "gpp/insitu",
+    ]);
+    let cell = |c: Option<u64>| c.map(|v| v.to_string()).unwrap_or_default();
+    for p in &pts {
+        let ratio = match (p.cycles[0], p.cycles[2]) {
+            (Some(i), Some(g)) if g > 0 => format!("{:.2}", i as f64 / g as f64),
+            _ => String::new(),
+        };
+        t.push_row(vec![
+            p.cores.to_string(),
+            p.macros_per_core.to_string(),
+            p.n_in.to_string(),
+            p.bandwidth.to_string(),
+            p.buffer_bytes.to_string(),
+            p.feasible().to_string(),
+            cell(p.cycles[0]),
+            cell(p.cycles[1]),
+            cell(p.cycles[2]),
+            ratio,
+        ]);
+    }
+    assert_eq!(mem.csv("dse_full").unwrap(), t.to_csv());
+
+    let feasible_idx: Vec<usize> = pts
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.feasible())
+        .map(|(i, _)| i)
+        .collect();
+    let k = top_k_by(feasible_idx.len(), 5, |j| {
+        pts[feasible_idx[j]].cycles[2].unwrap() as f64
+    });
+    let mut tk = CsvTable::new(vec![
+        "rank",
+        "index",
+        "cores",
+        "macros_per_core",
+        "n_in",
+        "band",
+        "buffer",
+        "cycles_gpp",
+        "gpp/insitu",
+    ]);
+    for (rank, &j) in k.iter().enumerate() {
+        let i = feasible_idx[j];
+        let p = &pts[i];
+        tk.push_row(vec![
+            (rank + 1).to_string(),
+            i.to_string(),
+            p.cores.to_string(),
+            p.macros_per_core.to_string(),
+            p.n_in.to_string(),
+            p.bandwidth.to_string(),
+            p.buffer_bytes.to_string(),
+            p.cycles[2].unwrap().to_string(),
+            format!("{:.2}", p.cycles[0].unwrap() as f64 / p.cycles[2].unwrap() as f64),
+        ]);
+    }
+    assert_eq!(mem.csv("dse_topk").unwrap(), tk.to_csv());
+
+    // The Pareto table only contains feasible, non-dominated points and
+    // every one of them also appears in dse_full.
+    let pareto = mem.csv("dse_pareto").unwrap();
+    assert!(pareto.lines().count() > 1);
+    for line in pareto.lines().skip(1) {
+        let idx: usize = line.split(',').next().unwrap().parse().unwrap();
+        assert!(feasible_idx.contains(&idx), "pareto row {idx} not feasible");
+    }
+}
+
+#[test]
+fn fleet_axis_table_matches_pre_api_bytes() {
+    let mem = capture("fleet:requests=24:seed=7:gap=1024:sizes=1,2:placement=all");
+    // Verbatim replica of the pre-API `cmd_fleet` table code.
+    let arch = ArchConfig::paper_default();
+    let requests = synthetic_traffic(
+        &arch,
+        &TrafficConfig {
+            requests: 24,
+            seed: 7,
+            mean_gap_cycles: 1024,
+        },
+    );
+    let fleets: Vec<FleetConfig> = [1usize, 2]
+        .iter()
+        .map(|&n| FleetConfig::homogeneous(arch.clone(), n))
+        .collect();
+    let axis = FleetAxis::new(fleets, PlacementPolicy::ALL.to_vec());
+    let rows = run_fleet_axis(&axis, &requests, 2).unwrap();
+    let mut t = CsvTable::new(vec![
+        "fleet",
+        "chips",
+        "policy",
+        "p50_latency",
+        "p95_latency",
+        "p99_latency",
+        "mean_latency",
+        "makespan",
+        "speedup",
+        "max_utilization",
+    ]);
+    for (point, report) in &rows {
+        let f = &report.fleet;
+        let pcts = f.latency_percentiles(&[50.0, 95.0, 99.0]);
+        let max_util = (0..f.chips())
+            .map(|c| f.utilization(c))
+            .fold(0.0f64, f64::max);
+        t.push_row(vec![
+            point.fleet.describe(),
+            point.fleet.len().to_string(),
+            point.policy.name().to_string(),
+            pcts[0].to_string(),
+            pcts[1].to_string(),
+            pcts[2].to_string(),
+            f.mean_latency().to_string(),
+            f.makespan.to_string(),
+            format!("{:.2}", report.fleet_speedup()),
+            format!("{max_util:.4}"),
+        ]);
+    }
+    assert_eq!(mem.csv("fleet_axis").unwrap(), t.to_csv());
+}

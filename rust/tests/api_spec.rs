@@ -1,0 +1,171 @@
+//! `RunSpec` grammar contract: every spec string's `Display` output
+//! re-parses to an equal value (the `exec` acceptance criterion), and
+//! malformed specs are rejected with messages naming the valid keys.
+
+use gpp_pim::api::{RunSpec, SpecError, VALID_KINDS};
+use gpp_pim::fleet::PlacementPolicy;
+use gpp_pim::sched::{CodegenStyle, Strategy};
+
+/// Parse → Display → parse must be the identity on the parsed value,
+/// and Display must be a fixed point (canonical form).
+fn roundtrip(spec: &str) -> RunSpec {
+    let parsed = RunSpec::parse(spec).unwrap_or_else(|e| panic!("'{spec}' rejected: {e}"));
+    let printed = parsed.to_string();
+    let reparsed = RunSpec::parse(&printed)
+        .unwrap_or_else(|e| panic!("display '{printed}' of '{spec}' rejected: {e}"));
+    assert_eq!(parsed, reparsed, "'{spec}' -> '{printed}' changed meaning");
+    assert_eq!(
+        reparsed.to_string(),
+        printed,
+        "display of '{spec}' is not canonical"
+    );
+    parsed
+}
+
+#[test]
+fn every_kind_roundtrips_with_typical_keys() {
+    for spec in [
+        "repro",
+        "repro:exp=fig7:vectors=2048:jobs=4",
+        "run",
+        "run:workload=mlp:strategy=insitu:numerics=true",
+        "run:trace=traces/a.txt:artifacts=out",
+        "simulate",
+        "simulate:strategy=naive:tasks=512:macros=16:nin=8:band=64:s=4:oplog=true",
+        "serve",
+        "serve:requests=512:seed=3:gap=4096:jobs=8:placement=affinity:chips=4",
+        "serve:fleet=2xpaper,1xpaper:band=256",
+        "serve:fleet=2xpaper:placement=least-loaded:requests=512",
+        "fleet",
+        "fleet:sizes=2,4:placement=rr,least-loaded:requests=64",
+        "fleet:fleet=1xpaper,1xfig4",
+        "dse",
+        "dse:band=256:top=5",
+        "dse:sim=true:tasks=512:jobs=2:top=3",
+        "dse-full",
+        "dse-full:cores=2,4:macros=2,4:nin=2,4:bands=32,64:buffers=65536:tasks=512:top=5",
+        "dse-full:style=unrolled:s=4",
+        "dse-full:fleets=1,2,4:placement=all:requests=64:seed=9:gap=512",
+        "adapt",
+        "adapt:maxn=128",
+    ] {
+        roundtrip(spec);
+    }
+}
+
+#[test]
+fn issue_example_is_the_canonical_form() {
+    let spec = roundtrip("serve:fleet=2xpaper:placement=least-loaded:requests=512");
+    // Canonical order: requests before placement before fleet.
+    assert_eq!(
+        spec.to_string(),
+        "serve:requests=512:placement=least-loaded:fleet=2xpaper"
+    );
+}
+
+#[test]
+fn typed_construction_displays_and_reparses() {
+    // The embedder direction: build typed, print, parse back.
+    let RunSpec::DseFull(mut full) = RunSpec::parse("dse-full").unwrap() else {
+        panic!()
+    };
+    full.cores = Some(vec![2, 8]);
+    full.style = CodegenStyle::Unrolled;
+    full.fleets = vec![1, 2];
+    full.placements = vec![PlacementPolicy::ClassAffinity];
+    let spec = RunSpec::DseFull(full);
+    let reparsed = RunSpec::parse(&spec.to_string()).unwrap();
+    assert_eq!(spec, reparsed);
+
+    let RunSpec::Simulate(mut sim) = RunSpec::parse("simulate").unwrap() else {
+        panic!()
+    };
+    sim.strategy = Strategy::IntraMacroPingPong;
+    sim.n_in = Some(2);
+    let spec = RunSpec::Simulate(sim);
+    assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+}
+
+#[test]
+fn ignored_fields_never_render_an_unparsable_spec() {
+    // A typed-constructed serve spec may carry chips next to a set
+    // fleet (fleet wins; the parser rejects the pair as a typo guard).
+    // Display must drop the ignored field so its output re-parses
+    // cleanly to the same effective experiment.
+    let RunSpec::Serve(mut serve) = RunSpec::parse("serve").unwrap() else {
+        panic!()
+    };
+    serve.chips = 4;
+    serve.fleet = Some("2xpaper".into());
+    let printed = RunSpec::Serve(serve).to_string();
+    assert_eq!(printed, "serve:fleet=2xpaper");
+    let RunSpec::Serve(reparsed) = RunSpec::parse(&printed).unwrap() else {
+        panic!()
+    };
+    assert_eq!(reparsed.fleet.as_deref(), Some("2xpaper"));
+
+    // Same for fleet-sweep sizes vs an explicit fleet.
+    let RunSpec::FleetSweep(mut fs) = RunSpec::parse("fleet").unwrap() else {
+        panic!()
+    };
+    fs.sizes = vec![8];
+    fs.fleet = Some("1xfig4".into());
+    let printed = RunSpec::FleetSweep(fs).to_string();
+    assert_eq!(printed, "fleet:fleet=1xfig4");
+    assert!(RunSpec::parse(&printed).is_ok());
+}
+
+#[test]
+fn kind_names_are_stable() {
+    for kind in VALID_KINDS {
+        assert_eq!(RunSpec::parse(kind).unwrap().kind(), kind);
+        assert!(
+            !RunSpec::valid_keys(kind).is_empty(),
+            "kind '{kind}' lists no keys"
+        );
+    }
+}
+
+#[test]
+fn rejections_name_the_valid_keys() {
+    // A typo'd key must be rejected — and the error must teach the
+    // valid key set (the CLI-hardening contract).
+    let err = RunSpec::parse("serve:reqests=512").unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("reqests"), "{msg}");
+    assert!(msg.contains("requests, seed, gap, jobs, placement, chips, fleet"), "{msg}");
+
+    let err = RunSpec::parse("bogus:x=1").unwrap_err();
+    assert!(err.to_string().contains("repro, run, simulate"), "{err}");
+
+    assert_eq!(RunSpec::parse(""), Err(SpecError::Empty));
+}
+
+#[test]
+fn degenerate_values_are_rejected() {
+    for bad in [
+        "serve:jobs=0",
+        "serve:chips=0",
+        "serve:requests=x",
+        "serve:placement=nope",
+        "serve:fleet=0xpaper",
+        "serve:chips=2:fleet=2xpaper",
+        "fleet:sizes=1,0",
+        "fleet:sizes=2:fleet=2xpaper",
+        "dse:top=0",
+        "dse:sim=maybe",
+        "dse-full:cores=0,2",
+        "dse-full:bands=",
+        "dse-full:tasks=0",
+        "dse-full:style=fast",
+        "simulate:strategy=warp",
+        "simulate:oplog=2",
+        "run:workload=doom",
+        "repro:exp=fig99",
+        "repro:vectors=-1",
+        "adapt:maxn=x",
+        "serve:requests",
+    ] {
+        assert!(RunSpec::parse(bad).is_err(), "accepted '{bad}'");
+    }
+}

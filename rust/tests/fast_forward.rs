@@ -170,7 +170,7 @@ fn op_log_mode_is_equivalent_and_never_skips() {
 }
 
 #[test]
-fn looped_codegen_matches_unrolled_for_gpp_and_insitu() {
+fn looped_codegen_matches_unrolled_for_all_strategies() {
     let mut arch = ArchConfig::paper_default();
     arch.core_buffer_bytes = 1 << 22;
     for (tasks, active, n_in, band) in [
@@ -185,7 +185,7 @@ fn looped_codegen_matches_unrolled_for_gpp_and_insitu() {
             n_in,
             write_speed: 8,
         };
-        for strategy in [Strategy::GeneralizedPingPong, Strategy::InSitu] {
+        for strategy in Strategy::ALL {
             let unrolled = strategy
                 .codegen_styled(&arch, &plan, CodegenStyle::Unrolled)
                 .unwrap();
@@ -228,6 +228,34 @@ fn fast_forward_engages_on_full_chip_looped_gpp() {
     assert!(
         fast.fast_forward.periods > 0,
         "expected skipped periods on 32 iterations/stream: {:?}",
+        fast.fast_forward
+    );
+    assert!(fast.fast_forward.cycles < fast.stats.cycles);
+}
+
+#[test]
+fn fast_forward_engages_on_full_chip_looped_naive() {
+    // The naive looped lowering rolls the 2-phase bank period; on an
+    // uncontended bus the steady state recurs after a few pairs, so the
+    // detector must skip most of the 8192-task run.
+    let mut arch = ArchConfig::paper_default();
+    arch.core_buffer_bytes = 1 << 22;
+    arch.bandwidth = 4096;
+    let plan = SchedulePlan {
+        tasks: 8192,
+        active_macros: 256,
+        n_in: 4,
+        write_speed: 8,
+    };
+    let program = Strategy::NaivePingPong
+        .codegen_styled(&arch, &plan, CodegenStyle::Looped)
+        .unwrap();
+    let fast = simulate(&arch, &program, SimOptions::default()).unwrap();
+    let slow_run = simulate(&arch, &program, slow()).unwrap();
+    assert_eq!(fast.stats, slow_run.stats);
+    assert!(
+        fast.fast_forward.periods > 0,
+        "expected skipped bank periods: {:?}",
         fast.fast_forward
     );
     assert!(fast.fast_forward.cycles < fast.stats.cycles);

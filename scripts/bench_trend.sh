@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
 # Informational BENCH_*.json trend diff (ROADMAP "perf tracking" item):
 # compares bench records in the working tree (or explicit files, e.g. a
-# bench-smoke job's fresh output) against the same paths at a base git
-# ref, printing per-record median_secs / macro_cycles_per_s deltas.
+# bench-smoke job's fresh output) against a baseline, printing
+# per-record median_secs / macro_cycles_per_s deltas.
+#
+# Two baseline modes:
+#   - git ref (default): the same paths at a base commit — tracks the
+#     *committed* trend.
+#   - --baseline-dir DIR: files of the same basename in DIR — tracks
+#     *real prior-run* numbers (CI persists each bench-smoke's output via
+#     actions/cache keyed by ref, so the next run diffs against actual
+#     hardware measurements, not just committed files).
 #
 # Deliberately never fails the build: a missing base ref (shallow
 # clone), missing baseline files and added/removed records are all
@@ -10,20 +18,36 @@
 # live in the benches themselves and in check_bench_schema.sh.
 #
 # Usage:
-#   scripts/bench_trend.sh                  # committed BENCH_*.json vs HEAD~1
-#   scripts/bench_trend.sh BASE_REF         # ... vs an explicit base ref
-#   scripts/bench_trend.sh BASE_REF FILE... # explicit files vs base ref
+#   scripts/bench_trend.sh                         # committed BENCH_*.json vs HEAD~1
+#   scripts/bench_trend.sh BASE_REF                # ... vs an explicit base ref
+#   scripts/bench_trend.sh BASE_REF FILE...        # explicit files vs base ref
+#   scripts/bench_trend.sh --baseline-dir DIR FILE...  # explicit files vs cached dir
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+mode=git
 base="HEAD~1"
-if [ "$#" -gt 0 ]; then
+baseline_dir=""
+if [ "${1:-}" = "--baseline-dir" ]; then
+  if [ "$#" -lt 2 ]; then
+    echo "bench_trend: --baseline-dir needs a directory" >&2
+    exit 2
+  fi
+  mode=dir
+  baseline_dir="$2"
+  shift 2
+elif [ "$#" -gt 0 ]; then
   base="$1"
   shift
 fi
 
-if ! git rev-parse -q --verify "${base}^{commit}" >/dev/null 2>&1; then
+if [ "$mode" = git ] && ! git rev-parse -q --verify "${base}^{commit}" >/dev/null 2>&1; then
   echo "bench_trend: base ref '${base}' not available (shallow clone?) — skipping (ok)"
+  exit 0
+fi
+
+if [ "$mode" = dir ] && [ ! -d "$baseline_dir" ]; then
+  echo "bench_trend: baseline dir '${baseline_dir}' absent (first run?) — skipping (ok)"
   exit 0
 fi
 
@@ -38,36 +62,50 @@ if [ "${#files[@]}" -eq 0 ]; then
   exit 0
 fi
 
-python3 - "$base" "${files[@]}" <<'EOF'
+python3 - "$mode" "${baseline_dir:-$base}" "${files[@]}" <<'EOF'
 import json
+import os
 import subprocess
 import sys
 
-base = sys.argv[1]
+mode, base = sys.argv[1], sys.argv[2]
 
 def fmt_rate(v):
     return f"{v:.3g}" if isinstance(v, (int, float)) else "null"
 
-for path in sys.argv[2:]:
+def baseline_text(path):
+    """Baseline JSON text for `path`, or (None, note)."""
+    if mode == "dir":
+        candidate = os.path.join(base, os.path.basename(path))
+        if not os.path.exists(candidate):
+            return None, f"no baseline file {candidate} (first run?)"
+        with open(candidate) as f:
+            return f.read(), None
+    proc = subprocess.run(
+        ["git", "show", f"{base}:{path}"], capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        return None, f"no baseline at {base} (new file)"
+    return proc.stdout, None
+
+for path in sys.argv[3:]:
     try:
         with open(path) as f:
             new = {r["name"]: r for r in json.load(f)}
     except Exception as e:  # noqa: BLE001 - informational tool
         print(f"bench_trend: {path}: unreadable ({e}) — skipping")
         continue
-    proc = subprocess.run(
-        ["git", "show", f"{base}:{path}"], capture_output=True, text=True
-    )
-    if proc.returncode != 0:
-        print(f"bench_trend: {path}: no baseline at {base} (new file) — "
-              f"{len(new)} record(s)")
+    text, note = baseline_text(path)
+    if text is None:
+        print(f"bench_trend: {path}: {note} — {len(new)} record(s)")
         continue
     try:
-        old = {r["name"]: r for r in json.loads(proc.stdout)}
+        old = {r["name"]: r for r in json.loads(text)}
     except Exception as e:  # noqa: BLE001
-        print(f"bench_trend: {path}: baseline at {base} unparsable ({e}) — skipping")
+        print(f"bench_trend: {path}: baseline unparsable ({e}) — skipping")
         continue
-    print(f"bench_trend: {path} vs {base}:")
+    label = base if mode == "git" else f"{base}/ (prior run)"
+    print(f"bench_trend: {path} vs {label}:")
     for name in sorted(set(old) | set(new)):
         if name not in old:
             print(f"  + {name}: new record "
