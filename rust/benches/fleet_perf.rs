@@ -1,0 +1,153 @@
+//! Perf bench: the fleet dispatch timeline (`fleet/timeline.rs`) — the
+//! ISSUE-6 resilience layer's throughput surface:
+//!
+//! 1. correctness gate before any timing: with an empty fault plan,
+//!    `dispatch_fifo_faulty` reproduces `dispatch_fifo` bit-for-bit for
+//!    every placement policy (a determinism regression fails the bench,
+//!    and therefore CI's bench-smoke job, before a number is printed);
+//! 2. `fleet/timeline-faults-off` — the fault-free fast path on a
+//!    synthetic dispatch stream (no simulation: service cycles come from
+//!    a closed-form per-(chip, class) function, so this times the
+//!    queueing machinery alone);
+//! 3. `fleet/timeline-faults-on` — the same stream under a seeded MTBF
+//!    fault schedule plus scripted fail/join events, exercising
+//!    redispatch, migration charging, and availability windows.
+//!
+//! The tracked rate is timeline events/sec (dispatches per iteration
+//! over median wall time, carried in the `macro_cycles_per_s` field of
+//! the shared BENCH_*.json schema).  Writes `BENCH_fleet.json`
+//! (EXPERIMENTS.md §Tracking) and validates it before exiting.
+//! Reduced-size runs: set `GPP_FLEET_DISPATCHES` / `GPP_BENCH_ITERS`
+//! (CI bench-smoke).  `cargo bench --bench fleet_perf`
+
+use gpp_pim::fleet::{
+    dispatch_fifo, dispatch_fifo_faulty, Dispatch, FaultCharges, FaultPlan, PlacementPolicy,
+};
+use gpp_pim::report::benchkit::{
+    env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
+};
+use std::path::Path;
+
+const CHIPS: usize = 8;
+const CLASSES: usize = 16;
+
+/// Synthetic dispatch stream: deterministic arrivals dense enough that
+/// queues actually form (mean service ~1.3k cycles vs 37-cycle gaps).
+fn stream(n: usize) -> Vec<Dispatch> {
+    (0..n)
+        .map(|i| Dispatch {
+            id: i as u32,
+            arrival_cycle: i as u64 * 37,
+            class: i % CLASSES,
+        })
+        .collect()
+}
+
+/// Closed-form service cost `service_on(dispatch_index, chip)`:
+/// class-dominated with a per-chip skew, so LeastLoaded/SED decisions
+/// are non-trivial.
+fn service_on(i: usize, chip: usize) -> u64 {
+    1_000 + (i % CLASSES) as u64 * 211 + chip as u64 * 17
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_u64("GPP_FLEET_DISPATCHES", 100_000) as usize;
+    let iters = env_u64("GPP_BENCH_ITERS", 5) as usize;
+    let dispatches = stream(n);
+    // MTBF-driven failures/rejoins across the run plus scripted events
+    // early enough to redispatch real backlog.
+    let plan = FaultPlan::parse("mtbf@400000@9,fail@50000@1,join@90000@1,drain@120000@5")
+        .expect("fault plan");
+    // Flat migration/cold pricing: the bench times the timeline, not the
+    // write model (the engine integration charges real weight bytes).
+    let migrate = |_from: usize, _to: usize| (1u64 << 20, 2_048u64);
+    let cold = |_chip: usize| (8u64 << 20, 16_384u64);
+    let charges = FaultCharges {
+        migrate: &migrate,
+        cold: &cold,
+    };
+    let mut records = Vec::new();
+
+    section("correctness gate: empty plan == fault-free path, all policies");
+    for policy in PlacementPolicy::ALL {
+        let plain = dispatch_fifo(CHIPS, &dispatches, service_on, policy.instance().as_mut());
+        let faulty = dispatch_fifo_faulty(
+            CHIPS,
+            &dispatches,
+            service_on,
+            policy.instance().as_mut(),
+            &FaultPlan::none(),
+            None,
+            &FaultCharges::FREE,
+        );
+        assert_eq!(
+            plain,
+            faulty,
+            "faulty path with empty plan diverged from dispatch_fifo ({})",
+            policy.name()
+        );
+    }
+    println!("empty-plan faulty path bit-identical to dispatch_fifo over {} policies ✓", PlacementPolicy::ALL.len());
+
+    section(&format!("wall-clock: {n} dispatches on {CHIPS} chips (least-loaded)"));
+    let bench = Bench::new(1, iters);
+    let events_per_iter = n as f64;
+    let m_off = bench.run("fleet/timeline-faults-off", || {
+        dispatch_fifo(
+            CHIPS,
+            &dispatches,
+            service_on,
+            PlacementPolicy::LeastLoaded.instance().as_mut(),
+        )
+        .makespan
+    });
+    println!("{}", m_off.line());
+    records.push(BenchRecord::new(&m_off, Some(events_per_iter)));
+
+    let m_on = bench.run("fleet/timeline-faults-on", || {
+        dispatch_fifo_faulty(
+            CHIPS,
+            &dispatches,
+            service_on,
+            PlacementPolicy::LeastLoaded.instance().as_mut(),
+            &plan,
+            None,
+            &charges,
+        )
+        .makespan
+    });
+    println!("{}", m_on.line());
+    records.push(BenchRecord::new(&m_on, Some(events_per_iter)));
+    println!(
+        "-> fault machinery overhead: {:.1}% ({:.2}M events/s off, {:.2}M events/s on)",
+        100.0 * (m_on.median_secs() / m_off.median_secs() - 1.0),
+        events_per_iter / m_off.median_secs() / 1e6,
+        events_per_iter / m_on.median_secs() / 1e6,
+    );
+
+    // Sanity on the faulty run itself: the plan must actually have
+    // bitten (failures redispatch work and charge migration bytes).
+    let t = dispatch_fifo_faulty(
+        CHIPS,
+        &dispatches,
+        service_on,
+        PlacementPolicy::LeastLoaded.instance().as_mut(),
+        &plan,
+        None,
+        &charges,
+    );
+    assert!(t.faults.redispatched > 0, "fault plan never redispatched");
+    assert!(t.faults.migration_bytes > 0, "no migration charged");
+    let served = t.placements.iter().filter(|p| !p.dropped).count();
+    println!(
+        "faulted run: {served}/{} served, {} redispatched, {} dropped, {} migration bytes",
+        n, t.faults.redispatched, t.faults.dropped, t.faults.migration_bytes
+    );
+
+    let out = Path::new("BENCH_fleet.json");
+    write_bench_json(out, &records)?;
+    let text = std::fs::read_to_string(out)?;
+    let k = validate_bench_json(&text).map_err(|e| anyhow::anyhow!("schema: {e}"))?;
+    println!("\n[wrote {} ({k} records, schema OK)]", out.display());
+    Ok(())
+}

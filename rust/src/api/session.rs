@@ -25,6 +25,7 @@ use super::spec::{
 };
 use crate::arch::ArchConfig;
 use crate::coordinator::{Coordinator, RunConfig, RunReport};
+use crate::fleet::AutoscaleConfig;
 use crate::gemm::blas;
 use crate::model::adapt::RuntimeAdaptation;
 use crate::model::dse::{CartesianPointResult, CartesianSpace, DesignSpace};
@@ -396,7 +397,11 @@ impl Session {
             mean_gap_cycles: spec.mean_gap,
         };
         let fleet = spec.fleet_config(&self.arch)?;
-        let engine = ServeEngine::with_fleet(fleet, spec.placement, self.jobs(spec.jobs));
+        let mut engine = ServeEngine::with_fleet(fleet, spec.placement, self.jobs(spec.jobs))
+            .with_faults(spec.faults.clone());
+        if let (true, Some(slo)) = (spec.autoscale, spec.slo) {
+            engine = engine.with_autoscale(AutoscaleConfig::new(slo));
+        }
         // Traffic targets the *reference* chip (fleet chip 0) so every
         // request's resource knobs fit the reference-arch contract even
         // when a fleet spec's chip 0 is smaller than the base arch.
@@ -411,6 +416,15 @@ impl Session {
             engine.placement().name(),
             engine.jobs()
         ))?;
+        if !engine.faults().is_empty() {
+            sinks.line(&format!("fault plan          : {}", engine.faults()))?;
+        }
+        if let Some(scale) = engine.autoscale() {
+            sinks.line(&format!(
+                "autoscaler          : p99 SLO {} cycles (window {}, min {} chip(s), cooldown {})",
+                scale.slo_p99, scale.window, scale.min_chips, scale.cooldown
+            ))?;
+        }
         sinks.table("serve_summary", &report.summary_table(), TableDest::Show)?;
         let pcts = report.latency_percentiles(&[50.0, 95.0, 99.0]);
         sinks.line(&format!(
@@ -454,16 +468,22 @@ impl Session {
         let requests = synthetic_traffic(fleets[0].reference(), &traffic_cfg);
         // Carry the axis on a sweep grid — the same description a DSE
         // over fleet size × policy would use.
-        let axis = FleetAxis::new(fleets, spec.placements.clone());
+        let axis = FleetAxis::new(fleets, spec.placements.clone()).with_faults(spec.faults.clone());
         sinks.section(&format!(
             "Fleet sweep — {} requests (seed {}) over {} (fleet, policy) points",
             requests.len(),
             traffic_cfg.seed,
             axis.len()
         ))?;
+        if !axis.faults().is_empty() {
+            sinks.line(&format!("fault plan: {}", axis.faults()))?;
+        }
         let rows = run_fleet_axis(&axis, &requests, self.jobs(spec.jobs))
             .map_err(|e| anyhow!("{e}"))?;
         sinks.table("fleet_axis", &fleet_axis_table(&rows), TableDest::Show)?;
+        if !axis.faults().is_empty() {
+            sinks.table("fleet_resilience", &fleet_resilience_table(&rows), TableDest::Show)?;
+        }
         Ok(Outcome::FleetSweep(FleetSweepOutcome { rows }))
     }
 
@@ -753,6 +773,21 @@ impl Session {
                 .map_err(|e| anyhow!("{e}"))?;
             sinks.table("dse_fleet", &fleet_axis_table(&rows), TableDest::Show)?;
             tables.push("dse_fleet".to_string());
+            // Resilience axis: the same (fleet, policy) points re-served
+            // under the fault plan.  `dse_fleet` stays fault-free so its
+            // bytes never move when a plan is attached.
+            if !spec.faults.is_empty() {
+                let faulty = axis.clone().with_faults(spec.faults.clone());
+                sinks.section(&format!(
+                    "DSE resilience axis — fault plan [{}] over {} (fleet, policy) points",
+                    spec.faults,
+                    faulty.len()
+                ))?;
+                let rows = run_fleet_axis(&faulty, &requests, self.jobs(spec.jobs))
+                    .map_err(|e| anyhow!("{e}"))?;
+                sinks.table("dse_resilience", &fleet_resilience_table(&rows), TableDest::Show)?;
+                tables.push("dse_resilience".to_string());
+            }
         }
         Ok(Outcome::Sweep(SweepOutcome {
             kind: "dse-full",
@@ -840,6 +875,43 @@ fn fleet_axis_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
             f.makespan.to_string(),
             format!("{:.2}", report.fleet_speedup()),
             format!("{max_util:.4}"),
+        ]);
+    }
+    t
+}
+
+/// The resilience table (`fleet_resilience.csv` from a faulted `fleet`
+/// run, `dse_resilience.csv` from `dse-full`): degraded-mode metrics
+/// per (fleet, policy) point.  Lives next to [`fleet_axis_table`]
+/// instead of widening it so fault-free axis CSVs keep their bytes.
+fn fleet_resilience_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
+    let mut t = CsvTable::new(vec![
+        "fleet",
+        "chips",
+        "policy",
+        "availability",
+        "redispatched",
+        "redispatch_latency",
+        "migration_bytes",
+        "dropped",
+        "scale_ups",
+        "scale_downs",
+        "makespan",
+    ]);
+    for (point, report) in rows {
+        let f = &report.fleet;
+        t.push_row(vec![
+            point.fleet.describe(),
+            point.fleet.len().to_string(),
+            point.policy.name().to_string(),
+            format!("{:.4}", f.fleet_availability()),
+            f.faults.redispatched.to_string(),
+            f.redispatch_mean_latency().to_string(),
+            f.faults.migration_bytes.to_string(),
+            f.faults.dropped.to_string(),
+            f.faults.scale_ups.to_string(),
+            f.faults.scale_downs.to_string(),
+            f.makespan.to_string(),
         ]);
     }
     t
@@ -1009,6 +1081,71 @@ mod tests {
         s.run(&spec, &mut SinkSet::new()).unwrap();
         assert_eq!(s.runner().cache().misses(), misses, "second run fully cached");
         assert!(s.runner().cache().hits() >= misses);
+    }
+
+    #[test]
+    fn fault_specs_flow_through_every_session_kind() {
+        let s = session();
+        // serve: the fault plan degrades the policy timeline but the
+        // reference timeline (serve.csv) never moves.
+        let mut a = MemorySink::new();
+        let mut b = MemorySink::new();
+        s.run(
+            &RunSpec::parse("serve:requests=24:seed=3:chips=2").unwrap(),
+            &mut SinkSet::new().with(&mut a),
+        )
+        .unwrap();
+        s.run(
+            &RunSpec::parse("serve:requests=24:seed=3:chips=2:faults=fail@1@1").unwrap(),
+            &mut SinkSet::new().with(&mut b),
+        )
+        .unwrap();
+        assert_eq!(a.csv("serve"), b.csv("serve"), "reference timeline is fault-invariant");
+        assert_ne!(a.csv("fleet"), b.csv("fleet"), "policy timeline shows the failure");
+        assert!(b.lines.iter().any(|l| l.contains("fault plan")));
+
+        // fleet: a plan rides the axis and adds the resilience table.
+        let mut m = MemorySink::new();
+        s.run(
+            &RunSpec::parse("fleet:requests=16:seed=5:sizes=2:placement=rr:faults=fail@1@1")
+                .unwrap(),
+            &mut SinkSet::new().with(&mut m),
+        )
+        .unwrap();
+        let res = m.csv("fleet_resilience").unwrap();
+        assert!(res.lines().next().unwrap().contains("availability"), "{res}");
+
+        // dse-full: dse_fleet stays fault-free, dse_resilience carries
+        // the degraded axis.
+        let spec = RunSpec::parse(
+            "dse-full:cores=2:macros=2:nin=2:bands=32:buffers=65536:tasks=32\
+             :fleets=2:placement=rr:requests=8:faults=fail@1@1",
+        )
+        .unwrap();
+        let mut m = MemorySink::new();
+        let out = s.run(&spec, &mut SinkSet::new().with(&mut m)).unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert!(out.tables.contains(&"dse_resilience".to_string()), "{:?}", out.tables);
+        assert!(m.csv("dse_fleet").is_some());
+        assert_eq!(
+            m.csv("dse_resilience").unwrap().lines().count(),
+            2,
+            "one fleet size x one policy"
+        );
+    }
+
+    #[test]
+    fn autoscaled_serve_spec_reports_scaling() {
+        // 64 requests so the default 32-sample window fills at least
+        // once; slo=1 cycle means the first evaluation always breaches.
+        let spec =
+            RunSpec::parse("serve:requests=64:seed=11:chips=2:autoscale=true:slo=1").unwrap();
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        let out = session().run(&spec, &mut sinks).unwrap();
+        let report = out.serve().unwrap();
+        assert!(report.fleet.faults.scale_ups >= 1, "slo=1 must trigger growth");
+        assert!(mem.lines.iter().any(|l| l.contains("autoscaler")));
     }
 
     #[test]

@@ -29,17 +29,25 @@
 //! repro[:exp=fig4|fig6|fig7|table2|headline|all][:vectors=N][:jobs=N]
 //! run[:workload=ffn|e2e|square|mlp][:strategy=S][:trace=FILE][:numerics=true][:artifacts=DIR]
 //! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true]
-//! serve[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P][:chips=C][:fleet=SPEC]
-//! fleet[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P,..|all][:sizes=1,2,4][:fleet=SPEC]
+//! serve[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P][:faults=PLAN]
+//!      [:autoscale=true:slo=CYC][:chips=C][:fleet=SPEC]
+//! fleet[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P,..|all][:faults=PLAN]
+//!      [:sizes=1,2,4][:fleet=SPEC]
 //! dse[:band=B][:sim=true][:tasks=N][:jobs=N][:top=K]
 //! dse-full[:cores=L][:macros=L][:nin=L][:bands=L][:buffers=L][:tasks=N][:s=W]
 //!         [:style=looped|unrolled][:jobs=N][:top=K]
-//!         [:fleets=1,2,4][:placement=P,..|all][:requests=N][:seed=S][:gap=CYC]
+//!         [:fleets=1,2,4][:placement=P,..|all][:faults=PLAN][:requests=N][:seed=S][:gap=CYC]
 //! adapt[:maxn=N]
 //! ```
+//!
+//! `faults=PLAN` is the [`FaultPlan`] grammar
+//! (`fail|drain|join@CYCLE@CHIP` and `mtbf@MEAN@SEED`, comma-separated —
+//! deliberately `:`-free so it embeds here); `autoscale=true` attaches
+//! the SLO-driven autoscaler and requires `slo=CYCLES` (the p99 latency
+//! target), and vice versa.
 
 use crate::arch::ArchConfig;
-use crate::fleet::{FleetConfig, PlacementPolicy};
+use crate::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
 use crate::sched::{CodegenStyle, Strategy};
 use std::fmt;
 use thiserror::Error;
@@ -191,6 +199,14 @@ pub struct ServeSpec {
     pub mean_gap: u64,
     pub jobs: Option<usize>,
     pub placement: PlacementPolicy,
+    /// Fault schedule the policy timeline serves under (empty = the
+    /// byte-stable fault-free fast path).
+    pub faults: FaultPlan,
+    /// Attach the SLO-driven autoscaler; requires `slo`.
+    pub autoscale: bool,
+    /// p99 latency target in cycles for the autoscaler; requires
+    /// `autoscale`.
+    pub slo: Option<u64>,
     /// Homogeneous replica count.  Ignored — and not displayed — when
     /// `fleet` is set ([`ServeSpec::fleet_config`] uses the fleet spec),
     /// so `Display` never emits the `chips`/`fleet` conflict the parser
@@ -209,6 +225,9 @@ impl Default for ServeSpec {
             mean_gap: 2048,
             jobs: None,
             placement: PlacementPolicy::RoundRobin,
+            faults: FaultPlan::none(),
+            autoscale: false,
+            slo: None,
             chips: 1,
             fleet: None,
         }
@@ -232,6 +251,9 @@ pub struct FleetSweepSpec {
     pub jobs: Option<usize>,
     /// Policies of the axis (default: all built-ins).
     pub placements: Vec<PlacementPolicy>,
+    /// Fault schedule every axis point serves under (events naming
+    /// chips beyond a point's fleet size are inert).
+    pub faults: FaultPlan,
     /// Homogeneous fleet sizes.  Ignored — and not displayed — when
     /// `fleet` is set (see [`ServeSpec::chips`] for the rationale);
     /// must be non-empty otherwise ([`FleetSweepSpec::fleets`] rejects
@@ -249,6 +271,7 @@ impl Default for FleetSweepSpec {
             mean_gap: 1024,
             jobs: None,
             placements: PlacementPolicy::ALL.to_vec(),
+            faults: FaultPlan::none(),
             sizes: vec![1, 2, 4],
             fleet: None,
         }
@@ -324,6 +347,10 @@ pub struct DseFullSpec {
     pub fleets: Vec<usize>,
     /// Placement policies of the fleet axis.
     pub placements: Vec<PlacementPolicy>,
+    /// Fault schedule of the resilience sweep: with a fleet axis and a
+    /// non-empty plan, the axis is additionally served under faults and
+    /// reported as `dse_resilience.csv`.
+    pub faults: FaultPlan,
     /// Synthetic-traffic knobs for the fleet axis.
     pub requests: u32,
     pub seed: u64,
@@ -345,6 +372,7 @@ impl Default for DseFullSpec {
             top: None,
             fleets: Vec::new(),
             placements: PlacementPolicy::ALL.to_vec(),
+            faults: FaultPlan::none(),
             requests: 128,
             seed: 7,
             mean_gap: 1024,
@@ -447,7 +475,19 @@ fn p_strategy(v: &str) -> Result<Strategy, SpecError> {
 
 fn p_placement(v: &str) -> Result<PlacementPolicy, SpecError> {
     PlacementPolicy::from_name(v)
-        .ok_or_else(|| bad("placement", v, "expected rr|least-loaded|affinity"))
+        .ok_or_else(|| bad("placement", v, "expected rr|least-loaded|affinity|sed"))
+}
+
+fn p_faults(v: &str) -> Result<FaultPlan, SpecError> {
+    FaultPlan::parse(v).map_err(|reason| bad("faults", v, reason))
+}
+
+fn p_slo(v: &str) -> Result<u64, SpecError> {
+    let slo = p_u64("slo", v)?;
+    if slo == 0 {
+        return Err(bad("slo", v, "p99 target must be >= 1 cycle"));
+    }
+    Ok(slo)
 }
 
 fn p_placements(v: &str) -> Result<Vec<PlacementPolicy>, SpecError> {
@@ -517,12 +557,12 @@ impl RunSpec {
             "repro" => "exp, vectors, jobs",
             "run" => "workload, strategy, trace, numerics, artifacts",
             "simulate" => "strategy, tasks, macros, nin, band, s, oplog",
-            "serve" => "requests, seed, gap, jobs, placement, chips, fleet",
-            "fleet" => "requests, seed, gap, jobs, placement, sizes, fleet",
+            "serve" => "requests, seed, gap, jobs, placement, faults, autoscale, slo, chips, fleet",
+            "fleet" => "requests, seed, gap, jobs, placement, faults, sizes, fleet",
             "dse" => "band, sim, tasks, jobs, top",
             "dse-full" => {
                 "cores, macros, nin, bands, buffers, tasks, s, style, jobs, top, \
-                 fleets, placement, requests, seed, gap"
+                 fleets, placement, faults, requests, seed, gap"
             }
             "adapt" => "maxn",
             _ => "",
@@ -643,6 +683,9 @@ impl RunSpec {
                 "gap" => s.mean_gap = p_u64("gap", v)?,
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "placement" => s.placement = p_placement(v)?,
+                "faults" => s.faults = p_faults(v)?,
+                "autoscale" => s.autoscale = p_bool("autoscale", v)?,
+                "slo" => s.slo = Some(p_slo(v)?),
                 "chips" => {
                     let chips: usize = v.parse().map_err(|e| bad("chips", v, e))?;
                     if chips == 0 {
@@ -661,6 +704,16 @@ impl RunSpec {
         if chips_set && s.fleet.is_some() {
             return Err(SpecError::Conflict("chips", "fleet"));
         }
+        if s.autoscale && s.slo.is_none() {
+            return Err(bad("autoscale", "true", "requires slo=CYCLES (the p99 target)"));
+        }
+        if s.slo.is_some() && !s.autoscale {
+            return Err(bad(
+                "slo",
+                &s.slo.unwrap().to_string(),
+                "requires autoscale=true",
+            ));
+        }
         Ok(RunSpec::Serve(s))
     }
 
@@ -674,6 +727,7 @@ impl RunSpec {
                 "gap" => s.mean_gap = p_u64("gap", v)?,
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "placement" => s.placements = p_placements(v)?,
+                "faults" => s.faults = p_faults(v)?,
                 "sizes" => {
                     s.sizes = p_list::<u64>("sizes", v)?.into_iter().map(|n| n as usize).collect();
                     sizes_set = true;
@@ -730,6 +784,7 @@ impl RunSpec {
                     s.fleets = p_list::<u64>("fleets", v)?.into_iter().map(|n| n as usize).collect()
                 }
                 "placement" => s.placements = p_placements(v)?,
+                "faults" => s.faults = p_faults(v)?,
                 "requests" => s.requests = p_u32("requests", v)?,
                 "seed" => s.seed = p_u64("seed", v)?,
                 "gap" => s.mean_gap = p_u64("gap", v)?,
@@ -834,6 +889,11 @@ impl fmt::Display for RunSpec {
                 if s.placement != d.placement {
                     e.kv("placement", s.placement.name())?;
                 }
+                if !s.faults.is_empty() {
+                    e.kv("faults", &s.faults)?;
+                }
+                e.flag("autoscale", s.autoscale)?;
+                e.opt("slo", &s.slo)?;
                 if s.chips != d.chips && s.fleet.is_none() {
                     e.kv("chips", s.chips)?;
                 }
@@ -856,6 +916,9 @@ impl fmt::Display for RunSpec {
                         "placement",
                         join(&s.placements.iter().map(|p| p.name()).collect::<Vec<_>>()),
                     )?;
+                }
+                if !s.faults.is_empty() {
+                    e.kv("faults", &s.faults)?;
                 }
                 if s.sizes != d.sizes && s.fleet.is_none() {
                     e.kv("sizes", join(&s.sizes))?;
@@ -906,6 +969,9 @@ impl fmt::Display for RunSpec {
                         "placement",
                         join(&s.placements.iter().map(|p| p.name()).collect::<Vec<_>>()),
                     )?;
+                }
+                if !s.faults.is_empty() {
+                    e.kv("faults", &s.faults)?;
                 }
                 if s.requests != d.requests {
                     e.kv("requests", s.requests)?;
@@ -992,6 +1058,59 @@ mod tests {
             s.placements,
             vec![PlacementPolicy::RoundRobin, PlacementPolicy::ClassAffinity]
         );
+    }
+
+    #[test]
+    fn fault_keys_roundtrip_canonically() {
+        // The fault plan canonicalizes (sort + dedup) inside the spec.
+        let s = roundtrip("serve:faults=join@900@1,fail@100@1,fail@100@1:chips=2");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.faults.to_string(), "fail@100@1,join@900@1");
+        assert_eq!(
+            RunSpec::Serve(s).to_string(),
+            "serve:faults=fail@100@1,join@900@1:chips=2"
+        );
+        // Autoscale + SLO ride together.
+        let s = roundtrip("serve:autoscale=true:slo=50000");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert!(s.autoscale);
+        assert_eq!(s.slo, Some(50_000));
+        // faults= composes with a fleet spec (fleet stays last) and with
+        // the other fault-capable kinds.
+        let s = roundtrip("serve:faults=mtbf@50000@9:fleet=2xpaper:band=256");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.fleet.as_deref(), Some("2xpaper:band=256"));
+        assert!(s.faults.mtbf.is_some());
+        let s = roundtrip("fleet:faults=fail@4096@1:sizes=1,2");
+        let RunSpec::FleetSweep(s) = s else { panic!() };
+        assert_eq!(s.faults.events.len(), 1);
+        let s = roundtrip("dse-full:cores=2:fleets=1,2:faults=drain@1000@0");
+        let RunSpec::DseFull(s) = s else { panic!() };
+        assert_eq!(s.faults.events.len(), 1);
+    }
+
+    #[test]
+    fn fault_key_rejections() {
+        for bad_spec in [
+            "serve:faults=",
+            "serve:faults=explode@1@1",
+            "serve:faults=fail@100",
+            "serve:faults=mtbf@0@9",
+            "serve:autoscale=true",       // autoscale without a target
+            "serve:slo=50000",            // target without the scaler
+            "serve:autoscale=true:slo=0", // degenerate target
+            "serve:autoscale=maybe:slo=5",
+            "fleet:faults=oops",
+            "dse-full:faults=fail@1",
+        ] {
+            assert!(RunSpec::parse(bad_spec).is_err(), "accepted '{bad_spec}'");
+        }
+        // Fault errors name the offending token.
+        let err = RunSpec::parse("serve:faults=fail@100@1,join@oops@2").unwrap_err();
+        assert!(err.to_string().contains("join@oops@2"), "{err}");
+        // sed is advertised as a valid placement now.
+        let err = RunSpec::parse("serve:placement=chaos").unwrap_err();
+        assert!(err.to_string().contains("sed"), "{err}");
     }
 
     #[test]

@@ -166,10 +166,19 @@ impl FleetConfig {
                     )))
                 }
             };
+            let mut seen: Vec<&str> = Vec::new();
             for kv in parts {
                 let (key, value) = kv
                     .split_once('=')
                     .ok_or_else(|| err(format!("expected KEY=VALUE, got '{kv}'")))?;
+                if seen.contains(&key) {
+                    // Silently last-wins would hide typos like
+                    // `paper:band=8:band=16`; name the offending token.
+                    return Err(err(format!(
+                        "duplicate key '{key}' in '{group}' (second value '{kv}')"
+                    )));
+                }
+                seen.push(key);
                 let bad = |what: &str| err(format!("bad {what} '{value}' in '{group}'"));
                 match key {
                     "band" => arch.bandwidth = value.parse().map_err(|_| bad("band"))?,
@@ -263,9 +272,24 @@ mod tests {
             "paper:color=red",
             "paper,,paper",
             "paper:s=99", // validated: outside [min, max] write speed
+            "paper:band=8:band=16", // duplicate key must not last-win
+            "2xpaper:nin=4:nin=4",  // even an identical repeat is a typo
         ] {
             assert!(FleetConfig::parse(bad, &arch()).is_err(), "spec '{bad}'");
         }
+    }
+
+    #[test]
+    fn duplicate_key_error_names_the_offending_token() {
+        let e = FleetConfig::parse("paper:band=8:band=16", &arch())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("duplicate key 'band'"), "{e}");
+        assert!(e.contains("band=16"), "must name the second value: {e}");
+        // Distinct keys in one group stay legal.
+        assert!(FleetConfig::parse("paper:band=8:s=4", &arch()).is_ok());
+        // The same key in *different* groups is two different chips.
+        assert!(FleetConfig::parse("paper:band=256,paper:band=128", &arch()).is_ok());
     }
 
     #[test]

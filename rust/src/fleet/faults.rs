@@ -1,0 +1,347 @@
+//! Fault injection and autoscaling schedules for the fleet timeline
+//! (ISSUE 6).
+//!
+//! The paper prices every weight placement in off-chip write bandwidth;
+//! at fleet scale the same budget governs *recovery* — a chip failure
+//! forces its in-flight weights to be re-written somewhere else, and a
+//! chip joining the fleet pays a cold weight load before it can serve.
+//! [`FaultPlan`] is the deterministic schedule of such membership
+//! events; [`dispatch_fifo_faulty`](super::dispatch_fifo_faulty)
+//! consumes it.
+//!
+//! **Grammar** (the `faults=` spec value; `:`-free so it embeds in the
+//! [`RunSpec`](crate::api::RunSpec) `KIND:KEY=VALUE` grammar):
+//!
+//! ```text
+//! faults = token ("," token)*
+//! token  = ("fail"|"drain"|"join") "@" CYCLE "@" CHIP
+//!        |  "mtbf" "@" MEAN_CYCLES "@" SEED
+//! ```
+//!
+//! `fail@C@N` kills chip `N` at cycle `C` (its unfinished queue is
+//! redispatched and charged weight re-writes), `drain@C@N` stops chip
+//! `N` accepting new requests (its queue completes), `join@C@N`
+//! (re)activates chip `N` after a cold weight load.  `mtbf@M@S`
+//! additionally generates a seeded fail/repair schedule with mean time
+//! between failures `M` cycles (uniform in `[1, 2M]`, mean `M`) and
+//! repair times with mean `M/16` per chip, up to the traffic horizon.
+//! Events naming chips outside the fleet are inert — one plan can ride a
+//! fleet-size axis (`gpp-pim fleet`) where small points lack the chip.
+//!
+//! Parsing canonicalizes: events sort by `(cycle, chip, kind)` and
+//! dedup, so `parse(display(p)) == p` — the round-trip contract every
+//! `RunSpec` key obeys.
+
+use crate::util::rng::XorShift64;
+use std::fmt;
+
+/// What happens to a chip at a fault event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FaultKind {
+    /// Immediate loss: the queue's unfinished requests are redispatched
+    /// (each charged a weight re-write on its new chip); work in flight
+    /// at the fail cycle is lost and re-run from scratch.
+    Fail,
+    /// Graceful exit: the queue completes, no new requests are accepted.
+    Drain,
+    /// (Re)activation: the chip accepts requests from this cycle but
+    /// serves only after a cold full-chip weight load.
+    Join,
+}
+
+impl FaultKind {
+    /// Spec-grammar token.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Fail => "fail",
+            FaultKind::Drain => "drain",
+            FaultKind::Join => "join",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "fail" => Some(FaultKind::Fail),
+            "drain" => Some(FaultKind::Drain),
+            "join" => Some(FaultKind::Join),
+            _ => None,
+        }
+    }
+}
+
+/// One scheduled membership event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FaultEvent {
+    /// Cycle the event applies (before any request arriving at the same
+    /// cycle is dispatched).
+    pub cycle: u64,
+    /// Target chip index in the [`FleetConfig`](super::FleetConfig) —
+    /// the chip's permanent identity, stable across leave/join.
+    pub chip: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}@{}", self.kind.name(), self.cycle, self.chip)
+    }
+}
+
+/// Seeded MTBF-style fail/repair generation, expanded against the
+/// traffic horizon at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MtbfSpec {
+    /// Mean cycles between failures per chip (uniform in `[1, 2·mean]`).
+    pub mean_cycles: u64,
+    /// RNG seed; same seed ⇒ byte-identical schedule.
+    pub seed: u64,
+}
+
+/// A deterministic fault schedule: explicit events plus an optional
+/// seeded MTBF generator.  `Default` is the empty (no-fault) plan.
+#[derive(Debug, Clone, PartialEq, Eq, Default, Hash)]
+pub struct FaultPlan {
+    /// Canonically sorted `(cycle, chip, kind)` explicit events.
+    pub events: Vec<FaultEvent>,
+    /// Optional seeded generator, expanded per chip up to the horizon.
+    pub mtbf: Option<MtbfSpec>,
+}
+
+impl FaultPlan {
+    /// The no-fault plan.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.mtbf.is_none()
+    }
+
+    /// Parse the `faults=` grammar (see module docs).  Canonicalizes
+    /// event order so the `Display` round-trip is exact.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        if s.trim().is_empty() {
+            return Err("empty fault plan (expected fail|drain|join@CYCLE@CHIP or mtbf@MEAN@SEED)".into());
+        }
+        let mut events = Vec::new();
+        let mut mtbf = None;
+        for tok in s.split(',') {
+            let parts: Vec<&str> = tok.split('@').collect();
+            let two = |what: &str, raw: &str| -> Result<u64, String> {
+                raw.parse::<u64>()
+                    .map_err(|_| format!("bad {what} '{raw}' in fault token '{tok}'"))
+            };
+            match parts[0] {
+                "mtbf" => {
+                    if parts.len() != 3 {
+                        return Err(format!("expected mtbf@MEAN_CYCLES@SEED, got '{tok}'"));
+                    }
+                    let mean_cycles = two("mean cycle count", parts[1])?;
+                    if mean_cycles == 0 {
+                        return Err(format!("mtbf mean must be >= 1 in '{tok}'"));
+                    }
+                    let seed = two("seed", parts[2])?;
+                    if mtbf.replace(MtbfSpec { mean_cycles, seed }).is_some() {
+                        return Err(format!("duplicate mtbf clause '{tok}'"));
+                    }
+                }
+                kind => {
+                    let kind = FaultKind::from_name(kind).ok_or_else(|| {
+                        format!("unknown fault kind '{kind}' in '{tok}' (expected fail|drain|join|mtbf)")
+                    })?;
+                    if parts.len() != 3 {
+                        return Err(format!("expected {}@CYCLE@CHIP, got '{tok}'", kind.name()));
+                    }
+                    let cycle = two("cycle", parts[1])?;
+                    let chip = two("chip index", parts[2])? as usize;
+                    events.push(FaultEvent { cycle, chip, kind });
+                }
+            }
+        }
+        events.sort();
+        events.dedup();
+        Ok(Self { events, mtbf })
+    }
+
+    /// The full schedule for a `chips`-wide fleet with arrivals up to
+    /// `horizon`: explicit events (chips outside the fleet dropped as
+    /// inert) merged with the expanded MTBF schedule, sorted by
+    /// `(cycle, chip, kind)`.
+    pub fn expand(&self, chips: usize, horizon: u64) -> Vec<FaultEvent> {
+        let mut out: Vec<FaultEvent> = self
+            .events
+            .iter()
+            .copied()
+            .filter(|e| e.chip < chips)
+            .collect();
+        if let Some(m) = self.mtbf {
+            let mut rng = XorShift64::new(m.seed);
+            let repair_span = (m.mean_cycles / 8).max(1);
+            for chip in 0..chips {
+                let mut t = 0u64;
+                loop {
+                    t = t.saturating_add(1 + rng.next_below(2 * m.mean_cycles));
+                    if t > horizon {
+                        break;
+                    }
+                    out.push(FaultEvent {
+                        cycle: t,
+                        chip,
+                        kind: FaultKind::Fail,
+                    });
+                    t = t.saturating_add(1 + rng.next_below(repair_span));
+                    if t > horizon {
+                        break;
+                    }
+                    out.push(FaultEvent {
+                        cycle: t,
+                        chip,
+                        kind: FaultKind::Join,
+                    });
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for e in &self.events {
+            if !first {
+                f.write_str(",")?;
+            }
+            write!(f, "{e}")?;
+            first = false;
+        }
+        if let Some(m) = self.mtbf {
+            if !first {
+                f.write_str(",")?;
+            }
+            write!(f, "mtbf@{}@{}", m.mean_cycles, m.seed)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+/// SLO-driven fleet sizing, evaluated on the policy timeline: every
+/// `window` placed requests the autoscaler compares the window's p99
+/// latency against the target; above target it joins the lowest-index
+/// inactive chip (cold load charged), below half the target it drains
+/// the highest-index active chip.  `cooldown` windows of hysteresis
+/// separate consecutive actions, and the fleet never shrinks below
+/// `min_chips`.  Chips `min_chips..` start inactive — the trace itself
+/// grows the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AutoscaleConfig {
+    /// p99 latency target in cycles.
+    pub slo_p99: u64,
+    /// Decision window in placed requests.
+    pub window: usize,
+    /// Chips active at cycle 0 and the shrink floor.
+    pub min_chips: usize,
+    /// Windows to skip after a scale action (hysteresis).
+    pub cooldown: u32,
+}
+
+impl AutoscaleConfig {
+    /// Default windowing (32-request windows, 2-window cooldown, floor
+    /// of one chip) around a p99 target.
+    pub fn new(slo_p99: u64) -> Self {
+        Self {
+            slo_p99,
+            window: 32,
+            min_chips: 1,
+            cooldown: 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_display_roundtrip_is_canonical() {
+        // Unsorted, duplicated input canonicalizes...
+        let p = FaultPlan::parse("join@900@1,fail@100@1,fail@100@1,mtbf@5000@9").unwrap();
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.events[0].kind, FaultKind::Fail);
+        assert_eq!(p.to_string(), "fail@100@1,join@900@1,mtbf@5000@9");
+        // ...and the canonical form round-trips exactly.
+        assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+        let q = FaultPlan::parse("drain@42@0").unwrap();
+        assert_eq!(q.to_string(), "drain@42@0");
+        assert_eq!(FaultPlan::parse(&q.to_string()).unwrap(), q);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "",
+            " ",
+            "fail@100",
+            "fail@100@1@2",
+            "explode@100@1",
+            "fail@x@1",
+            "fail@100@y",
+            "mtbf@0@7",
+            "mtbf@100",
+            "mtbf@100@1,mtbf@200@2",
+            "fail@100@1,,join@200@1",
+        ] {
+            let e = FaultPlan::parse(bad);
+            assert!(e.is_err(), "'{bad}' must be rejected");
+        }
+        // Errors name the offending token.
+        let msg = FaultPlan::parse("fail@100@1,join@oops@2").unwrap_err();
+        assert!(msg.contains("join@oops@2"), "{msg}");
+    }
+
+    #[test]
+    fn expand_filters_inert_chips_and_merges_mtbf() {
+        let p = FaultPlan::parse("fail@10@0,fail@20@7").unwrap();
+        let ev = p.expand(2, 1_000);
+        assert_eq!(ev.len(), 1, "chip 7 is outside a 2-chip fleet");
+        assert_eq!(ev[0].chip, 0);
+
+        let m = FaultPlan::parse("mtbf@1000@3").unwrap();
+        let a = m.expand(2, 50_000);
+        let b = m.expand(2, 50_000);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty(), "horizon of 50 means must fail sometime");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted by cycle");
+        assert!(a.iter().all(|e| e.cycle <= 50_000));
+        assert!(a.iter().any(|e| e.kind == FaultKind::Fail));
+        assert!(a.iter().any(|e| e.kind == FaultKind::Join));
+        // A different seed reschedules.
+        let m2 = FaultPlan::parse("mtbf@1000@4").unwrap();
+        assert_ne!(m2.expand(2, 50_000), a);
+    }
+
+    #[test]
+    fn empty_plan_expands_to_nothing() {
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::none().expand(4, 1_000_000).is_empty());
+    }
+
+    #[test]
+    fn autoscale_defaults() {
+        let a = AutoscaleConfig::new(10_000);
+        assert_eq!(a.slo_p99, 10_000);
+        assert_eq!(a.min_chips, 1);
+        assert!(a.window > 0 && a.cooldown > 0);
+    }
+}

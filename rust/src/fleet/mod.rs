@@ -11,13 +11,19 @@
 //!   [`ArchConfig`](crate::arch::ArchConfig); homogeneous replication is
 //!   the special case.  Parses CLI `--fleet` specs.
 //! - [`Placement`] — the chip-selection policy trait, with deterministic
-//!   [`RoundRobin`], [`LeastLoaded`] (ties by chip index) and
+//!   [`RoundRobin`], [`LeastLoaded`] (ties by chip index),
 //!   [`ClassAffinity`] (cache locality: a workload class stays with the
-//!   chip that already generated its program) implementations, selected
-//!   by [`PlacementPolicy`].
+//!   chip that already generated its program) and
+//!   [`ShortestExpectedDelay`] (backlog + per-chip service estimate)
+//!   implementations, selected by [`PlacementPolicy`].
 //! - [`dispatch_fifo`] — a discrete-event timeline dispatching requests
 //!   at their arrival cycles onto per-chip FIFO queues, yielding true
 //!   per-request queueing + service latency per policy.
+//! - [`FaultPlan`] / [`dispatch_fifo_faulty`] — fault injection on that
+//!   timeline (ISSUE 6): scheduled or seeded-MTBF chip fail/drain/join
+//!   events, redispatch of a failed chip's queue with weight re-writes
+//!   charged through the paper's write model, cold weight loads for
+//!   joining chips, and an SLO-driven [`AutoscaleConfig`] autoscaler.
 //!
 //! Entry points describe fleets through [`crate::api`]: a `RunSpec`'s
 //! `fleet=SPEC`/`chips=N` keys resolve to a [`FleetConfig`] against the
@@ -30,12 +36,17 @@
 //! (`tests/fleet_determinism.rs`).
 
 mod config;
+mod faults;
 mod placement;
 mod timeline;
 
 pub use config::{FleetConfig, FleetError};
+pub use faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan, MtbfSpec};
 pub use placement::{
     ClassAffinity, DispatchContext, FleetState, LeastLoaded, Placement, PlacementPolicy,
-    RoundRobin,
+    RoundRobin, ShortestExpectedDelay,
 };
-pub use timeline::{dispatch_fifo, Dispatch, FleetTimeline, PlacedRequest};
+pub use timeline::{
+    dispatch_fifo, dispatch_fifo_faulty, Dispatch, FaultCharges, FaultStats, FleetTimeline,
+    PlacedRequest,
+};

@@ -7,9 +7,20 @@
 //! That keeps every fleet report a pure function of `(traffic, fleet,
 //! policy)` — byte-identical across host worker counts.
 //!
-//! The three built-in policies mirror the knobs multi-core PIM stacks
-//! expose (PIMCOMP, arXiv 2411.09159): static round-robin, load
-//! balancing, and cache locality.
+//! The built-in policies mirror the knobs multi-core PIM stacks expose
+//! (PIMCOMP, arXiv 2411.09159): static round-robin, load balancing,
+//! cache locality, and shortest-expected-delay queueing.
+//!
+//! # Tie-breaking and membership contract
+//!
+//! Every built-in policy resolves ties by the **lowest chip index**, and
+//! the index is the chip's *permanent identity* in the
+//! [`FleetConfig`](super::FleetConfig) — not its position among the
+//! currently-active chips.  When chips leave and rejoin the fleet
+//! (ISSUE 6 fault injection, [`FleetState::active`]), a returning chip
+//! re-enters tie-breaks under its original index: a tie between chips
+//! `{0, 2}` resolves to 0 whether or not chip 1 is up.  The unit tests
+//! pin this contract for [`LeastLoaded`] across leave/join transitions.
 
 use std::collections::HashMap;
 
@@ -35,6 +46,11 @@ pub struct FleetState<'a> {
     pub busy_until: &'a [u64],
     /// The dispatch cycle (the request's arrival).
     pub now: u64,
+    /// Chips currently accepting work, indexed like `busy_until`.
+    /// `None` means every chip is eligible (the fault-free fast path);
+    /// the fault timeline masks failed/draining chips out.  At least one
+    /// chip is always eligible when `place` is called.
+    pub active: Option<&'a [bool]>,
 }
 
 impl FleetState<'_> {
@@ -43,21 +59,37 @@ impl FleetState<'_> {
         self.busy_until.len()
     }
 
+    /// Whether `chip` currently accepts new requests.
+    pub fn eligible(&self, chip: usize) -> bool {
+        self.active.map_or(true, |a| a[chip])
+    }
+
     /// Outstanding queued work on `chip` at `now`, in cycles.
     pub fn backlog(&self, chip: usize) -> u64 {
         self.busy_until[chip].saturating_sub(self.now)
     }
 
-    /// Chip with the smallest backlog; ties broken by lowest chip index
-    /// (the deterministic tie-break every policy shares).
+    /// Eligible chip with the smallest backlog; ties broken by lowest
+    /// chip index (the deterministic tie-break every policy shares —
+    /// see the module-level ordering contract).
     pub fn least_loaded(&self) -> usize {
-        let mut best = 0;
-        for c in 1..self.chips() {
-            if self.backlog(c) < self.backlog(best) {
-                best = c;
+        self.min_by_key(|s, c| s.backlog(c))
+    }
+
+    /// Eligible chip minimizing `key`, ties by lowest chip index.
+    fn min_by_key(&self, key: impl Fn(&Self, usize) -> u64) -> usize {
+        let mut best = None;
+        for c in 0..self.chips() {
+            if !self.eligible(c) {
+                continue;
+            }
+            let k = key(self, c);
+            match best {
+                Some((_, bk)) if bk <= k => {}
+                _ => best = Some((c, k)),
             }
         }
-        best
+        best.map(|(c, _)| c).unwrap_or(0)
     }
 }
 
@@ -67,12 +99,15 @@ pub trait Placement {
     fn name(&self) -> &'static str;
 
     /// Chip for this dispatch.  Out-of-range returns are clamped by the
-    /// timeline; implementations should stay within `0..state.chips()`.
+    /// timeline; implementations should stay within `0..state.chips()`
+    /// and pick an [eligible](FleetState::eligible) chip.
     fn place(&mut self, ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize;
 }
 
 /// Static round-robin over chips in dispatch order — the replicated-chip
-/// sharding of earlier PRs, now expressed as a policy.
+/// sharding of earlier PRs, now expressed as a policy.  Ineligible chips
+/// are skipped without consuming a turn's worth of fairness: the counter
+/// advances past them to the next eligible chip.
 #[derive(Debug, Default)]
 pub struct RoundRobin {
     next: usize,
@@ -91,14 +126,19 @@ impl Placement for RoundRobin {
     }
 
     fn place(&mut self, _ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize {
-        let c = self.next % state.chips();
-        self.next = self.next.wrapping_add(1);
-        c
+        for _ in 0..state.chips() {
+            let c = self.next % state.chips();
+            self.next = self.next.wrapping_add(1);
+            if state.eligible(c) {
+                return c;
+            }
+        }
+        0
     }
 }
 
-/// Greedy load balancing: the chip with the least outstanding queued
-/// work at dispatch time, ties broken by chip index.
+/// Greedy load balancing: the eligible chip with the least outstanding
+/// queued work at dispatch time, ties broken by chip index.
 #[derive(Debug, Default)]
 pub struct LeastLoaded;
 
@@ -114,7 +154,10 @@ impl Placement for LeastLoaded {
 
 /// Cache locality: a workload class stays on the chip that first served
 /// it (that chip already generated — and cached — the class's program).
-/// First appearance places least-loaded, ties by chip index.
+/// First appearance places least-loaded, ties by chip index.  When the
+/// owning chip leaves the fleet the class is re-owned by the
+/// least-loaded eligible chip (the new owner holds the weights after the
+/// migration re-write, so the pin moves with them).
 #[derive(Debug, Default)]
 pub struct ClassAffinity {
     owner: HashMap<usize, usize>,
@@ -134,11 +177,32 @@ impl Placement for ClassAffinity {
 
     fn place(&mut self, ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize {
         if let Some(&c) = self.owner.get(&ctx.class) {
-            return c;
+            if state.eligible(c) {
+                return c;
+            }
         }
         let c = state.least_loaded();
         self.owner.insert(ctx.class, c);
         c
+    }
+}
+
+/// Shortest expected delay (ISSUE 6): the eligible chip minimizing
+/// `backlog + service_on[chip]` — the request's expected completion
+/// delay, combining queueing *and* the per-chip service estimate the
+/// heterogeneous batcher already computes.  Unlike [`LeastLoaded`] it
+/// will queue behind a fast chip rather than start immediately on a
+/// slow one when that finishes the request sooner.  Ties by chip index.
+#[derive(Debug, Default)]
+pub struct ShortestExpectedDelay;
+
+impl Placement for ShortestExpectedDelay {
+    fn name(&self) -> &'static str {
+        PlacementPolicy::ShortestExpectedDelay.name()
+    }
+
+    fn place(&mut self, ctx: &DispatchContext<'_>, state: &FleetState<'_>) -> usize {
+        state.min_by_key(|s, c| s.backlog(c).saturating_add(ctx.service_on[c]))
     }
 }
 
@@ -151,14 +215,17 @@ pub enum PlacementPolicy {
     LeastLoaded,
     /// [`ClassAffinity`].
     ClassAffinity,
+    /// [`ShortestExpectedDelay`].
+    ShortestExpectedDelay,
 }
 
 impl PlacementPolicy {
     /// Every built-in policy, in CLI order.
-    pub const ALL: [PlacementPolicy; 3] = [
+    pub const ALL: [PlacementPolicy; 4] = [
         PlacementPolicy::RoundRobin,
         PlacementPolicy::LeastLoaded,
         PlacementPolicy::ClassAffinity,
+        PlacementPolicy::ShortestExpectedDelay,
     ];
 
     /// Short name used in reports and CLI arguments.
@@ -167,6 +234,7 @@ impl PlacementPolicy {
             PlacementPolicy::RoundRobin => "rr",
             PlacementPolicy::LeastLoaded => "least-loaded",
             PlacementPolicy::ClassAffinity => "affinity",
+            PlacementPolicy::ShortestExpectedDelay => "sed",
         }
     }
 
@@ -176,6 +244,9 @@ impl PlacementPolicy {
             "rr" | "round-robin" | "roundrobin" => Some(PlacementPolicy::RoundRobin),
             "least-loaded" | "ll" | "leastloaded" => Some(PlacementPolicy::LeastLoaded),
             "affinity" | "class-affinity" => Some(PlacementPolicy::ClassAffinity),
+            "sed" | "shortest-delay" | "shortest-expected-delay" => {
+                Some(PlacementPolicy::ShortestExpectedDelay)
+            }
             _ => None,
         }
     }
@@ -186,6 +257,7 @@ impl PlacementPolicy {
             PlacementPolicy::RoundRobin => Box::new(RoundRobin::new()),
             PlacementPolicy::LeastLoaded => Box::new(LeastLoaded),
             PlacementPolicy::ClassAffinity => Box::new(ClassAffinity::new()),
+            PlacementPolicy::ShortestExpectedDelay => Box::new(ShortestExpectedDelay),
         }
     }
 }
@@ -214,6 +286,10 @@ mod tests {
             PlacementPolicy::from_name("LL"),
             Some(PlacementPolicy::LeastLoaded)
         );
+        assert_eq!(
+            PlacementPolicy::from_name("shortest-delay"),
+            Some(PlacementPolicy::ShortestExpectedDelay)
+        );
     }
 
     #[test]
@@ -223,9 +299,24 @@ mod tests {
         let state = FleetState {
             busy_until: &busy,
             now: 0,
+            active: None,
         };
         let picks: Vec<usize> = (0..6).map(|_| p.place(&ctx(0), &state)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_inactive_chips() {
+        let mut p = RoundRobin::new();
+        let busy = [0u64; 3];
+        let active = [true, false, true];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 0,
+            active: Some(&active),
+        };
+        let picks: Vec<usize> = (0..4).map(|_| p.place(&ctx(0), &state)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
     }
 
     #[test]
@@ -235,6 +326,7 @@ mod tests {
         let state = FleetState {
             busy_until: &busy,
             now: 10,
+            active: None,
         };
         assert_eq!(state.backlog(0), 40);
         assert_eq!(state.backlog(1), 10);
@@ -244,8 +336,37 @@ mod tests {
         let state = FleetState {
             busy_until: &busy,
             now: 10,
+            active: None,
         };
         assert_eq!(p.place(&ctx(0), &state), 0);
+    }
+
+    #[test]
+    fn least_loaded_ties_stay_index_ordered_across_leave_and_join() {
+        // The ordering contract (module docs): the tie-break index is
+        // the chip's permanent FleetConfig identity.  Three chips with
+        // equal backlogs tie to 0; chip 0 leaving shifts the tie to 1;
+        // chip 0 rejoining restores it — regardless of who left in
+        // between.
+        fn mk<'a>(active: &'a [bool]) -> FleetState<'a> {
+            FleetState {
+                busy_until: &[20, 20, 20],
+                now: 0,
+                active: Some(active),
+            }
+        }
+        let mut p = LeastLoaded;
+        let all_up = [true, true, true];
+        let zero_down = [false, true, true];
+        let mid_down = [true, false, true];
+        assert_eq!(p.place(&ctx(0), &mk(&all_up)), 0);
+        assert_eq!(p.place(&ctx(0), &mk(&zero_down)), 1, "0 left: tie -> 1");
+        assert_eq!(p.place(&ctx(0), &mk(&all_up)), 0, "0 rejoined: tie -> 0");
+        assert_eq!(
+            p.place(&ctx(0), &mk(&mid_down)),
+            0,
+            "chip 1 down must not renumber chip 2 into the tie-break"
+        );
     }
 
     #[test]
@@ -255,6 +376,7 @@ mod tests {
         let state = FleetState {
             busy_until: &busy,
             now: 0,
+            active: None,
         };
         assert_eq!(p.place(&ctx(7), &state), 1, "first sighting: least loaded");
         // Class 7 stays on chip 1 even when chip 1 is now the busiest.
@@ -262,9 +384,83 @@ mod tests {
         let state = FleetState {
             busy_until: &busy,
             now: 0,
+            active: None,
         };
         assert_eq!(p.place(&ctx(7), &state), 1);
         // A new class goes by load again.
         assert_eq!(p.place(&ctx(8), &state), 0);
+    }
+
+    #[test]
+    fn class_affinity_reowns_when_the_owner_leaves() {
+        let mut p = ClassAffinity::new();
+        let busy = [100u64, 0, 50];
+        let up = [true, true, true];
+        let one_down = [true, false, true];
+        assert_eq!(
+            p.place(
+                &ctx(7),
+                &FleetState {
+                    busy_until: &busy,
+                    now: 0,
+                    active: Some(&up),
+                }
+            ),
+            1
+        );
+        // Owner chip 1 fails: the class re-pins to the least-loaded
+        // survivor (chip 2 here) and stays there after chip 1 rejoins —
+        // the weights moved with the migration re-write.
+        assert_eq!(
+            p.place(
+                &ctx(7),
+                &FleetState {
+                    busy_until: &busy,
+                    now: 0,
+                    active: Some(&one_down),
+                }
+            ),
+            2
+        );
+        assert_eq!(
+            p.place(
+                &ctx(7),
+                &FleetState {
+                    busy_until: &busy,
+                    now: 0,
+                    active: Some(&up),
+                }
+            ),
+            2,
+            "re-owned pin survives the old owner's return"
+        );
+    }
+
+    #[test]
+    fn shortest_expected_delay_weighs_service_against_backlog() {
+        let mut p = ShortestExpectedDelay;
+        // Chip 0: empty queue but slow (service 100).  Chip 1: 30 cycles
+        // of backlog but fast (service 20) — expected delay 50 beats
+        // 100, so SED queues where LeastLoaded would not.
+        let busy = [0u64, 30];
+        let state = FleetState {
+            busy_until: &busy,
+            now: 0,
+            active: None,
+        };
+        let c = DispatchContext {
+            id: 0,
+            arrival_cycle: 0,
+            class: 0,
+            service_on: &[100, 20],
+        };
+        assert_eq!(p.place(&c, &state), 1);
+        assert_eq!(LeastLoaded.place(&c, &state), 0, "LL sees only backlog");
+        // Ties resolve by index like every other policy.
+        let even = DispatchContext {
+            service_on: &[30, 0],
+            ..c
+        };
+        assert_eq!(p.place(&even, &state), 0, "30+0 == 0+30 -> lowest index");
     }
 }

@@ -7,7 +7,21 @@
 //! over dispatches — O(n·chips) — yet yields exact per-request queueing
 //! and service latency under the chosen policy, replacing the
 //! single-chip reference-timeline proxy of earlier PRs.
+//!
+//! Two entry points share that model:
+//!
+//! - [`dispatch_fifo`] — the fault-free fast path (PR 3 behavior,
+//!   byte-stable).
+//! - [`dispatch_fifo_faulty`] — the same pass interleaved with a
+//!   [`FaultPlan`] and an optional [`AutoscaleConfig`]: failed chips
+//!   lose their queue (survivors are redispatched and charged weight
+//!   re-writes through [`FaultCharges`]), draining chips finish then
+//!   stop accepting, and joining chips pay a cold weight load before
+//!   serving.  With the empty plan and no autoscaler it reproduces
+//!   [`dispatch_fifo`] bit-for-bit (asserted in the unit tests and
+//!   `benches/fleet_perf.rs`).
 
+use super::faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan};
 use super::placement::{DispatchContext, FleetState, Placement};
 
 /// One request to dispatch.
@@ -28,10 +42,60 @@ pub struct Dispatch {
 pub struct PlacedRequest {
     /// Serving chip.
     pub chip: usize,
-    /// Cycle service began (`max(arrival, chip drain time)`).
+    /// Cycle service began (`max(arrival, chip drain time)`; for a
+    /// redispatched request, `max(fail cycle, new chip drain time)`).
     pub start_cycle: u64,
-    /// Service cycles on the serving chip's architecture.
+    /// Service cycles on the serving chip's architecture, including any
+    /// migration weight re-write charged on redispatch.
     pub service_cycles: u64,
+    /// True when the request was redispatched off a failed chip at
+    /// least once.
+    pub migrated: bool,
+    /// True when no active chip ever became available: the request is
+    /// explicitly dropped and counted, never silently lost.  Dropped
+    /// requests have no meaningful chip/start/service.
+    pub dropped: bool,
+}
+
+/// Fault-path accounting carried next to the timeline.  The fault-free
+/// path reports the identity values (full availability, zero
+/// migration), so report columns derived from it are constants there.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultStats {
+    /// Requests redispatched off a failed chip at least once.
+    pub redispatched: u32,
+    /// Requests dropped because no chip was active and none joined
+    /// later.
+    pub dropped: u32,
+    /// Total weight bytes written for migrations and cold joins.
+    pub migration_bytes: u64,
+    /// Weight bytes written *into* each chip (migrations + cold loads).
+    pub chip_migration_bytes: Vec<u64>,
+    /// Cycles each chip was active (accepting and able to serve),
+    /// clamped to the makespan.
+    pub chip_available_cycles: Vec<u64>,
+    /// Redispatched requests finally served by each chip.
+    pub chip_redispatched: Vec<u64>,
+    /// Σ final latency of served redispatched requests (their mean is
+    /// the `redispatch_mean_latency` report column).
+    pub redispatch_latency_cycles: u64,
+    /// Autoscaler join actions taken.
+    pub scale_ups: u32,
+    /// Autoscaler drain actions taken.
+    pub scale_downs: u32,
+}
+
+impl FaultStats {
+    /// The fault-free identity: every chip available for the whole
+    /// timeline, nothing migrated or dropped.
+    pub fn all_up(chips: usize, makespan: u64) -> Self {
+        Self {
+            chip_migration_bytes: vec![0; chips],
+            chip_available_cycles: vec![makespan; chips],
+            chip_redispatched: vec![0; chips],
+            ..Self::default()
+        }
+    }
 }
 
 /// The outcome of one timeline run.
@@ -39,12 +103,38 @@ pub struct PlacedRequest {
 pub struct FleetTimeline {
     /// Per-dispatch placements, indexed like the input slice.
     pub placements: Vec<PlacedRequest>,
-    /// Σ service cycles executed per chip.
+    /// Σ service cycles executed per chip (goodput: work lost to a
+    /// mid-service failure is not counted).
     pub chip_busy_cycles: Vec<u64>,
     /// Requests served per chip.
     pub chip_requests: Vec<u64>,
-    /// Finish cycle of the last request (0 for an empty timeline).
+    /// Finish cycle of the last served request (0 for an empty
+    /// timeline).
     pub makespan: u64,
+    /// Fault/availability accounting (identity values on the fault-free
+    /// path).
+    pub faults: FaultStats,
+}
+
+/// Weight-traffic pricing the fault path charges through the write
+/// model (see [`crate::model::eqs::weight_write_cycles`]).
+pub struct FaultCharges<'a> {
+    /// `(dispatch index, destination chip)` → `(weight bytes moved,
+    /// write cycles charged)` for redispatching that request's class
+    /// onto that chip.
+    pub migrate: &'a dyn Fn(usize, usize) -> (u64, u64),
+    /// `chip` → `(weight bytes, write cycles)` of the cold full-chip
+    /// weight load a joining chip pays before serving.
+    pub cold: &'a dyn Fn(usize) -> (u64, u64),
+}
+
+impl FaultCharges<'_> {
+    /// Zero-cost charges (membership churn without weight traffic) —
+    /// for unit tests and structural experiments.
+    pub const FREE: FaultCharges<'static> = FaultCharges {
+        migrate: &|_, _| (0, 0),
+        cold: &|_| (0, 0),
+    };
 }
 
 /// Run the timeline: dispatch every request in `(arrival, id)` order
@@ -72,6 +162,8 @@ pub fn dispatch_fifo(
             chip: 0,
             start_cycle: 0,
             service_cycles: 0,
+            migrated: false,
+            dropped: false,
         };
         dispatches.len()
     ];
@@ -92,6 +184,7 @@ pub fn dispatch_fifo(
                 &FleetState {
                     busy_until: &busy_until,
                     now: d.arrival_cycle,
+                    active: None,
                 },
             )
             .min(chips - 1);
@@ -103,20 +196,369 @@ pub fn dispatch_fifo(
             chip,
             start_cycle: start,
             service_cycles: service[chip],
+            migrated: false,
+            dropped: false,
         };
     }
+    let makespan = busy_until.iter().copied().max().unwrap_or(0);
     FleetTimeline {
         placements,
         chip_busy_cycles,
         chip_requests,
-        makespan: busy_until.iter().copied().max().unwrap_or(0),
+        makespan,
+        faults: FaultStats::all_up(chips, makespan),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ChipStatus {
+    Active,
+    Draining,
+    Down,
+}
+
+/// A request waiting for any chip to come (back) up.
+#[derive(Debug, Clone, Copy)]
+struct Parked {
+    idx: usize,
+    migrated: bool,
+}
+
+/// Mutable state of one fault-aware timeline run; methods keep the
+/// placement/redispatch logic in one place for every call site (arrival,
+/// failure redispatch, parked flush, autoscaler action).
+struct FaultRun<'a, S: Fn(usize, usize) -> u64> {
+    chips: usize,
+    dispatches: &'a [Dispatch],
+    service_on: S,
+    policy: &'a mut dyn Placement,
+    charges: &'a FaultCharges<'a>,
+    busy_until: Vec<u64>,
+    status: Vec<ChipStatus>,
+    active_since: Vec<Option<u64>>,
+    avail: Vec<u64>,
+    queues: Vec<Vec<usize>>,
+    parked: Vec<Parked>,
+    placements: Vec<PlacedRequest>,
+    placed: Vec<bool>,
+    service: Vec<u64>,
+    stats: FaultStats,
+}
+
+impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
+    fn any_active(&self) -> bool {
+        self.status.iter().any(|&s| s == ChipStatus::Active)
+    }
+
+    fn active_count(&self) -> usize {
+        self.status
+            .iter()
+            .filter(|&&s| s == ChipStatus::Active)
+            .count()
+    }
+
+    /// Place dispatch `i` at cycle `now`.  `migrating` charges the
+    /// weight re-write on the destination.  Parks the request when no
+    /// chip is active.
+    fn place(&mut self, i: usize, now: u64, migrating: bool) {
+        if !self.any_active() {
+            self.parked.push(Parked {
+                idx: i,
+                migrated: migrating || self.placements[i].migrated,
+            });
+            // A redispatch that found no destination is pending again —
+            // it either gets placed by a later join or drops.
+            self.placements[i].dropped = true;
+            self.placed[i] = false;
+            return;
+        }
+        let d = &self.dispatches[i];
+        for c in 0..self.chips {
+            self.service[c] = (self.service_on)(i, c);
+        }
+        let eligible: Vec<bool> = self
+            .status
+            .iter()
+            .map(|&s| s == ChipStatus::Active)
+            .collect();
+        let mut chip = self
+            .policy
+            .place(
+                &DispatchContext {
+                    id: d.id,
+                    arrival_cycle: d.arrival_cycle,
+                    class: d.class,
+                    service_on: &self.service,
+                },
+                &FleetState {
+                    busy_until: &self.busy_until,
+                    now,
+                    active: Some(&eligible),
+                },
+            )
+            .min(self.chips - 1);
+        if !eligible[chip] {
+            // Defensive clamp for policies that ignore the mask: take
+            // the lowest-index active chip (the shared tie-break).
+            chip = eligible.iter().position(|&e| e).unwrap();
+        }
+        let (mig_bytes, mig_cycles) = if migrating {
+            (self.charges.migrate)(i, chip)
+        } else {
+            (0, 0)
+        };
+        let start = self.busy_until[chip].max(now);
+        let total = self.service[chip] + mig_cycles;
+        self.busy_until[chip] = start + total;
+        self.queues[chip].push(i);
+        self.placements[i] = PlacedRequest {
+            chip,
+            start_cycle: start,
+            service_cycles: total,
+            migrated: migrating || self.placements[i].migrated,
+            dropped: false,
+        };
+        self.placed[i] = true;
+        if migrating {
+            self.stats.migration_bytes += mig_bytes;
+            self.stats.chip_migration_bytes[chip] += mig_bytes;
+        }
+    }
+
+    /// Apply one membership event.  Idempotent per target state (a
+    /// `fail` of a down chip, a `join` of an active chip, etc. are
+    /// no-ops).
+    fn apply(&mut self, ev: FaultEvent) {
+        let c = ev.chip;
+        match ev.kind {
+            FaultKind::Fail => {
+                if self.status[c] == ChipStatus::Down {
+                    return;
+                }
+                if let Some(s) = self.active_since[c].take() {
+                    self.avail[c] += ev.cycle.saturating_sub(s);
+                }
+                self.status[c] = ChipStatus::Down;
+                self.busy_until[c] = self.busy_until[c].min(ev.cycle);
+                // Everything unfinished at the fail cycle is lost and
+                // redispatched, FIFO order preserved.
+                let queue = std::mem::take(&mut self.queues[c]);
+                for i in queue {
+                    let p = self.placements[i];
+                    if p.dropped || p.start_cycle + p.service_cycles <= ev.cycle {
+                        continue;
+                    }
+                    self.place(i, ev.cycle, true);
+                }
+            }
+            FaultKind::Drain => {
+                if self.status[c] != ChipStatus::Active {
+                    return;
+                }
+                if let Some(s) = self.active_since[c].take() {
+                    self.avail[c] += ev.cycle.saturating_sub(s);
+                }
+                self.status[c] = ChipStatus::Draining;
+            }
+            FaultKind::Join => {
+                if self.status[c] == ChipStatus::Active {
+                    return;
+                }
+                let (bytes, cold_cycles) = (self.charges.cold)(c);
+                self.busy_until[c] = self.busy_until[c].max(ev.cycle) + cold_cycles;
+                self.status[c] = ChipStatus::Active;
+                self.active_since[c] = Some(self.busy_until[c]);
+                self.stats.migration_bytes += bytes;
+                self.stats.chip_migration_bytes[c] += bytes;
+                // Anything parked gets its chance now, in park order.
+                let waiting = std::mem::take(&mut self.parked);
+                for p in waiting {
+                    self.place(p.idx, ev.cycle, p.migrated);
+                }
+            }
+        }
+    }
+}
+
+/// Nearest-rank p99 of a window (the autoscaler's SLO metric).
+fn p99_of(window: &[u64]) -> u64 {
+    let mut v = window.to_vec();
+    v.sort_unstable();
+    let rank = ((v.len() as f64) * 0.99).ceil() as usize;
+    v[rank.saturating_sub(1).min(v.len() - 1)]
+}
+
+/// The fault-aware timeline: [`dispatch_fifo`] semantics interleaved
+/// with a [`FaultPlan`] and an optional [`AutoscaleConfig`].
+///
+/// Events at cycle `t` apply before requests arriving at `t` are
+/// dispatched; redispatches and parked-request flushes run inline at
+/// the event cycle, FIFO order preserved, so the whole run stays a pure
+/// function of `(dispatches, plan, policy, charges)` — byte-identical
+/// across host worker counts.  With `plan.is_empty()` and no autoscaler
+/// the output equals [`dispatch_fifo`] exactly.
+pub fn dispatch_fifo_faulty(
+    chips: usize,
+    dispatches: &[Dispatch],
+    service_on: impl Fn(usize, usize) -> u64,
+    policy: &mut dyn Placement,
+    plan: &FaultPlan,
+    autoscale: Option<&AutoscaleConfig>,
+    charges: &FaultCharges<'_>,
+) -> FleetTimeline {
+    let chips = chips.max(1);
+    let mut order: Vec<usize> = (0..dispatches.len()).collect();
+    order.sort_by_key(|&i| (dispatches[i].arrival_cycle, dispatches[i].id));
+    let horizon = order
+        .last()
+        .map(|&i| dispatches[i].arrival_cycle)
+        .unwrap_or(0);
+    let events = plan.expand(chips, horizon);
+
+    let mut run = FaultRun {
+        chips,
+        dispatches,
+        service_on,
+        policy,
+        charges,
+        busy_until: vec![0; chips],
+        status: vec![ChipStatus::Active; chips],
+        active_since: vec![Some(0); chips],
+        avail: vec![0; chips],
+        queues: vec![Vec::new(); chips],
+        parked: Vec::new(),
+        placements: vec![
+            PlacedRequest {
+                chip: 0,
+                start_cycle: 0,
+                service_cycles: 0,
+                migrated: false,
+                dropped: true,
+            };
+            dispatches.len()
+        ],
+        placed: vec![false; dispatches.len()],
+        service: vec![0; chips],
+        stats: FaultStats::all_up(chips, 0),
+    };
+    if let Some(a) = autoscale {
+        for c in a.min_chips.max(1).min(chips)..chips {
+            run.status[c] = ChipStatus::Down;
+            run.active_since[c] = None;
+        }
+    }
+
+    let mut ei = 0usize;
+    let mut window: Vec<u64> = Vec::new();
+    let mut cooldown = 0u32;
+    for &i in &order {
+        let now = dispatches[i].arrival_cycle;
+        while ei < events.len() && events[ei].cycle <= now {
+            run.apply(events[ei]);
+            ei += 1;
+        }
+        run.place(i, now, false);
+        let a = match autoscale {
+            Some(a) => a,
+            None => continue,
+        };
+        if run.placed[i] {
+            let p = run.placements[i];
+            window.push(p.start_cycle + p.service_cycles - now);
+        }
+        if window.len() < a.window.max(1) {
+            continue;
+        }
+        let p99 = p99_of(&window);
+        window.clear();
+        if cooldown > 0 {
+            cooldown -= 1;
+            continue;
+        }
+        if p99 > a.slo_p99 {
+            if let Some(c) = run.status.iter().position(|&s| s == ChipStatus::Down) {
+                run.apply(FaultEvent {
+                    cycle: now,
+                    chip: c,
+                    kind: FaultKind::Join,
+                });
+                run.stats.scale_ups += 1;
+                cooldown = a.cooldown;
+            }
+        } else if p99.saturating_mul(2) < a.slo_p99 && run.active_count() > a.min_chips.max(1) {
+            let c = run.status.iter().rposition(|&s| s == ChipStatus::Active).unwrap();
+            run.apply(FaultEvent {
+                cycle: now,
+                chip: c,
+                kind: FaultKind::Drain,
+            });
+            run.stats.scale_downs += 1;
+            cooldown = a.cooldown;
+        }
+    }
+    // Late events still matter: a join after the last arrival rescues
+    // parked requests.
+    while ei < events.len() {
+        run.apply(events[ei]);
+        ei += 1;
+    }
+
+    let FaultRun {
+        mut placements,
+        parked,
+        active_since,
+        mut avail,
+        mut stats,
+        ..
+    } = run;
+    stats.dropped = parked.len() as u32;
+    for p in &parked {
+        placements[p.idx].migrated = p.migrated;
+    }
+    let mut chip_busy_cycles = vec![0u64; chips];
+    let mut chip_requests = vec![0u64; chips];
+    let mut makespan = 0u64;
+    for p in &placements {
+        if p.dropped {
+            continue;
+        }
+        chip_busy_cycles[p.chip] += p.service_cycles;
+        chip_requests[p.chip] += 1;
+        makespan = makespan.max(p.start_cycle + p.service_cycles);
+        if p.migrated {
+            stats.redispatched += 1;
+            stats.chip_redispatched[p.chip] += 1;
+        }
+    }
+    for (i, p) in placements.iter().enumerate() {
+        if p.migrated && !p.dropped {
+            stats.redispatch_latency_cycles +=
+                p.start_cycle + p.service_cycles - dispatches[i].arrival_cycle;
+        }
+        if p.dropped && p.migrated {
+            stats.redispatched += 1;
+        }
+    }
+    for (c, since) in active_since.iter().enumerate() {
+        if let Some(s) = since {
+            avail[c] += makespan.saturating_sub(*s);
+        }
+        avail[c] = avail[c].min(makespan);
+    }
+    stats.chip_available_cycles = avail;
+    FleetTimeline {
+        placements,
+        chip_busy_cycles,
+        chip_requests,
+        makespan,
+        faults: stats,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fleet::{LeastLoaded, RoundRobin};
+    use crate::fleet::{LeastLoaded, PlacementPolicy, RoundRobin};
 
     fn dispatches(arrivals: &[u64]) -> Vec<Dispatch> {
         arrivals
@@ -140,6 +582,7 @@ mod tests {
         assert_eq!(t.makespan, 30);
         assert_eq!(t.chip_busy_cycles, vec![30]);
         assert_eq!(t.chip_requests, vec![3]);
+        assert_eq!(t.faults, FaultStats::all_up(1, 30));
     }
 
     #[test]
@@ -187,5 +630,218 @@ mod tests {
         assert!(t.placements.is_empty());
         assert_eq!(t.makespan, 0);
         assert_eq!(t.chip_busy_cycles, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn empty_plan_reproduces_the_fault_free_path_bit_for_bit() {
+        let d = dispatches(&[0, 3, 3, 10, 11, 40, 41, 42]);
+        let svc = |i: usize, c: usize| 7 + (i as u64 % 3) * 5 + c as u64;
+        for policy in PlacementPolicy::ALL {
+            let plain = dispatch_fifo(3, &d, svc, policy.instance().as_mut());
+            let faulty = dispatch_fifo_faulty(
+                3,
+                &d,
+                svc,
+                policy.instance().as_mut(),
+                &FaultPlan::none(),
+                None,
+                &FaultCharges::FREE,
+            );
+            assert_eq!(plain, faulty, "policy {}", policy.name());
+        }
+    }
+
+    #[test]
+    fn failed_chip_redispatches_its_queue_with_migration_charge() {
+        // Two chips, four requests at cycle 0, service 100 each: RR puts
+        // ids 0,2 on chip 0 and 1,3 on chip 1.  Chip 1 fails at cycle 50
+        // — id 1 is mid-service, id 3 queued; both land on chip 0 with a
+        // 10-cycle weight re-write each.
+        let d = dispatches(&[0, 0, 0, 0]);
+        let plan = FaultPlan::parse("fail@50@1").unwrap();
+        let charges = FaultCharges {
+            migrate: &|_, _| (1024, 10),
+            cold: &|_| (0, 0),
+        };
+        let t = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 100,
+            &mut RoundRobin::new(),
+            &plan,
+            None,
+            &charges,
+        );
+        assert!(t.placements.iter().all(|p| !p.dropped));
+        assert_eq!(t.placements[1].chip, 0);
+        assert_eq!(t.placements[3].chip, 0);
+        assert!(t.placements[1].migrated && t.placements[3].migrated);
+        assert_eq!(t.placements[1].service_cycles, 110, "service + migration");
+        // Chip 0's FIFO: id 0 [0,100), id 2 [100,200), then the two
+        // migrants queued from the fail cycle.
+        assert_eq!(t.placements[1].start_cycle, 200);
+        assert_eq!(t.placements[3].start_cycle, 310);
+        assert_eq!(t.makespan, 420);
+        assert_eq!(t.faults.redispatched, 2);
+        assert_eq!(t.faults.migration_bytes, 2048);
+        assert_eq!(t.faults.chip_migration_bytes, vec![2048, 0]);
+        assert_eq!(t.chip_requests, vec![4, 0]);
+        // Chip 1 was available [0, 50) of a 420-cycle makespan; lost
+        // work (50 cycles of id 1) is not goodput.
+        assert_eq!(t.faults.chip_available_cycles, vec![420, 50]);
+        assert_eq!(t.chip_busy_cycles[1], 0);
+        assert_eq!(
+            t.faults.redispatch_latency_cycles,
+            (310 - 0) + (420 - 0),
+            "final latencies of ids 1 and 3"
+        );
+    }
+
+    #[test]
+    fn drain_finishes_queue_then_stops_accepting() {
+        // Chip 1 drains at cycle 10: its queued id 1 completes, but the
+        // cycle-20 arrival must go to chip 0 despite chip 1 being idle.
+        let d = dispatches(&[0, 0, 20]);
+        let plan = FaultPlan::parse("drain@10@1").unwrap();
+        let t = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 100,
+            &mut LeastLoaded,
+            &plan,
+            None,
+            &FaultCharges::FREE,
+        );
+        assert_eq!(t.placements[1].chip, 1);
+        assert_eq!(t.placements[1].service_cycles, 100, "drained, not killed");
+        assert_eq!(t.placements[2].chip, 0, "draining chip accepts nothing new");
+        assert_eq!(t.faults.redispatched, 0);
+    }
+
+    #[test]
+    fn join_pays_cold_load_before_serving() {
+        let d = dispatches(&[0, 500]);
+        // Chip 1 joins at cycle 400 with a 50-cycle cold load; the
+        // cycle-500 arrival sees chip 0 busy until 1000 and picks the
+        // fresh chip.
+        let plan = FaultPlan::parse("fail@0@1,join@400@1").unwrap();
+        let charges = FaultCharges {
+            migrate: &|_, _| (0, 0),
+            cold: &|_| (4096, 50),
+        };
+        let t = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 1000,
+            &mut LeastLoaded,
+            &plan,
+            None,
+            &charges,
+        );
+        assert_eq!(t.placements[0].chip, 0);
+        assert_eq!(t.placements[1].chip, 1);
+        assert_eq!(t.placements[1].start_cycle, 500, "cold load done by 450");
+        assert_eq!(t.faults.migration_bytes, 4096);
+        assert_eq!(t.faults.chip_migration_bytes, vec![0, 4096]);
+    }
+
+    #[test]
+    fn total_outage_parks_until_join_or_drops() {
+        // Both chips fail at 10; requests arriving after park.  A join
+        // at 1000 rescues the first stream; without it they drop.
+        let d = dispatches(&[20, 30]);
+        let rescued = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 10,
+            &mut RoundRobin::new(),
+            &FaultPlan::parse("fail@10@0,fail@10@1,join@1000@0").unwrap(),
+            None,
+            &FaultCharges::FREE,
+        );
+        assert!(rescued.placements.iter().all(|p| !p.dropped));
+        assert_eq!(rescued.placements[0].start_cycle, 1000);
+        assert_eq!(rescued.placements[1].start_cycle, 1010, "park order is FIFO");
+        assert_eq!(rescued.faults.dropped, 0);
+
+        let lost = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 10,
+            &mut RoundRobin::new(),
+            &FaultPlan::parse("fail@10@0,fail@10@1").unwrap(),
+            None,
+            &FaultCharges::FREE,
+        );
+        assert!(lost.placements.iter().all(|p| p.dropped));
+        assert_eq!(lost.faults.dropped, 2, "dropped requests are counted");
+        assert_eq!(lost.makespan, 0, "nothing was ever served");
+    }
+
+    #[test]
+    fn autoscaler_grows_under_slo_pressure_and_respects_the_floor() {
+        // 1-chip floor, service 100, back-to-back arrivals: latency
+        // grows linearly, so any finite SLO is eventually breached and
+        // the scaler must bring up chip 1 (cold load charged).
+        let d = dispatches(&(0..64).map(|i| i * 10).collect::<Vec<_>>());
+        let cfg = AutoscaleConfig {
+            slo_p99: 500,
+            window: 8,
+            min_chips: 1,
+            cooldown: 1,
+        };
+        let charges = FaultCharges {
+            migrate: &|_, _| (0, 0),
+            cold: &|_| (2048, 25),
+        };
+        let t = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 100,
+            &mut LeastLoaded,
+            &FaultPlan::none(),
+            Some(&cfg),
+            &charges,
+        );
+        assert!(t.faults.scale_ups >= 1, "SLO breach must add a chip");
+        assert!(t.chip_requests[1] > 0, "the joined chip serves traffic");
+        assert!(t.faults.migration_bytes >= 2048, "cold load was charged");
+        // Identical inputs reproduce the identical timeline.
+        let t2 = dispatch_fifo_faulty(
+            2,
+            &d,
+            |_, _| 100,
+            &mut LeastLoaded,
+            &FaultPlan::none(),
+            Some(&cfg),
+            &charges,
+        );
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn autoscaler_shrinks_when_comfortably_under_slo() {
+        // Huge SLO and sparse arrivals: p99 sits far below slo/2, so the
+        // scaler drains down to the floor and stays there.
+        let d = dispatches(&(0..64).map(|i| i * 10_000).collect::<Vec<_>>());
+        let cfg = AutoscaleConfig {
+            slo_p99: 1_000_000,
+            window: 8,
+            min_chips: 2,
+            cooldown: 0,
+        };
+        let t = dispatch_fifo_faulty(
+            4,
+            &d,
+            |_, _| 100,
+            &mut LeastLoaded,
+            &FaultPlan::none(),
+            Some(&cfg),
+            &FaultCharges::FREE,
+        );
+        // Chips beyond min start down; nothing breaches, so no ups.
+        assert_eq!(t.faults.scale_ups, 0);
+        assert_eq!(t.chip_requests[2] + t.chip_requests[3], 0);
+        assert!(t.placements.iter().all(|p| !p.dropped));
     }
 }

@@ -18,13 +18,14 @@
 //!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
 //! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C | --fleet SPEC]
-//!               [--placement rr|least-loaded|affinity] [--mean-gap G] [--csv-dir D]
+//!               [--placement rr|least-loaded|affinity|sed] [--mean-gap G]
+//!               [--faults PLAN] [--autoscale --slo CYCLES] [--csv-dir D]
 //! gpp-pim fleet [--requests N] [--seed S] [--jobs J] [--sizes 1,2,4 | --fleet SPEC]
-//!               [--placement P|all] [--mean-gap G] [--csv-dir D]
+//!               [--placement P|all] [--faults PLAN] [--mean-gap G] [--csv-dir D]
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
 //! gpp-pim dse  --full [--cores L] [--macros L] [--n-in L] [--bands L] [--buffers L]
 //!              [--tasks N] [--write-speed S] [--jobs N] [--top K] [--unrolled]
-//!              [--fleets 1,2,4] [--placement P|all] [--requests N]
+//!              [--fleets 1,2,4] [--placement P|all] [--faults PLAN] [--requests N]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
@@ -36,7 +37,7 @@ use gpp_pim::api::{
     ReproSpec, RunSpec, RunWorkloadSpec, ServeSpec, Session, SimulateSpec, SinkSet, StdoutSink,
 };
 use gpp_pim::arch::ArchConfig;
-use gpp_pim::fleet::PlacementPolicy;
+use gpp_pim::fleet::{FaultPlan, PlacementPolicy};
 use gpp_pim::isa;
 use gpp_pim::runtime::Runtime;
 use gpp_pim::sched::{CodegenStyle, Strategy};
@@ -208,7 +209,7 @@ fn axis_u32(args: &Args, key: &str) -> Result<Option<Vec<u32>>> {
 fn placement_flag(args: &Args) -> Result<PlacementPolicy> {
     match args.get("placement") {
         Some(p) => PlacementPolicy::from_name(p)
-            .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity)")),
+            .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity|sed)")),
         None => Ok(PlacementPolicy::RoundRobin),
     }
 }
@@ -220,10 +221,21 @@ fn placements_flag(args: &Args) -> Result<Vec<PlacementPolicy>> {
         Some(list) => list
             .split(',')
             .map(|p| {
-                PlacementPolicy::from_name(p.trim())
-                    .ok_or_else(|| anyhow!("bad --placement '{p}' (rr|least-loaded|affinity|all)"))
+                PlacementPolicy::from_name(p.trim()).ok_or_else(|| {
+                    anyhow!("bad --placement '{p}' (rr|least-loaded|affinity|sed|all)")
+                })
             })
             .collect(),
+    }
+}
+
+/// Fault schedule from `--faults PLAN` (default: none).  The plan
+/// grammar is `fail|drain|join@CYCLE@CHIP` / `mtbf@MEAN@SEED`,
+/// comma-separated — the same form `exec` takes via `faults=`.
+fn faults_flag(args: &Args) -> Result<FaultPlan> {
+    match args.get("faults") {
+        Some(v) => FaultPlan::parse(v).map_err(|e| anyhow!("bad --faults '{v}': {e}")),
+        None => Ok(FaultPlan::none()),
     }
 }
 
@@ -398,13 +410,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve",
         &[
             "config", "requests", "seed", "jobs", "chips", "fleet", "placement", "mean-gap",
-            "csv-dir", "bench-json",
+            "faults", "autoscale", "slo", "csv-dir", "bench-json",
         ],
         0,
         Some("serve"),
     )?;
     if args.has("fleet") && args.has("chips") {
         bail!("--fleet and --chips are mutually exclusive");
+    }
+    let autoscale = match args.get("autoscale") {
+        None => false,
+        Some("true") => true,
+        Some("false") => false,
+        Some(v) => bail!("bad --autoscale '{v}' (true|false)"),
+    };
+    let slo = match args.get("slo") {
+        Some(v) => {
+            let slo: u64 = v.parse().with_context(|| format!("--slo {v}"))?;
+            if slo == 0 {
+                bail!("--slo must be >= 1 cycle (got 0)");
+            }
+            Some(slo)
+        }
+        None => None,
+    };
+    if autoscale && slo.is_none() {
+        bail!("--autoscale requires --slo CYCLES (the p99 latency target)");
+    }
+    if slo.is_some() && !autoscale {
+        bail!("--slo requires --autoscale");
     }
     let chips = match args.get("chips") {
         Some(v) => {
@@ -422,6 +456,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         mean_gap: args.get_u64("mean-gap", 2048)?,
         jobs: jobs_flag(args)?,
         placement: placement_flag(args)?,
+        faults: faults_flag(args)?,
+        autoscale,
+        slo,
         chips,
         fleet: args.get("fleet").map(String::from),
     });
@@ -433,8 +470,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     args.check(
         "fleet",
         &[
-            "config", "requests", "seed", "jobs", "sizes", "fleet", "placement", "mean-gap",
-            "csv-dir", "bench-json",
+            "config", "requests", "seed", "jobs", "sizes", "fleet", "placement", "faults",
+            "mean-gap", "csv-dir", "bench-json",
         ],
         0,
         Some("fleet"),
@@ -452,6 +489,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         mean_gap: args.get_u64("mean-gap", 1024)?,
         jobs: jobs_flag(args)?,
         placements: placements_flag(args)?,
+        faults: faults_flag(args)?,
         sizes,
         fleet: args.get("fleet").map(String::from),
     });
@@ -466,7 +504,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             &[
                 "config", "full", "jobs", "tasks", "top", "csv-dir", "bench-json", "cores",
                 "macros", "n-in", "bands", "buffers", "write-speed", "unrolled", "fleets",
-                "placement", "requests", "seed", "mean-gap", "sim",
+                "placement", "faults", "requests", "seed", "mean-gap", "sim",
             ],
             0,
             Some("dse-full"),
@@ -507,6 +545,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
                 None => Vec::new(),
             },
             placements: placements_flag(args)?,
+            faults: faults_flag(args)?,
             requests: args.get_u32("requests", defaults.requests)?,
             seed: args.get_u64("seed", defaults.seed)?,
             mean_gap: args.get_u64("mean-gap", defaults.mean_gap)?,
@@ -607,13 +646,18 @@ COMMANDS:
              stream onto a chip fleet (--requests N, --seed S,
               --jobs J host workers, --chips C or --fleet SPEC for
               heterogeneous fleets e.g. 2xpaper,1xpaper:band=256,
-              --placement rr|least-loaded|affinity, --mean-gap CYCLES,
-              --csv-dir DIR writes serve.csv + serve_summary.csv +
-              fleet.csv + fleet_requests.csv)
+              --placement rr|least-loaded|affinity|sed, --mean-gap CYCLES,
+              --faults PLAN injects chip fail/drain/join events
+              (fail|drain|join@CYCLE@CHIP / mtbf@MEAN@SEED, comma-sep;
+              failures redispatch queued work and charge weight re-writes),
+              --autoscale --slo CYCLES grows/shrinks the fleet against a
+              p99 latency target, --csv-dir DIR writes serve.csv +
+              serve_summary.csv + fleet.csv + fleet_requests.csv)
   fleet      sweep fleet size x placement policy over one request stream
              (--sizes 1,2,4 or --fleet SPEC, --placement P|all,
+              --faults PLAN serves every point under the fault schedule,
               --requests N, --seed S, --jobs J, --csv-dir DIR writes
-              fleet_axis.csv)
+              fleet_axis.csv [+ fleet_resilience.csv])
   dse        design-space exploration table (--band; --sim validates the
               model cycle-accurately through the parallel runner, --jobs N,
               --tasks N; --top K writes dse_topk.csv).
@@ -623,9 +667,9 @@ COMMANDS:
               codegen + steady-state fast-forward (--unrolled forces the
               slow faithful lowering; identical results), Pareto frontier
               (cycles x macros x buffer) next to top-k, optional fleet
-              axis --fleets 1,2,4 [--placement P|all --requests N],
-              --csv-dir writes dse_full.csv + dse_topk.csv +
-              dse_pareto.csv [+ dse_fleet.csv]
+              axis --fleets 1,2,4 [--placement P|all --requests N
+              --faults PLAN], --csv-dir writes dse_full.csv + dse_topk.csv +
+              dse_pareto.csv [+ dse_fleet.csv + dse_resilience.csv]
   adapt      runtime bandwidth-adaptation model (--max-n)
   assemble   assemble ISA text to binary machine code
   disasm     disassemble binary machine code

@@ -85,6 +85,21 @@ pub fn peak_bandwidth(strategy_writers_fraction: f64, num: f64, s: f64) -> f64 {
     strategy_writers_fraction * num * s
 }
 
+/// Weight-traffic pricing for fleet recovery (ISSUE 6): cycles to write
+/// `bytes` of weights into `macros` macros at per-macro rewrite speed
+/// `speed` B/cycle under an off-chip budget of `bandwidth` B/cycle.
+///
+/// This is the rewrite-phase arithmetic of the paper's write model —
+/// the aggregate fill rate is `min(macros × speed, bandwidth)`, exactly
+/// the constraint Eqs. 3–4 design macro counts around — applied to the
+/// migration traffic a chip failure (redispatch re-writes) or a fleet
+/// join (cold full-chip load) induces.  Integer ceiling division keeps
+/// it exact for the discrete-event timeline.
+pub fn weight_write_cycles(bytes: u64, macros: u64, speed: u64, bandwidth: u64) -> u64 {
+    let rate = (macros.saturating_mul(speed)).min(bandwidth).max(1);
+    bytes.div_ceil(rate)
+}
+
 /// Writer fraction for each strategy (used with [`peak_bandwidth`]).
 pub mod writer_fraction {
     /// In-situ: every macro writes simultaneously.
@@ -205,5 +220,19 @@ mod tests {
     #[test]
     fn effective_macros_linear() {
         assert_eq!(effective_macros(16.0, 0.5), 8.0);
+    }
+
+    #[test]
+    fn weight_write_cycles_is_bandwidth_clamped_ceiling_division() {
+        // Paper defaults: 1024 B/macro at s=8 — 128 cycles per macro
+        // when bandwidth is no constraint.
+        assert_eq!(weight_write_cycles(1024, 1, 8, 512), 128);
+        // 256 macros × 8 B/cyc = 2048 B/cyc demand clamps to 512:
+        // a full 256-macro load (256 KiB) takes 512 cycles.
+        assert_eq!(weight_write_cycles(256 * 1024, 256, 8, 512), 512);
+        // Ceiling, not floor; and degenerate rates never divide by zero.
+        assert_eq!(weight_write_cycles(1025, 1, 8, 512), 129);
+        assert_eq!(weight_write_cycles(100, 0, 8, 512), 100);
+        assert_eq!(weight_write_cycles(0, 4, 8, 512), 0);
     }
 }

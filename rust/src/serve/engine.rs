@@ -18,13 +18,22 @@
 //! 4. **Policy timeline**: dispatch every request at its arrival cycle
 //!    onto per-chip FIFO queues via the placement policy
 //!    ([`dispatch_fifo`]), yielding true per-request queueing + service
-//!    latency for the configured fleet.
+//!    latency for the configured fleet.  With a [`FaultPlan`] or an
+//!    [`AutoscaleConfig`] attached, this stage runs the fault-aware
+//!    timeline instead ([`dispatch_fifo_faulty`]), pricing redispatch
+//!    and cold-join weight traffic through the paper's write model
+//!    ([`weight_write_cycles`]).  Stage 3 never changes: the reference
+//!    timeline (and `serve.csv`) is fault-invariant by construction.
 
 use super::batcher::{Batch, FleetBatches};
 use super::report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
 use super::{Request, ServeError};
 use crate::arch::ArchConfig;
-use crate::fleet::{dispatch_fifo, Dispatch, FleetConfig, PlacementPolicy};
+use crate::fleet::{
+    dispatch_fifo, dispatch_fifo_faulty, AutoscaleConfig, Dispatch, FaultCharges, FaultPlan,
+    FleetConfig, FleetTimeline, PlacementPolicy,
+};
+use crate::model::eqs::weight_write_cycles;
 use crate::sim::{simulate_in, SimStats, SimWorkspace};
 use crate::sweep::{run_indexed, CodegenCache, FleetAxis, FleetSweepPoint};
 
@@ -35,6 +44,8 @@ pub struct ServeEngine {
     policy: PlacementPolicy,
     jobs: usize,
     cache: CodegenCache,
+    faults: FaultPlan,
+    autoscale: Option<AutoscaleConfig>,
 }
 
 impl ServeEngine {
@@ -58,7 +69,23 @@ impl ServeEngine {
             policy,
             jobs: jobs.max(1),
             cache: CodegenCache::new(),
+            faults: FaultPlan::none(),
+            autoscale: None,
         }
+    }
+
+    /// Builder: run the policy timeline under `plan` (ISSUE 6).  The
+    /// empty plan keeps the byte-stable fault-free fast path.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// Builder: attach the SLO-driven autoscaler.  Chips beyond the
+    /// configured floor start down and join only under SLO pressure.
+    pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> Self {
+        self.autoscale = Some(cfg);
+        self
     }
 
     /// Single-worker, single-chip engine (the determinism baseline).
@@ -84,6 +111,16 @@ impl ServeEngine {
     /// The configured placement policy.
     pub fn placement(&self) -> PlacementPolicy {
         self.policy
+    }
+
+    /// The fault plan the policy timeline runs under (empty by default).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
+    }
+
+    /// The attached autoscaler configuration, if any.
+    pub fn autoscale(&self) -> Option<&AutoscaleConfig> {
+        self.autoscale.as_ref()
     }
 
     /// The reference chip's architecture (fleet chip 0).
@@ -206,15 +243,57 @@ impl ServeEngine {
             })
             .collect();
         let mut policy_state = policy.instance();
-        let timeline = dispatch_fifo(
-            self.fleet.len(),
-            &dispatches,
-            |i, chip| {
+        let service = |i: usize, chip: usize| {
+            let a = fb.arch_of_chip[chip];
+            class_stats[a][fb.sets[a].class_of[i]].cycles
+        };
+        let timeline: FleetTimeline = if self.faults.is_empty() && self.autoscale.is_none() {
+            // Fault-free fast path: byte-stable PR 3 behavior by
+            // construction — the fault machinery is never entered.
+            dispatch_fifo(self.fleet.len(), &dispatches, service, policy_state.as_mut())
+        } else {
+            // Weight traffic priced through the paper's write model: a
+            // redispatch re-writes the request's class weights into the
+            // destination chip's macros; a join cold-loads the whole
+            // chip.  Rate = min(macros × speed, bandwidth), the Eq. 3–4
+            // constraint.
+            let migrate = |i: usize, chip: usize| {
+                let dest = &self.fleet.chips()[chip];
                 let a = fb.arch_of_chip[chip];
-                class_stats[a][fb.sets[a].class_of[i]].cycles
-            },
-            policy_state.as_mut(),
-        );
+                let plan = &fb.sets[a].batches[fb.sets[a].class_of[i]].class.plan;
+                let bytes = plan.tasks as u64 * dest.geom.size_macro();
+                let cycles = weight_write_cycles(
+                    bytes,
+                    plan.tasks as u64,
+                    dest.write_speed as u64,
+                    dest.bandwidth,
+                );
+                (bytes, cycles)
+            };
+            let cold = |chip: usize| {
+                let dest = &self.fleet.chips()[chip];
+                let bytes = dest.total_macros() as u64 * dest.geom.size_macro();
+                let cycles = weight_write_cycles(
+                    bytes,
+                    dest.total_macros() as u64,
+                    dest.write_speed as u64,
+                    dest.bandwidth,
+                );
+                (bytes, cycles)
+            };
+            dispatch_fifo_faulty(
+                self.fleet.len(),
+                &dispatches,
+                service,
+                policy_state.as_mut(),
+                &self.faults,
+                self.autoscale.as_ref(),
+                &FaultCharges {
+                    migrate: &migrate,
+                    cold: &cold,
+                },
+            )
+        };
         let mut assignments: Vec<FleetAssignment> = requests
             .iter()
             .enumerate()
@@ -224,8 +303,16 @@ impl ServeEngine {
                     id: req.id,
                     chip: p.chip,
                     arrival_cycle: req.arrival_cycle,
-                    queue_cycles: p.start_cycle - req.arrival_cycle,
-                    service_cycles: p.service_cycles,
+                    // Dropped requests were never served; zero the
+                    // timing rather than expose stale placement state.
+                    queue_cycles: if p.dropped {
+                        0
+                    } else {
+                        p.start_cycle - req.arrival_cycle
+                    },
+                    service_cycles: if p.dropped { 0 } else { p.service_cycles },
+                    migrated: p.migrated,
+                    dropped: p.dropped,
                 }
             })
             .collect();
@@ -244,6 +331,7 @@ impl ServeEngine {
                 chip_busy_cycles: timeline.chip_busy_cycles,
                 chip_requests: timeline.chip_requests,
                 makespan: timeline.makespan,
+                faults: timeline.faults,
             },
         }
     }
@@ -293,6 +381,11 @@ struct Evaluated {
 /// fastest).  Classes are batched and simulated **once per fleet** —
 /// placement policies only change the dispatch timeline, so each
 /// additional policy costs a timeline pass, not a re-simulation.
+///
+/// When the axis carries a [`FaultPlan`], every point serves under it
+/// (events naming chips beyond a fleet's size are inert, so one plan
+/// rides the whole size axis) — the resilience sweep behind
+/// `dse_resilience.csv`.
 pub fn run_fleet_axis(
     axis: &FleetAxis,
     requests: &[Request],
@@ -300,7 +393,8 @@ pub fn run_fleet_axis(
 ) -> Result<Vec<(FleetSweepPoint, ServeReport)>, ServeError> {
     let mut out = Vec::with_capacity(axis.len());
     for fleet in axis.fleets() {
-        let engine = ServeEngine::with_fleet(fleet.clone(), PlacementPolicy::RoundRobin, jobs);
+        let engine = ServeEngine::with_fleet(fleet.clone(), PlacementPolicy::RoundRobin, jobs)
+            .with_faults(axis.faults().clone());
         let ev = engine.evaluate(requests)?;
         for &policy in axis.policies() {
             out.push((
@@ -479,15 +573,95 @@ mod tests {
         let reqs = small_traffic(24);
         let axis = FleetAxis::homogeneous_sizes(&arch(), &[1, 2], &PlacementPolicy::ALL);
         let rows = run_fleet_axis(&axis, &reqs, 2).unwrap();
-        assert_eq!(rows.len(), 6);
+        assert_eq!(rows.len(), 8);
         assert_eq!(rows[0].0.fleet.len(), 1);
         assert_eq!(rows[0].0.policy, PlacementPolicy::RoundRobin);
-        assert_eq!(rows[5].0.fleet.len(), 2);
-        assert_eq!(rows[5].0.policy, PlacementPolicy::ClassAffinity);
+        assert_eq!(rows[7].0.fleet.len(), 2);
+        assert_eq!(rows[7].0.policy, PlacementPolicy::ShortestExpectedDelay);
         // Reference CSVs are fleet/policy-invariant across the axis.
         let base = rows[0].1.to_table().to_csv();
         for (_, r) in &rows {
             assert_eq!(r.to_table().to_csv(), base);
         }
+    }
+
+    #[test]
+    fn fault_run_redispatches_charges_and_keeps_the_reference_timeline() {
+        let wl = blas::e2e_ffn();
+        let cfg = RunConfig::from_arch(&arch(), Strategy::GeneralizedPingPong);
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request {
+                id,
+                arrival_cycle: 0,
+                workload: wl.clone(),
+                cfg,
+            })
+            .collect();
+        let fleet = FleetConfig::homogeneous(arch(), 2);
+        let plain = ServeEngine::with_fleet(fleet.clone(), PlacementPolicy::RoundRobin, 2)
+            .run(&reqs)
+            .unwrap();
+        let faulty = ServeEngine::with_fleet(fleet, PlacementPolicy::RoundRobin, 2)
+            .with_faults(FaultPlan::parse("fail@1@1").unwrap())
+            .run(&reqs)
+            .unwrap();
+        // The reference timeline (serve.csv) is fault-invariant.
+        assert_eq!(faulty.to_table().to_csv(), plain.to_table().to_csv());
+        // RR put ids 1 and 3 on chip 1; the cycle-1 fail pushes both
+        // onto chip 0, each charged a weight re-write by the write
+        // model (every request is served — nothing silently lost).
+        let s = plain.records[0].service_cycles;
+        let f = &faulty.fleet;
+        assert!(f.assignments.iter().all(|a| !a.dropped), "all served");
+        assert_eq!(f.chip_requests, vec![4, 0]);
+        for id in [1usize, 3] {
+            assert!(f.assignments[id].migrated);
+            assert_eq!(f.assignments[id].chip, 0);
+            assert!(f.assignments[id].service_cycles > s, "migration charged");
+        }
+        let bytes = 2 * plain.records[0].tasks as u64 * arch().geom.size_macro();
+        assert_eq!(f.faults.migration_bytes, bytes);
+        assert_eq!(f.faults.redispatched, 2);
+        assert_eq!(f.availability(0), 1.0, "the survivor never went down");
+        assert!(f.availability(1) < 1.0);
+        assert!(f.fleet_availability() < 1.0);
+        assert!(f.redispatch_mean_latency() > 0);
+    }
+
+    #[test]
+    fn autoscaled_engine_grows_the_fleet_deterministically() {
+        let wl = blas::e2e_ffn();
+        let cfg = RunConfig::from_arch(&arch(), Strategy::GeneralizedPingPong);
+        let reqs: Vec<Request> = (0..24)
+            .map(|id| Request {
+                id,
+                arrival_cycle: id as u64 * 10,
+                workload: wl.clone(),
+                cfg,
+            })
+            .collect();
+        let scale = AutoscaleConfig {
+            slo_p99: 1,
+            window: 8,
+            min_chips: 1,
+            cooldown: 1,
+        };
+        let run = || {
+            ServeEngine::with_fleet(
+                FleetConfig::homogeneous(arch(), 2),
+                PlacementPolicy::LeastLoaded,
+                2,
+            )
+            .with_autoscale(scale)
+            .run(&reqs)
+            .unwrap()
+        };
+        let a = run();
+        // Back-to-back arrivals against a 1-cycle SLO: the scaler must
+        // bring up chip 1, pay its cold load, and serve traffic there.
+        assert!(a.fleet.faults.scale_ups >= 1);
+        assert!(a.fleet.chip_requests[1] > 0);
+        assert!(a.fleet.faults.migration_bytes > 0, "cold load charged");
+        assert_eq!(a, run(), "autoscaled runs are reproducible");
     }
 }

@@ -25,21 +25,26 @@
 //!    single-chip *reference* timeline, and the *policy* timeline that
 //!    dispatches requests onto the fleet's per-chip FIFO queues via a
 //!    [`crate::fleet::Placement`] policy (`--placement
-//!    rr|least-loaded|affinity`).
+//!    rr|least-loaded|affinity|sed`), optionally degraded by a
+//!    [`crate::fleet::FaultPlan`] (`--faults`) and grown/shrunk by the
+//!    SLO [`crate::fleet::AutoscaleConfig`] (`--autoscale --slo`).
 //! 4. [`ServeReport`] — reference-timeline latency percentiles and
 //!    throughput (`serve.csv`, `serve_summary.csv`), the policy-timeline
 //!    [`FleetReport`] (`fleet.csv` per-chip latency + utilization,
 //!    `fleet_requests.csv` per-request placements), and, from
 //!    `benches/serve_perf.rs`, `BENCH_serve.json`.
 //!
-//! **Determinism:** `serve.csv`/`serve_summary.csv` are a pure function
-//! of `(traffic, reference arch)` — byte-identical across `--jobs`,
-//! fleet composition and placement policy, because latency there is
-//! measured on the *canonical reference timeline* (FIFO service in
-//! arrival order on one reference-arch chip; see [`report`]).  The fleet
-//! CSVs vary with `--fleet`/`--placement` *by design* and stay
+//! **Determinism:** `serve.csv` is a pure function of `(traffic,
+//! reference arch)` — byte-identical across `--jobs`, fleet
+//! composition, placement policy and fault plan, because latency there
+//! is measured on the *canonical reference timeline* (FIFO service in
+//! arrival order on one reference-arch chip; see [`report`]).  The
+//! fleet CSVs (and `serve_summary.csv`'s trailing availability /
+//! migration / redispatch columns) vary with
+//! `--fleet`/`--placement`/`--faults` *by design* and stay
 //! byte-identical across `--jobs`.  Verified by
-//! `tests/serve_determinism.rs` and `tests/fleet_determinism.rs`.
+//! `tests/serve_determinism.rs`, `tests/fleet_determinism.rs` and
+//! `tests/fleet_faults.rs`.
 //!
 //! Entry points reach this layer through [`crate::api`]: a
 //! `serve:...`/`fleet:...` [`RunSpec`](crate::api::RunSpec) lowers onto

@@ -20,7 +20,7 @@
 //!   change with `--fleet`/`--placement`, and stays byte-identical
 //!   across `--jobs`.
 
-use crate::fleet::PlacementPolicy;
+use crate::fleet::{FaultStats, PlacementPolicy};
 use crate::sched::Strategy;
 use crate::util::csv::CsvTable;
 
@@ -68,10 +68,17 @@ pub struct FleetAssignment {
     pub chip: usize,
     /// Arrival time, cycles.
     pub arrival_cycle: u64,
-    /// Cycles queued behind the chip's FIFO backlog.
+    /// Cycles queued behind the chip's FIFO backlog (for a redispatched
+    /// request this includes the time lost on the failed chip).
     pub queue_cycles: u64,
-    /// Service cycles on the serving chip's architecture.
+    /// Service cycles on the serving chip's architecture, including any
+    /// migration weight re-write charged on redispatch.
     pub service_cycles: u64,
+    /// True when the request was redispatched off a failed chip.
+    pub migrated: bool,
+    /// True when the request was never served (counted, not hidden);
+    /// chip/queue/service are meaningless for dropped requests.
+    pub dropped: bool,
 }
 
 impl FleetAssignment {
@@ -97,6 +104,10 @@ pub struct FleetReport {
     pub chip_requests: Vec<u64>,
     /// Finish cycle of the last request on the policy timeline.
     pub makespan: u64,
+    /// Fault/availability accounting from the timeline (identity values
+    /// — full availability, zero migration — on the no-fault path, so
+    /// every derived column is a constant there).
+    pub faults: FaultStats,
 }
 
 impl FleetReport {
@@ -105,12 +116,43 @@ impl FleetReport {
         self.chip_busy_cycles.len()
     }
 
-    /// Nearest-rank policy-timeline latency percentiles, one per entry
-    /// of `ps` (each in (0, 100]).
+    /// Fraction of the policy-timeline makespan `chip` was active
+    /// (accepting and able to serve); 1.0 on an empty timeline.
+    pub fn availability(&self, chip: usize) -> f64 {
+        if self.makespan == 0 {
+            return 1.0;
+        }
+        self.faults.chip_available_cycles[chip] as f64 / self.makespan as f64
+    }
+
+    /// Fleet-wide availability: active chip-cycles over
+    /// `chips × makespan`; 1.0 on an empty timeline.
+    pub fn fleet_availability(&self) -> f64 {
+        if self.makespan == 0 {
+            return 1.0;
+        }
+        let up: u64 = self.faults.chip_available_cycles.iter().sum();
+        up as f64 / (self.makespan as f64 * self.chips() as f64)
+    }
+
+    /// Mean end-to-end latency of served redispatched requests (floor),
+    /// 0 when nothing was redispatched — the recovery-cost column.
+    pub fn redispatch_mean_latency(&self) -> u64 {
+        mean_floor(
+            self.assignments
+                .iter()
+                .filter(|a| a.migrated && !a.dropped)
+                .map(FleetAssignment::latency_cycles),
+        )
+    }
+
+    /// Nearest-rank policy-timeline latency percentiles over *served*
+    /// requests, one per entry of `ps` (each in (0, 100]).
     pub fn latency_percentiles(&self, ps: &[f64]) -> Vec<u64> {
         nearest_rank_percentiles(
             self.assignments
                 .iter()
+                .filter(|a| !a.dropped)
                 .map(FleetAssignment::latency_cycles)
                 .collect(),
             ps,
@@ -132,12 +174,13 @@ impl FleetReport {
         self.latency_percentiles(&[99.0])[0]
     }
 
-    /// Mean policy-timeline latency, cycles (floor — integral for
-    /// byte-stable CSVs).
+    /// Mean policy-timeline latency over served requests, cycles (floor
+    /// — integral for byte-stable CSVs).
     pub fn mean_latency(&self) -> u64 {
         mean_floor(
             self.assignments
                 .iter()
+                .filter(|a| !a.dropped)
                 .map(FleetAssignment::latency_cycles),
         )
     }
@@ -151,7 +194,9 @@ impl FleetReport {
     }
 
     /// Per-chip policy-timeline table (`fleet.csv`): latency columns +
-    /// utilization per chip, plus a final `all` aggregate row.
+    /// utilization per chip, resilience columns (ISSUE 6), plus a final
+    /// `all` aggregate row.  On the no-fault path the new columns are
+    /// constants (availability 1.0000, everything else 0).
     pub fn to_table(&self) -> CsvTable {
         let mut t = CsvTable::new(vec![
             "policy",
@@ -160,20 +205,31 @@ impl FleetReport {
             "requests",
             "busy_cycles",
             "utilization",
+            "availability",
             "p50_latency",
             "p95_latency",
             "p99_latency",
             "mean_latency",
+            "redispatch_latency",
+            "redispatched",
+            "migration_bytes",
+            "dropped",
         ]);
         for chip in 0..self.chips() {
             let lat: Vec<u64> = self
                 .assignments
                 .iter()
-                .filter(|a| a.chip == chip)
+                .filter(|a| a.chip == chip && !a.dropped)
                 .map(FleetAssignment::latency_cycles)
                 .collect();
             let mean = mean_floor(lat.iter().copied());
             let pcts = nearest_rank_percentiles(lat, &[50.0, 95.0, 99.0]);
+            let redispatch = mean_floor(
+                self.assignments
+                    .iter()
+                    .filter(|a| a.chip == chip && a.migrated && !a.dropped)
+                    .map(FleetAssignment::latency_cycles),
+            );
             t.push_row(vec![
                 self.policy.name().to_string(),
                 chip.to_string(),
@@ -181,10 +237,15 @@ impl FleetReport {
                 self.chip_requests[chip].to_string(),
                 self.chip_busy_cycles[chip].to_string(),
                 format!("{:.4}", self.utilization(chip)),
+                format!("{:.4}", self.availability(chip)),
                 pcts[0].to_string(),
                 pcts[1].to_string(),
                 pcts[2].to_string(),
                 mean.to_string(),
+                redispatch.to_string(),
+                self.faults.chip_redispatched[chip].to_string(),
+                self.faults.chip_migration_bytes[chip].to_string(),
+                "0".to_string(), // dropped requests belong to no chip
             ]);
         }
         let busy: u64 = self.chip_busy_cycles.iter().sum();
@@ -201,28 +262,39 @@ impl FleetReport {
             self.assignments.len().to_string(),
             busy.to_string(),
             format!("{util:.4}"),
+            format!("{:.4}", self.fleet_availability()),
             pcts[0].to_string(),
             pcts[1].to_string(),
             pcts[2].to_string(),
             self.mean_latency().to_string(),
+            self.redispatch_mean_latency().to_string(),
+            self.faults.redispatched.to_string(),
+            self.faults.migration_bytes.to_string(),
+            self.faults.dropped.to_string(),
         ]);
         t
     }
 
     /// Per-request policy-timeline table (`fleet_requests.csv`):
-    /// integer-only columns, id order.
+    /// integer-only columns, id order.  Dropped requests keep their id,
+    /// arrival and flags but leave chip/queue/service/latency empty —
+    /// they were never served, and printing stale placement numbers
+    /// would read as service.
     pub fn requests_table(&self) -> CsvTable {
         let mut t = CsvTable::new(vec![
-            "id", "chip", "arrival", "queue", "service", "latency",
+            "id", "chip", "arrival", "queue", "service", "latency", "migrated", "dropped",
         ]);
         for a in &self.assignments {
+            let served = |s: String| if a.dropped { String::new() } else { s };
             t.push_row(vec![
                 a.id.to_string(),
-                a.chip.to_string(),
+                served(a.chip.to_string()),
                 a.arrival_cycle.to_string(),
-                a.queue_cycles.to_string(),
-                a.service_cycles.to_string(),
-                a.latency_cycles().to_string(),
+                served(a.queue_cycles.to_string()),
+                served(a.service_cycles.to_string()),
+                served(a.latency_cycles().to_string()),
+                u8::from(a.migrated).to_string(),
+                u8::from(a.dropped).to_string(),
             ]);
         }
         t
@@ -378,7 +450,9 @@ impl ServeReport {
         t
     }
 
-    /// Aggregate table (`serve_summary.csv`): percentiles + throughput.
+    /// Aggregate table (`serve_summary.csv`): percentiles + throughput,
+    /// plus the fleet resilience aggregates (ISSUE 6) — constants
+    /// (`1.0000,0,0,0`) on the no-fault path.
     pub fn summary_table(&self) -> CsvTable {
         let mut t = CsvTable::new(vec![
             "requests",
@@ -393,6 +467,10 @@ impl ServeReport {
             "simulated_cycles",
             "served_macro_cycles",
             "served_vectors",
+            "availability",
+            "migration_bytes",
+            "redispatched",
+            "dropped",
         ]);
         let pcts = self.latency_percentiles(&[50.0, 95.0, 99.0]);
         t.push_row(vec![
@@ -408,6 +486,10 @@ impl ServeReport {
             self.simulated_cycles().to_string(),
             self.served_macro_cycles().to_string(),
             self.served_vectors().to_string(),
+            format!("{:.4}", self.fleet.fleet_availability()),
+            self.fleet.faults.migration_bytes.to_string(),
+            self.fleet.faults.redispatched.to_string(),
+            self.fleet.faults.dropped.to_string(),
         ]);
         t
     }
@@ -437,6 +519,25 @@ impl ServeReport {
             f.makespan,
             self.fleet_speedup()
         ));
+        let fs = &f.faults;
+        if fs.redispatched > 0
+            || fs.dropped > 0
+            || fs.migration_bytes > 0
+            || fs.scale_ups > 0
+            || fs.scale_downs > 0
+        {
+            out.push_str(&format!(
+                "  resilience: availability {:.4}, {} redispatched (mean latency {} cycles), \
+                 {} migration bytes, {} dropped, {} scale-ups / {} scale-downs\n",
+                f.fleet_availability(),
+                fs.redispatched,
+                f.redispatch_mean_latency(),
+                fs.migration_bytes,
+                fs.dropped,
+                fs.scale_ups,
+                fs.scale_downs
+            ));
+        }
         out
     }
 }
@@ -501,12 +602,15 @@ mod tests {
                     arrival_cycle: i as u64 * 10,
                     queue_cycles: 0,
                     service_cycles: (i as u64 + 1) * 10,
+                    migrated: false,
+                    dropped: false,
                 })
                 .collect(),
             chip_archs: vec!["a".into(), "b".into()],
             chip_busy_cycles: vec![30, 20],
             chip_requests: vec![50, 50],
             makespan: 40,
+            faults: FaultStats::all_up(2, 40),
         }
     }
 
@@ -553,6 +657,7 @@ mod tests {
                 chip_busy_cycles: vec![0],
                 chip_requests: vec![0],
                 makespan: 0,
+                faults: FaultStats::all_up(1, 0),
             },
         };
         assert_eq!(r.p50(), 0);
@@ -562,6 +667,9 @@ mod tests {
         assert_eq!(r.fleet_speedup(), 0.0);
         assert_eq!(r.fleet.p99(), 0);
         assert_eq!(r.fleet.utilization(0), 0.0);
+        assert_eq!(r.fleet.availability(0), 1.0);
+        assert_eq!(r.fleet.fleet_availability(), 1.0);
+        assert_eq!(r.fleet.redispatch_mean_latency(), 0);
         assert_eq!(r.to_table().len(), 0);
         assert_eq!(r.summary_table().len(), 1);
         assert_eq!(r.fleet.requests_table().len(), 0);
@@ -593,6 +701,55 @@ mod tests {
         let fr = report().fleet.requests_table().to_csv();
         assert!(fr.starts_with("id,chip,arrival,"));
         assert_eq!(fr.lines().count(), 101);
+    }
+
+    #[test]
+    fn resilience_columns_surface_and_dropped_requests_leave_aggregates() {
+        let mut f = fleet_report();
+        // Request 0 was redispatched onto chip 1; request 1 was dropped.
+        f.assignments[0].chip = 1;
+        f.assignments[0].migrated = true;
+        f.assignments[0].queue_cycles = 90;
+        f.assignments[1].dropped = true;
+        f.faults = FaultStats {
+            redispatched: 1,
+            dropped: 1,
+            migration_bytes: 2048,
+            chip_migration_bytes: vec![0, 2048],
+            chip_available_cycles: vec![20, 40],
+            chip_redispatched: vec![0, 1],
+            redispatch_latency_cycles: 100,
+            scale_ups: 0,
+            scale_downs: 0,
+        };
+        // availability: chip 0 was up half the makespan.
+        assert!((f.availability(0) - 0.5).abs() < 1e-12);
+        assert!((f.fleet_availability() - 0.75).abs() < 1e-12);
+        // Only the migrated-and-served request feeds the recovery mean.
+        assert_eq!(f.redispatch_mean_latency(), 100);
+        // Dropped requests leave the latency aggregates entirely: the
+        // dropped request's would-be latency (20) no longer appears as
+        // the minimum of the served set.
+        assert_eq!(f.latency_percentiles(&[1.0])[0], 30);
+        let csv = f.to_table().to_csv();
+        assert!(csv.starts_with("policy,chip,arch,"));
+        assert!(csv.contains(",availability,"), "{csv}");
+        let all = csv.lines().last().unwrap();
+        assert!(all.ends_with(",100,1,2048,1"), "all row: {all}");
+        let rows = f.requests_table().to_csv();
+        // Dropped row: empty chip/queue/service/latency, flags set.
+        assert!(rows.contains("\n1,,10,,,,0,1\n"), "{rows}");
+        // Migrated-and-served row keeps its numbers and sets the flag.
+        assert!(rows.contains("\n0,1,0,90,10,100,1,0\n"), "{rows}");
+        // And the report-level resilience line appears only now.
+        let r = ServeReport {
+            records: vec![],
+            classes: 0,
+            class_service_cycles: vec![],
+            fleet: f,
+        };
+        assert!(r.fleet_lines().contains("resilience: availability 0.7500"));
+        assert!(!report().fleet_lines().contains("resilience"));
     }
 
     #[test]

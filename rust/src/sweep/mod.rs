@@ -42,7 +42,7 @@ pub use exec::run_indexed;
 pub use runner::{default_jobs, SweepRunner};
 
 use crate::arch::ArchConfig;
-use crate::fleet::{FleetConfig, PlacementPolicy};
+use crate::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
 use crate::sched::{CodegenStyle, ScheduleError, SchedulePlan, Strategy};
 use crate::sim::{SimError, SimOptions};
 use thiserror::Error;
@@ -142,16 +142,27 @@ pub struct FleetSweepPoint {
 /// stream); attach one to a [`SweepGrid`] via
 /// [`SweepGrid::with_fleet_axis`] so a DSE can carry both kinds of
 /// sweep in one description.
+///
+/// An axis may also carry a [`FaultPlan`] (ISSUE 6): every point then
+/// serves the stream under that fault schedule, turning the axis into a
+/// resilience sweep (`dse_resilience.csv`).  Fault events naming chips
+/// beyond a given fleet's size are inert, so one plan rides the whole
+/// size axis.
 #[derive(Debug, Clone, Default)]
 pub struct FleetAxis {
     fleets: Vec<FleetConfig>,
     policies: Vec<PlacementPolicy>,
+    faults: FaultPlan,
 }
 
 impl FleetAxis {
-    /// An axis over explicit fleets × policies.
+    /// An axis over explicit fleets × policies (fault-free).
     pub fn new(fleets: Vec<FleetConfig>, policies: Vec<PlacementPolicy>) -> Self {
-        Self { fleets, policies }
+        Self {
+            fleets,
+            policies,
+            faults: FaultPlan::none(),
+        }
     }
 
     /// The common case: homogeneous fleets of `arch` at each size in
@@ -167,7 +178,19 @@ impl FleetAxis {
                 .map(|&n| FleetConfig::homogeneous(arch.clone(), n))
                 .collect(),
             policies: policies.to_vec(),
+            faults: FaultPlan::none(),
         }
+    }
+
+    /// Builder: serve every point of the axis under `plan`.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// The fault plan every point serves under (empty by default).
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     /// The fleets of the axis, in sweep order.
@@ -350,19 +373,32 @@ mod tests {
     fn fleet_axis_points_are_policy_fastest() {
         let arch = ArchConfig::paper_default();
         let axis = FleetAxis::homogeneous_sizes(&arch, &[1, 2], &PlacementPolicy::ALL);
-        assert_eq!(axis.len(), 6);
+        assert_eq!(axis.len(), 8);
         let pts = axis.points();
-        assert_eq!(pts.len(), 6);
+        assert_eq!(pts.len(), 8);
         assert_eq!(pts[0].fleet.len(), 1);
         assert_eq!(pts[0].policy, PlacementPolicy::RoundRobin);
         assert_eq!(pts[2].policy, PlacementPolicy::ClassAffinity);
-        assert_eq!(pts[3].fleet.len(), 2);
-        assert_eq!(pts[3].policy, PlacementPolicy::RoundRobin);
+        assert_eq!(pts[3].policy, PlacementPolicy::ShortestExpectedDelay);
+        assert_eq!(pts[4].fleet.len(), 2);
+        assert_eq!(pts[4].policy, PlacementPolicy::RoundRobin);
         assert!(FleetAxis::default().is_empty());
+        assert!(axis.faults().is_empty(), "fault-free by default");
         // Grids carry the axis without disturbing design points.
         let grid = SweepGrid::new().with_fleet_axis(axis);
         assert!(grid.is_empty());
-        assert_eq!(grid.fleet_axis().len(), 6);
+        assert_eq!(grid.fleet_axis().len(), 8);
+    }
+
+    #[test]
+    fn fleet_axis_carries_a_fault_plan() {
+        let arch = ArchConfig::paper_default();
+        let plan = FaultPlan::parse("fail@100@1,join@900@1").unwrap();
+        let axis = FleetAxis::homogeneous_sizes(&arch, &[2], &PlacementPolicy::ALL)
+            .with_faults(plan.clone());
+        assert_eq!(axis.faults(), &plan);
+        // Points are unchanged — the plan rides alongside the grid.
+        assert_eq!(axis.len(), 4);
     }
 
     #[test]

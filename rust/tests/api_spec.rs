@@ -133,7 +133,10 @@ fn rejections_name_the_valid_keys() {
     let err = RunSpec::parse("serve:reqests=512").unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("reqests"), "{msg}");
-    assert!(msg.contains("requests, seed, gap, jobs, placement, chips, fleet"), "{msg}");
+    assert!(
+        msg.contains("requests, seed, gap, jobs, placement, faults, autoscale, slo, chips, fleet"),
+        "{msg}"
+    );
 
     let err = RunSpec::parse("bogus:x=1").unwrap_err();
     assert!(err.to_string().contains("repro, run, simulate"), "{err}");
