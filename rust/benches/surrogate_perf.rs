@@ -1,0 +1,184 @@
+//! Perf bench: surrogate serving (`serve/surrogate`) — the ISSUE-7
+//! acceptance criteria:
+//!
+//! 1. the streaming path ([`ServeEngine::run_traffic`]) is byte-identical
+//!    to the materialized path (`run(&synthetic_traffic(..))`) — asserted
+//!    before any timing, so CI's bench-smoke job fails on a divergence;
+//! 2. `--surrogate eqs` agrees with `--surrogate exact` within 1% on
+//!    every per-request service time (the coverage map falls back to
+//!    exact calibration outside its validated region);
+//! 3. a warm [`ServiceTimeTable`] replays the trace without touching the
+//!    simulator again — the cold/warm ratio is the tracked
+//!    `surrogate/replay-speedup` record.
+//!
+//! Writes `BENCH_surrogate.json` (schema: EXPERIMENTS.md §Tracking) and
+//! validates it against the schema before exiting.  Reduced-size runs:
+//! set `GPP_SURROGATE_REQUESTS` / `GPP_BENCH_ITERS` (CI bench-smoke).
+//! `cargo bench --bench surrogate_perf`
+//!
+//! [`ServeEngine::run_traffic`]: gpp_pim::serve::ServeEngine::run_traffic
+//! [`ServiceTimeTable`]: gpp_pim::serve::ServiceTimeTable
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::report::benchkit::{
+    env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
+};
+use gpp_pim::serve::{
+    synthetic_traffic, ServeEngine, ServiceTimeTable, SurrogateMode, TrafficConfig,
+};
+use gpp_pim::sweep::default_jobs;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Full report text: the byte-comparison surface.
+fn report_text(report: &gpp_pim::serve::ServeReport) -> String {
+    format!(
+        "{}{}",
+        report.to_table().to_csv(),
+        report.summary_table().to_csv()
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let arch = ArchConfig::paper_default;
+    let jobs = default_jobs();
+    let n_requests = env_u64("GPP_SURROGATE_REQUESTS", 200_000) as u32;
+    let iters = env_u64("GPP_BENCH_ITERS", 3) as usize;
+    // The calibration trace visits the full class catalog; the replay
+    // trace is the scale story (default 2·10⁵ requests, env-tunable to
+    // 10⁶–10⁷).  Same seed: the replay stream's class set is a superset
+    // of the calibration stream's, so a warm table replays sim-free.
+    let calib_cfg = TrafficConfig {
+        requests: 512,
+        seed: 7,
+        mean_gap_cycles: 2048,
+    };
+    let replay_cfg = TrafficConfig {
+        requests: n_requests,
+        seed: 7,
+        mean_gap_cycles: 2048,
+    };
+    let mut records = Vec::new();
+
+    section("correctness gate: streaming == materialized (bytes)");
+    let requests = synthetic_traffic(&arch(), &calib_cfg);
+    let direct = report_text(&ServeEngine::new(arch(), jobs, 2).run(&requests)?);
+    let streamed = report_text(&ServeEngine::new(arch(), jobs, 2).run_traffic(&calib_cfg)?);
+    assert_eq!(
+        direct, streamed,
+        "run_traffic diverged from run(&synthetic_traffic(..)) at {} requests",
+        calib_cfg.requests
+    );
+    println!(
+        "streaming and materialized reports identical ({} bytes) ✓",
+        direct.len()
+    );
+
+    section("correctness gate: eqs within 1% of exact, per request");
+    let exact = ServeEngine::new(arch(), jobs, 1).run_traffic(&calib_cfg)?;
+    let eqs = ServeEngine::new(arch(), jobs, 1)
+        .with_surrogate(SurrogateMode::Eqs)
+        .run_traffic(&calib_cfg)?;
+    assert_eq!(exact.records.len(), eqs.records.len());
+    let mut worst = 0.0f64;
+    for (x, e) in exact.records.iter().zip(&eqs.records) {
+        let err = x.service_cycles.abs_diff(e.service_cycles);
+        assert!(
+            err * 100 <= x.service_cycles,
+            "request {}: eqs service {} vs exact {} (> 1%)",
+            x.id,
+            e.service_cycles,
+            x.service_cycles
+        );
+        worst = worst.max(err as f64 / x.service_cycles.max(1) as f64);
+    }
+    println!(
+        "eqs predicted {} of {} classes; worst per-request error {:.4}% ✓",
+        eqs.eqs_classes,
+        eqs.classes,
+        100.0 * worst
+    );
+
+    // Simulated-work denominator for the rate column, measured once on
+    // the replay trace.
+    let probe = {
+        let table = Arc::new(ServiceTimeTable::new());
+        let engine = ServeEngine::new(arch(), jobs, 2).with_service_table(Arc::clone(&table));
+        engine.run_traffic(&replay_cfg)?
+    };
+    let served_macro_cycles = probe.served_macro_cycles() as f64;
+    println!(
+        "\nreplay trace: {} requests -> {} classes, {:.3e} served macro-cycles",
+        probe.requests(),
+        probe.classes,
+        served_macro_cycles
+    );
+
+    section("wall-clock: cold calibration vs warm-table replay");
+    let bench = Bench::new(1, iters);
+    // Cold: a fresh engine per iteration — empty codegen cache, empty
+    // service table; every class is calibrated cycle-exactly in-run.
+    let m_cold = bench.run(&format!("surrogate/cold-exact-{jobs}"), || {
+        ServeEngine::new(arch(), jobs, 2)
+            .run_traffic(&replay_cfg)
+            .unwrap()
+            .requests()
+    });
+    println!("{}", m_cold.line());
+    records.push(BenchRecord::new(&m_cold, Some(served_macro_cycles)));
+
+    // Warm: one shared table, calibrated once above (`probe`); the timed
+    // runs are pure event-heap replay — zero simulator invocations.
+    let warm_table = Arc::new(ServiceTimeTable::new());
+    let warm_engine = ServeEngine::new(arch(), jobs, 2).with_service_table(Arc::clone(&warm_table));
+    warm_engine.run_traffic(&replay_cfg)?; // prime the table
+    let calibrated = warm_table.len();
+    let misses_before = warm_table.misses();
+    let m_warm = bench.run(&format!("surrogate/warm-replay-{jobs}"), || {
+        warm_engine.run_traffic(&replay_cfg).unwrap().requests()
+    });
+    println!("{}", m_warm.line());
+    assert_eq!(
+        warm_table.misses(),
+        misses_before,
+        "warm replay reached the simulator (table misses grew)"
+    );
+    records.push(BenchRecord::new(&m_warm, Some(served_macro_cycles)));
+
+    // Eqs, cold: closed-form prediction replaces most calibration sims.
+    let m_eqs = bench.run(&format!("surrogate/cold-eqs-{jobs}"), || {
+        ServeEngine::new(arch(), jobs, 2)
+            .with_surrogate(SurrogateMode::Eqs)
+            .run_traffic(&replay_cfg)
+            .unwrap()
+            .requests()
+    });
+    println!("{}", m_eqs.line());
+    records.push(BenchRecord::new(&m_eqs, Some(served_macro_cycles)));
+
+    let speedup = m_cold.median_secs() / m_warm.median_secs().max(1e-12);
+    let req_per_s = probe.requests() as f64 / m_warm.median_secs().max(1e-12);
+    println!(
+        "-> warm replay {:.2}x faster than cold calibration ({} classes cached; {:.3e} requests/s)",
+        speedup, calibrated, req_per_s
+    );
+    // The tracked speedup record: rate column carries the ratio itself
+    // (dimensionless), median_secs the warm replay time it derives from.
+    records.push(BenchRecord {
+        name: "surrogate/replay-speedup".into(),
+        median_secs: m_warm.median_secs(),
+        macro_cycles_per_s: Some(speedup),
+    });
+    records.push(BenchRecord {
+        name: format!("surrogate/replay-requests-per-s-{jobs}"),
+        median_secs: m_warm.median_secs(),
+        macro_cycles_per_s: Some(req_per_s),
+    });
+
+    let out = Path::new("BENCH_surrogate.json");
+    write_bench_json(out, &records)?;
+    let text = std::fs::read_to_string(out)?;
+    let n = validate_bench_json(&text).map_err(|e| anyhow::anyhow!("schema: {e}"))?;
+    println!("\n[wrote {} ({n} records, schema OK)]", out.display());
+    Ok(())
+}

@@ -33,11 +33,14 @@ use crate::report::benchkit::BenchRecord;
 use crate::report::figures as figs;
 use crate::runtime::Runtime;
 use crate::sched::{SchedulePlan, Strategy};
-use crate::serve::{run_fleet_axis, synthetic_traffic, ServeEngine, ServeReport, TrafficConfig};
+use crate::serve::{
+    run_fleet_axis, synthetic_traffic, ServeEngine, ServeReport, ServiceTimeTable, TrafficConfig,
+};
 use crate::sim::{simulate, SimOptions, SimResult};
 use crate::sweep::{pareto_min_by, top_k_by, FleetAxis, FleetSweepPoint, SweepRunner};
 use crate::util::csv::CsvTable;
 use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Typed result of one [`Session::run`], next to whatever the sinks
@@ -124,6 +127,10 @@ pub struct FleetSweepOutcome {
 pub struct Session {
     arch: ArchConfig,
     runner: SweepRunner,
+    /// Shared across every serve run of the session (ISSUE 7): classes
+    /// calibrated by one spec re-serve from the table in the next — the
+    /// `exec @file` batch path rides this.
+    service_table: Arc<ServiceTimeTable>,
 }
 
 impl Default for Session {
@@ -138,6 +145,7 @@ impl Session {
         Self {
             runner: SweepRunner::default(),
             arch,
+            service_table: Arc::new(ServiceTimeTable::new()),
         }
     }
 
@@ -147,6 +155,7 @@ impl Session {
         Self {
             runner: SweepRunner::new(jobs),
             arch,
+            service_table: Arc::new(ServiceTimeTable::new()),
         }
     }
 
@@ -159,6 +168,11 @@ impl Session {
     /// The session's sweep runner (codegen-cache introspection).
     pub fn runner(&self) -> &SweepRunner {
         &self.runner
+    }
+
+    /// The session's service-time table (shared across serve runs).
+    pub fn service_table(&self) -> &Arc<ServiceTimeTable> {
+        &self.service_table
     }
 
     /// Resolved worker count for a spec.
@@ -398,15 +412,19 @@ impl Session {
         };
         let fleet = spec.fleet_config(&self.arch)?;
         let mut engine = ServeEngine::with_fleet(fleet, spec.placement, self.jobs(spec.jobs))
-            .with_faults(spec.faults.clone());
+            .with_faults(spec.faults.clone())
+            .with_surrogate(spec.surrogate)
+            .with_service_table(Arc::clone(&self.service_table));
         if let (true, Some(slo)) = (spec.autoscale, spec.slo) {
             engine = engine.with_autoscale(AutoscaleConfig::new(slo));
         }
         // Traffic targets the *reference* chip (fleet chip 0) so every
         // request's resource knobs fit the reference-arch contract even
         // when a fleet spec's chip 0 is smaller than the base arch.
-        let requests = synthetic_traffic(engine.arch(), &traffic_cfg);
-        let report = engine.run(&requests).map_err(|e| anyhow!("{e}"))?;
+        // The streaming path (generation → classification without a
+        // request vector) is byte-identical to the materialized one and
+        // is what lets `requests=` reach 10⁶–10⁷.
+        let report = engine.run_traffic(&traffic_cfg).map_err(|e| anyhow!("{e}"))?;
         sinks.section(&format!(
             "Serve — {} requests (seed {}) on {} chip(s) [{}], policy {}, {} worker(s)",
             report.requests(),
@@ -1146,6 +1164,36 @@ mod tests {
         let report = out.serve().unwrap();
         assert!(report.fleet.faults.scale_ups >= 1, "slo=1 must trigger growth");
         assert!(mem.lines.iter().any(|l| l.contains("autoscaler")));
+    }
+
+    #[test]
+    fn session_service_table_is_shared_across_serve_runs() {
+        // The exec @file contract: every serve spec of a session shares
+        // one ServiceTimeTable, so a repeated class calibrates once per
+        // batch, not once per spec.
+        let s = session();
+        let spec = RunSpec::parse("serve:requests=24:seed=3").unwrap();
+        s.run(&spec, &mut SinkSet::new()).unwrap();
+        let classes = s.service_table().len();
+        assert!(classes > 0);
+        let misses = s.service_table().misses();
+        s.run(&spec, &mut SinkSet::new()).unwrap();
+        assert_eq!(s.service_table().len(), classes, "no new calibrations");
+        assert_eq!(s.service_table().misses(), misses, "rerun fully table-served");
+        assert!(s.service_table().hits() >= classes as u64);
+    }
+
+    #[test]
+    fn surrogate_spec_flows_to_the_report() {
+        let s = session();
+        let out = s
+            .run(
+                &RunSpec::parse("serve:requests=16:seed=5:surrogate=eqs").unwrap(),
+                &mut SinkSet::new(),
+            )
+            .unwrap();
+        let report = out.serve().unwrap();
+        assert_eq!(report.surrogate, crate::serve::SurrogateMode::Eqs);
     }
 
     #[test]

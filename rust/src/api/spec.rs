@@ -30,7 +30,7 @@
 //! run[:workload=ffn|e2e|square|mlp][:strategy=S][:trace=FILE][:numerics=true][:artifacts=DIR]
 //! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true]
 //! serve[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P][:faults=PLAN]
-//!      [:autoscale=true:slo=CYC][:chips=C][:fleet=SPEC]
+//!      [:autoscale=true:slo=CYC][:surrogate=exact|eqs][:chips=C][:fleet=SPEC]
 //! fleet[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P,..|all][:faults=PLAN]
 //!      [:sizes=1,2,4][:fleet=SPEC]
 //! dse[:band=B][:sim=true][:tasks=N][:jobs=N][:top=K]
@@ -49,6 +49,7 @@
 use crate::arch::ArchConfig;
 use crate::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
 use crate::sched::{CodegenStyle, Strategy};
+use crate::serve::SurrogateMode;
 use std::fmt;
 use thiserror::Error;
 
@@ -207,6 +208,9 @@ pub struct ServeSpec {
     /// p99 latency target in cycles for the autoscaler; requires
     /// `autoscale`.
     pub slo: Option<u64>,
+    /// How per-class service times are calibrated (ISSUE 7; `exact` is
+    /// byte-identical to the pre-surrogate engine).
+    pub surrogate: SurrogateMode,
     /// Homogeneous replica count.  Ignored — and not displayed — when
     /// `fleet` is set ([`ServeSpec::fleet_config`] uses the fleet spec),
     /// so `Display` never emits the `chips`/`fleet` conflict the parser
@@ -228,6 +232,7 @@ impl Default for ServeSpec {
             faults: FaultPlan::none(),
             autoscale: false,
             slo: None,
+            surrogate: SurrogateMode::Exact,
             chips: 1,
             fleet: None,
         }
@@ -557,7 +562,10 @@ impl RunSpec {
             "repro" => "exp, vectors, jobs",
             "run" => "workload, strategy, trace, numerics, artifacts",
             "simulate" => "strategy, tasks, macros, nin, band, s, oplog",
-            "serve" => "requests, seed, gap, jobs, placement, faults, autoscale, slo, chips, fleet",
+            "serve" => {
+                "requests, seed, gap, jobs, placement, faults, autoscale, slo, surrogate, \
+                 chips, fleet"
+            }
             "fleet" => "requests, seed, gap, jobs, placement, faults, sizes, fleet",
             "dse" => "band, sim, tasks, jobs, top",
             "dse-full" => {
@@ -686,6 +694,10 @@ impl RunSpec {
                 "faults" => s.faults = p_faults(v)?,
                 "autoscale" => s.autoscale = p_bool("autoscale", v)?,
                 "slo" => s.slo = Some(p_slo(v)?),
+                "surrogate" => {
+                    s.surrogate = SurrogateMode::from_name(v)
+                        .ok_or_else(|| bad("surrogate", v, "expected exact|eqs"))?;
+                }
                 "chips" => {
                     let chips: usize = v.parse().map_err(|e| bad("chips", v, e))?;
                     if chips == 0 {
@@ -894,6 +906,9 @@ impl fmt::Display for RunSpec {
                 }
                 e.flag("autoscale", s.autoscale)?;
                 e.opt("slo", &s.slo)?;
+                if s.surrogate != d.surrogate {
+                    e.kv("surrogate", s.surrogate)?;
+                }
                 if s.chips != d.chips && s.fleet.is_none() {
                     e.kv("chips", s.chips)?;
                 }
@@ -1087,6 +1102,26 @@ mod tests {
         let s = roundtrip("dse-full:cores=2:fleets=1,2:faults=drain@1000@0");
         let RunSpec::DseFull(s) = s else { panic!() };
         assert_eq!(s.faults.events.len(), 1);
+    }
+
+    #[test]
+    fn surrogate_key_roundtrips_and_rejects() {
+        let s = roundtrip("serve:requests=1000000:surrogate=eqs:chips=4");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.surrogate, SurrogateMode::Eqs);
+        assert_eq!(s.requests, 1_000_000);
+        assert_eq!(
+            RunSpec::Serve(s).to_string(),
+            "serve:requests=1000000:surrogate=eqs:chips=4"
+        );
+        // The default mode canonicalizes away.
+        assert_eq!(
+            RunSpec::parse("serve:surrogate=exact").unwrap().to_string(),
+            "serve"
+        );
+        assert!(RunSpec::parse("serve:surrogate=magic").is_err());
+        // Only serve takes the key — a typo elsewhere must not pass.
+        assert!(RunSpec::parse("fleet:surrogate=eqs").is_err());
     }
 
     #[test]

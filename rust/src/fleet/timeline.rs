@@ -1,28 +1,75 @@
 //! The deterministic discrete-event fleet timeline.
 //!
-//! Requests are dispatched at their arrival cycles, in `(arrival, id)`
-//! order, onto per-chip FIFO queues; the placement policy picks the
-//! queue.  Because every chip serves FIFO, a chip's whole queue state is
-//! its drain time (`busy_until`), so the "event loop" is a single pass
-//! over dispatches — O(n·chips) — yet yields exact per-request queueing
-//! and service latency under the chosen policy, replacing the
-//! single-chip reference-timeline proxy of earlier PRs.
+//! Since ISSUE 7 the timeline is driven by an indexed min-heap of
+//! `(next_tick, ComponentId)` events over composable actors, replacing
+//! the earlier per-chip FIFO scan:
 //!
-//! Two entry points share that model:
+//! - the **fault driver** (component 0) holds a cursor into the
+//!   expanded [`FaultPlan`] and fires one membership event per tick,
+//! - the **arrival source** (component 1) walks the `(arrival, id)`
+//!   dispatch order, placing one request per tick through the
+//!   [`Placement`] policy (and running the autoscaler between
+//!   arrivals, exactly as before),
+//! - **chip actors** (components `2 + chip`) tick at their queue
+//!   heads' completion cycles and retire finished work, so resident
+//!   queue memory is bounded by *in-flight* requests, not trace
+//!   length — the property that lets the surrogate replay path
+//!   ([`crate::serve::surrogate`]) run 10⁶–10⁷-request traces.
+//!
+//! Ties break on `ComponentId`: the fault driver outranks the arrival
+//! source, which outranks chip retirement, reproducing the legacy
+//! contract that membership events at cycle `t` apply before requests
+//! arriving at `t` are dispatched.  Because every chip still serves
+//! FIFO, a chip's whole schedule state remains its drain time
+//! (`busy_until`), so each arrival is placed in O(chips + log heap) and
+//! the run stays an exact, byte-stable function of its inputs.
+//!
+//! Two entry points share the heap:
 //!
 //! - [`dispatch_fifo`] — the fault-free fast path (PR 3 behavior,
-//!   byte-stable).
-//! - [`dispatch_fifo_faulty`] — the same pass interleaved with a
-//!   [`FaultPlan`] and an optional [`AutoscaleConfig`]: failed chips
+//!   byte-stable).  Only the arrival source needs heap presence: with
+//!   no membership churn, chip state never influences event order.
+//! - [`dispatch_fifo_faulty`] — all three actor kinds: failed chips
 //!   lose their queue (survivors are redispatched and charged weight
 //!   re-writes through [`FaultCharges`]), draining chips finish then
 //!   stop accepting, and joining chips pay a cold weight load before
 //!   serving.  With the empty plan and no autoscaler it reproduces
-//!   [`dispatch_fifo`] bit-for-bit (asserted in the unit tests and
-//!   `benches/fleet_perf.rs`).
+//!   [`dispatch_fifo`] bit-for-bit (asserted in the unit tests,
+//!   `tests/surrogate.rs` and `benches/fleet_perf.rs`).
 
 use super::faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan};
 use super::placement::{DispatchContext, FleetState, Placement};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Identity of an actor on the event heap.  Lower ids win ties, so the
+/// constants below encode the legacy event-before-arrival ordering.
+pub type ComponentId = usize;
+
+/// Fault-plan cursor: applies membership events.
+const FAULT_DRIVER: ComponentId = 0;
+/// Dispatch cursor: places requests (and runs the autoscaler).
+const ARRIVAL_SOURCE: ComponentId = 1;
+/// `CHIP_BASE + chip`: that chip's queue-retirement actor.
+const CHIP_BASE: ComponentId = 2;
+
+/// Indexed min-heap of `(next_tick, ComponentId)` events.  Each pop
+/// yields the earliest pending tick; ties resolve to the
+/// lowest-numbered component.
+#[derive(Debug, Default)]
+struct EventHeap {
+    heap: BinaryHeap<Reverse<(u64, ComponentId)>>,
+}
+
+impl EventHeap {
+    fn schedule(&mut self, tick: u64, component: ComponentId) {
+        self.heap.push(Reverse((tick, component)));
+    }
+
+    fn pop(&mut self) -> Option<(u64, ComponentId)> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+}
 
 /// One request to dispatch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,9 +188,11 @@ impl FaultCharges<'_> {
 /// onto the chip `policy` picks; chips serve FIFO.
 ///
 /// `service_on(dispatch_index, chip)` is the request's service cost on
-/// that chip (heterogeneous fleets: per-chip-arch simulation cycles).
-/// Output is a pure function of the inputs — the policy contract
-/// requires deterministic `place` decisions.
+/// that chip (heterogeneous fleets: per-chip-arch simulation cycles —
+/// or a [`ServiceTimeTable`](crate::serve::surrogate::ServiceTimeTable)
+/// lookup on the surrogate replay path).  Output is a pure function of
+/// the inputs — the policy contract requires deterministic `place`
+/// decisions.
 pub fn dispatch_fifo(
     chips: usize,
     dispatches: &[Dispatch],
@@ -168,8 +217,16 @@ pub fn dispatch_fifo(
         dispatches.len()
     ];
     let mut service = vec![0u64; chips];
-    for &i in &order {
+    let mut heap = EventHeap::default();
+    let mut next = 0usize;
+    if let Some(&first) = order.first() {
+        heap.schedule(dispatches[first].arrival_cycle, ARRIVAL_SOURCE);
+    }
+    while let Some((now, component)) = heap.pop() {
+        debug_assert_eq!(component, ARRIVAL_SOURCE);
+        let i = order[next];
         let d = &dispatches[i];
+        debug_assert_eq!(d.arrival_cycle, now);
         for (c, s) in service.iter_mut().enumerate() {
             *s = service_on(i, c);
         }
@@ -183,12 +240,12 @@ pub fn dispatch_fifo(
                 },
                 &FleetState {
                     busy_until: &busy_until,
-                    now: d.arrival_cycle,
+                    now,
                     active: None,
                 },
             )
             .min(chips - 1);
-        let start = busy_until[chip].max(d.arrival_cycle);
+        let start = busy_until[chip].max(now);
         busy_until[chip] = start + service[chip];
         chip_busy_cycles[chip] += service[chip];
         chip_requests[chip] += 1;
@@ -199,6 +256,10 @@ pub fn dispatch_fifo(
             migrated: false,
             dropped: false,
         };
+        next += 1;
+        if let Some(&n) = order.get(next) {
+            heap.schedule(dispatches[n].arrival_cycle, ARRIVAL_SOURCE);
+        }
     }
     let makespan = busy_until.iter().copied().max().unwrap_or(0);
     FleetTimeline {
@@ -226,18 +287,20 @@ struct Parked {
 
 /// Mutable state of one fault-aware timeline run; methods keep the
 /// placement/redispatch logic in one place for every call site (arrival,
-/// failure redispatch, parked flush, autoscaler action).
+/// failure redispatch, parked flush, autoscaler action, chip
+/// retirement).
 struct FaultRun<'a, S: Fn(usize, usize) -> u64> {
     chips: usize,
     dispatches: &'a [Dispatch],
     service_on: S,
     policy: &'a mut dyn Placement,
     charges: &'a FaultCharges<'a>,
+    heap: EventHeap,
     busy_until: Vec<u64>,
     status: Vec<ChipStatus>,
     active_since: Vec<Option<u64>>,
     avail: Vec<u64>,
-    queues: Vec<Vec<usize>>,
+    queues: Vec<VecDeque<usize>>,
     parked: Vec<Parked>,
     placements: Vec<PlacedRequest>,
     placed: Vec<bool>,
@@ -310,7 +373,8 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
         let start = self.busy_until[chip].max(now);
         let total = self.service[chip] + mig_cycles;
         self.busy_until[chip] = start + total;
-        self.queues[chip].push(i);
+        self.queues[chip].push_back(i);
+        self.heap.schedule(self.busy_until[chip], CHIP_BASE + chip);
         self.placements[i] = PlacedRequest {
             chip,
             start_cycle: start,
@@ -378,6 +442,24 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
             }
         }
     }
+
+    /// Chip-actor tick: retire queue entries finished by `now`.  Pure
+    /// garbage collection — placements are already final — but it keeps
+    /// resident queue memory bounded by in-flight work, which is what
+    /// makes 10⁶–10⁷-request surrogate replays feasible.  FIFO service
+    /// makes per-queue completion cycles monotone, so retiring from the
+    /// front is exact.
+    fn retire(&mut self, c: usize, now: u64) {
+        while let Some(&i) = self.queues[c].front() {
+            let p = &self.placements[i];
+            debug_assert_eq!(p.chip, c);
+            if p.start_cycle + p.service_cycles <= now {
+                self.queues[c].pop_front();
+            } else {
+                break;
+            }
+        }
+    }
 }
 
 /// Nearest-rank p99 of a window (the autoscaler's SLO metric).
@@ -389,14 +471,17 @@ fn p99_of(window: &[u64]) -> u64 {
 }
 
 /// The fault-aware timeline: [`dispatch_fifo`] semantics interleaved
-/// with a [`FaultPlan`] and an optional [`AutoscaleConfig`].
+/// with a [`FaultPlan`] and an optional [`AutoscaleConfig`], driven by
+/// the full three-actor event heap (fault driver, arrival source, chip
+/// retirement).
 ///
 /// Events at cycle `t` apply before requests arriving at `t` are
-/// dispatched; redispatches and parked-request flushes run inline at
-/// the event cycle, FIFO order preserved, so the whole run stays a pure
-/// function of `(dispatches, plan, policy, charges)` — byte-identical
-/// across host worker counts.  With `plan.is_empty()` and no autoscaler
-/// the output equals [`dispatch_fifo`] exactly.
+/// dispatched (the heap tie-break); redispatches and parked-request
+/// flushes run inline at the event cycle, FIFO order preserved, so the
+/// whole run stays a pure function of `(dispatches, plan, policy,
+/// charges)` — byte-identical across host worker counts.  With
+/// `plan.is_empty()` and no autoscaler the output equals
+/// [`dispatch_fifo`] exactly.
 pub fn dispatch_fifo_faulty(
     chips: usize,
     dispatches: &[Dispatch],
@@ -421,11 +506,12 @@ pub fn dispatch_fifo_faulty(
         service_on,
         policy,
         charges,
+        heap: EventHeap::default(),
         busy_until: vec![0; chips],
         status: vec![ChipStatus::Active; chips],
         active_since: vec![Some(0); chips],
         avail: vec![0; chips],
-        queues: vec![Vec::new(); chips],
+        queues: vec![VecDeque::new(); chips],
         parked: Vec::new(),
         placements: vec![
             PlacedRequest {
@@ -449,59 +535,78 @@ pub fn dispatch_fifo_faulty(
     }
 
     let mut ei = 0usize;
+    let mut next = 0usize;
     let mut window: Vec<u64> = Vec::new();
     let mut cooldown = 0u32;
-    for &i in &order {
-        let now = dispatches[i].arrival_cycle;
-        while ei < events.len() && events[ei].cycle <= now {
-            run.apply(events[ei]);
-            ei += 1;
-        }
-        run.place(i, now, false);
-        let a = match autoscale {
-            Some(a) => a,
-            None => continue,
-        };
-        if run.placed[i] {
-            let p = run.placements[i];
-            window.push(p.start_cycle + p.service_cycles - now);
-        }
-        if window.len() < a.window.max(1) {
-            continue;
-        }
-        let p99 = p99_of(&window);
-        window.clear();
-        if cooldown > 0 {
-            cooldown -= 1;
-            continue;
-        }
-        if p99 > a.slo_p99 {
-            if let Some(c) = run.status.iter().position(|&s| s == ChipStatus::Down) {
-                run.apply(FaultEvent {
-                    cycle: now,
-                    chip: c,
-                    kind: FaultKind::Join,
-                });
-                run.stats.scale_ups += 1;
-                cooldown = a.cooldown;
+    if let Some(ev) = events.first() {
+        run.heap.schedule(ev.cycle, FAULT_DRIVER);
+    }
+    if let Some(&first) = order.first() {
+        run.heap.schedule(dispatches[first].arrival_cycle, ARRIVAL_SOURCE);
+    }
+    while let Some((now, component)) = run.heap.pop() {
+        match component {
+            FAULT_DRIVER => {
+                run.apply(events[ei]);
+                ei += 1;
+                if let Some(ev) = events.get(ei) {
+                    run.heap.schedule(ev.cycle, FAULT_DRIVER);
+                }
             }
-        } else if p99.saturating_mul(2) < a.slo_p99 && run.active_count() > a.min_chips.max(1) {
-            let c = run.status.iter().rposition(|&s| s == ChipStatus::Active).unwrap();
-            run.apply(FaultEvent {
-                cycle: now,
-                chip: c,
-                kind: FaultKind::Drain,
-            });
-            run.stats.scale_downs += 1;
-            cooldown = a.cooldown;
+            ARRIVAL_SOURCE => {
+                let i = order[next];
+                debug_assert_eq!(dispatches[i].arrival_cycle, now);
+                run.place(i, now, false);
+                next += 1;
+                if let Some(&n) = order.get(next) {
+                    run.heap.schedule(dispatches[n].arrival_cycle, ARRIVAL_SOURCE);
+                }
+                let Some(a) = autoscale else { continue };
+                if run.placed[i] {
+                    let p = run.placements[i];
+                    window.push(p.start_cycle + p.service_cycles - now);
+                }
+                if window.len() < a.window.max(1) {
+                    continue;
+                }
+                let p99 = p99_of(&window);
+                window.clear();
+                if cooldown > 0 {
+                    cooldown -= 1;
+                    continue;
+                }
+                if p99 > a.slo_p99 {
+                    if let Some(c) = run.status.iter().position(|&s| s == ChipStatus::Down) {
+                        run.apply(FaultEvent {
+                            cycle: now,
+                            chip: c,
+                            kind: FaultKind::Join,
+                        });
+                        run.stats.scale_ups += 1;
+                        cooldown = a.cooldown;
+                    }
+                } else if p99.saturating_mul(2) < a.slo_p99
+                    && run.active_count() > a.min_chips.max(1)
+                {
+                    let c = run
+                        .status
+                        .iter()
+                        .rposition(|&s| s == ChipStatus::Active)
+                        .unwrap();
+                    run.apply(FaultEvent {
+                        cycle: now,
+                        chip: c,
+                        kind: FaultKind::Drain,
+                    });
+                    run.stats.scale_downs += 1;
+                    cooldown = a.cooldown;
+                }
+            }
+            c => run.retire(c - CHIP_BASE, now),
         }
     }
-    // Late events still matter: a join after the last arrival rescues
-    // parked requests.
-    while ei < events.len() {
-        run.apply(events[ei]);
-        ei += 1;
-    }
+    debug_assert_eq!(ei, events.len(), "the fault driver drains its plan");
+    debug_assert_eq!(next, order.len(), "the arrival source drains its trace");
 
     let FaultRun {
         mut placements,
@@ -843,5 +948,27 @@ mod tests {
         assert_eq!(t.faults.scale_ups, 0);
         assert_eq!(t.chip_requests[2] + t.chip_requests[3], 0);
         assert!(t.placements.iter().all(|p| !p.dropped));
+    }
+
+    #[test]
+    fn retirement_keeps_queues_bounded_without_changing_the_timeline() {
+        // A long single-chip FIFO: by the time the last request places,
+        // every earlier one has completed and the chip actor must have
+        // retired it.  The observable timeline is unchanged (asserted
+        // against the closed-form FIFO schedule).
+        let d = dispatches(&(0..512).map(|i| i * 10).collect::<Vec<_>>());
+        let t = dispatch_fifo_faulty(
+            1,
+            &d,
+            |_, _| 10,
+            &mut RoundRobin::new(),
+            &FaultPlan::none(),
+            None,
+            &FaultCharges::FREE,
+        );
+        for (i, p) in t.placements.iter().enumerate() {
+            assert_eq!(p.start_cycle, i as u64 * 10, "back-to-back FIFO");
+        }
+        assert_eq!(t.makespan, 5120);
     }
 }

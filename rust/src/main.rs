@@ -12,14 +12,15 @@
 //!
 //! ```text
 //! gpp-pim info  [--config FILE]
-//! gpp-pim exec  SPEC [--csv-dir DIR] [--bench-json FILE]
+//! gpp-pim exec  SPEC|@FILE [--csv-dir DIR] [--bench-json FILE]
 //! gpp-pim repro --exp fig4|fig6|fig7|table2|headline|all [--csv-dir DIR] [--vectors N] [--jobs N]
 //! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
 //!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
 //! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C | --fleet SPEC]
 //!               [--placement rr|least-loaded|affinity|sed] [--mean-gap G]
-//!               [--faults PLAN] [--autoscale --slo CYCLES] [--csv-dir D]
+//!               [--faults PLAN] [--autoscale --slo CYCLES]
+//!               [--surrogate exact|eqs] [--csv-dir D]
 //! gpp-pim fleet [--requests N] [--seed S] [--jobs J] [--sizes 1,2,4 | --fleet SPEC]
 //!               [--placement P|all] [--faults PLAN] [--mean-gap G] [--csv-dir D]
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
@@ -41,6 +42,7 @@ use gpp_pim::fleet::{FaultPlan, PlacementPolicy};
 use gpp_pim::isa;
 use gpp_pim::runtime::Runtime;
 use gpp_pim::sched::{CodegenStyle, Strategy};
+use gpp_pim::serve::SurrogateMode;
 use gpp_pim::sim::trace;
 use std::collections::HashMap;
 
@@ -304,12 +306,58 @@ fn cmd_exec(args: &Args) -> Result<()> {
     args.check("exec", &["config", "csv-dir", "bench-json"], 1, None)?;
     let Some(text) = args.positional.first() else {
         bail!(
-            "usage: gpp-pim exec SPEC [--csv-dir DIR] [--bench-json FILE]\n  SPEC kinds: {}",
+            "usage: gpp-pim exec SPEC|@FILE [--csv-dir DIR] [--bench-json FILE]\n  SPEC kinds: {}",
             gpp_pim::api::VALID_KINDS.join(", ")
         );
     };
+    if let Some(path) = text.strip_prefix('@') {
+        return exec_batch(args, path);
+    }
     let spec = RunSpec::parse(text)?;
     run_spec(args, &spec)?;
+    Ok(())
+}
+
+/// `exec @FILE`: one canonical spec per non-comment line, all run
+/// through a *single* [`Session`] — so the codegen cache and the serve
+/// [`ServiceTimeTable`](gpp_pim::serve::ServiceTimeTable) are shared
+/// across specs (a second `serve:` line reuses every workload class the
+/// first calibrated).  Blank lines and `#` comments are skipped; an
+/// empty file (no spec lines at all) is an error, and both parse and
+/// run failures name the offending `FILE:LINE`.
+fn exec_batch(args: &Args, path: &str) -> Result<()> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading spec file {path}"))?;
+    let mut specs = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let spec = RunSpec::parse(line)
+            .with_context(|| format!("{path}:{}: bad spec '{line}'", idx + 1))?;
+        specs.push((idx + 1, spec));
+    }
+    if specs.is_empty() {
+        bail!("{path}: no specs to run (every line is blank or a '#' comment)");
+    }
+    let session = Session::new(load_arch(args)?);
+    let mut stdout = StdoutSink;
+    let mut csv = args.get("csv-dir").map(CsvDirSink::new);
+    let mut bench = args.get("bench-json").map(BenchJsonSink::new);
+    for (line_no, spec) in &specs {
+        let mut sinks = SinkSet::new().with(&mut stdout);
+        if let Some(c) = csv.as_mut() {
+            sinks.push(c);
+        }
+        if let Some(b) = bench.as_mut() {
+            sinks.push(b);
+        }
+        session
+            .run(spec, &mut sinks)
+            .with_context(|| format!("{path}:{line_no}: spec '{spec}' failed"))?;
+    }
+    println!("[exec: {} specs from {path} through one session]", specs.len());
     Ok(())
 }
 
@@ -410,7 +458,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve",
         &[
             "config", "requests", "seed", "jobs", "chips", "fleet", "placement", "mean-gap",
-            "faults", "autoscale", "slo", "csv-dir", "bench-json",
+            "faults", "autoscale", "slo", "surrogate", "csv-dir", "bench-json",
         ],
         0,
         Some("serve"),
@@ -440,6 +488,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if slo.is_some() && !autoscale {
         bail!("--slo requires --autoscale");
     }
+    let surrogate = match args.get("surrogate") {
+        Some(v) => SurrogateMode::from_name(v)
+            .ok_or_else(|| anyhow!("bad --surrogate '{v}' (exact|eqs)"))?,
+        None => SurrogateMode::Exact,
+    };
     let chips = match args.get("chips") {
         Some(v) => {
             let chips: usize = v.parse().with_context(|| format!("--chips {v}"))?;
@@ -459,6 +512,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         faults: faults_flag(args)?,
         autoscale,
         slo,
+        surrogate,
         chips,
         fleet: args.get("fleet").map(String::from),
     });
@@ -634,7 +688,10 @@ COMMANDS:
               exec \"serve:fleet=2xpaper:placement=least-loaded:requests=512\"
              (kinds: repro|run|simulate|serve|fleet|dse|dse-full|adapt;
               --csv-dir DIR persists tables, --bench-json FILE records
-              wall time in the BENCH_*.json schema)
+              wall time in the BENCH_*.json schema).
+             exec @FILE runs one spec per non-comment line through a
+              single session — codegen cache and serve service-time
+              table shared across the batch; errors name FILE:LINE
   repro      regenerate paper figures/tables  (--exp fig4|fig6|fig7|table2|headline|all,
               --jobs N parallel sweep workers, --vectors N, --csv-dir DIR)
   simulate   run one strategy on an abstract task plan
@@ -651,7 +708,11 @@ COMMANDS:
               (fail|drain|join@CYCLE@CHIP / mtbf@MEAN@SEED, comma-sep;
               failures redispatch queued work and charge weight re-writes),
               --autoscale --slo CYCLES grows/shrinks the fleet against a
-              p99 latency target, --csv-dir DIR writes serve.csv +
+              p99 latency target, --surrogate exact|eqs picks how
+              per-class service times are calibrated (exact = cycle-true
+              simulation, the default; eqs = closed-form prediction where
+              the model/eqs coverage map validates, exact elsewhere),
+              --csv-dir DIR writes serve.csv +
               serve_summary.csv + fleet.csv + fleet_requests.csv)
   fleet      sweep fleet size x placement policy over one request stream
              (--sizes 1,2,4 or --fleet SPEC, --placement P|all,

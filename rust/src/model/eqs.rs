@@ -3,6 +3,30 @@
 //! Notation (paper Table I): `tp = time_PIM`, `tr = time_rewrite`,
 //! `band` = off-chip bandwidth (B/cycle), `s` = per-macro rewrite speed
 //! (B/cycle).  All functions are totals over one write+compute period.
+//!
+//! ## Validated closed-form coverage (`--surrogate eqs`)
+//!
+//! [`ServiceModel`] is the calibrated service-time surrogate behind
+//! `serve --surrogate eqs` (ISSUE 7).  Its validity rests on the
+//! steady-state linearity the fast-forward engine (PR 4) proved
+//! bit-identical: once a strategy's schedule reaches its periodic
+//! steady state, every additional task adds a constant number of
+//! cycles, so `cycles(tasks)` is affine beyond the warm-up prefix.
+//! The coverage map — which `(strategy, plan)` classes the closed form
+//! is trusted for — is enforced by
+//! [`ServiceTimeTable`](crate::serve::surrogate::ServiceTimeTable):
+//!
+//! - strategies `gpp`, `insitu`, `naive` (looped lowerings with
+//!   steady-state detection); `intra` falls back to cycle-exact,
+//! - `plan.tasks` beyond the second calibration anchor (interpolation
+//!   inside the warm-up prefix is not attempted),
+//! - both anchors agree on the active-macro count (otherwise the plan
+//!   was clamped mid-range and linearity is not guaranteed).
+//!
+//! Everything outside the map silently uses the cycle-exact engine, so
+//! `eqs` is conservative by construction — the CI cross-check gates
+//! (`surrogate-calibration` job) keep the ≤1% latency-error budget
+//! honest on sampled classes forever.
 
 /// Macro utilization of the **naive ping-pong** strategy, Eqs. 1–2:
 /// `util = (tp + tr) / (2 * max(tp, tr))`.
@@ -98,6 +122,69 @@ pub fn peak_bandwidth(strategy_writers_fraction: f64, num: f64, s: f64) -> f64 {
 pub fn weight_write_cycles(bytes: u64, macros: u64, speed: u64, bandwidth: u64) -> u64 {
     let rate = (macros.saturating_mul(speed)).min(bandwidth).max(1);
     bytes.div_ceil(rate)
+}
+
+/// Two-anchor calibrated linear service-time model (ISSUE 7): the
+/// closed form behind `serve --surrogate eqs`.
+///
+/// Two cycle-exact measurements `(t0, c0)` and `(t1, c1)` at small task
+/// counts anchor the line; [`predict`](Self::predict) extrapolates to
+/// any larger task count with exact integer arithmetic (u128
+/// intermediate, no rounding drift).  When the underlying schedule is
+/// in its periodic steady state between the anchors — the coverage-map
+/// precondition documented in the module header — the per-task slope
+/// `(c1 - c0)/(t1 - t0)` *is* the steady-state period and the
+/// prediction is exact, not approximate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceModel {
+    t0: u64,
+    c0: u64,
+    t1: u64,
+    c1: u64,
+}
+
+impl ServiceModel {
+    /// Calibrate from two anchor measurements.  Returns `None` for
+    /// degenerate anchors (non-increasing task counts or decreasing
+    /// cost — linearity clearly does not hold there).
+    pub fn calibrate(t0: u64, c0: u64, t1: u64, c1: u64) -> Option<Self> {
+        if t1 <= t0 || c1 < c0 {
+            return None;
+        }
+        Some(Self { t0, c0, t1, c1 })
+    }
+
+    /// Predict the cost at `tasks` by integer linear
+    /// interpolation/extrapolation:
+    /// `c0 + (c1 - c0) * (tasks - t0) / (t1 - t0)`.
+    ///
+    /// Below the first anchor the model clamps to `c0` (the coverage
+    /// map never asks for that region).
+    pub fn predict(&self, tasks: u64) -> u64 {
+        if tasks <= self.t0 {
+            return self.c0;
+        }
+        let dc = (self.c1 - self.c0) as u128;
+        let dt = (self.t1 - self.t0) as u128;
+        let x = (tasks - self.t0) as u128;
+        let predicted = self.c0 as u128 + dc * x / dt;
+        u64::try_from(predicted).unwrap_or(u64::MAX)
+    }
+
+    /// The integer per-task slope `floor((c1 - c0)/(t1 - t0))` — the
+    /// steady-state period when the coverage preconditions hold.
+    pub fn slope(&self) -> u64 {
+        (self.c1 - self.c0) / (self.t1 - self.t0)
+    }
+
+    /// True when the anchor spacing divides the cost delta evenly —
+    /// the signature of an exactly periodic steady state.  The
+    /// surrogate table uses this as a last-line coverage check: a
+    /// non-integral slope means the anchors straddled a warm-up
+    /// boundary and the class falls back to cycle-exact.
+    pub fn is_periodic(&self) -> bool {
+        (self.c1 - self.c0) % (self.t1 - self.t0) == 0
+    }
 }
 
 /// Writer fraction for each strategy (used with [`peak_bandwidth`]).
@@ -220,6 +307,38 @@ mod tests {
     #[test]
     fn effective_macros_linear() {
         assert_eq!(effective_macros(16.0, 0.5), 8.0);
+    }
+
+    #[test]
+    fn service_model_is_exact_on_affine_data() {
+        // cycles = 1000 + 37 * tasks, anchored at 64 and 128: every
+        // extrapolation must land exactly on the line.
+        let f = |t: u64| 1000 + 37 * t;
+        let m = ServiceModel::calibrate(64, f(64), 128, f(128)).unwrap();
+        assert_eq!(m.slope(), 37);
+        assert!(m.is_periodic());
+        for t in [128, 129, 4096, 1 << 20, 10_000_000] {
+            assert_eq!(m.predict(t), f(t), "tasks={t}");
+        }
+        // Below the first anchor the model clamps to the anchor cost.
+        assert_eq!(m.predict(1), f(64));
+    }
+
+    #[test]
+    fn service_model_rejects_degenerate_anchors() {
+        assert!(ServiceModel::calibrate(64, 100, 64, 200).is_none());
+        assert!(ServiceModel::calibrate(128, 100, 64, 200).is_none());
+        assert!(ServiceModel::calibrate(64, 200, 128, 100).is_none());
+    }
+
+    #[test]
+    fn service_model_flags_non_periodic_anchors() {
+        // Delta 100 over spacing 64 is not integral: not steady-state.
+        let m = ServiceModel::calibrate(64, 1000, 128, 1100).unwrap();
+        assert!(!m.is_periodic());
+        // Huge extrapolations stay in range via the u128 intermediate.
+        let big = ServiceModel::calibrate(64, u64::MAX / 2, 128, u64::MAX / 2 + 64).unwrap();
+        assert_eq!(big.predict(192), u64::MAX / 2 + 128);
     }
 
     #[test]

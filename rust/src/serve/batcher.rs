@@ -58,7 +58,7 @@ impl BatchSet {
 }
 
 /// Groups requests by workload class for a fixed chip architecture.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Batcher {
     arch: ArchConfig,
     fit: bool,
@@ -100,35 +100,85 @@ impl Batcher {
     /// first-appearance order.  Fails on the first request that cannot be
     /// planned (empty workload).
     pub fn batch(&self, requests: &[Request]) -> Result<BatchSet, ServeError> {
-        let mut index: HashMap<WorkloadClass, usize> = HashMap::new();
-        let mut batches: Vec<Batch> = Vec::new();
-        let mut class_of = Vec::with_capacity(requests.len());
-        for (i, req) in requests.iter().enumerate() {
-            let cfg = self.fitted(&req.cfg);
-            let plan =
-                plan_for(&self.arch, &req.workload, &cfg).map_err(|reason| {
-                    ServeError::Plan {
-                        id: req.id,
-                        name: req.workload.name.clone(),
-                        reason,
-                    }
-                })?;
-            let class = WorkloadClass {
-                strategy: cfg.strategy,
-                plan,
-                arch: self.arch.clone(),
-            };
-            let b = *index.entry(class.clone()).or_insert_with(|| {
-                batches.push(Batch {
-                    class,
-                    members: Vec::new(),
-                });
-                batches.len() - 1
-            });
-            batches[b].members.push(i);
-            class_of.push(b);
+        let mut stream = StreamingBatcher::new(self.clone());
+        for req in requests {
+            stream.push(req)?;
         }
-        Ok(BatchSet { batches, class_of })
+        let mut set = stream.finish();
+        // The streaming path leaves membership implicit (it never holds
+        // the request slice); batch-mode callers get it backfilled.
+        for (i, &b) in set.class_of.iter().enumerate() {
+            set.batches[b].members.push(i);
+        }
+        Ok(set)
+    }
+}
+
+/// The one-request-at-a-time [`Batcher`]: classifies each request as it
+/// is generated so million-request traces never materialize a `Request`
+/// vector.  Classification is identical to [`Batcher::batch`] — same
+/// fitting, same first-appearance class order — but the produced
+/// [`Batch::members`] lists stay **empty**: a streaming consumer keeps
+/// whatever per-request state it needs (the engine keeps only
+/// `(id, arrival)` pairs) and `class_of` carries the mapping.
+#[derive(Debug)]
+pub struct StreamingBatcher {
+    batcher: Batcher,
+    index: HashMap<WorkloadClass, usize>,
+    batches: Vec<Batch>,
+    class_of: Vec<usize>,
+}
+
+impl StreamingBatcher {
+    /// A streaming wrapper around `batcher`'s classification rules.
+    pub fn new(batcher: Batcher) -> Self {
+        Self {
+            batcher,
+            index: HashMap::new(),
+            batches: Vec::new(),
+            class_of: Vec::new(),
+        }
+    }
+
+    /// Classify one request, returning its class index (an index into
+    /// the eventual [`BatchSet::batches`]).
+    pub fn push(&mut self, req: &Request) -> Result<usize, ServeError> {
+        let cfg = self.batcher.fitted(&req.cfg);
+        let plan = plan_for(&self.batcher.arch, &req.workload, &cfg).map_err(|reason| {
+            ServeError::Plan {
+                id: req.id,
+                name: req.workload.name.clone(),
+                reason,
+            }
+        })?;
+        let class = WorkloadClass {
+            strategy: cfg.strategy,
+            plan,
+            arch: self.batcher.arch.clone(),
+        };
+        let b = *self.index.entry(class.clone()).or_insert_with(|| {
+            self.batches.push(Batch {
+                class,
+                members: Vec::new(),
+            });
+            self.batches.len() - 1
+        });
+        self.class_of.push(b);
+        Ok(b)
+    }
+
+    /// Requests classified so far.
+    pub fn requests(&self) -> usize {
+        self.class_of.len()
+    }
+
+    /// Finish the stream.  `members` lists are empty (see the type
+    /// docs); `class_of` is complete.
+    pub fn finish(self) -> BatchSet {
+        BatchSet {
+            batches: self.batches,
+            class_of: self.class_of,
+        }
     }
 }
 
@@ -232,6 +282,28 @@ mod tests {
         // First-appearance order, and the duplicate folds into class 0.
         assert_eq!(set.class_of, vec![0, 1, 2, 3, 0]);
         assert_eq!(set.batches[0].members, vec![0, 4]);
+    }
+
+    #[test]
+    fn streaming_batcher_matches_batch_classification() {
+        let reqs = vec![
+            req(0, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+            req(1, blas::e2e_ffn(), Strategy::InSitu, 4),
+            req(2, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 8),
+            req(3, blas::e2e_ffn(), Strategy::GeneralizedPingPong, 4),
+        ];
+        let batched = Batcher::new(ArchConfig::paper_default()).batch(&reqs).unwrap();
+        let mut stream = StreamingBatcher::new(Batcher::new(ArchConfig::paper_default()));
+        let ids: Vec<usize> = reqs.iter().map(|r| stream.push(r).unwrap()).collect();
+        assert_eq!(stream.requests(), 4);
+        let set = stream.finish();
+        assert_eq!(ids, batched.class_of);
+        assert_eq!(set.class_of, batched.class_of);
+        assert_eq!(set.classes(), batched.classes());
+        for (s, b) in set.batches.iter().zip(&batched.batches) {
+            assert_eq!(s.class, b.class);
+            assert!(s.members.is_empty(), "streaming keeps members implicit");
+        }
     }
 
     #[test]

@@ -25,8 +25,10 @@
 //!    ([`weight_write_cycles`]).  Stage 3 never changes: the reference
 //!    timeline (and `serve.csv`) is fault-invariant by construction.
 
-use super::batcher::{Batch, FleetBatches};
+use super::batcher::{Batcher, FleetBatches, StreamingBatcher, WorkloadClass};
 use super::report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
+use super::surrogate::{ServiceEntry, ServiceTimeTable, SurrogateMode};
+use super::traffic::{TrafficConfig, TrafficStream};
 use super::{Request, ServeError};
 use crate::arch::ArchConfig;
 use crate::fleet::{
@@ -34,8 +36,9 @@ use crate::fleet::{
     FleetConfig, FleetTimeline, PlacementPolicy,
 };
 use crate::model::eqs::weight_write_cycles;
-use crate::sim::{simulate_in, SimStats, SimWorkspace};
+use crate::sim::{simulate_in, SimWorkspace};
 use crate::sweep::{run_indexed, CodegenCache, FleetAxis, FleetSweepPoint};
+use std::sync::Arc;
 
 /// Multiplexes request streams onto a simulated chip fleet.
 #[derive(Debug)]
@@ -46,6 +49,8 @@ pub struct ServeEngine {
     cache: CodegenCache,
     faults: FaultPlan,
     autoscale: Option<AutoscaleConfig>,
+    surrogate: SurrogateMode,
+    table: Arc<ServiceTimeTable>,
 }
 
 impl ServeEngine {
@@ -71,7 +76,25 @@ impl ServeEngine {
             cache: CodegenCache::new(),
             faults: FaultPlan::none(),
             autoscale: None,
+            surrogate: SurrogateMode::Exact,
+            table: Arc::new(ServiceTimeTable::new()),
         }
+    }
+
+    /// Builder: how per-class service times are calibrated (ISSUE 7).
+    /// The default, [`SurrogateMode::Exact`], is byte-identical to the
+    /// pre-surrogate engine.
+    pub fn with_surrogate(mut self, mode: SurrogateMode) -> Self {
+        self.surrogate = mode;
+        self
+    }
+
+    /// Builder: share a [`ServiceTimeTable`] with other engines (an
+    /// `exec @file` session threads one table through every spec so
+    /// repeat classes calibrate once per *batch*, not once per spec).
+    pub fn with_service_table(mut self, table: Arc<ServiceTimeTable>) -> Self {
+        self.table = table;
+        self
     }
 
     /// Builder: run the policy timeline under `plan` (ISSUE 6).  The
@@ -134,35 +157,93 @@ impl ServeEngine {
         &self.cache
     }
 
-    /// One-line diagnostic for CLI/bench output.
+    /// The configured surrogate calibration mode.
+    pub fn surrogate(&self) -> SurrogateMode {
+        self.surrogate
+    }
+
+    /// The engine's service-time table (shared, persists across runs).
+    pub fn service_table(&self) -> &Arc<ServiceTimeTable> {
+        &self.table
+    }
+
+    /// One-line diagnostic for CLI/bench output.  Table hit/miss
+    /// counters are deliberately omitted: worker interleaving makes
+    /// them `--jobs`-dependent, and this line feeds byte-compared CLI
+    /// transcripts.
     pub fn summary(&self) -> String {
         format!(
-            "[serve: {} workers, {} chips ({}), policy {}, {} programs generated, {} cache hits]",
+            "[serve: {} workers, {} chips ({}), policy {}, {} programs generated, {} cache hits, surrogate {}, {} classes calibrated]",
             self.jobs,
             self.fleet.len(),
             self.fleet.describe(),
             self.policy.name(),
             self.cache.misses(),
-            self.cache.hits()
+            self.cache.hits(),
+            self.surrogate,
+            self.table.len()
         )
     }
 
-    /// Serve a request stream: batch per distinct arch, simulate unique
+    /// Serve a request stream: batch per distinct arch, calibrate unique
     /// classes, lay both timelines, merge.
     ///
     /// Fails fast on the first error in `(arch, class)` order
     /// (deterministically — not in completion order).
     pub fn run(&self, requests: &[Request]) -> Result<ServeReport, ServeError> {
         let ev = self.evaluate(requests)?;
-        Ok(self.report_for(requests, &ev, self.policy))
+        let arrivals: Vec<(u32, u64)> = requests.iter().map(|r| (r.id, r.arrival_cycle)).collect();
+        Ok(self.report_for(&arrivals, &ev, self.policy))
     }
 
-    /// Stages 1–2: batch per distinct arch and run one simulation per
-    /// unique `(arch, class)`, work-stolen across the host worker pool.
-    /// Policy-independent — [`run_fleet_axis`] reuses one evaluation
-    /// across every placement policy of a fleet.
+    /// Serve synthetic traffic without ever materializing the request
+    /// vector: requests stream from the generator straight into the
+    /// per-arch classifiers ([`StreamingBatcher`]), so a 10⁷-request
+    /// trace costs `(id, arrival)` pairs plus the class table — not 10⁷
+    /// `Request` clones.  Identical output to
+    /// `run(&synthetic_traffic(arch, cfg))` by construction (one shared
+    /// generator, one shared classification).
+    pub fn run_traffic(&self, cfg: &TrafficConfig) -> Result<ServeReport, ServeError> {
+        let (archs, arch_of_chip) = self.fleet.distinct();
+        let mut streams: Vec<StreamingBatcher> = archs
+            .iter()
+            .enumerate()
+            .map(|(a, arch)| {
+                StreamingBatcher::new(if a == 0 {
+                    Batcher::new(arch.clone())
+                } else {
+                    Batcher::with_fitting(arch.clone())
+                })
+            })
+            .collect();
+        let mut arrivals = Vec::with_capacity(cfg.requests as usize);
+        for req in TrafficStream::new(self.arch(), cfg) {
+            arrivals.push((req.id, req.arrival_cycle));
+            for s in &mut streams {
+                s.push(&req)?;
+            }
+        }
+        let fb = FleetBatches {
+            archs,
+            arch_of_chip,
+            sets: streams.into_iter().map(|s| s.finish()).collect(),
+        };
+        let ev = self.evaluate_batches(fb)?;
+        Ok(self.report_for(&arrivals, &ev, self.policy))
+    }
+
+    /// Stages 1–2: batch per distinct arch and calibrate each unique
+    /// `(arch, class)` exactly once.  Policy-independent —
+    /// [`run_fleet_axis`] reuses one evaluation across every placement
+    /// policy of a fleet.
     fn evaluate(&self, requests: &[Request]) -> Result<Evaluated, ServeError> {
-        let fb = FleetBatches::batch(&self.fleet, requests)?;
+        self.evaluate_batches(FleetBatches::batch(&self.fleet, requests)?)
+    }
+
+    /// Stage 2 proper: resolve every class through the service-time
+    /// table (tier 1), work-stealing the cycle-exact calibrations that
+    /// miss across the host worker pool.
+    fn evaluate_batches(&self, fb: FleetBatches) -> Result<Evaluated, ServeError> {
         let flat: Vec<(usize, usize)> = fb
             .sets
             .iter()
@@ -171,9 +252,11 @@ impl ServeEngine {
             .collect();
         let results = run_indexed(self.jobs, flat.len(), |i, ws| {
             let (a, b) = flat[i];
-            self.eval(b, &fb.sets[a].batches[b], ws)
+            let class = &fb.sets[a].batches[b].class;
+            self.table
+                .entry_for(self.surrogate, class, &mut |c| self.eval_class(b, c, ws))
         });
-        let mut class_stats: Vec<Vec<SimStats>> = fb
+        let mut class_stats: Vec<Vec<ServiceEntry>> = fb
             .sets
             .iter()
             .map(|s| Vec::with_capacity(s.batches.len()))
@@ -185,10 +268,13 @@ impl ServeEngine {
     }
 
     /// Stages 3–4: lay the reference and policy timelines over an
-    /// evaluation and assemble the report.
+    /// evaluation and assemble the report.  Requests are represented by
+    /// their `(id, arrival_cycle)` pairs — the only per-request state
+    /// the timelines consume — so streaming callers never hold full
+    /// [`Request`] values.
     fn report_for(
         &self,
-        requests: &[Request],
+        arrivals: &[(u32, u64)],
         ev: &Evaluated,
         policy: PlacementPolicy,
     ) -> ServeReport {
@@ -199,25 +285,25 @@ impl ServeEngine {
         // one reference-arch chip.
         let set = fb.reference();
         let ref_stats = &class_stats[0];
-        let mut records: Vec<RequestRecord> = requests
+        let mut records: Vec<RequestRecord> = arrivals
             .iter()
             .enumerate()
-            .map(|(i, req)| {
+            .map(|(i, &(id, arrival_cycle))| {
                 let b = set.class_of[i];
                 let class = &set.batches[b].class;
                 let stats = &ref_stats[b];
                 RequestRecord {
-                    id: req.id,
+                    id,
                     class: b,
                     strategy: class.strategy,
                     tasks: class.plan.tasks,
                     n_in: class.plan.n_in,
                     active_macros: class.plan.active_macros,
-                    arrival_cycle: req.arrival_cycle,
+                    arrival_cycle,
                     queue_cycles: 0,
                     service_cycles: stats.cycles,
-                    vectors: stats.vectors_computed,
-                    macro_cycles: stats.cycles * stats.active_macros() as u64,
+                    vectors: stats.vectors,
+                    macro_cycles: stats.cycles * stats.macros as u64,
                 }
             })
             .collect();
@@ -233,12 +319,12 @@ impl ServeEngine {
 
         // Stage 4: the policy timeline — dispatch each request at its
         // arrival onto the chip the placement policy picks.
-        let dispatches: Vec<Dispatch> = requests
+        let dispatches: Vec<Dispatch> = arrivals
             .iter()
             .enumerate()
-            .map(|(i, req)| Dispatch {
-                id: req.id,
-                arrival_cycle: req.arrival_cycle,
+            .map(|(i, &(id, arrival_cycle))| Dispatch {
+                id,
+                arrival_cycle,
                 class: set.class_of[i],
             })
             .collect();
@@ -294,21 +380,21 @@ impl ServeEngine {
                 },
             )
         };
-        let mut assignments: Vec<FleetAssignment> = requests
+        let mut assignments: Vec<FleetAssignment> = arrivals
             .iter()
             .enumerate()
-            .map(|(i, req)| {
+            .map(|(i, &(id, arrival_cycle))| {
                 let p = &timeline.placements[i];
                 FleetAssignment {
-                    id: req.id,
+                    id,
                     chip: p.chip,
-                    arrival_cycle: req.arrival_cycle,
+                    arrival_cycle,
                     // Dropped requests were never served; zero the
                     // timing rather than expose stale placement state.
                     queue_cycles: if p.dropped {
                         0
                     } else {
-                        p.start_cycle - req.arrival_cycle
+                        p.start_cycle - arrival_cycle
                     },
                     service_cycles: if p.dropped { 0 } else { p.service_cycles },
                     migrated: p.migrated,
@@ -322,6 +408,12 @@ impl ServeEngine {
             records,
             classes: set.batches.len(),
             class_service_cycles: ref_stats.iter().map(|s| s.cycles).collect(),
+            surrogate: self.surrogate,
+            eqs_classes: class_stats
+                .iter()
+                .flat_map(|s| s.iter())
+                .filter(|e| e.via_eqs)
+                .count(),
             fleet: FleetReport {
                 policy,
                 assignments,
@@ -336,13 +428,15 @@ impl ServeEngine {
         }
     }
 
-    fn eval(
+    /// The cycle-exact calibrator: codegen (memoized) + one engine run.
+    /// Also measures surrogate *anchor* classes, which is why it is
+    /// keyed on the class itself rather than a batch.
+    fn eval_class(
         &self,
         class: usize,
-        batch: &Batch,
+        c: &WorkloadClass,
         ws: &mut SimWorkspace,
-    ) -> Result<SimStats, ServeError> {
-        let c = &batch.class;
+    ) -> Result<ServiceEntry, ServeError> {
         let program = self
             .cache
             .get_or_generate(&c.arch, c.strategy, &c.plan)
@@ -365,15 +459,15 @@ impl ServeEngine {
             result.stats.vmms_completed,
             c.plan.tasks
         );
-        Ok(result.stats)
+        Ok(ServiceEntry::from_stats(&result.stats))
     }
 }
 
 /// Stages 1–2 of a serve run, held so multiple policy timelines can be
-/// laid over one set of class simulations (which are policy-independent).
+/// laid over one set of class calibrations (which are policy-independent).
 struct Evaluated {
     fb: FleetBatches,
-    class_stats: Vec<Vec<SimStats>>,
+    class_stats: Vec<Vec<ServiceEntry>>,
 }
 
 /// Evaluate a fleet/placement axis over one request stream; results come
@@ -392,6 +486,7 @@ pub fn run_fleet_axis(
     jobs: usize,
 ) -> Result<Vec<(FleetSweepPoint, ServeReport)>, ServeError> {
     let mut out = Vec::with_capacity(axis.len());
+    let arrivals: Vec<(u32, u64)> = requests.iter().map(|r| (r.id, r.arrival_cycle)).collect();
     for fleet in axis.fleets() {
         let engine = ServeEngine::with_fleet(fleet.clone(), PlacementPolicy::RoundRobin, jobs)
             .with_faults(axis.faults().clone());
@@ -402,7 +497,7 @@ pub fn run_fleet_axis(
                     fleet: fleet.clone(),
                     policy,
                 },
-                engine.report_for(requests, &ev, policy),
+                engine.report_for(&arrivals, &ev, policy),
             ));
         }
     }
@@ -511,17 +606,77 @@ mod tests {
     }
 
     #[test]
-    fn rerunning_the_same_stream_hits_the_codegen_cache() {
+    fn rerunning_the_same_stream_hits_the_service_table() {
+        // Two-tier contract: the first run calibrates every class
+        // (codegen misses == classes); the rerun is resolved entirely
+        // from the ServiceTimeTable — the codegen cache is not even
+        // consulted again.
         let engine = ServeEngine::new(arch(), 2, 1);
         let reqs = small_traffic(32);
         let first = engine.run(&reqs).unwrap();
+        let classes = first.classes as u64;
         let misses = engine.cache().misses();
-        assert_eq!(misses, first.classes as u64);
+        assert_eq!(misses, classes);
         assert_eq!(engine.cache().hits(), 0);
+        assert_eq!(engine.service_table().len(), first.classes);
+        assert_eq!(engine.service_table().misses(), classes);
+        let hits = engine.service_table().hits();
         let second = engine.run(&reqs).unwrap();
         assert_eq!(first, second);
         assert_eq!(engine.cache().misses(), misses, "no new programs");
-        assert_eq!(engine.cache().hits(), misses, "every class re-served from cache");
+        assert_eq!(engine.cache().hits(), 0, "rerun never reached codegen");
+        assert_eq!(
+            engine.service_table().hits(),
+            hits + classes,
+            "every class re-served from the table"
+        );
+    }
+
+    #[test]
+    fn streaming_traffic_run_matches_the_materialized_run() {
+        let cfg = TrafficConfig {
+            requests: 48,
+            seed: 11,
+            mean_gap_cycles: 1024,
+        };
+        let reqs = synthetic_traffic(&arch(), &cfg);
+        for chips in [1usize, 3] {
+            let materialized = ServeEngine::new(arch(), 4, chips).run(&reqs).unwrap();
+            let streamed = ServeEngine::new(arch(), 4, chips).run_traffic(&cfg).unwrap();
+            assert_eq!(streamed, materialized, "chips={chips}");
+        }
+    }
+
+    #[test]
+    fn eqs_surrogate_run_agrees_with_exact_within_one_percent() {
+        // The library-level mirror of the CI cross-check gate: per-class
+        // service times under `eqs` stay within 1% of the cycle-exact
+        // measurement (exactly equal wherever the coverage map forced
+        // the exact fallback).
+        let reqs = small_traffic(32);
+        let exact = ServeEngine::new(arch(), 2, 2).run(&reqs).unwrap();
+        let eqs = ServeEngine::new(arch(), 2, 2)
+            .with_surrogate(SurrogateMode::Eqs)
+            .run(&reqs)
+            .unwrap();
+        assert_eq!(exact.surrogate, SurrogateMode::Exact);
+        assert_eq!(eqs.surrogate, SurrogateMode::Eqs);
+        assert_eq!(exact.eqs_classes, 0, "exact mode never predicts");
+        for (e, x) in eqs.records.iter().zip(&exact.records) {
+            let err = e.service_cycles.abs_diff(x.service_cycles);
+            assert!(
+                err * 100 <= x.service_cycles,
+                "request {}: eqs {} vs exact {}",
+                x.id,
+                e.service_cycles,
+                x.service_cycles
+            );
+        }
+        if eqs.eqs_classes == 0 {
+            // Nothing was predicted: the runs must be fully identical.
+            assert_eq!(eqs.records, exact.records);
+            assert_eq!(eqs.fleet, exact.fleet);
+        }
     }
 
     #[test]

@@ -46,6 +46,16 @@
 //! `tests/serve_determinism.rs`, `tests/fleet_determinism.rs` and
 //! `tests/fleet_faults.rs`.
 //!
+//! **Scale (ISSUE 7):** per-class service times resolve through a
+//! [`ServiceTimeTable`] ([`surrogate`]) — calibrated cycle-exactly by
+//! default (`--surrogate exact`, byte-identical to direct simulation)
+//! or through the validated closed form where
+//! [`crate::model::eqs`]'s coverage map allows (`--surrogate eqs`) —
+//! and [`ServeEngine::run_traffic`] streams generation + classification
+//! ([`TrafficStream`] → [`StreamingBatcher`]) so traces of 10⁶–10⁷
+//! requests replay on the event-heap fleet timeline without ever
+//! materializing a request vector.
+//!
 //! Entry points reach this layer through [`crate::api`]: a
 //! `serve:...`/`fleet:...` [`RunSpec`](crate::api::RunSpec) lowers onto
 //! [`ServeEngine`]/[`run_fleet_axis`] inside an
@@ -56,12 +66,14 @@
 pub mod batcher;
 pub mod engine;
 pub mod report;
+pub mod surrogate;
 pub mod traffic;
 
-pub use batcher::{Batch, Batcher, BatchSet, FleetBatches, WorkloadClass};
+pub use batcher::{Batch, Batcher, BatchSet, FleetBatches, StreamingBatcher, WorkloadClass};
 pub use engine::{run_fleet_axis, ServeEngine};
 pub use report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
-pub use traffic::{synthetic_traffic, TrafficConfig};
+pub use surrogate::{ServiceEntry, ServiceTimeTable, SurrogateMode};
+pub use traffic::{synthetic_traffic, TrafficConfig, TrafficStream};
 
 use crate::coordinator::RunConfig;
 use crate::gemm::Workload;

@@ -20,6 +20,7 @@
 //!   change with `--fleet`/`--placement`, and stays byte-identical
 //!   across `--jobs`.
 
+use super::surrogate::SurrogateMode;
 use crate::fleet::{FaultStats, PlacementPolicy};
 use crate::sched::Strategy;
 use crate::util::csv::CsvTable;
@@ -311,6 +312,12 @@ pub struct ServeReport {
     /// Simulated cycles actually executed per reference class (the
     /// deduplicated work), indexed by class.
     pub class_service_cycles: Vec<u64>,
+    /// How per-class service times were calibrated (ISSUE 7).
+    pub surrogate: SurrogateMode,
+    /// Classes (across all distinct fleet archs) whose service times
+    /// came from the validated closed form rather than a cycle-exact
+    /// measurement; always 0 under [`SurrogateMode::Exact`].
+    pub eqs_classes: usize,
     /// The policy timeline: placements, per-chip load, makespan.
     pub fleet: FleetReport,
 }
@@ -452,7 +459,9 @@ impl ServeReport {
 
     /// Aggregate table (`serve_summary.csv`): percentiles + throughput,
     /// plus the fleet resilience aggregates (ISSUE 6) — constants
-    /// (`1.0000,0,0,0`) on the no-fault path.
+    /// (`1.0000,0,0,0`) on the no-fault path — and the surrogate-mode
+    /// columns (ISSUE 7; `exact,0` on the default path, and the CI
+    /// cross-check job diffs summaries across modes through them).
     pub fn summary_table(&self) -> CsvTable {
         let mut t = CsvTable::new(vec![
             "requests",
@@ -471,6 +480,8 @@ impl ServeReport {
             "migration_bytes",
             "redispatched",
             "dropped",
+            "surrogate",
+            "eqs_classes",
         ]);
         let pcts = self.latency_percentiles(&[50.0, 95.0, 99.0]);
         t.push_row(vec![
@@ -490,6 +501,8 @@ impl ServeReport {
             self.fleet.faults.migration_bytes.to_string(),
             self.fleet.faults.redispatched.to_string(),
             self.fleet.faults.dropped.to_string(),
+            self.surrogate.to_string(),
+            self.eqs_classes.to_string(),
         ]);
         t
     }
@@ -621,6 +634,8 @@ mod tests {
                 .collect(),
             classes: 1,
             class_service_cycles: vec![10],
+            surrogate: SurrogateMode::Exact,
+            eqs_classes: 0,
             fleet: fleet_report(),
         }
     }
@@ -650,6 +665,8 @@ mod tests {
             records: vec![],
             classes: 0,
             class_service_cycles: vec![],
+            surrogate: SurrogateMode::Exact,
+            eqs_classes: 0,
             fleet: FleetReport {
                 policy: PlacementPolicy::LeastLoaded,
                 assignments: vec![],
@@ -695,6 +712,8 @@ mod tests {
         assert!(a.starts_with("id,class,strategy,"));
         let s = report().summary_table().to_csv();
         assert!(s.contains("p50_latency"));
+        assert!(s.contains(",surrogate,eqs_classes"), "{s}");
+        assert!(s.trim_end().ends_with(",exact,0"), "{s}");
         let f = report().fleet.to_table().to_csv();
         assert!(f.starts_with("policy,chip,arch,"));
         assert!(f.contains("\nrr,all,-,100,"));
@@ -746,6 +765,8 @@ mod tests {
             records: vec![],
             classes: 0,
             class_service_cycles: vec![],
+            surrogate: SurrogateMode::Exact,
+            eqs_classes: 0,
             fleet: f,
         };
         assert!(r.fleet_lines().contains("resilience: availability 0.7500"));

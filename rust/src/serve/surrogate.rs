@@ -1,0 +1,451 @@
+//! Calibrated per-class service times: the two-tier serving engine's
+//! first tier (ISSUE 7).
+//!
+//! Serving a million-request trace cycle-exactly is infeasible *and*
+//! unnecessary: requests collapse into a bounded set of workload
+//! classes ([`WorkloadClass`] — the codegen-cache key), and a class's
+//! service time is a pure function of the class.  So the engine
+//! measures each class **once**, caches the result in a
+//! [`ServiceTimeTable`], and replays the trace through the
+//! discrete-event fleet timeline ([`crate::fleet::timeline`]) at table
+//! speed.  Two calibration modes ([`SurrogateMode`]):
+//!
+//! - **`exact`** (default) — every class entry comes from the
+//!   cycle-exact engine via the shared
+//!   [`CodegenCache`](crate::sweep::CodegenCache)/[`SimWorkspace`](crate::sim::SimWorkspace)
+//!   path.  Because table-backed evaluation is the *only* code path,
+//!   `exact` reproduces the pre-surrogate engine byte-for-byte.
+//! - **`eqs`** — classes inside the validated closed-form coverage map
+//!   (see [`crate::model::eqs`], module docs) are *predicted* from two
+//!   cheap cycle-exact anchor runs through
+//!   [`ServiceModel`]; everything outside the map silently falls back
+//!   to `exact`.  Conservative by construction; the CI
+//!   `surrogate-calibration` job cross-checks both modes forever.
+//!
+//! The table is `Sync` (mutex-guarded map, the
+//! [`CodegenCache`](crate::sweep::CodegenCache) pattern) so
+//! [`run_indexed`](crate::sweep::run_indexed) workers share it, and it
+//! is engine-independent so an [`api::Session`](crate::api::Session)
+//! can share one table across every spec of an `exec @file` batch.
+
+use super::batcher::WorkloadClass;
+use super::ServeError;
+use crate::model::eqs::ServiceModel;
+use crate::sched::{SchedulePlan, Strategy};
+use crate::sim::SimStats;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Mutex;
+
+/// How per-class service times are calibrated (`--surrogate MODE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SurrogateMode {
+    /// Cycle-exact measurement for every class (the default; output is
+    /// byte-identical to the pre-surrogate engine).
+    #[default]
+    Exact,
+    /// Closed-form prediction from [`ServiceModel`] where the coverage
+    /// map validates it; cycle-exact fallback everywhere else.
+    Eqs,
+}
+
+impl SurrogateMode {
+    /// All modes, in CLI documentation order.
+    pub const ALL: [SurrogateMode; 2] = [SurrogateMode::Exact, SurrogateMode::Eqs];
+
+    /// The spec-grammar / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SurrogateMode::Exact => "exact",
+            SurrogateMode::Eqs => "eqs",
+        }
+    }
+
+    /// Parse a spec-grammar / CLI name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.name() == name)
+    }
+}
+
+impl fmt::Display for SurrogateMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One calibrated table entry — exactly the per-class numbers the
+/// report layer consumes, nothing else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceEntry {
+    /// Service time in cycles ([`SimStats::cycles`] or a
+    /// [`ServiceModel`] prediction).
+    pub cycles: u64,
+    /// Input vectors processed ([`SimStats::vectors_computed`]).
+    pub vectors: u64,
+    /// Macros that did work ([`SimStats::active_macros`]).
+    pub macros: u32,
+    /// True when this entry was predicted by the closed form rather
+    /// than measured (drives the `eqs_classes` report column).
+    pub via_eqs: bool,
+}
+
+impl ServiceEntry {
+    /// The cycle-exact projection of a simulation result.
+    pub fn from_stats(stats: &SimStats) -> Self {
+        Self {
+            cycles: stats.cycles,
+            vectors: stats.vectors_computed,
+            macros: stats.active_macros() as u32,
+            via_eqs: false,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct TableState {
+    map: HashMap<WorkloadClass, ServiceEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+/// The calibrated service-time cache, keyed by workload class
+/// `(strategy, plan, arch)`.
+///
+/// Interior-mutable (like [`CodegenCache`](crate::sweep::CodegenCache))
+/// so parallel evaluation workers share it through `&self`; insertion
+/// is last-writer-wins, which is safe because calibration is
+/// deterministic — two workers racing on one class compute the same
+/// entry.
+#[derive(Debug, Default)]
+pub struct ServiceTimeTable {
+    state: Mutex<TableState>,
+}
+
+impl ServiceTimeTable {
+    /// An empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct classes calibrated so far (anchor classes included).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    /// True when nothing has been calibrated yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups satisfied from the table.
+    pub fn hits(&self) -> u64 {
+        self.state.lock().unwrap().hits
+    }
+
+    /// Lookups that required calibration.
+    pub fn misses(&self) -> u64 {
+        self.state.lock().unwrap().misses
+    }
+
+    /// Look up a class, counting the hit or miss.
+    pub fn lookup(&self, class: &WorkloadClass) -> Option<ServiceEntry> {
+        let mut s = self.state.lock().unwrap();
+        match s.map.get(class).copied() {
+            Some(e) => {
+                s.hits += 1;
+                Some(e)
+            }
+            None => {
+                s.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or overwrite) a class entry.
+    pub fn insert(&self, class: WorkloadClass, entry: ServiceEntry) {
+        self.state.lock().unwrap().map.insert(class, entry);
+    }
+
+    /// The table's single front door: return the class's entry, from
+    /// the cache, the closed form (when `mode` allows and the coverage
+    /// map validates) or the cycle-exact `exact` evaluator — in that
+    /// order.  The evaluation is **not** performed under the table
+    /// lock, so workers calibrate distinct classes concurrently.
+    pub fn entry_for(
+        &self,
+        mode: SurrogateMode,
+        class: &WorkloadClass,
+        exact: &mut dyn FnMut(&WorkloadClass) -> Result<ServiceEntry, ServeError>,
+    ) -> Result<ServiceEntry, ServeError> {
+        if let Some(e) = self.lookup(class) {
+            return Ok(e);
+        }
+        if mode == SurrogateMode::Eqs {
+            if let Some(e) = self.try_predict(class, exact) {
+                self.insert(class.clone(), e);
+                return Ok(e);
+            }
+        }
+        let e = exact(class)?;
+        self.insert(class.clone(), e);
+        Ok(e)
+    }
+
+    /// The closed-form path: two cycle-exact anchors at small task
+    /// counts, linear prediction in between.  `None` means "outside
+    /// the coverage map" and the caller falls back to exact — every
+    /// guard here is one clause of the map documented in
+    /// [`crate::model::eqs`].
+    fn try_predict(
+        &self,
+        class: &WorkloadClass,
+        exact: &mut dyn FnMut(&WorkloadClass) -> Result<ServiceEntry, ServeError>,
+    ) -> Option<ServiceEntry> {
+        if !eqs_covered_strategy(class.strategy) {
+            return None;
+        }
+        let (t0, t1) = anchor_tasks(&class.plan);
+        if class.plan.tasks <= t1 {
+            return None;
+        }
+        let a0 = self.anchor_entry(class, t0, exact)?;
+        let a1 = self.anchor_entry(class, t1, exact)?;
+        if a0.macros != a1.macros {
+            // The anchors were clamped differently mid-range: the
+            // schedule shape changed between them and linearity is off
+            // the table.
+            return None;
+        }
+        let cycles = ServiceModel::calibrate(t0 as u64, a0.cycles, t1 as u64, a1.cycles)?;
+        let vectors = ServiceModel::calibrate(t0 as u64, a0.vectors, t1 as u64, a1.vectors)?;
+        if !cycles.is_periodic() || !vectors.is_periodic() {
+            return None;
+        }
+        Some(ServiceEntry {
+            cycles: cycles.predict(class.plan.tasks as u64),
+            vectors: vectors.predict(class.plan.tasks as u64),
+            macros: a1.macros,
+            via_eqs: true,
+        })
+    }
+
+    /// Calibrate (or fetch) the anchor class — `class` with its task
+    /// count replaced — cycle-exactly.  Anchors land in the same table,
+    /// so every class sharing a `(strategy, macros, n_in, write_speed,
+    /// arch)` shape shares two anchor simulations.  An anchor that
+    /// fails to evaluate disqualifies the prediction (exact fallback)
+    /// instead of failing the run.
+    fn anchor_entry(
+        &self,
+        class: &WorkloadClass,
+        tasks: u32,
+        exact: &mut dyn FnMut(&WorkloadClass) -> Result<ServiceEntry, ServeError>,
+    ) -> Option<ServiceEntry> {
+        let anchor = WorkloadClass {
+            strategy: class.strategy,
+            plan: SchedulePlan {
+                tasks,
+                ..class.plan
+            },
+            arch: class.arch.clone(),
+        };
+        if let Some(e) = self.lookup(&anchor) {
+            return Some(e);
+        }
+        let e = exact(&anchor).ok()?;
+        self.insert(anchor, e);
+        Some(e)
+    }
+}
+
+/// Strategies with steady-state-validated looped lowerings (PR 4).
+/// `intra` has no looped lowering, so it always measures exactly.
+fn eqs_covered_strategy(strategy: Strategy) -> bool {
+    matches!(
+        strategy,
+        Strategy::GeneralizedPingPong | Strategy::InSitu | Strategy::NaivePingPong
+    )
+}
+
+/// Anchor task counts for a plan: both comfortably past the warm-up
+/// prefix (which scales with the active-macro count — the pipeline
+/// must fill before the schedule is periodic), spaced 2× apart.
+fn anchor_tasks(plan: &SchedulePlan) -> (u32, u32) {
+    let t0 = plan.active_macros.max(64).saturating_mul(2);
+    (t0, t0.saturating_mul(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+
+    fn class(strategy: Strategy, tasks: u32, active_macros: u32) -> WorkloadClass {
+        WorkloadClass {
+            strategy,
+            plan: SchedulePlan {
+                tasks,
+                active_macros,
+                n_in: 4,
+                write_speed: 8,
+            },
+            arch: ArchConfig::paper_default(),
+        }
+    }
+
+    fn entry(cycles: u64) -> ServiceEntry {
+        ServiceEntry {
+            cycles,
+            vectors: cycles / 2,
+            macros: 64,
+            via_eqs: false,
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in SurrogateMode::ALL {
+            assert_eq!(SurrogateMode::from_name(mode.name()), Some(mode));
+            assert_eq!(format!("{mode}"), mode.name());
+        }
+        assert_eq!(SurrogateMode::from_name("magic"), None);
+        assert_eq!(SurrogateMode::default(), SurrogateMode::Exact);
+    }
+
+    #[test]
+    fn exact_mode_calibrates_once_per_class() {
+        let table = ServiceTimeTable::new();
+        let c = class(Strategy::GeneralizedPingPong, 4096, 64);
+        let mut evals = 0u32;
+        let mut exact = |cl: &WorkloadClass| {
+            evals += 1;
+            assert_eq!(cl, &c, "exact mode must evaluate the class itself");
+            Ok(entry(1_000_000))
+        };
+        let first = table
+            .entry_for(SurrogateMode::Exact, &c, &mut exact)
+            .unwrap();
+        let second = table
+            .entry_for(SurrogateMode::Exact, &c, &mut exact)
+            .unwrap();
+        assert_eq!(first, second);
+        assert_eq!(evals, 1, "the second lookup is a pure table hit");
+        assert_eq!(table.len(), 1);
+        assert_eq!(table.hits(), 1);
+        assert_eq!(table.misses(), 1);
+        assert!(!first.via_eqs);
+    }
+
+    #[test]
+    fn eqs_mode_predicts_covered_classes_from_two_anchors() {
+        let table = ServiceTimeTable::new();
+        let c = class(Strategy::GeneralizedPingPong, 100_000, 64);
+        let (t0, t1) = anchor_tasks(&c.plan);
+        assert_eq!((t0, t1), (128, 256));
+        // A perfectly affine "engine": cycles = 500 + 33·tasks,
+        // vectors = 4·tasks.
+        let mut asked = Vec::new();
+        let mut exact = |cl: &WorkloadClass| {
+            asked.push(cl.plan.tasks);
+            Ok(ServiceEntry {
+                cycles: 500 + 33 * cl.plan.tasks as u64,
+                vectors: 4 * cl.plan.tasks as u64,
+                macros: 64,
+                via_eqs: false,
+            })
+        };
+        let e = table.entry_for(SurrogateMode::Eqs, &c, &mut exact).unwrap();
+        assert_eq!(asked, vec![t0, t1], "only the two anchors are simulated");
+        assert_eq!(e.cycles, 500 + 33 * 100_000);
+        assert_eq!(e.vectors, 4 * 100_000);
+        assert_eq!(e.macros, 64);
+        assert!(e.via_eqs);
+        // A sibling class with a different task count reuses both
+        // anchors: zero additional simulations.
+        let c2 = class(Strategy::GeneralizedPingPong, 1_000_000, 64);
+        let e2 = table.entry_for(SurrogateMode::Eqs, &c2, &mut exact).unwrap();
+        assert_eq!(asked.len(), 2, "anchors shared across sibling classes");
+        assert_eq!(e2.cycles, 500 + 33 * 1_000_000);
+    }
+
+    #[test]
+    fn eqs_mode_falls_back_outside_the_coverage_map() {
+        let table = ServiceTimeTable::new();
+        // intra is not covered; small task counts are not covered.
+        for c in [
+            class(Strategy::IntraMacroPingPong, 100_000, 64),
+            class(Strategy::GeneralizedPingPong, 100, 64),
+        ] {
+            let mut evals = Vec::new();
+            let mut exact = |cl: &WorkloadClass| {
+                evals.push(cl.plan.tasks);
+                Ok(entry(777))
+            };
+            let e = table.entry_for(SurrogateMode::Eqs, &c, &mut exact).unwrap();
+            assert_eq!(evals, vec![c.plan.tasks], "measured exactly, no anchors");
+            assert!(!e.via_eqs);
+            assert_eq!(e.cycles, 777);
+        }
+    }
+
+    #[test]
+    fn eqs_mode_falls_back_when_anchors_disagree_on_macros() {
+        let table = ServiceTimeTable::new();
+        let c = class(Strategy::NaivePingPong, 100_000, 64);
+        let mut exact = |cl: &WorkloadClass| {
+            Ok(ServiceEntry {
+                cycles: 10 * cl.plan.tasks as u64,
+                vectors: cl.plan.tasks as u64,
+                // Macro count varies with the anchor: linearity is not
+                // trustworthy, the class itself must be measured.
+                macros: cl.plan.tasks.min(200),
+                via_eqs: false,
+            })
+        };
+        let e = table.entry_for(SurrogateMode::Eqs, &c, &mut exact).unwrap();
+        assert!(!e.via_eqs);
+        assert_eq!(e.macros, 200, "the class's own measurement wins");
+    }
+
+    #[test]
+    fn eqs_mode_falls_back_on_non_periodic_anchors() {
+        let table = ServiceTimeTable::new();
+        let c = class(Strategy::InSitu, 100_000, 64);
+        let mut evals = 0u32;
+        let mut exact = |cl: &WorkloadClass| {
+            evals += 1;
+            Ok(ServiceEntry {
+                // Quadratic-ish growth: the anchor delta is not an
+                // integer multiple of the spacing.
+                cycles: cl.plan.tasks as u64 * cl.plan.tasks as u64 / 100,
+                vectors: cl.plan.tasks as u64,
+                macros: 64,
+                via_eqs: false,
+            })
+        };
+        let e = table.entry_for(SurrogateMode::Eqs, &c, &mut exact).unwrap();
+        assert!(!e.via_eqs, "non-periodic anchors disqualify the closed form");
+        assert_eq!(evals, 3, "two anchors tried, then the exact measurement");
+        assert_eq!(e.cycles, 100_000u64 * 100_000 / 100);
+    }
+
+    #[test]
+    fn anchor_eval_failure_is_a_silent_exact_fallback() {
+        let table = ServiceTimeTable::new();
+        let c = class(Strategy::GeneralizedPingPong, 100_000, 64);
+        let mut exact = |cl: &WorkloadClass| {
+            if cl.plan.tasks != c.plan.tasks {
+                return Err(ServeError::Plan {
+                    id: 0,
+                    name: "anchor".into(),
+                    reason: anyhow::anyhow!("anchor cannot lower"),
+                });
+            }
+            Ok(entry(42))
+        };
+        let e = table.entry_for(SurrogateMode::Eqs, &c, &mut exact).unwrap();
+        assert_eq!(e.cycles, 42);
+        assert!(!e.via_eqs);
+    }
+}

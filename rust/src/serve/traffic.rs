@@ -12,6 +12,7 @@ use super::Request;
 use crate::arch::ArchConfig;
 use crate::coordinator::RunConfig;
 use crate::gemm::blas::serving_catalog;
+use crate::gemm::Workload;
 use crate::sched::Strategy;
 use crate::util::rng::XorShift64;
 
@@ -54,46 +55,93 @@ const HOT_IN_TEN: u64 = 7;
 ///
 /// [`SchedulePlan::check`]: crate::sched::SchedulePlan::check
 pub fn synthetic_traffic(arch: &ArchConfig, cfg: &TrafficConfig) -> Vec<Request> {
-    let catalog = serving_catalog();
-    let mut rng = XorShift64::new(cfg.seed);
-    let mut arrival = 0u64;
-    let mut out = Vec::with_capacity(cfg.requests as usize);
-    for id in 0..cfg.requests {
-        if cfg.mean_gap_cycles > 0 {
-            arrival += rng.next_below(2 * cfg.mean_gap_cycles + 1);
+    TrafficStream::new(arch, cfg).collect()
+}
+
+/// The one-request-at-a-time form of [`synthetic_traffic`]: identical
+/// stream (same RNG, same draw order — `synthetic_traffic` *is* this
+/// iterator collected), but generated lazily so million-request serve
+/// runs hold one `Request` at a time instead of the whole trace
+/// ([`ServeEngine::run_traffic`](super::ServeEngine::run_traffic)).
+#[derive(Debug)]
+pub struct TrafficStream {
+    arch: ArchConfig,
+    catalog: Vec<Workload>,
+    rng: XorShift64,
+    mean_gap_cycles: u64,
+    arrival: u64,
+    next_id: u32,
+    requests: u32,
+}
+
+impl TrafficStream {
+    /// A stream of `cfg.requests` requests for chips configured as
+    /// `arch`.
+    pub fn new(arch: &ArchConfig, cfg: &TrafficConfig) -> Self {
+        Self {
+            arch: arch.clone(),
+            catalog: serving_catalog(),
+            rng: XorShift64::new(cfg.seed),
+            mean_gap_cycles: cfg.mean_gap_cycles,
+            arrival: 0,
+            next_id: 0,
+            requests: cfg.requests,
         }
-        let hot = rng.next_below(10) < HOT_IN_TEN;
+    }
+}
+
+impl Iterator for TrafficStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.next_id == self.requests {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.mean_gap_cycles > 0 {
+            self.arrival += self.rng.next_below(2 * self.mean_gap_cycles + 1);
+        }
+        let hot = self.rng.next_below(10) < HOT_IN_TEN;
         let (workload, run_cfg) = if hot {
-            let workload = catalog[rng.next_below(2) as usize].clone();
-            let strategy = if rng.next_below(4) == 0 {
+            let workload = self.catalog[self.rng.next_below(2) as usize].clone();
+            let strategy = if self.rng.next_below(4) == 0 {
                 Strategy::NaivePingPong
             } else {
                 Strategy::GeneralizedPingPong
             };
-            (workload, RunConfig::from_arch(arch, strategy))
+            (workload, RunConfig::from_arch(&self.arch, strategy))
         } else {
-            let workload = catalog[rng.next_below(catalog.len() as u64) as usize].clone();
-            let strategy = Strategy::ALL_EXTENDED[rng.next_below(4) as usize];
-            let n_in = [2u32, 4, 8, 16][rng.next_below(4) as usize];
-            let active_macros = [64u32, 128, 256][rng.next_below(3) as usize];
-            let write_speed = [2u32, 4, 8][rng.next_below(3) as usize];
+            let workload =
+                self.catalog[self.rng.next_below(self.catalog.len() as u64) as usize].clone();
+            let strategy = Strategy::ALL_EXTENDED[self.rng.next_below(4) as usize];
+            let n_in = [2u32, 4, 8, 16][self.rng.next_below(4) as usize];
+            let active_macros = [64u32, 128, 256][self.rng.next_below(3) as usize];
+            let write_speed = [2u32, 4, 8][self.rng.next_below(3) as usize];
             let run_cfg = RunConfig {
                 n_in,
-                active_macros: active_macros.min(arch.total_macros()),
-                write_speed: write_speed.clamp(arch.min_write_speed, arch.max_write_speed),
-                ..RunConfig::from_arch(arch, strategy)
+                active_macros: active_macros.min(self.arch.total_macros()),
+                write_speed: write_speed
+                    .clamp(self.arch.min_write_speed, self.arch.max_write_speed),
+                ..RunConfig::from_arch(&self.arch, strategy)
             };
             (workload, run_cfg)
         };
-        out.push(Request {
+        Some(Request {
             id,
-            arrival_cycle: arrival,
+            arrival_cycle: self.arrival,
             workload,
             cfg: run_cfg,
-        });
+        })
     }
-    out
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = (self.requests - self.next_id) as usize;
+        (left, Some(left))
+    }
 }
+
+impl ExactSizeIterator for TrafficStream {}
 
 #[cfg(test)]
 mod tests {
@@ -150,6 +198,24 @@ mod tests {
             "empirical mean gap {mean_gap} vs configured {}",
             cfg.mean_gap_cycles
         );
+    }
+
+    #[test]
+    fn stream_is_exact_sized_and_prefix_stable() {
+        let cfg = TrafficConfig::default();
+        let mut stream = TrafficStream::new(&arch(), &cfg);
+        assert_eq!(stream.len(), 256);
+        let full = synthetic_traffic(&arch(), &cfg);
+        // Pulling lazily yields the same prefix the collected stream
+        // has — ids, arrivals and shapes alike.
+        for want in full.iter().take(16) {
+            let got = stream.next().unwrap();
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.arrival_cycle, want.arrival_cycle);
+            assert_eq!(got.workload.name, want.workload.name);
+            assert_eq!(got.cfg.strategy, want.cfg.strategy);
+        }
+        assert_eq!(stream.len(), 240);
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Surrogate serving end-to-end (ISSUE 7):
+//!
+//! - the streaming path ([`ServeEngine::run_traffic`]) is byte-identical
+//!   to the materialized path (`run(&synthetic_traffic(..))`) for every
+//!   placement policy, with and without fault injection — which, with
+//!   `tests/fleet_determinism.rs` / `tests/fleet_faults.rs` pinning the
+//!   dispatcher's semantics against coordinator-derived expectations,
+//!   carries the event-heap timeline's legacy byte-identity;
+//! - streaming reports are byte-identical across `--jobs`;
+//! - a warm [`ServiceTimeTable`] replays a trace byte-identically without
+//!   re-entering the simulator;
+//! - `--surrogate eqs` agrees with exact calibration within 1% on every
+//!   per-request service time;
+//! - a 10⁶-request replay is deterministic across `--jobs`
+//!   (env-gated: `GPP_SURROGATE_MILLION=1`, CI's surrogate smoke).
+//!
+//! [`ServeEngine::run_traffic`]: gpp_pim::serve::ServeEngine::run_traffic
+//! [`ServiceTimeTable`]: gpp_pim::serve::ServiceTimeTable
+
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
+use gpp_pim::serve::{
+    synthetic_traffic, ServeEngine, ServeReport, ServiceTimeTable, SurrogateMode, TrafficConfig,
+};
+use std::sync::Arc;
+
+fn arch() -> ArchConfig {
+    ArchConfig::paper_default()
+}
+
+/// Two distinct archs (paper + half-bandwidth paper), as in
+/// `tests/fleet_determinism.rs`.
+fn het_fleet() -> FleetConfig {
+    let mut slow = arch();
+    slow.bandwidth = 256;
+    FleetConfig::new(vec![arch(), slow]).unwrap()
+}
+
+fn cfg(requests: u32) -> TrafficConfig {
+    TrafficConfig {
+        requests,
+        seed: 7,
+        mean_gap_cycles: 2048,
+    }
+}
+
+/// Everything: reference CSVs + both policy-timeline CSVs.
+fn full_csv(r: &ServeReport) -> String {
+    format!(
+        "{}{}{}{}",
+        r.to_table().to_csv(),
+        r.summary_table().to_csv(),
+        r.fleet.to_table().to_csv(),
+        r.fleet.requests_table().to_csv()
+    )
+}
+
+#[test]
+fn streaming_matches_materialized_for_every_policy_and_fault_plan() {
+    let t = cfg(96);
+    let reqs = synthetic_traffic(&arch(), &t);
+    for policy in PlacementPolicy::ALL {
+        for faults in ["", "mtbf@50000@9"] {
+            let plan = if faults.is_empty() {
+                FaultPlan::none()
+            } else {
+                FaultPlan::parse(faults).unwrap()
+            };
+            let engine = ServeEngine::with_fleet(het_fleet(), policy, 4).with_faults(plan);
+            let direct = engine.run(&reqs).unwrap();
+            let streamed = engine.run_traffic(&t).unwrap();
+            assert_eq!(
+                full_csv(&direct),
+                full_csv(&streamed),
+                "policy {} faults '{faults}'",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_reports_are_byte_identical_across_jobs() {
+    let t = cfg(128);
+    let run = |jobs| {
+        full_csv(
+            &ServeEngine::with_fleet(het_fleet(), PlacementPolicy::LeastLoaded, jobs)
+                .run_traffic(&t)
+                .unwrap(),
+        )
+    };
+    let base = run(1);
+    for jobs in [2usize, 8] {
+        assert_eq!(base, run(jobs), "streaming run diverged at jobs={jobs}");
+    }
+}
+
+#[test]
+fn warm_table_replay_is_byte_identical_and_simulation_free() {
+    let t = cfg(96);
+    let table = Arc::new(ServiceTimeTable::new());
+    let engine = ServeEngine::new(arch(), 2, 2).with_service_table(Arc::clone(&table));
+    let cold = full_csv(&engine.run_traffic(&t).unwrap());
+    let misses = table.misses();
+    assert_eq!(misses as usize, table.len(), "one calibration per class");
+    let warm = full_csv(&engine.run_traffic(&t).unwrap());
+    assert_eq!(cold, warm, "warm replay changed the report bytes");
+    assert_eq!(table.misses(), misses, "warm replay recalibrated a class");
+}
+
+#[test]
+fn eqs_surrogate_agrees_with_exact_within_one_percent() {
+    let t = cfg(192);
+    let exact = ServeEngine::new(arch(), 4, 2).run_traffic(&t).unwrap();
+    let eqs = ServeEngine::new(arch(), 4, 2)
+        .with_surrogate(SurrogateMode::Eqs)
+        .run_traffic(&t)
+        .unwrap();
+    assert_eq!(exact.surrogate, SurrogateMode::Exact);
+    assert_eq!(eqs.surrogate, SurrogateMode::Eqs);
+    assert_eq!(exact.records.len(), eqs.records.len());
+    for (x, e) in exact.records.iter().zip(&eqs.records) {
+        let err = x.service_cycles.abs_diff(e.service_cycles);
+        assert!(
+            err * 100 <= x.service_cycles,
+            "request {}: eqs service {} vs exact {} (> 1%)",
+            x.id,
+            e.service_cycles,
+            x.service_cycles
+        );
+    }
+    // Prediction is conservative-by-construction: when the coverage map
+    // declines every class, eqs degenerates to exact — bit for bit.
+    if eqs.eqs_classes == 0 {
+        assert_eq!(full_csv(&exact), full_csv(&eqs));
+    }
+}
+
+#[test]
+fn million_request_replay_is_deterministic_across_jobs() {
+    // ~seconds of work: opt-in via GPP_SURROGATE_MILLION=1 (the CI
+    // surrogate smoke sets it; plain `cargo test` skips).
+    if std::env::var("GPP_SURROGATE_MILLION").ok().as_deref() != Some("1") {
+        eprintln!("skipping million-request replay (set GPP_SURROGATE_MILLION=1)");
+        return;
+    }
+    let t = TrafficConfig {
+        requests: 1_000_000,
+        seed: 11,
+        mean_gap_cycles: 512,
+    };
+    let a = ServeEngine::new(arch(), 1, 4).run_traffic(&t).unwrap();
+    let b = ServeEngine::new(arch(), 8, 4).run_traffic(&t).unwrap();
+    assert_eq!(a.requests(), 1_000_000);
+    // Field-wise comparison: materializing two ~10⁶-row CSV strings per
+    // report just to diff them would triple peak memory for no signal.
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(
+            (x.id, x.arrival_cycle, x.queue_cycles, x.service_cycles, x.class),
+            (y.id, y.arrival_cycle, y.queue_cycles, y.service_cycles, y.class)
+        );
+    }
+    assert_eq!(a.fleet.assignments.len(), b.fleet.assignments.len());
+    for (x, y) in a.fleet.assignments.iter().zip(&b.fleet.assignments) {
+        assert_eq!(
+            (x.id, x.chip, x.queue_cycles, x.service_cycles, x.migrated, x.dropped),
+            (y.id, y.chip, y.queue_cycles, y.service_cycles, y.migrated, y.dropped)
+        );
+    }
+    assert_eq!(a.summary_table().to_csv(), b.summary_table().to_csv());
+    assert_eq!(a.fleet.to_table().to_csv(), b.fleet.to_table().to_csv());
+}

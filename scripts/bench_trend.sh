@@ -12,31 +12,58 @@
 #     actions/cache keyed by ref, so the next run diffs against actual
 #     hardware measurements, not just committed files).
 #
-# Deliberately never fails the build: a missing base ref (shallow
+# By default this never fails the build: a missing base ref (shallow
 # clone), missing baseline files and added/removed records are all
 # reported as notes, not errors — this is a trend lens, the hard gates
-# live in the benches themselves and in check_bench_schema.sh.
+# live in the benches themselves and in check_bench_schema.sh.  The one
+# opt-in exception is `--gate PCT`: records whose rate column
+# (macro_cycles_per_s — events/sec or a tracked speedup ratio) is
+# present in BOTH baseline and new output and regressed by more than
+# PCT percent hard-fail the run.  Missing baselines, missing records
+# and records without a numeric rate stay non-fatal even under --gate.
 #
 # Usage:
 #   scripts/bench_trend.sh                         # committed BENCH_*.json vs HEAD~1
 #   scripts/bench_trend.sh BASE_REF                # ... vs an explicit base ref
 #   scripts/bench_trend.sh BASE_REF FILE...        # explicit files vs base ref
 #   scripts/bench_trend.sh --baseline-dir DIR FILE...  # explicit files vs cached dir
+#   scripts/bench_trend.sh --gate PCT ...          # + hard-fail on >PCT% rate drops
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 mode=git
 base="HEAD~1"
 baseline_dir=""
-if [ "${1:-}" = "--baseline-dir" ]; then
-  if [ "$#" -lt 2 ]; then
-    echo "bench_trend: --baseline-dir needs a directory" >&2
-    exit 2
-  fi
-  mode=dir
-  baseline_dir="$2"
-  shift 2
-elif [ "$#" -gt 0 ]; then
+gate=""
+while [ "$#" -gt 0 ]; do
+  case "$1" in
+    --baseline-dir)
+      if [ "$#" -lt 2 ]; then
+        echo "bench_trend: --baseline-dir needs a directory" >&2
+        exit 2
+      fi
+      mode=dir
+      baseline_dir="$2"
+      shift 2
+      ;;
+    --gate)
+      if [ "$#" -lt 2 ]; then
+        echo "bench_trend: --gate needs a percentage" >&2
+        exit 2
+      fi
+      gate="$2"
+      shift 2
+      ;;
+    *)
+      break
+      ;;
+  esac
+done
+if [ -n "$gate" ] && ! [[ "$gate" =~ ^[0-9]+(\.[0-9]+)?$ ]]; then
+  echo "bench_trend: --gate must be a non-negative percentage, got '$gate'" >&2
+  exit 2
+fi
+if [ "$mode" = git ] && [ "$#" -gt 0 ]; then
   base="$1"
   shift
 fi
@@ -62,13 +89,15 @@ if [ "${#files[@]}" -eq 0 ]; then
   exit 0
 fi
 
-python3 - "$mode" "${baseline_dir:-$base}" "${files[@]}" <<'EOF'
+python3 - "$mode" "${baseline_dir:-$base}" "$gate" "${files[@]}" <<'EOF'
 import json
 import os
 import subprocess
 import sys
 
 mode, base = sys.argv[1], sys.argv[2]
+gate = float(sys.argv[3]) if sys.argv[3] else None
+regressions = []
 
 def fmt_rate(v):
     return f"{v:.3g}" if isinstance(v, (int, float)) else "null"
@@ -88,7 +117,7 @@ def baseline_text(path):
         return None, f"no baseline at {base} (new file)"
     return proc.stdout, None
 
-for path in sys.argv[3:]:
+for path in sys.argv[4:]:
     try:
         with open(path) as f:
             new = {r["name"]: r for r in json.load(f)}
@@ -121,7 +150,19 @@ for path in sys.argv[3:]:
         orate = old[name].get("macro_cycles_per_s")
         nrate = new[name].get("macro_cycles_per_s")
         if isinstance(orate, (int, float)) and isinstance(nrate, (int, float)) and orate > 0:
+            rate_pct = (nrate - orate) / orate * 100
             line += (f", macro-cycles/s {fmt_rate(orate)} -> {fmt_rate(nrate)} "
-                     f"({(nrate - orate) / orate * 100:+.1f}%)")
+                     f"({rate_pct:+.1f}%)")
+            if gate is not None and -rate_pct > gate:
+                regressions.append(
+                    f"{path}: {name}: rate {fmt_rate(orate)} -> {fmt_rate(nrate)} "
+                    f"({rate_pct:+.1f}%, gate -{gate:g}%)")
         print(line)
+
+if regressions:
+    print(f"bench_trend: GATE: {len(regressions)} record(s) regressed beyond "
+          f"{gate:g}%:", file=sys.stderr)
+    for r in regressions:
+        print(f"  {r}", file=sys.stderr)
+    sys.exit(1)
 EOF
