@@ -5,13 +5,24 @@
 //! `SimOptions::no_fast_forward` and the two result sets are asserted
 //! **bit-identical** before any timing is reported.
 //!
+//! A second section times the bound-and-prune search (`--search
+//! pruned`) against exhaustive evaluation on a 180-point space, after
+//! asserting (a) the session-level `dse_topk`/`dse_pareto` tables are
+//! byte-identical between the two modes and (b) the pruned search
+//! simulates at least 3x fewer points than it scores.
+//!
 //! Writes `BENCH_dse.json` (schema: EXPERIMENTS.md §Tracking):
-//! `dse/full-cartesian/fast-forward` and
-//! `dse/full-cartesian/no-fast-forward`, validated before exiting.
+//! `dse/full-cartesian/fast-forward`,
+//! `dse/full-cartesian/no-fast-forward`, `dse/exhaustive-search` and
+//! `dse/pruned-search` (whose `macro_cycles_per_s` slot carries the
+//! pruned-vs-exhaustive speedup ratio), validated before exiting.
 //! Reduced-size runs: set `GPP_DSE_POINTS` (cartesian point cap),
-//! `GPP_DSE_TASKS` (tasks per point) and `GPP_BENCH_ITERS` (CI
-//! bench-smoke).  `cargo bench --bench dse_perf`
+//! `GPP_DSE_TASKS` (tasks per point), `GPP_DSE_SEARCH_TASKS` (tasks per
+//! point in the search section; the 180-point space is never trimmed)
+//! and `GPP_BENCH_ITERS` (CI bench-smoke).
+//! `cargo bench --bench dse_perf`
 
+use gpp_pim::api::{MemorySink, RunSpec, Session, SinkSet};
 use gpp_pim::arch::ArchConfig;
 use gpp_pim::model::dse::CartesianSpace;
 use gpp_pim::report::benchkit::{
@@ -132,9 +143,110 @@ fn main() -> anyhow::Result<()> {
         space.len()
     );
 
+    // ---- pruned bound-and-prune search vs exhaustive --------------------
+    //
+    // Its own, wider space: pruning power comes from the number of
+    // points the calibrated bound can discard, so the search bench keeps
+    // 180 points (the fast-forward arms above are capped much smaller).
+    // `GPP_DSE_SEARCH_TASKS` shrinks per-point work, never the space.
+    let search_tasks = env_u64("GPP_DSE_SEARCH_TASKS", 4096) as u32;
+    let search_top = 3usize;
+    let search_space = CartesianSpace {
+        cores: vec![2, 4, 8, 16],
+        macros_per_core: vec![4, 8, 16],
+        n_in: vec![2, 4, 8],
+        bandwidths: vec![32, 64, 128, 256, 512],
+        buffers: vec![1 << 20],
+        tasks: search_tasks,
+        write_speed: 8,
+    };
+    search_space.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    section("pruned search vs exhaustive (byte-identity gated in-bench)");
+    println!(
+        "space: {} points x {} strategies, {} tasks/point, top {search_top}",
+        search_space.len(),
+        Strategy::ALL.len(),
+        search_space.tasks
+    );
+
+    // Correctness gate 1: the session-level tables — the exact bytes
+    // `--csv-dir` would persist — must not move under pruning.
+    let spec = format!(
+        "dse-full:cores=2,4,8,16:macros=4,8,16:nin=2,4,8:bands=32,64,128,256,512:buffers={}:tasks={search_tasks}:top={search_top}",
+        1u64 << 20
+    );
+    let run_session = |spec: &str| -> anyhow::Result<MemorySink> {
+        let mut mem = MemorySink::new();
+        Session::new(arch.clone())
+            .run(&RunSpec::parse(spec)?, &mut SinkSet::new().with(&mut mem))?;
+        Ok(mem)
+    };
+    let ex_mem = run_session(&spec)?;
+    let pr_mem = run_session(&format!("{spec}:search=pruned"))?;
+    for name in ["dse_topk", "dse_pareto"] {
+        assert_eq!(
+            ex_mem.csv(name),
+            pr_mem.csv(name),
+            "{name} must be byte-identical between exhaustive and pruned search"
+        );
+    }
+
+    // Correctness gate 2: the pruning actually bites — at least 3x fewer
+    // points simulated than scored on this space.
+    let audit = search_space
+        .sweep_pruned(&arch, &SweepRunner::default(), CodegenStyle::Looped, search_top)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .audit;
+    assert!(!audit.fallback, "calibration fell back to exhaustive on the bench space");
+    println!(
+        "pruned search: {} of {} points simulated ({:.1}% pruned, {} anchors, epsilon {:.4})",
+        audit.points_simulated,
+        audit.points_scored,
+        audit.pruned_pct(),
+        audit.anchors,
+        audit.epsilon
+    );
+    assert!(
+        audit.points_simulated * 3 <= audit.points_scored,
+        "pruned search must simulate >= 3x fewer points ({} of {})",
+        audit.points_simulated,
+        audit.points_scored
+    );
+
+    // Timing: fresh runner per iteration so both arms pay codegen.
+    let m_exhaustive = bench.run("dse/exhaustive-search", || {
+        search_space
+            .sweep(&arch, &SweepRunner::default(), CodegenStyle::Looped)
+            .unwrap()
+            .len()
+    });
+    println!("{}", m_exhaustive.line());
+    let m_pruned = bench.run("dse/pruned-search", || {
+        search_space
+            .sweep_pruned(&arch, &SweepRunner::default(), CodegenStyle::Looped, search_top)
+            .unwrap()
+            .audit
+            .points_simulated
+    });
+    println!("{}", m_pruned.line());
+    let search_speedup = m_exhaustive.median_secs() / m_pruned.median_secs().max(1e-12);
+    println!(
+        "-> pruned search: {search_speedup:.1}x end-to-end over exhaustive on {} points",
+        search_space.len()
+    );
+
     let records = [
         BenchRecord::new(&m_fast, None),
         BenchRecord::new(&m_slow, None),
+        BenchRecord::new(&m_exhaustive, None),
+        // The speedup rides the metric slot (records carry no free-form
+        // fields): exhaustive-median / pruned-median per wall-second
+        // convention does not apply here, so store the ratio directly.
+        BenchRecord {
+            name: m_pruned.name.clone(),
+            median_secs: m_pruned.median_secs(),
+            macro_cycles_per_s: Some(search_speedup),
+        },
     ];
     let out = Path::new("BENCH_dse.json");
     write_bench_json(out, &records)?;

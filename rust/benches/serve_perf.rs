@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
         requests: n_requests,
         seed: 7,
         mean_gap_cycles: 2048,
+        ..Default::default()
     };
     let requests = synthetic_traffic(&arch(), &traffic_cfg);
     let mut records = Vec::new();

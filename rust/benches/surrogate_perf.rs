@@ -52,11 +52,13 @@ fn main() -> anyhow::Result<()> {
         requests: 512,
         seed: 7,
         mean_gap_cycles: 2048,
+        ..Default::default()
     };
     let replay_cfg = TrafficConfig {
         requests: n_requests,
         seed: 7,
         mean_gap_cycles: 2048,
+        ..Default::default()
     };
     let mut records = Vec::new();
 

@@ -51,3 +51,7 @@ pub use spec::{
     AdaptSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec, RunWorkloadSpec,
     ServeSpec, SimulateSpec, SpecError, VALID_KINDS,
 };
+
+// Spec-field enums embedders need to build specs programmatically.
+pub use crate::model::dse::{SearchAudit, SearchMode};
+pub use crate::serve::TrafficShape;

@@ -28,7 +28,7 @@ use crate::coordinator::{Coordinator, RunConfig, RunReport};
 use crate::fleet::AutoscaleConfig;
 use crate::gemm::blas;
 use crate::model::adapt::RuntimeAdaptation;
-use crate::model::dse::{CartesianPointResult, CartesianSpace, DesignSpace};
+use crate::model::dse::{CartesianPointResult, CartesianSpace, DesignSpace, SearchMode};
 use crate::report::benchkit::BenchRecord;
 use crate::report::figures as figs;
 use crate::runtime::Runtime;
@@ -409,6 +409,7 @@ impl Session {
             requests: spec.requests,
             seed: spec.seed,
             mean_gap_cycles: spec.mean_gap,
+            shape: spec.traffic,
         };
         let fleet = spec.fleet_config(&self.arch)?;
         let mut engine = ServeEngine::with_fleet(fleet, spec.placement, self.jobs(spec.jobs))
@@ -479,6 +480,7 @@ impl Session {
             requests: spec.requests,
             seed: spec.seed,
             mean_gap_cycles: spec.mean_gap,
+            shape: spec.traffic,
         };
         let fleets = spec.fleets(&self.arch)?;
         // Traffic targets the first fleet's reference chip (all
@@ -656,11 +658,32 @@ impl Session {
         };
         space.validate().map_err(|e| anyhow!("{e}"))?;
         let style = spec.style;
-        let (pts, summary) = self.with_runner(spec.jobs, |runner| {
-            let pts = space.sweep(arch, runner, style).map_err(|e| anyhow!("{e}"))?;
-            Ok::<_, anyhow::Error>((pts, runner.summary()))
+        // `top` feeds both the report and (pruned mode) the search's
+        // top-k retention bound, so resolve it before the sweep.
+        let top = spec.top.unwrap_or(10);
+        // Both modes produce the same shape: one slot per cartesian
+        // point, `None` where the pruned search proved the point cannot
+        // reach the top-k or the Pareto frontier.  Exhaustive fills
+        // every slot, so downstream report code is mode-independent.
+        let (pts, audit, summary) = self.with_runner(spec.jobs, |runner| {
+            match spec.search {
+                SearchMode::Exhaustive => {
+                    let pts = space.sweep(arch, runner, style).map_err(|e| anyhow!("{e}"))?;
+                    let pts: Vec<Option<CartesianPointResult>> = pts.into_iter().map(Some).collect();
+                    Ok::<_, anyhow::Error>((pts, None, runner.summary()))
+                }
+                SearchMode::Pruned => {
+                    let swept = space
+                        .sweep_pruned(arch, runner, style, top)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    Ok((swept.points, Some(swept.audit), runner.summary()))
+                }
+            }
         })?;
-        let feasible = pts.iter().filter(|p| p.feasible()).count();
+        let feasible = pts
+            .iter()
+            .filter(|p| p.as_ref().is_some_and(|p| p.feasible()))
+            .count();
         sinks.section(&format!(
             "DSE full cartesian — {} points ({} feasible) x 3 strategies, {} tasks/point [{} codegen]",
             pts.len(),
@@ -670,9 +693,39 @@ impl Session {
         ))?;
         sinks.line(&summary)?;
         let mut tables = Vec::new();
+        if let Some(audit) = &audit {
+            sinks.section(&format!(
+                "DSE pruned search — {} of {} points simulated ({:.1}% pruned, epsilon {:.4}, {} anchors{})",
+                audit.points_simulated,
+                audit.points_scored,
+                audit.pruned_pct(),
+                audit.epsilon,
+                audit.anchors,
+                if audit.fallback { ", exhaustive fallback" } else { "" },
+            ))?;
+            let mut t = CsvTable::new(vec![
+                "points_scored",
+                "points_simulated",
+                "pruned_pct",
+                "epsilon",
+                "anchors",
+            ]);
+            t.push_row(vec![
+                audit.points_scored.to_string(),
+                audit.points_simulated.to_string(),
+                format!("{:.1}", audit.pruned_pct()),
+                format!("{:.4}", audit.epsilon),
+                audit.anchors.to_string(),
+            ]);
+            sinks.table("dse_search", &t, TableDest::Show)?;
+            tables.push("dse_search".to_string());
+        }
         // The full table can run to thousands of rows: persisting sinks
-        // only, stdout gets the summary and the report tables.
-        if sinks.persists_tables() {
+        // only, stdout gets the summary and the report tables.  Pruned
+        // mode skips it — pruned points have no measured cycles to
+        // report, and `dse_topk`/`dse_pareto` are the exact-equivalent
+        // products the search certifies.
+        if sinks.persists_tables() && audit.is_none() {
             let mut t = CsvTable::new(vec![
                 "cores",
                 "macros_per_core",
@@ -686,7 +739,8 @@ impl Session {
                 "gpp/insitu",
             ]);
             let cell = |c: Option<u64>| c.map(|v| v.to_string()).unwrap_or_default();
-            for p in &pts {
+            // `audit.is_none()` above guarantees every slot is `Some`.
+            for p in pts.iter().map(|p| p.as_ref().unwrap()) {
                 let ratio = match (p.cycles[0], p.cycles[2]) {
                     (Some(i), Some(g)) if g > 0 => format!("{:.2}", i as f64 / g as f64),
                     _ => String::new(),
@@ -710,15 +764,16 @@ impl Session {
         let feasible_idx: Vec<usize> = pts
             .iter()
             .enumerate()
-            .filter(|(_, p)| p.feasible())
+            .filter(|(_, p)| p.as_ref().is_some_and(|p| p.feasible()))
             .map(|(i, _)| i)
             .collect();
         // Top-k over feasible points by simulated gpp cycles
         // (deterministic index tie-break); default 10 so dse-full always
-        // reports something.
-        let top = spec.top.unwrap_or(10);
+        // reports something.  The pruned search guarantees every true
+        // top-k member was simulated, and `feasible_idx` keeps *global*
+        // combo indices, so these rows are byte-identical across modes.
         let k = top_k_by(feasible_idx.len(), top, |j| {
-            pts[feasible_idx[j]].cycles[2].unwrap() as f64
+            pts[feasible_idx[j]].as_ref().unwrap().cycles[2].unwrap() as f64
         });
         let mut tk = CsvTable::new(vec![
             "rank",
@@ -733,7 +788,7 @@ impl Session {
         ]);
         for (rank, &j) in k.iter().enumerate() {
             let i = feasible_idx[j];
-            let p = &pts[i];
+            let p = pts[i].as_ref().unwrap();
             tk.push_row(vec![
                 (rank + 1).to_string(),
                 i.to_string(),
@@ -754,7 +809,7 @@ impl Session {
         // × buffer depth, minimized jointly — the build-this-chip menu
         // next to the single-metric top-k.
         let front = pareto_min_by(feasible_idx.len(), |j| {
-            let p = &pts[feasible_idx[j]];
+            let p = pts[feasible_idx[j]].as_ref().unwrap();
             vec![
                 p.cycles[2].unwrap(),
                 p.cores as u64 * p.macros_per_core as u64,
@@ -778,6 +833,7 @@ impl Session {
                 requests: spec.requests,
                 seed: spec.seed,
                 mean_gap_cycles: spec.mean_gap,
+                shape: spec.traffic,
             };
             let axis = FleetAxis::homogeneous_sizes(arch, &spec.fleets, &spec.placements);
             let requests = synthetic_traffic(arch, &traffic_cfg);
@@ -939,7 +995,7 @@ fn fleet_resilience_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
 /// deterministic objective order (cycles, macros, buffer, then input
 /// index).
 fn pareto_table(
-    pts: &[CartesianPointResult],
+    pts: &[Option<CartesianPointResult>],
     feasible_idx: &[usize],
     front: &[usize],
 ) -> CsvTable {
@@ -956,7 +1012,8 @@ fn pareto_table(
     ]);
     for &j in front {
         let i = feasible_idx[j];
-        let p = &pts[i];
+        // `feasible_idx` only holds simulated (Some) points.
+        let p = pts[i].as_ref().unwrap();
         t.push_row(vec![
             i.to_string(),
             p.cores.to_string(),
@@ -1033,6 +1090,7 @@ mod tests {
                 requests: 32,
                 seed: 7,
                 mean_gap_cycles: 2048,
+                ..Default::default()
             },
         );
         let report = engine.run(&requests).unwrap();
@@ -1194,6 +1252,76 @@ mod tests {
             .unwrap();
         let report = out.serve().unwrap();
         assert_eq!(report.surrogate, crate::serve::SurrogateMode::Eqs);
+    }
+
+    #[test]
+    fn pruned_dse_full_matches_exhaustive_tables() {
+        // The tentpole contract: `search=pruned` must reproduce the
+        // exhaustive `dse_topk`/`dse_pareto` bytes while skipping the
+        // bulk `dse_full` table and adding the `dse_search` audit.
+        let axes = "cores=2,4:macros=2,4:nin=2,4:bands=32,64,128:buffers=65536:tasks=64:top=3";
+        let s = session();
+        let mut ex = MemorySink::new();
+        let out = s
+            .run(
+                &RunSpec::parse(&format!("dse-full:{axes}")).unwrap(),
+                &mut SinkSet::new().with(&mut ex),
+            )
+            .unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert_eq!(out.tables, vec!["dse_full", "dse_topk", "dse_pareto"]);
+
+        // A fresh session so the pruned run cannot ride the exhaustive
+        // run's codegen cache.
+        let mut pr = MemorySink::new();
+        let out = session()
+            .run(
+                &RunSpec::parse(&format!("dse-full:{axes}:search=pruned")).unwrap(),
+                &mut SinkSet::new().with(&mut pr),
+            )
+            .unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert_eq!(out.tables, vec!["dse_search", "dse_topk", "dse_pareto"]);
+        assert_eq!(ex.csv("dse_topk"), pr.csv("dse_topk"), "top-k bytes must not move");
+        assert_eq!(ex.csv("dse_pareto"), pr.csv("dse_pareto"), "Pareto bytes must not move");
+
+        let audit = pr.csv("dse_search").unwrap();
+        let mut lines = audit.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "points_scored,points_simulated,pruned_pct,epsilon,anchors"
+        );
+        let row: Vec<&str> = lines.next().unwrap().split(',').collect();
+        assert_eq!(row[0].parse::<usize>().unwrap(), 24, "2 x 2 x 2 x 3 x 1 points scored");
+        assert!(row[1].parse::<usize>().unwrap() <= 24);
+        assert!(row[2].parse::<f64>().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn traffic_shape_flows_to_serve_tables() {
+        let s = session();
+        let mut uniform = MemorySink::new();
+        let mut burst = MemorySink::new();
+        s.run(
+            &RunSpec::parse("serve:requests=32:seed=9").unwrap(),
+            &mut SinkSet::new().with(&mut uniform),
+        )
+        .unwrap();
+        s.run(
+            &RunSpec::parse("serve:requests=32:seed=9:traffic=burst").unwrap(),
+            &mut SinkSet::new().with(&mut burst),
+        )
+        .unwrap();
+        // The arrival process changed, so the reference timeline must
+        // too — and deterministically (a rerun reproduces the bytes).
+        assert_ne!(uniform.csv("serve"), burst.csv("serve"));
+        let mut again = MemorySink::new();
+        s.run(
+            &RunSpec::parse("serve:requests=32:seed=9:traffic=burst").unwrap(),
+            &mut SinkSet::new().with(&mut again),
+        )
+        .unwrap();
+        assert_eq!(burst.csv("serve"), again.csv("serve"));
     }
 
     #[test]

@@ -29,14 +29,16 @@
 //! repro[:exp=fig4|fig6|fig7|table2|headline|all][:vectors=N][:jobs=N]
 //! run[:workload=ffn|e2e|square|mlp][:strategy=S][:trace=FILE][:numerics=true][:artifacts=DIR]
 //! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true]
-//! serve[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P][:faults=PLAN]
+//! serve[:requests=N][:seed=S][:gap=CYC][:traffic=uniform|poisson|burst][:jobs=J]
+//!      [:placement=P][:faults=PLAN]
 //!      [:autoscale=true:slo=CYC][:surrogate=exact|eqs][:chips=C][:fleet=SPEC]
-//! fleet[:requests=N][:seed=S][:gap=CYC][:jobs=J][:placement=P,..|all][:faults=PLAN]
-//!      [:sizes=1,2,4][:fleet=SPEC]
+//! fleet[:requests=N][:seed=S][:gap=CYC][:traffic=uniform|poisson|burst][:jobs=J]
+//!      [:placement=P,..|all][:faults=PLAN][:sizes=1,2,4][:fleet=SPEC]
 //! dse[:band=B][:sim=true][:tasks=N][:jobs=N][:top=K]
 //! dse-full[:cores=L][:macros=L][:nin=L][:bands=L][:buffers=L][:tasks=N][:s=W]
-//!         [:style=looped|unrolled][:jobs=N][:top=K]
+//!         [:style=looped|unrolled][:search=exhaustive|pruned][:jobs=N][:top=K]
 //!         [:fleets=1,2,4][:placement=P,..|all][:faults=PLAN][:requests=N][:seed=S][:gap=CYC]
+//!         [:traffic=uniform|poisson|burst]
 //! adapt[:maxn=N]
 //! ```
 //!
@@ -48,8 +50,9 @@
 
 use crate::arch::ArchConfig;
 use crate::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
+use crate::model::dse::SearchMode;
 use crate::sched::{CodegenStyle, Strategy};
-use crate::serve::SurrogateMode;
+use crate::serve::{SurrogateMode, TrafficShape};
 use std::fmt;
 use thiserror::Error;
 
@@ -198,6 +201,9 @@ pub struct ServeSpec {
     pub seed: u64,
     /// Mean inter-arrival gap, cycles.
     pub mean_gap: u64,
+    /// Arrival-process shape (mean-preserving; `uniform` is the
+    /// pre-knob stream byte-for-byte).
+    pub traffic: TrafficShape,
     pub jobs: Option<usize>,
     pub placement: PlacementPolicy,
     /// Fault schedule the policy timeline serves under (empty = the
@@ -227,6 +233,7 @@ impl Default for ServeSpec {
             requests: 256,
             seed: 7,
             mean_gap: 2048,
+            traffic: TrafficShape::Uniform,
             jobs: None,
             placement: PlacementPolicy::RoundRobin,
             faults: FaultPlan::none(),
@@ -253,6 +260,8 @@ pub struct FleetSweepSpec {
     pub requests: u32,
     pub seed: u64,
     pub mean_gap: u64,
+    /// Arrival-process shape of the stream every axis point serves.
+    pub traffic: TrafficShape,
     pub jobs: Option<usize>,
     /// Policies of the axis (default: all built-ins).
     pub placements: Vec<PlacementPolicy>,
@@ -274,6 +283,7 @@ impl Default for FleetSweepSpec {
             requests: 192,
             seed: 7,
             mean_gap: 1024,
+            traffic: TrafficShape::Uniform,
             jobs: None,
             placements: PlacementPolicy::ALL.to_vec(),
             faults: FaultPlan::none(),
@@ -344,6 +354,10 @@ pub struct DseFullSpec {
     pub tasks: Option<u32>,
     pub write_speed: Option<u32>,
     pub style: CodegenStyle,
+    /// How the cartesian space is explored (ISSUE 8): `pruned` skips
+    /// provably-irrelevant points; top-k/Pareto outputs stay
+    /// byte-identical to `exhaustive`.
+    pub search: SearchMode,
     pub jobs: Option<usize>,
     /// Top-k report size (`None` = the default 10).
     pub top: Option<usize>,
@@ -360,6 +374,8 @@ pub struct DseFullSpec {
     pub requests: u32,
     pub seed: u64,
     pub mean_gap: u64,
+    /// Arrival-process shape of the fleet-axis stream.
+    pub traffic: TrafficShape,
 }
 
 impl Default for DseFullSpec {
@@ -373,6 +389,7 @@ impl Default for DseFullSpec {
             tasks: None,
             write_speed: None,
             style: CodegenStyle::Looped,
+            search: SearchMode::Exhaustive,
             jobs: None,
             top: None,
             fleets: Vec::new(),
@@ -381,6 +398,7 @@ impl Default for DseFullSpec {
             requests: 128,
             seed: 7,
             mean_gap: 1024,
+            traffic: TrafficShape::Uniform,
         }
     }
 }
@@ -502,6 +520,14 @@ fn p_placements(v: &str) -> Result<Vec<PlacementPolicy>, SpecError> {
     v.split(',').map(|p| p_placement(p.trim())).collect()
 }
 
+fn p_search(v: &str) -> Result<SearchMode, SpecError> {
+    SearchMode::from_name(v).ok_or_else(|| bad("search", v, "expected exhaustive|pruned"))
+}
+
+fn p_traffic(v: &str) -> Result<TrafficShape, SpecError> {
+    TrafficShape::from_name(v).ok_or_else(|| bad("traffic", v, "expected uniform|poisson|burst"))
+}
+
 fn p_style(v: &str) -> Result<CodegenStyle, SpecError> {
     match v {
         "unrolled" => Ok(CodegenStyle::Unrolled),
@@ -510,7 +536,9 @@ fn p_style(v: &str) -> Result<CodegenStyle, SpecError> {
     }
 }
 
-/// Comma list of values >= 1 (axes, fleet sizes).
+/// Comma list of unique values >= 1 (axes, fleet sizes).  A repeated
+/// entry would silently simulate the same point twice and skew top-k
+/// and row totals, so duplicates are rejected naming the offender.
 fn p_list<T: std::str::FromStr + PartialEq + From<u8>>(
     key: &'static str,
     v: &str,
@@ -521,12 +549,17 @@ where
     if v.trim().is_empty() {
         return Err(bad(key, v, "expected a comma-separated list of values >= 1"));
     }
-    let items: Vec<T> = v
-        .split(',')
-        .map(|s| s.trim().parse::<T>().map_err(|e| bad(key, v, e)))
-        .collect::<Result<_, _>>()?;
-    if items.iter().any(|x| *x == T::from(0u8)) {
-        return Err(bad(key, v, "entries must be >= 1"));
+    let mut items: Vec<T> = Vec::new();
+    for tok in v.split(',') {
+        let tok = tok.trim();
+        let item = tok.parse::<T>().map_err(|e| bad(key, v, e))?;
+        if item == T::from(0u8) {
+            return Err(bad(key, v, "entries must be >= 1"));
+        }
+        if items.contains(&item) {
+            return Err(bad(key, v, format!("duplicate entry '{tok}' — values must be unique")));
+        }
+        items.push(item);
     }
     Ok(items)
 }
@@ -563,14 +596,14 @@ impl RunSpec {
             "run" => "workload, strategy, trace, numerics, artifacts",
             "simulate" => "strategy, tasks, macros, nin, band, s, oplog",
             "serve" => {
-                "requests, seed, gap, jobs, placement, faults, autoscale, slo, surrogate, \
-                 chips, fleet"
+                "requests, seed, gap, traffic, jobs, placement, faults, autoscale, slo, \
+                 surrogate, chips, fleet"
             }
-            "fleet" => "requests, seed, gap, jobs, placement, faults, sizes, fleet",
+            "fleet" => "requests, seed, gap, traffic, jobs, placement, faults, sizes, fleet",
             "dse" => "band, sim, tasks, jobs, top",
             "dse-full" => {
-                "cores, macros, nin, bands, buffers, tasks, s, style, jobs, top, \
-                 fleets, placement, faults, requests, seed, gap"
+                "cores, macros, nin, bands, buffers, tasks, s, style, search, jobs, top, \
+                 fleets, placement, faults, requests, seed, gap, traffic"
             }
             "adapt" => "maxn",
             _ => "",
@@ -689,6 +722,7 @@ impl RunSpec {
                 "requests" => s.requests = p_u32("requests", v)?,
                 "seed" => s.seed = p_u64("seed", v)?,
                 "gap" => s.mean_gap = p_u64("gap", v)?,
+                "traffic" => s.traffic = p_traffic(v)?,
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "placement" => s.placement = p_placement(v)?,
                 "faults" => s.faults = p_faults(v)?,
@@ -737,6 +771,7 @@ impl RunSpec {
                 "requests" => s.requests = p_u32("requests", v)?,
                 "seed" => s.seed = p_u64("seed", v)?,
                 "gap" => s.mean_gap = p_u64("gap", v)?,
+                "traffic" => s.traffic = p_traffic(v)?,
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "placement" => s.placements = p_placements(v)?,
                 "faults" => s.faults = p_faults(v)?,
@@ -790,6 +825,7 @@ impl RunSpec {
                 }
                 "s" => s.write_speed = Some(p_u32("s", v)?),
                 "style" => s.style = p_style(v)?,
+                "search" => s.search = p_search(v)?,
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "top" => s.top = Some(p_top(v)?),
                 "fleets" => {
@@ -800,6 +836,7 @@ impl RunSpec {
                 "requests" => s.requests = p_u32("requests", v)?,
                 "seed" => s.seed = p_u64("seed", v)?,
                 "gap" => s.mean_gap = p_u64("gap", v)?,
+                "traffic" => s.traffic = p_traffic(v)?,
                 _ => return Err(Self::unknown("dse-full", k)),
             }
         }
@@ -897,6 +934,9 @@ impl fmt::Display for RunSpec {
                 if s.mean_gap != d.mean_gap {
                     e.kv("gap", s.mean_gap)?;
                 }
+                if s.traffic != d.traffic {
+                    e.kv("traffic", s.traffic)?;
+                }
                 e.opt("jobs", &s.jobs)?;
                 if s.placement != d.placement {
                     e.kv("placement", s.placement.name())?;
@@ -924,6 +964,9 @@ impl fmt::Display for RunSpec {
                 }
                 if s.mean_gap != d.mean_gap {
                     e.kv("gap", s.mean_gap)?;
+                }
+                if s.traffic != d.traffic {
+                    e.kv("traffic", s.traffic)?;
                 }
                 e.opt("jobs", &s.jobs)?;
                 if s.placements != d.placements {
@@ -974,6 +1017,9 @@ impl fmt::Display for RunSpec {
                 if s.style != d.style {
                     e.kv("style", s.style.name())?;
                 }
+                if s.search != d.search {
+                    e.kv("search", s.search)?;
+                }
                 e.opt("jobs", &s.jobs)?;
                 e.opt("top", &s.top)?;
                 if !s.fleets.is_empty() {
@@ -996,6 +1042,9 @@ impl fmt::Display for RunSpec {
                 }
                 if s.mean_gap != d.mean_gap {
                     e.kv("gap", s.mean_gap)?;
+                }
+                if s.traffic != d.traffic {
+                    e.kv("traffic", s.traffic)?;
                 }
                 Ok(())
             }
@@ -1122,6 +1171,66 @@ mod tests {
         assert!(RunSpec::parse("serve:surrogate=magic").is_err());
         // Only serve takes the key — a typo elsewhere must not pass.
         assert!(RunSpec::parse("fleet:surrogate=eqs").is_err());
+    }
+
+    #[test]
+    fn search_key_roundtrips_and_rejects() {
+        let s = roundtrip("dse-full:cores=2,4:search=pruned:top=3");
+        let RunSpec::DseFull(s) = s else { panic!() };
+        assert_eq!(s.search, SearchMode::Pruned);
+        assert_eq!(
+            RunSpec::DseFull(s).to_string(),
+            "dse-full:cores=2,4:search=pruned:top=3"
+        );
+        // The default mode canonicalizes away.
+        assert_eq!(
+            RunSpec::parse("dse-full:search=exhaustive").unwrap().to_string(),
+            "dse-full"
+        );
+        assert!(RunSpec::parse("dse-full:search=magic").is_err());
+        // Only dse-full takes the key.
+        assert!(RunSpec::parse("dse:search=pruned").is_err());
+    }
+
+    #[test]
+    fn traffic_key_roundtrips_and_rejects() {
+        for kind in ["serve", "fleet", "dse-full"] {
+            let spec = format!("{kind}:traffic=burst");
+            let parsed = roundtrip(&spec);
+            assert_eq!(parsed.to_string(), spec);
+            // The default shape canonicalizes away.
+            assert_eq!(
+                RunSpec::parse(&format!("{kind}:traffic=uniform")).unwrap().to_string(),
+                kind
+            );
+            assert!(
+                RunSpec::parse(&format!("{kind}:traffic=tsunami")).is_err(),
+                "{kind} accepted a bogus shape"
+            );
+        }
+        let RunSpec::Serve(s) = RunSpec::parse("serve:traffic=poisson").unwrap() else {
+            panic!()
+        };
+        assert_eq!(s.traffic, TrafficShape::Poisson);
+        assert!(RunSpec::parse("dse:traffic=burst").is_err());
+    }
+
+    #[test]
+    fn duplicate_axis_entries_are_rejected_naming_the_token() {
+        for bad_spec in [
+            "dse-full:bands=64,64",
+            "dse-full:cores=2,4,2",
+            "dse-full:buffers=65536, 65536",
+            "dse-full:fleets=1,1",
+            "fleet:sizes=2,2",
+        ] {
+            let err = RunSpec::parse(bad_spec).unwrap_err();
+            assert!(err.to_string().contains("duplicate entry"), "'{bad_spec}': {err}");
+        }
+        let err = RunSpec::parse("dse-full:bands=32,64,64").unwrap_err();
+        assert!(err.to_string().contains("'64'"), "{err}");
+        // Unique lists still pass.
+        assert!(RunSpec::parse("dse-full:bands=32,64").is_ok());
     }
 
     #[test]

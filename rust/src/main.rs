@@ -19,14 +19,16 @@
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
 //! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C | --fleet SPEC]
 //!               [--placement rr|least-loaded|affinity|sed] [--mean-gap G]
-//!               [--faults PLAN] [--autoscale --slo CYCLES]
-//!               [--surrogate exact|eqs] [--csv-dir D]
+//!               [--traffic uniform|poisson|burst] [--faults PLAN]
+//!               [--autoscale --slo CYCLES] [--surrogate exact|eqs] [--csv-dir D]
 //! gpp-pim fleet [--requests N] [--seed S] [--jobs J] [--sizes 1,2,4 | --fleet SPEC]
-//!               [--placement P|all] [--faults PLAN] [--mean-gap G] [--csv-dir D]
+//!               [--placement P|all] [--faults PLAN] [--mean-gap G]
+//!               [--traffic SHAPE] [--csv-dir D]
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
 //! gpp-pim dse  --full [--cores L] [--macros L] [--n-in L] [--bands L] [--buffers L]
 //!              [--tasks N] [--write-speed S] [--jobs N] [--top K] [--unrolled]
-//!              [--fleets 1,2,4] [--placement P|all] [--faults PLAN] [--requests N]
+//!              [--search exhaustive|pruned] [--fleets 1,2,4] [--placement P|all]
+//!              [--faults PLAN] [--requests N] [--traffic SHAPE]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
@@ -42,7 +44,8 @@ use gpp_pim::fleet::{FaultPlan, PlacementPolicy};
 use gpp_pim::isa;
 use gpp_pim::runtime::Runtime;
 use gpp_pim::sched::{CodegenStyle, Strategy};
-use gpp_pim::serve::SurrogateMode;
+use gpp_pim::model::dse::SearchMode;
+use gpp_pim::serve::{SurrogateMode, TrafficShape};
 use gpp_pim::sim::trace;
 use std::collections::HashMap;
 
@@ -183,10 +186,14 @@ fn axis_u64(args: &Args, key: &str) -> Result<Option<Vec<u64>>> {
             if v.trim().is_empty() || v == "true" {
                 bail!("--{key} needs a comma-separated list of values >= 1");
             }
-            let items: Vec<u64> = v
-                .split(',')
-                .map(|s| s.trim().parse::<u64>().with_context(|| format!("--{key} {v}")))
-                .collect::<Result<_>>()?;
+            let mut items: Vec<u64> = Vec::new();
+            for tok in v.split(',') {
+                let item = tok.trim().parse::<u64>().with_context(|| format!("--{key} {v}"))?;
+                if items.contains(&item) {
+                    bail!("--{key}: duplicate entry '{}' — values must be unique", tok.trim());
+                }
+                items.push(item);
+            }
             if items.contains(&0) {
                 bail!("--{key} entries must be >= 1 (got 0 in '{v}')");
             }
@@ -228,6 +235,24 @@ fn placements_flag(args: &Args) -> Result<Vec<PlacementPolicy>> {
                 })
             })
             .collect(),
+    }
+}
+
+/// Traffic arrival shape from `--traffic` (default: uniform).
+fn traffic_flag(args: &Args) -> Result<TrafficShape> {
+    match args.get("traffic") {
+        Some(v) => TrafficShape::from_name(v)
+            .ok_or_else(|| anyhow!("bad --traffic '{v}' (uniform|poisson|burst)")),
+        None => Ok(TrafficShape::Uniform),
+    }
+}
+
+/// Cartesian search mode from `--search` (default: exhaustive).
+fn search_flag(args: &Args) -> Result<SearchMode> {
+    match args.get("search") {
+        Some(v) => SearchMode::from_name(v)
+            .ok_or_else(|| anyhow!("bad --search '{v}' (exhaustive|pruned)")),
+        None => Ok(SearchMode::Exhaustive),
     }
 }
 
@@ -458,7 +483,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve",
         &[
             "config", "requests", "seed", "jobs", "chips", "fleet", "placement", "mean-gap",
-            "faults", "autoscale", "slo", "surrogate", "csv-dir", "bench-json",
+            "traffic", "faults", "autoscale", "slo", "surrogate", "csv-dir", "bench-json",
         ],
         0,
         Some("serve"),
@@ -507,6 +532,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests: args.get_u32("requests", 256)?,
         seed: args.get_u64("seed", 7)?,
         mean_gap: args.get_u64("mean-gap", 2048)?,
+        traffic: traffic_flag(args)?,
         jobs: jobs_flag(args)?,
         placement: placement_flag(args)?,
         faults: faults_flag(args)?,
@@ -525,7 +551,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "fleet",
         &[
             "config", "requests", "seed", "jobs", "sizes", "fleet", "placement", "faults",
-            "mean-gap", "csv-dir", "bench-json",
+            "mean-gap", "traffic", "csv-dir", "bench-json",
         ],
         0,
         Some("fleet"),
@@ -541,6 +567,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         requests: args.get_u32("requests", 192)?,
         seed: args.get_u64("seed", 7)?,
         mean_gap: args.get_u64("mean-gap", 1024)?,
+        traffic: traffic_flag(args)?,
         jobs: jobs_flag(args)?,
         placements: placements_flag(args)?,
         faults: faults_flag(args)?,
@@ -557,8 +584,8 @@ fn cmd_dse(args: &Args) -> Result<()> {
             "dse --full",
             &[
                 "config", "full", "jobs", "tasks", "top", "csv-dir", "bench-json", "cores",
-                "macros", "n-in", "bands", "buffers", "write-speed", "unrolled", "fleets",
-                "placement", "faults", "requests", "seed", "mean-gap", "sim",
+                "macros", "n-in", "bands", "buffers", "write-speed", "unrolled", "search",
+                "fleets", "placement", "faults", "requests", "seed", "mean-gap", "traffic", "sim",
             ],
             0,
             Some("dse-full"),
@@ -592,6 +619,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             } else {
                 CodegenStyle::Looped
             },
+            search: search_flag(args)?,
             jobs: jobs_flag(args)?,
             top: top_flag(args)?,
             fleets: match axis_u64(args, "fleets")? {
@@ -603,6 +631,7 @@ fn cmd_dse(args: &Args) -> Result<()> {
             requests: args.get_u32("requests", defaults.requests)?,
             seed: args.get_u64("seed", defaults.seed)?,
             mean_gap: args.get_u64("mean-gap", defaults.mean_gap)?,
+            traffic: traffic_flag(args)?,
         })
     } else {
         RunSpec::Dse(DseSpec {
@@ -704,6 +733,8 @@ COMMANDS:
               --jobs J host workers, --chips C or --fleet SPEC for
               heterogeneous fleets e.g. 2xpaper,1xpaper:band=256,
               --placement rr|least-loaded|affinity|sed, --mean-gap CYCLES,
+              --traffic uniform|poisson|burst arrival shape (seeded,
+              deterministic; uniform is the default),
               --faults PLAN injects chip fail/drain/join events
               (fail|drain|join@CYCLE@CHIP / mtbf@MEAN@SEED, comma-sep;
               failures redispatch queued work and charge weight re-writes),
@@ -717,7 +748,8 @@ COMMANDS:
   fleet      sweep fleet size x placement policy over one request stream
              (--sizes 1,2,4 or --fleet SPEC, --placement P|all,
               --faults PLAN serves every point under the fault schedule,
-              --requests N, --seed S, --jobs J, --csv-dir DIR writes
+              --requests N, --seed S, --traffic uniform|poisson|burst,
+              --jobs J, --csv-dir DIR writes
               fleet_axis.csv [+ fleet_resilience.csv])
   dse        design-space exploration table (--band; --sim validates the
               model cycle-accurately through the parallel runner, --jobs N,
@@ -729,8 +761,17 @@ COMMANDS:
               slow faithful lowering; identical results), Pareto frontier
               (cycles x macros x buffer) next to top-k, optional fleet
               axis --fleets 1,2,4 [--placement P|all --requests N
-              --faults PLAN], --csv-dir writes dse_full.csv + dse_topk.csv +
-              dse_pareto.csv [+ dse_fleet.csv + dse_resilience.csv]
+              --faults PLAN --traffic SHAPE], --csv-dir writes
+              dse_full.csv + dse_topk.csv + dse_pareto.csv
+              [+ dse_fleet.csv + dse_resilience.csv].
+             --search pruned bounds-and-prunes the cartesian space with
+              the closed-form model before simulating: per-class error
+              bounds calibrated on exactly-simulated anchors keep every
+              possible top-k / Pareto member, so dse_topk.csv and
+              dse_pareto.csv stay byte-identical to --search exhaustive
+              (the default) while far fewer points are simulated;
+              dse_search.csv records points_scored, points_simulated,
+              pruned_pct, epsilon, anchors (dse_full.csv is skipped)
   adapt      runtime bandwidth-adaptation model (--max-n)
   assemble   assemble ISA text to binary machine code
   disasm     disassemble binary machine code

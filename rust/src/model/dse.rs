@@ -18,8 +18,51 @@
 use crate::arch::ArchConfig;
 use crate::model::eqs;
 use crate::sched::{CodegenStyle, SchedulePlan, Strategy};
+use crate::serve::surrogate::{epsilon_from_anchor_errors, ANCHOR_ERROR_LIMIT};
 use crate::sweep::{SweepError, SweepGrid, SweepPoint, SweepRunner};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
 use thiserror::Error;
+
+/// How `dse --full` explores a [`CartesianSpace`] (`--search MODE`,
+/// spec key `search=`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// Simulate every cartesian point (the reference path CI compares
+    /// against).
+    #[default]
+    Exhaustive,
+    /// Bound-and-prune (ISSUE 8): closed-form Phase-A scores plus a
+    /// per-class error bound ε calibrated on exactly simulated anchors
+    /// prune every candidate that provably cannot reach the top-k or
+    /// the Pareto frontier; only survivors are simulated.  The top-k
+    /// and Pareto outputs are byte-identical to exhaustive search.
+    Pruned,
+}
+
+impl SearchMode {
+    /// All modes, in CLI documentation order.
+    pub const ALL: [SearchMode; 2] = [SearchMode::Exhaustive, SearchMode::Pruned];
+
+    /// The spec-grammar / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchMode::Exhaustive => "exhaustive",
+            SearchMode::Pruned => "pruned",
+        }
+    }
+
+    /// Parse a spec-grammar / CLI name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.name() == name)
+    }
+}
+
+impl fmt::Display for SearchMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// One strategy's numbers at a design point.
 #[derive(Debug, Clone, Copy)]
@@ -391,6 +434,26 @@ impl CartesianSpace {
         (a, plan)
     }
 
+    /// The `Strategy::ALL` sweep points realizing one combo (strategy
+    /// fastest, matching [`CartesianSpace::grid`] order within a combo).
+    fn strategy_points(
+        &self,
+        base: &ArchConfig,
+        combo: (u32, u32, u32, u64, u64),
+        style: CodegenStyle,
+        fast_forward: bool,
+    ) -> Vec<SweepPoint> {
+        let (a, plan) = self.realize(base, combo);
+        Strategy::ALL
+            .iter()
+            .map(|&strategy| {
+                let mut opts = strategy.sim_options();
+                opts.no_fast_forward = !fast_forward;
+                SweepPoint::with_opts(a.clone(), strategy, plan, opts).with_style(style)
+            })
+            .collect()
+    }
+
     /// Build the evaluation grid: `Strategy::ALL` points per combo, in
     /// [`CartesianSpace::combos`] order with the strategy fastest.
     /// `fast_forward = false` forces [`crate::sim::SimOptions::no_fast_forward`]
@@ -405,34 +468,32 @@ impl CartesianSpace {
         self.validate()?;
         let mut grid = SweepGrid::new();
         for combo in self.combos() {
-            let (a, plan) = self.realize(base, combo);
-            for &strategy in &Strategy::ALL {
-                let mut opts = strategy.sim_options();
-                opts.no_fast_forward = !fast_forward;
-                grid.push(SweepPoint::with_opts(a.clone(), strategy, plan, opts).with_style(style));
+            for p in self.strategy_points(base, combo, style, fast_forward) {
+                grid.push(p);
             }
         }
         Ok(grid)
     }
 
-    /// Evaluate the whole space on `runner`.  Infeasible combos (plan or
-    /// buffer constraints violated — e.g. a batch that cannot fit the
-    /// buffer axis value) come back with `None` cycles instead of
-    /// failing the sweep: in an exhaustive enumeration, infeasibility is
-    /// data, not an error.
-    pub fn sweep(
+    /// Simulate an arbitrary subset of combos (3 strategies each)
+    /// through the grouped dispatcher, one result per input combo.
+    /// Infeasible combos come back with `None` cycles.
+    fn simulate_combos(
         &self,
         base: &ArchConfig,
         runner: &SweepRunner,
         style: CodegenStyle,
-    ) -> Result<Vec<CartesianPointResult>, DseError> {
-        let grid = self.grid(base, style, true)?;
-        let results = runner.run(&grid);
-        Ok(self
-            .combos()
-            .into_iter()
+        combos: &[(u32, u32, u32, u64, u64)],
+    ) -> Vec<CartesianPointResult> {
+        let mut points = Vec::with_capacity(combos.len() * Strategy::ALL.len());
+        for &combo in combos {
+            points.extend(self.strategy_points(base, combo, style, true));
+        }
+        let results = runner.run_points_grouped(&points);
+        combos
+            .iter()
             .zip(results.chunks_exact(Strategy::ALL.len()))
-            .map(|((cores, mpc, n_in, band, buf), per_strategy)| {
+            .map(|(&(cores, mpc, n_in, band, buf), per_strategy)| {
                 let mut cycles = [None; 3];
                 for (slot, r) in cycles.iter_mut().zip(per_strategy) {
                     *slot = r.as_ref().ok().map(|s| s.cycles);
@@ -446,7 +507,264 @@ impl CartesianSpace {
                     cycles,
                 }
             })
-            .collect())
+            .collect()
+    }
+
+    /// Evaluate the whole space on `runner`.  Infeasible combos (plan or
+    /// buffer constraints violated — e.g. a batch that cannot fit the
+    /// buffer axis value) come back with `None` cycles instead of
+    /// failing the sweep: in an exhaustive enumeration, infeasibility is
+    /// data, not an error.  Dispatch is grouped by `(strategy, plan)`
+    /// for codegen-cache locality; results stay in combo order.
+    pub fn sweep(
+        &self,
+        base: &ArchConfig,
+        runner: &SweepRunner,
+        style: CodegenStyle,
+    ) -> Result<Vec<CartesianPointResult>, DseError> {
+        self.validate()?;
+        Ok(self.simulate_combos(base, runner, style, &self.combos()))
+    }
+
+    /// Bound-and-prune search (`--search pruned`): same outputs as
+    /// [`CartesianSpace::sweep`] for every point that can matter, but
+    /// combos that provably cannot reach the top-`top` GPP ranking *or*
+    /// the Pareto frontier are skipped without simulation (`None` in the
+    /// returned vector).
+    ///
+    /// The guarantee is conditional only on the calibrated ε actually
+    /// bounding the Phase-A model error on unanchored points; anchors
+    /// with error beyond [`ANCHOR_ERROR_LIMIT`] disable pruning entirely
+    /// (global exhaustive fallback), and a point is only ever pruned
+    /// when *both* of these hold for its ε-inflated lower bound `lb`:
+    ///
+    /// - top-k: `lb` exceeds the `top`-th best *exact* GPP cycles among
+    ///   the feasible anchors (an upper bound on the true k-th best), and
+    /// - Pareto: some feasible anchor has `macros ≤`, `buffer ≤`, and
+    ///   exact GPP cycles strictly below `lb` — so the anchor dominates
+    ///   the candidate no matter where in `[lb, ∞)` its true cycles land.
+    ///
+    /// Points outside the scorer's coverage and all anchors are always
+    /// simulated, so the simulated subset is a superset of every
+    /// possible top-k member and frontier member — which makes the
+    /// downstream `dse_topk.csv` / `dse_pareto.csv` byte-identical to
+    /// exhaustive search.
+    pub fn sweep_pruned(
+        &self,
+        base: &ArchConfig,
+        runner: &SweepRunner,
+        style: CodegenStyle,
+        top: usize,
+    ) -> Result<PrunedSweep, DseError> {
+        self.sweep_pruned_with_scorer(base, runner, style, top, &default_scorer)
+    }
+
+    /// [`CartesianSpace::sweep_pruned`] with an explicit Phase-A scorer
+    /// (`None` = point outside the model's coverage).  Test seam: a
+    /// deliberately wrong scorer must trip anchor calibration and fall
+    /// back to exhaustive.
+    #[doc(hidden)]
+    pub fn sweep_pruned_with_scorer(
+        &self,
+        base: &ArchConfig,
+        runner: &SweepRunner,
+        style: CodegenStyle,
+        top: usize,
+        scorer: &dyn Fn(&ArchConfig, &SchedulePlan) -> Option<u64>,
+    ) -> Result<PrunedSweep, DseError> {
+        self.validate()?;
+        let combos = self.combos();
+        let n = combos.len();
+
+        // Phase A — closed-form score for every point, no simulation.
+        let preds: Vec<Option<u64>> = combos
+            .iter()
+            .map(|&c| {
+                let (a, plan) = self.realize(base, c);
+                scorer(&a, &plan)
+            })
+            .collect();
+
+        // Phase B — pick the anchor sample (BTreeSet: deduped, ascending
+        // combo index):
+        //  (a) per plan-shape class (n_in): the extreme-predicted points,
+        //      so each class's ε is calibrated across its whole range;
+        //  (b) per (chip macro count, buffer) group: the best-predicted
+        //      point — the candidate Pareto dominator for its group;
+        //  (c) the `top` best-predicted points overall, so the top-k
+        //      threshold τ is tight.
+        let mut anchor_set: BTreeSet<usize> = BTreeSet::new();
+        let mut classes: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        let mut groups: BTreeMap<(u64, u64), Vec<usize>> = BTreeMap::new();
+        for (i, &(cores, mpc, n_in, _, buf)) in combos.iter().enumerate() {
+            if preds[i].is_some() {
+                classes.entry(n_in).or_default().push(i);
+                groups
+                    .entry((cores as u64 * mpc as u64, buf))
+                    .or_default()
+                    .push(i);
+            }
+        }
+        for members in classes.values() {
+            let lo = members.iter().min_by_key(|&&i| (preds[i], i)).unwrap();
+            let hi = members.iter().max_by_key(|&&i| (preds[i], usize::MAX - i)).unwrap();
+            anchor_set.insert(*lo);
+            anchor_set.insert(*hi);
+        }
+        for members in groups.values() {
+            anchor_set.insert(*members.iter().min_by_key(|&&i| (preds[i], i)).unwrap());
+        }
+        let mut by_pred: Vec<usize> = (0..n).filter(|&i| preds[i].is_some()).collect();
+        by_pred.sort_by_key(|&i| (preds[i], i));
+        anchor_set.extend(by_pred.iter().take(top));
+
+        let anchor_idx: Vec<usize> = anchor_set.iter().copied().collect();
+        let anchor_combos: Vec<_> = anchor_idx.iter().map(|&i| combos[i]).collect();
+        let anchor_results = self.simulate_combos(base, runner, style, &anchor_combos);
+
+        // Calibrate ε per class from the feasible anchors' exact GPP
+        // cycles; collect those anchors as certified Pareto dominators.
+        let mut class_errs: BTreeMap<u32, Vec<f64>> = BTreeMap::new();
+        // (exact gpp cycles, total macros, buffer bytes)
+        let mut certified: Vec<(u64, u64, u64)> = Vec::new();
+        let mut bad_anchor = false;
+        for (&i, res) in anchor_idx.iter().zip(&anchor_results) {
+            if !res.feasible() {
+                continue; // infeasible anchors carry no calibration signal
+            }
+            let exact = res.gpp_cycles().unwrap();
+            certified.push((
+                exact,
+                res.cores as u64 * res.macros_per_core as u64,
+                res.buffer_bytes,
+            ));
+            if let Some(pred) = preds[i] {
+                let err = (pred as f64 - exact as f64).abs() / (exact as f64).max(1.0);
+                if !err.is_finite() || err > ANCHOR_ERROR_LIMIT {
+                    bad_anchor = true;
+                }
+                class_errs.entry(combos[i].2).or_default().push(err);
+            }
+        }
+        let fallback = bad_anchor;
+        let mut epsilons: BTreeMap<u32, f64> = BTreeMap::new();
+        if !fallback {
+            for (class, errs) in &class_errs {
+                if let Some(eps) = epsilon_from_anchor_errors(errs) {
+                    epsilons.insert(*class, eps);
+                }
+            }
+        }
+
+        // Top-k threshold τ: the `top`-th smallest exact GPP cycles among
+        // the certified anchors — with fewer than `top` of them the true
+        // k-th best is unknown and no top-k pruning happens.
+        let mut exact_sorted: Vec<u64> = certified.iter().map(|c| c.0).collect();
+        exact_sorted.sort_unstable();
+        let tau: Option<u64> = (top > 0 && exact_sorted.len() >= top).then(|| exact_sorted[top - 1]);
+
+        // Prune: only points that are provably out of the top-k AND
+        // provably dominated.  Anchors and uncovered points always
+        // survive.  The +1.0 margins absorb integer rounding at the
+        // thresholds.
+        let mut survivors: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if anchor_set.contains(&i) {
+                continue;
+            }
+            let keep = if fallback {
+                true
+            } else {
+                match preds[i].and_then(|p| epsilons.get(&combos[i].2).map(|&e| (p, e))) {
+                    None => true, // outside coverage: never pruned
+                    Some((pred, eps)) => {
+                        let lb = pred as f64 / (1.0 + eps);
+                        let out_of_topk = tau.is_some_and(|t| lb > t as f64 + 1.0);
+                        let macros = combos[i].0 as u64 * combos[i].1 as u64;
+                        let buffer = combos[i].4;
+                        let dominated = certified
+                            .iter()
+                            .any(|&(c, m, b)| m <= macros && b <= buffer && (c as f64) + 1.0 < lb);
+                        !(out_of_topk && dominated)
+                    }
+                }
+            };
+            if keep {
+                survivors.push(i);
+            }
+        }
+
+        // Phase C — simulate only the survivors (grouped dispatch) and
+        // scatter anchors + survivors back to combo order.
+        let survivor_combos: Vec<_> = survivors.iter().map(|&i| combos[i]).collect();
+        let survivor_results = self.simulate_combos(base, runner, style, &survivor_combos);
+        let mut points: Vec<Option<CartesianPointResult>> = vec![None; n];
+        for (&i, r) in anchor_idx.iter().zip(anchor_results) {
+            points[i] = Some(r);
+        }
+        for (&i, r) in survivors.iter().zip(survivor_results) {
+            points[i] = Some(r);
+        }
+        let epsilon = epsilons.values().fold(0.0f64, |a, &b| a.max(b));
+        Ok(PrunedSweep {
+            points,
+            audit: SearchAudit {
+                points_scored: n,
+                points_simulated: anchor_idx.len() + survivors.len(),
+                anchors: anchor_idx.len(),
+                epsilon: if fallback { 0.0 } else { epsilon },
+                fallback,
+            },
+        })
+    }
+}
+
+/// The default Phase-A scorer: predicted GPP execution cycles from
+/// [`eqs::gpp_cycles_estimate`] on the realized `(arch, plan)`.
+fn default_scorer(arch: &ArchConfig, plan: &SchedulePlan) -> Option<u64> {
+    Some(eqs::gpp_cycles_estimate(
+        arch.time_pim_at(plan.n_in),
+        arch.time_rewrite_at(plan.write_speed),
+        plan.tasks as u64,
+        plan.active_macros as u64,
+        arch.bandwidth,
+        plan.write_speed as u64,
+    ))
+}
+
+/// Result of a pruned cartesian sweep: per-combo results in
+/// [`CartesianSpace::combos`] order (`None` = pruned without
+/// simulation) plus the audit counters behind `dse_search.csv`.
+#[derive(Debug, Clone)]
+pub struct PrunedSweep {
+    pub points: Vec<Option<CartesianPointResult>>,
+    pub audit: SearchAudit,
+}
+
+/// Audit counters for one pruned search (`dse_search.csv`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchAudit {
+    /// Cartesian points scored by the Phase-A model (the whole space).
+    pub points_scored: usize,
+    /// Points actually simulated (anchors + survivors).
+    pub points_simulated: usize,
+    /// Anchor points simulated exactly for ε calibration.
+    pub anchors: usize,
+    /// Largest calibrated per-class ε (0 when pruning was disabled).
+    pub epsilon: f64,
+    /// True when a bad anchor forced the global exhaustive fallback.
+    pub fallback: bool,
+}
+
+impl SearchAudit {
+    /// Percentage of scored points whose simulation was skipped.
+    pub fn pruned_pct(&self) -> f64 {
+        if self.points_scored == 0 {
+            0.0
+        } else {
+            100.0 * (self.points_scored - self.points_simulated) as f64
+                / self.points_scored as f64
+        }
     }
 }
 
@@ -674,6 +992,103 @@ mod tests {
                 other => panic!("feasibility diverged: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn search_mode_names_round_trip() {
+        assert_eq!(SearchMode::default(), SearchMode::Exhaustive);
+        for m in SearchMode::ALL {
+            assert_eq!(SearchMode::from_name(m.name()), Some(m));
+            assert_eq!(m.to_string(), m.name());
+        }
+        assert_eq!(SearchMode::from_name("magic"), None);
+    }
+
+    #[test]
+    fn pruned_sweep_matches_exhaustive_on_small_space() {
+        let base = ArchConfig::paper_default();
+        let s = small_cartesian();
+        let top = 5;
+        let exhaustive = s
+            .sweep(&base, &SweepRunner::new(4), CodegenStyle::Looped)
+            .unwrap();
+        let pruned = s
+            .sweep_pruned(&base, &SweepRunner::new(4), CodegenStyle::Looped, top)
+            .unwrap();
+        assert_eq!(pruned.points.len(), exhaustive.len());
+        let audit = pruned.audit;
+        assert_eq!(audit.points_scored, 32);
+        assert!(audit.anchors > 0 && audit.anchors <= audit.points_simulated);
+        assert!(audit.points_simulated <= 32);
+        assert!(!audit.fallback);
+        // Every simulated point agrees exactly with the exhaustive sweep.
+        for (p, e) in pruned.points.iter().zip(&exhaustive) {
+            if let Some(p) = p {
+                assert_eq!(p, e);
+            }
+        }
+        // Byte-identity precondition: every exhaustive top-k member and
+        // Pareto-frontier member must have been simulated.
+        let feasible: Vec<usize> = (0..exhaustive.len())
+            .filter(|&i| exhaustive[i].feasible())
+            .collect();
+        for j in crate::sweep::top_k_by(feasible.len(), top, |j| {
+            exhaustive[feasible[j]].gpp_cycles().unwrap() as f64
+        }) {
+            assert!(pruned.points[feasible[j]].is_some(), "top-k member pruned");
+        }
+        for j in crate::sweep::pareto_min_by(feasible.len(), |j| {
+            let p = &exhaustive[feasible[j]];
+            vec![
+                p.gpp_cycles().unwrap(),
+                p.cores as u64 * p.macros_per_core as u64,
+                p.buffer_bytes,
+            ]
+        }) {
+            assert!(
+                pruned.points[feasible[j]].is_some(),
+                "frontier member pruned"
+            );
+        }
+    }
+
+    #[test]
+    fn pruned_sweep_bad_scorer_falls_back_to_exhaustive() {
+        let base = ArchConfig::paper_default();
+        let s = small_cartesian();
+        let exhaustive = s
+            .sweep(&base, &SweepRunner::new(2), CodegenStyle::Looped)
+            .unwrap();
+        // A scorer that is wildly wrong everywhere: anchor calibration
+        // must detect it and prune nothing.
+        let bogus = |_: &ArchConfig, _: &SchedulePlan| Some(1u64);
+        let pruned = s
+            .sweep_pruned_with_scorer(&base, &SweepRunner::new(2), CodegenStyle::Looped, 5, &bogus)
+            .unwrap();
+        assert!(pruned.audit.fallback);
+        assert_eq!(pruned.audit.points_simulated, s.len());
+        assert_eq!(pruned.audit.epsilon, 0.0);
+        assert_eq!(pruned.audit.pruned_pct(), 0.0);
+        for (p, e) in pruned.points.iter().zip(&exhaustive) {
+            assert_eq!(p.as_ref(), Some(e));
+        }
+    }
+
+    #[test]
+    fn pruned_sweep_never_prunes_outside_coverage() {
+        let base = ArchConfig::paper_default();
+        let s = small_cartesian();
+        // A scorer with no coverage at all: nothing can be calibrated,
+        // so every point survives — without the fallback flag (no anchor
+        // was wrong; there were simply none).
+        let opaque = |_: &ArchConfig, _: &SchedulePlan| None;
+        let pruned = s
+            .sweep_pruned_with_scorer(&base, &SweepRunner::new(2), CodegenStyle::Looped, 5, &opaque)
+            .unwrap();
+        assert!(!pruned.audit.fallback);
+        assert_eq!(pruned.audit.anchors, 0);
+        assert_eq!(pruned.audit.points_simulated, s.len());
+        assert!(pruned.points.iter().all(|p| p.is_some()));
     }
 
     #[test]

@@ -124,6 +124,38 @@ pub fn weight_write_cycles(bytes: u64, macros: u64, speed: u64, bandwidth: u64) 
     bytes.div_ceil(rate)
 }
 
+/// Closed-form GPP execution-cycle estimate for one cartesian design
+/// point (ISSUE 8's Phase-A search score): the max of the two bounds
+/// that govern the schedule's makespan.
+///
+/// - **Pipeline bound** — `ceil(tasks / macros) · (tp + tr)`: with ample
+///   bandwidth every macro streams write→compute back-to-back (GPP's
+///   util = 1 by Eq. 4), so the makespan is the round count times one
+///   period.
+/// - **Write bound** — the rewrite traffic `tasks · tr · s` bytes cannot
+///   drain faster than `min(macros · s, band)` B/cycle (the Eq. 3–4
+///   constraint, priced by [`weight_write_cycles`]).
+///
+/// This is a *score*, not a promise: the pruned DSE driver calibrates a
+/// per-class error bound ε against exactly simulated anchors and only
+/// prunes candidates that remain out of reach after ε inflation, so a
+/// loose estimate costs pruning power, never correctness.
+pub fn gpp_cycles_estimate(
+    tp: u64,
+    tr: u64,
+    tasks: u64,
+    active_macros: u64,
+    band: u64,
+    s: u64,
+) -> u64 {
+    let m = active_macros.max(1);
+    let rounds = tasks.div_ceil(m);
+    let pipeline = rounds.saturating_mul(tp + tr);
+    let write_bytes = tasks.saturating_mul(tr).saturating_mul(s);
+    let write_bound = weight_write_cycles(write_bytes, m, s, band);
+    pipeline.max(write_bound)
+}
+
 /// Two-anchor calibrated linear service-time model (ISSUE 7): the
 /// closed form behind `serve --surrogate eqs`.
 ///
@@ -339,6 +371,23 @@ mod tests {
         // Huge extrapolations stay in range via the u128 intermediate.
         let big = ServiceModel::calibrate(64, u64::MAX / 2, 128, u64::MAX / 2 + 64).unwrap();
         assert_eq!(big.predict(192), u64::MAX / 2 + 128);
+    }
+
+    #[test]
+    fn gpp_estimate_covers_both_regimes() {
+        // Ample bandwidth: the pipeline bound rules.  64 tasks over 16
+        // macros = 4 rounds of (tp + tr) = 4 * 160.
+        assert_eq!(gpp_cycles_estimate(32, 128, 64, 16, 1 << 20, 8), 640);
+        // Starved bandwidth: the write bound rules.  64 tasks * 128 * 8
+        // bytes over band 16 = 4096 cycles > pipeline 640.
+        assert_eq!(gpp_cycles_estimate(32, 128, 64, 16, 16, 8), 4096);
+        // More macros shrink the pipeline bound monotonically.
+        assert!(
+            gpp_cycles_estimate(32, 128, 64, 32, 1 << 20, 8)
+                <= gpp_cycles_estimate(32, 128, 64, 16, 1 << 20, 8)
+        );
+        // Degenerate macro counts never divide by zero.
+        assert!(gpp_cycles_estimate(32, 128, 64, 0, 16, 8) > 0);
     }
 
     #[test]

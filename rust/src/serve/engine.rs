@@ -523,6 +523,7 @@ mod tests {
                 requests: n,
                 seed: 11,
                 mean_gap_cycles: 1024,
+                ..Default::default()
             },
         )
     }
@@ -638,6 +639,7 @@ mod tests {
             requests: 48,
             seed: 11,
             mean_gap_cycles: 1024,
+            ..Default::default()
         };
         let reqs = synthetic_traffic(&arch(), &cfg);
         for chips in [1usize, 3] {

@@ -73,7 +73,7 @@ pub use batcher::{Batch, Batcher, BatchSet, FleetBatches, StreamingBatcher, Work
 pub use engine::{run_fleet_axis, ServeEngine};
 pub use report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
 pub use surrogate::{ServiceEntry, ServiceTimeTable, SurrogateMode};
-pub use traffic::{synthetic_traffic, TrafficConfig, TrafficStream};
+pub use traffic::{synthetic_traffic, TrafficConfig, TrafficShape, TrafficStream};
 
 use crate::coordinator::RunConfig;
 use crate::gemm::Workload;

@@ -259,6 +259,47 @@ impl ServiceTimeTable {
     }
 }
 
+/// Anchors whose closed-form score misses by more than this relative
+/// error disqualify calibration entirely ([`epsilon_from_anchor_errors`]
+/// returns `None` → the pruned DSE search falls back to exhaustive).
+pub const ANCHOR_ERROR_LIMIT: f64 = 0.5;
+
+/// Safety multiplier applied to the worst observed anchor error when
+/// deriving the pruning bound ε.
+pub const EPSILON_SAFETY: f64 = 2.0;
+
+/// Minimum ε regardless of how well the anchors matched: unanchored
+/// points may err in corners the sample never visited, so the bound
+/// never tightens below this floor.
+pub const EPSILON_FLOOR: f64 = 0.25;
+
+/// Phase-B calibration of the pruned DSE search (ISSUE 8): turn the
+/// relative errors `|score − exact| / exact` measured on exactly
+/// simulated anchor points into a conservative error bound ε, the
+/// same measured-anchor philosophy as [`ServiceTimeTable::try_predict`]
+/// applied to search pruning instead of service-time prediction.
+///
+/// Returns `None` — "this class is uncovered, prune nothing" — when
+/// there are no anchors, any error is non-finite, or any anchor missed
+/// by more than [`ANCHOR_ERROR_LIMIT`] (a forced-bad anchor must
+/// disable pruning, never produce wrong bytes).  Otherwise
+/// `ε = max(EPSILON_SAFETY · worst_error, EPSILON_FLOOR)`: generous by
+/// design, because a loose ε only costs pruning power while a tight
+/// one would cost exactness.
+pub fn epsilon_from_anchor_errors(rel_errors: &[f64]) -> Option<f64> {
+    if rel_errors.is_empty() {
+        return None;
+    }
+    let mut worst = 0.0f64;
+    for &e in rel_errors {
+        if !e.is_finite() || e > ANCHOR_ERROR_LIMIT {
+            return None;
+        }
+        worst = worst.max(e);
+    }
+    Some((EPSILON_SAFETY * worst).max(EPSILON_FLOOR))
+}
+
 /// Strategies with steady-state-validated looped lowerings (PR 4).
 /// `intra` has no looped lowering, so it always measures exactly.
 fn eqs_covered_strategy(strategy: Strategy) -> bool {
@@ -428,6 +469,20 @@ mod tests {
         assert!(!e.via_eqs, "non-periodic anchors disqualify the closed form");
         assert_eq!(evals, 3, "two anchors tried, then the exact measurement");
         assert_eq!(e.cycles, 100_000u64 * 100_000 / 100);
+    }
+
+    #[test]
+    fn epsilon_calibration_is_floored_inflated_and_bad_anchor_safe() {
+        // Perfect anchors still get the floor.
+        assert_eq!(epsilon_from_anchor_errors(&[0.0, 0.0]), Some(EPSILON_FLOOR));
+        // The worst error is inflated by the safety factor.
+        let eps = epsilon_from_anchor_errors(&[0.01, 0.2]).unwrap();
+        assert!((eps - 0.2 * EPSILON_SAFETY).abs() < 1e-12);
+        // No anchors, a wild anchor, or a non-finite error: uncovered.
+        assert_eq!(epsilon_from_anchor_errors(&[]), None);
+        assert_eq!(epsilon_from_anchor_errors(&[0.1, 0.9]), None);
+        assert_eq!(epsilon_from_anchor_errors(&[f64::NAN]), None);
+        assert_eq!(epsilon_from_anchor_errors(&[f64::INFINITY]), None);
     }
 
     #[test]

@@ -15,6 +15,55 @@ use crate::gemm::blas::serving_catalog;
 use crate::gemm::Workload;
 use crate::sched::Strategy;
 use crate::util::rng::XorShift64;
+use std::fmt;
+
+/// Arrival-process shape (`--traffic SHAPE`, spec key `traffic=`).
+/// All three shapes keep the configured mean inter-arrival gap, so
+/// overload/p99 studies compare the *shape* of heavy traffic at equal
+/// offered load.  Each stream is a pure function of `(seed, shape)`;
+/// [`TrafficShape::Uniform`] is byte-identical to the pre-knob stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TrafficShape {
+    /// Gaps uniform in `[0, 2·mean]` (the original process — streams
+    /// are byte-identical to before the knob existed).
+    #[default]
+    Uniform,
+    /// Exponential gaps (a Poisson arrival process): heavier short-gap
+    /// mass and a long tail at the same mean.
+    Poisson,
+    /// Bursts of [`BURST_SIZE`] simultaneous arrivals separated by
+    /// uniform gaps of `BURST_SIZE`× the mean — the overload stressor.
+    Burst,
+}
+
+impl TrafficShape {
+    /// All shapes, in CLI documentation order.
+    pub const ALL: [TrafficShape; 3] =
+        [TrafficShape::Uniform, TrafficShape::Poisson, TrafficShape::Burst];
+
+    /// The spec-grammar / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            TrafficShape::Uniform => "uniform",
+            TrafficShape::Poisson => "poisson",
+            TrafficShape::Burst => "burst",
+        }
+    }
+
+    /// Parse a spec-grammar / CLI name.
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|s| s.name() == name)
+    }
+}
+
+impl fmt::Display for TrafficShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Requests per [`TrafficShape::Burst`] burst.
+pub const BURST_SIZE: u32 = 8;
 
 /// Traffic-stream parameters.
 #[derive(Debug, Clone, Copy)]
@@ -23,9 +72,11 @@ pub struct TrafficConfig {
     pub requests: u32,
     /// RNG seed; same seed ⇒ byte-identical stream.
     pub seed: u64,
-    /// Mean inter-arrival gap in cycles (gaps are uniform in
-    /// `[0, 2 * mean]`, so this is the exact expectation).
+    /// Mean inter-arrival gap in cycles (the exact expectation for
+    /// every [`TrafficShape`]).
     pub mean_gap_cycles: u64,
+    /// Arrival-process shape.
+    pub shape: TrafficShape,
 }
 
 impl Default for TrafficConfig {
@@ -34,6 +85,7 @@ impl Default for TrafficConfig {
             requests: 256,
             seed: 7,
             mean_gap_cycles: 2048,
+            shape: TrafficShape::Uniform,
         }
     }
 }
@@ -69,6 +121,7 @@ pub struct TrafficStream {
     catalog: Vec<Workload>,
     rng: XorShift64,
     mean_gap_cycles: u64,
+    shape: TrafficShape,
     arrival: u64,
     next_id: u32,
     requests: u32,
@@ -83,6 +136,7 @@ impl TrafficStream {
             catalog: serving_catalog(),
             rng: XorShift64::new(cfg.seed),
             mean_gap_cycles: cfg.mean_gap_cycles,
+            shape: cfg.shape,
             arrival: 0,
             next_id: 0,
             requests: cfg.requests,
@@ -100,7 +154,25 @@ impl Iterator for TrafficStream {
         let id = self.next_id;
         self.next_id += 1;
         if self.mean_gap_cycles > 0 {
-            self.arrival += self.rng.next_below(2 * self.mean_gap_cycles + 1);
+            self.arrival += match self.shape {
+                TrafficShape::Uniform => self.rng.next_below(2 * self.mean_gap_cycles + 1),
+                TrafficShape::Poisson => {
+                    // Inverse-CDF exponential on a 32-bit uniform,
+                    // u ∈ (0, 1] so ln(u) is finite and the gap >= 0.
+                    let u = (self.rng.next_below(1 << 32) + 1) as f64 / (1u64 << 32) as f64;
+                    (-(self.mean_gap_cycles as f64) * u.ln()).round() as u64
+                }
+                TrafficShape::Burst => {
+                    if id % BURST_SIZE == 0 {
+                        // One gap per burst, BURST_SIZE× the mean, so
+                        // the per-request expectation stays the mean.
+                        self.rng
+                            .next_below(2 * BURST_SIZE as u64 * self.mean_gap_cycles + 1)
+                    } else {
+                        0 // rest of the burst lands on the same cycle
+                    }
+                }
+            };
         }
         let hot = self.rng.next_below(10) < HOT_IN_TEN;
         let (workload, run_cfg) = if hot {
@@ -216,6 +288,73 @@ mod tests {
             assert_eq!(got.cfg.strategy, want.cfg.strategy);
         }
         assert_eq!(stream.len(), 240);
+    }
+
+    #[test]
+    fn traffic_shape_names_round_trip() {
+        assert_eq!(TrafficShape::default(), TrafficShape::Uniform);
+        for s in TrafficShape::ALL {
+            assert_eq!(TrafficShape::from_name(s.name()), Some(s));
+            assert_eq!(s.to_string(), s.name());
+        }
+        assert_eq!(TrafficShape::from_name("tsunami"), None);
+    }
+
+    #[test]
+    fn shapes_are_deterministic_nondecreasing_and_mean_preserving() {
+        for shape in TrafficShape::ALL {
+            let cfg = TrafficConfig {
+                requests: 2048,
+                shape,
+                ..Default::default()
+            };
+            let a = synthetic_traffic(&arch(), &cfg);
+            let b = synthetic_traffic(&arch(), &cfg);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.arrival_cycle == y.arrival_cycle
+                    && x.workload.name == y.workload.name),
+                "{shape}: same seed diverged"
+            );
+            assert!(
+                a.windows(2).all(|p| p[0].arrival_cycle <= p[1].arrival_cycle),
+                "{shape}: arrivals went backwards"
+            );
+            let mean = a.last().unwrap().arrival_cycle as f64 / a.len() as f64;
+            assert!(
+                (mean / cfg.mean_gap_cycles as f64 - 1.0).abs() < 0.25,
+                "{shape}: empirical mean gap {mean} vs configured {}",
+                cfg.mean_gap_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn burst_groups_arrivals_and_shapes_diverge() {
+        let cfg = TrafficConfig {
+            requests: 64,
+            shape: TrafficShape::Burst,
+            ..Default::default()
+        };
+        let reqs = synthetic_traffic(&arch(), &cfg);
+        // Requests within a burst share their arrival cycle...
+        for burst in reqs.chunks(BURST_SIZE as usize) {
+            assert!(burst.iter().all(|r| r.arrival_cycle == burst[0].arrival_cycle));
+        }
+        // ...and the arrival processes genuinely diverge across shapes
+        // at the same seed.
+        let uniform = synthetic_traffic(&arch(), &TrafficConfig { requests: 64, ..Default::default() });
+        assert!(
+            reqs.iter().zip(&uniform).any(|(b, u)| b.arrival_cycle != u.arrival_cycle),
+            "burst arrivals identical to uniform"
+        );
+        let poisson = synthetic_traffic(
+            &arch(),
+            &TrafficConfig { requests: 64, shape: TrafficShape::Poisson, ..Default::default() },
+        );
+        assert!(
+            poisson.iter().zip(&uniform).any(|(p, u)| p.arrival_cycle != u.arrival_cycle),
+            "poisson arrivals identical to uniform"
+        );
     }
 
     #[test]

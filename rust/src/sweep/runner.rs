@@ -6,6 +6,7 @@
 //! submission-order result contract every CSV and table relies on.
 
 use super::{exec, CodegenCache, SweepError, SweepGrid, SweepPoint};
+use crate::sched::Strategy;
 use crate::sim::{simulate_in, SimStats, SimWorkspace};
 
 /// Default worker count: one per available hardware thread.
@@ -78,6 +79,60 @@ impl SweepRunner {
         exec::run_indexed(self.jobs, points.len(), |i, ws| {
             self.eval(i, &points[i], ws)
         })
+    }
+
+    /// [`SweepRunner::run_points`] with the *dispatch* order grouped by
+    /// `(strategy, plan)` so points sharing a program shape run
+    /// back-to-back (codegen-cache locality for cartesian DSE grids,
+    /// ISSUE 8).  Results come back in **submission order** — the
+    /// permutation is purely internal: per-point outcomes, error
+    /// indices, and the set of codegen-cache entries are all identical
+    /// to a plain [`SweepRunner::run_points`] call.
+    pub fn run_points_grouped(&self, points: &[SweepPoint]) -> Vec<Result<SimStats, SweepError>> {
+        let rank = |s: Strategy| {
+            Strategy::ALL_EXTENDED
+                .iter()
+                .position(|x| *x == s)
+                .unwrap_or(Strategy::ALL_EXTENDED.len())
+        };
+        let mut order: Vec<usize> = (0..points.len()).collect();
+        // Stable sort: ties keep submission order, so the dispatch
+        // permutation is itself deterministic.
+        order.sort_by_key(|&i| {
+            let p = &points[i];
+            (
+                rank(p.strategy),
+                p.plan.tasks,
+                p.plan.active_macros,
+                p.plan.n_in,
+                p.plan.write_speed,
+            )
+        });
+        let grouped: Vec<SweepPoint> = order.iter().map(|&i| points[i].clone()).collect();
+        let results = self.run_points(&grouped);
+        let mut out: Vec<Option<Result<SimStats, SweepError>>> =
+            (0..points.len()).map(|_| None).collect();
+        for (&submitted, r) in order.iter().zip(results) {
+            // Error indices refer to the dispatch slice; remap them to
+            // the caller's submission order to preserve the contract.
+            out[submitted] = Some(r.map_err(|e| match e {
+                SweepError::Codegen {
+                    strategy, source, ..
+                } => SweepError::Codegen {
+                    index: submitted,
+                    strategy,
+                    source,
+                },
+                SweepError::Sim {
+                    strategy, source, ..
+                } => SweepError::Sim {
+                    index: submitted,
+                    strategy,
+                    source,
+                },
+            }));
+        }
+        out.into_iter().map(Option::unwrap).collect()
     }
 
     /// Evaluate every point, failing fast on the first error (by input
@@ -188,5 +243,42 @@ mod tests {
     #[test]
     fn empty_grid_is_fine() {
         assert!(SweepRunner::default().run(&SweepGrid::new()).is_empty());
+    }
+
+    #[test]
+    fn grouped_dispatch_matches_plain_in_order_errors_and_cache() {
+        let arch = ArchConfig::paper_default();
+        let good = SchedulePlan::full_chip(&arch, 8);
+        let mut bad = good;
+        bad.active_macros = arch.total_macros() + 1;
+        // Interleave strategies and plans so grouping actually permutes.
+        let points = vec![
+            SweepPoint::new(arch.clone(), Strategy::GeneralizedPingPong, good),
+            SweepPoint::new(arch.clone(), Strategy::InSitu, good),
+            SweepPoint::new(arch.clone(), Strategy::InSitu, bad),
+            SweepPoint::new(arch.clone(), Strategy::NaivePingPong, good),
+            SweepPoint::new(arch, Strategy::GeneralizedPingPong, good),
+        ];
+        let plain_runner = SweepRunner::new(2);
+        let plain = plain_runner.run_points(&points);
+        let grouped_runner = SweepRunner::new(2);
+        let grouped = grouped_runner.run_points_grouped(&points);
+        assert_eq!(plain.len(), grouped.len());
+        for (i, (a, b)) in plain.iter().zip(&grouped).enumerate() {
+            match (a, b) {
+                (Ok(x), Ok(y)) => assert_eq!(x, y, "point {i}"),
+                // Error indices are remapped to submission order.
+                (Err(x), Err(y)) => assert_eq!((x.index(), y.index()), (i, i)),
+                other => panic!("point {i} outcome diverged: {other:?}"),
+            }
+        }
+        assert_eq!(grouped[2].as_ref().unwrap_err().index(), 2);
+        // Grouping changes only dispatch order: the codegen cache holds
+        // the same entries either way.
+        assert_eq!(
+            plain_runner.cache().len(),
+            grouped_runner.cache().len(),
+            "cache population must be permutation-invariant"
+        );
     }
 }

@@ -57,6 +57,7 @@ fn serve_heterogeneous_fleet_matches_direct_engine_path() {
             requests: 48,
             seed: 7,
             mean_gap_cycles: 1024,
+            ..Default::default()
         },
     );
     let report = engine.run(&requests).unwrap();
@@ -233,6 +234,7 @@ fn fleet_axis_table_matches_pre_api_bytes() {
             requests: 24,
             seed: 7,
             mean_gap_cycles: 1024,
+            ..Default::default()
         },
     );
     let fleets: Vec<FleetConfig> = [1usize, 2]

@@ -1,0 +1,205 @@
+//! Property tests for the pruned cartesian DSE (`--search pruned`).
+//!
+//! The contract under test: the bound-and-prune search must reproduce
+//! the exhaustive `dse_topk.csv` / `dse_pareto.csv` *bytes* — not just
+//! the same winners — on randomized spaces, across worker counts, with
+//! partial Phase-A model coverage, and under the forced-bad-anchor
+//! exhaustive fallback.
+
+use gpp_pim::api::{MemorySink, RunSpec, Session, SinkSet};
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::model::dse::CartesianSpace;
+use gpp_pim::sched::CodegenStyle;
+use gpp_pim::sweep::{pareto_min_by, top_k_by, SweepRunner};
+
+/// Tiny deterministic xorshift64 — the property tests must not depend
+/// on ambient randomness.
+struct XorShift(u64);
+
+impl XorShift {
+    fn new(seed: u64) -> Self {
+        Self(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    /// 1..=max distinct values sampled from `pool`, in sampled order.
+    fn pick(&mut self, pool: &[u64], max: usize) -> Vec<u64> {
+        let count = 1 + self.below(max.min(pool.len()) as u64) as usize;
+        let mut vals: Vec<u64> = Vec::new();
+        while vals.len() < count {
+            let v = pool[self.below(pool.len() as u64) as usize];
+            if !vals.contains(&v) {
+                vals.push(v);
+            }
+        }
+        vals
+    }
+}
+
+fn list(vals: &[u64]) -> String {
+    vals.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
+}
+
+/// A random but non-degenerate dse-full axis set.  The buffer pool
+/// includes a depth small enough to make high-`n_in` points infeasible,
+/// so the search also sees `feasible=false` anchors.
+fn random_axes(rng: &mut XorShift) -> (String, usize) {
+    let cores = rng.pick(&[2, 4, 8], 2);
+    let macros = rng.pick(&[2, 4, 8], 2);
+    let n_in = rng.pick(&[2, 4, 8], 2);
+    let bands = rng.pick(&[32, 64, 128, 256, 512], 3);
+    let buffers = rng.pick(&[4 * 1024, 64 * 1024], 2);
+    let top = 1 + rng.below(3) as usize;
+    let points =
+        cores.len() * macros.len() * n_in.len() * bands.len() * buffers.len();
+    let spec = format!(
+        "dse-full:cores={}:macros={}:nin={}:bands={}:buffers={}:tasks=64:top={top}",
+        list(&cores),
+        list(&macros),
+        list(&n_in),
+        list(&bands),
+        list(&buffers),
+    );
+    (spec, points)
+}
+
+/// Run one spec string through a fresh session, capturing tables.
+fn run(spec: &str) -> MemorySink {
+    let session = Session::with_jobs(ArchConfig::paper_default(), 2);
+    let mut mem = MemorySink::new();
+    session
+        .run(&RunSpec::parse(spec).unwrap(), &mut SinkSet::new().with(&mut mem))
+        .unwrap();
+    mem
+}
+
+#[test]
+fn pruned_matches_exhaustive_on_random_spaces_and_job_counts() {
+    let mut rng = XorShift::new(0x9e3779b97f4a7c15);
+    for round in 0..4 {
+        let (spec, points) = random_axes(&mut rng);
+        let ex = run(&spec);
+        let pr1 = run(&format!("{spec}:search=pruned:jobs=1"));
+        let pr8 = run(&format!("{spec}:search=pruned:jobs=8"));
+        for name in ["dse_topk", "dse_pareto"] {
+            let want = ex.csv(name).unwrap();
+            assert_eq!(
+                Some(&want),
+                pr1.csv(name).as_ref(),
+                "round {round} ({points} pts): {name} moved under pruning\nspec: {spec}"
+            );
+            assert_eq!(
+                Some(&want),
+                pr8.csv(name).as_ref(),
+                "round {round} ({points} pts): {name} differs at jobs=8\nspec: {spec}"
+            );
+        }
+        // The audit is jobs-invariant too (pruning decisions are made
+        // before any parallel dispatch).
+        assert_eq!(pr1.csv("dse_search"), pr8.csv("dse_search"), "round {round}");
+        let audit = pr1.csv("dse_search").unwrap();
+        let row: Vec<String> =
+            audit.lines().nth(1).unwrap().split(',').map(String::from).collect();
+        assert_eq!(row[0].parse::<usize>().unwrap(), points, "round {round}");
+        assert!(row[1].parse::<usize>().unwrap() <= points, "round {round}");
+    }
+}
+
+fn small_space() -> CartesianSpace {
+    CartesianSpace {
+        cores: vec![2, 4],
+        macros_per_core: vec![2, 4],
+        n_in: vec![2, 4],
+        bandwidths: vec![32, 128, 512],
+        buffers: vec![64 * 1024],
+        tasks: 64,
+        write_speed: 8,
+    }
+}
+
+#[test]
+fn coverage_misses_are_never_pruned() {
+    // A scorer that disavows half the space (every n_in=4 plan): those
+    // points carry no bound, so the search must simulate them all, and
+    // every simulated point must agree exactly with the exhaustive run.
+    let base = ArchConfig::paper_default();
+    let space = small_space();
+    let runner = SweepRunner::new(2);
+    let exhaustive = space.sweep(&base, &runner, CodegenStyle::Looped).unwrap();
+    let pruned = space
+        .sweep_pruned_with_scorer(&base, &runner, CodegenStyle::Looped, 2, &|arch, plan| {
+            if plan.n_in == 4 {
+                return None;
+            }
+            // The real closed form for the covered half, so calibration
+            // passes and pruning stays armed.
+            Some(gpp_pim::model::eqs::gpp_cycles_estimate(
+                arch.time_pim_at(plan.n_in),
+                arch.time_rewrite_at(plan.write_speed),
+                plan.tasks as u64,
+                plan.active_macros as u64,
+                arch.bandwidth,
+                plan.write_speed as u64,
+            ))
+        })
+        .unwrap();
+    assert!(!pruned.audit.fallback);
+    for (i, p) in pruned.points.iter().enumerate() {
+        if exhaustive[i].n_in == 4 {
+            assert!(p.is_some(), "uncovered point {i} was pruned");
+        }
+        if let Some(p) = p {
+            assert_eq!(*p, exhaustive[i], "simulated point {i} diverged");
+        }
+    }
+    // Every exhaustive top-k / frontier member is among the simulated.
+    let feasible: Vec<usize> = (0..exhaustive.len())
+        .filter(|&i| exhaustive[i].feasible())
+        .collect();
+    let k = top_k_by(feasible.len(), 2, |j| {
+        exhaustive[feasible[j]].cycles[2].unwrap() as f64
+    });
+    for &j in &k {
+        assert!(pruned.points[feasible[j]].is_some(), "top-k member pruned");
+    }
+    let front = pareto_min_by(feasible.len(), |j| {
+        let p = &exhaustive[feasible[j]];
+        vec![
+            p.cycles[2].unwrap(),
+            p.cores as u64 * p.macros_per_core as u64,
+            p.buffer_bytes,
+        ]
+    });
+    for &j in &front {
+        assert!(pruned.points[feasible[j]].is_some(), "frontier member pruned");
+    }
+}
+
+#[test]
+fn bad_anchors_force_the_exhaustive_fallback() {
+    // A scorer that is confidently wrong everywhere: anchor calibration
+    // must detect it (relative error beyond the anchor limit) and
+    // disable pruning globally rather than trust the bounds.
+    let base = ArchConfig::paper_default();
+    let space = small_space();
+    let runner = SweepRunner::new(2);
+    let exhaustive = space.sweep(&base, &runner, CodegenStyle::Looped).unwrap();
+    let pruned = space
+        .sweep_pruned_with_scorer(&base, &runner, CodegenStyle::Looped, 2, &|_, _| Some(1))
+        .unwrap();
+    assert!(pruned.audit.fallback, "a wrong scorer must trip the fallback");
+    assert_eq!(pruned.audit.epsilon, 0.0);
+    assert_eq!(pruned.audit.points_simulated, space.len());
+    for (i, p) in pruned.points.iter().enumerate() {
+        assert_eq!(p.as_ref(), Some(&exhaustive[i]), "fallback point {i} diverged");
+    }
+}

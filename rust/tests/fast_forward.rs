@@ -300,9 +300,14 @@ fn cartesian_dse_invariant_across_jobs_and_styles() {
         tasks: 512,
         write_speed: 8,
     };
-    let looped_par = space
-        .sweep(&base, &SweepRunner::new(8), CodegenStyle::Looped)
-        .unwrap();
+    let par_runner = SweepRunner::new(8);
+    let looped_par = space.sweep(&base, &par_runner, CodegenStyle::Looped).unwrap();
+    // The cartesian sweep dispatches in (strategy, plan)-sorted order
+    // for codegen-cache locality; the sort must only reorder work, not
+    // change what is cached — one entry per distinct (strategy, plan,
+    // arch) key, i.e. 16 combos x 3 strategies here.
+    assert_eq!(par_runner.cache().len(), 16 * 3, "grouped dispatch changed cache population");
+    assert_eq!(par_runner.cache().misses(), 16 * 3);
     let looped_seq = space
         .sweep(&base, &SweepRunner::sequential(), CodegenStyle::Looped)
         .unwrap();

@@ -34,6 +34,7 @@ fn traffic(requests: u32) -> Vec<Request> {
             requests,
             seed: 7,
             mean_gap_cycles: 2048,
+            ..Default::default()
         },
     )
 }

@@ -17,6 +17,7 @@ fn traffic(requests: u32, seed: u64) -> Vec<Request> {
             requests,
             seed,
             mean_gap_cycles: 2048,
+            ..Default::default()
         },
     )
 }

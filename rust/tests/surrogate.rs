@@ -41,6 +41,7 @@ fn cfg(requests: u32) -> TrafficConfig {
         requests,
         seed: 7,
         mean_gap_cycles: 2048,
+        ..Default::default()
     }
 }
 
@@ -148,6 +149,7 @@ fn million_request_replay_is_deterministic_across_jobs() {
         requests: 1_000_000,
         seed: 11,
         mean_gap_cycles: 512,
+        ..Default::default()
     };
     let a = ServeEngine::new(arch(), 1, 4).run_traffic(&t).unwrap();
     let b = ServeEngine::new(arch(), 8, 4).run_traffic(&t).unwrap();

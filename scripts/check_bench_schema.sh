@@ -7,6 +7,10 @@
 #   scripts/check_bench_schema.sh            # every committed BENCH_*.json
 #   scripts/check_bench_schema.sh FILE...    # explicit files (CI validates
 #                                            # freshly produced bench output)
+#   scripts/check_bench_schema.sh --require NAME [--require NAME...] FILE...
+#                                            # additionally fail unless each
+#                                            # NAME appears among the
+#                                            # validated records
 #
 # The same rules are implemented in Rust for the benches themselves
 # (report::benchkit::validate_bench_json, unit-tested); this script is the
@@ -14,25 +18,48 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-if [ "$#" -gt 0 ]; then
-  files=("$@")
+required_names=()
+args=()
+while [ "$#" -gt 0 ]; do
+  case "$1" in
+    --require)
+      [ "$#" -ge 2 ] || { echo "check_bench_schema: --require needs a record name" >&2; exit 2; }
+      required_names+=("$2")
+      shift 2
+      ;;
+    *)
+      args+=("$1")
+      shift
+      ;;
+  esac
+done
+
+if [ "${#args[@]}" -gt 0 ]; then
+  files=("${args[@]}")
 else
   # All committed BENCH_*.json anywhere in the repo.
   mapfile -t files < <(git ls-files 'BENCH_*.json' '*/BENCH_*.json' '**/BENCH_*.json' | sort -u)
 fi
 
 if [ "${#files[@]}" -eq 0 ]; then
+  if [ "${#required_names[@]}" -gt 0 ]; then
+    echo "check_bench_schema: --require given but no BENCH_*.json files to validate" >&2
+    exit 1
+  fi
   echo "check_bench_schema: no BENCH_*.json files to validate (ok)"
   exit 0
 fi
 
+GPP_REQUIRED_NAMES="$(printf '%s\n' "${required_names[@]+"${required_names[@]}"}")" \
 python3 - "${files[@]}" <<'EOF'
 import json
 import math
+import os
 import sys
 
 REQUIRED = {"name", "median_secs", "macro_cycles_per_s"}
 failed = False
+seen_names = set()
 
 def err(path, msg):
     global failed, file_ok
@@ -61,6 +88,8 @@ for path in sys.argv[1:]:
             continue
         if not isinstance(rec["name"], str) or not rec["name"]:
             err(path, f"{where}: name must be a non-empty string")
+        else:
+            seen_names.add(rec["name"])
         ms = rec["median_secs"]
         if isinstance(ms, bool) or not isinstance(ms, (int, float)) \
                 or not math.isfinite(ms) or ms < 0:
@@ -70,6 +99,12 @@ for path in sys.argv[1:]:
             err(path, f"{where}: macro_cycles_per_s must be a number or null, got {rate!r}")
     if file_ok:
         print(f"check_bench_schema: {path}: OK ({len(data)} records)")
+
+for name in os.environ.get("GPP_REQUIRED_NAMES", "").splitlines():
+    if name and name not in seen_names:
+        failed = True
+        print(f"check_bench_schema: required record '{name}' not found in any validated file",
+              file=sys.stderr)
 
 sys.exit(1 if failed else 0)
 EOF
