@@ -11,7 +11,13 @@
 //!    queueing machinery alone);
 //! 3. `fleet/timeline-faults-on` — the same stream under a seeded MTBF
 //!    fault schedule plus scripted fail/join events, exercising
-//!    redispatch, migration charging, and availability windows.
+//!    redispatch, migration charging, and availability windows;
+//! 4. `fleet/timeline-throttled` — the same stream under a
+//!    bandwidth-throttle storm (ISSUE 9), exercising epoch tracking and
+//!    per-placement service repricing.  Gated first: a throttle plan
+//!    with *identity* repricing ([`FaultCharges::FREE`]) must leave the
+//!    timeline bit-identical to the no-fault run — throttle epochs are
+//!    pure pricing, never scheduling.
 //!
 //! The tracked rate is timeline events/sec (dispatches per iteration
 //! over median wall time, carried in the `macro_cycles_per_s` field of
@@ -21,7 +27,8 @@
 //! (CI bench-smoke).  `cargo bench --bench fleet_perf`
 
 use gpp_pim::fleet::{
-    dispatch_fifo, dispatch_fifo_faulty, Dispatch, FaultCharges, FaultPlan, PlacementPolicy,
+    dispatch_fifo, dispatch_fifo_faulty, Dispatch, FaultCharges, FaultPlan, OverloadConfig,
+    PlacementPolicy,
 };
 use gpp_pim::report::benchkit::{
     env_u64, section, validate_bench_json, write_bench_json, Bench, BenchRecord,
@@ -58,13 +65,24 @@ fn main() -> anyhow::Result<()> {
     // early enough to redispatch real backlog.
     let plan = FaultPlan::parse("mtbf@400000@9,fail@50000@1,join@90000@1,drain@120000@5")
         .expect("fault plan");
+    // Bandwidth-throttle storm (ISSUE 9): long epochs on two chips
+    // across the ~3.7M-cycle stream, one of them restored mid-run.
+    let storm = FaultPlan::parse(
+        "throttle@20000@0@25,restore@1500000@0,throttle@60000@3@50,throttle@900000@3@10",
+    )
+    .expect("throttle plan");
     // Flat migration/cold pricing: the bench times the timeline, not the
     // write model (the engine integration charges real weight bytes).
-    let migrate = |_from: usize, _to: usize| (1u64 << 20, 2_048u64);
-    let cold = |_chip: usize| (8u64 << 20, 16_384u64);
+    // The throttled closure scales service inversely with the effective
+    // bandwidth percentage — the closed-form shape of a write-bound
+    // refit, cheap enough that the bench still times the machinery.
+    let migrate = |_from: usize, _to: usize, _pct: u8| (1u64 << 20, 2_048u64);
+    let cold = |_chip: usize, _pct: u8| (8u64 << 20, 16_384u64);
+    let throttled = |base: u64, _i: usize, _chip: usize, pct: u8| base * 100 / pct.max(1) as u64;
     let charges = FaultCharges {
         migrate: &migrate,
         cold: &cold,
+        throttled: &throttled,
     };
     let mut records = Vec::new();
 
@@ -78,6 +96,7 @@ fn main() -> anyhow::Result<()> {
             policy.instance().as_mut(),
             &FaultPlan::none(),
             None,
+            OverloadConfig::default(),
             &FaultCharges::FREE,
         );
         assert_eq!(
@@ -86,8 +105,29 @@ fn main() -> anyhow::Result<()> {
             "faulty path with empty plan diverged from dispatch_fifo ({})",
             policy.name()
         );
+        // Throttle epochs are pure pricing: with identity repricing the
+        // storm must not move a single placement or counter.
+        let inert = dispatch_fifo_faulty(
+            CHIPS,
+            &dispatches,
+            service_on,
+            policy.instance().as_mut(),
+            &storm,
+            None,
+            OverloadConfig::default(),
+            &FaultCharges::FREE,
+        );
+        assert_eq!(
+            plain,
+            inert,
+            "throttle storm with identity repricing moved the timeline ({})",
+            policy.name()
+        );
     }
-    println!("empty-plan faulty path bit-identical to dispatch_fifo over {} policies ✓", PlacementPolicy::ALL.len());
+    println!(
+        "empty-plan and identity-throttle paths bit-identical to dispatch_fifo over {} policies ✓",
+        PlacementPolicy::ALL.len()
+    );
 
     section(&format!("wall-clock: {n} dispatches on {CHIPS} chips (least-loaded)"));
     let bench = Bench::new(1, iters);
@@ -112,6 +152,7 @@ fn main() -> anyhow::Result<()> {
             PlacementPolicy::LeastLoaded.instance().as_mut(),
             &plan,
             None,
+            OverloadConfig::default(),
             &charges,
         )
         .makespan
@@ -125,6 +166,22 @@ fn main() -> anyhow::Result<()> {
         events_per_iter / m_on.median_secs() / 1e6,
     );
 
+    let m_thr = bench.run("fleet/timeline-throttled", || {
+        dispatch_fifo_faulty(
+            CHIPS,
+            &dispatches,
+            service_on,
+            PlacementPolicy::LeastLoaded.instance().as_mut(),
+            &storm,
+            None,
+            OverloadConfig::default(),
+            &charges,
+        )
+        .makespan
+    });
+    println!("{}", m_thr.line());
+    records.push(BenchRecord::new(&m_thr, Some(events_per_iter)));
+
     // Sanity on the faulty run itself: the plan must actually have
     // bitten (failures redispatch work and charge migration bytes).
     let t = dispatch_fifo_faulty(
@@ -134,6 +191,7 @@ fn main() -> anyhow::Result<()> {
         PlacementPolicy::LeastLoaded.instance().as_mut(),
         &plan,
         None,
+        OverloadConfig::default(),
         &charges,
     );
     assert!(t.faults.redispatched > 0, "fault plan never redispatched");
@@ -142,6 +200,31 @@ fn main() -> anyhow::Result<()> {
     println!(
         "faulted run: {served}/{} served, {} redispatched, {} dropped, {} migration bytes",
         n, t.faults.redispatched, t.faults.dropped, t.faults.migration_bytes
+    );
+
+    // And the throttled run: epochs must have repriced real work (the
+    // scaled closure stretches every placement inside an epoch).
+    let t = dispatch_fifo_faulty(
+        CHIPS,
+        &dispatches,
+        service_on,
+        PlacementPolicy::LeastLoaded.instance().as_mut(),
+        &storm,
+        None,
+        OverloadConfig::default(),
+        &charges,
+    );
+    let plain = dispatch_fifo(
+        CHIPS,
+        &dispatches,
+        service_on,
+        PlacementPolicy::LeastLoaded.instance().as_mut(),
+    );
+    assert!(
+        t.makespan > plain.makespan,
+        "throttle storm never stretched the timeline ({} vs {})",
+        t.makespan,
+        plain.makespan
     );
 
     let out = Path::new("BENCH_fleet.json");

@@ -25,7 +25,7 @@ use super::spec::{
 };
 use crate::arch::ArchConfig;
 use crate::coordinator::{Coordinator, RunConfig, RunReport};
-use crate::fleet::AutoscaleConfig;
+use crate::fleet::{AutoscaleConfig, OverloadConfig};
 use crate::gemm::blas;
 use crate::model::adapt::RuntimeAdaptation;
 use crate::model::dse::{CartesianPointResult, CartesianSpace, DesignSpace, SearchMode};
@@ -414,6 +414,7 @@ impl Session {
         let fleet = spec.fleet_config(&self.arch)?;
         let mut engine = ServeEngine::with_fleet(fleet, spec.placement, self.jobs(spec.jobs))
             .with_faults(spec.faults.clone())
+            .with_overload(spec.overload())
             .with_surrogate(spec.surrogate)
             .with_service_table(Arc::clone(&self.service_table));
         if let (true, Some(slo)) = (spec.autoscale, spec.slo) {
@@ -437,6 +438,19 @@ impl Session {
         ))?;
         if !engine.faults().is_empty() {
             sinks.line(&format!("fault plan          : {}", engine.faults()))?;
+        }
+        let overload = engine.overload();
+        if !overload.is_off() {
+            sinks.line(&format!(
+                "overload control    : admit cap {}, deadline {} ({} retries, backoff {}..{})",
+                overload.queue_cap.map_or_else(|| "unbounded".to_string(), |c| c.to_string()),
+                overload
+                    .deadline
+                    .map_or_else(|| "none".to_string(), |d| format!("{d} cycles")),
+                OverloadConfig::MAX_RETRIES,
+                OverloadConfig::BACKOFF_BASE,
+                OverloadConfig::BACKOFF_CAP,
+            ))?;
         }
         if let Some(scale) = engine.autoscale() {
             sinks.line(&format!(
@@ -488,7 +502,9 @@ impl Session {
         let requests = synthetic_traffic(fleets[0].reference(), &traffic_cfg);
         // Carry the axis on a sweep grid — the same description a DSE
         // over fleet size × policy would use.
-        let axis = FleetAxis::new(fleets, spec.placements.clone()).with_faults(spec.faults.clone());
+        let axis = FleetAxis::new(fleets, spec.placements.clone())
+            .with_faults(spec.faults.clone())
+            .with_overload(spec.overload());
         sinks.section(&format!(
             "Fleet sweep — {} requests (seed {}) over {} (fleet, policy) points",
             requests.len(),
@@ -498,10 +514,23 @@ impl Session {
         if !axis.faults().is_empty() {
             sinks.line(&format!("fault plan: {}", axis.faults()))?;
         }
+        if !axis.overload().is_off() {
+            let o = axis.overload();
+            sinks.line(&format!(
+                "overload control: admit cap {}, deadline {}",
+                o.queue_cap
+                    .map_or_else(|| "unbounded".to_string(), |c| c.to_string()),
+                o.deadline
+                    .map_or_else(|| "none".to_string(), |d| d.to_string()),
+            ))?;
+        }
         let rows = run_fleet_axis(&axis, &requests, self.jobs(spec.jobs))
             .map_err(|e| anyhow!("{e}"))?;
         sinks.table("fleet_axis", &fleet_axis_table(&rows), TableDest::Show)?;
-        if !axis.faults().is_empty() {
+        // Overload control counts as a degraded mode too: an admission
+        // cap or deadline without a fault plan still earns the
+        // resilience table (shed/expired/retry accounting lives there).
+        if !axis.faults().is_empty() || !axis.overload().is_off() {
             sinks.table("fleet_resilience", &fleet_resilience_table(&rows), TableDest::Show)?;
         }
         Ok(Outcome::FleetSweep(FleetSweepOutcome { rows }))
@@ -848,10 +877,14 @@ impl Session {
             sinks.table("dse_fleet", &fleet_axis_table(&rows), TableDest::Show)?;
             tables.push("dse_fleet".to_string());
             // Resilience axis: the same (fleet, policy) points re-served
-            // under the fault plan.  `dse_fleet` stays fault-free so its
-            // bytes never move when a plan is attached.
-            if !spec.faults.is_empty() {
-                let faulty = axis.clone().with_faults(spec.faults.clone());
+            // under the fault plan and/or overload control.  `dse_fleet`
+            // stays fault-free so its bytes never move when a plan or an
+            // admission policy is attached.
+            if !spec.faults.is_empty() || !spec.overload().is_off() {
+                let faulty = axis
+                    .clone()
+                    .with_faults(spec.faults.clone())
+                    .with_overload(spec.overload());
                 sinks.section(&format!(
                     "DSE resilience axis — fault plan [{}] over {} (fleet, policy) points",
                     spec.faults,
@@ -954,10 +987,12 @@ fn fleet_axis_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
     t
 }
 
-/// The resilience table (`fleet_resilience.csv` from a faulted `fleet`
-/// run, `dse_resilience.csv` from `dse-full`): degraded-mode metrics
-/// per (fleet, policy) point.  Lives next to [`fleet_axis_table`]
-/// instead of widening it so fault-free axis CSVs keep their bytes.
+/// The resilience table (`fleet_resilience.csv` from a faulted or
+/// overload-controlled `fleet` run, `dse_resilience.csv` from
+/// `dse-full`): degraded-mode metrics per (fleet, policy) point.  Lives
+/// next to [`fleet_axis_table`] instead of widening it so fault-free
+/// axis CSVs keep their bytes.  The overload counters (ISSUE 9) append
+/// after `makespan` so pre-existing column indices stay valid.
 fn fleet_resilience_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
     let mut t = CsvTable::new(vec![
         "fleet",
@@ -971,6 +1006,9 @@ fn fleet_resilience_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
         "scale_ups",
         "scale_downs",
         "makespan",
+        "shed",
+        "expired",
+        "retries",
     ]);
     for (point, report) in rows {
         let f = &report.fleet;
@@ -986,6 +1024,9 @@ fn fleet_resilience_table(rows: &[(FleetSweepPoint, ServeReport)]) -> CsvTable {
             f.faults.scale_ups.to_string(),
             f.faults.scale_downs.to_string(),
             f.makespan.to_string(),
+            f.faults.shed.to_string(),
+            f.faults.expired.to_string(),
+            f.faults.retries.to_string(),
         ]);
     }
     t
@@ -1208,6 +1249,65 @@ mod tests {
             2,
             "one fleet size x one policy"
         );
+    }
+
+    #[test]
+    fn overload_specs_flow_through_every_session_kind() {
+        let s = session();
+        // serve: an admission cap of 1 under burst traffic sheds
+        // deterministically while the reference timeline never moves.
+        let mut a = MemorySink::new();
+        let mut b = MemorySink::new();
+        s.run(
+            &RunSpec::parse("serve:requests=24:seed=3:traffic=burst").unwrap(),
+            &mut SinkSet::new().with(&mut a),
+        )
+        .unwrap();
+        let out = s
+            .run(
+                &RunSpec::parse("serve:requests=24:seed=3:traffic=burst:admit=1").unwrap(),
+                &mut SinkSet::new().with(&mut b),
+            )
+            .unwrap();
+        assert_eq!(a.csv("serve"), b.csv("serve"), "reference timeline is overload-invariant");
+        let report = out.serve().unwrap();
+        assert!(report.fleet.faults.shed > 0, "cap 1 under a burst must shed");
+        assert!(report.fleet.faults.retries > 0, "shedding implies backoff retries");
+        assert!(b.lines.iter().any(|l| l.contains("overload control")));
+        // The summary table carries the new accounting columns.
+        let summary = b.csv("serve_summary").unwrap();
+        assert!(summary.lines().next().unwrap().contains("shed,expired,retries,goodput"));
+
+        // fleet: overload control earns the resilience table even
+        // without a fault plan, with the counters appended last.
+        let mut m = MemorySink::new();
+        s.run(
+            &RunSpec::parse("fleet:requests=16:seed=5:sizes=1:placement=rr:traffic=burst:admit=1")
+                .unwrap(),
+            &mut SinkSet::new().with(&mut m),
+        )
+        .unwrap();
+        let res = m.csv("fleet_resilience").unwrap();
+        assert!(
+            res.lines().next().unwrap().ends_with("makespan,shed,expired,retries"),
+            "{res}"
+        );
+        let row: Vec<&str> = res.lines().nth(1).unwrap().split(',').collect();
+        let shed: u32 = row[11].parse().unwrap();
+        assert!(shed > 0, "{res}");
+
+        // dse-full: the resilience axis rides overload control alone
+        // while dse_fleet stays byte-stable.
+        let spec = RunSpec::parse(
+            "dse-full:cores=2:macros=2:nin=2:bands=32:buffers=65536:tasks=32\
+             :fleets=1:placement=rr:requests=16:traffic=burst:admit=1",
+        )
+        .unwrap();
+        let mut m = MemorySink::new();
+        let out = s.run(&spec, &mut SinkSet::new().with(&mut m)).unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert!(out.tables.contains(&"dse_resilience".to_string()), "{:?}", out.tables);
+        assert!(m.csv("dse_fleet").is_some());
     }
 
     #[test]

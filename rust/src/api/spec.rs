@@ -30,26 +30,31 @@
 //! run[:workload=ffn|e2e|square|mlp][:strategy=S][:trace=FILE][:numerics=true][:artifacts=DIR]
 //! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true]
 //! serve[:requests=N][:seed=S][:gap=CYC][:traffic=uniform|poisson|burst][:jobs=J]
-//!      [:placement=P][:faults=PLAN]
+//!      [:placement=P][:faults=PLAN][:admit=CAP][:deadline=CYC]
 //!      [:autoscale=true:slo=CYC][:surrogate=exact|eqs][:chips=C][:fleet=SPEC]
 //! fleet[:requests=N][:seed=S][:gap=CYC][:traffic=uniform|poisson|burst][:jobs=J]
-//!      [:placement=P,..|all][:faults=PLAN][:sizes=1,2,4][:fleet=SPEC]
+//!      [:placement=P,..|all][:faults=PLAN][:admit=CAP][:deadline=CYC]
+//!      [:sizes=1,2,4][:fleet=SPEC]
 //! dse[:band=B][:sim=true][:tasks=N][:jobs=N][:top=K]
 //! dse-full[:cores=L][:macros=L][:nin=L][:bands=L][:buffers=L][:tasks=N][:s=W]
 //!         [:style=looped|unrolled][:search=exhaustive|pruned][:jobs=N][:top=K]
-//!         [:fleets=1,2,4][:placement=P,..|all][:faults=PLAN][:requests=N][:seed=S][:gap=CYC]
-//!         [:traffic=uniform|poisson|burst]
+//!         [:fleets=1,2,4][:placement=P,..|all][:faults=PLAN][:admit=CAP][:deadline=CYC]
+//!         [:requests=N][:seed=S][:gap=CYC][:traffic=uniform|poisson|burst]
 //! adapt[:maxn=N]
 //! ```
 //!
 //! `faults=PLAN` is the [`FaultPlan`] grammar
-//! (`fail|drain|join@CYCLE@CHIP` and `mtbf@MEAN@SEED`, comma-separated —
-//! deliberately `:`-free so it embeds here); `autoscale=true` attaches
-//! the SLO-driven autoscaler and requires `slo=CYCLES` (the p99 latency
-//! target), and vice versa.
+//! (`fail|drain|join|restore@CYCLE@CHIP`, `throttle@CYCLE@CHIP@PCT` and
+//! `mtbf@MEAN@SEED`, comma-separated — deliberately `:`-free so it
+//! embeds here); `autoscale=true` attaches the SLO-driven autoscaler
+//! and requires `slo=CYCLES` (the p99 latency target), and vice versa.
+//! `admit=CAP` caps each chip's queue (excess arrivals are shed and
+//! retried with deterministic backoff) and `deadline=CYC` expires
+//! requests that cannot start service within `CYC` cycles of arrival
+//! (ISSUE 9); both reject 0.
 
 use crate::arch::ArchConfig;
-use crate::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
+use crate::fleet::{FaultPlan, FleetConfig, OverloadConfig, PlacementPolicy};
 use crate::model::dse::SearchMode;
 use crate::sched::{CodegenStyle, Strategy};
 use crate::serve::{SurrogateMode, TrafficShape};
@@ -209,6 +214,14 @@ pub struct ServeSpec {
     /// Fault schedule the policy timeline serves under (empty = the
     /// byte-stable fault-free fast path).
     pub faults: FaultPlan,
+    /// Per-chip admission cap (`admit=`): arrivals beyond this many
+    /// queued-or-running requests are shed and retried with backoff
+    /// (ISSUE 9).  `None` = unbounded queues.
+    pub admit: Option<u32>,
+    /// Per-request queue deadline in cycles (`deadline=`): a request
+    /// that cannot start service within this many cycles of arrival
+    /// expires (ISSUE 9).  `None` = no deadlines.
+    pub deadline: Option<u64>,
     /// Attach the SLO-driven autoscaler; requires `slo`.
     pub autoscale: bool,
     /// p99 latency target in cycles for the autoscaler; requires
@@ -237,6 +250,8 @@ impl Default for ServeSpec {
             jobs: None,
             placement: PlacementPolicy::RoundRobin,
             faults: FaultPlan::none(),
+            admit: None,
+            deadline: None,
             autoscale: false,
             slo: None,
             surrogate: SurrogateMode::Exact,
@@ -251,6 +266,14 @@ impl ServeSpec {
     /// session architecture — the `base` preset of a fleet spec).
     pub fn fleet_config(&self, base: &ArchConfig) -> Result<FleetConfig, SpecError> {
         resolve_fleet(self.fleet.as_deref(), self.chips, base)
+    }
+
+    /// The overload-control policy of this spec (`admit`/`deadline`).
+    pub fn overload(&self) -> OverloadConfig {
+        OverloadConfig {
+            queue_cap: self.admit,
+            deadline: self.deadline,
+        }
     }
 }
 
@@ -268,6 +291,11 @@ pub struct FleetSweepSpec {
     /// Fault schedule every axis point serves under (events naming
     /// chips beyond a point's fleet size are inert).
     pub faults: FaultPlan,
+    /// Per-chip admission cap every axis point serves under (ISSUE 9).
+    pub admit: Option<u32>,
+    /// Per-request queue deadline every axis point serves under
+    /// (ISSUE 9).
+    pub deadline: Option<u64>,
     /// Homogeneous fleet sizes.  Ignored — and not displayed — when
     /// `fleet` is set (see [`ServeSpec::chips`] for the rationale);
     /// must be non-empty otherwise ([`FleetSweepSpec::fleets`] rejects
@@ -287,6 +315,8 @@ impl Default for FleetSweepSpec {
             jobs: None,
             placements: PlacementPolicy::ALL.to_vec(),
             faults: FaultPlan::none(),
+            admit: None,
+            deadline: None,
             sizes: vec![1, 2, 4],
             fleet: None,
         }
@@ -294,6 +324,14 @@ impl Default for FleetSweepSpec {
 }
 
 impl FleetSweepSpec {
+    /// The overload-control policy of this spec (`admit`/`deadline`).
+    pub fn overload(&self) -> OverloadConfig {
+        OverloadConfig {
+            queue_cap: self.admit,
+            deadline: self.deadline,
+        }
+    }
+
     /// The fleets of the axis, resolved against `base`.  Rejects an
     /// empty size list (a typed-constructed spec could otherwise reach
     /// the session with zero fleets).
@@ -370,6 +408,10 @@ pub struct DseFullSpec {
     /// non-empty plan, the axis is additionally served under faults and
     /// reported as `dse_resilience.csv`.
     pub faults: FaultPlan,
+    /// Per-chip admission cap of the resilience sweep (ISSUE 9).
+    pub admit: Option<u32>,
+    /// Per-request queue deadline of the resilience sweep (ISSUE 9).
+    pub deadline: Option<u64>,
     /// Synthetic-traffic knobs for the fleet axis.
     pub requests: u32,
     pub seed: u64,
@@ -395,10 +437,23 @@ impl Default for DseFullSpec {
             fleets: Vec::new(),
             placements: PlacementPolicy::ALL.to_vec(),
             faults: FaultPlan::none(),
+            admit: None,
+            deadline: None,
             requests: 128,
             seed: 7,
             mean_gap: 1024,
             traffic: TrafficShape::Uniform,
+        }
+    }
+}
+
+impl DseFullSpec {
+    /// The overload-control policy of the resilience sweep
+    /// (`admit`/`deadline`).
+    pub fn overload(&self) -> OverloadConfig {
+        OverloadConfig {
+            queue_cap: self.admit,
+            deadline: self.deadline,
         }
     }
 }
@@ -505,6 +560,22 @@ fn p_faults(v: &str) -> Result<FaultPlan, SpecError> {
     FaultPlan::parse(v).map_err(|reason| bad("faults", v, reason))
 }
 
+fn p_admit(v: &str) -> Result<u32, SpecError> {
+    let cap = p_u32("admit", v)?;
+    if cap == 0 {
+        return Err(bad("admit", v, "admission cap must be >= 1 (omit for unbounded queues)"));
+    }
+    Ok(cap)
+}
+
+fn p_deadline(v: &str) -> Result<u64, SpecError> {
+    let deadline = p_u64("deadline", v)?;
+    if deadline == 0 {
+        return Err(bad("deadline", v, "queue deadline must be >= 1 cycle (omit for none)"));
+    }
+    Ok(deadline)
+}
+
 fn p_slo(v: &str) -> Result<u64, SpecError> {
     let slo = p_u64("slo", v)?;
     if slo == 0 {
@@ -596,14 +667,17 @@ impl RunSpec {
             "run" => "workload, strategy, trace, numerics, artifacts",
             "simulate" => "strategy, tasks, macros, nin, band, s, oplog",
             "serve" => {
-                "requests, seed, gap, traffic, jobs, placement, faults, autoscale, slo, \
-                 surrogate, chips, fleet"
+                "requests, seed, gap, traffic, jobs, placement, faults, admit, deadline, \
+                 autoscale, slo, surrogate, chips, fleet"
             }
-            "fleet" => "requests, seed, gap, traffic, jobs, placement, faults, sizes, fleet",
+            "fleet" => {
+                "requests, seed, gap, traffic, jobs, placement, faults, admit, deadline, \
+                 sizes, fleet"
+            }
             "dse" => "band, sim, tasks, jobs, top",
             "dse-full" => {
                 "cores, macros, nin, bands, buffers, tasks, s, style, search, jobs, top, \
-                 fleets, placement, faults, requests, seed, gap, traffic"
+                 fleets, placement, faults, admit, deadline, requests, seed, gap, traffic"
             }
             "adapt" => "maxn",
             _ => "",
@@ -726,6 +800,8 @@ impl RunSpec {
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "placement" => s.placement = p_placement(v)?,
                 "faults" => s.faults = p_faults(v)?,
+                "admit" => s.admit = Some(p_admit(v)?),
+                "deadline" => s.deadline = Some(p_deadline(v)?),
                 "autoscale" => s.autoscale = p_bool("autoscale", v)?,
                 "slo" => s.slo = Some(p_slo(v)?),
                 "surrogate" => {
@@ -775,6 +851,8 @@ impl RunSpec {
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 "placement" => s.placements = p_placements(v)?,
                 "faults" => s.faults = p_faults(v)?,
+                "admit" => s.admit = Some(p_admit(v)?),
+                "deadline" => s.deadline = Some(p_deadline(v)?),
                 "sizes" => {
                     s.sizes = p_list::<u64>("sizes", v)?.into_iter().map(|n| n as usize).collect();
                     sizes_set = true;
@@ -833,6 +911,8 @@ impl RunSpec {
                 }
                 "placement" => s.placements = p_placements(v)?,
                 "faults" => s.faults = p_faults(v)?,
+                "admit" => s.admit = Some(p_admit(v)?),
+                "deadline" => s.deadline = Some(p_deadline(v)?),
                 "requests" => s.requests = p_u32("requests", v)?,
                 "seed" => s.seed = p_u64("seed", v)?,
                 "gap" => s.mean_gap = p_u64("gap", v)?,
@@ -944,6 +1024,8 @@ impl fmt::Display for RunSpec {
                 if !s.faults.is_empty() {
                     e.kv("faults", &s.faults)?;
                 }
+                e.opt("admit", &s.admit)?;
+                e.opt("deadline", &s.deadline)?;
                 e.flag("autoscale", s.autoscale)?;
                 e.opt("slo", &s.slo)?;
                 if s.surrogate != d.surrogate {
@@ -978,6 +1060,8 @@ impl fmt::Display for RunSpec {
                 if !s.faults.is_empty() {
                     e.kv("faults", &s.faults)?;
                 }
+                e.opt("admit", &s.admit)?;
+                e.opt("deadline", &s.deadline)?;
                 if s.sizes != d.sizes && s.fleet.is_none() {
                     e.kv("sizes", join(&s.sizes))?;
                 }
@@ -1034,6 +1118,8 @@ impl fmt::Display for RunSpec {
                 if !s.faults.is_empty() {
                     e.kv("faults", &s.faults)?;
                 }
+                e.opt("admit", &s.admit)?;
+                e.opt("deadline", &s.deadline)?;
                 if s.requests != d.requests {
                     e.kv("requests", s.requests)?;
                 }
@@ -1231,6 +1317,66 @@ mod tests {
         assert!(err.to_string().contains("'64'"), "{err}");
         // Unique lists still pass.
         assert!(RunSpec::parse("dse-full:bands=32,64").is_ok());
+    }
+
+    #[test]
+    fn overload_keys_roundtrip_on_every_fault_capable_kind() {
+        // serve: admit/deadline sit between faults and autoscale in the
+        // canonical order, and compose with a throttle plan.
+        let s = roundtrip("serve:deadline=4096:admit=2:faults=throttle@100@0@50:chips=2");
+        let RunSpec::Serve(s) = s else { panic!() };
+        assert_eq!(s.admit, Some(2));
+        assert_eq!(s.deadline, Some(4096));
+        assert_eq!(s.overload().queue_cap, Some(2));
+        assert_eq!(s.overload().deadline, Some(4096));
+        assert!(!s.overload().is_off());
+        assert_eq!(
+            RunSpec::Serve(s).to_string(),
+            "serve:faults=throttle@100@0@50:admit=2:deadline=4096:chips=2"
+        );
+        // Omitted keys leave overload control off (the byte-stable path).
+        let RunSpec::Serve(s) = RunSpec::parse("serve").unwrap() else { panic!() };
+        assert!(s.overload().is_off());
+        // fleet and dse-full take the same keys.
+        let s = roundtrip("fleet:admit=4:sizes=1,2");
+        let RunSpec::FleetSweep(s) = s else { panic!() };
+        assert_eq!(s.overload().queue_cap, Some(4));
+        let s = roundtrip("dse-full:cores=2:fleets=1,2:deadline=100000");
+        let RunSpec::DseFull(s) = s else { panic!() };
+        assert_eq!(s.overload().deadline, Some(100_000));
+        // dse does not.
+        assert!(RunSpec::parse("dse:admit=2").is_err());
+        assert!(RunSpec::parse("dse:deadline=100").is_err());
+    }
+
+    #[test]
+    fn degenerate_overload_values_are_rejected_naming_the_key() {
+        // deadline=0 / admit=0 name the offending key on every kind
+        // that takes them (ISSUE 9 satellite).
+        for kind in ["serve", "fleet", "dse-full"] {
+            let err = RunSpec::parse(&format!("{kind}:deadline=0")).unwrap_err();
+            assert!(
+                err.to_string().contains("deadline") && err.to_string().contains(">= 1"),
+                "{kind}: {err}"
+            );
+            let err = RunSpec::parse(&format!("{kind}:admit=0")).unwrap_err();
+            assert!(
+                err.to_string().contains("admit") && err.to_string().contains(">= 1"),
+                "{kind}: {err}"
+            );
+        }
+        // Degenerate throttle percentages surface through faults= with
+        // the offending token named.
+        let err = RunSpec::parse("serve:faults=throttle@100@1@0").unwrap_err();
+        assert!(
+            err.to_string().contains("throttle@100@1@0") && err.to_string().contains("1-99"),
+            "{err}"
+        );
+        let err = RunSpec::parse("fleet:faults=throttle@100@1@100").unwrap_err();
+        assert!(err.to_string().contains("1-99"), "{err}");
+        // Zero-mean MTBF names its token too.
+        let err = RunSpec::parse("serve:faults=mtbf@0@9").unwrap_err();
+        assert!(err.to_string().contains("mtbf@0@9"), "{err}");
     }
 
     #[test]

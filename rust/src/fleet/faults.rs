@@ -14,21 +14,27 @@
 //!
 //! ```text
 //! faults = token ("," token)*
-//! token  = ("fail"|"drain"|"join") "@" CYCLE "@" CHIP
+//! token  = ("fail"|"drain"|"join"|"restore") "@" CYCLE "@" CHIP
+//!        |  "throttle" "@" CYCLE "@" CHIP "@" PCT
 //!        |  "mtbf" "@" MEAN_CYCLES "@" SEED
 //! ```
 //!
 //! `fail@C@N` kills chip `N` at cycle `C` (its unfinished queue is
 //! redispatched and charged weight re-writes), `drain@C@N` stops chip
 //! `N` accepting new requests (its queue completes), `join@C@N`
-//! (re)activates chip `N` after a cold weight load.  `mtbf@M@S`
-//! additionally generates a seeded fail/repair schedule with mean time
-//! between failures `M` cycles (uniform in `[1, 2M]`, mean `M`) and
-//! repair times with mean `M/16` per chip, up to the traffic horizon.
-//! Events naming chips outside the fleet are inert — one plan can ride a
-//! fleet-size axis (`gpp-pim fleet`) where small points lack the chip.
+//! (re)activates chip `N` after a cold weight load.  `throttle@C@N@P`
+//! (ISSUE 9) caps chip `N`'s effective off-chip bandwidth at `P`% of
+//! nominal from cycle `C` (`P` in 1–99 — the paper's scarce resource
+//! degrading, not vanishing); requests placed during the epoch are
+//! priced under the throttled write envelope.  `restore@C@N` lifts the
+//! cap.  `mtbf@M@S` additionally generates a seeded fail/repair
+//! schedule with mean time between failures `M` cycles (uniform in
+//! `[1, 2M]`, mean `M`) and repair times with mean `M/16` per chip, up
+//! to the traffic horizon.  Events naming chips outside the fleet are
+//! inert — one plan can ride a fleet-size axis (`gpp-pim fleet`) where
+//! small points lack the chip.
 //!
-//! Parsing canonicalizes: events sort by `(cycle, chip, kind)` and
+//! Parsing canonicalizes: events sort by `(cycle, chip, kind, pct)` and
 //! dedup, so `parse(display(p)) == p` — the round-trip contract every
 //! `RunSpec` key obeys.
 
@@ -47,6 +53,12 @@ pub enum FaultKind {
     /// (Re)activation: the chip accepts requests from this cycle but
     /// serves only after a cold full-chip weight load.
     Join,
+    /// Bandwidth degradation: the chip's effective off-chip bandwidth is
+    /// capped at the event's `pct` percent of nominal.  The chip stays
+    /// up — only its weight-write envelope shrinks.
+    Throttle,
+    /// Lift a throttle: effective bandwidth returns to 100%.
+    Restore,
 }
 
 impl FaultKind {
@@ -56,6 +68,8 @@ impl FaultKind {
             FaultKind::Fail => "fail",
             FaultKind::Drain => "drain",
             FaultKind::Join => "join",
+            FaultKind::Throttle => "throttle",
+            FaultKind::Restore => "restore",
         }
     }
 
@@ -64,6 +78,8 @@ impl FaultKind {
             "fail" => Some(FaultKind::Fail),
             "drain" => Some(FaultKind::Drain),
             "join" => Some(FaultKind::Join),
+            "throttle" => Some(FaultKind::Throttle),
+            "restore" => Some(FaultKind::Restore),
             _ => None,
         }
     }
@@ -80,11 +96,32 @@ pub struct FaultEvent {
     pub chip: usize,
     /// What happens.
     pub kind: FaultKind,
+    /// Effective-bandwidth percentage (1–99) for [`FaultKind::Throttle`]
+    /// events; 0 for every other kind.
+    pub pct: u8,
+}
+
+impl FaultEvent {
+    /// A non-throttle membership event (`pct` is 0).
+    pub fn membership(cycle: u64, chip: usize, kind: FaultKind) -> Self {
+        debug_assert!(kind != FaultKind::Throttle);
+        Self {
+            cycle,
+            chip,
+            kind,
+            pct: 0,
+        }
+    }
 }
 
 impl fmt::Display for FaultEvent {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}@{}@{}", self.kind.name(), self.cycle, self.chip)
+        match self.kind {
+            FaultKind::Throttle => {
+                write!(f, "throttle@{}@{}@{}", self.cycle, self.chip, self.pct)
+            }
+            kind => write!(f, "{}@{}@{}", kind.name(), self.cycle, self.chip),
+        }
     }
 }
 
@@ -123,7 +160,11 @@ impl FaultPlan {
     /// event order so the `Display` round-trip is exact.
     pub fn parse(s: &str) -> Result<Self, String> {
         if s.trim().is_empty() {
-            return Err("empty fault plan (expected fail|drain|join@CYCLE@CHIP or mtbf@MEAN@SEED)".into());
+            return Err(
+                "empty fault plan (expected fail|drain|join|restore@CYCLE@CHIP, \
+                 throttle@CYCLE@CHIP@PCT or mtbf@MEAN@SEED)"
+                    .into(),
+            );
         }
         let mut events = Vec::new();
         let mut mtbf = None;
@@ -147,16 +188,40 @@ impl FaultPlan {
                         return Err(format!("duplicate mtbf clause '{tok}'"));
                     }
                 }
+                "throttle" => {
+                    if parts.len() != 4 {
+                        return Err(format!("expected throttle@CYCLE@CHIP@PCT, got '{tok}'"));
+                    }
+                    let cycle = two("cycle", parts[1])?;
+                    let chip = two("chip index", parts[2])? as usize;
+                    let pct = two("bandwidth percentage", parts[3])?;
+                    if !(1..=99).contains(&pct) {
+                        return Err(format!(
+                            "throttle percentage must be 1-99 (got {pct} in '{tok}'); \
+                             use restore@CYCLE@CHIP for full bandwidth and fail@CYCLE@CHIP \
+                             for a dead link"
+                        ));
+                    }
+                    events.push(FaultEvent {
+                        cycle,
+                        chip,
+                        kind: FaultKind::Throttle,
+                        pct: pct as u8,
+                    });
+                }
                 kind => {
                     let kind = FaultKind::from_name(kind).ok_or_else(|| {
-                        format!("unknown fault kind '{kind}' in '{tok}' (expected fail|drain|join|mtbf)")
+                        format!(
+                            "unknown fault kind '{kind}' in '{tok}' \
+                             (expected fail|drain|join|restore|throttle|mtbf)"
+                        )
                     })?;
                     if parts.len() != 3 {
                         return Err(format!("expected {}@CYCLE@CHIP, got '{tok}'", kind.name()));
                     }
                     let cycle = two("cycle", parts[1])?;
                     let chip = two("chip index", parts[2])? as usize;
-                    events.push(FaultEvent { cycle, chip, kind });
+                    events.push(FaultEvent::membership(cycle, chip, kind));
                 }
             }
         }
@@ -186,20 +251,12 @@ impl FaultPlan {
                     if t > horizon {
                         break;
                     }
-                    out.push(FaultEvent {
-                        cycle: t,
-                        chip,
-                        kind: FaultKind::Fail,
-                    });
+                    out.push(FaultEvent::membership(t, chip, FaultKind::Fail));
                     t = t.saturating_add(1 + rng.next_below(repair_span));
                     if t > horizon {
                         break;
                     }
-                    out.push(FaultEvent {
-                        cycle: t,
-                        chip,
-                        kind: FaultKind::Join,
-                    });
+                    out.push(FaultEvent::membership(t, chip, FaultKind::Join));
                 }
             }
         }
@@ -269,6 +326,72 @@ impl AutoscaleConfig {
     }
 }
 
+/// Overload control for the fleet timeline (ISSUE 9): per-chip
+/// admission caps with load shedding, per-request queue deadlines, and
+/// deterministic bounded exponential backoff with capped retries for
+/// shed or stranded requests before they count against goodput.
+/// `Default` disables everything — the byte-stable legacy path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct OverloadConfig {
+    /// Admission cap: a request whose chosen chip already holds this
+    /// many queued-or-running requests is shed at admission (then
+    /// retried with backoff) instead of enqueued.  `None` = unbounded
+    /// queues.
+    pub queue_cap: Option<u32>,
+    /// Per-request deadline in cycles after arrival: a request that
+    /// cannot *start* service by `arrival + deadline` expires in queue.
+    /// `None` = no deadlines.
+    pub deadline: Option<u64>,
+}
+
+impl OverloadConfig {
+    /// Retry attempts a shed or stranded request gets before it counts
+    /// as shed (admission) or dropped (outage).
+    pub const MAX_RETRIES: u32 = 3;
+    /// First-retry backoff wait in cycles; attempt `k` (1-based) waits
+    /// `BACKOFF_BASE << (k-1)`, capped at [`Self::BACKOFF_CAP`].
+    pub const BACKOFF_BASE: u64 = 256;
+    /// Upper bound on a single backoff wait.
+    pub const BACKOFF_CAP: u64 = 16_384;
+
+    /// Admission-cap-only control.
+    pub fn with_queue_cap(cap: u32) -> Self {
+        Self {
+            queue_cap: Some(cap),
+            deadline: None,
+        }
+    }
+
+    /// Deadline-only control.
+    pub fn with_deadline(deadline: u64) -> Self {
+        Self {
+            queue_cap: None,
+            deadline: Some(deadline),
+        }
+    }
+
+    /// True when no overload control is configured — the timeline takes
+    /// the legacy (pre-ISSUE-9) paths bit-for-bit.
+    pub fn is_off(&self) -> bool {
+        self.queue_cap.is_none() && self.deadline.is_none()
+    }
+
+    /// Deterministic bounded exponential backoff: the wait before retry
+    /// `attempt` (1-based).  A pure function of the attempt count, so
+    /// retry timing is seed- and worker-count-stable.
+    pub fn backoff(attempt: u32) -> u64 {
+        // Saturate before the shift can push the base's bit out of the
+        // word (checked_shl only rejects shifts >= 64, not value
+        // overflow); any such wait already exceeds the cap anyway.
+        let shift = attempt.saturating_sub(1);
+        if shift >= Self::BACKOFF_BASE.leading_zeros() {
+            Self::BACKOFF_CAP
+        } else {
+            (Self::BACKOFF_BASE << shift).min(Self::BACKOFF_CAP)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +411,22 @@ mod tests {
     }
 
     #[test]
+    fn throttle_tokens_roundtrip_canonically() {
+        let p = FaultPlan::parse("restore@900@1,throttle@100@1@25,throttle@100@1@25").unwrap();
+        assert_eq!(p.events.len(), 2, "duplicate throttle dedups");
+        assert_eq!(p.events[0].kind, FaultKind::Throttle);
+        assert_eq!(p.events[0].pct, 25);
+        assert_eq!(p.events[1].kind, FaultKind::Restore);
+        assert_eq!(p.events[1].pct, 0);
+        assert_eq!(p.to_string(), "throttle@100@1@25,restore@900@1");
+        assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+        // Same cycle/chip, different pct: both kept, ordered by pct.
+        let q = FaultPlan::parse("throttle@5@0@80,throttle@5@0@10").unwrap();
+        assert_eq!(q.events[0].pct, 10);
+        assert_eq!(q.events[1].pct, 80);
+    }
+
+    #[test]
     fn parse_rejects_garbage() {
         for bad in [
             "",
@@ -301,6 +440,11 @@ mod tests {
             "mtbf@100",
             "mtbf@100@1,mtbf@200@2",
             "fail@100@1,,join@200@1",
+            "throttle@100@1",
+            "throttle@100@1@0",
+            "throttle@100@1@100",
+            "throttle@100@1@x",
+            "restore@100@1@50",
         ] {
             let e = FaultPlan::parse(bad);
             assert!(e.is_err(), "'{bad}' must be rejected");
@@ -308,6 +452,15 @@ mod tests {
         // Errors name the offending token.
         let msg = FaultPlan::parse("fail@100@1,join@oops@2").unwrap_err();
         assert!(msg.contains("join@oops@2"), "{msg}");
+        // Degenerate throttle percentages name the offender and the
+        // equivalent valid spellings.
+        let msg = FaultPlan::parse("throttle@100@1@0").unwrap_err();
+        assert!(msg.contains("throttle@100@1@0") && msg.contains("1-99"), "{msg}");
+        let msg = FaultPlan::parse("throttle@100@1@100").unwrap_err();
+        assert!(msg.contains("restore@CYCLE@CHIP"), "{msg}");
+        // The zero-mean MTBF rejection names its token too.
+        let msg = FaultPlan::parse("mtbf@0@7").unwrap_err();
+        assert!(msg.contains("mtbf@0@7") && msg.contains(">= 1"), "{msg}");
     }
 
     #[test]
@@ -343,5 +496,23 @@ mod tests {
         assert_eq!(a.slo_p99, 10_000);
         assert_eq!(a.min_chips, 1);
         assert!(a.window > 0 && a.cooldown > 0);
+    }
+
+    #[test]
+    fn overload_defaults_off_and_backoff_is_bounded_exponential() {
+        assert!(OverloadConfig::default().is_off());
+        assert!(!OverloadConfig::with_queue_cap(4).is_off());
+        assert!(!OverloadConfig::with_deadline(10_000).is_off());
+        // Doubling sequence from the base, capped: a pure function of
+        // the attempt index (seed- and jobs-stable by construction).
+        assert_eq!(OverloadConfig::backoff(1), OverloadConfig::BACKOFF_BASE);
+        assert_eq!(OverloadConfig::backoff(2), OverloadConfig::BACKOFF_BASE * 2);
+        assert_eq!(OverloadConfig::backoff(3), OverloadConfig::BACKOFF_BASE * 4);
+        assert_eq!(OverloadConfig::backoff(200), OverloadConfig::BACKOFF_CAP);
+        let waits: Vec<u64> = (1..=OverloadConfig::MAX_RETRIES)
+            .map(OverloadConfig::backoff)
+            .collect();
+        assert!(waits.windows(2).all(|w| w[0] <= w[1]), "monotone: {waits:?}");
+        assert!(waits.iter().all(|&w| w <= OverloadConfig::BACKOFF_CAP));
     }
 }

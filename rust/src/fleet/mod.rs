@@ -24,6 +24,10 @@
 //!   events, redispatch of a failed chip's queue with weight re-writes
 //!   charged through the paper's write model, cold weight loads for
 //!   joining chips, and an SLO-driven [`AutoscaleConfig`] autoscaler.
+//!   ISSUE 9 adds per-chip bandwidth `throttle`/`restore` epochs that
+//!   reprice service under the degraded write envelope, plus
+//!   [`OverloadConfig`] overload control: admission caps with load
+//!   shedding, queue deadlines, and deterministic backoff retries.
 //!
 //! Entry points describe fleets through [`crate::api`]: a `RunSpec`'s
 //! `fleet=SPEC`/`chips=N` keys resolve to a [`FleetConfig`] against the
@@ -41,7 +45,7 @@ mod placement;
 mod timeline;
 
 pub use config::{FleetConfig, FleetError};
-pub use faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan, MtbfSpec};
+pub use faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan, MtbfSpec, OverloadConfig};
 pub use placement::{
     ClassAffinity, DispatchContext, FleetState, LeastLoaded, Placement, PlacementPolicy,
     RoundRobin, ShortestExpectedDelay,

@@ -32,12 +32,18 @@
 //! - [`dispatch_fifo_faulty`] — all three actor kinds: failed chips
 //!   lose their queue (survivors are redispatched and charged weight
 //!   re-writes through [`FaultCharges`]), draining chips finish then
-//!   stop accepting, and joining chips pay a cold weight load before
-//!   serving.  With the empty plan and no autoscaler it reproduces
+//!   stop accepting, joining chips pay a cold weight load before
+//!   serving, and throttled chips (ISSUE 9) price new placements under
+//!   a reduced off-chip bandwidth envelope.  Overload control
+//!   ([`OverloadConfig`]) adds per-chip admission caps with load
+//!   shedding, per-request queue deadlines, and deterministic bounded
+//!   exponential backoff retries for shed/stranded requests.  With the
+//!   empty plan, no autoscaler and overload control off it reproduces
 //!   [`dispatch_fifo`] bit-for-bit (asserted in the unit tests,
-//!   `tests/surrogate.rs` and `benches/fleet_perf.rs`).
+//!   `tests/surrogate.rs`, `tests/overload.rs` and
+//!   `benches/fleet_perf.rs`).
 
-use super::faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan};
+use super::faults::{AutoscaleConfig, FaultEvent, FaultKind, FaultPlan, OverloadConfig};
 use super::placement::{DispatchContext, FleetState, Placement};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -98,10 +104,19 @@ pub struct PlacedRequest {
     /// True when the request was redispatched off a failed chip at
     /// least once.
     pub migrated: bool,
-    /// True when no active chip ever became available: the request is
-    /// explicitly dropped and counted, never silently lost.  Dropped
-    /// requests have no meaningful chip/start/service.
+    /// True when the request was never served (shed, expired, or
+    /// stranded): it is explicitly counted, never silently lost.
+    /// Unserved requests have no meaningful chip/start/service.
     pub dropped: bool,
+    /// True when admission control shed the request: its retry budget
+    /// ran out against full queues ([`OverloadConfig::queue_cap`]).
+    pub shed: bool,
+    /// True when the request expired in queue: it could not start
+    /// service within [`OverloadConfig::deadline`] cycles of arrival.
+    pub expired: bool,
+    /// Backoff retries this request went through (shed or stranded
+    /// admissions that were re-attempted), whatever its final fate.
+    pub retries: u32,
 }
 
 /// Fault-path accounting carried next to the timeline.  The fault-free
@@ -130,6 +145,15 @@ pub struct FaultStats {
     pub scale_ups: u32,
     /// Autoscaler drain actions taken.
     pub scale_downs: u32,
+    /// Requests shed by admission control (retry budget exhausted
+    /// against full queues).  Disjoint from `dropped` and `expired`:
+    /// served + shed + expired + dropped == total requests.
+    pub shed: u32,
+    /// Requests that expired in queue past their deadline.
+    pub expired: u32,
+    /// Total backoff retry attempts scheduled across all requests
+    /// (including requests eventually served).
+    pub retries: u64,
 }
 
 impl FaultStats {
@@ -166,21 +190,31 @@ pub struct FleetTimeline {
 /// Weight-traffic pricing the fault path charges through the write
 /// model (see [`crate::model::eqs::weight_write_cycles`]).
 pub struct FaultCharges<'a> {
-    /// `(dispatch index, destination chip)` → `(weight bytes moved,
-    /// write cycles charged)` for redispatching that request's class
-    /// onto that chip.
-    pub migrate: &'a dyn Fn(usize, usize) -> (u64, u64),
-    /// `chip` → `(weight bytes, write cycles)` of the cold full-chip
-    /// weight load a joining chip pays before serving.
-    pub cold: &'a dyn Fn(usize) -> (u64, u64),
+    /// `(dispatch index, destination chip, effective bandwidth pct)` →
+    /// `(weight bytes moved, write cycles charged)` for redispatching
+    /// that request's class onto that chip.  `pct` is 100 when the
+    /// destination is unthrottled; a throttled destination prices the
+    /// re-write under its reduced envelope.
+    pub migrate: &'a dyn Fn(usize, usize, u8) -> (u64, u64),
+    /// `(chip, effective bandwidth pct)` → `(weight bytes, write
+    /// cycles)` of the cold full-chip weight load a joining chip pays
+    /// before serving.
+    pub cold: &'a dyn Fn(usize, u8) -> (u64, u64),
+    /// `(base service cycles, dispatch index, chip, effective bandwidth
+    /// pct)` → service cycles under the throttled envelope.  Only
+    /// consulted while `pct < 100` (a `throttle` epoch); the identity
+    /// function models throttling with no service-time effect.
+    pub throttled: &'a dyn Fn(u64, usize, usize, u8) -> u64,
 }
 
 impl FaultCharges<'_> {
-    /// Zero-cost charges (membership churn without weight traffic) —
-    /// for unit tests and structural experiments.
+    /// Zero-cost charges (membership churn without weight traffic,
+    /// throttling without repricing) — for unit tests and structural
+    /// experiments.
     pub const FREE: FaultCharges<'static> = FaultCharges {
-        migrate: &|_, _| (0, 0),
-        cold: &|_| (0, 0),
+        migrate: &|_, _, _| (0, 0),
+        cold: &|_, _| (0, 0),
+        throttled: &|base, _, _, _| base,
     };
 }
 
@@ -213,6 +247,9 @@ pub fn dispatch_fifo(
             service_cycles: 0,
             migrated: false,
             dropped: false,
+            shed: false,
+            expired: false,
+            retries: 0,
         };
         dispatches.len()
     ];
@@ -255,6 +292,9 @@ pub fn dispatch_fifo(
             service_cycles: service[chip],
             migrated: false,
             dropped: false,
+            shed: false,
+            expired: false,
+            retries: 0,
         };
         next += 1;
         if let Some(&n) = order.get(next) {
@@ -295,13 +335,24 @@ struct FaultRun<'a, S: Fn(usize, usize) -> u64> {
     service_on: S,
     policy: &'a mut dyn Placement,
     charges: &'a FaultCharges<'a>,
+    overload: OverloadConfig,
     heap: EventHeap,
     busy_until: Vec<u64>,
     status: Vec<ChipStatus>,
+    /// Effective off-chip bandwidth per chip, percent of nominal (100 =
+    /// unthrottled).  Set by `throttle`/`restore` events; persists
+    /// across membership churn — the link, not the chip, is degraded.
+    band_pct: Vec<u8>,
     active_since: Vec<Option<u64>>,
     avail: Vec<u64>,
     queues: Vec<VecDeque<usize>>,
     parked: Vec<Parked>,
+    /// Pending backoff retries, ordered by `(due cycle, request id)` —
+    /// the deterministic tie-break mirroring the dispatch order.
+    retry_heap: BinaryHeap<Reverse<(u64, u32, usize)>>,
+    /// Retry attempts consumed per dispatch (allocated only when
+    /// overload control is on).
+    attempts: Vec<u32>,
     placements: Vec<PlacedRequest>,
     placed: Vec<bool>,
     service: Vec<u64>,
@@ -320,15 +371,41 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
             .count()
     }
 
+    /// Consume one retry attempt for dispatch `i` at cycle `now` and
+    /// schedule the backoff re-attempt.  Returns false when the retry
+    /// budget is exhausted — the caller decides the terminal state.
+    fn try_retry(&mut self, i: usize, now: u64) -> bool {
+        if self.overload.is_off() || self.attempts[i] >= OverloadConfig::MAX_RETRIES {
+            return false;
+        }
+        self.attempts[i] += 1;
+        self.placements[i].retries = self.attempts[i];
+        self.placements[i].dropped = true;
+        self.placed[i] = false;
+        self.stats.retries += 1;
+        let due = now + OverloadConfig::backoff(self.attempts[i]);
+        self.retry_heap
+            .push(Reverse((due, self.dispatches[i].id, i)));
+        self.heap.schedule(due, ARRIVAL_SOURCE);
+        true
+    }
+
     /// Place dispatch `i` at cycle `now`.  `migrating` charges the
     /// weight re-write on the destination.  Parks the request when no
-    /// chip is active.
+    /// chip is active; under overload control it may instead be shed
+    /// (full queue), expired (deadline passed) or scheduled for a
+    /// backoff retry.
     fn place(&mut self, i: usize, now: u64, migrating: bool) {
+        let migrated = migrating || self.placements[i].migrated;
         if !self.any_active() {
-            self.parked.push(Parked {
-                idx: i,
-                migrated: migrating || self.placements[i].migrated,
-            });
+            // Stranded: under overload control, back off and retry
+            // before giving up; the legacy path (and the exhausted
+            // budget) parks until a join or final drop.
+            if !migrating && self.try_retry(i, now) {
+                self.placements[i].migrated = migrated;
+                return;
+            }
+            self.parked.push(Parked { idx: i, migrated });
             // A redispatch that found no destination is pending again —
             // it either gets placed by a later join or drops.
             self.placements[i].dropped = true;
@@ -337,7 +414,12 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
         }
         let d = &self.dispatches[i];
         for c in 0..self.chips {
-            self.service[c] = (self.service_on)(i, c);
+            let base = (self.service_on)(i, c);
+            self.service[c] = if self.band_pct[c] < 100 {
+                (self.charges.throttled)(base, i, c, self.band_pct[c])
+            } else {
+                base
+            };
         }
         let eligible: Vec<bool> = self
             .status
@@ -365,12 +447,56 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
             // the lowest-index active chip (the shared tie-break).
             chip = eligible.iter().position(|&e| e).unwrap();
         }
+        if let Some(cap) = self.overload.queue_cap {
+            if self.queues[chip].len() >= cap as usize {
+                // Admission shed: back off and retry, or count as shed
+                // once the budget is gone.  Migrating redispatches keep
+                // the legacy must-place behavior (their source chip is
+                // already dead).
+                if !migrating {
+                    if self.try_retry(i, now) {
+                        self.placements[i].migrated = migrated;
+                        return;
+                    }
+                    self.placements[i] = PlacedRequest {
+                        chip: 0,
+                        start_cycle: 0,
+                        service_cycles: 0,
+                        migrated,
+                        dropped: true,
+                        shed: true,
+                        expired: false,
+                        retries: self.attempts[i],
+                    };
+                    self.placed[i] = false;
+                    return;
+                }
+            }
+        }
         let (mig_bytes, mig_cycles) = if migrating {
-            (self.charges.migrate)(i, chip)
+            (self.charges.migrate)(i, chip, self.band_pct[chip])
         } else {
             (0, 0)
         };
         let start = self.busy_until[chip].max(now);
+        if let Some(deadline) = self.overload.deadline {
+            if start > d.arrival_cycle.saturating_add(deadline) {
+                // The queue the policy chose cannot start this request
+                // in time: it expires rather than serve dead work.
+                self.placements[i] = PlacedRequest {
+                    chip: 0,
+                    start_cycle: 0,
+                    service_cycles: 0,
+                    migrated,
+                    dropped: true,
+                    shed: false,
+                    expired: true,
+                    retries: if self.attempts.is_empty() { 0 } else { self.attempts[i] },
+                };
+                self.placed[i] = false;
+                return;
+            }
+        }
         let total = self.service[chip] + mig_cycles;
         self.busy_until[chip] = start + total;
         self.queues[chip].push_back(i);
@@ -379,8 +505,11 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
             chip,
             start_cycle: start,
             service_cycles: total,
-            migrated: migrating || self.placements[i].migrated,
+            migrated,
             dropped: false,
+            shed: false,
+            expired: false,
+            retries: if self.attempts.is_empty() { 0 } else { self.attempts[i] },
         };
         self.placed[i] = true;
         if migrating {
@@ -428,7 +557,7 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
                 if self.status[c] == ChipStatus::Active {
                     return;
                 }
-                let (bytes, cold_cycles) = (self.charges.cold)(c);
+                let (bytes, cold_cycles) = (self.charges.cold)(c, self.band_pct[c]);
                 self.busy_until[c] = self.busy_until[c].max(ev.cycle) + cold_cycles;
                 self.status[c] = ChipStatus::Active;
                 self.active_since[c] = Some(self.busy_until[c]);
@@ -439,6 +568,15 @@ impl<S: Fn(usize, usize) -> u64> FaultRun<'_, S> {
                 for p in waiting {
                     self.place(p.idx, ev.cycle, p.migrated);
                 }
+            }
+            FaultKind::Throttle => {
+                // Epoch semantics: requests placed from here on are
+                // priced under the reduced envelope; work already
+                // committed keeps its admission-time price.
+                self.band_pct[c] = ev.pct;
+            }
+            FaultKind::Restore => {
+                self.band_pct[c] = 100;
             }
         }
     }
@@ -476,12 +614,12 @@ fn p99_of(window: &[u64]) -> u64 {
 /// retirement).
 ///
 /// Events at cycle `t` apply before requests arriving at `t` are
-/// dispatched (the heap tie-break); redispatches and parked-request
-/// flushes run inline at the event cycle, FIFO order preserved, so the
-/// whole run stays a pure function of `(dispatches, plan, policy,
-/// charges)` — byte-identical across host worker counts.  With
-/// `plan.is_empty()` and no autoscaler the output equals
-/// [`dispatch_fifo`] exactly.
+/// dispatched (the heap tie-break); redispatches, backoff retries and
+/// parked-request flushes run inline at their cycle, FIFO order
+/// preserved, so the whole run stays a pure function of `(dispatches,
+/// plan, policy, overload, charges)` — byte-identical across host
+/// worker counts.  With `plan.is_empty()`, no autoscaler and overload
+/// control off the output equals [`dispatch_fifo`] exactly.
 pub fn dispatch_fifo_faulty(
     chips: usize,
     dispatches: &[Dispatch],
@@ -489,6 +627,7 @@ pub fn dispatch_fifo_faulty(
     policy: &mut dyn Placement,
     plan: &FaultPlan,
     autoscale: Option<&AutoscaleConfig>,
+    overload: OverloadConfig,
     charges: &FaultCharges<'_>,
 ) -> FleetTimeline {
     let chips = chips.max(1);
@@ -506,13 +645,21 @@ pub fn dispatch_fifo_faulty(
         service_on,
         policy,
         charges,
+        overload,
         heap: EventHeap::default(),
         busy_until: vec![0; chips],
         status: vec![ChipStatus::Active; chips],
+        band_pct: vec![100; chips],
         active_since: vec![Some(0); chips],
         avail: vec![0; chips],
         queues: vec![VecDeque::new(); chips],
         parked: Vec::new(),
+        retry_heap: BinaryHeap::new(),
+        attempts: if overload.is_off() {
+            Vec::new()
+        } else {
+            vec![0; dispatches.len()]
+        },
         placements: vec![
             PlacedRequest {
                 chip: 0,
@@ -520,6 +667,9 @@ pub fn dispatch_fifo_faulty(
                 service_cycles: 0,
                 migrated: false,
                 dropped: true,
+                shed: false,
+                expired: false,
+                retries: 0,
             };
             dispatches.len()
         ],
@@ -554,8 +704,26 @@ pub fn dispatch_fifo_faulty(
                 }
             }
             ARRIVAL_SOURCE => {
+                // Due backoff retries first — they arrived before any
+                // request dispatching at this cycle — in (due, id)
+                // order.  A retry may be re-shed and re-enter the heap
+                // with a strictly later due cycle, so this drains.
+                while let Some(&Reverse((due, _, idx))) = run.retry_heap.peek() {
+                    if due > now {
+                        break;
+                    }
+                    run.retry_heap.pop();
+                    run.place(idx, now, false);
+                }
+                // Then at most one fresh arrival (retry wake-ups pop
+                // this component with no arrival due).
+                let due_arrival = order
+                    .get(next)
+                    .is_some_and(|&i| dispatches[i].arrival_cycle == now);
+                if !due_arrival {
+                    continue;
+                }
                 let i = order[next];
-                debug_assert_eq!(dispatches[i].arrival_cycle, now);
                 run.place(i, now, false);
                 next += 1;
                 if let Some(&n) = order.get(next) {
@@ -577,11 +745,7 @@ pub fn dispatch_fifo_faulty(
                 }
                 if p99 > a.slo_p99 {
                     if let Some(c) = run.status.iter().position(|&s| s == ChipStatus::Down) {
-                        run.apply(FaultEvent {
-                            cycle: now,
-                            chip: c,
-                            kind: FaultKind::Join,
-                        });
+                        run.apply(FaultEvent::membership(now, c, FaultKind::Join));
                         run.stats.scale_ups += 1;
                         cooldown = a.cooldown;
                     }
@@ -593,11 +757,7 @@ pub fn dispatch_fifo_faulty(
                         .iter()
                         .rposition(|&s| s == ChipStatus::Active)
                         .unwrap();
-                    run.apply(FaultEvent {
-                        cycle: now,
-                        chip: c,
-                        kind: FaultKind::Drain,
-                    });
+                    run.apply(FaultEvent::membership(now, c, FaultKind::Drain));
                     run.stats.scale_downs += 1;
                     cooldown = a.cooldown;
                 }
@@ -620,6 +780,18 @@ pub fn dispatch_fifo_faulty(
     for p in &parked {
         placements[p.idx].migrated = p.migrated;
     }
+    for p in &placements {
+        stats.shed += p.shed as u32;
+        stats.expired += p.expired as u32;
+    }
+    debug_assert_eq!(
+        placements.iter().filter(|p| !p.dropped).count() as u32
+            + stats.shed
+            + stats.expired
+            + stats.dropped,
+        dispatches.len() as u32,
+        "served + shed + expired + dropped must cover the trace"
+    );
     let mut chip_busy_cycles = vec![0u64; chips];
     let mut chip_requests = vec![0u64; chips];
     let mut makespan = 0u64;
@@ -750,6 +922,7 @@ mod tests {
                 policy.instance().as_mut(),
                 &FaultPlan::none(),
                 None,
+                OverloadConfig::default(),
                 &FaultCharges::FREE,
             );
             assert_eq!(plain, faulty, "policy {}", policy.name());
@@ -765,8 +938,9 @@ mod tests {
         let d = dispatches(&[0, 0, 0, 0]);
         let plan = FaultPlan::parse("fail@50@1").unwrap();
         let charges = FaultCharges {
-            migrate: &|_, _| (1024, 10),
-            cold: &|_| (0, 0),
+            migrate: &|_, _, _| (1024, 10),
+            cold: &|_, _| (0, 0),
+            throttled: &|base, _, _, _| base,
         };
         let t = dispatch_fifo_faulty(
             2,
@@ -775,6 +949,7 @@ mod tests {
             &mut RoundRobin::new(),
             &plan,
             None,
+            OverloadConfig::default(),
             &charges,
         );
         assert!(t.placements.iter().all(|p| !p.dropped));
@@ -815,6 +990,7 @@ mod tests {
             &mut LeastLoaded,
             &plan,
             None,
+            OverloadConfig::default(),
             &FaultCharges::FREE,
         );
         assert_eq!(t.placements[1].chip, 1);
@@ -831,8 +1007,9 @@ mod tests {
         // fresh chip.
         let plan = FaultPlan::parse("fail@0@1,join@400@1").unwrap();
         let charges = FaultCharges {
-            migrate: &|_, _| (0, 0),
-            cold: &|_| (4096, 50),
+            migrate: &|_, _, _| (0, 0),
+            cold: &|_, _| (4096, 50),
+            throttled: &|base, _, _, _| base,
         };
         let t = dispatch_fifo_faulty(
             2,
@@ -841,6 +1018,7 @@ mod tests {
             &mut LeastLoaded,
             &plan,
             None,
+            OverloadConfig::default(),
             &charges,
         );
         assert_eq!(t.placements[0].chip, 0);
@@ -862,6 +1040,7 @@ mod tests {
             &mut RoundRobin::new(),
             &FaultPlan::parse("fail@10@0,fail@10@1,join@1000@0").unwrap(),
             None,
+            OverloadConfig::default(),
             &FaultCharges::FREE,
         );
         assert!(rescued.placements.iter().all(|p| !p.dropped));
@@ -876,6 +1055,7 @@ mod tests {
             &mut RoundRobin::new(),
             &FaultPlan::parse("fail@10@0,fail@10@1").unwrap(),
             None,
+            OverloadConfig::default(),
             &FaultCharges::FREE,
         );
         assert!(lost.placements.iter().all(|p| p.dropped));
@@ -896,8 +1076,9 @@ mod tests {
             cooldown: 1,
         };
         let charges = FaultCharges {
-            migrate: &|_, _| (0, 0),
-            cold: &|_| (2048, 25),
+            migrate: &|_, _, _| (0, 0),
+            cold: &|_, _| (2048, 25),
+            throttled: &|base, _, _, _| base,
         };
         let t = dispatch_fifo_faulty(
             2,
@@ -906,6 +1087,7 @@ mod tests {
             &mut LeastLoaded,
             &FaultPlan::none(),
             Some(&cfg),
+            OverloadConfig::default(),
             &charges,
         );
         assert!(t.faults.scale_ups >= 1, "SLO breach must add a chip");
@@ -919,6 +1101,7 @@ mod tests {
             &mut LeastLoaded,
             &FaultPlan::none(),
             Some(&cfg),
+            OverloadConfig::default(),
             &charges,
         );
         assert_eq!(t, t2);
@@ -942,6 +1125,7 @@ mod tests {
             &mut LeastLoaded,
             &FaultPlan::none(),
             Some(&cfg),
+            OverloadConfig::default(),
             &FaultCharges::FREE,
         );
         // Chips beyond min start down; nothing breaches, so no ups.
@@ -964,11 +1148,187 @@ mod tests {
             &mut RoundRobin::new(),
             &FaultPlan::none(),
             None,
+            OverloadConfig::default(),
             &FaultCharges::FREE,
         );
         for (i, p) in t.placements.iter().enumerate() {
             assert_eq!(p.start_cycle, i as u64 * 10, "back-to-back FIFO");
         }
         assert_eq!(t.makespan, 5120);
+    }
+
+    /// Inverse-linear repricing for tests: half the bandwidth, double
+    /// the service.
+    const SCALED: FaultCharges<'static> = FaultCharges {
+        migrate: &|_, _, _| (0, 0),
+        cold: &|_, _| (0, 0),
+        throttled: &|base, _, _, pct| base * 100 / pct as u64,
+    };
+
+    #[test]
+    fn throttle_reprices_new_placements_and_restore_lifts_it() {
+        let d = dispatches(&[0, 10, 20]);
+        let plan = FaultPlan::parse("throttle@5@0@50,restore@15@0").unwrap();
+        let t = dispatch_fifo_faulty(
+            1,
+            &d,
+            |_, _| 100,
+            &mut RoundRobin::new(),
+            &plan,
+            None,
+            OverloadConfig::default(),
+            &SCALED,
+        );
+        assert_eq!(t.placements[0].service_cycles, 100, "placed before the throttle");
+        assert_eq!(t.placements[1].service_cycles, 200, "placed inside the 50% epoch");
+        assert_eq!(t.placements[2].service_cycles, 100, "placed after the restore");
+        assert_eq!(t.makespan, 400);
+        // Throttled chips stay *available* — only their envelope shrank.
+        assert_eq!(t.faults.chip_available_cycles, vec![400]);
+        assert_eq!(t.faults.shed, 0);
+        assert_eq!(t.faults.expired, 0);
+    }
+
+    #[test]
+    fn throttle_with_identity_charges_is_inert() {
+        // A plan of pure throttle events under FREE charges cannot
+        // change the timeline: the epoch state flips but nothing prices
+        // differently, so the output equals the fault-free path.
+        let d = dispatches(&[0, 3, 9, 40]);
+        let svc = |i: usize, c: usize| 11 + (i as u64 % 2) * 3 + c as u64;
+        let plan = FaultPlan::parse("throttle@1@0@10,throttle@2@1@90,restore@20@0").unwrap();
+        for policy in PlacementPolicy::ALL {
+            let plain = dispatch_fifo(2, &d, svc, policy.instance().as_mut());
+            let throttled = dispatch_fifo_faulty(
+                2,
+                &d,
+                svc,
+                policy.instance().as_mut(),
+                &plan,
+                None,
+                OverloadConfig::default(),
+                &FaultCharges::FREE,
+            );
+            assert_eq!(plain, throttled, "policy {}", policy.name());
+        }
+    }
+
+    #[test]
+    fn admission_cap_sheds_after_bounded_retries() {
+        // One chip, cap 1, service far longer than the whole backoff
+        // ladder: ids 1 and 2 find the queue full at every attempt and
+        // must shed with exactly MAX_RETRIES retries each.
+        let d = dispatches(&[0, 1, 2]);
+        let run = || {
+            dispatch_fifo_faulty(
+                1,
+                &d,
+                |_, _| 100_000,
+                &mut RoundRobin::new(),
+                &FaultPlan::none(),
+                None,
+                OverloadConfig::with_queue_cap(1),
+                &FaultCharges::FREE,
+            )
+        };
+        let t = run();
+        assert!(!t.placements[0].dropped);
+        for i in [1, 2] {
+            assert!(t.placements[i].dropped && t.placements[i].shed, "id {i} shed");
+            assert!(!t.placements[i].expired);
+            assert_eq!(t.placements[i].retries, OverloadConfig::MAX_RETRIES);
+        }
+        assert_eq!(t.faults.shed, 2);
+        assert_eq!(t.faults.dropped, 0, "shed is not dropped");
+        assert_eq!(t.faults.retries, 2 * OverloadConfig::MAX_RETRIES as u64);
+        assert_eq!(t.chip_requests, vec![1]);
+        assert_eq!(t, run(), "identical inputs, identical timeline");
+    }
+
+    #[test]
+    fn admission_retry_lands_once_the_queue_drains() {
+        // Service short enough that the first backoff retry finds the
+        // queue empty: the request is served late, not shed.
+        let d = dispatches(&[0, 1]);
+        let t = dispatch_fifo_faulty(
+            1,
+            &d,
+            |_, _| 50,
+            &mut RoundRobin::new(),
+            &FaultPlan::none(),
+            None,
+            OverloadConfig::with_queue_cap(1),
+            &FaultCharges::FREE,
+        );
+        assert!(!t.placements[1].dropped, "retry must land");
+        assert_eq!(t.placements[1].retries, 1);
+        assert_eq!(
+            t.placements[1].start_cycle,
+            1 + OverloadConfig::backoff(1),
+            "placed at its retry cycle (queue drained by cycle 50)"
+        );
+        assert_eq!(t.faults.shed, 0);
+        assert_eq!(t.faults.retries, 1);
+    }
+
+    #[test]
+    fn deadline_expires_requests_that_cannot_start_in_time() {
+        let d = dispatches(&[0, 10]);
+        let t = dispatch_fifo_faulty(
+            1,
+            &d,
+            |_, _| 100,
+            &mut RoundRobin::new(),
+            &FaultPlan::none(),
+            None,
+            OverloadConfig::with_deadline(50),
+            &FaultCharges::FREE,
+        );
+        assert!(!t.placements[0].dropped, "starts at arrival, inside deadline");
+        assert!(t.placements[1].dropped && t.placements[1].expired);
+        assert!(!t.placements[1].shed);
+        assert_eq!(t.faults.expired, 1);
+        assert_eq!(t.faults.shed, 0);
+        assert_eq!(t.faults.dropped, 0);
+        assert_eq!(t.makespan, 100, "expired work never runs");
+    }
+
+    #[test]
+    fn stranded_requests_back_off_then_drop_or_get_rescued() {
+        // Total outage with overload control on: the request burns its
+        // retry budget against the outage, then drops.
+        let d = dispatches(&[10]);
+        let outage = dispatch_fifo_faulty(
+            1,
+            &d,
+            |_, _| 10,
+            &mut RoundRobin::new(),
+            &FaultPlan::parse("fail@0@0").unwrap(),
+            None,
+            OverloadConfig::with_queue_cap(64),
+            &FaultCharges::FREE,
+        );
+        assert!(outage.placements[0].dropped);
+        assert!(!outage.placements[0].shed && !outage.placements[0].expired);
+        assert_eq!(outage.placements[0].retries, OverloadConfig::MAX_RETRIES);
+        assert_eq!(outage.faults.dropped, 1);
+        assert_eq!(outage.faults.retries, OverloadConfig::MAX_RETRIES as u64);
+
+        // A join after the budget is spent still rescues it (parked
+        // requests flush exactly as on the legacy path).
+        let rescued = dispatch_fifo_faulty(
+            1,
+            &d,
+            |_, _| 10,
+            &mut RoundRobin::new(),
+            &FaultPlan::parse("fail@0@0,join@50000@0").unwrap(),
+            None,
+            OverloadConfig::with_queue_cap(64),
+            &FaultCharges::FREE,
+        );
+        assert!(!rescued.placements[0].dropped);
+        assert_eq!(rescued.placements[0].start_cycle, 50_000);
+        assert_eq!(rescued.placements[0].retries, OverloadConfig::MAX_RETRIES);
+        assert_eq!(rescued.faults.dropped, 0);
     }
 }

@@ -20,15 +20,17 @@
 //! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C | --fleet SPEC]
 //!               [--placement rr|least-loaded|affinity|sed] [--mean-gap G]
 //!               [--traffic uniform|poisson|burst] [--faults PLAN]
+//!               [--admit CAP] [--deadline CYCLES]
 //!               [--autoscale --slo CYCLES] [--surrogate exact|eqs] [--csv-dir D]
 //! gpp-pim fleet [--requests N] [--seed S] [--jobs J] [--sizes 1,2,4 | --fleet SPEC]
-//!               [--placement P|all] [--faults PLAN] [--mean-gap G]
-//!               [--traffic SHAPE] [--csv-dir D]
+//!               [--placement P|all] [--faults PLAN] [--admit CAP] [--deadline CYCLES]
+//!               [--mean-gap G] [--traffic SHAPE] [--csv-dir D]
 //! gpp-pim dse  [--band B] [--sim] [--jobs N] [--tasks N] [--top K]
 //! gpp-pim dse  --full [--cores L] [--macros L] [--n-in L] [--bands L] [--buffers L]
 //!              [--tasks N] [--write-speed S] [--jobs N] [--top K] [--unrolled]
 //!              [--search exhaustive|pruned] [--fleets 1,2,4] [--placement P|all]
-//!              [--faults PLAN] [--requests N] [--traffic SHAPE]
+//!              [--faults PLAN] [--admit CAP] [--deadline CYCLES] [--requests N]
+//!              [--traffic SHAPE]
 //! gpp-pim adapt [--max-n N]
 //! gpp-pim assemble FILE.asm [-o FILE.bin]
 //! gpp-pim disasm FILE.bin
@@ -257,12 +259,47 @@ fn search_flag(args: &Args) -> Result<SearchMode> {
 }
 
 /// Fault schedule from `--faults PLAN` (default: none).  The plan
-/// grammar is `fail|drain|join@CYCLE@CHIP` / `mtbf@MEAN@SEED`,
-/// comma-separated — the same form `exec` takes via `faults=`.
+/// grammar is `fail|drain|join|restore@CYCLE@CHIP` /
+/// `throttle@CYCLE@CHIP@PCT` / `mtbf@MEAN@SEED`, comma-separated — the
+/// same form `exec` takes via `faults=`.  Degenerate tokens (zero MTBF
+/// mean, throttle percentage outside 1-99) are rejected here naming the
+/// offender, before any simulation starts.
 fn faults_flag(args: &Args) -> Result<FaultPlan> {
     match args.get("faults") {
         Some(v) => FaultPlan::parse(v).map_err(|e| anyhow!("bad --faults '{v}': {e}")),
         None => Ok(FaultPlan::none()),
+    }
+}
+
+/// Admission cap from `--admit CAP` (`None` = unbounded queues).
+/// `--admit 0` is a parse-time error — a zero cap would shed every
+/// request, which is never what a typo'd flag means.
+fn admit_flag(args: &Args) -> Result<Option<u32>> {
+    match args.get("admit") {
+        Some(v) => {
+            let cap: u32 = v.parse().with_context(|| format!("--admit {v}"))?;
+            if cap == 0 {
+                bail!("--admit must be >= 1 (got 0); omit the flag for unbounded queues");
+            }
+            Ok(Some(cap))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Queue deadline from `--deadline CYCLES` (`None` = no deadlines).
+/// `--deadline 0` is a parse-time error — every request would expire on
+/// arrival.
+fn deadline_flag(args: &Args) -> Result<Option<u64>> {
+    match args.get("deadline") {
+        Some(v) => {
+            let deadline: u64 = v.parse().with_context(|| format!("--deadline {v}"))?;
+            if deadline == 0 {
+                bail!("--deadline must be >= 1 cycle (got 0); omit the flag for no deadlines");
+            }
+            Ok(Some(deadline))
+        }
+        None => Ok(None),
     }
 }
 
@@ -483,7 +520,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve",
         &[
             "config", "requests", "seed", "jobs", "chips", "fleet", "placement", "mean-gap",
-            "traffic", "faults", "autoscale", "slo", "surrogate", "csv-dir", "bench-json",
+            "traffic", "faults", "admit", "deadline", "autoscale", "slo", "surrogate", "csv-dir",
+            "bench-json",
         ],
         0,
         Some("serve"),
@@ -536,6 +574,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         jobs: jobs_flag(args)?,
         placement: placement_flag(args)?,
         faults: faults_flag(args)?,
+        admit: admit_flag(args)?,
+        deadline: deadline_flag(args)?,
         autoscale,
         slo,
         surrogate,
@@ -551,7 +591,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         "fleet",
         &[
             "config", "requests", "seed", "jobs", "sizes", "fleet", "placement", "faults",
-            "mean-gap", "traffic", "csv-dir", "bench-json",
+            "admit", "deadline", "mean-gap", "traffic", "csv-dir", "bench-json",
         ],
         0,
         Some("fleet"),
@@ -571,6 +611,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         jobs: jobs_flag(args)?,
         placements: placements_flag(args)?,
         faults: faults_flag(args)?,
+        admit: admit_flag(args)?,
+        deadline: deadline_flag(args)?,
         sizes,
         fleet: args.get("fleet").map(String::from),
     });
@@ -585,7 +627,8 @@ fn cmd_dse(args: &Args) -> Result<()> {
             &[
                 "config", "full", "jobs", "tasks", "top", "csv-dir", "bench-json", "cores",
                 "macros", "n-in", "bands", "buffers", "write-speed", "unrolled", "search",
-                "fleets", "placement", "faults", "requests", "seed", "mean-gap", "traffic", "sim",
+                "fleets", "placement", "faults", "admit", "deadline", "requests", "seed",
+                "mean-gap", "traffic", "sim",
             ],
             0,
             Some("dse-full"),
@@ -628,6 +671,8 @@ fn cmd_dse(args: &Args) -> Result<()> {
             },
             placements: placements_flag(args)?,
             faults: faults_flag(args)?,
+            admit: admit_flag(args)?,
+            deadline: deadline_flag(args)?,
             requests: args.get_u32("requests", defaults.requests)?,
             seed: args.get_u64("seed", defaults.seed)?,
             mean_gap: args.get_u64("mean-gap", defaults.mean_gap)?,
@@ -735,9 +780,15 @@ COMMANDS:
               --placement rr|least-loaded|affinity|sed, --mean-gap CYCLES,
               --traffic uniform|poisson|burst arrival shape (seeded,
               deterministic; uniform is the default),
-              --faults PLAN injects chip fail/drain/join events
-              (fail|drain|join@CYCLE@CHIP / mtbf@MEAN@SEED, comma-sep;
-              failures redispatch queued work and charge weight re-writes),
+              --faults PLAN injects chip fail/drain/join events and
+              bandwidth-throttle epochs (fail|drain|join|restore@CYCLE@CHIP /
+              throttle@CYCLE@CHIP@PCT / mtbf@MEAN@SEED, comma-sep;
+              failures redispatch queued work and charge weight re-writes,
+              throttles reprice service under the reduced off-chip band),
+              --admit CAP sheds arrivals beyond CAP queued-or-running
+              per chip (deterministic bounded backoff + capped retries
+              before a request counts as shed), --deadline CYCLES
+              expires requests that cannot start service in time,
               --autoscale --slo CYCLES grows/shrinks the fleet against a
               p99 latency target, --surrogate exact|eqs picks how
               per-class service times are calibrated (exact = cycle-true
@@ -748,6 +799,8 @@ COMMANDS:
   fleet      sweep fleet size x placement policy over one request stream
              (--sizes 1,2,4 or --fleet SPEC, --placement P|all,
               --faults PLAN serves every point under the fault schedule,
+              --admit CAP / --deadline CYCLES apply overload control to
+              every point (either earns fleet_resilience.csv),
               --requests N, --seed S, --traffic uniform|poisson|burst,
               --jobs J, --csv-dir DIR writes
               fleet_axis.csv [+ fleet_resilience.csv])
@@ -761,7 +814,8 @@ COMMANDS:
               slow faithful lowering; identical results), Pareto frontier
               (cycles x macros x buffer) next to top-k, optional fleet
               axis --fleets 1,2,4 [--placement P|all --requests N
-              --faults PLAN --traffic SHAPE], --csv-dir writes
+              --faults PLAN --admit CAP --deadline CYCLES
+              --traffic SHAPE], --csv-dir writes
               dse_full.csv + dse_topk.csv + dse_pareto.csv
               [+ dse_fleet.csv + dse_resilience.csv].
              --search pruned bounds-and-prunes the cartesian space with

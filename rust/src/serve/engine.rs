@@ -27,13 +27,13 @@
 
 use super::batcher::{Batcher, FleetBatches, StreamingBatcher, WorkloadClass};
 use super::report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
-use super::surrogate::{ServiceEntry, ServiceTimeTable, SurrogateMode};
+use super::surrogate::{effective_bandwidth, ServiceEntry, ServiceTimeTable, SurrogateMode};
 use super::traffic::{TrafficConfig, TrafficStream};
 use super::{Request, ServeError};
 use crate::arch::ArchConfig;
 use crate::fleet::{
     dispatch_fifo, dispatch_fifo_faulty, AutoscaleConfig, Dispatch, FaultCharges, FaultPlan,
-    FleetConfig, FleetTimeline, PlacementPolicy,
+    FleetConfig, FleetTimeline, OverloadConfig, PlacementPolicy,
 };
 use crate::model::eqs::weight_write_cycles;
 use crate::sim::{simulate_in, SimWorkspace};
@@ -49,6 +49,7 @@ pub struct ServeEngine {
     cache: CodegenCache,
     faults: FaultPlan,
     autoscale: Option<AutoscaleConfig>,
+    overload: OverloadConfig,
     surrogate: SurrogateMode,
     table: Arc<ServiceTimeTable>,
 }
@@ -76,6 +77,7 @@ impl ServeEngine {
             cache: CodegenCache::new(),
             faults: FaultPlan::none(),
             autoscale: None,
+            overload: OverloadConfig::default(),
             surrogate: SurrogateMode::Exact,
             table: Arc::new(ServiceTimeTable::new()),
         }
@@ -108,6 +110,14 @@ impl ServeEngine {
     /// configured floor start down and join only under SLO pressure.
     pub fn with_autoscale(mut self, cfg: AutoscaleConfig) -> Self {
         self.autoscale = Some(cfg);
+        self
+    }
+
+    /// Builder: overload control (ISSUE 9) — admission queue caps,
+    /// per-request deadlines, and bounded backoff retries.  The default
+    /// ([`OverloadConfig::is_off`]) keeps the byte-stable fast path.
+    pub fn with_overload(mut self, cfg: OverloadConfig) -> Self {
+        self.overload = cfg;
         self
     }
 
@@ -144,6 +154,11 @@ impl ServeEngine {
     /// The attached autoscaler configuration, if any.
     pub fn autoscale(&self) -> Option<&AutoscaleConfig> {
         self.autoscale.as_ref()
+    }
+
+    /// The overload-control configuration (off by default).
+    pub fn overload(&self) -> OverloadConfig {
+        self.overload
     }
 
     /// The reference chip's architecture (fleet chip 0).
@@ -333,7 +348,10 @@ impl ServeEngine {
             let a = fb.arch_of_chip[chip];
             class_stats[a][fb.sets[a].class_of[i]].cycles
         };
-        let timeline: FleetTimeline = if self.faults.is_empty() && self.autoscale.is_none() {
+        let timeline: FleetTimeline = if self.faults.is_empty()
+            && self.autoscale.is_none()
+            && self.overload.is_off()
+        {
             // Fault-free fast path: byte-stable PR 3 behavior by
             // construction — the fault machinery is never entered.
             dispatch_fifo(self.fleet.len(), &dispatches, service, policy_state.as_mut())
@@ -342,8 +360,9 @@ impl ServeEngine {
             // redispatch re-writes the request's class weights into the
             // destination chip's macros; a join cold-loads the whole
             // chip.  Rate = min(macros × speed, bandwidth), the Eq. 3–4
-            // constraint.
-            let migrate = |i: usize, chip: usize| {
+            // constraint — against the chip's *effective* bandwidth,
+            // which a throttle epoch scales (ISSUE 9).
+            let migrate = |i: usize, chip: usize, pct: u8| {
                 let dest = &self.fleet.chips()[chip];
                 let a = fb.arch_of_chip[chip];
                 let plan = &fb.sets[a].batches[fb.sets[a].class_of[i]].class.plan;
@@ -352,20 +371,29 @@ impl ServeEngine {
                     bytes,
                     plan.tasks as u64,
                     dest.write_speed as u64,
-                    dest.bandwidth,
+                    effective_bandwidth(dest.bandwidth, pct),
                 );
                 (bytes, cycles)
             };
-            let cold = |chip: usize| {
+            let cold = |chip: usize, pct: u8| {
                 let dest = &self.fleet.chips()[chip];
                 let bytes = dest.total_macros() as u64 * dest.geom.size_macro();
                 let cycles = weight_write_cycles(
                     bytes,
                     dest.total_macros() as u64,
                     dest.write_speed as u64,
-                    dest.bandwidth,
+                    effective_bandwidth(dest.bandwidth, pct),
                 );
                 (bytes, cycles)
+            };
+            // Service under a throttled link: the table's bandwidth
+            // dimension reprices the class entry per effective band.
+            let throttled = |_base: u64, i: usize, chip: usize, pct: u8| {
+                let a = fb.arch_of_chip[chip];
+                let b = fb.sets[a].class_of[i];
+                self.table
+                    .throttled_entry(&fb.sets[a].batches[b].class, class_stats[a][b], pct)
+                    .cycles
             };
             dispatch_fifo_faulty(
                 self.fleet.len(),
@@ -374,9 +402,11 @@ impl ServeEngine {
                 policy_state.as_mut(),
                 &self.faults,
                 self.autoscale.as_ref(),
+                self.overload,
                 &FaultCharges {
                     migrate: &migrate,
                     cold: &cold,
+                    throttled: &throttled,
                 },
             )
         };
@@ -399,6 +429,9 @@ impl ServeEngine {
                     service_cycles: if p.dropped { 0 } else { p.service_cycles },
                     migrated: p.migrated,
                     dropped: p.dropped,
+                    shed: p.shed,
+                    expired: p.expired,
+                    retries: p.retries,
                 }
             })
             .collect();
@@ -489,7 +522,8 @@ pub fn run_fleet_axis(
     let arrivals: Vec<(u32, u64)> = requests.iter().map(|r| (r.id, r.arrival_cycle)).collect();
     for fleet in axis.fleets() {
         let engine = ServeEngine::with_fleet(fleet.clone(), PlacementPolicy::RoundRobin, jobs)
-            .with_faults(axis.faults().clone());
+            .with_faults(axis.faults().clone())
+            .with_overload(axis.overload());
         let ev = engine.evaluate(requests)?;
         for &policy in axis.policies() {
             out.push((
@@ -783,6 +817,100 @@ mod tests {
         assert!(f.availability(1) < 1.0);
         assert!(f.fleet_availability() < 1.0);
         assert!(f.redispatch_mean_latency() > 0);
+    }
+
+    #[test]
+    fn throttle_reprices_service_and_keeps_the_reference_timeline() {
+        // A write-heavy class (256 weight tiles — 256 KiB of rewrite
+        // traffic) so a deep throttle is guaranteed to bind.
+        let wl = crate::gemm::Workload::new(
+            "write-heavy",
+            vec![crate::gemm::GemmOp {
+                m: 16,
+                k: 512,
+                n: 512,
+            }],
+        );
+        let cfg = RunConfig::from_arch(&arch(), Strategy::GeneralizedPingPong);
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request {
+                id,
+                // First arrival at cycle 10: the restore@5 epoch below
+                // closes before any request is placed.
+                arrival_cycle: (id as u64 + 1) * 10,
+                workload: wl.clone(),
+                cfg,
+            })
+            .collect();
+        let fleet = || FleetConfig::homogeneous(arch(), 1);
+        let plain = ServeEngine::with_fleet(fleet(), PlacementPolicy::RoundRobin, 2)
+            .run(&reqs)
+            .unwrap();
+        // A deep throttle from cycle 0: every placement repriced under
+        // the degraded envelope; the reference timeline must not move.
+        let choked = ServeEngine::with_fleet(fleet(), PlacementPolicy::RoundRobin, 2)
+            .with_faults(FaultPlan::parse("throttle@0@0@1").unwrap())
+            .run(&reqs)
+            .unwrap();
+        assert_eq!(choked.to_table().to_csv(), plain.to_table().to_csv());
+        assert!(choked.fleet.assignments.iter().all(|a| !a.dropped));
+        for (c, p) in choked.fleet.assignments.iter().zip(&plain.fleet.assignments) {
+            assert!(c.service_cycles > p.service_cycles, "id {}", c.id);
+        }
+        assert!(choked.fleet.makespan > plain.fleet.makespan);
+        // A throttle epoch that closes before the first arrival is
+        // inert: byte-identical to the fault-free run.
+        let restored = ServeEngine::with_fleet(fleet(), PlacementPolicy::RoundRobin, 2)
+            .with_faults(FaultPlan::parse("throttle@0@0@1,restore@5@0").unwrap())
+            .run(&reqs)
+            .unwrap();
+        assert_eq!(restored, plain);
+    }
+
+    #[test]
+    fn admission_cap_sheds_and_deadline_expires_deterministically() {
+        let wl = blas::e2e_ffn();
+        let cfg = RunConfig::from_arch(&arch(), Strategy::GeneralizedPingPong);
+        let burst: Vec<Request> = (0..8)
+            .map(|id| Request {
+                id,
+                arrival_cycle: 0,
+                workload: wl.clone(),
+                cfg,
+            })
+            .collect();
+        let run = |overload: OverloadConfig, jobs: usize| {
+            let fleet = FleetConfig::homogeneous(arch(), 1);
+            ServeEngine::with_fleet(fleet, PlacementPolicy::RoundRobin, jobs)
+                .with_overload(overload)
+                .run(&burst)
+                .unwrap()
+        };
+        let capped = run(OverloadConfig::with_queue_cap(1), 1);
+        let fs = &capped.fleet.faults;
+        assert!(fs.shed >= 1, "an 8-deep burst against cap 1 must shed");
+        assert!(fs.retries >= 3, "shed requests burn their retry budget");
+        assert_eq!(fs.expired, 0);
+        assert_eq!(
+            capped.fleet.goodput() + fs.shed as u64,
+            8,
+            "every request is served or shed"
+        );
+        assert!(capped
+            .fleet
+            .assignments
+            .iter()
+            .all(|a| a.shed == (a.dropped && a.shed)));
+        assert_eq!(capped, run(OverloadConfig::with_queue_cap(1), 8), "jobs-invariant");
+
+        let strict = run(OverloadConfig::with_deadline(1), 2);
+        assert_eq!(
+            strict.fleet.faults.expired, 7,
+            "only the burst head starts by t+1; the queued tail expires"
+        );
+        assert_eq!(strict.fleet.faults.shed, 0);
+        assert_eq!(strict.fleet.goodput(), 1);
+        assert_eq!(strict, run(OverloadConfig::with_deadline(1), 8));
     }
 
     #[test]

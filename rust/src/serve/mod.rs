@@ -26,8 +26,13 @@
 //!    dispatches requests onto the fleet's per-chip FIFO queues via a
 //!    [`crate::fleet::Placement`] policy (`--placement
 //!    rr|least-loaded|affinity|sed`), optionally degraded by a
-//!    [`crate::fleet::FaultPlan`] (`--faults`) and grown/shrunk by the
-//!    SLO [`crate::fleet::AutoscaleConfig`] (`--autoscale --slo`).
+//!    [`crate::fleet::FaultPlan`] (`--faults`, including per-chip
+//!    bandwidth `throttle`/`restore` epochs repriced through the
+//!    table's bandwidth dimension), grown/shrunk by the SLO
+//!    [`crate::fleet::AutoscaleConfig`] (`--autoscale --slo`), and
+//!    protected by [`crate::fleet::OverloadConfig`] overload control
+//!    (`--admit`/`--deadline`: admission caps, queue deadlines,
+//!    deterministic backoff retries — ISSUE 9).
 //! 4. [`ServeReport`] — reference-timeline latency percentiles and
 //!    throughput (`serve.csv`, `serve_summary.csv`), the policy-timeline
 //!    [`FleetReport`] (`fleet.csv` per-chip latency + utilization,
@@ -72,7 +77,7 @@ pub mod traffic;
 pub use batcher::{Batch, Batcher, BatchSet, FleetBatches, StreamingBatcher, WorkloadClass};
 pub use engine::{run_fleet_axis, ServeEngine};
 pub use report::{FleetAssignment, FleetReport, RequestRecord, ServeReport};
-pub use surrogate::{ServiceEntry, ServiceTimeTable, SurrogateMode};
+pub use surrogate::{effective_bandwidth, ServiceEntry, ServiceTimeTable, SurrogateMode};
 pub use traffic::{synthetic_traffic, TrafficConfig, TrafficShape, TrafficStream};
 
 use crate::coordinator::RunConfig;

@@ -80,6 +80,15 @@ pub struct FleetAssignment {
     /// True when the request was never served (counted, not hidden);
     /// chip/queue/service are meaningless for dropped requests.
     pub dropped: bool,
+    /// True when admission control shed the request (queue cap hit and
+    /// the retry budget ran out).  Implies `dropped`.
+    pub shed: bool,
+    /// True when the request's deadline expired before a chip could
+    /// start it.  Implies `dropped`; disjoint from `shed`.
+    pub expired: bool,
+    /// Backoff retries this request burned (ISSUE 9); deterministic
+    /// across `--jobs`.
+    pub retries: u32,
 }
 
 impl FleetAssignment {
@@ -134,6 +143,27 @@ impl FleetReport {
         }
         let up: u64 = self.faults.chip_available_cycles.iter().sum();
         up as f64 / (self.makespan as f64 * self.chips() as f64)
+    }
+
+    /// Requests actually served on the policy timeline — the goodput
+    /// numerator.  Under overload control this is what admission caps,
+    /// deadlines and strandings leave standing.
+    pub fn goodput(&self) -> u64 {
+        self.assignments.iter().filter(|a| !a.dropped).count() as u64
+    }
+
+    /// The ISSUE 9 drop-accounting invariant: every request is exactly
+    /// one of served / shed / expired / dropped-stranded.  Debug builds
+    /// assert it before any overload counter reaches a CSV.
+    fn assert_accounting(&self) {
+        debug_assert_eq!(
+            self.goodput()
+                + self.faults.shed as u64
+                + self.faults.expired as u64
+                + self.faults.dropped as u64,
+            self.assignments.len() as u64,
+            "served + shed + expired + dropped must cover the trace"
+        );
     }
 
     /// Mean end-to-end latency of served redispatched requests (floor),
@@ -199,6 +229,7 @@ impl FleetReport {
     /// `all` aggregate row.  On the no-fault path the new columns are
     /// constants (availability 1.0000, everything else 0).
     pub fn to_table(&self) -> CsvTable {
+        self.assert_accounting();
         let mut t = CsvTable::new(vec![
             "policy",
             "chip",
@@ -215,6 +246,9 @@ impl FleetReport {
             "redispatched",
             "migration_bytes",
             "dropped",
+            "shed",
+            "expired",
+            "retries",
         ]);
         for chip in 0..self.chips() {
             let lat: Vec<u64> = self
@@ -247,6 +281,15 @@ impl FleetReport {
                 self.faults.chip_redispatched[chip].to_string(),
                 self.faults.chip_migration_bytes[chip].to_string(),
                 "0".to_string(), // dropped requests belong to no chip
+                "0".to_string(), // shed requests belong to no chip
+                "0".to_string(), // expired requests belong to no chip
+                // Retries of requests that eventually landed here.
+                self.assignments
+                    .iter()
+                    .filter(|a| a.chip == chip && !a.dropped)
+                    .map(|a| a.retries as u64)
+                    .sum::<u64>()
+                    .to_string(),
             ]);
         }
         let busy: u64 = self.chip_busy_cycles.iter().sum();
@@ -272,6 +315,9 @@ impl FleetReport {
             self.faults.redispatched.to_string(),
             self.faults.migration_bytes.to_string(),
             self.faults.dropped.to_string(),
+            self.faults.shed.to_string(),
+            self.faults.expired.to_string(),
+            self.faults.retries.to_string(),
         ]);
         t
     }
@@ -284,6 +330,7 @@ impl FleetReport {
     pub fn requests_table(&self) -> CsvTable {
         let mut t = CsvTable::new(vec![
             "id", "chip", "arrival", "queue", "service", "latency", "migrated", "dropped",
+            "shed", "expired", "retries",
         ]);
         for a in &self.assignments {
             let served = |s: String| if a.dropped { String::new() } else { s };
@@ -296,6 +343,9 @@ impl FleetReport {
                 served(a.latency_cycles().to_string()),
                 u8::from(a.migrated).to_string(),
                 u8::from(a.dropped).to_string(),
+                u8::from(a.shed).to_string(),
+                u8::from(a.expired).to_string(),
+                a.retries.to_string(),
             ]);
         }
         t
@@ -459,10 +509,14 @@ impl ServeReport {
 
     /// Aggregate table (`serve_summary.csv`): percentiles + throughput,
     /// plus the fleet resilience aggregates (ISSUE 6) — constants
-    /// (`1.0000,0,0,0`) on the no-fault path — and the surrogate-mode
-    /// columns (ISSUE 7; `exact,0` on the default path, and the CI
-    /// cross-check job diffs summaries across modes through them).
+    /// (`1.0000,0,0,0`) on the no-fault path — the overload-control
+    /// columns (ISSUE 9; `0,0,0` + `goodput == requests` when overload
+    /// control is off, and `served + shed + expired + dropped ==
+    /// requests` is asserted always), and the surrogate-mode columns
+    /// (ISSUE 7; `exact,0` on the default path, and the CI cross-check
+    /// job diffs summaries across modes through them).
     pub fn summary_table(&self) -> CsvTable {
+        self.fleet.assert_accounting();
         let mut t = CsvTable::new(vec![
             "requests",
             "classes",
@@ -480,6 +534,10 @@ impl ServeReport {
             "migration_bytes",
             "redispatched",
             "dropped",
+            "shed",
+            "expired",
+            "retries",
+            "goodput",
             "surrogate",
             "eqs_classes",
         ]);
@@ -501,6 +559,10 @@ impl ServeReport {
             self.fleet.faults.migration_bytes.to_string(),
             self.fleet.faults.redispatched.to_string(),
             self.fleet.faults.dropped.to_string(),
+            self.fleet.faults.shed.to_string(),
+            self.fleet.faults.expired.to_string(),
+            self.fleet.faults.retries.to_string(),
+            self.fleet.goodput().to_string(),
             self.surrogate.to_string(),
             self.eqs_classes.to_string(),
         ]);
@@ -549,6 +611,16 @@ impl ServeReport {
                 fs.dropped,
                 fs.scale_ups,
                 fs.scale_downs
+            ));
+        }
+        if fs.shed > 0 || fs.expired > 0 || fs.retries > 0 {
+            out.push_str(&format!(
+                "  overload: goodput {}/{}, {} shed, {} expired, {} retries\n",
+                f.goodput(),
+                f.assignments.len(),
+                fs.shed,
+                fs.expired,
+                fs.retries
             ));
         }
         out
@@ -617,6 +689,9 @@ mod tests {
                     service_cycles: (i as u64 + 1) * 10,
                     migrated: false,
                     dropped: false,
+                    shed: false,
+                    expired: false,
+                    retries: 0,
                 })
                 .collect(),
             chip_archs: vec!["a".into(), "b".into()],
@@ -740,6 +815,9 @@ mod tests {
             redispatch_latency_cycles: 100,
             scale_ups: 0,
             scale_downs: 0,
+            shed: 0,
+            expired: 0,
+            retries: 0,
         };
         // availability: chip 0 was up half the makespan.
         assert!((f.availability(0) - 0.5).abs() < 1e-12);
@@ -754,12 +832,12 @@ mod tests {
         assert!(csv.starts_with("policy,chip,arch,"));
         assert!(csv.contains(",availability,"), "{csv}");
         let all = csv.lines().last().unwrap();
-        assert!(all.ends_with(",100,1,2048,1"), "all row: {all}");
+        assert!(all.ends_with(",100,1,2048,1,0,0,0"), "all row: {all}");
         let rows = f.requests_table().to_csv();
         // Dropped row: empty chip/queue/service/latency, flags set.
-        assert!(rows.contains("\n1,,10,,,,0,1\n"), "{rows}");
+        assert!(rows.contains("\n1,,10,,,,0,1,0,0,0\n"), "{rows}");
         // Migrated-and-served row keeps its numbers and sets the flag.
-        assert!(rows.contains("\n0,1,0,90,10,100,1,0\n"), "{rows}");
+        assert!(rows.contains("\n0,1,0,90,10,100,1,0,0,0,0\n"), "{rows}");
         // And the report-level resilience line appears only now.
         let r = ServeReport {
             records: vec![],
@@ -771,6 +849,60 @@ mod tests {
         };
         assert!(r.fleet_lines().contains("resilience: availability 0.7500"));
         assert!(!report().fleet_lines().contains("resilience"));
+    }
+
+    #[test]
+    fn overload_columns_surface_and_accounting_covers_the_trace() {
+        let mut f = fleet_report();
+        // Request 2 was shed after 3 retries; request 3 expired in
+        // queue; request 4 was served after one retry landed.
+        f.assignments[2].dropped = true;
+        f.assignments[2].shed = true;
+        f.assignments[2].retries = 3;
+        f.assignments[3].dropped = true;
+        f.assignments[3].expired = true;
+        f.assignments[4].retries = 1;
+        f.faults.shed = 1;
+        f.faults.expired = 1;
+        f.faults.retries = 4;
+        assert_eq!(f.goodput(), 98);
+        let rows = f.requests_table().to_csv();
+        // Shed row: unserved, shed flag + its burned retries survive.
+        assert!(rows.contains("\n2,,20,,,,0,1,1,0,3\n"), "{rows}");
+        // Expired row: unserved, expired flag, no retries.
+        assert!(rows.contains("\n3,,30,,,,0,1,0,1,0\n"), "{rows}");
+        // Retried-then-served row keeps its numbers.
+        assert!(rows.contains("\n4,0,40,0,50,50,0,0,0,0,1\n"), "{rows}");
+        let csv = f.to_table().to_csv();
+        let all = csv.lines().last().unwrap();
+        assert!(all.ends_with(",0,0,0,1,1,4"), "all row: {all}");
+        // Chip 0 hosted the retried-and-served request 4.
+        let chip0 = csv.lines().nth(1).unwrap();
+        assert!(chip0.ends_with(",0,0,0,0,0,1"), "chip 0 row: {chip0}");
+        let r = ServeReport {
+            records: vec![],
+            classes: 0,
+            class_service_cycles: vec![],
+            surrogate: SurrogateMode::Exact,
+            eqs_classes: 0,
+            fleet: f,
+        };
+        let s = r.summary_table().to_csv();
+        assert!(
+            s.trim_end().ends_with(",0,1,1,4,98,exact,0"),
+            "summary: {s}"
+        );
+        assert!(r.fleet_lines().contains("overload: goodput 98/100, 1 shed, 1 expired, 4 retries"));
+        assert!(!report().fleet_lines().contains("overload"));
+    }
+
+    #[test]
+    #[should_panic(expected = "served + shed + expired + dropped")]
+    #[cfg(debug_assertions)]
+    fn accounting_mismatch_is_asserted() {
+        let mut f = fleet_report();
+        f.assignments[0].dropped = true; // not reflected in any counter
+        f.to_table();
     }
 
     #[test]

@@ -30,7 +30,8 @@
 
 use super::batcher::WorkloadClass;
 use super::ServeError;
-use crate::model::eqs::ServiceModel;
+use crate::model::adapt::RuntimeAdaptation;
+use crate::model::eqs::{gpp_cycles_estimate, weight_write_cycles, ServiceModel};
 use crate::sched::{SchedulePlan, Strategy};
 use crate::sim::SimStats;
 use std::collections::HashMap;
@@ -104,6 +105,12 @@ impl ServiceEntry {
 #[derive(Debug, Default)]
 struct TableState {
     map: HashMap<WorkloadClass, ServiceEntry>,
+    /// The bandwidth dimension (ISSUE 9): entries for classes served
+    /// under a throttled off-chip link, keyed by `(class, effective
+    /// bandwidth)`.  Kept apart from `map` so a closed-form degraded
+    /// entry can never shadow (or be shadowed by) a cycle-exact
+    /// measurement of a chip that *really* has that bandwidth.
+    throttled: HashMap<(WorkloadClass, u64), ServiceEntry>,
     hits: u64,
     misses: u64,
 }
@@ -190,6 +197,40 @@ impl ServiceTimeTable {
         let e = exact(class)?;
         self.insert(class.clone(), e);
         Ok(e)
+    }
+
+    /// Throttled classes calibrated so far (the bandwidth dimension).
+    pub fn throttled_len(&self) -> usize {
+        self.state.lock().unwrap().throttled.len()
+    }
+
+    /// The bandwidth dimension's front door (ISSUE 9): the service time
+    /// of `class` on a chip whose off-chip link is throttled to `pct`
+    /// percent of its design bandwidth, given the full-bandwidth entry
+    /// `base`.  Lazy per-`(class, effective-band)` calibration: the
+    /// first lookup refits `base` under the degraded envelope through
+    /// the closed forms ([`weight_write_cycles`] /
+    /// [`gpp_cycles_estimate`] and the Eq. 9 macro-shedding refit of
+    /// [`RuntimeAdaptation`]); every later lookup is a pure cache hit.
+    /// `pct >= 100` is the identity — `base` comes back untouched and
+    /// nothing is inserted.
+    pub fn throttled_entry(
+        &self,
+        class: &WorkloadClass,
+        base: ServiceEntry,
+        pct: u8,
+    ) -> ServiceEntry {
+        if pct >= 100 {
+            return base;
+        }
+        let eff_band = effective_bandwidth(class.arch.bandwidth, pct);
+        let key = (class.clone(), eff_band);
+        if let Some(e) = self.state.lock().unwrap().throttled.get(&key).copied() {
+            return e;
+        }
+        let e = throttle_refit(class, base, eff_band);
+        self.state.lock().unwrap().throttled.insert(key, e);
+        e
     }
 
     /// The closed-form path: two cycle-exact anchors at small task
@@ -298,6 +339,67 @@ pub fn epsilon_from_anchor_errors(rel_errors: &[f64]) -> Option<f64> {
         worst = worst.max(e);
     }
     Some((EPSILON_SAFETY * worst).max(EPSILON_FLOOR))
+}
+
+/// Effective off-chip bandwidth (B/cycle, never below 1) of a link
+/// throttled to `pct` percent of `bandwidth`.  `pct >= 100` is the
+/// identity — exactly, not merely approximately, so the fault-free path
+/// stays byte-stable.
+pub fn effective_bandwidth(bandwidth: u64, pct: u8) -> u64 {
+    if pct >= 100 {
+        return bandwidth;
+    }
+    ((bandwidth as u128 * pct as u128 / 100) as u64).max(1)
+}
+
+/// Refit a measured full-bandwidth entry to a throttled envelope.
+///
+/// - **Generalized ping-pong** adapts (paper §IV-C, Eq. 9): shed macros
+///   by `m`, grow each survivor's batch, and the measured service
+///   dilates by `(m·tp + tr)/(tp + tr)`.  Mild throttles that the
+///   un-refit closed form ([`gpp_cycles_estimate`] at the effective
+///   bandwidth) absorbs without shedding anything stay cheaper than the
+///   refit — the runtime picks whichever is faster.
+/// - **Every other strategy** keeps its schedule; only the weight-write
+///   drain slows.  The rewrite traffic (`tasks × size_macro` bytes)
+///   cannot clear faster than `min(macros·s, eff_band)` — the Eq. 3–4
+///   constraint through [`weight_write_cycles`].
+///
+/// Monotone in the throttle depth and never below `base.cycles`, so a
+/// 99 % throttle whose write bound never binds costs exactly nothing.
+fn throttle_refit(class: &WorkloadClass, base: ServiceEntry, eff_band: u64) -> ServiceEntry {
+    let arch = &class.arch;
+    let plan = &class.plan;
+    let tp = arch.time_pim_at(plan.n_in).max(1);
+    let tr = arch.time_rewrite_at(plan.write_speed).max(1);
+    let s = plan.write_speed.max(1) as u64;
+    let macros = base.macros.max(1) as u64;
+    let tasks = plan.tasks as u64;
+    let cycles = if class.strategy == Strategy::GeneralizedPingPong {
+        let adapt = RuntimeAdaptation {
+            tp: tp as f64,
+            tr: tr as f64,
+            num_macros: macros as f64,
+            max_write_slowdown: arch.write_speed as f64 / arch.min_write_speed.max(1) as f64,
+        };
+        let n = arch.bandwidth.max(1) as f64 / eff_band as f64;
+        let m = adapt.gpp_m(n).max(1.0);
+        let stretched = (base.cycles as f64 * (m * tp as f64 + tr as f64)
+            / (tp as f64 + tr as f64))
+            .ceil() as u64;
+        let unrefit = gpp_cycles_estimate(tp, tr, tasks, macros, eff_band, s);
+        base.cycles.max(stretched.min(unrefit))
+    } else {
+        let bytes = tasks.saturating_mul(arch.geom.size_macro());
+        base.cycles
+            .max(weight_write_cycles(bytes, macros, s, eff_band))
+    };
+    ServiceEntry {
+        cycles,
+        vectors: base.vectors,
+        macros: base.macros,
+        via_eqs: true,
+    }
 }
 
 /// Strategies with steady-state-validated looped lowerings (PR 4).
@@ -483,6 +585,71 @@ mod tests {
         assert_eq!(epsilon_from_anchor_errors(&[0.1, 0.9]), None);
         assert_eq!(epsilon_from_anchor_errors(&[f64::NAN]), None);
         assert_eq!(epsilon_from_anchor_errors(&[f64::INFINITY]), None);
+    }
+
+    #[test]
+    fn effective_bandwidth_is_exact_identity_at_full_throttle() {
+        assert_eq!(effective_bandwidth(512, 100), 512);
+        assert_eq!(effective_bandwidth(512, 50), 256);
+        assert_eq!(effective_bandwidth(512, 99), 506); // floor of 506.88
+        assert_eq!(effective_bandwidth(512, 1), 5);
+        assert_eq!(effective_bandwidth(1, 1), 1, "never below 1 B/cycle");
+        assert_eq!(effective_bandwidth(u64::MAX, 50), u64::MAX / 2);
+    }
+
+    /// A write-bound GPP class at the paper design point: tp = tr = 128,
+    /// 256 macros, 4096 tasks — measured makespan = the full-band write
+    /// bound, 4096·1024 B / 512 B/cyc = 8192 cycles.
+    fn write_bound_base() -> ServiceEntry {
+        ServiceEntry {
+            cycles: 8192,
+            vectors: 16384,
+            macros: 256,
+            via_eqs: false,
+        }
+    }
+
+    #[test]
+    fn throttled_entries_are_lazy_cached_and_identity_at_full_band() {
+        let table = ServiceTimeTable::new();
+        let c = class(Strategy::GeneralizedPingPong, 4096, 256);
+        let base = write_bound_base();
+        assert_eq!(table.throttled_entry(&c, base, 100), base);
+        assert_eq!(table.throttled_len(), 0, "identity inserts nothing");
+        let half = table.throttled_entry(&c, base, 50);
+        assert!(half.via_eqs, "refit entries are closed-form");
+        assert!(half.cycles > base.cycles, "a binding throttle costs cycles");
+        assert_eq!(half.vectors, base.vectors, "work is unchanged");
+        assert_eq!(table.throttled_len(), 1);
+        assert_eq!(table.throttled_entry(&c, base, 50), half, "cache hit");
+        assert_eq!(table.throttled_len(), 1);
+        let quarter = table.throttled_entry(&c, base, 25);
+        assert!(quarter.cycles >= half.cycles, "monotone in throttle depth");
+        assert_eq!(table.throttled_len(), 2);
+    }
+
+    #[test]
+    fn gpp_refit_degrades_sublinearly_vs_fixed_schedules() {
+        // Eq. 9's macro-shedding refit must beat the fixed-schedule
+        // write drain under a deep throttle: at 25 % bandwidth the
+        // fixed-schedule write bound is 4096·1024/128 = 32768 cycles,
+        // while the refit dilation is ~1.69× the 8192-cycle base.
+        let table = ServiceTimeTable::new();
+        let base = write_bound_base();
+        let gpp = table.throttled_entry(
+            &class(Strategy::GeneralizedPingPong, 4096, 256),
+            base,
+            25,
+        );
+        let fixed = table.throttled_entry(&class(Strategy::InSitu, 4096, 256), base, 25);
+        assert_eq!(fixed.cycles, 32768, "write drain slows 4x");
+        assert!(gpp.cycles > base.cycles);
+        assert!(
+            gpp.cycles < fixed.cycles,
+            "GPP refit ({}) must degrade more gracefully than a fixed schedule ({})",
+            gpp.cycles,
+            fixed.cycles
+        );
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub use exec::run_indexed;
 pub use runner::{default_jobs, SweepRunner};
 
 use crate::arch::ArchConfig;
-use crate::fleet::{FaultPlan, FleetConfig, PlacementPolicy};
+use crate::fleet::{FaultPlan, FleetConfig, OverloadConfig, PlacementPolicy};
 use crate::sched::{CodegenStyle, ScheduleError, SchedulePlan, Strategy};
 use crate::sim::{SimError, SimOptions};
 use thiserror::Error;
@@ -147,12 +147,14 @@ pub struct FleetSweepPoint {
 /// serves the stream under that fault schedule, turning the axis into a
 /// resilience sweep (`dse_resilience.csv`).  Fault events naming chips
 /// beyond a given fleet's size are inert, so one plan rides the whole
-/// size axis.
+/// size axis.  An [`OverloadConfig`] (ISSUE 9) rides the same way:
+/// every point serves under the same admission cap / deadline policy.
 #[derive(Debug, Clone, Default)]
 pub struct FleetAxis {
     fleets: Vec<FleetConfig>,
     policies: Vec<PlacementPolicy>,
     faults: FaultPlan,
+    overload: OverloadConfig,
 }
 
 impl FleetAxis {
@@ -162,6 +164,7 @@ impl FleetAxis {
             fleets,
             policies,
             faults: FaultPlan::none(),
+            overload: OverloadConfig::default(),
         }
     }
 
@@ -179,6 +182,7 @@ impl FleetAxis {
                 .collect(),
             policies: policies.to_vec(),
             faults: FaultPlan::none(),
+            overload: OverloadConfig::default(),
         }
     }
 
@@ -188,9 +192,21 @@ impl FleetAxis {
         self
     }
 
+    /// Builder: serve every point of the axis under overload control.
+    pub fn with_overload(mut self, cfg: OverloadConfig) -> Self {
+        self.overload = cfg;
+        self
+    }
+
     /// The fault plan every point serves under (empty by default).
     pub fn faults(&self) -> &FaultPlan {
         &self.faults
+    }
+
+    /// The overload-control policy every point serves under (off by
+    /// default).
+    pub fn overload(&self) -> OverloadConfig {
+        self.overload
     }
 
     /// The fleets of the axis, in sweep order.
