@@ -1,0 +1,1175 @@
+//! Static schedule verification: prove ping-pong safety without running
+//! the simulator.
+//!
+//! The paper's pipelining argument rests on invariants the lowered
+//! programs must uphold — a macro never computes on a tile whose rewrite
+//! is still in flight, core buffers never overflow, and the barrier/wait
+//! structure cannot deadlock.  The cycle-exact engine *exercises* these
+//! dynamically (a violation surfaces as a `SimError` mid-run), but a
+//! codegen bug can also surface as silently-wrong `SimStats`.  This
+//! module proves the invariants by abstract interpretation over
+//! [`Program`] — per core, per macro, with a loop-body fixpoint — and
+//! certifies an analytic lower bound (write-traffic bound ⊔ per-macro
+//! busy-time bound, reusing [`crate::model::eqs`]) that simulated cycles
+//! must respect.
+//!
+//! Checked properties:
+//!
+//! 1. **Hazard freedom** — no `vmm` on a macro with an un-`waitw`ed
+//!    `wrw` in flight, `vmm.tile` matches the last committed `wrw.tile`,
+//!    no double-issue of `wrw`/`vmm` to a busy macro, `setspd` within the
+//!    hardware range.  Mirrors the engine's `SimError` hazard checks.
+//! 2. **Buffer bounds** — the `ldin`/`vmm`/`stout` occupancy interval of
+//!    every core stays within `core_buffer_bytes` (sum of per-stream
+//!    peaks: streams of one core interleave arbitrarily), and never goes
+//!    negative.  Loop bodies use an exact closed form over the iteration
+//!    count; a non-zero per-iteration occupancy delta is flagged as a
+//!    drift warning.
+//! 3. **Structural liveness** — balanced `loop`/`endloop`, non-zero loop
+//!    counts, a trailing `halt`, macro/core ids in range, loop-weighted
+//!    `barrier` counts equal across all streams (a mismatch breaks the
+//!    phase intent even though halted streams release engine barriers),
+//!    and each macro driven by a single stream.  A wait with nothing in
+//!    flight is a *warning* (dead wait = latent perf bug, not unsafe).
+//! 4. **Analytic lower bound** — `max(write-traffic bound, max per-macro
+//!    busy time)`; [`VerifyReport::certify_cycles`] turns a simulated
+//!    cycle count below the bound into a hard error.
+//!
+//! The differential oracle that the verifier has teeth lives in
+//! [`mutate`]: seeded single-defect mutations of known-good programs,
+//! each class asserted to be caught with a located diagnostic.
+
+pub mod mutate;
+
+pub use mutate::MutationClass;
+
+use crate::arch::ArchConfig;
+use crate::isa::{Inst, Program};
+use crate::model::eqs;
+use crate::sched::Strategy;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::fmt;
+use thiserror::Error;
+
+/// Maximum loop-body iterations the hazard fixpoint runs before giving
+/// up; every shipped lowering stabilizes after 2.
+const FIXPOINT_CAP: usize = 4;
+
+/// Location of a diagnostic: core, stream, instruction offset, mnemonic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Site {
+    /// Stream index within the program.
+    pub stream: usize,
+    /// Core the stream addresses.
+    pub core: u32,
+    /// Instruction offset within the stream.
+    pub at: usize,
+    /// Mnemonic of the instruction at the offset.
+    pub mnemonic: &'static str,
+}
+
+impl fmt::Display for Site {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "core {} stream {} @{} ({})",
+            self.core, self.stream, self.at, self.mnemonic
+        )
+    }
+}
+
+/// A proven-unsafe schedule property.  Tile id 0 means "no tile loaded".
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+pub enum VerifyError {
+    #[error("{site}: wrw to macro {m} while a write is already in flight")]
+    DoubleWrite { site: Site, m: u8 },
+    #[error("{site}: vmm on macro {m} while a compute is already in flight")]
+    DoubleCompute { site: Site, m: u8 },
+    #[error("{site}: wrw to macro {m} while it is computing (no intra-macro overlap)")]
+    WriteDuringCompute { site: Site, m: u8 },
+    #[error("{site}: vmm on macro {m} while its weight rewrite is in flight")]
+    ComputeDuringWrite { site: Site, m: u8 },
+    #[error("{site}: vmm wants tile {want} but macro {m} holds tile {have} (0 = none)")]
+    WrongTile { site: Site, m: u8, want: u32, have: u32 },
+    #[error("{site}: setspd {speed} outside hardware range [{min}, {max}]")]
+    SpeedOutOfRange {
+        site: Site,
+        speed: u16,
+        min: u32,
+        max: u32,
+    },
+    #[error("{site}: macro {m} out of range (cores have {max} macros)")]
+    MacroOutOfRange { site: Site, m: u8, max: u32 },
+    #[error("{site}: core buffers need {need} B at peak but the core has {have} B")]
+    BufferOverflow { site: Site, need: u64, have: u64 },
+    #[error("{site}: buffer occupancy would fall to {occupancy} B (stout exceeds prior ldin/vmm)")]
+    BufferUnderflow { site: Site, occupancy: i64 },
+    #[error("{site}: unbalanced loop/endloop nesting")]
+    UnbalancedLoop { site: Site },
+    #[error("{site}: loop has zero iteration count")]
+    ZeroLoop { site: Site },
+    #[error("core {core} stream {stream}: program does not end with halt")]
+    MissingHalt { core: u32, stream: usize },
+    #[error("stream {stream} targets core {core} but the chip has {n_cores} cores")]
+    CoreOutOfRange {
+        stream: usize,
+        core: u32,
+        n_cores: u32,
+    },
+    #[error(
+        "core {core} stream {stream}: executes {count} barriers but stream 0 executes {expect}"
+    )]
+    BarrierMismatch {
+        core: u32,
+        stream: usize,
+        count: u64,
+        expect: u64,
+    },
+    #[error("core {core} macro {m}: driven by streams {a} and {b} (one owner per macro)")]
+    SharedMacro { core: u32, m: u8, a: usize, b: usize },
+    #[error("analytic lower bound {bound} cycles exceeds simulated {simulated} cycles")]
+    BoundViolation { bound: u64, simulated: u64 },
+}
+
+/// A latent inefficiency or an analysis limit — the schedule is still
+/// safe to run.
+#[derive(Debug, Error, Clone, PartialEq, Eq)]
+pub enum VerifyWarning {
+    #[error("{site}: wait on macro {m} with nothing in flight (dead wait)")]
+    DeadWait { site: Site, m: u8 },
+    #[error("{site}: loop body shifts buffer occupancy by {delta} B per iteration")]
+    LoopOccupancyDrift { site: Site, delta: i64 },
+    #[error("{site}: hazard state did not stabilize across loop iterations")]
+    LoopStateUnstable { site: Site },
+    #[error("{site}: macro {m} still busy at halt")]
+    InFlightAtHalt { site: Site, m: u8 },
+}
+
+/// Analysis knobs, mirroring the engine options that change legality.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct VerifyOptions {
+    /// Macros may overlap a partition write with a compute on the other
+    /// partition ([`crate::sim::SimOptions::allow_intra_overlap`]).
+    pub allow_intra_overlap: bool,
+}
+
+impl VerifyOptions {
+    /// The options matching how [`Strategy`] programs are simulated
+    /// ([`Strategy::sim_options`]).
+    pub fn for_strategy(strategy: Strategy) -> Self {
+        Self {
+            allow_intra_overlap: strategy.requires_intra_overlap(),
+        }
+    }
+}
+
+/// The verifier's verdict over one program.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    /// Proven violations — the program is unsafe to trust.
+    pub errors: Vec<VerifyError>,
+    /// Latent inefficiencies; the program is still safe.
+    pub warnings: Vec<VerifyWarning>,
+    /// Analytic lower bound on execution cycles (0 for an empty program).
+    pub lower_bound_cycles: u64,
+    /// Streams analyzed.
+    pub streams: usize,
+    /// Total instructions analyzed.
+    pub insts: usize,
+}
+
+impl VerifyReport {
+    /// True when no errors were found (warnings allowed).
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    /// The first error, if any.
+    pub fn first_error(&self) -> Option<&VerifyError> {
+        self.errors.first()
+    }
+
+    /// Certify a simulated cycle count against the analytic lower bound:
+    /// pushes a [`VerifyError::BoundViolation`] and returns false when
+    /// the simulation claims to beat the bound.
+    pub fn certify_cycles(&mut self, simulated: u64) -> bool {
+        if self.lower_bound_cycles > simulated {
+            self.errors.push(VerifyError::BoundViolation {
+                bound: self.lower_bound_cycles,
+                simulated,
+            });
+            return false;
+        }
+        true
+    }
+}
+
+/// Verify `program` against `arch` without simulating it.
+pub fn verify_program(arch: &ArchConfig, program: &Program, opts: &VerifyOptions) -> VerifyReport {
+    let mut v = Verifier {
+        arch,
+        opts: *opts,
+        errors: Vec::new(),
+        warnings: Vec::new(),
+    };
+    v.run(program);
+    VerifyReport {
+        lower_bound_cycles: v.lower_bound(program),
+        streams: program.streams.len(),
+        insts: program.streams.iter().map(|s| s.insts.len()).sum(),
+        errors: v.errors,
+        warnings: v.warnings,
+    }
+}
+
+/// Abstract per-macro state: what is in flight and which tile the macro
+/// holds (0 = none/unknown — tile ids are 1-based by construction).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct MacroState {
+    write_busy: bool,
+    pending: u32,
+    compute_busy: bool,
+    loaded: u32,
+}
+
+/// Abstract per-stream state for the hazard automaton.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct StreamState {
+    speed: u32,
+    macros: BTreeMap<u8, MacroState>,
+}
+
+/// Buffer-occupancy summary of an instruction range: net delta plus the
+/// min/max prefix (and the offsets attaining them, for diagnostics).
+#[derive(Debug, Clone, Copy)]
+struct Seg {
+    net: i64,
+    min: i64,
+    min_at: usize,
+    max: i64,
+    max_at: usize,
+}
+
+impl Seg {
+    fn empty(at: usize) -> Self {
+        Seg {
+            net: 0,
+            min: 0,
+            min_at: at,
+            max: 0,
+            max_at: at,
+        }
+    }
+
+    /// Sequential composition: `self` then `b`.
+    fn then(self, b: Seg) -> Seg {
+        let (min, min_at) = if self.net.saturating_add(b.min) < self.min {
+            (self.net.saturating_add(b.min), b.min_at)
+        } else {
+            (self.min, self.min_at)
+        };
+        let (max, max_at) = if self.net.saturating_add(b.max) > self.max {
+            (self.net.saturating_add(b.max), b.max_at)
+        } else {
+            (self.max, self.max_at)
+        };
+        Seg {
+            net: self.net.saturating_add(b.net),
+            min,
+            min_at,
+            max,
+            max_at,
+        }
+    }
+
+    /// Exact closed form for `k` sequential repetitions of `self`.
+    fn repeat(self, k: u32) -> Seg {
+        let k = k.max(1);
+        let shift = self.net.saturating_mul(k as i64 - 1);
+        let (min, min_at) = if self.net < 0 {
+            (shift.saturating_add(self.min), self.min_at)
+        } else {
+            (self.min, self.min_at)
+        };
+        let (max, max_at) = if self.net > 0 {
+            (shift.saturating_add(self.max), self.max_at)
+        } else {
+            (self.max, self.max_at)
+        };
+        Seg {
+            net: self.net.saturating_mul(k as i64),
+            min,
+            min_at,
+            max,
+            max_at,
+        }
+    }
+}
+
+/// Loop-weighted write/compute busy cycles of one macro.
+#[derive(Debug, Clone, Copy, Default)]
+struct MacroTally {
+    compute: u64,
+    write: u64,
+}
+
+struct Verifier<'a> {
+    arch: &'a ArchConfig,
+    opts: VerifyOptions,
+    errors: Vec<VerifyError>,
+    warnings: Vec<VerifyWarning>,
+}
+
+impl Verifier<'_> {
+    fn err(&mut self, e: VerifyError) {
+        if !self.errors.contains(&e) {
+            self.errors.push(e);
+        }
+    }
+
+    fn warn(&mut self, w: VerifyWarning) {
+        if !self.warnings.contains(&w) {
+            self.warnings.push(w);
+        }
+    }
+
+    fn site(&self, program: &Program, si: usize, at: usize) -> Site {
+        let stream = &program.streams[si];
+        Site {
+            stream: si,
+            core: stream.core,
+            at,
+            mnemonic: stream.insts.get(at).map_or("halt", Inst::mnemonic),
+        }
+    }
+
+    fn run(&mut self, program: &Program) {
+        // --- structural pass: builds the Loop -> EndLoop match map and
+        // marks streams whose control flow is too broken to walk.
+        let mut match_of: Vec<HashMap<usize, usize>> = Vec::with_capacity(program.streams.len());
+        let mut walkable: Vec<bool> = Vec::with_capacity(program.streams.len());
+        for (si, stream) in program.streams.iter().enumerate() {
+            if stream.core >= program.n_cores || stream.core >= self.arch.n_cores {
+                self.err(VerifyError::CoreOutOfRange {
+                    stream: si,
+                    core: stream.core,
+                    n_cores: program.n_cores.min(self.arch.n_cores),
+                });
+            }
+            let mut matches = HashMap::new();
+            let mut stack: Vec<usize> = Vec::new();
+            let mut balanced = true;
+            for (at, inst) in stream.insts.iter().enumerate() {
+                match inst {
+                    Inst::Loop { count } => {
+                        if *count == 0 {
+                            self.err(VerifyError::ZeroLoop {
+                                site: self.site(program, si, at),
+                            });
+                        }
+                        stack.push(at);
+                    }
+                    Inst::EndLoop => {
+                        if let Some(open) = stack.pop() {
+                            matches.insert(open, at);
+                        } else {
+                            self.err(VerifyError::UnbalancedLoop {
+                                site: self.site(program, si, at),
+                            });
+                            balanced = false;
+                        }
+                    }
+                    Inst::Wrw { m, .. }
+                    | Inst::Vmm { m, .. }
+                    | Inst::WaitW { m }
+                    | Inst::WaitC { m } => {
+                        if *m as u32 >= self.arch.macros_per_core {
+                            self.err(VerifyError::MacroOutOfRange {
+                                site: self.site(program, si, at),
+                                m: *m,
+                                max: self.arch.macros_per_core,
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(&open) = stack.last() {
+                self.err(VerifyError::UnbalancedLoop {
+                    site: self.site(program, si, open),
+                });
+                balanced = false;
+            }
+            if !matches!(stream.insts.last(), Some(Inst::Halt)) {
+                self.err(VerifyError::MissingHalt {
+                    core: stream.core,
+                    stream: si,
+                });
+            }
+            match_of.push(matches);
+            walkable.push(balanced);
+        }
+
+        // --- barrier alignment: loop-weighted barrier counts must agree
+        // across every stream (halted streams do release engine barriers,
+        // but a mismatch means whole phases run against the wrong bank).
+        let counts: Vec<Option<u64>> = program
+            .streams
+            .iter()
+            .enumerate()
+            .map(|(si, s)| {
+                walkable[si].then(|| weighted_barriers(&s.insts, 0, s.insts.len(), &match_of[si]))
+            })
+            .collect();
+        if let Some(expect) = counts.iter().flatten().next().copied() {
+            for (si, count) in counts.iter().enumerate() {
+                if let Some(count) = *count {
+                    if count != expect {
+                        self.err(VerifyError::BarrierMismatch {
+                            core: program.streams[si].core,
+                            stream: si,
+                            count,
+                            expect,
+                        });
+                    }
+                }
+            }
+        }
+
+        // --- macro ownership: the hazard automaton is per-stream, which
+        // is sound only while each (core, macro) is driven by one stream.
+        let mut owner: BTreeMap<(u32, u8), usize> = BTreeMap::new();
+        for (si, stream) in program.streams.iter().enumerate() {
+            for inst in &stream.insts {
+                let m = match inst {
+                    Inst::Wrw { m, .. }
+                    | Inst::Vmm { m, .. }
+                    | Inst::WaitW { m }
+                    | Inst::WaitC { m } => *m,
+                    _ => continue,
+                };
+                let key = (stream.core, m);
+                match owner.get(&key) {
+                    None => {
+                        owner.insert(key, si);
+                    }
+                    Some(&a) if a != si => {
+                        self.err(VerifyError::SharedMacro {
+                            core: stream.core,
+                            m,
+                            a,
+                            b: si,
+                        });
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        // --- hazard automaton per walkable stream.
+        for (si, stream) in program.streams.iter().enumerate() {
+            if !walkable[si] {
+                continue;
+            }
+            let mut state = StreamState {
+                speed: self.arch.write_speed,
+                macros: BTreeMap::new(),
+            };
+            self.exec_range(program, si, 0, stream.insts.len(), &match_of[si], &mut state);
+            let halt_at = stream.insts.len().saturating_sub(1);
+            for (&m, ms) in &state.macros {
+                if ms.write_busy || ms.compute_busy {
+                    self.warn(VerifyWarning::InFlightAtHalt {
+                        site: self.site(program, si, halt_at),
+                        m,
+                    });
+                }
+            }
+        }
+
+        // --- buffer bounds: per-stream occupancy envelope, summed per
+        // core (streams of one core interleave arbitrarily, so the core
+        // peak is bounded by the sum of stream peaks — exactly the
+        // feasibility bound `SchedulePlan::check` enforces).
+        let mut core_need: BTreeMap<u32, (u64, i64, usize)> = BTreeMap::new(); // core -> (sum, worst max, worst stream)
+        for (si, stream) in program.streams.iter().enumerate() {
+            if !walkable[si] {
+                continue;
+            }
+            let seg = self.seg_range(program, si, 0, stream.insts.len(), &match_of[si]);
+            if seg.min < 0 {
+                self.err(VerifyError::BufferUnderflow {
+                    site: self.site(program, si, seg.min_at),
+                    occupancy: seg.min,
+                });
+            }
+            let peak = seg.max.max(0) as u64;
+            let entry = core_need.entry(stream.core).or_insert((0, -1, si));
+            entry.0 = entry.0.saturating_add(peak);
+            if seg.max > entry.1 {
+                entry.1 = seg.max;
+                entry.2 = si;
+            }
+        }
+        for (_core, (need, _, worst_si)) in core_need {
+            if need > self.arch.core_buffer_bytes {
+                let stream = &program.streams[worst_si];
+                let seg = self.seg_range(
+                    program,
+                    worst_si,
+                    0,
+                    stream.insts.len(),
+                    &match_of[worst_si],
+                );
+                self.err(VerifyError::BufferOverflow {
+                    site: self.site(program, worst_si, seg.max_at),
+                    need,
+                    have: self.arch.core_buffer_bytes,
+                });
+            }
+        }
+    }
+
+    /// Interpret `insts[start..end]` of stream `si` over the hazard state.
+    fn exec_range(
+        &mut self,
+        program: &Program,
+        si: usize,
+        start: usize,
+        end: usize,
+        match_of: &HashMap<usize, usize>,
+        state: &mut StreamState,
+    ) {
+        let insts = &program.streams[si].insts;
+        let allow_intra = self.opts.allow_intra_overlap;
+        let mut i = start;
+        while i < end {
+            match insts[i] {
+                Inst::SetSpd { speed } => {
+                    if (speed as u32) < self.arch.min_write_speed
+                        || speed as u32 > self.arch.max_write_speed
+                    {
+                        self.err(VerifyError::SpeedOutOfRange {
+                            site: self.site(program, si, i),
+                            speed,
+                            min: self.arch.min_write_speed,
+                            max: self.arch.max_write_speed,
+                        });
+                    }
+                    state.speed = (speed as u32).max(1);
+                }
+                Inst::Wrw { m, tile } => {
+                    let site = self.site(program, si, i);
+                    let prev = *state.macros.entry(m).or_default();
+                    if prev.write_busy {
+                        self.err(VerifyError::DoubleWrite { site, m });
+                    } else if prev.compute_busy && !allow_intra {
+                        self.err(VerifyError::WriteDuringCompute { site, m });
+                    }
+                    let ms = state.macros.entry(m).or_default();
+                    ms.write_busy = true;
+                    ms.pending = tile;
+                    ms.loaded = 0;
+                }
+                Inst::WaitW { m } => {
+                    let site = self.site(program, si, i);
+                    let prev = *state.macros.entry(m).or_default();
+                    if !prev.write_busy {
+                        self.warn(VerifyWarning::DeadWait { site, m });
+                    } else {
+                        let ms = state.macros.entry(m).or_default();
+                        ms.write_busy = false;
+                        ms.loaded = ms.pending;
+                    }
+                }
+                Inst::Vmm { m, tile, .. } => {
+                    let site = self.site(program, si, i);
+                    let ms = *state.macros.entry(m).or_default();
+                    if ms.compute_busy {
+                        self.err(VerifyError::DoubleCompute { site, m });
+                    }
+                    if ms.write_busy && !allow_intra {
+                        self.err(VerifyError::ComputeDuringWrite { site, m });
+                    } else {
+                        // With an in-flight write (intra-overlap mode) the
+                        // macro contents are statically unknown: the engine
+                        // only publishes the tile at write *completion*.
+                        let have = if ms.write_busy { 0 } else { ms.loaded };
+                        if have != tile {
+                            self.err(VerifyError::WrongTile {
+                                site,
+                                m,
+                                want: tile,
+                                have,
+                            });
+                        }
+                    }
+                    state.macros.entry(m).or_default().compute_busy = true;
+                }
+                Inst::WaitC { m } => {
+                    let site = self.site(program, si, i);
+                    let prev = *state.macros.entry(m).or_default();
+                    if !prev.compute_busy {
+                        self.warn(VerifyWarning::DeadWait { site, m });
+                    } else {
+                        state.macros.entry(m).or_default().compute_busy = false;
+                    }
+                }
+                Inst::Loop { count } => {
+                    if let Some(&close) = match_of.get(&i) {
+                        let cap = (count.max(1) as usize).min(FIXPOINT_CAP);
+                        let mut stable = false;
+                        for _ in 0..cap {
+                            let prev = state.clone();
+                            self.exec_range(program, si, i + 1, close, match_of, state);
+                            if *state == prev {
+                                stable = true;
+                                break;
+                            }
+                        }
+                        if !stable && count as usize > FIXPOINT_CAP {
+                            self.warn(VerifyWarning::LoopStateUnstable {
+                                site: self.site(program, si, i),
+                            });
+                        }
+                        i = close;
+                    }
+                }
+                Inst::Halt => return,
+                Inst::Delay { .. }
+                | Inst::LdIn { .. }
+                | Inst::StOut { .. }
+                | Inst::Barrier
+                | Inst::EndLoop => {}
+            }
+            i += 1;
+        }
+    }
+
+    /// Buffer-occupancy envelope of `insts[start..end]` of stream `si`.
+    fn seg_range(
+        &mut self,
+        program: &Program,
+        si: usize,
+        start: usize,
+        end: usize,
+        match_of: &HashMap<usize, usize>,
+    ) -> Seg {
+        let insts = &program.streams[si].insts;
+        let rows = self.arch.geom.rows as i64;
+        let cols = self.arch.geom.cols as i64;
+        let mut acc = Seg::empty(start);
+        let mut i = start;
+        while i < end {
+            match insts[i] {
+                Inst::LdIn { n_vec } => {
+                    acc = acc.then(delta_seg(n_vec as i64 * rows, i));
+                }
+                Inst::Vmm { n_vec, .. } => {
+                    acc = acc.then(delta_seg(n_vec as i64 * 4 * cols, i));
+                }
+                Inst::StOut { n_vec } => {
+                    acc = acc.then(delta_seg(-(n_vec as i64 * (rows + 4 * cols)), i));
+                }
+                Inst::Loop { count } => {
+                    if let Some(&close) = match_of.get(&i) {
+                        let body = self.seg_range(program, si, i + 1, close, match_of);
+                        if body.net != 0 {
+                            self.warn(VerifyWarning::LoopOccupancyDrift {
+                                site: self.site(program, si, i),
+                                delta: body.net,
+                            });
+                        }
+                        acc = acc.then(body.repeat(count));
+                        i = close;
+                    }
+                }
+                Inst::Halt => return acc,
+                _ => {}
+            }
+            i += 1;
+        }
+        acc
+    }
+
+    /// The analytic lower bound on execution cycles: write traffic must
+    /// cross the off-chip bus (`min(writers × s_max, band.)` B/cycle at
+    /// best — [`eqs::weight_write_cycles`]), and no macro can finish
+    /// before its own loop-weighted busy time elapses.
+    fn lower_bound(&self, program: &Program) -> u64 {
+        let mut per_macro: BTreeMap<(u32, u8), MacroTally> = BTreeMap::new();
+        let mut writers: BTreeSet<(u32, u8)> = BTreeSet::new();
+        let mut total_bytes = 0u64;
+        let mut max_speed = 0u32;
+        for stream in &program.streams {
+            // Rebuild the match map; unmatched loops are simply skipped
+            // (the structural pass already reported them).
+            let mut matches = HashMap::new();
+            let mut stack = Vec::new();
+            for (at, inst) in stream.insts.iter().enumerate() {
+                match inst {
+                    Inst::Loop { .. } => stack.push(at),
+                    Inst::EndLoop => {
+                        if let Some(open) = stack.pop() {
+                            matches.insert(open, at);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let mut speed = self.arch.write_speed;
+            tally_range(
+                self.arch,
+                stream,
+                0,
+                stream.insts.len(),
+                &matches,
+                1,
+                &mut speed,
+                &mut per_macro,
+                &mut writers,
+                &mut total_bytes,
+                &mut max_speed,
+            );
+        }
+        let write_bound = if total_bytes > 0 {
+            eqs::weight_write_cycles(
+                total_bytes,
+                writers.len().max(1) as u64,
+                max_speed.max(1) as u64,
+                self.arch.bandwidth,
+            )
+        } else {
+            0
+        };
+        let macro_bound = per_macro
+            .values()
+            .map(|t| {
+                if self.opts.allow_intra_overlap {
+                    t.compute.max(t.write)
+                } else {
+                    t.compute.saturating_add(t.write)
+                }
+            })
+            .max()
+            .unwrap_or(0);
+        write_bound.max(macro_bound)
+    }
+}
+
+fn delta_seg(d: i64, at: usize) -> Seg {
+    Seg {
+        net: d,
+        min: d.min(0),
+        min_at: at,
+        max: d.max(0),
+        max_at: at,
+    }
+}
+
+/// Loop-weighted barrier count of `insts[start..end]`.
+fn weighted_barriers(
+    insts: &[Inst],
+    start: usize,
+    end: usize,
+    match_of: &HashMap<usize, usize>,
+) -> u64 {
+    let mut total = 0u64;
+    let mut i = start;
+    while i < end {
+        match insts[i] {
+            Inst::Barrier => total = total.saturating_add(1),
+            Inst::Loop { count } => {
+                if let Some(&close) = match_of.get(&i) {
+                    let body = weighted_barriers(insts, i + 1, close, match_of);
+                    total = total.saturating_add(body.saturating_mul(count as u64));
+                    i = close;
+                }
+            }
+            Inst::Halt => return total,
+            _ => {}
+        }
+        i += 1;
+    }
+    total
+}
+
+/// Accumulate loop-weighted write/compute busy cycles for the lower
+/// bound.  `mult` is the product of enclosing loop counts.
+#[allow(clippy::too_many_arguments)]
+fn tally_range(
+    arch: &ArchConfig,
+    stream: &crate::isa::Stream,
+    start: usize,
+    end: usize,
+    match_of: &HashMap<usize, usize>,
+    mult: u64,
+    speed: &mut u32,
+    per_macro: &mut BTreeMap<(u32, u8), MacroTally>,
+    writers: &mut BTreeSet<(u32, u8)>,
+    total_bytes: &mut u64,
+    max_speed: &mut u32,
+) {
+    let mut i = start;
+    while i < end {
+        match stream.insts[i] {
+            Inst::SetSpd { speed: s } => *speed = (s as u32).max(1),
+            Inst::Wrw { m, .. } => {
+                let key = (stream.core, m);
+                writers.insert(key);
+                *total_bytes = total_bytes.saturating_add(mult.saturating_mul(arch.geom.size_macro()));
+                *max_speed = (*max_speed).max(*speed);
+                let t = per_macro.entry(key).or_default();
+                t.write = t
+                    .write
+                    .saturating_add(mult.saturating_mul(arch.time_rewrite_at(*speed)));
+            }
+            Inst::Vmm { m, n_vec, .. } => {
+                let t = per_macro.entry((stream.core, m)).or_default();
+                t.compute = t.compute.saturating_add(
+                    mult.saturating_mul(arch.geom.cycles_per_vector() * n_vec as u64),
+                );
+            }
+            Inst::Loop { count } => {
+                if let Some(&close) = match_of.get(&i) {
+                    tally_range(
+                        arch,
+                        stream,
+                        i + 1,
+                        close,
+                        match_of,
+                        mult.saturating_mul(count.max(1) as u64),
+                        speed,
+                        per_macro,
+                        writers,
+                        total_bytes,
+                        max_speed,
+                    );
+                    i = close;
+                }
+            }
+            Inst::Halt => return,
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{CodegenStyle, SchedulePlan, Strategy};
+    use crate::sim::simulate;
+
+    fn archs() -> Vec<ArchConfig> {
+        vec![ArchConfig::paper_default(), ArchConfig::fig4_default()]
+    }
+
+    fn one_stream(arch: &ArchConfig, insts: Vec<Inst>) -> Program {
+        let mut p = Program::new(arch.n_cores);
+        p.add_stream(0, insts);
+        p
+    }
+
+    #[test]
+    fn all_shipped_lowerings_certify_clean() {
+        for arch in archs() {
+            let plan = SchedulePlan {
+                tasks: 24,
+                active_macros: 8,
+                n_in: arch.n_in,
+                write_speed: arch.write_speed,
+            };
+            for strategy in Strategy::ALL_EXTENDED {
+                for style in [CodegenStyle::Unrolled, CodegenStyle::Looped] {
+                    let program = strategy.codegen_styled(&arch, &plan, style).unwrap();
+                    let report =
+                        verify_program(&arch, &program, &VerifyOptions::for_strategy(strategy));
+                    assert!(
+                        report.ok(),
+                        "{strategy:?}/{style:?}: {:?}",
+                        report.first_error()
+                    );
+                    assert!(
+                        report.warnings.is_empty(),
+                        "{strategy:?}/{style:?}: {:?}",
+                        report.warnings
+                    );
+                    assert!(report.lower_bound_cycles > 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_simulation() {
+        for arch in archs() {
+            let plan = SchedulePlan {
+                tasks: 24,
+                active_macros: 8,
+                n_in: arch.n_in,
+                write_speed: arch.write_speed,
+            };
+            for strategy in Strategy::ALL_EXTENDED {
+                for style in [CodegenStyle::Unrolled, CodegenStyle::Looped] {
+                    let program = strategy.codegen_styled(&arch, &plan, style).unwrap();
+                    let mut report =
+                        verify_program(&arch, &program, &VerifyOptions::for_strategy(strategy));
+                    let cycles = simulate(&arch, &program, strategy.sim_options())
+                        .unwrap()
+                        .stats
+                        .cycles;
+                    assert!(
+                        report.certify_cycles(cycles),
+                        "{strategy:?}/{style:?}: bound {} > sim {cycles}",
+                        report.lower_bound_cycles
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compute_during_write_is_caught() {
+        let arch = ArchConfig::paper_default();
+        let p = one_stream(
+            &arch,
+            vec![
+                Inst::Wrw { m: 0, tile: 1 },
+                Inst::Vmm {
+                    m: 0,
+                    n_vec: 1,
+                    tile: 1,
+                },
+                Inst::Halt,
+            ],
+        );
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(matches!(
+            r.first_error(),
+            Some(VerifyError::ComputeDuringWrite { site, m: 0 }) if site.at == 1
+        ));
+        let text = r.first_error().unwrap().to_string();
+        assert!(text.contains("@1") && text.contains("vmm"), "{text}");
+    }
+
+    #[test]
+    fn wrong_tile_is_caught_with_site() {
+        let arch = ArchConfig::paper_default();
+        let p = one_stream(
+            &arch,
+            vec![
+                Inst::Wrw { m: 0, tile: 7 },
+                Inst::WaitW { m: 0 },
+                Inst::Vmm {
+                    m: 0,
+                    n_vec: 1,
+                    tile: 9,
+                },
+                Inst::Halt,
+            ],
+        );
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(matches!(
+            r.first_error(),
+            Some(VerifyError::WrongTile { want: 9, have: 7, .. })
+        ));
+    }
+
+    #[test]
+    fn double_issue_is_caught() {
+        let arch = ArchConfig::paper_default();
+        let p = one_stream(
+            &arch,
+            vec![
+                Inst::Wrw { m: 0, tile: 1 },
+                Inst::Wrw { m: 0, tile: 2 },
+                Inst::Halt,
+            ],
+        );
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::DoubleWrite { m: 0, .. })));
+    }
+
+    #[test]
+    fn dead_wait_is_a_warning_not_an_error() {
+        let arch = ArchConfig::paper_default();
+        let p = one_stream(&arch, vec![Inst::WaitW { m: 3 }, Inst::Halt]);
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r.ok());
+        assert!(matches!(
+            r.warnings.first(),
+            Some(VerifyWarning::DeadWait { m: 3, .. })
+        ));
+    }
+
+    #[test]
+    fn buffer_overflow_and_underflow_are_caught() {
+        let arch = ArchConfig::paper_default();
+        let over = one_stream(
+            &arch,
+            vec![
+                Inst::LdIn { n_vec: u16::MAX },
+                Inst::Halt,
+            ],
+        );
+        let r = verify_program(&arch, &over, &VerifyOptions::default());
+        assert!(matches!(
+            r.first_error(),
+            Some(VerifyError::BufferOverflow { .. })
+        ));
+
+        let under = one_stream(&arch, vec![Inst::StOut { n_vec: 1 }, Inst::Halt]);
+        let r = verify_program(&arch, &under, &VerifyOptions::default());
+        assert!(matches!(
+            r.first_error(),
+            Some(VerifyError::BufferUnderflow { .. })
+        ));
+    }
+
+    #[test]
+    fn loop_occupancy_drift_is_flagged() {
+        let arch = ArchConfig::paper_default();
+        let p = one_stream(
+            &arch,
+            vec![
+                Inst::Loop { count: 4 },
+                Inst::LdIn { n_vec: 1 },
+                Inst::EndLoop,
+                Inst::Halt,
+            ],
+        );
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r
+            .warnings
+            .iter()
+            .any(|w| matches!(w, VerifyWarning::LoopOccupancyDrift { delta: 32, .. })));
+    }
+
+    #[test]
+    fn structural_errors_are_located() {
+        let arch = ArchConfig::paper_default();
+        let p = one_stream(
+            &arch,
+            vec![Inst::Loop { count: 2 }, Inst::Delay { cycles: 1 }, Inst::Halt],
+        );
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::UnbalancedLoop { site } if site.at == 0)));
+
+        let p = one_stream(&arch, vec![Inst::Delay { cycles: 1 }]);
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::MissingHalt { stream: 0, .. })));
+    }
+
+    #[test]
+    fn barrier_mismatch_is_caught_loop_weighted() {
+        let arch = ArchConfig::paper_default();
+        let mut p = Program::new(arch.n_cores);
+        // Stream 0: 4 dynamic barriers (2 rolled); stream 1: 3 barriers.
+        p.add_stream(
+            0,
+            vec![
+                Inst::Loop { count: 2 },
+                Inst::Barrier,
+                Inst::Barrier,
+                Inst::EndLoop,
+                Inst::Halt,
+            ],
+        );
+        p.add_stream(
+            1,
+            vec![Inst::Barrier, Inst::Barrier, Inst::Barrier, Inst::Halt],
+        );
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r.errors.iter().any(|e| matches!(
+            e,
+            VerifyError::BarrierMismatch { stream: 1, count: 3, expect: 4, .. }
+        )));
+    }
+
+    #[test]
+    fn shared_macro_is_caught() {
+        let arch = ArchConfig::paper_default();
+        let mut p = Program::new(arch.n_cores);
+        p.add_stream(0, vec![Inst::Wrw { m: 0, tile: 1 }, Inst::WaitW { m: 0 }, Inst::Halt]);
+        p.add_stream(0, vec![Inst::WaitW { m: 0 }, Inst::Halt]);
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::SharedMacro { core: 0, m: 0, a: 0, b: 1 })));
+    }
+
+    #[test]
+    fn intra_overlap_legality_depends_on_options() {
+        let arch = ArchConfig::paper_default();
+        // wrw while computing: illegal without intra overlap, legal with.
+        let insts = vec![
+            Inst::Wrw { m: 0, tile: 1 },
+            Inst::WaitW { m: 0 },
+            Inst::LdIn { n_vec: 1 },
+            Inst::Vmm {
+                m: 0,
+                n_vec: 1,
+                tile: 1,
+            },
+            Inst::Wrw { m: 0, tile: 2 },
+            Inst::WaitC { m: 0 },
+            Inst::WaitW { m: 0 },
+            Inst::StOut { n_vec: 1 },
+            Inst::Halt,
+        ];
+        let p = one_stream(&arch, insts);
+        let strict = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(strict
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::WriteDuringCompute { .. })));
+        let relaxed = verify_program(
+            &arch,
+            &p,
+            &VerifyOptions {
+                allow_intra_overlap: true,
+            },
+        );
+        assert!(relaxed.ok(), "{:?}", relaxed.first_error());
+    }
+
+    #[test]
+    fn bound_violation_certification() {
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 32);
+        let program = Strategy::GeneralizedPingPong.codegen(&arch, &plan).unwrap();
+        let mut report = verify_program(&arch, &program, &VerifyOptions::default());
+        assert!(report.lower_bound_cycles > 0);
+        assert!(!report.certify_cycles(report.lower_bound_cycles - 1));
+        assert!(matches!(
+            report.errors.last(),
+            Some(VerifyError::BoundViolation { .. })
+        ));
+    }
+
+    #[test]
+    fn zero_loop_is_an_error_with_offset() {
+        let arch = ArchConfig::paper_default();
+        let mut p = Program::new(arch.n_cores);
+        p.streams.push(crate::isa::Stream {
+            core: 0,
+            insts: vec![Inst::Loop { count: 0 }, Inst::EndLoop, Inst::Halt],
+        });
+        let r = verify_program(&arch, &p, &VerifyOptions::default());
+        assert!(r
+            .errors
+            .iter()
+            .any(|e| matches!(e, VerifyError::ZeroLoop { site } if site.at == 0)));
+    }
+}

@@ -48,8 +48,8 @@ pub use sink::{
     BenchJsonSink, CsvDirSink, MemorySink, ReportSink, SinkSet, StdoutSink, TableDest,
 };
 pub use spec::{
-    AdaptSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec, RunWorkloadSpec,
-    ServeSpec, SimulateSpec, SpecError, VALID_KINDS,
+    AdaptSpec, CheckSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec,
+    RunWorkloadSpec, ServeSpec, SimulateSpec, SpecError, VALID_KINDS,
 };
 
 // Spec-field enums embedders need to build specs programmatically.

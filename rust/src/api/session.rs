@@ -20,9 +20,10 @@
 
 use super::sink::{SinkSet, TableDest};
 use super::spec::{
-    AdaptSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec, RunWorkloadSpec,
-    ServeSpec, SimulateSpec,
+    AdaptSpec, CheckSpec, DseFullSpec, DseSpec, FleetSweepSpec, ReproSpec, RunSpec,
+    RunWorkloadSpec, ServeSpec, SimulateSpec,
 };
+use crate::analysis::{mutate::mutate, verify_program, VerifyOptions};
 use crate::arch::ArchConfig;
 use crate::coordinator::{Coordinator, RunConfig, RunReport};
 use crate::fleet::{AutoscaleConfig, OverloadConfig};
@@ -199,6 +200,7 @@ impl Session {
             RunSpec::Repro(s) => self.run_repro(s, sinks)?,
             RunSpec::Run(s) => self.run_workload(s, sinks)?,
             RunSpec::Simulate(s) => self.run_simulate(s, sinks)?,
+            RunSpec::Check(s) => self.run_check(s, sinks)?,
             RunSpec::Serve(s) => self.run_serve(s, sinks)?,
             RunSpec::FleetSweep(s) => self.run_fleet_sweep(s, sinks)?,
             RunSpec::Dse(s) => self.run_dse(s, sinks)?,
@@ -228,6 +230,11 @@ impl Session {
             bail!("unknown experiment '{exp}' (fig4|fig6|fig7|table2|headline|all)");
         }
         self.with_runner(spec.jobs, |runner| {
+            // `verify=true` hard-verifies every program the sweeps lower
+            // on codegen-cache miss; reset afterwards so the session
+            // cache flag does not leak into later runs.
+            runner.cache().set_verify(spec.verify);
+            let out: Result<Outcome> = (|| {
             let mut tables = Vec::new();
             let mut points = 0usize;
             if run_fig4 {
@@ -277,6 +284,9 @@ impl Session {
                 tables,
                 summary: runner.summary(),
             }))
+            })();
+            runner.cache().set_verify(false);
+            out
         })
     }
 
@@ -295,12 +305,33 @@ impl Session {
         };
         let strategy = spec.strategy;
         let program = strategy.codegen(&arch, &plan).map_err(|e| anyhow!("{e}"))?;
+        let mut verify_report = if spec.verify {
+            let report = verify_program(&arch, &program, &VerifyOptions::for_strategy(strategy));
+            if let Some(err) = report.first_error() {
+                bail!("static verification failed: {err}");
+            }
+            Some(report)
+        } else {
+            None
+        };
         let opts = SimOptions {
             record_op_log: spec.oplog,
             allow_intra_overlap: strategy.requires_intra_overlap(),
             ..SimOptions::default()
         };
         let r = simulate(&arch, &program, opts).map_err(|e| anyhow!("{e}"))?;
+        if let Some(report) = verify_report.as_mut() {
+            if !report.certify_cycles(r.stats.cycles) {
+                bail!(
+                    "lower-bound certification failed: {}",
+                    report.first_error().unwrap()
+                );
+            }
+            sinks.line(&format!(
+                "verified        : {} streams, {} insts, lower bound {} cycles",
+                report.streams, report.insts, report.lower_bound_cycles
+            ))?;
+        }
         sinks.line(&format!("strategy        : {}", strategy.name()))?;
         sinks.line(&format!(
             "tasks           : {} ({} vectors)",
@@ -328,6 +359,121 @@ impl Session {
             strategy,
             plan,
             result: r,
+        }))
+    }
+
+    // --- check ----------------------------------------------------------
+
+    /// The static verification grid (`check`): lower every strategy ×
+    /// style × arch cell, verify it, and — for clean un-mutated cells —
+    /// simulate it to certify the analytic lower bound.  With `mutate=`,
+    /// each applicable cell gets one seeded defect injected first, so
+    /// `errors > 0` is the *expected* outcome and the caught defect shows
+    /// up in `verify.csv`.  Cells are walked in deterministic grid order
+    /// with no worker fan-out, so the report is jobs-invariant by
+    /// construction.
+    ///
+    /// `Outcome::Sweep.feasible` counts cells that verified *clean*; the
+    /// CLI exits non-zero when any cell has errors — which certifies
+    /// shipped lowerings (exit 0) and demonstrates mutation catching
+    /// (exit 1) with the same report.
+    fn run_check(&self, spec: &CheckSpec, sinks: &mut SinkSet) -> Result<Outcome> {
+        let mut t = CsvTable::new(vec![
+            "arch",
+            "strategy",
+            "style",
+            "mutated",
+            "streams",
+            "insts",
+            "errors",
+            "warnings",
+            "first_error",
+            "lower_bound",
+            "sim_cycles",
+            "caught",
+        ]);
+        let mut points = 0usize;
+        let mut clean = 0usize;
+        let mut caught = 0usize;
+        for arch_name in &spec.archs {
+            let arch = match arch_name.as_str() {
+                "paper" => ArchConfig::paper_default(),
+                "fig4" => ArchConfig::fig4_default(),
+                _ => self.arch.clone(),
+            };
+            let plan = SchedulePlan {
+                tasks: spec.tasks,
+                active_macros: spec.macros.min(arch.total_macros()),
+                n_in: arch.n_in,
+                write_speed: arch.write_speed,
+            };
+            for &strategy in &spec.strategies {
+                for &style in &spec.styles {
+                    let pristine = self
+                        .runner
+                        .cache()
+                        .get_or_generate_styled(&arch, strategy, &plan, style)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    let (program, mutated) = match spec.mutate {
+                        Some(class) => match mutate(&pristine, class, spec.seed) {
+                            Some(p) => (Arc::new(p), true),
+                            // Inapplicable cell (e.g. no loop to
+                            // unbalance in an unrolled lowering) —
+                            // omitted from the report.
+                            None => continue,
+                        },
+                        None => (Arc::clone(&pristine), false),
+                    };
+                    points += 1;
+                    let mut report =
+                        verify_program(&arch, &program, &VerifyOptions::for_strategy(strategy));
+                    let mut sim_cycles = String::new();
+                    if !mutated && report.ok() {
+                        let r = simulate(&arch, &program, strategy.sim_options())
+                            .map_err(|e| anyhow!("{e}"))?;
+                        report.certify_cycles(r.stats.cycles);
+                        sim_cycles = r.stats.cycles.to_string();
+                    }
+                    if report.ok() {
+                        clean += 1;
+                    } else if mutated {
+                        caught += 1;
+                    }
+                    t.push_row(vec![
+                        arch_name.clone(),
+                        strategy.name().to_string(),
+                        style.name().to_string(),
+                        mutated.to_string(),
+                        report.streams.to_string(),
+                        report.insts.to_string(),
+                        report.errors.len().to_string(),
+                        report.warnings.len().to_string(),
+                        report
+                            .first_error()
+                            .map(|e| e.to_string().replace(',', ";"))
+                            .unwrap_or_default(),
+                        report.lower_bound_cycles.to_string(),
+                        sim_cycles,
+                        (mutated && !report.ok()).to_string(),
+                    ]);
+                }
+            }
+        }
+        sinks.table("verify", &t, TableDest::Show)?;
+        let line = match spec.mutate {
+            Some(class) => format!(
+                "{caught}/{points} mutated cells caught ({})",
+                class.name()
+            ),
+            None => format!("{clean}/{points} cells verified clean"),
+        };
+        sinks.line(&line)?;
+        Ok(Outcome::Sweep(SweepOutcome {
+            kind: "check",
+            points,
+            feasible: clean,
+            tables: vec!["verify".to_string()],
+            summary: line,
         }))
     }
 
@@ -1435,5 +1581,78 @@ mod tests {
         s.run(&jobs1, &mut SinkSet::new().with(&mut b)).unwrap();
         assert_eq!(a.csv("serve"), b.csv("serve"));
         assert_eq!(a.csv("fleet"), b.csv("fleet"));
+    }
+
+    #[test]
+    fn check_spec_certifies_the_full_grid() {
+        // The default grid (4 strategies x 2 styles x 3 archs) verifies
+        // clean, every lower bound is certified against simulation, and
+        // the report is jobs-invariant.
+        let spec = RunSpec::parse("check:tasks=24:macros=8").unwrap();
+        let mut mem = MemorySink::new();
+        let mut sinks = SinkSet::new().with(&mut mem);
+        let out = session().run(&spec, &mut sinks).unwrap();
+        let Outcome::Sweep(out) = out else { panic!() };
+        assert_eq!(out.kind, "check");
+        assert_eq!(out.points, 24);
+        assert_eq!(out.feasible, 24, "all cells must verify clean");
+        assert_eq!(out.tables, vec!["verify"]);
+        let csv = mem.csv("verify").unwrap();
+        assert_eq!(csv.lines().count(), 25);
+        for row in csv.lines().skip(1).map(|l| l.split(',').collect::<Vec<_>>()) {
+            assert_eq!(row[6], "0", "errors column: {row:?}");
+            let bound: u64 = row[9].parse().unwrap();
+            let cycles: u64 = row[10].parse().unwrap();
+            assert!(bound > 0 && bound <= cycles, "{row:?}");
+        }
+        // Jobs-invariance: the bytes must not move with the worker count.
+        let mut again = MemorySink::new();
+        session()
+            .run(
+                &RunSpec::parse("check:tasks=24:macros=8:jobs=1").unwrap(),
+                &mut SinkSet::new().with(&mut again),
+            )
+            .unwrap();
+        assert_eq!(mem.csv("verify"), again.csv("verify"));
+    }
+
+    #[test]
+    fn check_spec_catches_every_mutation_class() {
+        let s = session();
+        for class in crate::analysis::MutationClass::ALL {
+            let spec =
+                RunSpec::parse(&format!("check:tasks=24:macros=8:mutate={}", class.name()))
+                    .unwrap();
+            let out = s.run(&spec, &mut SinkSet::new()).unwrap();
+            let Outcome::Sweep(out) = out else { panic!() };
+            assert!(out.points > 0, "{class:?} applied to no cell");
+            assert_eq!(
+                out.feasible, 0,
+                "{class:?}: every mutated cell must be caught"
+            );
+        }
+    }
+
+    #[test]
+    fn verify_flag_flows_through_simulate_and_repro() {
+        let s = session();
+        let mut mem = MemorySink::new();
+        s.run(
+            &RunSpec::parse("simulate:tasks=16:macros=4:verify=true").unwrap(),
+            &mut SinkSet::new().with(&mut mem),
+        )
+        .unwrap();
+        assert!(
+            mem.lines.iter().any(|l| l.starts_with("verified")),
+            "{:?}",
+            mem.lines
+        );
+        // repro lowers the flag onto the runner cache and resets it.
+        s.run(
+            &RunSpec::parse("repro:exp=fig4:vectors=512:verify=true").unwrap(),
+            &mut SinkSet::new(),
+        )
+        .unwrap();
+        assert!(!s.runner().cache().verify_enabled(), "flag must reset after the run");
     }
 }

@@ -26,9 +26,11 @@
 //! cleanly to the same *effective* experiment.
 //!
 //! ```text
-//! repro[:exp=fig4|fig6|fig7|table2|headline|all][:vectors=N][:jobs=N]
+//! repro[:exp=fig4|fig6|fig7|table2|headline|all][:vectors=N][:verify=true][:jobs=N]
 //! run[:workload=ffn|e2e|square|mlp][:strategy=S][:trace=FILE][:numerics=true][:artifacts=DIR]
-//! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true]
+//! simulate[:strategy=S][:tasks=N][:macros=M][:nin=K][:band=B][:s=W][:oplog=true][:verify=true]
+//! check[:tasks=N][:macros=M][:strategy=S,..|all][:style=looped,unrolled]
+//!      [:arch=paper,fig4,base][:mutate=CLASS][:seed=S][:jobs=N]
 //! serve[:requests=N][:seed=S][:gap=CYC][:traffic=uniform|poisson|burst][:jobs=J]
 //!      [:placement=P][:faults=PLAN][:admit=CAP][:deadline=CYC]
 //!      [:autoscale=true:slo=CYC][:surrogate=exact|eqs][:chips=C][:fleet=SPEC]
@@ -52,7 +54,14 @@
 //! retried with deterministic backoff) and `deadline=CYC` expires
 //! requests that cannot start service within `CYC` cycles of arrival
 //! (ISSUE 9); both reject 0.
+//!
+//! `check` runs the static schedule verifier ([`crate::analysis`]) over
+//! a strategies × styles × archs grid; `mutate=CLASS` injects one seeded
+//! defect of that [`MutationClass`] per cell and flips the pass criterion
+//! (a cell is certified when the defect *is* caught); `verify=true` on
+//! `simulate`/`repro` hard-verifies every lowered program before it runs.
 
+use crate::analysis::MutationClass;
 use crate::arch::ArchConfig;
 use crate::fleet::{FaultPlan, FleetConfig, OverloadConfig, PlacementPolicy};
 use crate::model::dse::SearchMode;
@@ -62,8 +71,8 @@ use std::fmt;
 use thiserror::Error;
 
 /// Experiment kinds, in `exec` usage order.
-pub const VALID_KINDS: [&str; 8] = [
-    "repro", "run", "simulate", "serve", "fleet", "dse", "dse-full", "adapt",
+pub const VALID_KINDS: [&str; 9] = [
+    "repro", "run", "simulate", "check", "serve", "fleet", "dse", "dse-full", "adapt",
 ];
 
 /// Arch-override keys of the `--fleet` sub-grammar: segments with these
@@ -106,6 +115,8 @@ pub enum RunSpec {
     Run(RunWorkloadSpec),
     /// One strategy on an abstract task plan (`simulate`).
     Simulate(SimulateSpec),
+    /// Static verification grid, optionally mutation-tested (`check`).
+    Check(CheckSpec),
     /// Batched request serving on a chip fleet (`serve`).
     Serve(ServeSpec),
     /// Fleet size × placement sweep over one stream (`fleet`).
@@ -125,6 +136,9 @@ pub struct ReproSpec {
     pub exp: String,
     /// Total input vectors per sweep point.
     pub vectors: u32,
+    /// Hard-verify every lowered program on codegen-cache miss
+    /// ([`crate::analysis`]); a defect aborts the run.
+    pub verify: bool,
     /// Host workers (`None` = one per hardware thread).
     pub jobs: Option<usize>,
 }
@@ -134,6 +148,7 @@ impl Default for ReproSpec {
         Self {
             exp: "all".into(),
             vectors: 32768,
+            verify: false,
             jobs: None,
         }
     }
@@ -183,6 +198,9 @@ pub struct SimulateSpec {
     pub write_speed: Option<u32>,
     /// Record the op log (timeline/VCD consumers).
     pub oplog: bool,
+    /// Hard-verify the lowered program before simulating
+    /// ([`crate::analysis`]); a defect aborts the run.
+    pub verify: bool,
 }
 
 impl Default for SimulateSpec {
@@ -195,6 +213,48 @@ impl Default for SimulateSpec {
             band: None,
             write_speed: None,
             oplog: false,
+            verify: false,
+        }
+    }
+}
+
+/// `check` — the static verification grid: every strategy × style × arch
+/// cell is lowered, verified, and (for clean cells) simulated to certify
+/// the analytic lower bound; `mutate` injects one seeded defect per cell
+/// and flips the pass criterion (the defect must be *caught*).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckSpec {
+    /// Tile-tasks per lowered program.
+    pub tasks: u32,
+    /// Active macros per lowered program.
+    pub macros: u32,
+    /// Strategies of the grid (default: all four).
+    pub strategies: Vec<Strategy>,
+    /// Codegen styles of the grid (default: unrolled and looped).
+    pub styles: Vec<CodegenStyle>,
+    /// Architecture presets of the grid: `paper|fig4|base` (`base` is
+    /// the session architecture).
+    pub archs: Vec<String>,
+    /// Inject one seeded defect of this class per applicable cell.
+    pub mutate: Option<MutationClass>,
+    /// Mutation-site selection seed.
+    pub seed: u64,
+    /// Host workers (`None` = one per hardware thread).  The grid is
+    /// evaluated in deterministic order, so the report is jobs-invariant.
+    pub jobs: Option<usize>,
+}
+
+impl Default for CheckSpec {
+    fn default() -> Self {
+        Self {
+            tasks: 64,
+            macros: 32,
+            strategies: Strategy::ALL_EXTENDED.to_vec(),
+            styles: vec![CodegenStyle::Unrolled, CodegenStyle::Looped],
+            archs: vec!["paper".into(), "fig4".into(), "base".into()],
+            mutate: None,
+            seed: 7,
+            jobs: None,
         }
     }
 }
@@ -607,6 +667,58 @@ fn p_style(v: &str) -> Result<CodegenStyle, SpecError> {
     }
 }
 
+fn p_strategies(v: &str) -> Result<Vec<Strategy>, SpecError> {
+    if v == "all" {
+        return Ok(Strategy::ALL_EXTENDED.to_vec());
+    }
+    let mut items = Vec::new();
+    for tok in v.split(',') {
+        let item = p_strategy(tok.trim())?;
+        if items.contains(&item) {
+            return Err(bad("strategy", v, format!("duplicate entry '{}'", tok.trim())));
+        }
+        items.push(item);
+    }
+    Ok(items)
+}
+
+fn p_styles(v: &str) -> Result<Vec<CodegenStyle>, SpecError> {
+    let mut items = Vec::new();
+    for tok in v.split(',') {
+        let item = p_style(tok.trim())?;
+        if items.contains(&item) {
+            return Err(bad("style", v, format!("duplicate entry '{}'", tok.trim())));
+        }
+        items.push(item);
+    }
+    Ok(items)
+}
+
+fn p_archs(v: &str) -> Result<Vec<String>, SpecError> {
+    let mut items: Vec<String> = Vec::new();
+    for tok in v.split(',') {
+        let tok = tok.trim();
+        if !matches!(tok, "paper" | "fig4" | "base") {
+            return Err(bad("arch", v, "expected a comma list of paper|fig4|base"));
+        }
+        if items.iter().any(|i| i == tok) {
+            return Err(bad("arch", v, format!("duplicate entry '{tok}'")));
+        }
+        items.push(tok.to_string());
+    }
+    Ok(items)
+}
+
+fn p_mutate(v: &str) -> Result<MutationClass, SpecError> {
+    MutationClass::from_name(v).ok_or_else(|| {
+        bad(
+            "mutate",
+            v,
+            "expected drop-waitw|swap-tile|unbalance-loop|oversize-ldin|drop-barrier",
+        )
+    })
+}
+
 /// Comma list of unique values >= 1 (axes, fleet sizes).  A repeated
 /// entry would silently simulate the same point twice and skew top-k
 /// and row totals, so duplicates are rejected naming the offender.
@@ -652,6 +764,7 @@ impl RunSpec {
             RunSpec::Repro(_) => "repro",
             RunSpec::Run(_) => "run",
             RunSpec::Simulate(_) => "simulate",
+            RunSpec::Check(_) => "check",
             RunSpec::Serve(_) => "serve",
             RunSpec::FleetSweep(_) => "fleet",
             RunSpec::Dse(_) => "dse",
@@ -663,9 +776,10 @@ impl RunSpec {
     /// Valid keys of a kind, for usage/error messages.
     pub fn valid_keys(kind: &str) -> &'static str {
         match kind {
-            "repro" => "exp, vectors, jobs",
+            "repro" => "exp, vectors, verify, jobs",
             "run" => "workload, strategy, trace, numerics, artifacts",
-            "simulate" => "strategy, tasks, macros, nin, band, s, oplog",
+            "simulate" => "strategy, tasks, macros, nin, band, s, oplog, verify",
+            "check" => "tasks, macros, strategy, style, arch, mutate, seed, jobs",
             "serve" => {
                 "requests, seed, gap, traffic, jobs, placement, faults, admit, deadline, \
                  autoscale, slo, surrogate, chips, fleet"
@@ -711,6 +825,7 @@ impl RunSpec {
             "repro" => Self::parse_repro(&pairs),
             "run" => Self::parse_run(&pairs),
             "simulate" => Self::parse_simulate(&pairs),
+            "check" => Self::parse_check(&pairs),
             "serve" => Self::parse_serve(&pairs),
             "fleet" => Self::parse_fleet_sweep(&pairs),
             "dse" => Self::parse_dse(&pairs),
@@ -744,6 +859,7 @@ impl RunSpec {
                     s.exp = v.clone();
                 }
                 "vectors" => s.vectors = p_u32("vectors", v)?,
+                "verify" => s.verify = p_bool("verify", v)?,
                 "jobs" => s.jobs = Some(p_jobs(v)?),
                 _ => return Err(Self::unknown("repro", k)),
             }
@@ -782,10 +898,41 @@ impl RunSpec {
                 "band" => s.band = Some(p_u64("band", v)?),
                 "s" => s.write_speed = Some(p_u32("s", v)?),
                 "oplog" => s.oplog = p_bool("oplog", v)?,
+                "verify" => s.verify = p_bool("verify", v)?,
                 _ => return Err(Self::unknown("simulate", k)),
             }
         }
         Ok(RunSpec::Simulate(s))
+    }
+
+    fn parse_check(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
+        let mut s = CheckSpec::default();
+        for (k, v) in pairs {
+            match k.as_str() {
+                "tasks" => {
+                    let tasks = p_u32("tasks", v)?;
+                    if tasks == 0 {
+                        return Err(bad("tasks", v, "must be >= 1"));
+                    }
+                    s.tasks = tasks;
+                }
+                "macros" => {
+                    let macros = p_u32("macros", v)?;
+                    if macros == 0 {
+                        return Err(bad("macros", v, "must be >= 1"));
+                    }
+                    s.macros = macros;
+                }
+                "strategy" => s.strategies = p_strategies(v)?,
+                "style" => s.styles = p_styles(v)?,
+                "arch" => s.archs = p_archs(v)?,
+                "mutate" => s.mutate = Some(p_mutate(v)?),
+                "seed" => s.seed = p_u64("seed", v)?,
+                "jobs" => s.jobs = Some(p_jobs(v)?),
+                _ => return Err(Self::unknown("check", k)),
+            }
+        }
+        Ok(RunSpec::Check(s))
     }
 
     fn parse_serve(pairs: &[(String, String)]) -> Result<RunSpec, SpecError> {
@@ -975,6 +1122,7 @@ impl fmt::Display for RunSpec {
                 if s.vectors != d.vectors {
                     e.kv("vectors", s.vectors)?;
                 }
+                e.flag("verify", s.verify)?;
                 e.opt("jobs", &s.jobs)
             }
             RunSpec::Run(s) => {
@@ -1001,7 +1149,39 @@ impl fmt::Display for RunSpec {
                 e.opt("nin", &s.n_in)?;
                 e.opt("band", &s.band)?;
                 e.opt("s", &s.write_speed)?;
-                e.flag("oplog", s.oplog)
+                e.flag("oplog", s.oplog)?;
+                e.flag("verify", s.verify)
+            }
+            RunSpec::Check(s) => {
+                let d = CheckSpec::default();
+                if s.tasks != d.tasks {
+                    e.kv("tasks", s.tasks)?;
+                }
+                if s.macros != d.macros {
+                    e.kv("macros", s.macros)?;
+                }
+                if s.strategies != d.strategies {
+                    e.kv(
+                        "strategy",
+                        join(&s.strategies.iter().map(|x| x.name()).collect::<Vec<_>>()),
+                    )?;
+                }
+                if s.styles != d.styles {
+                    e.kv(
+                        "style",
+                        join(&s.styles.iter().map(|x| x.name()).collect::<Vec<_>>()),
+                    )?;
+                }
+                if s.archs != d.archs {
+                    e.kv("arch", join(&s.archs))?;
+                }
+                if let Some(class) = s.mutate {
+                    e.kv("mutate", class.name())?;
+                }
+                if s.seed != d.seed {
+                    e.kv("seed", s.seed)?;
+                }
+                e.opt("jobs", &s.jobs)
             }
             RunSpec::Serve(s) => {
                 let d = ServeSpec::default();
@@ -1299,6 +1479,43 @@ mod tests {
         };
         assert_eq!(s.traffic, TrafficShape::Poisson);
         assert!(RunSpec::parse("dse:traffic=burst").is_err());
+    }
+
+    #[test]
+    fn check_spec_roundtrips_and_rejects() {
+        let s = roundtrip("check:tasks=24:strategy=gpp,naive:style=looped:arch=paper:mutate=drop-waitw:seed=9");
+        let RunSpec::Check(s) = s else { panic!() };
+        assert_eq!(s.tasks, 24);
+        assert_eq!(
+            s.strategies,
+            vec![Strategy::GeneralizedPingPong, Strategy::NaivePingPong]
+        );
+        assert_eq!(s.styles, vec![CodegenStyle::Looped]);
+        assert_eq!(s.archs, vec!["paper".to_string()]);
+        assert_eq!(s.mutate, Some(MutationClass::DropWaitW));
+        assert_eq!(s.seed, 9);
+        // Bare kind is all defaults and displays bare.
+        assert_eq!(RunSpec::parse("check").unwrap(), RunSpec::Check(CheckSpec::default()));
+        assert_eq!(RunSpec::parse("check:strategy=all").unwrap().to_string(), "check");
+        // Grammar rejections (CI smoke mirrors these).
+        assert!(RunSpec::parse("check:tasks=0").is_err());
+        assert!(RunSpec::parse("check:style=rolled").is_err());
+        assert!(RunSpec::parse("check:mutate=bogus").is_err());
+        assert!(RunSpec::parse("check:arch=tpu").is_err());
+        assert!(RunSpec::parse("check:strategy=gpp,gpp").is_err());
+    }
+
+    #[test]
+    fn verify_key_roundtrips_on_simulate_and_repro() {
+        let s = roundtrip("simulate:tasks=32:verify=true");
+        let RunSpec::Simulate(s) = s else { panic!() };
+        assert!(s.verify);
+        let s = roundtrip("repro:exp=fig4:verify=true");
+        let RunSpec::Repro(s) = s else { panic!() };
+        assert!(s.verify);
+        // The default (off) canonicalizes away; other kinds reject it.
+        assert_eq!(RunSpec::parse("simulate:verify=false").unwrap().to_string(), "simulate");
+        assert!(RunSpec::parse("serve:verify=true").is_err());
     }
 
     #[test]

@@ -196,9 +196,15 @@ pub fn assemble(text: &str) -> Result<Program, AsmError> {
             }
             "loop" => {
                 need(1)?;
-                Inst::Loop {
-                    count: parse_u32(operands[0], line_no)?,
+                let count = parse_u32(operands[0], line_no)?;
+                if count == 0 {
+                    return Err(AsmError::BadOperand {
+                        line: line_no,
+                        operand: operands[0].to_string(),
+                        reason: "loop count must be >= 1".to_string(),
+                    });
                 }
+                Inst::Loop { count }
             }
             "endloop" => {
                 need(0)?;
@@ -377,5 +383,79 @@ mod tests {
     fn explicit_cores_directive_wins() {
         let p = assemble(".cores 16\n.core 0\nhalt\n").unwrap();
         assert_eq!(p.n_cores, 16);
+    }
+
+    #[test]
+    fn rejects_zero_loop_count() {
+        let e = assemble(".core 0\nloop 0\nendloop\nhalt\n").unwrap_err();
+        assert!(matches!(
+            e,
+            AsmError::BadOperand { line: 2, .. }
+        ));
+        assert!(e.to_string().contains("loop count must be >= 1"));
+    }
+
+    #[test]
+    fn golden_roundtrip_all_looped_lowerings() {
+        // Disassembly of every strategy's looped lowering (intra falls
+        // back to its unrolled form) must re-assemble to the identical
+        // program, and the rolled strategies must actually emit loops.
+        use crate::arch::ArchConfig;
+        use crate::sched::{CodegenStyle, SchedulePlan, Strategy};
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan {
+            tasks: 24,
+            active_macros: 8,
+            n_in: arch.n_in,
+            write_speed: arch.write_speed,
+        };
+        for strategy in Strategy::ALL_EXTENDED {
+            let p = strategy
+                .codegen_styled(&arch, &plan, CodegenStyle::Looped)
+                .unwrap();
+            let text = disassemble(&p);
+            let p2 = assemble(&text).unwrap();
+            assert_eq!(p, p2, "{strategy:?} looped roundtrip");
+            let has_loop = p
+                .streams
+                .iter()
+                .any(|s| s.insts.iter().any(|i| matches!(i, Inst::Loop { .. })));
+            if strategy != Strategy::IntraMacroPingPong {
+                assert!(has_loop, "{strategy:?} looped form emitted no loop");
+                assert!(text.contains("loop "), "{strategy:?} text has no loop");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_nested_loop_indentation() {
+        // Nested Loop/EndLoop indentation: each nesting level indents by
+        // four more spaces and endloop dedents before printing.
+        let mut p = Program::new(1);
+        p.add_stream(
+            0,
+            vec![
+                Inst::Loop { count: 2 },
+                Inst::Delay { cycles: 1 },
+                Inst::Loop { count: 3 },
+                Inst::Barrier,
+                Inst::EndLoop,
+                Inst::EndLoop,
+                Inst::Halt,
+            ],
+        );
+        let expect = "\
+.cores 1
+.stream core=0
+    loop 2
+        delay 1
+        loop 3
+            bar
+        endloop
+    endloop
+    halt
+";
+        assert_eq!(disassemble(&p), expect);
+        assert_eq!(assemble(expect).unwrap(), p);
     }
 }

@@ -17,4 +17,4 @@ pub mod program;
 pub use asm::{assemble, disassemble, AsmError};
 pub use encode::{decode_program, encode_program, DecodeError};
 pub use inst::Inst;
-pub use program::Program;
+pub use program::{Program, Stream};

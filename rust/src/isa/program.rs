@@ -69,9 +69,30 @@ impl Program {
     }
 
     /// Add a stream on `core`; returns its index.
+    ///
+    /// Panics on a zero-count `Inst::Loop` — a zero loop is always a
+    /// codegen bug, so it is rejected at construction with the offending
+    /// offset rather than deferred to [`Program::validate`].  Use
+    /// [`Program::try_add_stream`] for fallible callers.
     pub fn add_stream(&mut self, core: u32, insts: Vec<Inst>) -> usize {
+        match self.try_add_stream(core, insts) {
+            Ok(index) => index,
+            Err(e) => panic!("add_stream: {e}"),
+        }
+    }
+
+    /// Add a stream on `core`, rejecting zero-count loops with the
+    /// offending offset; returns the stream index.
+    pub fn try_add_stream(&mut self, core: u32, insts: Vec<Inst>) -> Result<usize, ProgramError> {
+        let stream = self.streams.len();
+        if let Some(at) = insts
+            .iter()
+            .position(|i| matches!(i, Inst::Loop { count: 0 }))
+        {
+            return Err(ProgramError::ZeroLoop { stream, at });
+        }
         self.streams.push(Stream { core, insts });
-        self.streams.len() - 1
+        Ok(stream)
     }
 
     /// Total instruction count across streams.
@@ -239,9 +260,35 @@ mod tests {
 
     #[test]
     fn rejects_zero_loop() {
+        // Streams that bypass construction checks are still caught by
+        // validate().
+        let mut p = Program::new(1);
+        p.streams.push(Stream {
+            core: 0,
+            insts: halted(vec![Inst::Loop { count: 0 }, Inst::EndLoop]),
+        });
+        assert!(matches!(p.validate(16), Err(ProgramError::ZeroLoop { .. })));
+    }
+
+    #[test]
+    fn zero_loop_rejected_at_construction_naming_offset() {
+        let mut p = Program::new(1);
+        let err = p
+            .try_add_stream(
+                0,
+                halted(vec![Inst::Barrier, Inst::Loop { count: 0 }, Inst::EndLoop]),
+            )
+            .unwrap_err();
+        assert_eq!(err, ProgramError::ZeroLoop { stream: 0, at: 1 });
+        assert!(err.to_string().contains("loop at 1"));
+        assert!(p.streams.is_empty(), "rejected stream must not be added");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero iteration count")]
+    fn add_stream_panics_on_zero_loop() {
         let mut p = Program::new(1);
         p.add_stream(0, halted(vec![Inst::Loop { count: 0 }, Inst::EndLoop]));
-        assert!(matches!(p.validate(16), Err(ProgramError::ZeroLoop { .. })));
     }
 
     #[test]

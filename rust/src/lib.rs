@@ -36,6 +36,9 @@
 //!
 //! - [`api`] — the unified experiment pipeline:
 //!   `RunSpec → Session → ReportSink`.
+//! - [`analysis`] — static schedule verification: hazard freedom, buffer
+//!   bounds, structural liveness, analytic lower bounds, and the seeded
+//!   mutation harness that proves the checker has teeth.
 //! - [`arch`] — accelerator geometry and timing parameters.
 //! - [`config`] — TOML-subset config parser (no external deps).
 //! - [`isa`] — instruction set, assembler, encoder, disassembler.
@@ -56,6 +59,9 @@
 //! - [`report`] — figure/table renderers and the bench harness kit.
 //! - [`util`] — deterministic RNG, CSV, misc helpers.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod api;
 pub mod arch;
 pub mod config;

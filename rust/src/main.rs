@@ -14,8 +14,11 @@
 //! gpp-pim info  [--config FILE]
 //! gpp-pim exec  SPEC|@FILE [--csv-dir DIR] [--bench-json FILE]
 //! gpp-pim repro --exp fig4|fig6|fig7|table2|headline|all [--csv-dir DIR] [--vectors N] [--jobs N]
+//!               [--verify]
 //! gpp-pim simulate --strategy insitu|naive|gpp [--tasks N] [--macros M]
-//!                  [--n-in K] [--band B] [--write-speed S] [--timeline]
+//!                  [--n-in K] [--band B] [--write-speed S] [--timeline] [--verify]
+//! gpp-pim check ["check:tasks=N:strategy=S,..:style=..:arch=..:mutate=CLASS:seed=S"]
+//!               [--csv-dir DIR]
 //! gpp-pim run --workload ffn|square|mlp --strategy S [--numerics] [--artifacts DIR]
 //! gpp-pim serve --requests N [--seed S] [--jobs J] [--chips C | --fleet SPEC]
 //!               [--placement rr|least-loaded|affinity|sed] [--mean-gap G]
@@ -426,16 +429,49 @@ fn exec_batch(args: &Args, path: &str) -> Result<()> {
 fn cmd_repro(args: &Args) -> Result<()> {
     args.check(
         "repro",
-        &["config", "exp", "csv-dir", "vectors", "jobs", "bench-json"],
+        &["config", "exp", "csv-dir", "vectors", "verify", "jobs", "bench-json"],
         0,
         Some("repro"),
     )?;
     let spec = RunSpec::Repro(ReproSpec {
         exp: args.get("exp").unwrap_or("all").to_string(),
         vectors: args.get_u32("vectors", 32768)?,
+        verify: args.has("verify"),
         jobs: jobs_flag(args)?,
     });
     run_spec(args, &spec)?;
+    Ok(())
+}
+
+/// `gpp-pim check [SPEC]` — run the static verification grid.  Exits
+/// non-zero when any cell reports verification errors: a clean `check`
+/// certifies the shipped lowerings (exit 0), while `mutate=CLASS` runs
+/// exit 1 precisely because the injected defect was caught.
+fn cmd_check(args: &Args) -> Result<()> {
+    args.check("check", &["config", "csv-dir", "bench-json"], 1, Some("check"))?;
+    let text = args.positional.first().map(String::as_str).unwrap_or("check");
+    let spec = RunSpec::parse(text)?;
+    if !matches!(spec, RunSpec::Check(_)) {
+        bail!(
+            "'gpp-pim check' takes a check spec (got '{}'); use `exec` for other kinds",
+            spec.kind()
+        );
+    }
+    let outcome = run_spec(args, &spec)?;
+    let Outcome::Sweep(out) = outcome else {
+        unreachable!("check spec yields a sweep outcome")
+    };
+    if out.points == 0 {
+        bail!("check: no applicable cells in the grid");
+    }
+    if out.feasible < out.points {
+        bail!(
+            "check: {}/{} cells reported verification errors (expected for mutate= runs; \
+             see verify.csv / the report above)",
+            out.points - out.feasible,
+            out.points
+        );
+    }
     Ok(())
 }
 
@@ -444,7 +480,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "simulate",
         &[
             "config", "strategy", "tasks", "macros", "n-in", "band", "write-speed", "timeline",
-            "vcd", "csv-dir", "bench-json",
+            "vcd", "verify", "csv-dir", "bench-json",
         ],
         0,
         Some("simulate"),
@@ -462,6 +498,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .map(|v| v.parse().with_context(|| format!("--write-speed {v}")))
             .transpose()?,
         oplog: args.has("timeline") || args.has("vcd"),
+        verify: args.has("verify"),
     });
     let outcome = run_spec(args, &spec)?;
     let Outcome::Simulate(sim) = outcome else {
@@ -760,17 +797,31 @@ COMMANDS:
   info       show the architecture configuration
   exec       run a spec string: KIND[:KEY=VALUE...], e.g.
               exec \"serve:fleet=2xpaper:placement=least-loaded:requests=512\"
-             (kinds: repro|run|simulate|serve|fleet|dse|dse-full|adapt;
+             (kinds: repro|run|simulate|check|serve|fleet|dse|dse-full|adapt;
               --csv-dir DIR persists tables, --bench-json FILE records
               wall time in the BENCH_*.json schema).
              exec @FILE runs one spec per non-comment line through a
               single session — codegen cache and serve service-time
               table shared across the batch; errors name FILE:LINE
   repro      regenerate paper figures/tables  (--exp fig4|fig6|fig7|table2|headline|all,
-              --jobs N parallel sweep workers, --vectors N, --csv-dir DIR)
+              --jobs N parallel sweep workers, --vectors N, --csv-dir DIR,
+              --verify statically verifies every lowered program on cache
+              miss and fails the run on any verification error)
   simulate   run one strategy on an abstract task plan
              (--strategy insitu|naive|intra|gpp, --tasks, --macros, --n-in,
-              --band, --write-speed, --timeline, --vcd FILE)
+              --band, --write-speed, --timeline, --vcd FILE, --verify
+              statically verifies the lowered program and certifies the
+              analytic lower bound against the simulated cycle count)
+  check      static schedule verification grid: prove ping-pong hazard
+             freedom, buffer bounds, structural liveness and the analytic
+             lower bound over every shipped lowering, no waveform needed
+             (positional spec, default \"check\" = 4 strategies x
+              unrolled,looped x paper,fig4,base; keys tasks=, macros=,
+              strategy=, style=, arch=, seed=, jobs=; mutate=CLASS seeds
+              one defect per cell — drop-waitw|swap-tile|unbalance-loop|
+              oversize-ldin|drop-barrier — and the command then exits
+              non-zero because the verifier catches it; --csv-dir DIR
+              writes verify.csv).  Exit 0 iff every cell verifies clean.
   run        simulate+validate a GeMM workload end-to-end
              (--workload ffn|e2e|square|mlp or --trace FILE, --numerics)
   serve      batched request serving: multiplex a synthetic GeMM request
@@ -843,6 +894,7 @@ fn main() {
         "exec" => cmd_exec(&args),
         "repro" => cmd_repro(&args),
         "simulate" => cmd_simulate(&args),
+        "check" => cmd_check(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),

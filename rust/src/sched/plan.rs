@@ -34,6 +34,8 @@ pub enum ScheduleError {
     BadSpeed { speed: u32, min: u32, max: u32 },
     #[error("batch n_in={n_in} needs {need} B of core buffer per macro; only {have} B available")]
     BatchTooLarge { n_in: u32, need: u64, have: u64 },
+    #[error("generated program failed static verification: {0}")]
+    Unverified(String),
 }
 
 impl SchedulePlan {

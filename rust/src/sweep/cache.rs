@@ -7,11 +7,12 @@
 //! threads share one generated program instead of regenerating (and
 //! re-allocating) it per point.
 
+use crate::analysis::{verify_program, VerifyOptions};
 use crate::arch::ArchConfig;
 use crate::isa::Program;
 use crate::sched::{CodegenStyle, ScheduleError, SchedulePlan, Strategy};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Full-fidelity cache key: the complete architecture is part of the key
@@ -24,12 +25,24 @@ pub struct CodegenCache {
     map: Mutex<HashMap<Key, Arc<Program>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    verify: AtomicBool,
 }
 
 impl CodegenCache {
     /// An empty cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Turn hard verification on or off (see
+    /// [`CodegenCache::get_or_generate_styled`]).
+    pub fn set_verify(&self, on: bool) {
+        self.verify.store(on, Ordering::Relaxed);
+    }
+
+    /// True when cache misses are hard-verified.
+    pub fn verify_enabled(&self) -> bool {
+        self.verify.load(Ordering::Relaxed)
     }
 
     /// Fetch the unrolled program for a point, generating it on first
@@ -50,6 +63,12 @@ impl CodegenCache {
     /// serialize unrelated lookups; if two workers race on the same miss,
     /// the first insert wins and the duplicate (identical, codegen is
     /// deterministic) is dropped.
+    ///
+    /// Every miss is statically verified ([`crate::analysis`]): in debug
+    /// builds a defective lowering aborts via `debug_assert!`, and when
+    /// [`CodegenCache::set_verify`] is on (`--verify`) it is a hard
+    /// [`ScheduleError::Unverified`] in release builds too.  Hits skip
+    /// verification — a cached program already passed on its miss.
     pub fn get_or_generate_styled(
         &self,
         arch: &ArchConfig,
@@ -63,6 +82,15 @@ impl CodegenCache {
             return Ok(Arc::clone(hit));
         }
         let generated = Arc::new(strategy.codegen_styled(arch, plan, style)?);
+        let must_verify = cfg!(debug_assertions) || self.verify_enabled();
+        if must_verify {
+            let report = verify_program(arch, &generated, &VerifyOptions::for_strategy(strategy));
+            if let Some(err) = report.first_error() {
+                let detail = format!("{strategy:?}/{style:?}: {err}");
+                debug_assert!(false, "codegen produced an unverifiable program: {detail}");
+                return Err(ScheduleError::Unverified(detail));
+            }
+        }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.map.lock().unwrap();
         Ok(Arc::clone(map.entry(key).or_insert(generated)))
@@ -141,6 +169,24 @@ mod tests {
         assert!(!Arc::ptr_eq(&unrolled, &looped));
         assert_eq!(cache.misses(), 2);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn verify_on_miss_passes_all_shipped_lowerings() {
+        let cache = CodegenCache::new();
+        assert!(!cache.verify_enabled());
+        cache.set_verify(true);
+        assert!(cache.verify_enabled());
+        let arch = ArchConfig::paper_default();
+        let plan = SchedulePlan::full_chip(&arch, 32);
+        for strategy in Strategy::ALL_EXTENDED {
+            for style in [CodegenStyle::Unrolled, CodegenStyle::Looped] {
+                cache
+                    .get_or_generate_styled(&arch, strategy, &plan, style)
+                    .unwrap();
+            }
+        }
+        assert_eq!(cache.misses() as usize, cache.len());
     }
 
     #[test]

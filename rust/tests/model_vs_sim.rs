@@ -195,6 +195,49 @@ fn gpp_peak_bandwidth_below_insitu() {
 }
 
 #[test]
+fn verifier_lower_bound_never_exceeds_simulated_cycles() {
+    // Theory vs practice for the static verifier: the analytic lower
+    // bound it certifies (write traffic / bandwidth ⊔ per-core compute)
+    // must never exceed the cycle count the engine actually measures —
+    // for every strategy, both codegen styles, random working points.
+    use gpp_pim::analysis::{verify_program, VerifyOptions};
+    use gpp_pim::sched::CodegenStyle;
+    let mut rng = XorShift64::new(41);
+    for _ in 0..8 {
+        let mut arch = ArchConfig::paper_default();
+        arch.core_buffer_bytes = 1 << 22;
+        arch.bandwidth = 1 << rng.range_i64(3, 10) as u64;
+        let plan = SchedulePlan {
+            tasks: rng.range_i64(1, 200) as u32,
+            active_macros: rng.range_i64(1, 64) as u32,
+            n_in: rng.range_i64(1, 12) as u32,
+            write_speed: rng.range_i64(1, 8) as u32,
+        };
+        for strategy in Strategy::ALL_EXTENDED {
+            for style in [CodegenStyle::Unrolled, CodegenStyle::Looped] {
+                let program = strategy.codegen_styled(&arch, &plan, style).unwrap();
+                let mut report =
+                    verify_program(&arch, &program, &VerifyOptions::for_strategy(strategy));
+                assert!(
+                    report.ok(),
+                    "{strategy:?}/{style:?} {plan:?}: {}",
+                    report.first_error().unwrap()
+                );
+                let cycles = simulate(&arch, &program, strategy.sim_options())
+                    .unwrap()
+                    .stats
+                    .cycles;
+                assert!(
+                    report.certify_cycles(cycles),
+                    "{strategy:?}/{style:?} {plan:?}: bound {} > sim {cycles}",
+                    report.lower_bound_cycles
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn eq4_bandwidth_sizing_saturates_bus() {
     // Size the macro count by Eq. 4, give exactly `band`: the simulated
     // bus utilization should be ~100% during the steady state.

@@ -1,0 +1,146 @@
+//! Integration: the static schedule verifier against the engine.
+//!
+//! Three agreement properties, mirroring what `gpp-pim check` certifies:
+//!
+//! 1. Every shipped lowering verifies clean across the paper's sweep
+//!    axes (the Fig. 4 write-speed axis, the Fig. 6 bandwidth axis).
+//! 2. Everything the verifier certifies simulates panic-free, and the
+//!    certified analytic lower bound never exceeds the measured cycles.
+//! 3. Every seeded defect class from the mutation harness is caught
+//!    with a diagnostic that locates the offending instruction.
+
+use gpp_pim::analysis::mutate::mutate;
+use gpp_pim::analysis::{verify_program, MutationClass, VerifyOptions};
+use gpp_pim::arch::ArchConfig;
+use gpp_pim::sched::{CodegenStyle, SchedulePlan, Strategy};
+use gpp_pim::sim::simulate;
+
+const STYLES: [CodegenStyle; 2] = [CodegenStyle::Unrolled, CodegenStyle::Looped];
+
+/// Verify, then simulate, then certify the lower bound — the full
+/// `check` contract for one cell.
+fn certify_cell(arch: &ArchConfig, strategy: Strategy, style: CodegenStyle, plan: &SchedulePlan) {
+    let program = strategy
+        .codegen_styled(arch, plan, style)
+        .expect("shipped lowering must be feasible");
+    let mut report = verify_program(arch, &program, &VerifyOptions::for_strategy(strategy));
+    assert!(
+        report.ok(),
+        "{strategy:?}/{style:?} {plan:?}: {}",
+        report.first_error().unwrap()
+    );
+    let cycles = simulate(arch, &program, strategy.sim_options())
+        .expect("certified program must simulate panic-free")
+        .stats
+        .cycles;
+    assert!(
+        report.certify_cycles(cycles),
+        "{strategy:?}/{style:?} {plan:?}: bound {} > sim {cycles}",
+        report.lower_bound_cycles
+    );
+}
+
+#[test]
+fn fig4_write_speed_axis_certifies_clean() {
+    // The Fig. 4 experiment sweeps the weight-write speed s; every
+    // strategy/style lowering along that axis must verify and certify.
+    let mut arch = ArchConfig::fig4_default();
+    for s in 1..=8u32 {
+        arch.write_speed = s;
+        let plan = SchedulePlan {
+            tasks: 24,
+            active_macros: 8,
+            n_in: arch.n_in,
+            write_speed: s,
+        };
+        for strategy in Strategy::ALL_EXTENDED {
+            for style in STYLES {
+                certify_cell(&arch, strategy, style, &plan);
+            }
+        }
+    }
+}
+
+#[test]
+fn fig6_bandwidth_axis_certifies_clean() {
+    // The Fig. 6 experiment sweeps off-chip bandwidth (and with it the
+    // tr:tp balance); certify the grid of bandwidth x n_in points.
+    for band in [64u64, 128, 256, 512, 1024] {
+        for n_in in [1u32, 4, 8] {
+            let mut arch = ArchConfig::paper_default();
+            arch.bandwidth = band;
+            let plan = SchedulePlan {
+                tasks: 24,
+                active_macros: 8,
+                n_in,
+                write_speed: arch.write_speed,
+            };
+            for strategy in Strategy::ALL_EXTENDED {
+                for style in STYLES {
+                    certify_cell(&arch, strategy, style, &plan);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_mutation_class_is_caught_with_a_located_diagnostic() {
+    // Seed each defect class into every applicable shipped lowering:
+    // the verifier must reject the mutant, and the diagnostic must name
+    // the core/stream (and, site-carrying variants, the offset and
+    // mnemonic) so the defect is findable without a waveform.
+    let arch = ArchConfig::paper_default();
+    let plan = SchedulePlan {
+        tasks: 24,
+        active_macros: 8,
+        n_in: arch.n_in,
+        write_speed: arch.write_speed,
+    };
+    for class in MutationClass::ALL {
+        let mut applied = 0usize;
+        for strategy in Strategy::ALL_EXTENDED {
+            for style in STYLES {
+                let pristine = strategy.codegen_styled(&arch, &plan, style).unwrap();
+                let Some(mutant) = mutate(&pristine, class, 7) else {
+                    continue;
+                };
+                applied += 1;
+                let report = verify_program(&arch, &mutant, &VerifyOptions::for_strategy(strategy));
+                let err = report.first_error().unwrap_or_else(|| {
+                    panic!("{class:?} on {strategy:?}/{style:?} escaped the verifier")
+                });
+                let text = err.to_string();
+                assert!(
+                    text.contains("core "),
+                    "{class:?} diagnostic does not locate the defect: {text}"
+                );
+            }
+        }
+        assert!(applied > 0, "{class:?} applied nowhere in the grid");
+    }
+}
+
+#[test]
+fn pristine_lowerings_survive_their_own_mutation_seeds() {
+    // Sanity on the harness itself: mutation returns a *different*
+    // program (otherwise a "caught" defect could be a verifier false
+    // positive on the original).
+    let arch = ArchConfig::paper_default();
+    let plan = SchedulePlan {
+        tasks: 24,
+        active_macros: 8,
+        n_in: arch.n_in,
+        write_speed: arch.write_speed,
+    };
+    for class in MutationClass::ALL {
+        for strategy in Strategy::ALL_EXTENDED {
+            let pristine = strategy
+                .codegen_styled(&arch, &plan, CodegenStyle::Unrolled)
+                .unwrap();
+            if let Some(mutant) = mutate(&pristine, class, 7) {
+                assert_ne!(mutant, pristine, "{class:?} on {strategy:?} was a no-op");
+            }
+        }
+    }
+}
